@@ -1,0 +1,23 @@
+use lkgp::gp::Theta;
+use lkgp::runtime::Engine;
+fn main() -> lkgp::Result<()> {
+    let mut eng = lkgp::runtime::XlaEngine::load(&lkgp::runtime::XlaEngine::default_dir())?;
+    for (n, m, d) in [(16usize, 16usize, 3usize), (16, 52, 7), (32, 52, 7), (64, 52, 7)] {
+        let data = lkgp::lcbench::toy_dataset(n, m, d, 1);
+        let theta0 = Theta::default_packed(d);
+        // compile
+        let t0 = std::time::Instant::now();
+        let (_v, _g, iters) = eng.mll_grad(&theta0, &data, 1)?;
+        let compile_plus = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let _ = eng.mll_grad(&theta0, &data, 1)?;
+        let one = t1.elapsed();
+        println!("n={n} m={m}: mll_grad {one:?} (first {compile_plus:?}, cg {iters})");
+        if n <= 32 {
+            let t2 = std::time::Instant::now();
+            let _theta = eng.fit(&theta0, &data, 1)?;
+            println!("   fit_adam(150 steps) {:?}", t2.elapsed());
+        }
+    }
+    Ok(())
+}

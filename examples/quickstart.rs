@@ -1,0 +1,79 @@
+//! Quickstart: fit a Latent Kronecker GP on partially observed learning
+//! curves and predict final values + sampled continuations.
+//!
+//! ```bash
+//! cargo run --release --example quickstart [-- --engine rust|xla --seed 0]
+//! ```
+//!
+//! Uses the AOT XLA artifacts when built (`make artifacts`), otherwise the
+//! pure-rust engine — the numbers agree either way (see
+//! rust/tests/engine_parity.rs).
+
+use lkgp::gp::Theta;
+use lkgp::lcbench::{build_problem, PartialView, Preset, Task};
+use lkgp::rng::Pcg64;
+use lkgp::util::Args;
+
+fn main() -> lkgp::Result<()> {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 0);
+    let prefer_xla = args.get("engine").unwrap_or("xla") == "xla";
+
+    // 1. A learning-curve workload: 24 configs of a simulated LCBench task,
+    //    each trained for a random number of epochs (early stopping).
+    let mut rng = Pcg64::new(seed);
+    let task = Task::generate(Preset::FashionMnist, 24, &mut rng);
+    let view = PartialView::sample(&task, 16, 300, &mut rng);
+    let problem = build_problem(&task, &view);
+    println!(
+        "task {}: {} curves, {} observed values, grid of {} epochs",
+        task.name,
+        problem.data.n(),
+        view.observed(),
+        problem.data.m()
+    );
+
+    // 2. Fit the 10-parameter LKGP by MAP (Adam on MLL + priors).
+    let mut engine = lkgp::runtime::open_engine(prefer_xla);
+    println!("engine: {}", engine.name());
+    let theta0 = Theta::default_packed(problem.data.d());
+    let theta = engine.fit(&theta0, &problem.data, seed)?;
+    let unpacked = Theta::unpack(&theta);
+    println!(
+        "fitted: t-lengthscale={:.3} outputscale={:.3} noise={:.2e}",
+        unpacked.t_lengthscale, unpacked.outputscale, unpacked.sigma2
+    );
+
+    // 3. Predict each curve's final validation accuracy.
+    let preds = engine.predict_final(&theta, &problem.data, &problem.xq)?;
+    println!("\n  curve  observed  predicted final        truth");
+    let mut se = 0.0;
+    for (i, (mu, var)) in preds.iter().enumerate() {
+        let mean = problem.ytf.undo_mean(*mu);
+        let sd = problem.ytf.undo_var(*var).sqrt();
+        let truth = problem.targets[i];
+        se += (mean - truth) * (mean - truth);
+        println!(
+            "  {i:>5}  {:>8}  {mean:.4} +- {sd:.4}   {truth:.4}",
+            view.lengths[i]
+        );
+    }
+    println!("\nMSE = {:.6}", se / preds.len() as f64);
+
+    // 4. Sample full posterior curves for the first config (Matheron).
+    let xq1 = {
+        let mut m = lkgp::linalg::Matrix::zeros(1, problem.data.d());
+        m.row_mut(0).copy_from_slice(problem.xq.row(0));
+        m
+    };
+    let samples = engine.sample_curves(&theta, &problem.data, &xq1, 5, seed + 1)?;
+    let n = problem.data.n();
+    println!("\n5 sampled continuations of curve 0 (last 6 epochs, original units):");
+    for (si, s) in samples.iter().enumerate() {
+        let tail: Vec<String> = (problem.data.m() - 6..problem.data.m())
+            .map(|j| format!("{:.3}", problem.ytf.undo_mean(s[(n, j)])))
+            .collect();
+        println!("  sample {si}: {}", tail.join(" "));
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Figure 3 driver (small interactive version of the fig3_scaling bench):
+//! time + memory of LKGP (iterative) vs naive Cholesky as n = m grows.
+//!
+//! ```bash
+//! cargo run --release --example scaling [-- --max-size 64 --naive-max 32]
+//! ```
+//!
+//! The criterion-style sweep with CSV output lives in
+//! `rust/benches/fig3_scaling.rs` (`make fig3`); this example prints a
+//! quick table so the crossover is visible in seconds.
+
+use lkgp::gp::lkgp::SolverCfg;
+use lkgp::gp::{naive, Theta};
+use lkgp::lcbench::fig3_dataset;
+use lkgp::linalg::Matrix;
+use lkgp::metrics::alloc::AllocTracker;
+use lkgp::rng::Pcg64;
+use lkgp::util::{fmt_bytes, Args};
+
+fn main() -> lkgp::Result<()> {
+    let args = Args::from_env();
+    let max_size = args.get_usize("max-size", 64);
+    let naive_max = args.get_usize("naive-max", 32);
+    let steps = args.get_usize("train-steps", 3);
+
+    println!("size | engine | train (s) | predict (s) | peak alloc");
+    println!("-----+--------+-----------+-------------+-----------");
+    let mut size = 16;
+    while size <= max_size {
+        let mut rng = Pcg64::new(size as u64);
+        let data = fig3_dataset(size, &mut rng);
+        let theta0 = Theta::default_packed(10);
+        let xq = Matrix::from_vec(16, 10, rng.uniform_vec(160, 0.0, 1.0));
+
+        // --- LKGP (iterative) ---
+        let cfg = SolverCfg::default();
+        let tracker = AllocTracker::start();
+        let t0 = std::time::Instant::now();
+        let mut theta = theta0.clone();
+        let probes = Pcg64::new(1).rademacher_vec(cfg.probes * size * size);
+        let mut obj = |p: &[f64]| {
+            lkgp::gp::lkgp::mll_value_grad(p, &data, &probes, &cfg).map(|e| (e.value, e.grad))
+        };
+        let trace = lkgp::gp::trainer::adam(
+            &mut obj,
+            &theta,
+            &lkgp::gp::trainer::AdamCfg { steps, ..Default::default() },
+        )?;
+        theta = trace.theta;
+        let train_t = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let mut prng = Pcg64::new(2);
+        let _samples =
+            lkgp::gp::lkgp::posterior_samples(&theta, &data, &xq, 4, &cfg, &mut prng)?;
+        let pred_t = t1.elapsed();
+        println!(
+            "{size:>4} | lkgp   | {:>9.3} | {:>11.3} | {}",
+            train_t.as_secs_f64(),
+            pred_t.as_secs_f64(),
+            fmt_bytes(tracker.peak_noted())
+        );
+
+        // --- naive Cholesky ---
+        if size <= naive_max {
+            let tracker = AllocTracker::start();
+            let t0 = std::time::Instant::now();
+            let mut obj_n =
+                |p: &[f64]| naive::mll_value_grad_exact(p, &data);
+            let trace = lkgp::gp::trainer::adam(
+                &mut obj_n,
+                &theta0,
+                &lkgp::gp::trainer::AdamCfg { steps, ..Default::default() },
+            )?;
+            let train_t = t0.elapsed();
+            let t1 = std::time::Instant::now();
+            let mut prng = Pcg64::new(2);
+            let _s = naive::sample_curves_exact(&trace.theta, &data, &xq, 4, &mut prng)?;
+            let pred_t = t1.elapsed();
+            println!(
+                "{size:>4} | naive  | {:>9.3} | {:>11.3} | {}",
+                train_t.as_secs_f64(),
+                pred_t.as_secs_f64(),
+                fmt_bytes(tracker.peak_noted())
+            );
+        } else {
+            println!("{size:>4} | naive  | (skipped: O(n^3 m^3) wall, see --naive-max)");
+        }
+        size *= 2;
+    }
+    Ok(())
+}

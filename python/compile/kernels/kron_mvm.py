@@ -1,0 +1,180 @@
+"""L1 Pallas kernel: masked latent-Kronecker matrix-vector product.
+
+The paper's inference hot spot is
+
+    A v = M . (K1 (M . V) K2) + sigma2 * V          (".": elementwise)
+
+i.e. the full-space embedding of ``(P (K1 x K2) P^T + sigma2 I) v`` — two
+dense matmuls with a mask applied before the first and after the second.
+One CG iteration performs exactly one such MVM, so everything else in the
+solver is O(nm) vector work.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper runs this as cuBLAS
+GEMMs on a V100. On TPU the natural shape is two MXU matmul pipelines with
+the mask multiply and sigma2-shift fused into the epilogues. We express the
+HBM<->VMEM schedule with BlockSpecs: the output tile (bi, bj) accumulates
+over the contraction grid axis, K tiles stream while the V tile stays
+resident. On this image Pallas must run ``interpret=True`` (the CPU PJRT
+plugin cannot execute Mosaic custom calls), so these kernels are validated
+for correctness here and their VMEM/MXU characteristics are analyzed
+statically (EXPERIMENTS.md §Perf).
+
+Both matmuls are instances of one generic tiled kernel with optional
+pre-mask, post-mask, and axpy epilogue; ``masked_kron_mvm`` composes them:
+
+    W   = (M . V) @ K2        -- pre-mask on the left operand
+    out = M . (K1 @ W) + sigma2 * V   -- post-mask + shift epilogue
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Tiled matmul body: o[bi, bj] += x[bi, k] @ y[k, bj] over grid axis k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ y_ref[...]
+
+
+def _matmul_mask_lhs_kernel(x_ref, m_ref, y_ref, o_ref, *, nk: int):
+    """Tiled matmul with the left operand masked: o += (m . x) @ y."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += (m_ref[...] * x_ref[...]) @ y_ref[...]
+
+
+def _matmul_mask_shift_kernel(x_ref, y_ref, m_ref, v_ref, s_ref, o_ref, *, nk: int):
+    """Tiled matmul with fused epilogue: o = m . (x @ y) + s * v.
+
+    The mask/shift epilogue only fires on the last contraction step, so the
+    accumulator never round-trips to HBM between steps.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ y_ref[...]
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = m_ref[...] * o_ref[...] + s_ref[0] * v_ref[...]
+
+
+def _block(size: int, tile: int) -> int:
+    """Largest tile that divides ``size`` and is at most ``tile``."""
+    b = min(size, tile)
+    while size % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bk"))
+def matmul_masked_lhs(x, mask, y, *, bi=64, bj=64, bk=64):
+    """Pallas ``(mask . x) @ y`` with tiles (bi, bk) x (bk, bj).
+
+    Args:
+        x: (n, k) left operand.
+        mask: (n, k) elementwise mask for the left operand.
+        y: (k, m) right operand.
+
+    Returns:
+        (n, m) product.
+    """
+    n, kk = x.shape
+    _, m = y.shape
+    bi = _block(n, bi)
+    bj = _block(m, bj)
+    bk = _block(kk, bk)
+    nk = kk // bk
+    grid = (n // bi, m // bj, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_mask_lhs_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bj), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x, mask, y)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bk"))
+def matmul_mask_shift(x, y, mask, v, sigma2, *, bi=64, bj=64, bk=64):
+    """Pallas ``mask . (x @ y) + sigma2 * v`` with a fused epilogue.
+
+    Args:
+        x: (n, k) left operand.
+        y: (k, m) right operand.
+        mask: (n, m) output mask.
+        v: (n, m) shift operand.
+        sigma2: scalar shift coefficient, shaped (1,).
+
+    Returns:
+        (n, m) result.
+    """
+    n, kk = x.shape
+    _, m = y.shape
+    bi = _block(n, bi)
+    bj = _block(m, bj)
+    bk = _block(kk, bk)
+    nk = kk // bk
+    grid = (n // bi, m // bj, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_mask_shift_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bj), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x, y, mask, v, sigma2)
+
+
+def masked_kron_mvm(k1, k2, mask, sigma2, v, *, tile=64):
+    """Masked latent-Kronecker MVM via two tiled Pallas matmuls.
+
+    Computes ``M . (K1 (M . V) K2) + sigma2 * V`` (see ref.masked_kron_mvm).
+
+    Args:
+        k1: (n, n) config kernel matrix.
+        k2: (m, m) progression kernel matrix (symmetric).
+        mask: (n, m) observation mask.
+        sigma2: scalar noise variance (python float, 0-d or (1,) array).
+        v: (n, m) or (b, n, m) input.
+
+    Returns:
+        Result with the same shape as ``v``.
+    """
+    s = jnp.asarray(sigma2, dtype=k1.dtype).reshape((1,))
+
+    def one(vi):
+        w = matmul_masked_lhs(vi, mask, k2, bi=tile, bj=tile, bk=tile)
+        return matmul_mask_shift(k1, w, mask, vi, s, bi=tile, bj=tile, bk=tile)
+
+    if v.ndim == 2:
+        return one(v)
+    return jax.vmap(one)(v)

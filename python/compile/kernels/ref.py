@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth used by pytest/hypothesis to validate the L1
+Pallas kernels, and they double as the building blocks of the L2 model when
+a shape is too small/awkward to tile (the model dispatches to the Pallas
+variant for the hot path and to these references elsewhere — both lower into
+the same HLO artifact, so the choice is a build-time detail).
+
+All math is float64 (the paper runs in double precision, Appendix B).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_kernel(x1: jnp.ndarray, x2: jnp.ndarray, lengthscales: jnp.ndarray) -> jnp.ndarray:
+    """ARD RBF kernel matrix.
+
+    k(x, x') = exp(-0.5 * sum_d ((x_d - x'_d) / ls_d)^2)
+
+    Args:
+        x1: (n1, d) inputs.
+        x2: (n2, d) inputs.
+        lengthscales: (d,) positive length scales.
+
+    Returns:
+        (n1, n2) kernel matrix.
+    """
+    z1 = x1 / lengthscales
+    z2 = x2 / lengthscales
+    # Clamp tiny negatives from cancellation before exp.
+    d2 = (
+        jnp.sum(z1 * z1, axis=-1)[:, None]
+        + jnp.sum(z2 * z2, axis=-1)[None, :]
+        - 2.0 * z1 @ z2.T
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.exp(-0.5 * d2)
+
+
+def matern12_kernel(
+    t1: jnp.ndarray, t2: jnp.ndarray, lengthscale: jnp.ndarray, outputscale: jnp.ndarray
+) -> jnp.ndarray:
+    """Matern-1/2 (exponential) kernel matrix over scalar progressions.
+
+    k(t, t') = outputscale * exp(-|t - t'| / lengthscale)
+
+    Args:
+        t1: (m1,) progression values.
+        t2: (m2,) progression values.
+        lengthscale: scalar positive length scale.
+        outputscale: scalar positive output scale (variance).
+
+    Returns:
+        (m1, m2) kernel matrix.
+    """
+    d = jnp.abs(t1[:, None] - t2[None, :])
+    return outputscale * jnp.exp(-d / lengthscale)
+
+
+def masked_kron_mvm(
+    k1: jnp.ndarray,
+    k2: jnp.ndarray,
+    mask: jnp.ndarray,
+    sigma2: jnp.ndarray,
+    v: jnp.ndarray,
+) -> jnp.ndarray:
+    """Masked latent-Kronecker matrix-vector product (the paper's core op).
+
+    Computes ``M . (K1 (M . V) K2) + sigma2 * V`` where ``.`` is elementwise,
+    which is the full-space embedding of ``(P (K1 x K2) P^T + sigma2 I)``
+    acting on an observed-supported vector (P = row-selection of observed
+    entries, implemented as mask instead of slicing to keep shapes static
+    for AOT export).
+
+    Args:
+        k1: (n, n) hyper-parameter kernel matrix.
+        k2: (m, m) progression kernel matrix (symmetric).
+        mask: (n, m) observation mask in {0, 1}.
+        sigma2: scalar noise variance.
+        v: (..., n, m) input (batched over leading dims).
+
+    Returns:
+        (..., n, m) result of the masked operator.
+    """
+    mv = mask * v
+    w = jnp.einsum("ij,...jm->...im", k1, mv)
+    w = jnp.einsum("...im,mk->...ik", w, k2)
+    return mask * w + sigma2 * v
+
+
+def kron_mvm(k1: jnp.ndarray, k2: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Plain Kronecker MVM ``(K1 x K2) vec(V)`` in row-major layout.
+
+    With V of shape (n, m) indexed row-major, (K1 x K2) vec(V) reshapes to
+    ``K1 V K2^T`` (= ``K1 V K2`` for symmetric K2).
+    """
+    w = jnp.einsum("ij,...jm->...im", k1, v)
+    return jnp.einsum("...im,mk->...ik", w, k2.T)
+
+
+def dense_joint_kernel(
+    k1: jnp.ndarray, k2: jnp.ndarray, mask: jnp.ndarray, sigma2: jnp.ndarray
+) -> jnp.ndarray:
+    """Dense full-space operator matrix (for oracle tests only).
+
+    Returns the (n*m, n*m) matrix of the masked operator
+    ``diag(m) (K1 x K2) diag(m) + sigma2 I`` with row-major vec layout.
+    """
+    n = k1.shape[0]
+    m = k2.shape[0]
+    kk = jnp.kron(k1, k2)
+    dm = mask.reshape(n * m)
+    return dm[:, None] * kk * dm[None, :] + sigma2 * jnp.eye(n * m, dtype=kk.dtype)

@@ -1,0 +1,119 @@
+"""AOT exports: manifest consistency and HLO-text invariants.
+
+Executing the artifacts end-to-end is the job of the rust integration tests
+(rust/tests/); here we verify the build-time contract the runtime relies on.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+ENTRIES = {"mvm", "kernel_matrices", "mll_grad", "fit_adam", "predict_mean", "posterior"}
+
+
+def load_manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_existing_files():
+    man = load_manifest()
+    assert man["format"] == 1
+    assert man["dtype"] == "f64"
+    for rec in man["artifacts"]:
+        path = os.path.join(ART, rec["file"])
+        assert os.path.exists(path), rec["file"]
+        assert os.path.getsize(path) > 1000
+
+
+def test_every_bucket_has_all_entries():
+    man = load_manifest()
+    by_bucket = {}
+    for rec in man["artifacts"]:
+        by_bucket.setdefault((rec["n"], rec["m"], rec["d"]), set()).add(rec["entry"])
+    assert by_bucket, "no buckets"
+    for bucket, entries in by_bucket.items():
+        assert entries == ENTRIES, f"bucket {bucket} missing {ENTRIES - entries}"
+
+
+def test_quality_bucket_matches_lcbench_shape():
+    """The quality experiment needs (m=52, d=7) buckets (LCBench grids)."""
+    man = load_manifest()
+    assert any(r["m"] == 52 and r["d"] == 7 for r in man["artifacts"])
+
+
+def test_input_specs_are_complete():
+    man = load_manifest()
+    want_inputs = {
+        "mvm": ["theta", "x", "t", "mask", "v"],
+        "kernel_matrices": ["theta", "x", "t"],
+        "mll_grad": ["theta", "x", "t", "y", "mask", "probes"],
+        "fit_adam": ["theta0", "x", "t", "y", "mask", "probes"],
+        "predict_mean": ["theta", "x", "t", "y", "mask", "xq"],
+        "posterior": ["theta", "x", "t", "y", "mask", "xq", "zeta", "eps"],
+    }
+    for rec in man["artifacts"]:
+        names = [i["name"] for i in rec["inputs"]]
+        assert names == want_inputs[rec["entry"]], rec["file"]
+        n, m, d = rec["n"], rec["m"], rec["d"]
+        shapes = {i["name"]: i["shape"] for i in rec["inputs"]}
+        if "x" in shapes:
+            assert shapes["x"] == [n, d]
+        if "mask" in shapes:
+            assert shapes["mask"] == [n, m]
+        if "probes" in shapes:
+            assert shapes["probes"] == [rec["p"], n, m]
+        if "zeta" in shapes:
+            assert shapes["zeta"] == [rec["s"], n + rec["q"], m]
+
+
+def test_hlo_text_is_parsable_format():
+    """Text artifacts must look like HLO modules (ENTRY + f64 types)."""
+    man = load_manifest()
+    for rec in man["artifacts"][:6]:
+        with open(os.path.join(ART, rec["file"])) as f:
+            text = f.read()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        assert "f64" in text
+
+
+def test_no_unsupported_custom_calls():
+    """The rust CPU client cannot run LAPACK/Mosaic custom calls; the whole
+    portability strategy (own cholesky/jacobi, pallas interpret) exists to
+    keep these out of the artifacts."""
+    man = load_manifest()
+    for rec in man["artifacts"]:
+        with open(os.path.join(ART, rec["file"])) as f:
+            text = f.read()
+        assert "lapack" not in text.lower(), rec["file"]
+        assert "mosaic" not in text.lower(), rec["file"]
+
+
+def test_no_truncated_constants():
+    """The default HLO printer elides large constants as `constant({...})`
+    and xla_extension 0.5.1 silently ZERO-FILLS them (this turned Jacobi
+    rotations into no-ops). aot.to_hlo_text must print full payloads."""
+    man = load_manifest()
+    for rec in man["artifacts"]:
+        with open(os.path.join(ART, rec["file"])) as f:
+            text = f.read()
+        assert "{...}" not in text, rec["file"]
+
+
+def test_no_unparsable_metadata():
+    """jax >= 0.5 emits metadata attributes (source_end_line etc.) the old
+    text parser rejects; aot.to_hlo_text disables metadata printing."""
+    man = load_manifest()
+    for rec in man["artifacts"]:
+        with open(os.path.join(ART, rec["file"])) as f:
+            text = f.read()
+        assert "source_end_line" not in text, rec["file"]

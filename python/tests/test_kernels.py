@@ -1,0 +1,149 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, tile sizes and mask patterns; every case
+asserts allclose against the reference. This is the core correctness signal
+for the kernels that end up inside the AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kron_mvm, pairwise, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+shapes = st.tuples(
+    st.integers(1, 48),  # n
+    st.integers(1, 40),  # m
+    st.integers(1, 9),  # d
+)
+
+
+@given(shapes, st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 64]))
+def test_masked_kron_mvm_matches_ref(shape, seed, tile):
+    n, m, d = shape
+    rng = _rng(seed)
+    x = rng.standard_normal((n, d))
+    k1 = ref.rbf_kernel(x, x, np.full(d, 1.3))
+    t = np.linspace(0.0, 1.0, m)
+    k2 = ref.matern12_kernel(t, t, 0.4, 1.7)
+    mask = (rng.uniform(size=(n, m)) < 0.75).astype(np.float64)
+    v = rng.standard_normal((n, m))
+    want = ref.masked_kron_mvm(k1, k2, mask, 0.05, v)
+    got = kron_mvm.masked_kron_mvm(
+        np.asarray(k1), np.asarray(k2), mask, 0.05, v, tile=tile
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-10)
+
+
+@given(shapes, st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_masked_kron_mvm_batched(shape, seed, b):
+    n, m, d = shape
+    rng = _rng(seed)
+    x = rng.standard_normal((n, d))
+    k1 = ref.rbf_kernel(x, x, np.full(d, 0.9))
+    t = np.linspace(0.0, 1.0, m)
+    k2 = ref.matern12_kernel(t, t, 0.3, 0.8)
+    mask = (rng.uniform(size=(n, m)) < 0.6).astype(np.float64)
+    v = rng.standard_normal((b, n, m))
+    want = ref.masked_kron_mvm(k1, k2, mask, 0.11, v)
+    got = kron_mvm.masked_kron_mvm(np.asarray(k1), np.asarray(k2), mask, 0.11, v, tile=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-10)
+
+
+@given(
+    st.integers(1, 40), st.integers(1, 40), st.integers(1, 9),
+    st.integers(0, 2**31 - 1), st.sampled_from([16, 128]),
+)
+def test_rbf_kernel_matches_ref(n1, n2, d, seed, tile):
+    rng = _rng(seed)
+    x1 = rng.standard_normal((n1, d))
+    x2 = rng.standard_normal((n2, d))
+    ls = rng.uniform(0.2, 3.0, d)
+    want = ref.rbf_kernel(x1, x2, ls)
+    got = pairwise.rbf_kernel(x1, x2, ls, tile=tile)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@given(
+    st.integers(1, 60), st.integers(1, 60),
+    st.floats(0.05, 5.0), st.floats(0.05, 5.0),
+    st.integers(0, 2**31 - 1), st.sampled_from([16, 128]),
+)
+def test_matern12_kernel_matches_ref(m1, m2, ls, os_, seed, tile):
+    rng = _rng(seed)
+    t1 = np.sort(rng.uniform(0, 1, m1))
+    t2 = np.sort(rng.uniform(0, 1, m2))
+    want = ref.matern12_kernel(t1, t2, ls, os_)
+    got = pairwise.matern12_kernel(t1, t2, ls, os_, tile=tile)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@given(st.floats(32.1, 64.0))
+def test_rbf_float32_path(dummy):
+    """Kernels must also work in f32 (dtype sweep)."""
+    rng = _rng(int(dummy * 1000))
+    x = rng.standard_normal((12, 4)).astype(np.float32)
+    ls = np.full(4, 1.1, dtype=np.float32)
+    want = ref.rbf_kernel(x, x, ls)
+    got = pairwise.rbf_kernel(x, x, ls, tile=8)
+    assert np.asarray(got).dtype == np.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mvm_float32_path():
+    rng = _rng(7)
+    n, m = 12, 10
+    k1 = np.eye(n, dtype=np.float32) + 0.1
+    k2 = np.eye(m, dtype=np.float32) * 2.0
+    mask = np.ones((n, m), dtype=np.float32)
+    v = rng.standard_normal((n, m)).astype(np.float32)
+    want = ref.masked_kron_mvm(k1, k2, mask, np.float32(0.1), v)
+    got = kron_mvm.masked_kron_mvm(k1, k2, mask, np.float32(0.1), v, tile=8)
+    assert np.asarray(got).dtype == np.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_mvm_equals_dense_operator():
+    """The masked MVM agrees with the dense (P K P^T + s I) embedding."""
+    rng = _rng(3)
+    n, m, d = 9, 7, 4
+    x = rng.standard_normal((n, d))
+    k1 = np.asarray(ref.rbf_kernel(x, x, np.full(d, 1.0)))
+    t = np.linspace(0, 1, m)
+    k2 = np.asarray(ref.matern12_kernel(t, t, 0.5, 1.2))
+    mask = (rng.uniform(size=(n, m)) < 0.5).astype(np.float64)
+    dense = np.asarray(ref.dense_joint_kernel(k1, k2, mask, 0.07))
+    v = rng.standard_normal((n, m)) * mask  # observed-supported
+    want = (dense @ v.reshape(-1)).reshape(n, m)
+    got = np.asarray(kron_mvm.masked_kron_mvm(k1, k2, mask, 0.07, v, tile=8))
+    # On the missing entries the dense embedding gives sigma2*0 = 0 too.
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_mvm_projection_submatrix_semantics():
+    """P (K1 x K2) P^T equals slicing rows/cols of the Kronecker product.
+
+    This is Figure 2 of the paper as a unit test.
+    """
+    rng = _rng(11)
+    n, m = 4, 3
+    a = rng.standard_normal((n, n)); k1 = a @ a.T + np.eye(n)
+    b = rng.standard_normal((m, m)); k2 = b @ b.T + np.eye(m)
+    mask = np.array([[1, 1, 0], [1, 1, 1], [0, 1, 0], [1, 0, 1]], dtype=np.float64)
+    kk = np.kron(k1, k2)
+    idx = np.nonzero(mask.reshape(-1))[0]
+    sub = kk[np.ix_(idx, idx)]  # P K P^T by explicit row selection
+    dense = np.asarray(ref.dense_joint_kernel(k1, k2, mask, 0.0))
+    np.testing.assert_allclose(dense[np.ix_(idx, idx)], sub, rtol=1e-12)
+    # and rows/cols outside the mask are zero
+    off = np.nonzero(1 - mask.reshape(-1))[0]
+    assert np.all(dense[np.ix_(off, idx)] == 0)
+    assert np.all(dense[np.ix_(idx, off)] == 0)

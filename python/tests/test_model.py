@@ -1,0 +1,229 @@
+"""L2 model vs dense oracles: CG, SLQ, MLL, gradients, Matheron sampling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", max_examples=10, deadline=None)
+settings.load_profile("model")
+
+
+def make_problem(n, m, d, seed, frac=0.7, prefix=True):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(n, d))
+    t = np.linspace(0.0, 1.0, m)
+    if prefix:
+        lens = rng.integers(max(1, int(frac * m) - 2), m + 1, n)
+        mask = (np.arange(m)[None, :] < lens[:, None]).astype(np.float64)
+    else:
+        mask = (rng.uniform(size=(n, m)) < frac).astype(np.float64)
+    y = rng.standard_normal((n, m)) * mask
+    theta = np.asarray(model.default_theta(d))
+    return x, t, y, mask, theta, rng
+
+
+@given(st.integers(2, 14), st.integers(2, 10), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_cg_matches_dense_solve(n, m, d, seed):
+    x, t, y, mask, theta, rng = make_problem(n, m, d, seed, prefix=False)
+    p = model.unpack_theta(theta)
+    k1 = np.asarray(ref.rbf_kernel(x, x, p.lengthscales))
+    k2 = np.asarray(ref.matern12_kernel(t, t, p.t_lengthscale, p.outputscale))
+    s2 = float(p.sigma2)
+    dense = np.asarray(ref.dense_joint_kernel(k1, k2, mask, s2))
+    # keep the missing-subspace identity so dense is invertible
+    rhs = (rng.standard_normal((n, m)) * mask)
+    matvec = model.masked_operator(k1, k2, mask, s2, use_pallas=False)
+    sol, iters = model.cg_solve(matvec, rhs[None], tol=1e-10, max_iters=5000)
+    want = np.linalg.solve(dense, rhs.reshape(-1)).reshape(n, m)
+    np.testing.assert_allclose(np.asarray(sol[0]), want, rtol=1e-6, atol=1e-8)
+
+
+def test_cg_stays_in_observed_subspace():
+    x, t, y, mask, theta, rng = make_problem(10, 8, 3, 5)
+    p = model.unpack_theta(theta)
+    k1 = np.asarray(ref.rbf_kernel(x, x, p.lengthscales))
+    k2 = np.asarray(ref.matern12_kernel(t, t, p.t_lengthscale, p.outputscale))
+    matvec = model.masked_operator(k1, k2, mask, float(p.sigma2), use_pallas=False)
+    sol, _ = model.cg_solve(matvec, (y * mask)[None], tol=1e-8, max_iters=2000)
+    assert np.all(np.asarray(sol[0])[mask == 0] == 0.0)
+
+
+def test_cholesky_jnp_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 5, 17, 40):
+        a = rng.standard_normal((n, n))
+        spd = a @ a.T + n * np.eye(n)
+        l = np.asarray(model.cholesky_jnp(spd))
+        np.testing.assert_allclose(l, np.linalg.cholesky(spd), rtol=1e-9, atol=1e-9)
+
+
+def test_jacobi_eigh_matches_numpy():
+    rng = np.random.default_rng(1)
+    for k in (2, 3, 8, 20):
+        a = rng.standard_normal((k, k))
+        sym = (a + a.T) / 2
+        evals, evecs = model.jacobi_eigh(sym)
+        evals = np.sort(np.asarray(evals))
+        want = np.sort(np.linalg.eigvalsh(sym))
+        np.testing.assert_allclose(evals, want, rtol=1e-8, atol=1e-8)
+        # eigenvector property: A v = lambda v
+        ev, V = model.jacobi_eigh(sym)
+        np.testing.assert_allclose(sym @ np.asarray(V), np.asarray(V) * np.asarray(ev)[None, :], atol=1e-8)
+
+
+def test_slq_logdet_close_to_exact():
+    x, t, y, mask, theta, rng = make_problem(12, 9, 3, 9)
+    p = model.unpack_theta(theta)
+    k1 = np.asarray(ref.rbf_kernel(x, x, p.lengthscales))
+    k2 = np.asarray(ref.matern12_kernel(t, t, p.t_lengthscale, p.outputscale))
+    s2 = float(p.sigma2)
+    dense = np.asarray(ref.dense_joint_kernel(k1, k2, mask, s2))
+    want = np.linalg.slogdet(dense)[1]
+    matvec = model.masked_operator(k1, k2, mask, s2, use_pallas=False)
+    probes = rng.choice([-1.0, 1.0], size=(64, 12, 9))
+    got = float(model.slq_logdet(matvec, probes, iters=20))
+    assert abs(got - want) / abs(want) < 0.05
+
+
+def test_mll_value_close_to_exact():
+    x, t, y, mask, theta, rng = make_problem(12, 8, 3, 1)
+    probes = rng.choice([-1.0, 1.0], size=(32, 12, 8))
+    v, g, _ = model.mll_value_and_grad(theta, x, t, y, mask, probes, use_pallas=False)
+    ve = float(model.mll_exact(theta, x, t, y, mask))
+    assert abs(float(v) - ve) / abs(ve) < 0.02
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_mll_grad_matches_exact_fd(seed):
+    n, m, d = 10, 7, 2
+    x, t, y, mask, theta, rng = make_problem(n, m, d, seed)
+    theta = theta + rng.normal(0, 0.2, theta.shape)  # random parameter point
+    probes = rng.choice([-1.0, 1.0], size=(64, n, m))
+    _, g, _ = model.mll_value_and_grad(theta, x, t, y, mask, probes,
+                                       use_pallas=False, cg_tol=1e-8)
+    h = 1e-5
+    ge = np.zeros_like(theta)
+    for i in range(len(theta)):
+        tp = theta.copy(); tp[i] += h
+        tm = theta.copy(); tm[i] -= h
+        ge[i] = (float(model.mll_exact(tp, x, t, y, mask))
+                 - float(model.mll_exact(tm, x, t, y, mask))) / (2 * h)
+    # Hutchinson noise scales with trace magnitude; compare directionally
+    denom = np.linalg.norm(ge) + 1e-12
+    assert np.linalg.norm(np.asarray(g) - ge) / denom < 0.15
+
+
+def test_predict_mean_matches_dense_posterior():
+    n, m, d, q = 10, 6, 3, 4
+    x, t, y, mask, theta, rng = make_problem(n, m, d, 3)
+    xq = rng.uniform(size=(q, d))
+    p = model.unpack_theta(theta)
+    k1 = np.asarray(ref.rbf_kernel(x, x, p.lengthscales))
+    k2 = np.asarray(ref.matern12_kernel(t, t, p.t_lengthscale, p.outputscale))
+    s2 = float(p.sigma2)
+    idx = np.nonzero(mask.reshape(-1))[0]
+    kk = np.kron(k1, k2)
+    kobs = kk[np.ix_(idx, idx)] + s2 * np.eye(len(idx))
+    k1q = np.asarray(ref.rbf_kernel(xq, x, p.lengthscales))
+    kcross = np.kron(k1q, k2)[:, idx]  # (q*m, n_obs)
+    alpha = np.linalg.solve(kobs, (y * mask).reshape(-1)[idx])
+    want = (kcross @ alpha).reshape(q, m)
+    got, _ = model.predict_mean(theta, x, t, y, mask, xq, cg_tol=1e-10, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-8)
+
+
+def test_matheron_samples_have_posterior_moments():
+    """Sample mean/cov over many Matheron draws matches the dense posterior."""
+    n, m, d, q, s = 6, 5, 2, 3, 3000
+    x, t, y, mask, theta, rng = make_problem(n, m, d, 21)
+    xq = rng.uniform(size=(q, d))
+    zeta = rng.standard_normal((s, n + q, m))
+    eps = rng.standard_normal((s, n, m))
+    samples, _ = model.posterior_samples(theta, x, t, y, mask, xq, zeta, eps,
+                                         cg_tol=1e-8, use_pallas=False)
+    samples = np.asarray(samples)[:, n:, :]  # query configs only
+
+    p = model.unpack_theta(theta)
+    k1j = np.asarray(ref.rbf_kernel(np.concatenate([x, xq]), np.concatenate([x, xq]),
+                                    p.lengthscales))
+    k2 = np.asarray(ref.matern12_kernel(t, t, p.t_lengthscale, p.outputscale))
+    s2 = float(p.sigma2)
+    kk = np.kron(k1j, k2)
+    nm = n * m
+    idx = np.nonzero(mask.reshape(-1))[0]
+    qidx = nm + np.arange(q * m)
+    kobs = kk[np.ix_(idx, idx)] + s2 * np.eye(len(idx))
+    kcross = kk[np.ix_(qidx, idx)]
+    yobs = (y * mask).reshape(-1)[idx]
+    mean = (kcross @ np.linalg.solve(kobs, yobs)).reshape(q, m)
+    cov = kk[np.ix_(qidx, qidx)] - kcross @ np.linalg.solve(kobs, kcross.T)
+
+    emp_mean = samples.mean(axis=0)
+    np.testing.assert_allclose(emp_mean, mean, atol=4 * np.sqrt(np.diag(cov).max() / s) + 5e-2)
+    emp_cov = np.cov(samples.reshape(s, -1).T)
+    assert np.abs(emp_cov - cov).max() < 0.15 * max(1.0, np.abs(cov).max())
+
+
+def test_fit_adam_improves_objective():
+    n, m, d = 16, 12, 3
+    x, t, y, mask, theta0, rng = make_problem(n, m, d, 4)
+    # targets with actual structure: smooth curves
+    base = 1.0 - np.exp(-3 * np.linspace(0, 1, m))
+    y = (base[None, :] * rng.uniform(0.5, 1.0, (n, 1)) + 0.01 * rng.standard_normal((n, m))) * mask
+    y = (y - y.max()) / (y.std() + 1e-12)
+    probes = rng.choice([-1.0, 1.0], size=(8, n, m))
+    theta, (values, iters) = model.fit_adam(theta0, x, t, y, mask, probes,
+                                            steps=40, lr=0.1, use_pallas=False)
+    assert float(values[-1]) > float(values[0])
+    # exact MLL agrees that the fit improved
+    assert float(model.mll_exact(np.asarray(theta), x, t, y, mask)) > float(
+        model.mll_exact(np.asarray(theta0), x, t, y, mask))
+
+
+def test_transform_roundtrip_conventions():
+    """Document/lock the paper's §B transforms (implemented rust-side)."""
+    # t -> log-spaced unit interval
+    t = np.arange(1, 53, dtype=np.float64)
+    lt = np.log(t)
+    tn = (lt - lt[0]) / (lt[-1] - lt[0])
+    assert tn[0] == 0.0 and tn[-1] == 1.0 and np.all(np.diff(tn) > 0)
+    # y -> subtract max, divide by std
+    rng = np.random.default_rng(0)
+    y = rng.uniform(0.3, 0.9, size=(8, 52))
+    ys = (y - y.max()) / y.std()
+    assert ys.max() == 0.0
+    np.testing.assert_allclose(ys.std(), 1.0, rtol=1e-12)
+
+
+@given(st.integers(2, 24), st.integers(0, 2**31 - 1))
+def test_jacobi_evals_w_matches_full_eigh(k, seed):
+    """The SLQ fast path (first-row-only eigenvector carry) must agree
+    with the full decomposition on eigenvalues and quadrature weights."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((k, k))
+    a = (a + a.T) / 2
+    ev_full, V = model.jacobi_eigh(a)
+    ev_fast, w = model.jacobi_evals_w(a)
+    np.testing.assert_allclose(np.sort(np.asarray(ev_fast)),
+                               np.sort(np.asarray(ev_full)), atol=1e-10)
+    want_w = np.asarray(V)[0, :] ** 2
+    # match by eigenvalue ordering
+    order_full = np.argsort(np.asarray(ev_full))
+    order_fast = np.argsort(np.asarray(ev_fast))
+    np.testing.assert_allclose(np.asarray(w)[order_fast], want_w[order_full],
+                               atol=1e-9)
+    # weights sum to 1 (e1 has unit norm)
+    np.testing.assert_allclose(np.asarray(w).sum(), 1.0, atol=1e-10)
+
+
+def test_jacobi_evals_w_odd_size():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((7, 7))
+    a = (a + a.T) / 2
+    ev, w = model.jacobi_evals_w(a)
+    assert np.asarray(ev).shape == (7,)
+    np.testing.assert_allclose(np.sort(np.asarray(ev)),
+                               np.sort(np.linalg.eigvalsh(a)), atol=1e-9)

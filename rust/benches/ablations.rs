@@ -1,0 +1,212 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * CG tolerance sweep — the paper uses 0.01; how do looser/tighter
+//!   tolerances trade solve time vs prediction error?
+//! * probe count sweep — SLQ/Hutchinson variance vs cost.
+//! * padding overhead — what does bucket padding cost the XLA engine?
+//! * dynamic batching — service throughput with/without coalescing.
+//!
+//! Output: results/ablations_*.csv. Flags: --quick.
+
+use std::sync::mpsc::channel;
+
+use lkgp::bench_util::{bench, time_once, Table};
+use lkgp::coordinator::{CurveStore, PredictionService, Registry, Request};
+use lkgp::gp::lkgp::SolverCfg;
+use lkgp::gp::Theta;
+use lkgp::lcbench::toy_dataset;
+use lkgp::linalg::Matrix;
+use lkgp::rng::Pcg64;
+use lkgp::runtime::RustEngine;
+use lkgp::util::Args;
+
+fn main() -> lkgp::Result<()> {
+    let args = Args::from_env();
+    let quick = lkgp::bench_util::is_quick();
+    let n = args.get_usize("n", if quick { 32 } else { 64 });
+    let m = args.get_usize("m", 52);
+
+    cg_tolerance_sweep(n, m)?;
+    probe_count_sweep(n, m)?;
+    padding_overhead()?;
+    batching_throughput()?;
+    Ok(())
+}
+
+/// CG tolerance vs time and vs agreement with a tight solve.
+fn cg_tolerance_sweep(n: usize, m: usize) -> lkgp::Result<()> {
+    println!("\n== ablation: CG tolerance (paper uses 1e-2) ==");
+    let data = toy_dataset(n, m, 7, 1);
+    let theta = Theta::default_packed(7);
+    let mut rng = Pcg64::new(2);
+    let xq = Matrix::from_vec(8, 7, rng.uniform_vec(56, 0.0, 1.0));
+
+    // reference: tight solve
+    let tight = SolverCfg { cg_tol: 1e-10, ..Default::default() };
+    let refp = lkgp::gp::lkgp::predict_final(&theta, &data, &xq, &tight)?;
+
+    let mut table = Table::new(&["cg_tol", "iters", "time_ms", "max_pred_err"]);
+    for tol in [1e-1, 3e-2, 1e-2, 1e-3, 1e-5] {
+        let cfg = SolverCfg { cg_tol: tol, ..Default::default() };
+        let stats = bench(
+            || {
+                let _ = lkgp::gp::lkgp::predict_final(&theta, &data, &xq, &cfg).unwrap();
+            },
+            3,
+            std::time::Duration::from_millis(300),
+        );
+        let preds = lkgp::gp::lkgp::predict_final(&theta, &data, &xq, &cfg)?;
+        let err = preds
+            .iter()
+            .zip(&refp)
+            .map(|(a, b)| (a.0 - b.0).abs())
+            .fold(0.0, f64::max);
+        // measure iterations via a single mll pass
+        let probes = Pcg64::new(3).rademacher_vec(8 * n * m);
+        let eval = lkgp::gp::lkgp::mll_value_grad(&theta, &data, &probes, &cfg)?;
+        table.row(vec![
+            format!("{tol:.0e}"),
+            eval.cg.iters.to_string(),
+            format!("{:.2}", stats.median_secs() * 1e3),
+            format!("{err:.2e}"),
+        ]);
+    }
+    table.write_csv("results/ablations_cg_tol.csv")?;
+    Ok(())
+}
+
+/// Probe count vs MLL value spread (SLQ variance) and gradient time.
+fn probe_count_sweep(n: usize, m: usize) -> lkgp::Result<()> {
+    println!("\n== ablation: Hutchinson/SLQ probe count ==");
+    let data = toy_dataset(n, m, 7, 4);
+    let theta = Theta::default_packed(7);
+    let exact = lkgp::gp::lkgp::mll_exact(&theta, &data)?;
+
+    let mut table = Table::new(&["probes", "time_ms", "value_std", "value_bias"]);
+    for p in [2usize, 4, 8, 16, 32] {
+        let cfg = SolverCfg { probes: p, ..Default::default() };
+        let mut values = Vec::new();
+        let (_, t) = time_once(|| {
+            for s in 0..6 {
+                let probes = Pcg64::new(100 + s).rademacher_vec(p * n * m);
+                let eval = lkgp::gp::lkgp::mll_value_grad(&theta, &data, &probes, &cfg).unwrap();
+                values.push(eval.value);
+            }
+        });
+        let (mean, _) = lkgp::metrics::mean_stderr(&values);
+        let std = (values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / values.len() as f64)
+            .sqrt();
+        table.row(vec![
+            p.to_string(),
+            format!("{:.1}", t.as_secs_f64() * 1e3 / 6.0),
+            format!("{std:.3}"),
+            format!("{:.3}", mean - exact),
+        ]);
+    }
+    table.write_csv("results/ablations_probes.csv")?;
+    Ok(())
+}
+
+/// XLA bucket padding: same logical problem executed at its natural size
+/// vs padded into a larger bucket.
+fn padding_overhead() -> lkgp::Result<()> {
+    println!("\n== ablation: artifact bucket padding overhead ==");
+    let dir = lkgp::runtime::XlaEngine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built; skipped)");
+        return Ok(());
+    }
+    let mut eng = lkgp::runtime::XlaEngine::load(&dir)?;
+    let theta = Theta::default_packed(7);
+    let mut table = Table::new(&["n", "bucket_n", "mll_grad_ms"]);
+    // 52-epoch, d=7 quality buckets: n in {16, 32, 64}
+    for n in [12usize, 16, 24, 32, 48, 64] {
+        let data = toy_dataset(n, 52, 7, n as u64);
+        let Ok(spec) = eng.manifest().pick("mll_grad", n, 52, 7) else {
+            continue;
+        };
+        let bucket_n = spec.n;
+        let stats = bench(
+            || {
+                let _ = eng.mll_grad(&theta, &data, 1).unwrap();
+            },
+            3,
+            std::time::Duration::from_millis(300),
+        );
+        table.row(vec![
+            n.to_string(),
+            bucket_n.to_string(),
+            format!("{:.1}", stats.median_secs() * 1e3),
+        ]);
+    }
+    table.write_csv("results/ablations_padding.csv")?;
+    Ok(())
+}
+
+/// Dynamic batching: burst of single-query requests vs one batched call.
+fn batching_throughput() -> lkgp::Result<()> {
+    println!("\n== ablation: prediction-service dynamic batching ==");
+    let mut reg = Registry::new();
+    let mut rng = Pcg64::new(7);
+    for _ in 0..24 {
+        let id = reg.add(vec![rng.uniform(), rng.uniform(), rng.uniform()]);
+        for j in 0..4 + rng.below(8) {
+            reg.observe(id, 0.5 + 0.03 * j as f64, 16).unwrap();
+        }
+    }
+    let snap = CurveStore::new(16).snapshot(&reg)?;
+    let theta = Theta::default_packed(3);
+
+    let mut table = Table::new(&["mode", "requests", "wall_ms", "batch_factor"]);
+    for &burst in &[8usize, 32, 64] {
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let (_, wall) = time_once(|| {
+            let mut receivers = Vec::new();
+            for i in 0..burst {
+                let (rtx, rrx) = channel();
+                service
+                    .sender()
+                    .send(Request::PredictFinal {
+                        snapshot: snap.clone(),
+                        theta: theta.clone(),
+                        xq: Matrix::from_vec(1, 3, vec![0.1 * (i % 10) as f64, 0.5, 0.5]),
+                        resp: rtx,
+                    })
+                    .unwrap();
+                receivers.push(rrx);
+            }
+            for r in receivers {
+                r.recv().unwrap().unwrap();
+            }
+        });
+        table.row(vec![
+            "batched".into(),
+            burst.to_string(),
+            format!("{:.2}", wall.as_secs_f64() * 1e3),
+            format!("{:.1}", service.stats.batch_factor()),
+        ]);
+
+        // sequential: one at a time (no queue depth to coalesce)
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let (_, wall) = time_once(|| {
+            for i in 0..burst {
+                let _ = service
+                    .predict_final(
+                        snap.clone(),
+                        theta.clone(),
+                        Matrix::from_vec(1, 3, vec![0.1 * (i % 10) as f64, 0.5, 0.5]),
+                    )
+                    .unwrap();
+            }
+        });
+        table.row(vec![
+            "sequential".into(),
+            burst.to_string(),
+            format!("{:.2}", wall.as_secs_f64() * 1e3),
+            format!("{:.1}", service.stats.batch_factor()),
+        ]);
+    }
+    table.write_csv("results/ablations_batching.csv")?;
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Figure 4 reproduction: MSE and log-likelihood of predicted final
+//! validation accuracy given partially observed learning curves.
+//!
+//! Protocol (paper §3 + Rakotoarison et al. 2024 §5.1): per task, draw a
+//! set of curves with random observation cutoffs (total observed values =
+//! the "# of training examples" axis), predict each partially observed
+//! curve's final-epoch value, score MSE and Gaussian LLH in original
+//! units, aggregate mean ± standard error over seeds.
+//!
+//! Methods: LKGP (ours, both engines), power-law ensemble (DPL stand-in),
+//! per-curve GP (no cross-config correlations — the FT-PFN (no HPs) /
+//! DyHPO axis), last-value. FT-PFN itself cannot be re-pretrained offline
+//! (see DESIGN.md §Substitutions).
+//!
+//! Output: results/fig4_quality.csv (+ stdout table).
+//! Flags: --quick (fewer seeds/budgets), --seeds N, --curves K, --xla.
+
+use lkgp::baselines::{FinalPredictor, LastValue, PerCurveGp, PowerLawEnsemble};
+use lkgp::bench_util::Table;
+use lkgp::gp::Theta;
+use lkgp::lcbench::{build_problem, PartialView, Preset, Task};
+use lkgp::linalg::Matrix;
+use lkgp::metrics::{gaussian_llh, mean_stderr, mse};
+use lkgp::rng::Pcg64;
+use lkgp::runtime::{Engine, RustEngine};
+use lkgp::util::Args;
+
+fn main() -> lkgp::Result<()> {
+    let args = Args::from_env();
+    let quick = lkgp::bench_util::is_quick();
+    // paper protocol: 100 seeds (pass --seeds 100); default bounded for 1 core
+    let seeds = args.get_usize("seeds", if quick { 5 } else { 15 });
+    let curves = args.get_usize("curves", 24);
+    let task_size = args.get_usize("task-size", 200);
+    let budgets: Vec<usize> = if quick {
+        vec![100, 300]
+    } else {
+        vec![50, 100, 200, 400, 800]
+    };
+    let with_xla = args.has("xla");
+
+    let mut table = Table::new(&[
+        "task", "train_examples", "method", "mse_mean", "mse_stderr", "llh_mean", "llh_stderr",
+    ]);
+
+    for preset in Preset::all() {
+        let mut task_rng = Pcg64::new(42);
+        let task = Task::generate(preset, task_size, &mut task_rng);
+
+        for &budget in &budgets {
+            // per-method metric accumulators over seeds
+            let mut results: std::collections::BTreeMap<&str, (Vec<f64>, Vec<f64>)> =
+                Default::default();
+
+            for seed in 0..seeds {
+                let mut rng = Pcg64::new(1000 + seed as u64);
+                let view = PartialView::sample(&task, curves, budget, &mut rng);
+                let problem = build_problem(&task, &view);
+
+                // raw-space inputs for the baselines
+                let k = view.config_idx.len();
+                let m = task.m();
+                let mut raw = Matrix::zeros(k, m);
+                for (row, &ci) in view.config_idx.iter().enumerate() {
+                    raw.row_mut(row).copy_from_slice(task.curves.row(ci));
+                }
+
+                // ---- LKGP (rust engine; exact predictive variance) ----
+                {
+                    let mut eng = RustEngine::default();
+                    let theta0 = Theta::default_packed(problem.data.d());
+                    let theta = eng.fit(&theta0, &problem.data, seed as u64)?;
+                    let preds = eng.predict_final(&theta, &problem.data, &problem.xq)?;
+                    score("lkgp", &preds, &problem, &mut results);
+                }
+
+                // ---- LKGP through AOT artifacts ----
+                if with_xla {
+                    if let Ok(mut eng) = lkgp::runtime::XlaEngine::load(
+                        &lkgp::runtime::XlaEngine::default_dir(),
+                    ) {
+                        if eng
+                            .manifest()
+                            .pick("fit_adam", problem.data.n(), problem.data.m(), problem.data.d())
+                            .is_ok()
+                        {
+                            let theta0 = Theta::default_packed(problem.data.d());
+                            let theta = eng.fit(&theta0, &problem.data, seed as u64)?;
+                            let preds = eng.predict_final(&theta, &problem.data, &problem.xq)?;
+                            score("lkgp_xla", &preds, &problem, &mut results);
+                        }
+                    }
+                }
+
+                // ---- baselines on raw prefixes ----
+                let mut pl = PowerLawEnsemble { members: 8, seed: seed as u64 };
+                let preds = pl.predict(&raw, &view.lengths, &task.epochs);
+                score_raw("power_law", &preds, &problem, &mut results);
+
+                let mut pg = PerCurveGp::default();
+                let preds = pg.predict(&raw, &view.lengths, &task.epochs);
+                score_raw("percurve_gp", &preds, &problem, &mut results);
+
+                let preds = LastValue.predict(&raw, &view.lengths, &task.epochs);
+                score_raw("last_value", &preds, &problem, &mut results);
+            }
+
+            for (method, (mses, llhs)) in &results {
+                let (mm, ms) = mean_stderr(mses);
+                let (lm, ls) = mean_stderr(llhs);
+                table.row(vec![
+                    task.name.clone(),
+                    budget.to_string(),
+                    method.to_string(),
+                    format!("{mm:.6}"),
+                    format!("{ms:.6}"),
+                    format!("{lm:.4}"),
+                    format!("{ls:.4}"),
+                ]);
+            }
+        }
+    }
+
+    table.write_csv("results/fig4_quality.csv")?;
+    println!("\nwrote results/fig4_quality.csv");
+    Ok(())
+}
+
+/// Score LKGP predictions (standardized units -> original units).
+fn score(
+    name: &'static str,
+    preds: &[(f64, f64)],
+    problem: &lkgp::lcbench::ModelProblem,
+    results: &mut std::collections::BTreeMap<&'static str, (Vec<f64>, Vec<f64>)>,
+) {
+    let means: Vec<f64> = preds.iter().map(|p| problem.ytf.undo_mean(p.0)).collect();
+    let pairs: Vec<(f64, f64)> = preds
+        .iter()
+        .map(|p| (problem.ytf.undo_mean(p.0), problem.ytf.undo_var(p.1)))
+        .collect();
+    let e = results.entry(name).or_default();
+    e.0.push(mse(&means, &problem.targets));
+    e.1.push(gaussian_llh(&pairs, &problem.targets));
+}
+
+/// Score baseline predictions (already in original units).
+fn score_raw(
+    name: &'static str,
+    preds: &[(f64, f64)],
+    problem: &lkgp::lcbench::ModelProblem,
+    results: &mut std::collections::BTreeMap<&'static str, (Vec<f64>, Vec<f64>)>,
+) {
+    let means: Vec<f64> = preds.iter().map(|p| p.0).collect();
+    let e = results.entry(name).or_default();
+    e.0.push(mse(&means, &problem.targets));
+    e.1.push(gaussian_llh(preds, &problem.targets));
+}

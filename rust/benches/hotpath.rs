@@ -1,0 +1,136 @@
+//! Hot-path micro benches for the §Perf optimization loop:
+//!
+//! * masked-Kronecker MVM (the paper's core op) across sizes — rust
+//!   engine and (optionally) the Pallas-backed XLA artifact
+//! * batched CG per-iteration cost
+//! * panel-parallel matmul GFLOP/s (the rust roofline anchor)
+//! * Matheron sampling end-to-end
+//!
+//! Output: results/hotpath.csv. Flags: --quick, --xla.
+
+use lkgp::bench_util::{bench, Table};
+use lkgp::gp::kernels;
+use lkgp::gp::operator::MaskedKronOp;
+use lkgp::gp::Theta;
+use lkgp::lcbench::fig3_dataset;
+use lkgp::linalg::{LinOp, Matrix};
+use lkgp::rng::Pcg64;
+use lkgp::util::Args;
+
+fn main() -> lkgp::Result<()> {
+    let args = Args::from_env();
+    let quick = lkgp::bench_util::is_quick();
+    let sizes: Vec<usize> = if quick {
+        vec![64, 128]
+    } else {
+        vec![64, 128, 256, 512]
+    };
+    let with_xla = args.has("xla");
+    let mut table = Table::new(&["op", "size", "median_us", "gflops"]);
+
+    // ---- raw matmul roofline anchor ----
+    for &nn in &sizes {
+        let mut rng = Pcg64::new(nn as u64);
+        let a = Matrix::from_vec(nn, nn, rng.normal_vec(nn * nn));
+        let b = Matrix::from_vec(nn, nn, rng.normal_vec(nn * nn));
+        let mut out = Matrix::zeros(nn, nn);
+        let stats = bench(
+            || a.matmul_into(&b, &mut out),
+            5,
+            std::time::Duration::from_millis(200),
+        );
+        let flops = 2.0 * (nn as f64).powi(3);
+        table.row(vec![
+            "matmul".into(),
+            nn.to_string(),
+            format!("{:.1}", stats.median_secs() * 1e6),
+            format!("{:.2}", flops / stats.median_secs() / 1e9),
+        ]);
+    }
+
+    // ---- masked Kronecker MVM ----
+    for &nn in &sizes {
+        let mut rng = Pcg64::new(nn as u64);
+        let data = fig3_dataset(nn, &mut rng);
+        let theta = Theta::unpack(&Theta::default_packed(10));
+        let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+        let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+        let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+        let v = rng.normal_vec(nn * nn);
+        let mut out = vec![0.0; nn * nn];
+        let stats = bench(
+            || op.apply_batch(&v, &mut out, 1),
+            5,
+            std::time::Duration::from_millis(200),
+        );
+        let flops = 4.0 * (nn as f64).powi(3); // two n^2 m + n m^2 matmuls, n=m
+        table.row(vec![
+            "kron_mvm".into(),
+            nn.to_string(),
+            format!("{:.1}", stats.median_secs() * 1e6),
+            format!("{:.2}", flops / stats.median_secs() / 1e9),
+        ]);
+    }
+
+    // ---- MVM through the Pallas-backed artifact ----
+    if with_xla {
+        if let Ok(mut eng) =
+            lkgp::runtime::XlaEngine::load(&lkgp::runtime::XlaEngine::default_dir())
+        {
+            for &nn in &sizes {
+                let mut rng = Pcg64::new(nn as u64);
+                let data = fig3_dataset(nn, &mut rng);
+                if eng.manifest().pick("mvm", nn, nn, 10).is_err() {
+                    continue;
+                }
+                let theta = Theta::default_packed(10);
+                let v = Matrix::from_vec(nn, nn, rng.normal_vec(nn * nn));
+                let stats = bench(
+                    || {
+                        let _ = eng.mvm(&theta, &data, &v).unwrap();
+                    },
+                    3,
+                    std::time::Duration::from_millis(200),
+                );
+                let flops = 4.0 * (nn as f64).powi(3);
+                table.row(vec![
+                    "kron_mvm_xla".into(),
+                    nn.to_string(),
+                    format!("{:.1}", stats.median_secs() * 1e6),
+                    format!("{:.2}", flops / stats.median_secs() / 1e9),
+                ]);
+            }
+        }
+    }
+
+    // ---- one batched CG solve (17 RHS like training) ----
+    for &nn in &sizes {
+        if nn > 256 {
+            continue; // keep bench wall time bounded
+        }
+        let mut rng = Pcg64::new(nn as u64);
+        let data = fig3_dataset(nn, &mut rng);
+        let theta = Theta::unpack(&Theta::default_packed(10));
+        let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+        let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+        let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+        let rhs = rng.normal_vec(17 * nn * nn);
+        let stats = bench(
+            || {
+                let _ = op.solve(&rhs, 1e-2, 10_000);
+            },
+            2,
+            std::time::Duration::from_millis(200),
+        );
+        table.row(vec![
+            "cg_solve_b17".into(),
+            nn.to_string(),
+            format!("{:.1}", stats.median_secs() * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    table.write_csv("results/hotpath.csv")?;
+    println!("\nwrote results/hotpath.csv");
+    Ok(())
+}

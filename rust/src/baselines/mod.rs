@@ -1,0 +1,367 @@
+//! Baseline final-value predictors for the Figure-4 comparison.
+//!
+//! The paper compares LKGP against DPL (power-law ensemble), DyHPO
+//! (deep-kernel GP), FT-PFN (pretrained Transformer) and FT-PFN (no HPs).
+//! FT-PFN cannot be re-pretrained offline (14.69M params, millions of
+//! synthetic curves); per DESIGN.md §Substitutions we populate the
+//! comparison axes with from-scratch stand-ins:
+//!
+//! * [`PowerLawEnsemble`] — DPL-like: per-curve power-law fits, ensembled
+//!   over random restarts + bootstrap, predictive moments from the
+//!   ensemble spread.
+//! * [`PerCurveGp`] — conditional-independence GP (Swersky-style; plays
+//!   the "no cross-config correlation" role of FT-PFN (no HPs) / DyHPO's
+//!   curve-local behaviour): an exact Matern-1/2 GP per curve over t only.
+//! * [`LastValue`] — carry-forward with a random-walk variance, the
+//!   canonical sanity baseline.
+//!
+//! All baselines consume raw (untransformed) prefixes and predict the
+//! final-epoch value in original units, like the LKGP pipeline does after
+//! undoing its transforms.
+
+use crate::linalg::{self, Matrix};
+use crate::rng::Pcg64;
+
+/// A predictor of final learning-curve values from observed prefixes.
+pub trait FinalPredictor {
+    /// `curves` is (k, m) raw values with `lengths[i]` observed entries per
+    /// row; `epochs` the raw grid. Returns (mean, var) per curve.
+    fn predict(
+        &mut self,
+        curves: &Matrix,
+        lengths: &[usize],
+        epochs: &[f64],
+    ) -> Vec<(f64, f64)>;
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Last value
+
+/// Carry the last observation forward; variance from a random-walk model
+/// on the observed increments.
+pub struct LastValue;
+
+impl FinalPredictor for LastValue {
+    fn predict(&mut self, curves: &Matrix, lengths: &[usize], epochs: &[f64]) -> Vec<(f64, f64)> {
+        let m = epochs.len();
+        lengths
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| {
+                let len = len.max(1).min(m);
+                let last = curves[(i, len - 1)];
+                // increment variance over the prefix
+                let mut iv = 0.0;
+                for j in 1..len {
+                    let d = curves[(i, j)] - curves[(i, j - 1)];
+                    iv += d * d;
+                }
+                let iv = if len > 1 { iv / (len - 1) as f64 } else { 1e-4 };
+                let remaining = (m - len) as f64;
+                (last, (iv * remaining).max(1e-6))
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "last_value"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Power-law ensemble (DPL-like)
+
+/// Fit `y(t) = a - b * t^(-c)` per curve by Gauss-Newton over random
+/// restarts and bootstrap subsamples; predict with ensemble moments.
+pub struct PowerLawEnsemble {
+    pub members: usize,
+    pub seed: u64,
+}
+
+impl Default for PowerLawEnsemble {
+    fn default() -> Self {
+        PowerLawEnsemble { members: 8, seed: 0 }
+    }
+}
+
+/// One power-law fit on (t, y) pairs; returns (a, b, c).
+fn fit_power_law(ts: &[f64], ys: &[f64], init: (f64, f64, f64)) -> (f64, f64, f64) {
+    // parameters: a, log b, log c for positivity of b, c
+    let (mut a, mut lb, mut lc) = (init.0, init.1.max(1e-9).ln(), init.2.clamp(0.05, 5.0).ln());
+    let n = ts.len();
+    let mut lambda = 1e-3f64; // Levenberg damping
+    let mut last_sse = f64::INFINITY;
+    for _ in 0..60 {
+        let (b, c) = (lb.exp(), lc.exp());
+        // residuals + Jacobian (3 cols)
+        let mut jtj = [[0.0f64; 3]; 3];
+        let mut jtr = [0.0f64; 3];
+        let mut sse = 0.0;
+        for i in 0..n {
+            let tc = ts[i].powf(-c);
+            let pred = a - b * tc;
+            let r = ys[i] - pred;
+            sse += r * r;
+            // d pred / d a = 1; d/d lb = -b t^-c; d/d lc = b c ln(t) t^-c
+            let j = [1.0, -b * tc, b * c * ts[i].ln() * tc];
+            for p in 0..3 {
+                jtr[p] += j[p] * r;
+                for q in 0..3 {
+                    jtj[p][q] += j[p] * j[q];
+                }
+            }
+        }
+        if sse > last_sse {
+            lambda *= 4.0;
+        } else {
+            lambda = (lambda * 0.5).max(1e-9);
+            last_sse = sse;
+        }
+        // solve (JtJ + lambda I) d = Jtr (3x3)
+        let mut mtx = Matrix::zeros(3, 3);
+        for p in 0..3 {
+            for q in 0..3 {
+                mtx[(p, q)] = jtj[p][q];
+            }
+            mtx[(p, p)] += lambda + 1e-10;
+        }
+        let Ok(l) = linalg::cholesky(&mtx) else { break };
+        let step = linalg::chol_solve(&l, &jtr);
+        a += step[0];
+        lb = (lb + step[1]).clamp(-12.0, 4.0);
+        lc = (lc + step[2]).clamp(-3.0, 2.0);
+        if step.iter().map(|s| s.abs()).fold(0.0, f64::max) < 1e-10 {
+            break;
+        }
+    }
+    (a, lb.exp(), lc.exp())
+}
+
+impl FinalPredictor for PowerLawEnsemble {
+    fn predict(&mut self, curves: &Matrix, lengths: &[usize], epochs: &[f64]) -> Vec<(f64, f64)> {
+        let m = epochs.len();
+        let mut rng = Pcg64::new(self.seed);
+        let t_final = epochs[m - 1];
+        lengths
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| {
+                let len = len.max(1).min(m);
+                if len < 3 {
+                    // not enough points for a 3-parameter fit: carry last
+                    // value with a wide random-walk variance
+                    let last = curves[(i, len - 1)];
+                    return (last, 0.01 * (m - len) as f64 + 1e-4);
+                }
+                let ts: Vec<f64> = epochs[..len].to_vec();
+                let ys: Vec<f64> = (0..len).map(|j| curves[(i, j)]).collect();
+                let last = ys[len - 1];
+                let mut preds = Vec::with_capacity(self.members);
+                for _ in 0..self.members {
+                    // bootstrap subsample (keep at least 3 points, always
+                    // include the last point — it anchors the asymptote)
+                    let keep: Vec<usize> = (0..len)
+                        .filter(|&j| j + 1 == len || rng.uniform() < 0.8)
+                        .collect();
+                    let tsb: Vec<f64> = keep.iter().map(|&j| ts[j]).collect();
+                    let ysb: Vec<f64> = keep.iter().map(|&j| ys[j]).collect();
+                    let init = (
+                        last + rng.uniform_in(0.0, 0.1),
+                        (last - ys[0]).abs().max(0.01) * rng.uniform_in(0.5, 2.0),
+                        rng.uniform_in(0.3, 1.5),
+                    );
+                    let (a, b, c) = fit_power_law(&tsb, &ysb, init);
+                    let p = a - b * t_final.powf(-c);
+                    // keep sane: clamp to a broad band around observations
+                    preds.push(p.clamp(ys[0] - 0.5, 1.2));
+                }
+                let (mean, _) = crate::metrics::mean_stderr(&preds);
+                let var = preds.iter().map(|p| (p - mean) * (p - mean)).sum::<f64>()
+                    / (preds.len() - 1).max(1) as f64;
+                (mean, (var + 1e-6).max(1e-6))
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "power_law"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-curve GP (conditional independence across configs)
+
+/// Exact Matern-1/2 GP per curve over progression only. Hyper-parameters
+/// (lengthscale, outputscale, noise) are chosen per curve by grid search
+/// on the exact marginal likelihood (m <= 52, Cholesky is trivial).
+pub struct PerCurveGp {
+    /// Grid sizes for (lengthscale, outputscale, noise).
+    pub grid: usize,
+}
+
+impl Default for PerCurveGp {
+    fn default() -> Self {
+        PerCurveGp { grid: 5 }
+    }
+}
+
+impl FinalPredictor for PerCurveGp {
+    fn predict(&mut self, curves: &Matrix, lengths: &[usize], epochs: &[f64]) -> Vec<(f64, f64)> {
+        let m = epochs.len();
+        // log-normalized grid like the main model
+        let lt: Vec<f64> = epochs.iter().map(|e| e.ln()).collect();
+        let denom = (lt[m - 1] - lt[0]).max(1e-12);
+        let tn: Vec<f64> = lt.iter().map(|v| (v - lt[0]) / denom).collect();
+
+        lengths
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| {
+                let len = len.max(1).min(m);
+                if len == 1 {
+                    return (curves[(i, 0)], 0.05);
+                }
+                let ys_raw: Vec<f64> = (0..len).map(|j| curves[(i, j)]).collect();
+                let mean_y = ys_raw.iter().sum::<f64>() / len as f64;
+                let ys: Vec<f64> = ys_raw.iter().map(|v| v - mean_y).collect();
+                let ts = &tn[..len];
+
+                let mut best = (f64::NEG_INFINITY, 0.3, 0.1, 1e-3);
+                for li in 0..self.grid {
+                    let ls = 0.05 * 4f64.powf(li as f64 / (self.grid - 1).max(1) as f64 * 2.0);
+                    for oi in 0..self.grid {
+                        let os = 0.003 * 10f64.powf(oi as f64 / (self.grid - 1).max(1) as f64 * 2.5);
+                        for ni in 0..self.grid {
+                            let s2 = 1e-6 * 10f64.powf(ni as f64 / (self.grid - 1).max(1) as f64 * 4.0);
+                            if let Some(mll) = curve_mll(ts, &ys, ls, os, s2) {
+                                if mll > best.0 {
+                                    best = (mll, ls, os, s2);
+                                }
+                            }
+                        }
+                    }
+                }
+                let (_, ls, os, s2) = best;
+                // predictive at the final grid point
+                let mut k = crate::gp::kernels::matern12(ts, ts, ls, os);
+                k.add_diag(s2);
+                let Ok(l) = linalg::cholesky(&k) else {
+                    return (mean_y, os + s2);
+                };
+                let alpha = linalg::chol_solve(&l, &ys);
+                let kstar: Vec<f64> = ts
+                    .iter()
+                    .map(|&t| os * (-(tn[m - 1] - t).abs() / ls).exp())
+                    .collect();
+                let mean = linalg::matrix::dot(&kstar, &alpha) + mean_y;
+                let w = linalg::chol_solve(&l, &kstar);
+                let var = (os - linalg::matrix::dot(&kstar, &w)).max(1e-9) + s2;
+                (mean, var)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "percurve_gp"
+    }
+}
+
+/// Exact log marginal likelihood of a 1-d Matern-1/2 GP (None if not PD).
+fn curve_mll(ts: &[f64], ys: &[f64], ls: f64, os: f64, s2: f64) -> Option<f64> {
+    let mut k = crate::gp::kernels::matern12(ts, ts, ls, os);
+    k.add_diag(s2);
+    let l = linalg::cholesky(&k).ok()?;
+    let alpha = linalg::chol_solve(&l, ys);
+    Some(
+        -0.5 * linalg::matrix::dot(ys, &alpha)
+            - 0.5 * linalg::chol_logdet(&l)
+            - 0.5 * ys.len() as f64 * (2.0 * std::f64::consts::PI).ln(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Curves following an exact power law (easy mode for all baselines).
+    fn powerlaw_curves(k: usize, m: usize, seed: u64) -> (Matrix, Vec<usize>, Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let epochs: Vec<f64> = (1..=m).map(|e| e as f64).collect();
+        let mut curves = Matrix::zeros(k, m);
+        let mut lengths = Vec::with_capacity(k);
+        let mut finals = Vec::with_capacity(k);
+        for i in 0..k {
+            let a = rng.uniform_in(0.7, 0.9);
+            let b = rng.uniform_in(0.2, 0.4);
+            let c = rng.uniform_in(0.5, 1.2);
+            for (j, &t) in epochs.iter().enumerate() {
+                curves[(i, j)] = a - b * t.powf(-c) + 0.001 * rng.normal();
+            }
+            lengths.push(m / 2 + rng.below(m / 3));
+            finals.push(curves[(i, m - 1)]);
+        }
+        (curves, lengths, epochs, finals)
+    }
+
+    #[test]
+    fn last_value_basics() {
+        let curves = Matrix::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.9]);
+        let preds = LastValue.predict(&curves, &[3], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(preds[0].0, 0.3);
+        assert!(preds[0].1 > 0.0);
+    }
+
+    #[test]
+    fn power_law_fit_recovers_parameters() {
+        let ts: Vec<f64> = (1..=30).map(|t| t as f64).collect();
+        let (a0, b0, c0) = (0.85, 0.3, 0.8);
+        let ys: Vec<f64> = ts.iter().map(|&t| a0 - b0 * t.powf(-c0)).collect();
+        let (a, b, c) = fit_power_law(&ts, &ys, (0.7, 0.2, 0.5));
+        assert!((a - a0).abs() < 1e-3, "a={a}");
+        assert!((b - b0).abs() < 1e-2, "b={b}");
+        assert!((c - c0).abs() < 1e-2, "c={c}");
+    }
+
+    #[test]
+    fn power_law_ensemble_beats_last_value_on_power_laws() {
+        let (curves, lengths, epochs, finals) = powerlaw_curves(20, 50, 1);
+        let pl = PowerLawEnsemble::default().predict(&curves, &lengths, &epochs);
+        let lv = LastValue.predict(&curves, &lengths, &epochs);
+        let mse = |preds: &[(f64, f64)]| -> f64 {
+            crate::metrics::mse(
+                &preds.iter().map(|p| p.0).collect::<Vec<_>>(),
+                &finals,
+            )
+        };
+        assert!(mse(&pl) < mse(&lv), "pl={} lv={}", mse(&pl), mse(&lv));
+    }
+
+    #[test]
+    fn per_curve_gp_reasonable_on_saturating_curves() {
+        let (curves, lengths, epochs, finals) = powerlaw_curves(10, 50, 2);
+        let preds = PerCurveGp::default().predict(&curves, &lengths, &epochs);
+        for (p, f) in preds.iter().zip(&finals) {
+            assert!((p.0 - f).abs() < 0.2, "pred={} truth={f}", p.0);
+            assert!(p.1.is_finite() && p.1 > 0.0);
+        }
+    }
+
+    #[test]
+    fn short_prefixes_dont_panic() {
+        let curves = Matrix::from_vec(2, 5, vec![0.5, 0.0, 0.0, 0.0, 0.0, 0.4, 0.5, 0.0, 0.0, 0.0]);
+        let epochs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        for lens in [[1usize, 2], [2, 1]] {
+            let p1 = PowerLawEnsemble::default().predict(&curves, &lens, &epochs);
+            let p2 = PerCurveGp::default().predict(&curves, &lens, &epochs);
+            let p3 = LastValue.predict(&curves, &lens, &epochs);
+            for p in [p1, p2, p3] {
+                assert_eq!(p.len(), 2);
+                for (mu, var) in p {
+                    assert!(mu.is_finite() && var > 0.0);
+                }
+            }
+        }
+    }
+}

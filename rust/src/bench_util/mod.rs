@@ -1,0 +1,132 @@
+//! Micro bench harness (criterion is not in the offline crate set).
+//!
+//! `harness = false` bench binaries use [`Bench`] for warmup + repeated
+//! timing with median/mean/stddev reporting, and [`Table`] for the
+//! paper-figure tables the benches print and dump to `results/*.csv`.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repetitions.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub reps: usize,
+}
+
+impl Stats {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Run `f` with warmup and repetitions; returns stats.
+///
+/// `min_reps` runs are always performed; more are added until
+/// `min_total` wall time is accumulated (like criterion's target time,
+/// scaled down for CI).
+pub fn bench(mut f: impl FnMut(), min_reps: usize, min_total: Duration) -> Stats {
+    // warmup
+    f();
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_reps || (start.elapsed() < min_total && samples.len() < 1000) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_nanos() as f64 - mean_ns;
+            x * x
+        })
+        .sum::<f64>()
+        / samples.len() as f64;
+    Stats {
+        median,
+        mean: Duration::from_nanos(mean_ns as u64),
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+        reps: samples.len(),
+    }
+}
+
+/// Time a single run (for expensive cases where repetition is infeasible,
+/// e.g. the naive Cholesky wall at large sizes).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Column-aligned table printer that also accumulates CSV rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        println!("{}", header.join(" | "));
+        println!("{}", vec!["---"; header.len()].join("-|-"));
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        println!("{}", cells.join(" | "));
+        self.rows.push(cells);
+    }
+
+    /// Write accumulated rows to CSV under results/.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let header: Vec<&str> = self.header.iter().map(String::as_str).collect();
+        crate::util::write_csv(path, &header, &self.rows)
+    }
+}
+
+/// Parse common bench CLI flags: `--quick` shrinks workloads for CI.
+///
+/// Also auto-engages on boxes with <= 2 cores (this repo's CI runs on a
+/// single core where the paper-scale sweeps take tens of minutes); pass
+/// `--full` to force the full workload anyway. The paper-scale runs used
+/// for EXPERIMENTS.md pass explicit `--max-size`/`--seeds` flags.
+pub fn is_quick() -> bool {
+    if std::env::args().any(|a| a == "--full") {
+        return false;
+    }
+    if std::env::args().any(|a| a == "--quick") || std::env::var("LKGP_BENCH_QUICK").is_ok() {
+        return true;
+    }
+    std::thread::available_parallelism().map(|n| n.get() <= 2).unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let stats = bench(|| std::thread::sleep(Duration::from_micros(100)),
+                          5, Duration::from_millis(2));
+        assert!(stats.reps >= 5);
+        assert!(stats.median >= Duration::from_micros(80));
+        assert!(stats.mean >= Duration::from_micros(80));
+    }
+
+    #[test]
+    fn table_accumulates_and_writes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.write_csv("/tmp/lkgp_bench_table.csv").unwrap();
+        let text = std::fs::read_to_string("/tmp/lkgp_bench_table.csv").unwrap();
+        assert!(text.contains("a,b"));
+        assert!(text.contains("1,2"));
+    }
+}

@@ -1,0 +1,95 @@
+//! L3 coordinator: the freeze-thaw AutoML service built on LKGP.
+//!
+//! Architecture (threads + channels; tokio is not in the offline set):
+//!
+//! ```text
+//!   Scheduler (round loop)          PredictionService (worker thread)
+//!   ├─ Registry: trial lifecycle    ├─ owns Box<dyn Engine> (xla|rust)
+//!   ├─ CurveStore: snapshots     ──►├─ mpsc queue, dynamic batching:
+//!   ├─ EpochRunner: the workload    │  coalesces same-generation
+//!   └─ Policy: stop/pause/promote ◄─┘  PredictFinal queries into one
+//!                                      batched artifact execution
+//! ```
+//!
+//! See `examples/automl_loop.rs` for the end-to-end driver and
+//! [`serve_simulated`] for the CLI entry.
+
+pub mod policy;
+pub mod scheduler;
+pub mod service;
+pub mod store;
+pub mod trial;
+
+pub use policy::{Decision, Policy, TrialForecast};
+pub use scheduler::{EpochRunner, RunReport, Scheduler, SchedulerCfg};
+pub use service::{PredictionService, Request, ServiceStats};
+pub use store::{CurveStore, Snapshot};
+pub use trial::{Registry, Trial, TrialId, TrialStatus};
+
+use crate::util::Args;
+
+/// CLI `lkgp serve`: run the coordinator on a simulated LCBench task and
+/// print a run report (see examples/automl_loop.rs for the annotated
+/// version of this flow).
+pub fn serve_simulated(args: &Args) -> crate::Result<()> {
+    let seed = args.get_u64("seed", 0);
+    let n_configs = args.get_usize("configs", 24);
+    let budget = args.get_usize("budget", 400);
+    let concurrent = args.get_usize("concurrent", 4);
+    let prefer_xla = args.get("engine").unwrap_or("xla") == "xla";
+
+    let mut rng = crate::rng::Pcg64::new(seed);
+    let task = crate::lcbench::Task::generate(crate::lcbench::Preset::FashionMnist, n_configs, &mut rng);
+    let oracle_best = (0..task.n())
+        .map(|i| task.curves[(i, task.m() - 1)])
+        .fold(f64::NEG_INFINITY, f64::max);
+
+    let cfg = SchedulerCfg {
+        max_concurrent: concurrent,
+        refit_every: 5,
+        epoch_budget: budget,
+        policy: Policy::PredictedFinal { delta: 0.0, threshold: 0.95 },
+        seed,
+    };
+    let mut sched = Scheduler::new(task.m(), cfg);
+    let configs: Vec<Vec<f64>> = (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
+    sched.add_candidates(&configs);
+
+    struct SimRunner {
+        task: crate::lcbench::Task,
+    }
+    impl EpochRunner for SimRunner {
+        fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
+            self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
+        }
+    }
+
+    let engine = crate::runtime::open_engine(prefer_xla);
+    println!("engine: {}", engine.name());
+    let service = PredictionService::spawn(engine);
+    let mut runner = SimRunner { task };
+    let report = sched.run(&mut runner, &service)?;
+
+    println!(
+        "rounds={} epochs={}/{} (full grid would be {})",
+        report.rounds,
+        report.epochs_spent,
+        budget,
+        n_configs * sched.store.max_epochs()
+    );
+    println!(
+        "best found={:.4} oracle={:.4} regret={:.4}",
+        report.best_value,
+        oracle_best,
+        oracle_best - report.best_value
+    );
+    println!(
+        "stopped={} completed={} batch_factor={:.2} p50={}us p99={}us",
+        report.stopped,
+        report.completed,
+        report.batch_factor,
+        service.stats.latency.lock().unwrap().quantile_micros(0.5),
+        service.stats.latency.lock().unwrap().quantile_micros(0.99),
+    );
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Early-stopping / promotion policies for freeze-thaw scheduling.
+//!
+//! Policies consume the GP's final-value predictions — this is exactly the
+//! AutoML use the paper motivates: "predict learning curves accurately
+//! based on results from partial training [to decide] whether to continue
+//! training or to stop early".
+
+/// A trial's prediction context at decision time.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialForecast {
+    /// Predicted final value (original units).
+    pub mean: f64,
+    /// Predictive variance (original units).
+    pub var: f64,
+    /// Last observed value.
+    pub last: f64,
+    /// Epochs trained so far.
+    pub epochs: usize,
+}
+
+/// Decision for one trial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Continue,
+    Pause,
+    Stop,
+}
+
+/// Early-stop policy.
+#[derive(Clone, Copy, Debug)]
+pub enum Policy {
+    /// Stop when P(final < best - delta) > threshold (paper-motivated:
+    /// uses the GP's probabilistic extrapolation).
+    PredictedFinal { delta: f64, threshold: f64 },
+    /// Classic median rule on the *current* value (no GP; ablation).
+    MedianRule,
+    /// Pause when the optimistic bound mean + kappa*sigma trails the best.
+    UcbRule { kappa: f64 },
+}
+
+impl Policy {
+    /// Decide for one trial given the incumbent best final value and the
+    /// median of last-observed values across running trials.
+    pub fn decide(&self, f: &TrialForecast, best: f64, median_last: f64) -> Decision {
+        match *self {
+            Policy::PredictedFinal { delta, threshold } => {
+                let sigma = f.var.sqrt().max(1e-9);
+                // P(final < best - delta)
+                let z = (best - delta - f.mean) / sigma;
+                if phi(z) > threshold {
+                    Decision::Stop
+                } else {
+                    Decision::Continue
+                }
+            }
+            Policy::MedianRule => {
+                if f.epochs >= 4 && f.last < median_last {
+                    Decision::Stop
+                } else {
+                    Decision::Continue
+                }
+            }
+            Policy::UcbRule { kappa } => {
+                let ucb = f.mean + kappa * f.var.sqrt();
+                if ucb < best {
+                    Decision::Pause
+                } else {
+                    Decision::Continue
+                }
+            }
+        }
+    }
+}
+
+/// Standard normal CDF (Abramowitz-Stegun erf approximation, |err|<1.5e-7).
+pub fn phi(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phi_matches_known_values() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-7);
+        assert!((phi(1.959_964) - 0.975).abs() < 1e-4);
+        assert!((phi(-1.959_964) - 0.025).abs() < 1e-4);
+        assert!(phi(8.0) > 0.999999);
+        assert!(phi(-8.0) < 1e-6);
+    }
+
+    #[test]
+    fn predicted_final_stops_hopeless_trials() {
+        let p = Policy::PredictedFinal { delta: 0.01, threshold: 0.95 };
+        // confident bad trial
+        let bad = TrialForecast { mean: 0.5, var: 1e-4, last: 0.48, epochs: 10 };
+        assert_eq!(p.decide(&bad, 0.9, 0.6), Decision::Stop);
+        // promising trial
+        let good = TrialForecast { mean: 0.92, var: 1e-4, last: 0.8, epochs: 10 };
+        assert_eq!(p.decide(&good, 0.9, 0.6), Decision::Continue);
+        // uncertain trial is spared
+        let unsure = TrialForecast { mean: 0.5, var: 0.5, last: 0.4, epochs: 2 };
+        assert_eq!(p.decide(&unsure, 0.9, 0.6), Decision::Continue);
+    }
+
+    #[test]
+    fn median_rule_spares_young_trials() {
+        let p = Policy::MedianRule;
+        let young = TrialForecast { mean: 0.0, var: 1.0, last: 0.1, epochs: 2 };
+        assert_eq!(p.decide(&young, 0.9, 0.5), Decision::Continue);
+        let old_bad = TrialForecast { mean: 0.0, var: 1.0, last: 0.1, epochs: 6 };
+        assert_eq!(p.decide(&old_bad, 0.9, 0.5), Decision::Stop);
+    }
+
+    #[test]
+    fn ucb_rule_pauses_not_stops() {
+        let p = Policy::UcbRule { kappa: 2.0 };
+        let trailing = TrialForecast { mean: 0.6, var: 0.001, last: 0.55, epochs: 5 };
+        assert_eq!(p.decide(&trailing, 0.9, 0.5), Decision::Pause);
+        let contender = TrialForecast { mean: 0.85, var: 0.01, last: 0.8, epochs: 5 };
+        assert_eq!(p.decide(&contender, 0.9, 0.5), Decision::Continue);
+    }
+}

@@ -1,0 +1,362 @@
+//! Freeze-thaw scheduler: the round-based AutoML control loop.
+//!
+//! Each round the scheduler (1) steps every running trial one epoch on the
+//! workload, (2) records observations, (3) periodically refits the LKGP
+//! through the prediction service, (4) queries batched final-value
+//! predictions for every known config, and (5) re-allocates compute:
+//! promote the most promising paused/pending trials, pause the rest,
+//! early-stop hopeless ones per the configured policy.
+//!
+//! The "workload" is abstract ([`EpochRunner`]) — the simulated LCBench
+//! task in examples/benches, a real training farm behind an RPC in
+//! production.
+
+use crate::gp::Theta;
+use crate::linalg::Matrix;
+
+use super::policy::{Decision, Policy, TrialForecast};
+use super::service::PredictionService;
+use super::store::CurveStore;
+use super::trial::{Registry, TrialId, TrialStatus};
+
+/// Executes one training epoch of a trial and returns the metric value.
+pub trait EpochRunner {
+    fn run_epoch(&mut self, trial: TrialId, config: &[f64], epoch: usize) -> f64;
+}
+
+impl<F> EpochRunner for F
+where
+    F: FnMut(TrialId, &[f64], usize) -> f64,
+{
+    fn run_epoch(&mut self, trial: TrialId, config: &[f64], epoch: usize) -> f64 {
+        self(trial, config, epoch)
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct SchedulerCfg {
+    /// Max trials training concurrently per round.
+    pub max_concurrent: usize,
+    /// Refit hyper-parameters every this many rounds.
+    pub refit_every: usize,
+    /// Total epoch budget across all trials.
+    pub epoch_budget: usize,
+    /// Early-stop policy.
+    pub policy: Policy,
+    /// RNG seed for refits/sampling.
+    pub seed: u64,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg {
+            max_concurrent: 4,
+            refit_every: 5,
+            epoch_budget: 200,
+            policy: Policy::PredictedFinal { delta: 0.0, threshold: 0.95 },
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a scheduling run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Rounds executed.
+    pub rounds: usize,
+    /// Total epochs spent.
+    pub epochs_spent: usize,
+    /// Best observed value and its trial.
+    pub best_value: f64,
+    pub best_trial: Option<TrialId>,
+    /// Trials early-stopped.
+    pub stopped: usize,
+    /// Trials completed to the final epoch.
+    pub completed: usize,
+    /// Mean GP-prediction batch factor (queries per engine call).
+    pub batch_factor: f64,
+    /// History of (round, epochs_spent, best_so_far).
+    pub trace: Vec<(usize, usize, f64)>,
+}
+
+/// The freeze-thaw coordinator loop.
+pub struct Scheduler {
+    pub registry: Registry,
+    pub store: CurveStore,
+    pub cfg: SchedulerCfg,
+    theta: Vec<f64>,
+}
+
+impl Scheduler {
+    pub fn new(max_epochs: usize, cfg: SchedulerCfg) -> Self {
+        Scheduler {
+            registry: Registry::new(),
+            store: CurveStore::new(max_epochs),
+            cfg,
+            theta: Vec::new(),
+        }
+    }
+
+    /// Register candidate configurations.
+    pub fn add_candidates(&mut self, configs: &[Vec<f64>]) -> Vec<TrialId> {
+        configs.iter().map(|c| self.registry.add(c.clone())).collect()
+    }
+
+    /// Run the loop until the epoch budget is exhausted or nothing is left
+    /// to train.
+    pub fn run(
+        &mut self,
+        runner: &mut dyn EpochRunner,
+        service: &PredictionService,
+    ) -> crate::Result<RunReport> {
+        let max_epochs = self.store.max_epochs();
+        let mut rounds = 0;
+        let mut trace = Vec::new();
+
+        // bootstrap: start the first max_concurrent trials
+        self.promote_pending();
+
+        while self.registry.total_epochs() < self.cfg.epoch_budget {
+            let running = self.registry.by_status(TrialStatus::Running);
+            if running.is_empty() {
+                break;
+            }
+            rounds += 1;
+
+            // 1-2. train one epoch per running trial, record observations
+            for id in &running {
+                let trial = self.registry.get(*id);
+                let epoch = trial.epochs_trained();
+                let config = trial.config.clone();
+                let value = runner.run_epoch(*id, &config, epoch);
+                self.registry.observe(*id, value, max_epochs)?;
+                if self.registry.total_epochs() >= self.cfg.epoch_budget {
+                    break;
+                }
+            }
+
+            // 3-5. periodically refit + re-allocate
+            if rounds % self.cfg.refit_every == 0 {
+                self.replan(service, rounds)?;
+            }
+            self.promote_pending();
+
+            let best = self.registry.best_observed().map(|(_, v)| v).unwrap_or(0.0);
+            trace.push((rounds, self.registry.total_epochs(), best));
+        }
+
+        let (best_trial, best_value) = self
+            .registry
+            .best_observed()
+            .map(|(id, v)| (Some(id), v))
+            .unwrap_or((None, 0.0));
+        Ok(RunReport {
+            rounds,
+            epochs_spent: self.registry.total_epochs(),
+            best_value,
+            best_trial,
+            stopped: self.registry.by_status(TrialStatus::Stopped).len(),
+            completed: self.registry.by_status(TrialStatus::Completed).len(),
+            batch_factor: service.stats.batch_factor(),
+            trace,
+        })
+    }
+
+    /// Refit + forecast + promote/pause/stop.
+    fn replan(&mut self, service: &PredictionService, round: usize) -> crate::Result<()> {
+        let snapshot = match self.store.snapshot(&self.registry) {
+            Ok(s) => s,
+            Err(_) => return Ok(()), // nothing observed yet
+        };
+
+        // refit hyper-parameters (warm start from previous theta)
+        let theta0 = if self.theta.is_empty() {
+            Theta::default_packed(snapshot.data.d())
+        } else {
+            self.theta.clone()
+        };
+        self.theta = service.refit(snapshot.clone(), theta0, self.cfg.seed + round as u64)?;
+
+        // forecast finals for every active (non-terminal) config
+        let active: Vec<TrialId> = snapshot
+            .all_ids
+            .iter()
+            .copied()
+            .filter(|&id| {
+                matches!(
+                    self.registry.get(id).status,
+                    TrialStatus::Running | TrialStatus::Paused | TrialStatus::Pending
+                )
+            })
+            .collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let d = snapshot.all_x.cols();
+        let mut xq = Matrix::zeros(active.len(), d);
+        let id_to_row: std::collections::HashMap<TrialId, usize> = snapshot
+            .all_ids
+            .iter()
+            .enumerate()
+            .map(|(r, &id)| (id, r))
+            .collect();
+        for (row, id) in active.iter().enumerate() {
+            let src = id_to_row[id];
+            let src_row: Vec<f64> = snapshot.all_x.row(src).to_vec();
+            xq.row_mut(row).copy_from_slice(&src_row);
+        }
+        let preds = service.predict_final(snapshot.clone(), self.theta.clone(), xq)?;
+
+        // undo standardization for decisions in original units
+        let preds: Vec<(f64, f64)> = preds
+            .iter()
+            .map(|&(mu, var)| (snapshot.ytf.undo_mean(mu), snapshot.ytf.undo_var(var)))
+            .collect();
+
+        let best = self.registry.best_observed().map(|(_, v)| v).unwrap_or(0.0);
+        let mut lasts: Vec<f64> = self
+            .registry
+            .by_status(TrialStatus::Running)
+            .iter()
+            .filter_map(|&id| self.registry.get(id).last_value())
+            .collect();
+        lasts.sort_by(f64::total_cmp);
+        let median_last = lasts.get(lasts.len() / 2).copied().unwrap_or(0.0);
+
+        // early-stop per policy, then promote the top-q by optimistic value
+        let mut ranked: Vec<(TrialId, f64)> = Vec::new();
+        for (id, &(mean, var)) in active.iter().zip(&preds) {
+            let trial = self.registry.get(*id);
+            let fc = TrialForecast {
+                mean,
+                var,
+                last: trial.last_value().unwrap_or(0.0),
+                epochs: trial.epochs_trained(),
+            };
+            // never stop untouched configs — they carry prior uncertainty
+            if fc.epochs > 0 {
+                match self.cfg.policy.decide(&fc, best, median_last) {
+                    Decision::Stop => {
+                        self.registry.set_status(*id, TrialStatus::Stopped);
+                        continue;
+                    }
+                    Decision::Pause => {
+                        self.registry.set_status(*id, TrialStatus::Paused);
+                    }
+                    Decision::Continue => {}
+                }
+            }
+            // acquisition: optimistic final value (UCB with kappa = 1)
+            ranked.push((*id, mean + var.sqrt()));
+        }
+        ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+
+        // top-q run, the rest pause (pending stay pending until promoted)
+        for (rank, (id, _)) in ranked.iter().enumerate() {
+            let status = self.registry.get(*id).status;
+            if rank < self.cfg.max_concurrent {
+                if matches!(status, TrialStatus::Paused | TrialStatus::Pending | TrialStatus::Running) {
+                    self.registry.set_status(*id, TrialStatus::Running);
+                }
+            } else if status == TrialStatus::Running {
+                self.registry.set_status(*id, TrialStatus::Paused);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fill free slots with pending trials (exploration bootstrap).
+    fn promote_pending(&mut self) {
+        let running = self.registry.by_status(TrialStatus::Running).len();
+        let mut free = self.cfg.max_concurrent.saturating_sub(running);
+        for id in self.registry.by_status(TrialStatus::Pending) {
+            if free == 0 {
+                break;
+            }
+            self.registry.set_status(id, TrialStatus::Running);
+            free -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::PredictionService;
+    use crate::lcbench::{Preset, Task};
+    use crate::rng::Pcg64;
+    use crate::runtime::RustEngine;
+
+    /// Runner backed by a simulated task.
+    struct SimRunner {
+        task: Task,
+        map: Vec<usize>, // trial row -> task config index
+    }
+
+    impl EpochRunner for SimRunner {
+        fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
+            self.task.curves[(self.map[trial.0], epoch.min(self.task.m() - 1))]
+        }
+    }
+
+    fn build(n: usize, seed: u64) -> (Scheduler, SimRunner) {
+        let mut rng = Pcg64::new(seed);
+        let task = Task::generate(Preset::FashionMnist, n, &mut rng);
+        let cfg = SchedulerCfg {
+            max_concurrent: 3,
+            refit_every: 4,
+            epoch_budget: 120,
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(task.m(), cfg);
+        let configs: Vec<Vec<f64>> = (0..n).map(|i| task.configs.row(i).to_vec()).collect();
+        sched.add_candidates(&configs);
+        let map = (0..n).collect();
+        (sched, SimRunner { task, map })
+    }
+
+    #[test]
+    fn run_respects_budget_and_concurrency() {
+        let (mut sched, mut runner) = build(10, 1);
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let report = sched.run(&mut runner, &service).unwrap();
+        assert!(report.epochs_spent <= 120 + 3);
+        assert!(report.rounds > 0);
+        assert!(report.best_value > 0.5, "best={}", report.best_value);
+        // trace is monotone in best value
+        for w in report.trace.windows(2) {
+            assert!(w[1].2 >= w[0].2);
+        }
+    }
+
+    #[test]
+    fn freeze_thaw_saves_epochs_vs_full_training() {
+        // With 10 configs x 52 epochs = 520 full epochs; the scheduler
+        // must find a near-best config within a 120-epoch budget.
+        let (mut sched, mut runner) = build(10, 2);
+        let oracle_best = (0..10)
+            .map(|i| runner.task.curves[(i, runner.task.m() - 1)])
+            .fold(f64::NEG_INFINITY, f64::max);
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let report = sched.run(&mut runner, &service).unwrap();
+        assert!(report.epochs_spent < 130);
+        assert!(
+            report.best_value > oracle_best - 0.08,
+            "best={} oracle={oracle_best}",
+            report.best_value
+        );
+    }
+
+    #[test]
+    fn policy_stops_bad_trials() {
+        let (mut sched, mut runner) = build(12, 3);
+        sched.cfg.policy = Policy::PredictedFinal { delta: 0.0, threshold: 0.9 };
+        sched.cfg.epoch_budget = 200;
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let report = sched.run(&mut runner, &service).unwrap();
+        // the simulator creates clearly-bad configs; some must be stopped
+        // or paused rather than trained to completion
+        assert!(report.stopped + sched.registry.by_status(TrialStatus::Paused).len() > 0);
+    }
+}

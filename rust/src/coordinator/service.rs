@@ -1,0 +1,341 @@
+//! Prediction service: a worker thread owning the GP engine, fed through
+//! an mpsc channel with dynamic request batching.
+//!
+//! This is the vLLM-router pattern scaled to this workload: many
+//! concurrent callers (scheduler rounds, UI, benches) enqueue
+//! `PredictFinal` queries; the worker drains the queue and coalesces all
+//! queries that target the same model generation into a single engine
+//! call (one artifact execution / one batched CG), then scatters the
+//! per-caller responses. Refits and sampling requests pass through the
+//! same queue, preserving order within a generation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::gp::Theta;
+use crate::linalg::Matrix;
+use crate::metrics::LatencyHist;
+use crate::runtime::Engine;
+
+use super::store::Snapshot;
+
+/// A request to the prediction service.
+pub enum Request {
+    /// Re-fit hyper-parameters on a snapshot.
+    Refit {
+        snapshot: Snapshot,
+        theta0: Vec<f64>,
+        seed: u64,
+        resp: Sender<crate::Result<Vec<f64>>>,
+    },
+    /// Final-value prediction for query rows (standardized units).
+    PredictFinal {
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        /// Normalized query configs.
+        xq: Matrix,
+        resp: Sender<crate::Result<Vec<(f64, f64)>>>,
+    },
+    /// Posterior curve samples over [train; query] x grid.
+    SampleCurves {
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        samples: usize,
+        seed: u64,
+        resp: Sender<crate::Result<Vec<Matrix>>>,
+    },
+    /// Stop the worker.
+    Shutdown,
+}
+
+/// Shared service statistics.
+#[derive(Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    pub latency: Mutex<LatencyHist>,
+}
+
+impl ServiceStats {
+    /// Mean queries per engine call (batching factor).
+    pub fn batch_factor(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// Handle to the service thread.
+pub struct PredictionService {
+    tx: Sender<Request>,
+    pub stats: Arc<ServiceStats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Spawn the worker around an engine.
+    pub fn spawn(engine: Box<dyn Engine>) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(ServiceStats::default());
+        let worker_stats = stats.clone();
+        let worker = std::thread::spawn(move || worker_loop(engine, rx, worker_stats));
+        PredictionService {
+            tx,
+            stats,
+            worker: Some(worker),
+        }
+    }
+
+    pub fn sender(&self) -> Sender<Request> {
+        self.tx.clone()
+    }
+
+    /// Synchronous refit helper.
+    pub fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Refit { snapshot, theta0, seed, resp: rtx })
+            .map_err(|_| crate::LkgpError::Coordinator("service down".into()))?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
+    }
+
+    /// Synchronous predict helper.
+    pub fn predict_final(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+    ) -> crate::Result<Vec<(f64, f64)>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::PredictFinal { snapshot, theta, xq, resp: rtx })
+            .map_err(|_| crate::LkgpError::Coordinator("service down".into()))?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
+    }
+
+    /// Synchronous sampling helper.
+    pub fn sample_curves(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        samples: usize,
+        seed: u64,
+    ) -> crate::Result<Vec<Matrix>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::SampleCurves { snapshot, theta, xq, samples, seed, resp: rtx })
+            .map_err(|_| crate::LkgpError::Coordinator("service down".into()))?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<ServiceStats>) {
+    // Pending predict-final queries grouped by generation.
+    struct Pending {
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        resp: Sender<crate::Result<Vec<(f64, f64)>>>,
+    }
+
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        // Drain whatever else is queued right now (dynamic batching window).
+        let mut queue: Vec<Request> = vec![first];
+        while let Ok(r) = rx.try_recv() {
+            queue.push(r);
+        }
+
+        let mut predicts: Vec<Pending> = Vec::new();
+        let flush =
+            |engine: &mut Box<dyn Engine>, predicts: &mut Vec<Pending>, stats: &ServiceStats| {
+                if predicts.is_empty() {
+                    return;
+                }
+                // group by (generation, theta bits)
+                while !predicts.is_empty() {
+                    let gen0 = predicts[0].snapshot.generation;
+                    let theta0 = predicts[0].theta.clone();
+                    let group: Vec<Pending> = {
+                        let (take, keep): (Vec<Pending>, Vec<Pending>) = predicts
+                            .drain(..)
+                            .partition(|p| p.snapshot.generation == gen0 && p.theta == theta0);
+                        *predicts = keep;
+                        take
+                    };
+                    // stack queries
+                    let total: usize = group.iter().map(|p| p.xq.rows()).sum();
+                    let d = group[0].xq.cols();
+                    let mut xq = Matrix::zeros(total, d);
+                    let mut row = 0;
+                    for p in &group {
+                        for r in 0..p.xq.rows() {
+                            xq.row_mut(row).copy_from_slice(p.xq.row(r));
+                            row += 1;
+                        }
+                    }
+                    let t0 = Instant::now();
+                    let result = engine.predict_final(&theta0, &group[0].snapshot.data, &xq);
+                    stats.batches.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .batched_queries
+                        .fetch_add(group.len() as u64, Ordering::Relaxed);
+                    stats
+                        .latency
+                        .lock()
+                        .unwrap()
+                        .record(t0.elapsed().as_micros() as u64);
+                    match result {
+                        Ok(all) => {
+                            let mut off = 0;
+                            for p in group {
+                                let k = p.xq.rows();
+                                let _ = p.resp.send(Ok(all[off..off + k].to_vec()));
+                                off += k;
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for p in group {
+                                let _ = p
+                                    .resp
+                                    .send(Err(crate::LkgpError::Coordinator(msg.clone())));
+                            }
+                        }
+                    }
+                }
+            };
+
+        for req in queue {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            match req {
+                Request::PredictFinal { snapshot, theta, xq, resp } => {
+                    predicts.push(Pending { snapshot, theta, xq, resp });
+                }
+                Request::Refit { snapshot, theta0, seed, resp } => {
+                    // order barrier: flush batched predictions first
+                    flush(&mut engine, &mut predicts, &stats);
+                    let theta0 = if theta0.is_empty() {
+                        Theta::default_packed(snapshot.data.d())
+                    } else {
+                        theta0
+                    };
+                    let _ = resp.send(engine.fit(&theta0, &snapshot.data, seed));
+                }
+                Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
+                    flush(&mut engine, &mut predicts, &stats);
+                    let _ =
+                        resp.send(engine.sample_curves(&theta, &snapshot.data, &xq, samples, seed));
+                }
+                Request::Shutdown => {
+                    flush(&mut engine, &mut predicts, &stats);
+                    return;
+                }
+            }
+        }
+        flush(&mut engine, &mut predicts, &stats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::store::CurveStore;
+    use crate::coordinator::trial::Registry;
+    use crate::runtime::RustEngine;
+
+    fn tiny_snapshot() -> Snapshot {
+        let mut reg = Registry::new();
+        for i in 0..6 {
+            let id = reg.add(vec![i as f64 * 0.1, 0.5 - i as f64 * 0.05]);
+            for j in 0..3 + i % 3 {
+                reg.observe(id, 0.4 + 0.05 * j as f64 + 0.01 * i as f64, 8).unwrap();
+            }
+        }
+        CurveStore::new(8).snapshot(&reg).unwrap()
+    }
+
+    #[test]
+    fn refit_and_predict_roundtrip() {
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let snap = tiny_snapshot();
+        let theta = service.refit(snap.clone(), vec![], 1).unwrap();
+        assert_eq!(theta.len(), 2 + 3);
+        let xq = Matrix::from_vec(2, 2, vec![0.2, 0.3, 0.8, 0.1]);
+        let preds = service.predict_final(snap, theta, xq).unwrap();
+        assert_eq!(preds.len(), 2);
+        for (mu, var) in preds {
+            assert!(mu.is_finite() && var > 0.0);
+        }
+    }
+
+    #[test]
+    fn concurrent_predictions_are_batched() {
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let snap = tiny_snapshot();
+        let theta = Theta::default_packed(2);
+        // enqueue many requests before the worker drains them
+        let mut receivers = Vec::new();
+        for i in 0..12 {
+            let (rtx, rrx) = channel();
+            service
+                .sender()
+                .send(Request::PredictFinal {
+                    snapshot: snap.clone(),
+                    theta: theta.clone(),
+                    xq: Matrix::from_vec(1, 2, vec![0.1 * i as f64 % 1.0, 0.4]),
+                    resp: rtx,
+                })
+                .unwrap();
+            receivers.push(rrx);
+        }
+        for rrx in receivers {
+            let preds = rrx.recv().unwrap().unwrap();
+            assert_eq!(preds.len(), 1);
+        }
+        let reqs = service.stats.requests.load(Ordering::Relaxed);
+        let batches = service.stats.batches.load(Ordering::Relaxed);
+        assert_eq!(reqs, 12);
+        assert!(batches <= reqs, "batches={batches} reqs={reqs}");
+        // batching factor must be >= 1; with the pre-enqueued burst it is
+        // typically well above 1 (the first recv may run solo).
+        assert!(service.stats.batch_factor() >= 1.0);
+    }
+
+    #[test]
+    fn sample_curves_via_service() {
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let snap = tiny_snapshot();
+        let theta = Theta::default_packed(2);
+        let xq = Matrix::from_vec(1, 2, vec![0.5, 0.5]);
+        let samples = service.sample_curves(snap, theta, xq, 4, 9).unwrap();
+        assert_eq!(samples.len(), 4);
+        assert_eq!(samples[0].rows(), 6 + 1);
+        assert_eq!(samples[0].cols(), 8);
+    }
+
+    #[test]
+    fn shutdown_on_drop_joins_worker() {
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        drop(service); // must not hang
+    }
+}

@@ -1,0 +1,163 @@
+//! Curve store: turns the trial registry into model-space snapshots.
+//!
+//! The GP engines consume transformed, immutable [`Snapshot`]s; the store
+//! owns the epoch grid and re-fits the paper's §B transforms on every
+//! snapshot (they depend on the observed data). Snapshots carry a
+//! generation counter so the prediction service can batch requests that
+//! refer to the same model state.
+
+use std::sync::Arc;
+
+use crate::gp::lkgp::Dataset;
+use crate::gp::transforms::{TTransform, XTransform, YTransform};
+use crate::linalg::Matrix;
+
+use super::trial::{Registry, TrialId};
+
+/// Immutable model-space view of the registry at some generation.
+#[derive(Clone)]
+pub struct Snapshot {
+    /// Monotone generation counter (bumped per snapshot).
+    pub generation: u64,
+    /// Training data: one row per trial with >= 1 observation.
+    pub data: Arc<Dataset>,
+    /// Trial ids of the training rows, in row order.
+    pub row_ids: Arc<Vec<TrialId>>,
+    /// Normalized configs for ALL registered trials (query space).
+    pub all_x: Arc<Matrix>,
+    /// Trial ids in `all_x` row order.
+    pub all_ids: Arc<Vec<TrialId>>,
+    /// Output transform for undoing predictions.
+    pub ytf: Arc<YTransform>,
+}
+
+/// Builds snapshots from a registry over a fixed epoch grid.
+pub struct CurveStore {
+    /// Raw epoch grid (1-based epochs).
+    pub epochs: Vec<f64>,
+    generation: u64,
+}
+
+impl CurveStore {
+    pub fn new(max_epochs: usize) -> Self {
+        CurveStore {
+            epochs: (1..=max_epochs).map(|e| e as f64).collect(),
+            generation: 0,
+        }
+    }
+
+    pub fn max_epochs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Build a snapshot: transforms fit on current observations.
+    pub fn snapshot(&mut self, reg: &Registry) -> crate::Result<Snapshot> {
+        let m = self.epochs.len();
+        let observed = reg.observed();
+        if observed.is_empty() {
+            return Err(crate::LkgpError::Coordinator(
+                "snapshot needs at least one observation".into(),
+            ));
+        }
+        let d = reg.get(observed[0]).config.len();
+        let n = observed.len();
+
+        let mut xraw = Matrix::zeros(n, d);
+        let mut y = Matrix::zeros(n, m);
+        let mut mask = Matrix::zeros(n, m);
+        for (row, &id) in observed.iter().enumerate() {
+            let t = reg.get(id);
+            xraw.row_mut(row).copy_from_slice(&t.config);
+            for (j, &v) in t.curve.iter().enumerate().take(m) {
+                y[(row, j)] = v;
+                mask[(row, j)] = 1.0;
+            }
+        }
+
+        // X transform must cover every registered config (queries too).
+        let total = reg.len();
+        let mut all_raw = Matrix::zeros(total, d);
+        let mut all_ids = Vec::with_capacity(total);
+        for (row, t) in reg.iter().enumerate() {
+            all_raw.row_mut(row).copy_from_slice(&t.config);
+            all_ids.push(t.id);
+        }
+        let xtf = XTransform::fit(&all_raw);
+        let x = xtf.apply(&xraw);
+        let all_x = xtf.apply(&all_raw);
+        let ttf = TTransform::fit(&self.epochs);
+        let t = ttf.apply(&self.epochs);
+        let ytf = YTransform::fit(&y, &mask);
+        let ys = ytf.apply(&y, &mask);
+
+        self.generation += 1;
+        Ok(Snapshot {
+            generation: self.generation,
+            data: Arc::new(Dataset { x, t, y: ys, mask }),
+            row_ids: Arc::new(observed),
+            all_x: Arc::new(all_x),
+            all_ids: Arc::new(all_ids),
+            ytf: Arc::new(ytf),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trial::TrialStatus;
+
+    #[test]
+    fn snapshot_shapes_and_transforms() {
+        let mut reg = Registry::new();
+        let a = reg.add(vec![1.0, 10.0]);
+        let b = reg.add(vec![2.0, 20.0]);
+        let _c = reg.add(vec![3.0, 30.0]); // never observed -> query only
+        reg.set_status(a, TrialStatus::Running);
+        reg.observe(a, 0.5, 5).unwrap();
+        reg.observe(a, 0.6, 5).unwrap();
+        reg.observe(b, 0.4, 5).unwrap();
+
+        let mut store = CurveStore::new(5);
+        let snap = store.snapshot(&reg).unwrap();
+        assert_eq!(snap.generation, 1);
+        assert_eq!(snap.data.n(), 2);
+        assert_eq!(snap.data.m(), 5);
+        assert_eq!(snap.all_x.rows(), 3);
+        assert_eq!(snap.row_ids.len(), 2);
+        // mask prefix lengths
+        assert_eq!(snap.data.mask[(0, 1)], 1.0);
+        assert_eq!(snap.data.mask[(0, 2)], 0.0);
+        assert_eq!(snap.data.mask[(1, 0)], 1.0);
+        assert_eq!(snap.data.mask[(1, 1)], 0.0);
+        // x normalized to unit cube over ALL configs
+        assert_eq!(snap.all_x[(0, 0)], 0.0);
+        assert_eq!(snap.all_x[(2, 0)], 1.0);
+        // generations increment
+        let snap2 = store.snapshot(&reg).unwrap();
+        assert_eq!(snap2.generation, 2);
+    }
+
+    #[test]
+    fn snapshot_requires_observations() {
+        let mut reg = Registry::new();
+        reg.add(vec![0.5]);
+        let mut store = CurveStore::new(4);
+        assert!(store.snapshot(&reg).is_err());
+    }
+
+    #[test]
+    fn y_standardization_applied() {
+        let mut reg = Registry::new();
+        let a = reg.add(vec![0.0]);
+        reg.observe(a, 0.2, 4).unwrap();
+        reg.observe(a, 0.8, 4).unwrap();
+        let mut store = CurveStore::new(4);
+        let snap = store.snapshot(&reg).unwrap();
+        // max observed maps to 0
+        assert!(snap.data.y[(0, 1)].abs() < 1e-12);
+        assert!(snap.data.y[(0, 0)] < 0.0);
+        // undo roundtrip
+        assert!((snap.ytf.undo_mean(snap.data.y[(0, 0)]) - 0.2).abs() < 1e-12);
+    }
+}

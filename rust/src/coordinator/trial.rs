@@ -1,0 +1,205 @@
+//! Trial registry: the coordinator's source of truth about every
+//! hyper-parameter configuration and its observed learning curve.
+
+/// Identifier of a trial within a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TrialId(pub usize);
+
+/// Lifecycle of a trial under freeze-thaw scheduling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialStatus {
+    /// Created, never trained.
+    Pending,
+    /// Currently allocated compute (training one epoch per round).
+    Running,
+    /// Frozen: may be thawed (resumed) later.
+    Paused,
+    /// Early-stopped: will never resume.
+    Stopped,
+    /// Reached the final epoch.
+    Completed,
+}
+
+/// One hyper-parameter configuration and its observation history.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub id: TrialId,
+    /// Raw (untransformed) configuration vector.
+    pub config: Vec<f64>,
+    pub status: TrialStatus,
+    /// Observed validation-accuracy prefix (one entry per trained epoch).
+    pub curve: Vec<f64>,
+}
+
+impl Trial {
+    pub fn epochs_trained(&self) -> usize {
+        self.curve.len()
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.curve.last().copied()
+    }
+}
+
+/// In-memory trial store. Single-writer (the scheduler); snapshots are
+/// cloned out for the prediction service, so no interior locking is
+/// needed here.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    trials: Vec<Trial>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new trial; returns its id.
+    pub fn add(&mut self, config: Vec<f64>) -> TrialId {
+        let id = TrialId(self.trials.len());
+        self.trials.push(Trial {
+            id,
+            config,
+            status: TrialStatus::Pending,
+            curve: Vec::new(),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    pub fn get(&self, id: TrialId) -> &Trial {
+        &self.trials[id.0]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Trial> {
+        self.trials.iter()
+    }
+
+    /// Append an epoch observation; completes the trial at `max_epochs`.
+    pub fn observe(&mut self, id: TrialId, value: f64, max_epochs: usize) -> crate::Result<()> {
+        let t = self
+            .trials
+            .get_mut(id.0)
+            .ok_or_else(|| crate::LkgpError::Coordinator(format!("unknown trial {id:?}")))?;
+        if matches!(t.status, TrialStatus::Stopped | TrialStatus::Completed) {
+            return Err(crate::LkgpError::Coordinator(format!(
+                "observation for finished trial {id:?}"
+            )));
+        }
+        t.curve.push(value);
+        if t.curve.len() >= max_epochs {
+            t.status = TrialStatus::Completed;
+        }
+        Ok(())
+    }
+
+    pub fn set_status(&mut self, id: TrialId, status: TrialStatus) {
+        // Completed/Stopped are terminal.
+        let t = &mut self.trials[id.0];
+        if !matches!(t.status, TrialStatus::Completed | TrialStatus::Stopped) {
+            t.status = status;
+        }
+    }
+
+    pub fn by_status(&self, status: TrialStatus) -> Vec<TrialId> {
+        self.trials
+            .iter()
+            .filter(|t| t.status == status)
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Trials with at least one observation (the GP's training rows).
+    pub fn observed(&self) -> Vec<TrialId> {
+        self.trials
+            .iter()
+            .filter(|t| !t.curve.is_empty())
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Total epochs spent across all trials (the compute-cost metric).
+    pub fn total_epochs(&self) -> usize {
+        self.trials.iter().map(|t| t.curve.len()).sum()
+    }
+
+    /// Best observed value anywhere (running best for regret tracking).
+    pub fn best_observed(&self) -> Option<(TrialId, f64)> {
+        self.trials
+            .iter()
+            .filter_map(|t| {
+                t.curve
+                    .iter()
+                    .cloned()
+                    .fold(None::<f64>, |acc, v| Some(acc.map_or(v, |a| a.max(v))))
+                    .map(|v| (t.id, v))
+            })
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut reg = Registry::new();
+        let id = reg.add(vec![0.1, 0.2]);
+        assert_eq!(reg.get(id).status, TrialStatus::Pending);
+        reg.set_status(id, TrialStatus::Running);
+        reg.observe(id, 0.5, 3).unwrap();
+        reg.observe(id, 0.6, 3).unwrap();
+        assert_eq!(reg.get(id).epochs_trained(), 2);
+        assert_eq!(reg.get(id).last_value(), Some(0.6));
+        reg.observe(id, 0.7, 3).unwrap();
+        assert_eq!(reg.get(id).status, TrialStatus::Completed);
+        // terminal status survives set_status
+        reg.set_status(id, TrialStatus::Running);
+        assert_eq!(reg.get(id).status, TrialStatus::Completed);
+        // no observations after completion
+        assert!(reg.observe(id, 0.8, 3).is_err());
+    }
+
+    #[test]
+    fn status_queries() {
+        let mut reg = Registry::new();
+        let a = reg.add(vec![0.0]);
+        let b = reg.add(vec![1.0]);
+        let c = reg.add(vec![2.0]);
+        reg.set_status(a, TrialStatus::Running);
+        reg.set_status(b, TrialStatus::Paused);
+        assert_eq!(reg.by_status(TrialStatus::Running), vec![a]);
+        assert_eq!(reg.by_status(TrialStatus::Paused), vec![b]);
+        assert_eq!(reg.by_status(TrialStatus::Pending), vec![c]);
+        reg.observe(a, 0.4, 10).unwrap();
+        assert_eq!(reg.observed(), vec![a]);
+        assert_eq!(reg.total_epochs(), 1);
+    }
+
+    #[test]
+    fn best_observed_tracks_max() {
+        let mut reg = Registry::new();
+        let a = reg.add(vec![0.0]);
+        let b = reg.add(vec![1.0]);
+        reg.observe(a, 0.3, 10).unwrap();
+        reg.observe(b, 0.9, 10).unwrap();
+        reg.observe(a, 0.5, 10).unwrap();
+        let (best_id, best) = reg.best_observed().unwrap();
+        assert_eq!(best_id, b);
+        assert_eq!(best, 0.9);
+    }
+
+    #[test]
+    fn unknown_trial_errors() {
+        let mut reg = Registry::new();
+        assert!(reg.observe(TrialId(3), 0.1, 10).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Library-wide error type.
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, LkgpError>;
+
+/// Errors surfaced by the LKGP library.
+#[derive(Debug, thiserror::Error)]
+pub enum LkgpError {
+    /// Shape mismatch in a linear-algebra or engine call.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Matrix not positive definite during factorization.
+    #[error("matrix not positive definite at pivot {index} (value {value})")]
+    NotPd { index: usize, value: f64 },
+
+    /// No AOT artifact bucket can hold the requested problem.
+    #[error("no artifact bucket fits problem (n={n}, m={m}, d={d}); rebuild artifacts or use the rust engine")]
+    NoBucket { n: usize, m: usize, d: usize },
+
+    /// Artifact manifest missing or malformed.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT/XLA runtime failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Coordinator protocol violation (e.g. observation for unknown trial).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse failure.
+    #[error(transparent)]
+    Json(#[from] crate::json::JsonError),
+}
+
+impl From<xla::Error> for LkgpError {
+    fn from(e: xla::Error) -> Self {
+        LkgpError::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,174 @@
+//! Kernel matrices and their parameter derivatives.
+//!
+//! The factor kernels of the latent Kronecker product (paper §2):
+//! an ARD RBF over hyper-parameter configurations and a Matern-1/2
+//! (exponential) over learning-curve progression, with the outputscale
+//! attached to the progression factor (paper §B).
+//!
+//! Derivatives are taken w.r.t. *log* parameters (the unconstrained space
+//! the trainers walk in), so dK/dlog ls = dK/dls * ls.
+
+use crate::linalg::Matrix;
+
+/// ARD RBF kernel matrix: k(x, x') = exp(-1/2 sum_k ((x_k - x'_k)/ls_k)^2).
+pub fn rbf(x1: &Matrix, x2: &Matrix, lengthscales: &[f64]) -> Matrix {
+    let (n1, d) = (x1.rows(), x1.cols());
+    let n2 = x2.rows();
+    assert_eq!(x2.cols(), d, "rbf dims mismatch");
+    assert_eq!(lengthscales.len(), d, "rbf lengthscale count");
+    let mut k = Matrix::zeros(n1, n2);
+    for i in 0..n1 {
+        let xi = x1.row(i);
+        for j in 0..n2 {
+            let xj = x2.row(j);
+            let mut s = 0.0;
+            for kk in 0..d {
+                let z = (xi[kk] - xj[kk]) / lengthscales[kk];
+                s += z * z;
+            }
+            k[(i, j)] = (-0.5 * s).exp();
+        }
+    }
+    k
+}
+
+/// d RBF / d log ls_dim, given the kernel matrix (reuses K: dK = K .* z^2).
+pub fn rbf_grad_log_ls(x1: &Matrix, x2: &Matrix, lengthscales: &[f64], k: &Matrix, dim: usize) -> Matrix {
+    let (n1, n2) = (x1.rows(), x2.rows());
+    let ls = lengthscales[dim];
+    let mut dk = Matrix::zeros(n1, n2);
+    for i in 0..n1 {
+        for j in 0..n2 {
+            let z = (x1[(i, dim)] - x2[(j, dim)]) / ls;
+            // dk/dls = k * z^2 / ls; dk/dlog ls = k * z^2.
+            dk[(i, j)] = k[(i, j)] * z * z;
+        }
+    }
+    dk
+}
+
+/// Matern-1/2 kernel matrix: k(t, t') = os * exp(-|t - t'| / ls).
+pub fn matern12(t1: &[f64], t2: &[f64], lengthscale: f64, outputscale: f64) -> Matrix {
+    let (m1, m2) = (t1.len(), t2.len());
+    let mut k = Matrix::zeros(m1, m2);
+    for i in 0..m1 {
+        for j in 0..m2 {
+            k[(i, j)] = outputscale * (-(t1[i] - t2[j]).abs() / lengthscale).exp();
+        }
+    }
+    k
+}
+
+/// d Matern12 / d log ls = K .* (|dt| / ls).
+pub fn matern12_grad_log_ls(t1: &[f64], t2: &[f64], lengthscale: f64, k: &Matrix) -> Matrix {
+    let (m1, m2) = (t1.len(), t2.len());
+    let mut dk = Matrix::zeros(m1, m2);
+    for i in 0..m1 {
+        for j in 0..m2 {
+            dk[(i, j)] = k[(i, j)] * (t1[i] - t2[j]).abs() / lengthscale;
+        }
+    }
+    dk
+}
+
+// d Matern12 / d log outputscale = K itself (no helper needed).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn fd_check(dim: usize) {
+        let mut rng = Pcg64::new(dim as u64 + 1);
+        let (n, d) = (7, 3);
+        let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+        let ls = vec![0.7, 1.3, 0.4];
+        let k = rbf(&x, &x, &ls);
+        let dk = rbf_grad_log_ls(&x, &x, &ls, &k, dim);
+        let h = 1e-6f64;
+        let mut ls_p = ls.clone();
+        let mut ls_m = ls.clone();
+        ls_p[dim] *= (h as f64).exp();
+        ls_m[dim] *= (-h as f64).exp();
+        let kp = rbf(&x, &x, &ls_p);
+        let km = rbf(&x, &x, &ls_m);
+        for i in 0..n {
+            for j in 0..n {
+                let fd = (kp[(i, j)] - km[(i, j)]) / (2.0 * h);
+                assert!(
+                    (dk[(i, j)] - fd).abs() < 1e-6,
+                    "dim={dim} i={i} j={j} dk={} fd={fd}",
+                    dk[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_diag_is_one() {
+        let mut rng = Pcg64::new(0);
+        let x = Matrix::from_vec(5, 4, rng.normal_vec(20));
+        let k = rbf(&x, &x, &[1.0, 2.0, 0.5, 1.5]);
+        for i in 0..5 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn rbf_symmetric_and_bounded() {
+        let mut rng = Pcg64::new(1);
+        let x = Matrix::from_vec(8, 3, rng.normal_vec(24));
+        let k = rbf(&x, &x, &[1.0, 1.0, 1.0]);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-15);
+                assert!(k[(i, j)] > 0.0 && k[(i, j)] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_grad_matches_fd_all_dims() {
+        for dim in 0..3 {
+            fd_check(dim);
+        }
+    }
+
+    #[test]
+    fn matern_matches_closed_form() {
+        let t = [0.0, 0.5, 1.0];
+        let k = matern12(&t, &t, 0.5, 2.0);
+        assert!((k[(0, 0)] - 2.0).abs() < 1e-14);
+        assert!((k[(0, 1)] - 2.0 * (-1.0f64).exp()).abs() < 1e-14);
+        assert!((k[(0, 2)] - 2.0 * (-2.0f64).exp()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn matern_grad_matches_fd() {
+        let mut rng = Pcg64::new(2);
+        let t: Vec<f64> = (0..9).map(|_| rng.uniform()).collect();
+        let (ls, os) = (0.37f64, 1.42);
+        let k = matern12(&t, &t, ls, os);
+        let dk = matern12_grad_log_ls(&t, &t, ls, &k);
+        let h = 1e-6f64;
+        let kp = matern12(&t, &t, ls * h.exp(), os);
+        let km = matern12(&t, &t, ls * (-h).exp(), os);
+        for i in 0..9 {
+            for j in 0..9 {
+                let fd = (kp[(i, j)] - km[(i, j)]) / (2.0 * h);
+                assert!((dk[(i, j)] - fd).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_match_python_reference_values() {
+        // Golden values computed with python/compile/kernels/ref.py.
+        let x = Matrix::from_vec(2, 2, vec![0.1, 0.2, 0.4, 0.9]);
+        let k = rbf(&x, &x, &[0.5, 1.0]);
+        let want01 = (-0.5f64 * ((0.3f64 / 0.5).powi(2) + 0.7f64.powi(2))).exp();
+        assert!((k[(0, 1)] - want01).abs() < 1e-12);
+        let k2 = matern12(&[0.0, 1.0], &[0.0, 1.0], 0.25, 3.0);
+        assert!((k2[(0, 1)] - 3.0 * (-4.0f64).exp()).abs() < 1e-12);
+    }
+}

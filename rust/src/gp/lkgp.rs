@@ -1,0 +1,661 @@
+//! The Latent Kronecker GP engine (pure-rust mirror of the L2 jax graphs).
+//!
+//! Training and inference never materialize the joint covariance: every
+//! operation is expressed through the masked Kronecker operator and
+//! iterative methods (paper §2):
+//!
+//! * MAP objective value: batched CG for alpha + stochastic Lanczos
+//!   quadrature for the log determinant
+//! * gradient: Hutchinson trace estimator with the same CG solves and the
+//!   analytic kernel derivatives (`gp::kernels`)
+//! * posterior mean / final-value prediction: CG solves against masked
+//!   cross-covariance vectors (exact Gaussian predictive)
+//! * posterior samples: Matheron's rule with Kronecker-factored prior
+//!   Cholesky — O((n+q)^3 + m^3 ) as the paper quotes
+//!
+//! This engine is the correctness oracle for the AOT artifacts (they mirror
+//! each other's math), the fallback when no artifact bucket fits, and the
+//! subject of the Figure-3 LKGP series.
+
+use crate::error::Result;
+use crate::gp::kernels;
+use crate::gp::params::{self, Theta};
+use crate::linalg::{self, cg_batch, CgStats, Matrix};
+use crate::rng::Pcg64;
+
+use super::operator::MaskedKronOp;
+
+/// A learning-curve training set in *model* space (already transformed).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// (n, d) configs in the unit hypercube.
+    pub x: Matrix,
+    /// (m,) progression grid in the log-spaced unit interval.
+    pub t: Vec<f64>,
+    /// (n, m) standardized targets; missing entries are exactly 0.
+    pub y: Matrix,
+    /// (n, m) observation mask in {0, 1}.
+    pub mask: Matrix,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn n_obs(&self) -> f64 {
+        self.mask.data().iter().sum()
+    }
+
+    /// Validate shape consistency.
+    pub fn check(&self) -> Result<()> {
+        use crate::error::LkgpError::Shape;
+        if self.y.rows() != self.n() || self.y.cols() != self.m() {
+            return Err(Shape(format!(
+                "y is {}x{}, want {}x{}",
+                self.y.rows(),
+                self.y.cols(),
+                self.n(),
+                self.m()
+            )));
+        }
+        if self.mask.rows() != self.n() || self.mask.cols() != self.m() {
+            return Err(Shape("mask shape mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Solver configuration (paper §B defaults).
+#[derive(Clone, Debug)]
+pub struct SolverCfg {
+    /// CG relative-residual tolerance (paper: 0.01).
+    pub cg_tol: f64,
+    /// CG iteration cap (paper: 10000).
+    pub cg_max_iters: usize,
+    /// Hutchinson/SLQ probe count.
+    pub probes: usize,
+    /// Lanczos (Krylov) iterations for SLQ.
+    pub lanczos_iters: usize,
+    /// Jitter added to Kronecker-factor Choleskys in Matheron sampling.
+    pub jitter: f64,
+}
+
+impl Default for SolverCfg {
+    fn default() -> Self {
+        SolverCfg {
+            cg_tol: 1e-2,
+            cg_max_iters: 10_000,
+            probes: 8,
+            lanczos_iters: 16,
+            jitter: 1e-6,
+        }
+    }
+}
+
+/// MAP objective evaluation output.
+#[derive(Clone, Debug)]
+pub struct MllEval {
+    /// MAP objective (marginal log-likelihood + log prior).
+    pub value: f64,
+    /// Gradient w.r.t. packed (log-space) parameters.
+    pub grad: Vec<f64>,
+    /// CG convergence stats for the batched solve.
+    pub cg: CgStats,
+}
+
+/// Evaluate the MAP objective and its gradient at `packed` parameters.
+///
+/// `probes` is a (p, n*m) row-major Rademacher buffer; passing the same
+/// probes across optimizer steps gives a deterministic (probe-conditioned)
+/// objective, which is what both trainers rely on.
+pub fn mll_value_grad(
+    packed: &[f64],
+    data: &Dataset,
+    probes: &[f64],
+    cfg: &SolverCfg,
+) -> Result<MllEval> {
+    data.check()?;
+    let (n, m) = (data.n(), data.m());
+    let nm = n * m;
+    let d = data.d();
+    assert_eq!(packed.len(), d + 3, "theta length");
+    let p = probes.len() / nm;
+    assert!(p > 0, "need probes");
+
+    let theta = Theta::unpack(packed);
+    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+
+    // --- batched CG: [y, z_1 .. z_p] ---
+    let mut rhs = Vec::with_capacity((p + 1) * nm);
+    rhs.extend_from_slice(data.y.data());
+    rhs.extend_from_slice(&probes[..p * nm]);
+    let (solves, cg) = cg_batch(&op, &rhs, cfg.cg_tol, cfg.cg_max_iters);
+    let alpha = &solves[..nm];
+    let us = &solves[nm..];
+
+    // --- value ---
+    let n_obs = data.n_obs();
+    let logdet_full = linalg::slq_logdet(&op, &probes[..p * nm], cfg.lanczos_iters);
+    let logdet_obs = logdet_full - (nm as f64 - n_obs) * theta.sigma2.ln();
+    let fit = -0.5 * linalg::matrix::dot(data.y.data(), alpha);
+    let value = fit - 0.5 * logdet_obs - 0.5 * n_obs * (2.0 * std::f64::consts::PI).ln()
+        + params::log_prior(packed);
+
+    // --- gradient ---
+    // For each kernel parameter k: grad_k = 1/2 a^T dA_k a
+    //   - 1/2 mean_i z_i^T dA_k u_i, with dA_k = M (dK1 (x) K2) M etc.
+    let mut grad = params::log_prior_grad(packed);
+
+    // Quadratic forms against a substituted factor pair (ka, kb):
+    // q(v, w) = (M v)^T reshape^-1( ka (M w) kb ) accumulated per pair.
+    let quad = |ka: &Matrix, kb: &Matrix, v: &[f64], w: &[f64]| -> f64 {
+        let mv = mask_product(&data.mask, w, n, m);
+        let tmp = mv.matmul(kb);
+        let full = ka.matmul(&tmp);
+        let mut s = 0.0;
+        let mk = data.mask.data();
+        let fd = full.data();
+        for i in 0..nm {
+            s += v[i] * mk[i] * fd[i];
+        }
+        s
+    };
+
+    // RBF lengthscales.
+    for dim in 0..d {
+        let dk1 = kernels::rbf_grad_log_ls(&data.x, &data.x, &theta.lengthscales, &k1, dim);
+        let mut g = 0.5 * quad(&dk1, &k2, alpha, alpha);
+        let mut tr = 0.0;
+        for i in 0..p {
+            tr += quad(&dk1, &k2, &probes[i * nm..(i + 1) * nm], &us[i * nm..(i + 1) * nm]);
+        }
+        g -= 0.5 * tr / p as f64;
+        grad[dim] += g;
+    }
+    // t lengthscale and outputscale act through K2.
+    let dk2_ls = kernels::matern12_grad_log_ls(&data.t, &data.t, theta.t_lengthscale, &k2);
+    for (pi, dk2) in [(d, &dk2_ls), (d + 1, &k2)] {
+        let mut g = 0.5 * quad(&k1, dk2, alpha, alpha);
+        let mut tr = 0.0;
+        for i in 0..p {
+            tr += quad(&k1, dk2, &probes[i * nm..(i + 1) * nm], &us[i * nm..(i + 1) * nm]);
+        }
+        g -= 0.5 * tr / p as f64;
+        grad[pi] += g;
+    }
+    // Noise: dA/dlog s2 = s2 I (full space) + padding correction.
+    {
+        let s2 = theta.sigma2;
+        let a_dot = linalg::matrix::dot(alpha, alpha);
+        let mut tr = 0.0;
+        for i in 0..p {
+            tr += linalg::matrix::dot(&probes[i * nm..(i + 1) * nm], &us[i * nm..(i + 1) * nm]);
+        }
+        grad[d + 2] += 0.5 * s2 * a_dot - 0.5 * s2 * tr / p as f64 + 0.5 * (nm as f64 - n_obs);
+    }
+
+    Ok(MllEval { value, grad, cg })
+}
+
+fn mask_product(mask: &Matrix, v: &[f64], n: usize, m: usize) -> Matrix {
+    let mut out = Matrix::zeros(n, m);
+    for (dst, (a, b)) in out
+        .data_mut()
+        .iter_mut()
+        .zip(v.iter().zip(mask.data()))
+    {
+        *dst = a * b;
+    }
+    out
+}
+
+/// Exact MAP objective via dense Cholesky on the observed block
+/// (O(n_obs^3); test oracle shared with the naive engine).
+pub fn mll_exact(packed: &[f64], data: &Dataset) -> Result<f64> {
+    let theta = Theta::unpack(packed);
+    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let (n, m) = (data.n(), data.m());
+    let idx: Vec<usize> = data
+        .mask
+        .data()
+        .iter()
+        .enumerate()
+        .filter(|(_, &mv)| mv > 0.0)
+        .map(|(i, _)| i)
+        .collect();
+    let no = idx.len();
+    let mut kobs = Matrix::zeros(no, no);
+    for (a, &ia) in idx.iter().enumerate() {
+        let (i1, j1) = (ia / m, ia % m);
+        for (b, &ib) in idx.iter().enumerate() {
+            let (i2, j2) = (ib / m, ib % m);
+            kobs[(a, b)] = k1[(i1, i2)] * k2[(j1, j2)];
+        }
+    }
+    kobs.add_diag(theta.sigma2);
+    let l = linalg::cholesky(&kobs)?;
+    let yobs: Vec<f64> = idx.iter().map(|&i| data.y.data()[i]).collect();
+    let alpha = linalg::chol_solve(&l, &yobs);
+    let _ = n;
+    Ok(
+        -0.5 * linalg::matrix::dot(&yobs, &alpha) - 0.5 * linalg::chol_logdet(&l)
+            - 0.5 * no as f64 * (2.0 * std::f64::consts::PI).ln()
+            + params::log_prior(packed),
+    )
+}
+
+/// Posterior mean over the full grid for query configs.
+///
+/// mean(xq, .) = k1(xq, X) (M . A) K2 with A = reshape(CG(A, vec(Y))).
+pub fn predict_mean(packed: &[f64], data: &Dataset, xq: &Matrix, cfg: &SolverCfg) -> Result<(Matrix, CgStats)> {
+    data.check()?;
+    let theta = Theta::unpack(packed);
+    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+    let (alpha, cg) = op.solve(data.y.data(), cfg.cg_tol, cfg.cg_max_iters);
+    let am = mask_product(&data.mask, &alpha, data.n(), data.m());
+    let k1q = kernels::rbf(xq, &data.x, &theta.lengthscales);
+    Ok((k1q.matmul(&am).matmul(&k2), cg))
+}
+
+/// Exact Gaussian predictive for the *final* progression value of each
+/// query config: returns (mean, variance-with-noise) pairs.
+///
+/// Each query needs one extra CG solve against its masked cross-covariance
+/// vector; the q solves are batched into a single CG call.
+pub fn predict_final(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    cfg: &SolverCfg,
+) -> Result<Vec<(f64, f64)>> {
+    data.check()?;
+    let theta = Theta::unpack(packed);
+    let (n, m) = (data.n(), data.m());
+    let nm = n * m;
+    let q = xq.rows();
+    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+
+    // Cross-covariance columns c_j = M . (k1(X, xq_j) (x) k2(t, t_last)).
+    let k1qx = kernels::rbf(&data.x, xq, &theta.lengthscales); // (n, q)
+    let t_last = [data.t[m - 1]];
+    let k2t = kernels::matern12(&data.t, &t_last, theta.t_lengthscale, theta.outputscale); // (m, 1)
+
+    let mut rhs = Vec::with_capacity((q + 1) * nm);
+    rhs.extend_from_slice(data.y.data());
+    for j in 0..q {
+        for i in 0..n {
+            for jj in 0..m {
+                rhs.push(data.mask[(i, jj)] * k1qx[(i, j)] * k2t[(jj, 0)]);
+            }
+        }
+    }
+    let (solves, _cg) = cg_batch(&op, &rhs, cfg.cg_tol, cfg.cg_max_iters);
+    let alpha = &solves[..nm];
+
+    let prior_var = theta.outputscale; // k1(xq,xq)=1, k2(t*,t*)=outputscale
+    let mut out = Vec::with_capacity(q);
+    for j in 0..q {
+        let c = &rhs[(j + 1) * nm..(j + 2) * nm];
+        let w = &solves[(j + 1) * nm..(j + 2) * nm];
+        let mean = linalg::matrix::dot(c, alpha);
+        let var = (prior_var - linalg::matrix::dot(c, w)).max(1e-12) + theta.sigma2;
+        out.push((mean, var));
+    }
+    Ok(out)
+}
+
+/// Posterior samples over [X; Xq] x grid via Matheron's rule.
+///
+/// Returns `s` samples, each an (n+q, m) matrix. Prior draws use the
+/// Kronecker factorization f = L1 Z L2^T; the pathwise update is one
+/// batched masked-CG solve (paper §2, "Posterior Samples via Matheron's
+/// Rule").
+pub fn posterior_samples(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    s: usize,
+    cfg: &SolverCfg,
+    rng: &mut Pcg64,
+) -> Result<Vec<Matrix>> {
+    data.check()?;
+    let theta = Theta::unpack(packed);
+    let (n, m) = (data.n(), data.m());
+    let nm = n * m;
+    let q = xq.rows();
+    let nj = n + q;
+
+    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+
+    // Joint config kernel and its Cholesky factors.
+    let mut xj = Matrix::zeros(nj, data.d());
+    for i in 0..n {
+        xj.row_mut(i).copy_from_slice(data.x.row(i));
+    }
+    for i in 0..q {
+        xj.row_mut(n + i).copy_from_slice(xq.row(i));
+    }
+    let mut k1j = kernels::rbf(&xj, &xj, &theta.lengthscales);
+    k1j.add_diag(cfg.jitter);
+    let l1 = linalg::cholesky(&k1j)?;
+    let mut k2j = k2.clone();
+    k2j.add_diag(cfg.jitter);
+    let l2 = linalg::cholesky(&k2j)?;
+    let l2t = l2.transpose();
+
+    // Prior samples f_s = L1 Z_s L2^T, batched RHS for the pathwise update.
+    let mut priors: Vec<Matrix> = Vec::with_capacity(s);
+    let mut rhs = Vec::with_capacity(s * nm);
+    let sigma = theta.sigma2.sqrt();
+    for _ in 0..s {
+        let z = Matrix::from_vec(nj, m, rng.normal_vec(nj * m));
+        let f = l1.matmul(&z).matmul(&l2t);
+        for i in 0..n {
+            for j in 0..m {
+                let noise = sigma * rng.normal();
+                rhs.push(data.mask[(i, j)] * (data.y[(i, j)] - f[(i, j)] - noise));
+            }
+        }
+        priors.push(f);
+    }
+    let (ws, _cg) = cg_batch(&op, &rhs, cfg.cg_tol, cfg.cg_max_iters);
+
+    // k1([X; Xq], X) is the left block of k1j (jitter only touched diag).
+    let k1cross = {
+        let mut c = Matrix::zeros(nj, n);
+        for i in 0..nj {
+            for j in 0..n {
+                c[(i, j)] = if i == j { k1j[(i, j)] - cfg.jitter } else { k1j[(i, j)] };
+            }
+        }
+        c
+    };
+
+    let mut out = Vec::with_capacity(s);
+    for (si, mut f) in priors.into_iter().enumerate() {
+        let w = mask_product(&data.mask, &ws[si * nm..(si + 1) * nm], n, m);
+        let update = k1cross.matmul(&w).matmul(&k2);
+        f.add_assign(&update);
+        out.push(f);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_dataset(n: usize, m: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::new(seed);
+        let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1).max(1) as f64).collect();
+        // prefix masks (early stopping pattern)
+        let mut mask = Matrix::zeros(n, m);
+        for i in 0..n {
+            let len = 2 + rng.below(m - 1);
+            for j in 0..len {
+                mask[(i, j)] = 1.0;
+            }
+        }
+        let mut y = Matrix::zeros(n, m);
+        for i in 0..n {
+            let a = rng.uniform_in(0.5, 1.0);
+            for j in 0..m {
+                if mask[(i, j)] > 0.0 {
+                    y[(i, j)] = -a * (-3.0 * t[j]).exp() + 0.02 * rng.normal();
+                }
+            }
+        }
+        Dataset { x, t, y, mask }
+    }
+
+    #[test]
+    fn mll_value_close_to_exact() {
+        // SLQ value noise is ~N/sqrt(p); with p=256 probes the std on this
+        // problem is ~0.5 nats (measured), so a 2-nat budget is ~4 sigma.
+        let data = toy_dataset(10, 8, 3, 1);
+        let packed = Theta::default_packed(3);
+        let mut rng = Pcg64::new(2);
+        let probes = rng.rademacher_vec(256 * 80);
+        let cfg = SolverCfg { probes: 256, lanczos_iters: 16, ..Default::default() };
+        let eval = mll_value_grad(&packed, &data, &probes, &cfg).unwrap();
+        let exact = mll_exact(&packed, &data).unwrap();
+        assert!(
+            (eval.value - exact).abs() < 2.0,
+            "iter={} exact={exact}",
+            eval.value
+        );
+    }
+
+    #[test]
+    fn mll_grad_matches_exact_fd() {
+        let data = toy_dataset(9, 7, 2, 3);
+        let mut packed = Theta::default_packed(2);
+        packed[0] -= 0.7; // move off the prior mean
+        let mut rng = Pcg64::new(4);
+        let probes = rng.rademacher_vec(64 * 63);
+        let cfg = SolverCfg { probes: 64, cg_tol: 1e-10, ..Default::default() };
+        let eval = mll_value_grad(&packed, &data, &probes, &cfg).unwrap();
+        let h = 1e-5;
+        let mut fd = vec![0.0; packed.len()];
+        for i in 0..packed.len() {
+            let mut p1 = packed.clone();
+            let mut p2 = packed.clone();
+            p1[i] += h;
+            p2[i] -= h;
+            fd[i] = (mll_exact(&p1, &data).unwrap() - mll_exact(&p2, &data).unwrap()) / (2.0 * h);
+        }
+        let nf = fd.iter().map(|g| g * g).sum::<f64>().sqrt();
+        let diff = eval
+            .grad
+            .iter()
+            .zip(&fd)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(diff / nf < 0.1, "grad={:?} fd={:?}", eval.grad, fd);
+    }
+
+    #[test]
+    fn predict_mean_matches_dense() {
+        let data = toy_dataset(8, 6, 2, 5);
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(6);
+        let xq = Matrix::from_vec(3, 2, rng.uniform_vec(6, 0.0, 1.0));
+        let cfg = SolverCfg { cg_tol: 1e-11, ..Default::default() };
+        let (mean, _) = predict_mean(&packed, &data, &xq, &cfg).unwrap();
+
+        // dense oracle
+        let theta = Theta::unpack(&packed);
+        let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+        let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+        let (n, m) = (8, 6);
+        let idx: Vec<usize> = data
+            .mask
+            .data()
+            .iter()
+            .enumerate()
+            .filter(|(_, &mv)| mv > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        let no = idx.len();
+        let mut kobs = Matrix::zeros(no, no);
+        for (a, &ia) in idx.iter().enumerate() {
+            for (b, &ib) in idx.iter().enumerate() {
+                kobs[(a, b)] = k1[(ia / m, ib / m)] * k2[(ia % m, ib % m)];
+            }
+        }
+        kobs.add_diag(theta.sigma2);
+        let l = linalg::cholesky(&kobs).unwrap();
+        let yobs: Vec<f64> = idx.iter().map(|&i| data.y.data()[i]).collect();
+        let alpha = linalg::chol_solve(&l, &yobs);
+        let k1q = kernels::rbf(&xq, &data.x, &theta.lengthscales);
+        for qi in 0..3 {
+            for j in 0..m {
+                let mut want = 0.0;
+                for (a, &ia) in idx.iter().enumerate() {
+                    want += k1q[(qi, ia / m)] * k2[(j, ia % m)] * alpha[a];
+                }
+                assert!((mean[(qi, j)] - want).abs() < 1e-6, "q={qi} j={j}");
+            }
+        }
+        let _ = n;
+    }
+
+    #[test]
+    fn predict_final_matches_dense_variance() {
+        let data = toy_dataset(7, 5, 2, 7);
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(8);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let cfg = SolverCfg { cg_tol: 1e-11, ..Default::default() };
+        let preds = predict_final(&packed, &data, &xq, &cfg).unwrap();
+
+        let theta = Theta::unpack(&packed);
+        let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+        let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+        let m = 5;
+        let idx: Vec<usize> = data
+            .mask
+            .data()
+            .iter()
+            .enumerate()
+            .filter(|(_, &mv)| mv > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        let no = idx.len();
+        let mut kobs = Matrix::zeros(no, no);
+        for (a, &ia) in idx.iter().enumerate() {
+            for (b, &ib) in idx.iter().enumerate() {
+                kobs[(a, b)] = k1[(ia / m, ib / m)] * k2[(ia % m, ib % m)];
+            }
+        }
+        kobs.add_diag(theta.sigma2);
+        let l = linalg::cholesky(&kobs).unwrap();
+        let yobs: Vec<f64> = idx.iter().map(|&i| data.y.data()[i]).collect();
+        let alpha = linalg::chol_solve(&l, &yobs);
+        let k1q = kernels::rbf(&xq, &data.x, &theta.lengthscales);
+        for qi in 0..2 {
+            let c: Vec<f64> = idx
+                .iter()
+                .map(|&ia| k1q[(qi, ia / m)] * k2[(m - 1, ia % m)])
+                .collect();
+            let mean = linalg::matrix::dot(&c, &alpha);
+            let w = linalg::chol_solve(&l, &c);
+            let var = theta.outputscale - linalg::matrix::dot(&c, &w) + theta.sigma2;
+            assert!((preds[qi].0 - mean).abs() < 1e-6);
+            assert!((preds[qi].1 - var).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matheron_moments_match_dense_posterior() {
+        let data = toy_dataset(5, 4, 2, 9);
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(10);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let cfg = SolverCfg { cg_tol: 1e-10, jitter: 1e-10, ..Default::default() };
+        let s = 4000;
+        let samples = posterior_samples(&packed, &data, &xq, s, &cfg, &mut rng).unwrap();
+
+        // dense posterior mean at the query block
+        let theta = Theta::unpack(&packed);
+        let (n, m, q) = (5usize, 4usize, 2usize);
+        let mut xj = Matrix::zeros(n + q, 2);
+        for i in 0..n {
+            xj.row_mut(i).copy_from_slice(data.x.row(i));
+        }
+        for i in 0..q {
+            xj.row_mut(n + i).copy_from_slice(xq.row(i));
+        }
+        let k1j = kernels::rbf(&xj, &xj, &theta.lengthscales);
+        let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+        let idx: Vec<usize> = data
+            .mask
+            .data()
+            .iter()
+            .enumerate()
+            .filter(|(_, &mv)| mv > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        let no = idx.len();
+        let mut kobs = Matrix::zeros(no, no);
+        for (a, &ia) in idx.iter().enumerate() {
+            for (b, &ib) in idx.iter().enumerate() {
+                kobs[(a, b)] = k1j[(ia / m, ib / m)] * k2[(ia % m, ib % m)];
+            }
+        }
+        kobs.add_diag(theta.sigma2);
+        let l = linalg::cholesky(&kobs).unwrap();
+        let yobs: Vec<f64> = idx.iter().map(|&i| data.y.data()[i]).collect();
+        let alpha = linalg::chol_solve(&l, &yobs);
+
+        for qi in 0..q {
+            for j in 0..m {
+                let mut want = 0.0;
+                for (a, &ia) in idx.iter().enumerate() {
+                    want += k1j[(n + qi, ia / m)] * k2[(j, ia % m)] * alpha[a];
+                }
+                let emp: f64 =
+                    samples.iter().map(|smp| smp[(n + qi, j)]).sum::<f64>() / s as f64;
+                assert!(
+                    (emp - want).abs() < 0.08,
+                    "qi={qi} j={j} emp={emp} want={want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_samples_interpolate_observations() {
+        // With tiny noise, samples at observed entries track the data.
+        let mut data = toy_dataset(6, 5, 2, 11);
+        // densify mask
+        for v in data.mask.data_mut().iter_mut() {
+            *v = 1.0;
+        }
+        // Unit lengthscales keep K1 well-conditioned so the small-noise
+        // interpolation identity is numerically clean; jitter must be well
+        // below sigma2 (Matheron assumes exact prior covariance).
+        let mut packed = Theta::default_packed(2);
+        for v in packed.iter_mut().take(3) {
+            *v = 0.0; // ls = 1
+        }
+        let dlen = packed.len();
+        packed[dlen - 1] = (1e-4f64).ln();
+        let mut rng = Pcg64::new(12);
+        let xq = Matrix::from_vec(1, 2, vec![0.5, 0.5]);
+        let cfg = SolverCfg { cg_tol: 1e-10, jitter: 1e-10, ..Default::default() };
+        let samples = posterior_samples(&packed, &data, &xq, 20, &cfg, &mut rng).unwrap();
+        for smp in &samples {
+            for i in 0..6 {
+                for j in 0..5 {
+                    assert!(
+                        (smp[(i, j)] - data.y[(i, j)]).abs() < 0.05,
+                        "i={i} j={j} smp={} y={}",
+                        smp[(i, j)],
+                        data.y[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Gaussian-process engines: the paper's Latent Kronecker GP and the naive
+//! dense baseline, plus kernels, transforms, parameters and trainers.
+//!
+//! Two interchangeable compute paths exist for the LKGP math:
+//! * this module's pure-rust engine ([`lkgp`]), and
+//! * the AOT-compiled XLA artifacts driven by [`crate::runtime`].
+//!
+//! Both implement the same equations (they are tested against each other),
+//! so the coordinator can run self-contained or artifact-accelerated.
+
+pub mod kernels;
+pub mod lkgp;
+pub mod naive;
+pub mod operator;
+pub mod params;
+pub mod trainer;
+pub mod transforms;
+
+pub use lkgp::{Dataset, MllEval, SolverCfg};
+pub use params::Theta;

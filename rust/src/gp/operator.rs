@@ -1,0 +1,288 @@
+//! The masked latent-Kronecker operator (the paper's core contribution).
+//!
+//! Implements `A v = M . (K1 (M . V) K2) + sigma2 * v` as a [`LinOp`]:
+//! the full-space embedding of `P (K1 (x) K2) P^T + sigma2 I` where P
+//! selects observed learning-curve entries. The Kronecker identity
+//! `(A (x) B) vec(C) = vec(B C A^T)` turns the O(n^2 m^2) dense MVM into
+//! two dense matmuls — O(n^2 m + n m^2) time, O(nm) space — and the mask
+//! plays the role of the zero-pad / slice-index projections (paper §2).
+
+use crate::linalg::{cg_batch, CgStats, LinOp, Matrix};
+
+/// Masked Kronecker operator over the (n x m) learning-curve grid.
+pub struct MaskedKronOp<'a> {
+    /// (n, n) config kernel matrix.
+    pub k1: &'a Matrix,
+    /// (m, m) progression kernel matrix.
+    pub k2: &'a Matrix,
+    /// (n, m) observation mask in {0, 1}.
+    pub mask: &'a Matrix,
+    /// Noise variance added on the diagonal.
+    pub sigma2: f64,
+}
+
+impl<'a> MaskedKronOp<'a> {
+    pub fn new(k1: &'a Matrix, k2: &'a Matrix, mask: &'a Matrix, sigma2: f64) -> Self {
+        assert_eq!(k1.rows(), k1.cols());
+        assert_eq!(k2.rows(), k2.cols());
+        assert_eq!(mask.rows(), k1.rows());
+        assert_eq!(mask.cols(), k2.rows());
+        MaskedKronOp { k1, k2, mask, sigma2 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.k1.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.k2.rows()
+    }
+
+    /// Apply to a single (n, m) matrix in-place-free form.
+    pub fn apply_mat(&self, v: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.n(), self.m());
+        let mut ws = Workspace::new(self.n(), self.m());
+        self.apply_into(v.data(), out.data_mut(), &mut ws);
+        out
+    }
+
+    /// Core kernel: out = M.(K1 (M.v) K2) + sigma2 v for one flattened v.
+    fn apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let (n, m) = (self.n(), self.m());
+        // mv = M . V
+        for (dst, (a, b)) in ws.mv.data_mut().iter_mut().zip(v.iter().zip(self.mask.data())) {
+            *dst = a * b;
+        }
+        // w = (M.V) K2   (n x m) (m x m)
+        ws.mv.matmul_into(self.k2, &mut ws.w);
+        // out_mat = K1 w  (n x n) (n x m)
+        self.k1.matmul_into(&ws.w, &mut ws.out_mat);
+        // epilogue: mask + sigma2 shift
+        let om = ws.out_mat.data();
+        let mk = self.mask.data();
+        debug_assert_eq!(out.len(), n * m);
+        for i in 0..n * m {
+            out[i] = mk[i] * om[i] + self.sigma2 * v[i];
+        }
+    }
+
+    /// Convenience: batched CG solve against this operator.
+    pub fn solve(&self, rhs: &[f64], tol: f64, max_iters: usize) -> (Vec<f64>, CgStats) {
+        cg_batch(self, rhs, tol, max_iters)
+    }
+}
+
+/// Reusable buffers for one apply (avoids per-iteration allocation in CG).
+struct Workspace {
+    mv: Matrix,
+    w: Matrix,
+    out_mat: Matrix,
+}
+
+impl Workspace {
+    fn new(n: usize, m: usize) -> Self {
+        Workspace {
+            mv: Matrix::zeros(n, m),
+            w: Matrix::zeros(n, m),
+            out_mat: Matrix::zeros(n, m),
+        }
+    }
+}
+
+impl LinOp for MaskedKronOp<'_> {
+    fn len(&self) -> usize {
+        self.n() * self.m()
+    }
+
+    fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
+        let nm = self.len();
+        debug_assert_eq!(x.len(), batch * nm);
+        let threads = crate::util::num_threads().min(batch.max(1));
+        // Batched CG feeds 9-33 independent RHS per iteration; distributing
+        // them across threads is the engine's main parallelism lever
+        // (§Perf: 3.4x on the 17-RHS training solve at size 128).
+        if threads <= 1 || batch <= 1 {
+            let mut ws = Workspace::new(self.n(), self.m());
+            for b in 0..batch {
+                self.apply_into(&x[b * nm..(b + 1) * nm], &mut out[b * nm..(b + 1) * nm], &mut ws);
+            }
+            return;
+        }
+        let chunk = batch.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (ci, out_chunk) in out.chunks_mut(chunk * nm).enumerate() {
+                let x_chunk = &x[ci * chunk * nm..(ci * chunk * nm + out_chunk.len())];
+                scope.spawn(move || {
+                    crate::linalg::matrix::without_nested_parallelism(|| {
+                        let mut ws = Workspace::new(self.n(), self.m());
+                        let local = out_chunk.len() / nm;
+                        for b in 0..local {
+                            self.apply_into(
+                                &x_chunk[b * nm..(b + 1) * nm],
+                                &mut out_chunk[b * nm..(b + 1) * nm],
+                                &mut ws,
+                            );
+                        }
+                    });
+                });
+            }
+        });
+    }
+}
+
+/// Dense materialization of the same operator (oracle for tests and the
+/// naive engine's building block): diag(m) (K1 (x) K2) diag(m) + s2 I.
+pub fn dense_masked_kron(k1: &Matrix, k2: &Matrix, mask: &Matrix, sigma2: f64) -> Matrix {
+    let (n, m) = (k1.rows(), k2.rows());
+    let nm = n * m;
+    let mut out = Matrix::zeros(nm, nm);
+    let mk = mask.data();
+    for i1 in 0..n {
+        for j1 in 0..m {
+            let r = i1 * m + j1;
+            for i2 in 0..n {
+                for j2 in 0..m {
+                    let c = i2 * m + j2;
+                    out[(r, c)] = mk[r] * k1[(i1, i2)] * k2[(j1, j2)] * mk[c];
+                }
+            }
+        }
+    }
+    out.add_diag(sigma2);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::kernels;
+    use crate::rng::Pcg64;
+
+    fn setup(n: usize, m: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Pcg64::new(seed);
+        let x = Matrix::from_vec(n, 3, rng.uniform_vec(n * 3, 0.0, 1.0));
+        let k1 = kernels::rbf(&x, &x, &[0.8, 1.1, 0.6]);
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / (m.max(2) - 1) as f64).collect();
+        let k2 = kernels::matern12(&t, &t, 0.4, 1.3);
+        let mask = Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.7 { 1.0 } else { 0.0 });
+        (k1, k2, mask)
+    }
+
+    #[test]
+    fn matches_dense_operator() {
+        let (k1, k2, mask) = setup(6, 5, 1);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 0.09);
+        let dense = dense_masked_kron(&k1, &k2, &mask, 0.09);
+        let mut rng = Pcg64::new(2);
+        let v = rng.normal_vec(30);
+        let mut got = vec![0.0; 30];
+        op.apply_batch(&v, &mut got, 1);
+        let want = dense.matvec(&v);
+        for i in 0..30 {
+            assert!((got[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn batched_apply_matches_sequential() {
+        let (k1, k2, mask) = setup(8, 7, 3);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 0.2);
+        let mut rng = Pcg64::new(4);
+        let batch = 5;
+        let v = rng.normal_vec(batch * 56);
+        let mut got = vec![0.0; batch * 56];
+        op.apply_batch(&v, &mut got, batch);
+        for b in 0..batch {
+            let mut one = vec![0.0; 56];
+            op.apply_batch(&v[b * 56..(b + 1) * 56], &mut one, 1);
+            assert_eq!(&got[b * 56..(b + 1) * 56], &one[..]);
+        }
+    }
+
+    #[test]
+    fn preserves_observed_subspace() {
+        let (k1, k2, mask) = setup(7, 6, 5);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 0.15);
+        let mut rng = Pcg64::new(6);
+        // observed-supported input
+        let v: Vec<f64> = mask.data().iter().map(|&m| m * rng.normal()).collect();
+        let mut out = vec![0.0; 42];
+        op.apply_batch(&v, &mut out, 1);
+        for (o, m) in out.iter().zip(mask.data()) {
+            if *m == 0.0 {
+                assert_eq!(*o, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn full_mask_is_plain_kronecker() {
+        let (k1, k2, _) = setup(5, 4, 7);
+        let mask = Matrix::from_fn(5, 4, |_, _| 1.0);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 0.0);
+        // (K1 x K2) vec(V) == K1 V K2 (row-major, symmetric K2)
+        let mut rng = Pcg64::new(8);
+        let v = Matrix::from_vec(5, 4, rng.normal_vec(20));
+        let want = k1.matmul(&v).matmul(&k2);
+        let got = op.apply_mat(&v);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn solve_restricted_equals_projected_system() {
+        // CG on the full-space masked operator must equal the dense solve
+        // of the projected (observed-only) system (paper's P K P^T).
+        let (k1, k2, mask) = setup(6, 5, 9);
+        let s2 = 0.3;
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let mut rng = Pcg64::new(10);
+        let rhs: Vec<f64> = mask.data().iter().map(|&m| m * rng.normal()).collect();
+        let (x, stats) = op.solve(&rhs, 1e-12, 2000);
+        assert!(stats.converged);
+
+        // dense projected system
+        let idx: Vec<usize> = mask
+            .data()
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        let dense = dense_masked_kron(&k1, &k2, &mask, s2);
+        let no = idx.len();
+        let mut proj = Matrix::zeros(no, no);
+        for (a, &ia) in idx.iter().enumerate() {
+            for (b, &ib) in idx.iter().enumerate() {
+                proj[(a, b)] = dense[(ia, ib)];
+            }
+        }
+        let l = crate::linalg::cholesky(&proj).unwrap();
+        let rhs_obs: Vec<f64> = idx.iter().map(|&i| rhs[i]).collect();
+        let want = crate::linalg::chol_solve(&l, &rhs_obs);
+        for (a, &ia) in idx.iter().enumerate() {
+            assert!((x[ia] - want[a]).abs() < 1e-8, "obs {a}");
+        }
+        // missing entries stay exactly zero
+        for (i, &m) in mask.data().iter().enumerate() {
+            if m == 0.0 {
+                assert_eq!(x[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn operator_is_symmetric() {
+        let (k1, k2, mask) = setup(5, 6, 11);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 0.05);
+        let mut rng = Pcg64::new(12);
+        let u = rng.normal_vec(30);
+        let v = rng.normal_vec(30);
+        let mut au = vec![0.0; 30];
+        let mut av = vec![0.0; 30];
+        op.apply_batch(&u, &mut au, 1);
+        op.apply_batch(&v, &mut av, 1);
+        let uav = crate::linalg::matrix::dot(&u, &av);
+        let vau = crate::linalg::matrix::dot(&v, &au);
+        assert!((uav - vau).abs() < 1e-9);
+    }
+}

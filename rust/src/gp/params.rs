@@ -1,0 +1,154 @@
+//! Model parameters: packing, constraints, priors (paper §B).
+//!
+//! The unconstrained vector layout matches the L2 jax graphs exactly
+//! (python/compile/model.py), so the same theta can be fed to either
+//! engine:
+//!
+//! ```text
+//! theta = [ log ls_1 .. log ls_d, log ls_t, log outputscale, log sigma2 ]
+//! ```
+//!
+//! d + 3 free parameters — 10 for LCBench's d = 7, as the paper highlights.
+
+/// Log-normal prior std for RBF lengthscales (Hvarfner et al., 2024).
+pub const LS_PRIOR_STD: f64 = 1.732_050_807_568_877_2; // sqrt(3)
+/// Log-normal prior on the noise variance: logN(-4, 1).
+pub const NOISE_PRIOR_MEAN: f64 = -4.0;
+pub const NOISE_PRIOR_STD: f64 = 1.0;
+
+/// Unpacked, positively-constrained view of the parameter vector.
+#[derive(Clone, Debug)]
+pub struct Theta {
+    /// ARD lengthscales over hyper-parameters, length d.
+    pub lengthscales: Vec<f64>,
+    /// Matern-1/2 lengthscale over progression.
+    pub t_lengthscale: f64,
+    /// Matern-1/2 outputscale (signal variance of the product kernel).
+    pub outputscale: f64,
+    /// Homoskedastic noise variance.
+    pub sigma2: f64,
+}
+
+impl Theta {
+    /// Number of hyper-parameter dimensions for a packed vector length.
+    pub fn dim_of(packed_len: usize) -> usize {
+        packed_len
+            .checked_sub(3)
+            .expect("theta vector must have at least 3 entries")
+    }
+
+    /// Unpack an unconstrained vector (exp constraint).
+    pub fn unpack(packed: &[f64]) -> Theta {
+        let d = Self::dim_of(packed.len());
+        Theta {
+            lengthscales: packed[..d].iter().map(|v| v.exp()).collect(),
+            t_lengthscale: packed[d].exp(),
+            outputscale: packed[d + 1].exp(),
+            sigma2: packed[d + 2].exp(),
+        }
+    }
+
+    /// Pack back to the unconstrained layout.
+    pub fn pack(&self) -> Vec<f64> {
+        let mut out: Vec<f64> = self.lengthscales.iter().map(|v| v.ln()).collect();
+        out.push(self.t_lengthscale.ln());
+        out.push(self.outputscale.ln());
+        out.push(self.sigma2.ln());
+        out
+    }
+
+    /// Prior-mean initialization (matches `model.default_theta`).
+    pub fn default_packed(d: usize) -> Vec<f64> {
+        let mu_ls = 2f64.sqrt() + 0.5 * (d as f64).ln();
+        let mut out = vec![mu_ls; d];
+        out.push(0.3f64.ln());
+        out.push(0.0);
+        out.push(NOISE_PRIOR_MEAN);
+        out
+    }
+}
+
+/// Lengthscale prior mean for dimension count d.
+pub fn ls_prior_mean(d: usize) -> f64 {
+    2f64.sqrt() + 0.5 * (d as f64).ln()
+}
+
+/// MAP penalty: log p(lengthscales) + log p(noise) (log-normal densities,
+/// paper §B; t-lengthscale and outputscale carry no prior).
+pub fn log_prior(packed: &[f64]) -> f64 {
+    let d = Theta::dim_of(packed.len());
+    let mu = ls_prior_mean(d);
+    let mut lp = 0.0;
+    for &log_ls in &packed[..d] {
+        let z = (log_ls - mu) / LS_PRIOR_STD;
+        lp += -log_ls - 0.5 * z * z;
+    }
+    let log_s2 = packed[d + 2];
+    let zn = (log_s2 - NOISE_PRIOR_MEAN) / NOISE_PRIOR_STD;
+    lp += -log_s2 - 0.5 * zn * zn;
+    lp
+}
+
+/// Gradient of [`log_prior`] w.r.t. the packed (log-space) parameters.
+pub fn log_prior_grad(packed: &[f64]) -> Vec<f64> {
+    let d = Theta::dim_of(packed.len());
+    let mu = ls_prior_mean(d);
+    let mut g = vec![0.0; packed.len()];
+    for (i, &log_ls) in packed[..d].iter().enumerate() {
+        g[i] = -1.0 - (log_ls - mu) / (LS_PRIOR_STD * LS_PRIOR_STD);
+    }
+    let log_s2 = packed[d + 2];
+    g[d + 2] = -1.0 - (log_s2 - NOISE_PRIOR_MEAN) / (NOISE_PRIOR_STD * NOISE_PRIOR_STD);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let packed = vec![0.1, -0.5, 1.2, 0.3, -0.2, -3.5];
+        let theta = Theta::unpack(&packed);
+        assert_eq!(theta.lengthscales.len(), 3);
+        let back = theta.pack();
+        for (a, b) in packed.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn default_has_ten_params_for_lcbench() {
+        assert_eq!(Theta::default_packed(7).len(), 10);
+    }
+
+    #[test]
+    fn prior_grad_matches_fd() {
+        let packed = vec![0.3, -0.1, 0.7, 0.2, 0.4, -3.0];
+        let g = log_prior_grad(&packed);
+        let h = 1e-6;
+        for i in 0..packed.len() {
+            let mut p1 = packed.clone();
+            let mut p2 = packed.clone();
+            p1[i] += h;
+            p2[i] -= h;
+            let fd = (log_prior(&p1) - log_prior(&p2)) / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-6, "i={i} g={} fd={}", g[i], fd);
+        }
+    }
+
+    #[test]
+    fn prior_peaks_at_mean() {
+        let d = 4;
+        // with the -log ls Jacobian term the mode of logN in log-space is
+        // mu - sigma^2, so just check finite + decreasing away from mode.
+        let mu = ls_prior_mean(d) - LS_PRIOR_STD * LS_PRIOR_STD;
+        let mut at_mode = Theta::default_packed(d);
+        for v in at_mode.iter_mut().take(d) {
+            *v = mu;
+        }
+        let mut away = at_mode.clone();
+        away[0] += 5.0;
+        assert!(log_prior(&at_mode) > log_prior(&away));
+    }
+}

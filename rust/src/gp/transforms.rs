@@ -1,0 +1,225 @@
+//! Input/output transforms (paper §B).
+//!
+//! * hyper-parameters x -> unit hypercube (per-dimension min/max from the
+//!   training configs)
+//! * progression t -> log-spaced unit interval: (log t - log t_1) /
+//!   (log t_m - log t_1)
+//! * outputs Y -> subtract max over observed values, divide by their std
+//!
+//! The transforms are fit on training data and applied consistently at
+//! prediction time; `YTransform::undo_*` maps predictions and variances
+//! back to original units (needed for the paper's MSE/LLH metrics).
+
+use crate::linalg::Matrix;
+
+/// Per-dimension min/max normalizer to the unit hypercube.
+#[derive(Clone, Debug)]
+pub struct XTransform {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl XTransform {
+    /// Fit on training configs (rows = configs).
+    pub fn fit(x: &Matrix) -> Self {
+        let d = x.cols();
+        let mut lo = vec![f64::INFINITY; d];
+        let mut hi = vec![f64::NEG_INFINITY; d];
+        for i in 0..x.rows() {
+            for j in 0..d {
+                lo[j] = lo[j].min(x[(i, j)]);
+                hi[j] = hi[j].max(x[(i, j)]);
+            }
+        }
+        XTransform { lo, hi }
+    }
+
+    /// Apply: constant dimensions map to 0.5 (paper normalizes by range;
+    /// zero range would divide by zero).
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let (n, d) = (x.rows(), x.cols());
+        assert_eq!(d, self.lo.len());
+        let mut out = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                let range = self.hi[j] - self.lo[j];
+                out[(i, j)] = if range > 0.0 {
+                    ((x[(i, j)] - self.lo[j]) / range).clamp(-1.0, 2.0)
+                } else {
+                    0.5
+                };
+            }
+        }
+        out
+    }
+}
+
+/// Progression transform: log-spaced unit interval.
+#[derive(Clone, Debug)]
+pub struct TTransform {
+    log_t1: f64,
+    log_tm: f64,
+}
+
+impl TTransform {
+    /// Fit on the epoch grid (t must be positive and increasing).
+    pub fn fit(t: &[f64]) -> Self {
+        assert!(!t.is_empty());
+        assert!(t[0] > 0.0, "progression grid must be positive");
+        TTransform {
+            log_t1: t[0].ln(),
+            log_tm: t[t.len() - 1].ln(),
+        }
+    }
+
+    /// Apply to a grid.
+    pub fn apply(&self, t: &[f64]) -> Vec<f64> {
+        let denom = (self.log_tm - self.log_t1).max(1e-12);
+        t.iter().map(|&v| (v.ln() - self.log_t1) / denom).collect()
+    }
+}
+
+/// Output standardization: y' = (y - max) / std over observed entries.
+#[derive(Clone, Debug)]
+pub struct YTransform {
+    pub max: f64,
+    pub std: f64,
+}
+
+impl YTransform {
+    /// Fit over observed entries only (mask > 0).
+    pub fn fit(y: &Matrix, mask: &Matrix) -> Self {
+        let mut count = 0.0;
+        let mut sum = 0.0;
+        let mut max = f64::NEG_INFINITY;
+        for (v, m) in y.data().iter().zip(mask.data()) {
+            if *m > 0.0 {
+                count += 1.0;
+                sum += v;
+                max = max.max(*v);
+            }
+        }
+        let mean = if count > 0.0 { sum / count } else { 0.0 };
+        let mut var = 0.0;
+        for (v, m) in y.data().iter().zip(mask.data()) {
+            if *m > 0.0 {
+                var += (v - mean) * (v - mean);
+            }
+        }
+        let std = if count > 1.0 {
+            (var / count).sqrt().max(1e-12)
+        } else {
+            1.0
+        };
+        YTransform {
+            max: if max.is_finite() { max } else { 0.0 },
+            std,
+        }
+    }
+
+    /// Standardize (missing entries forced to exactly 0 so they're inert
+    /// in the masked operator).
+    pub fn apply(&self, y: &Matrix, mask: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(y.rows(), y.cols());
+        for i in 0..y.rows() {
+            for j in 0..y.cols() {
+                out[(i, j)] = if mask[(i, j)] > 0.0 {
+                    (y[(i, j)] - self.max) / self.std
+                } else {
+                    0.0
+                };
+            }
+        }
+        out
+    }
+
+    /// Map a standardized prediction back to original units.
+    pub fn undo_mean(&self, v: f64) -> f64 {
+        v * self.std + self.max
+    }
+
+    /// Map a standardized variance back to original units.
+    pub fn undo_var(&self, v: f64) -> f64 {
+        v * self.std * self.std
+    }
+
+    /// Log-likelihood correction: log p_orig(y) = log p_std(y') - log std.
+    pub fn llh_correction(&self) -> f64 {
+        -self.std.ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x_maps_to_unit_cube() {
+        let x = Matrix::from_vec(3, 2, vec![1.0, 10.0, 3.0, 20.0, 2.0, 15.0]);
+        let tf = XTransform::fit(&x);
+        let z = tf.apply(&x);
+        assert_eq!(z[(0, 0)], 0.0);
+        assert_eq!(z[(1, 0)], 1.0);
+        assert_eq!(z[(2, 0)], 0.5);
+        assert_eq!(z[(0, 1)], 0.0);
+        assert_eq!(z[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn x_constant_dim_maps_to_half() {
+        let x = Matrix::from_vec(2, 1, vec![5.0, 5.0]);
+        let tf = XTransform::fit(&x);
+        let z = tf.apply(&x);
+        assert_eq!(z[(0, 0)], 0.5);
+        assert_eq!(z[(1, 0)], 0.5);
+    }
+
+    #[test]
+    fn t_log_spacing() {
+        let t: Vec<f64> = (1..=52).map(|v| v as f64).collect();
+        let tf = TTransform::fit(&t);
+        let z = tf.apply(&t);
+        assert_eq!(z[0], 0.0);
+        assert!((z[51] - 1.0).abs() < 1e-14);
+        // log spacing: early epochs spread wider than late ones
+        assert!(z[1] - z[0] > z[51] - z[50]);
+    }
+
+    #[test]
+    fn y_standardization_properties() {
+        let y = Matrix::from_vec(2, 3, vec![0.5, 0.7, 0.9, 0.2, 0.4, 0.0]);
+        let mask = Matrix::from_vec(2, 3, vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.0]);
+        let tf = YTransform::fit(&y, &mask);
+        let z = tf.apply(&y, &mask);
+        // max maps to 0, everything else negative
+        let mut max_seen = f64::NEG_INFINITY;
+        for (v, m) in z.data().iter().zip(mask.data()) {
+            if *m > 0.0 {
+                max_seen = max_seen.max(*v);
+                assert!(*v <= 1e-12);
+            }
+        }
+        assert!(max_seen.abs() < 1e-12);
+        // masked entry exactly zero
+        assert_eq!(z[(1, 2)], 0.0);
+        // roundtrip
+        assert!((tf.undo_mean(z[(0, 1)]) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn y_degenerate_single_observation() {
+        let y = Matrix::from_vec(1, 2, vec![0.3, 0.0]);
+        let mask = Matrix::from_vec(1, 2, vec![1.0, 0.0]);
+        let tf = YTransform::fit(&y, &mask);
+        let z = tf.apply(&y, &mask);
+        assert!(z[(0, 0)].is_finite());
+    }
+
+    #[test]
+    fn llh_correction_is_neg_log_std() {
+        let y = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let mask = Matrix::from_vec(1, 4, vec![1.0; 4]);
+        let tf = YTransform::fit(&y, &mask);
+        assert!((tf.llh_correction() + tf.std.ln()).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,417 @@
+//! LCBench-like learning-curve workload simulator (+ loader for real dumps).
+//!
+//! The paper's quality experiment (Figure 4) uses LCBench [Zimmer et al.,
+//! 2021]: for each task, 2000 MLP configurations over a d = 7 hyper-
+//! parameter space, each trained for 52 epochs, recording validation
+//! accuracy per epoch. The real dump is not available offline, so this
+//! module generates synthetic tasks with the same interface and the curve
+//! families LCBench exhibits (DESIGN.md §Substitutions):
+//!
+//! * saturating power-law growth `acc(t) = a_inf - (a_inf - a_0)(1+t/tau)^-beta`
+//! * hyper-parameter-dependent asymptote / speed / start (so curves are
+//!   correlated across configs — exactly what LKGP exploits and per-curve
+//!   baselines cannot)
+//! * heteroskedastic observation noise, occasional spikes, and a
+//!   divergence regime for extreme learning rates (Figure 1 right)
+//!
+//! If a real LCBench JSON dump is available, [`Task::load_json`] accepts
+//! `{"configs": [[f64; d]], "curves": [[f64; m]]}` and everything
+//! downstream is identical.
+
+use crate::gp::lkgp::Dataset;
+use crate::gp::transforms::{TTransform, XTransform, YTransform};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Number of epochs in LCBench curves.
+pub const EPOCHS: usize = 52;
+/// Hyper-parameter dimensions (LCBench: batch size, lr, momentum, weight
+/// decay, #layers, #units, dropout).
+pub const DIMS: usize = 7;
+
+/// Task presets mimicking the three LCBench tasks in the paper's Figure 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// High-accuracy image task (Fashion-MNIST-like): fast saturation.
+    FashionMnist,
+    /// Tabular task with modest accuracy ceiling (airlines-like).
+    Airlines,
+    /// Mid-accuracy, slower curves, noisier (higgs-like).
+    Higgs,
+}
+
+impl Preset {
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::FashionMnist => "fashion_mnist",
+            Preset::Airlines => "airlines",
+            Preset::Higgs => "higgs",
+        }
+    }
+
+    pub fn all() -> [Preset; 3] {
+        [Preset::FashionMnist, Preset::Airlines, Preset::Higgs]
+    }
+
+    /// (base accuracy floor, asymptote center, asymptote spread, noise)
+    fn params(self) -> (f64, f64, f64, f64) {
+        match self {
+            Preset::FashionMnist => (0.10, 0.89, 0.06, 0.004),
+            Preset::Airlines => (0.50, 0.63, 0.04, 0.006),
+            Preset::Higgs => (0.45, 0.71, 0.05, 0.009),
+        }
+    }
+}
+
+/// A learning-curve prediction task: configs + full ground-truth curves.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: String,
+    /// (n, d) raw hyper-parameter configurations.
+    pub configs: Matrix,
+    /// (n, m) full learning curves (ground truth).
+    pub curves: Matrix,
+    /// Raw epoch grid 1..=m.
+    pub epochs: Vec<f64>,
+}
+
+impl Task {
+    /// Generate a synthetic task with `n` configurations.
+    pub fn generate(preset: Preset, n: usize, rng: &mut Pcg64) -> Task {
+        let (floor, a_center, a_spread, noise) = preset.params();
+        let d = DIMS;
+        let mut configs = Matrix::zeros(n, d);
+        let mut curves = Matrix::zeros(n, EPOCHS);
+        for i in 0..n {
+            // raw hyper-parameters in plausible LCBench ranges
+            let log_lr = rng.uniform_in(-4.0, -1.0); // log10 lr
+            let batch = rng.uniform_in(4.0, 9.0); // log2 batch
+            let momentum = rng.uniform_in(0.1, 0.99);
+            let weight_decay = rng.uniform_in(-5.0, -2.0); // log10
+            let layers = rng.uniform_in(1.0, 5.0);
+            let units = rng.uniform_in(4.0, 10.0); // log2
+            let dropout = rng.uniform_in(0.0, 0.8);
+            let row = [log_lr, batch, momentum, weight_decay, layers, units, dropout];
+            configs.row_mut(i).copy_from_slice(&row);
+
+            // hyper-parameter -> curve shape (smooth, correlated)
+            let lr_quality = 1.0 - ((log_lr + 2.5) / 1.5).powi(2); // peak at 1e-2.5
+            let cap_quality = 0.5 * ((units - 7.0) / 3.0).tanh()
+                + 0.3 * ((layers - 3.0) / 2.0).tanh()
+                - 0.4 * (dropout - 0.4).powi(2);
+            let reg_quality = -0.2 * ((weight_decay + 3.5) / 1.5).powi(2);
+            let quality =
+                (0.6 * lr_quality + 0.3 * cap_quality + 0.1 * reg_quality).clamp(-2.0, 1.0);
+            let a_inf = (a_center + a_spread * quality).min(0.999);
+            let a_0 = floor + 0.05 * rng.uniform();
+            // speed: higher lr + higher momentum converge faster
+            let tau = (8.0 * (1.0 - momentum * 0.5) * (10f64).powf(-(log_lr + 4.0) / 3.0) + 1.0)
+                .clamp(0.8, 30.0);
+            let beta = rng.uniform_in(0.7, 1.6);
+            // divergence regime: very high lr degrades mid-training
+            // (gradual, as in LCBench — not a cliff to zero)
+            let diverges = log_lr > -1.35 && rng.uniform() < 0.4;
+            let diverge_at = 5.0 + 30.0 * rng.uniform();
+            let diverge_rate = rng.uniform_in(0.002, 0.008);
+            // spiky curves (Figure 1 right): a few configs get heavy noise
+            let spiky = rng.uniform() < 0.08;
+
+            for j in 0..EPOCHS {
+                let t = (j + 1) as f64;
+                let mut acc = a_inf - (a_inf - a_0) * (1.0 + t / tau).powf(-beta);
+                if diverges && t > diverge_at {
+                    let drop = diverge_rate * (t - diverge_at);
+                    acc = (acc - drop).max(0.6 * a_inf);
+                }
+                let mut eps = noise * rng.normal();
+                if spiky && rng.uniform() < 0.12 {
+                    eps += rng.normal() * 0.05;
+                }
+                curves[(i, j)] = (acc + eps).clamp(0.0, 1.0);
+            }
+        }
+        Task {
+            name: preset.name().to_string(),
+            configs,
+            curves,
+            epochs: (1..=EPOCHS).map(|e| e as f64).collect(),
+        }
+    }
+
+    /// Load a real LCBench-style dump: `{"configs": [[..]], "curves": [[..]]}`.
+    pub fn load_json(name: &str, text: &str) -> crate::Result<Task> {
+        let doc = crate::json::Json::parse(text)?;
+        let rows = |key: &str| -> crate::Result<Vec<Vec<f64>>> {
+            doc.get(key)
+                .and_then(crate::json::Json::as_arr)
+                .ok_or_else(|| crate::LkgpError::Manifest(format!("missing {key}")))?
+                .iter()
+                .map(|r| {
+                    r.as_arr()
+                        .ok_or_else(|| crate::LkgpError::Manifest("row not array".into()))
+                        .map(|xs| xs.iter().filter_map(crate::json::Json::as_f64).collect())
+                })
+                .collect()
+        };
+        let configs = rows("configs")?;
+        let curves = rows("curves")?;
+        if configs.is_empty() || configs.len() != curves.len() {
+            return Err(crate::LkgpError::Manifest("configs/curves mismatch".into()));
+        }
+        let (n, d, m) = (configs.len(), configs[0].len(), curves[0].len());
+        let mut cm = Matrix::zeros(n, d);
+        let mut vm = Matrix::zeros(n, m);
+        for i in 0..n {
+            cm.row_mut(i).copy_from_slice(&configs[i]);
+            vm.row_mut(i).copy_from_slice(&curves[i]);
+        }
+        Ok(Task {
+            name: name.to_string(),
+            configs: cm,
+            curves: vm,
+            epochs: (1..=m).map(|e| e as f64).collect(),
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.configs.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.epochs.len()
+    }
+}
+
+/// A partially observed view of a task: the Figure-4 protocol.
+///
+/// `lengths[i]` epochs of curve i are observed (prefix). Targets are the
+/// final-epoch values of the partially observed curves.
+#[derive(Clone, Debug)]
+pub struct PartialView {
+    /// Indices of the drawn configs within the task.
+    pub config_idx: Vec<usize>,
+    /// Observed prefix length per drawn config (>= 1).
+    pub lengths: Vec<usize>,
+}
+
+impl PartialView {
+    /// Draw a view with ~`budget` total observed values across `k` curves
+    /// (ifBO §5.1 protocol: random curves, random cutoffs).
+    pub fn sample(task: &Task, k: usize, budget: usize, rng: &mut Pcg64) -> PartialView {
+        let k = k.min(task.n());
+        let config_idx = rng.sample_indices(task.n(), k);
+        // random cutoffs, then rescale to hit the budget approximately
+        let mut lengths: Vec<usize> = (0..k).map(|_| 1 + rng.below(task.m() - 1)).collect();
+        let total: usize = lengths.iter().sum();
+        let scale = budget as f64 / total as f64;
+        for len in lengths.iter_mut() {
+            *len = ((*len as f64 * scale).round() as usize).clamp(1, task.m() - 1);
+        }
+        PartialView { config_idx, lengths }
+    }
+
+    /// Total observed values.
+    pub fn observed(&self) -> usize {
+        self.lengths.iter().sum()
+    }
+}
+
+/// Everything the engines need for one quality-experiment instance, in
+/// model space, plus the transforms to undo predictions.
+pub struct ModelProblem {
+    pub data: Dataset,
+    pub xq: Matrix,
+    /// Final-epoch ground truth per query (original units).
+    pub targets: Vec<f64>,
+    pub ytf: YTransform,
+}
+
+/// Build the model-space problem for a partial view: train on the observed
+/// prefixes, query the *same* configs' final values (the paper's task).
+pub fn build_problem(task: &Task, view: &PartialView) -> ModelProblem {
+    let k = view.config_idx.len();
+    let m = task.m();
+    let mut xraw = Matrix::zeros(k, task.configs.cols());
+    let mut y = Matrix::zeros(k, m);
+    let mut mask = Matrix::zeros(k, m);
+    let mut targets = Vec::with_capacity(k);
+    for (row, (&ci, &len)) in view.config_idx.iter().zip(&view.lengths).enumerate() {
+        xraw.row_mut(row).copy_from_slice(task.configs.row(ci));
+        for j in 0..len.min(m) {
+            y[(row, j)] = task.curves[(ci, j)];
+            mask[(row, j)] = 1.0;
+        }
+        targets.push(task.curves[(ci, m - 1)]);
+    }
+    let xtf = XTransform::fit(&xraw);
+    let x = xtf.apply(&xraw);
+    let ttf = TTransform::fit(&task.epochs);
+    let t = ttf.apply(&task.epochs);
+    let ytf = YTransform::fit(&y, &mask);
+    let ys = ytf.apply(&y, &mask);
+    let xq = x.clone(); // query = the same (normalized) configs
+    ModelProblem {
+        data: Dataset { x, t, y: ys, mask },
+        xq,
+        targets,
+        ytf,
+    }
+}
+
+/// Small synthetic dataset in model space (tests, smoke commands).
+pub fn toy_dataset(n: usize, m: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1).max(1) as f64).collect();
+    let mut mask = Matrix::zeros(n, m);
+    for i in 0..n {
+        let len = 2 + rng.below(m - 1);
+        for j in 0..len {
+            mask[(i, j)] = 1.0;
+        }
+    }
+    let mut y = Matrix::zeros(n, m);
+    for i in 0..n {
+        let a = rng.uniform_in(0.5, 1.0);
+        for j in 0..m {
+            if mask[(i, j)] > 0.0 {
+                y[(i, j)] = -a * (-3.0 * t[j]).exp() + 0.02 * rng.normal();
+            }
+        }
+    }
+    Dataset { x, t, y, mask }
+}
+
+/// The paper's Figure-3 protocol (§C): X ~ U[0,1]^{n x 10},
+/// Y ~ N(0, 1)^{n x m}, t linear on [0, 1], no missing data.
+pub fn fig3_dataset(size: usize, rng: &mut Pcg64) -> Dataset {
+    let (n, m, d) = (size, size, 10);
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1).max(1) as f64).collect();
+    let y = Matrix::from_vec(n, m, rng.normal_vec(n * m));
+    let mask = Matrix::from_fn(n, m, |_, _| 1.0);
+    Dataset { x, t, y, mask }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_ranges() {
+        let mut rng = Pcg64::new(1);
+        let task = Task::generate(Preset::FashionMnist, 50, &mut rng);
+        assert_eq!(task.n(), 50);
+        assert_eq!(task.m(), EPOCHS);
+        for v in task.curves.data() {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn curves_mostly_improve() {
+        let mut rng = Pcg64::new(2);
+        let task = Task::generate(Preset::FashionMnist, 100, &mut rng);
+        let mut improving = 0;
+        for i in 0..100 {
+            if task.curves[(i, EPOCHS - 1)] > task.curves[(i, 0)] {
+                improving += 1;
+            }
+        }
+        assert!(improving > 75, "{improving}");
+    }
+
+    #[test]
+    fn presets_have_distinct_accuracy_levels() {
+        let mut rng = Pcg64::new(3);
+        let fm = Task::generate(Preset::FashionMnist, 80, &mut rng);
+        let air = Task::generate(Preset::Airlines, 80, &mut rng);
+        let mean_final = |t: &Task| -> f64 {
+            (0..t.n()).map(|i| t.curves[(i, EPOCHS - 1)]).sum::<f64>() / t.n() as f64
+        };
+        assert!(mean_final(&fm) > mean_final(&air) + 0.1);
+    }
+
+    #[test]
+    fn hyperparams_correlate_with_outcome() {
+        // The simulator must create config->curve correlation for the
+        // joint GP to exploit: check lr quality effect.
+        let mut rng = Pcg64::new(4);
+        let task = Task::generate(Preset::FashionMnist, 300, &mut rng);
+        let (mut good, mut bad) = (vec![], vec![]);
+        for i in 0..task.n() {
+            let lr = task.configs[(i, 0)];
+            let fin = task.curves[(i, EPOCHS - 1)];
+            if (lr + 2.5).abs() < 0.4 {
+                good.push(fin);
+            } else if lr > -1.4 {
+                bad.push(fin);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(mean(&good) > mean(&bad) + 0.02, "{} vs {}", mean(&good), mean(&bad));
+    }
+
+    #[test]
+    fn partial_view_budget_roughly_met() {
+        let mut rng = Pcg64::new(5);
+        let task = Task::generate(Preset::Higgs, 100, &mut rng);
+        let view = PartialView::sample(&task, 20, 300, &mut rng);
+        let obs = view.observed();
+        assert!((150..=450).contains(&obs), "{obs}");
+        for &l in &view.lengths {
+            assert!(l >= 1 && l < task.m());
+        }
+    }
+
+    #[test]
+    fn build_problem_is_consistent() {
+        let mut rng = Pcg64::new(6);
+        let task = Task::generate(Preset::Airlines, 60, &mut rng);
+        let view = PartialView::sample(&task, 12, 200, &mut rng);
+        let prob = build_problem(&task, &view);
+        assert_eq!(prob.data.n(), 12);
+        assert_eq!(prob.data.m(), EPOCHS);
+        assert_eq!(prob.xq.rows(), 12);
+        assert_eq!(prob.targets.len(), 12);
+        prob.data.check().unwrap();
+        // mask is prefix per row and matches lengths
+        for (row, &len) in view.lengths.iter().enumerate() {
+            for j in 0..EPOCHS {
+                assert_eq!(prob.data.mask[(row, j)] > 0.0, j < len);
+            }
+        }
+        // y standardized: max over observed == 0
+        let max_obs = prob
+            .data
+            .y
+            .data()
+            .iter()
+            .zip(prob.data.mask.data())
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(v, _)| *v)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(max_obs.abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let text = r#"{"configs": [[0.1, 0.2], [0.3, 0.4]],
+                       "curves": [[0.5, 0.6, 0.7], [0.4, 0.5, 0.55]]}"#;
+        let task = Task::load_json("custom", text).unwrap();
+        assert_eq!(task.n(), 2);
+        assert_eq!(task.m(), 3);
+        assert_eq!(task.curves[(1, 2)], 0.55);
+        assert!(Task::load_json("bad", "{\"configs\": []}").is_err());
+    }
+
+    #[test]
+    fn fig3_protocol_shapes() {
+        let mut rng = Pcg64::new(7);
+        let data = fig3_dataset(16, &mut rng);
+        assert_eq!(data.n(), 16);
+        assert_eq!(data.m(), 16);
+        assert_eq!(data.d(), 10);
+        assert_eq!(data.n_obs(), 256.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! # lkgp — Latent Kronecker Gaussian Processes for learning curve prediction
+//!
+//! Reproduction of *"Scaling Gaussian Processes for Learning Curve
+//! Prediction via Latent Kronecker Structure"* (Lin, Ament, Balandat,
+//! Bakshy; 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build-time python)** — Pallas kernels + JAX LKGP graphs,
+//!   AOT-lowered to HLO text artifacts (`python/compile/`, `artifacts/`).
+//! * **runtime** — loads the artifacts via the PJRT C API (`xla` crate)
+//!   and executes them from rust; no Python on the request path.
+//! * **L3 (this crate)** — the AutoML coordinator the paper motivates:
+//!   trial registry, learning-curve store, batched prediction service and
+//!   freeze-thaw scheduling, plus a pure-rust mirror of the GP engine, the
+//!   naive dense baseline, an LCBench-like workload simulator, baseline
+//!   predictors, and the benchmark harness that regenerates the paper's
+//!   figures.
+//!
+//! Entry points:
+//! * [`gp::lkgp`] — the Latent Kronecker GP engine (train / predict /
+//!   sample via iterative methods).
+//! * [`runtime`] — artifact-backed engine with rust fallback.
+//! * [`coordinator`] — the freeze-thaw AutoML service.
+//! * `examples/` — quickstart, Figure-1 extrapolation, end-to-end AutoML
+//!   loop, Figure-3 scaling driver.
+
+pub mod baselines;
+pub mod bench_util;
+pub mod coordinator;
+pub mod error;
+pub mod gp;
+pub mod json;
+pub mod lcbench;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+
+pub use error::{LkgpError, Result};

@@ -1,0 +1,194 @@
+//! Dense Cholesky factorization and triangular solves.
+//!
+//! Used by (a) the naive O(n^3 m^3) joint-covariance engine that is the
+//! paper's Figure-3 baseline, and (b) the Kronecker-factor Cholesky in
+//! Matheron prior sampling (O(n^3 + m^3), paper §2).
+
+use super::Matrix;
+use crate::error::{LkgpError, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+///
+/// Right-looking, row-major friendly. Returns an error (not NaNs) when the
+/// matrix is not positive definite, which the trainers treat as a rejected
+/// step.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(LkgpError::Shape(format!(
+            "cholesky needs square, got {}x{}",
+            n,
+            a.cols()
+        )));
+    }
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // dot over the first j entries of rows i and j.
+            let s = super::matrix::dot(&l.row(i)[..j], &l.row(j)[..j]);
+            if i == j {
+                let d = a[(i, i)] - s;
+                if d <= 0.0 || !d.is_finite() {
+                    return Err(LkgpError::NotPd { index: i, value: d });
+                }
+                l[(i, j)] = d.sqrt();
+            } else {
+                l[(i, j)] = (a[(i, j)] - s) / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L x = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let s = super::matrix::dot(&l.row(i)[..i], &x[..i]);
+        x[i] = (x[i] - s) / l[(i, i)];
+    }
+    x
+}
+
+/// Solve L^T x = b (backward substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = 0.0;
+        for k in i + 1..n {
+            s += l[(k, i)] * x[k];
+        }
+        x[i] = (x[i] - s) / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b given the Cholesky factor L (A = L L^T).
+pub fn chol_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// log det A from its Cholesky factor.
+pub fn chol_logdet(l: &Matrix) -> f64 {
+    let n = l.rows();
+    let mut s = 0.0;
+    for i in 0..n {
+        s += l[(i, i)].ln();
+    }
+    2.0 * s
+}
+
+/// Sample from N(0, A) given L: returns L z for z ~ N(0, I).
+pub fn chol_sample(l: &Matrix, z: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(z.len(), n);
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        out[i] = super::matrix::dot(&l.row(i)[..=i], &z[..=i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let mut spd = a.matmul(&a.transpose());
+        spd.add_diag(n as f64);
+        spd
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        for n in [1, 2, 5, 20, 50] {
+            let a = random_spd(n, n as u64);
+            let l = cholesky(&a).unwrap();
+            let rec = l.matmul(&l.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let n = 30;
+        let a = random_spd(n, 7);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Pcg64::new(8);
+        let b = rng.normal_vec(n);
+        let x = chol_solve(&l, &b);
+        let back = a.matvec(&x);
+        for i in 0..n {
+            assert!((back[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_product() {
+        let a = random_spd(12, 3);
+        let l = cholesky(&a).unwrap();
+        // compare against sum of log eigenvalues via jacobi
+        let (evals, _) = super::super::eigh::jacobi_eigh(&a, 40);
+        let want: f64 = evals.iter().map(|e| e.ln()).sum();
+        assert!((chol_logdet(&l) - want).abs() < 1e-8);
+    }
+
+    #[test]
+    fn rejects_non_pd() {
+        let mut a = Matrix::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = Matrix::zeros(3, 4);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves_consistent() {
+        let n = 15;
+        let a = random_spd(n, 11);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Pcg64::new(12);
+        let b = rng.normal_vec(n);
+        let y = solve_lower(&l, &b);
+        let back = l.matvec(&y);
+        for i in 0..n {
+            assert!((back[i] - b[i]).abs() < 1e-9);
+        }
+        let x = solve_lower_t(&l, &b);
+        let back_t = l.transpose().matvec(&x);
+        for i in 0..n {
+            assert!((back_t[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sample_covariance_converges() {
+        let n = 4;
+        let a = random_spd(n, 21);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Pcg64::new(22);
+        let s = 30000;
+        let mut cov = Matrix::zeros(n, n);
+        for _ in 0..s {
+            let x = chol_sample(&l, &rng.normal_vec(n));
+            for i in 0..n {
+                for j in 0..n {
+                    cov[(i, j)] += x[i] * x[j] / s as f64;
+                }
+            }
+        }
+        let scale = a.fro_norm();
+        assert!(cov.max_abs_diff(&a) / scale < 0.05);
+    }
+}

@@ -1,0 +1,166 @@
+//! Symmetric eigensolver (cyclic Jacobi).
+//!
+//! Sized for the small matrices the GP stack diagonalizes: Lanczos
+//! tridiagonals (k <= ~32) in stochastic Lanczos quadrature, and test
+//! oracles. O(k^3) per sweep, converges quadratically; a handful of sweeps
+//! suffices at these sizes.
+
+use super::Matrix;
+
+/// Eigen-decomposition of a symmetric matrix by cyclic Jacobi rotations.
+///
+/// Returns (eigenvalues, eigenvectors as columns). Eigenvalues are NOT
+/// sorted (callers that need order sort by value).
+pub fn jacobi_eigh(a: &Matrix, max_sweeps: usize) -> (Vec<f64>, Matrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "jacobi_eigh needs square");
+    let mut a = a.clone();
+    let mut v = Matrix::eye(n);
+
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in p + 1..n {
+                off += a[(p, q)] * a[(p, q)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + a.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let (app, aqq) = (a[(p, p)], a[(q, q)]);
+                let theta = 0.5 * (2.0 * apq).atan2(aqq - app);
+                let (s, c) = theta.sin_cos();
+                // A <- G^T A G, G rotates plane (p, q).
+                for k in 0..n {
+                    let (akp, akq) = (a[(k, p)], a[(k, q)]);
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let (apk, aqk) = (a[(p, k)], a[(q, k)]);
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let (vkp, vkq) = (v[(k, p)], v[(k, q)]);
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let evals = (0..n).map(|i| a[(i, i)]).collect();
+    (evals, v)
+}
+
+/// Eigendecomposition of a symmetric tridiagonal given diagonal `alpha` and
+/// off-diagonal `beta` (used by SLQ on the Lanczos T matrix).
+pub fn tridiag_eigh(alpha: &[f64], beta: &[f64]) -> (Vec<f64>, Matrix) {
+    let k = alpha.len();
+    debug_assert!(beta.len() + 1 == k || (k == 0 && beta.is_empty()));
+    let mut t = Matrix::zeros(k, k);
+    for i in 0..k {
+        t[(i, i)] = alpha[i];
+        if i + 1 < k {
+            t[(i, i + 1)] = beta[i];
+            t[(i + 1, i)] = beta[i];
+        }
+    }
+    jacobi_eigh(&t, 30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn diagonal_is_fixed_point() {
+        let mut d = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            d[(i, i)] = (i + 1) as f64;
+        }
+        let (mut evals, _) = jacobi_eigh(&d, 10);
+        evals.sort_by(f64::total_cmp);
+        assert_eq!(evals, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reconstructs_symmetric_matrix() {
+        let mut rng = Pcg64::new(1);
+        for n in [2, 5, 12, 24] {
+            let raw = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+            let mut sym = raw.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    sym[(i, j)] = 0.5 * (raw[(i, j)] + raw[(j, i)]);
+                }
+            }
+            let (evals, v) = jacobi_eigh(&sym, 30);
+            // reconstruct V diag(e) V^T
+            let mut vd = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vd[(i, j)] *= evals[j];
+                }
+            }
+            let rec = vd.matmul(&v.transpose());
+            assert!(rec.max_abs_diff(&sym) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Pcg64::new(2);
+        let n = 10;
+        let raw = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let sym_src = raw.matmul(&raw.transpose());
+        let (_, v) = jacobi_eigh(&sym_src, 30);
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.max_abs_diff(&Matrix::eye(n)) < 1e-10);
+    }
+
+    #[test]
+    fn tridiag_matches_dense() {
+        let alpha = vec![2.0, 3.0, 4.0, 5.0];
+        let beta = vec![0.5, 0.25, 0.75];
+        let (mut evals, _) = tridiag_eigh(&alpha, &beta);
+        evals.sort_by(f64::total_cmp);
+        let mut t = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            t[(i, i)] = alpha[i];
+        }
+        for i in 0..3 {
+            t[(i, i + 1)] = beta[i];
+            t[(i + 1, i)] = beta[i];
+        }
+        let (mut evals2, _) = jacobi_eigh(&t, 30);
+        evals2.sort_by(f64::total_cmp);
+        for (a, b) in evals.iter().zip(&evals2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn trace_and_logdet_preserved() {
+        let mut rng = Pcg64::new(5);
+        let n = 8;
+        let raw = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let mut spd = raw.matmul(&raw.transpose());
+        spd.add_diag(n as f64);
+        let (evals, _) = jacobi_eigh(&spd, 30);
+        let trace: f64 = (0..n).map(|i| spd[(i, i)]).sum();
+        assert!((evals.iter().sum::<f64>() - trace).abs() < 1e-9);
+        let l = super::super::cholesky::cholesky(&spd).unwrap();
+        let want = super::super::cholesky::chol_logdet(&l);
+        let got: f64 = evals.iter().map(|e| e.ln()).sum();
+        assert!((got - want).abs() < 1e-8);
+    }
+}

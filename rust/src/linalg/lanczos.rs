@@ -1,0 +1,226 @@
+//! Lanczos tridiagonalization and stochastic Lanczos quadrature (SLQ).
+//!
+//! SLQ estimates log det(A) of the masked latent-Kronecker operator from a
+//! handful of Rademacher probes: logdet(A) ~ (N / p) sum_i e1^T log(T_i) e1
+//! with T_i the Lanczos tridiagonal for probe z_i. This is the GPyTorch
+//! inference stack (Gardner et al. 2018) the paper builds on, rebuilt on
+//! our own operator/eigh substrate.
+
+use super::cg::LinOp;
+use super::eigh::tridiag_eigh;
+
+/// Lanczos tridiagonalization with full reorthogonalization.
+///
+/// Returns (alpha, beta): diagonal (k) and off-diagonal (k-1) of T_k.
+/// Full reorthogonalization is affordable at the k <= 32 Krylov sizes used
+/// for quadrature and keeps the Ritz values honest in double precision.
+pub fn lanczos(op: &dyn LinOp, z: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = op.len();
+    debug_assert_eq!(z.len(), n);
+    let k = k.min(n.max(1));
+
+    let znorm = super::matrix::dot(z, z).sqrt().max(1e-300);
+    let mut q: Vec<f64> = z.iter().map(|v| v / znorm).collect();
+    let mut q_prev = vec![0.0; n];
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut alphas = Vec::with_capacity(k);
+    let mut betas = Vec::with_capacity(k.saturating_sub(1));
+    let mut aq = vec![0.0; n];
+    let mut beta_prev = 0.0;
+
+    for i in 0..k {
+        op.apply_batch(&q, &mut aq, 1);
+        let alpha = super::matrix::dot(&q, &aq);
+        alphas.push(alpha);
+        if i + 1 == k {
+            break;
+        }
+        let mut w: Vec<f64> = (0..n)
+            .map(|j| aq[j] - alpha * q[j] - beta_prev * q_prev[j])
+            .collect();
+        basis.push(q.clone());
+        // Two rounds of classical Gram-Schmidt against the stored basis.
+        for _ in 0..2 {
+            for b in &basis {
+                let c = super::matrix::dot(b, &w);
+                super::matrix::axpy(-c, b, &mut w);
+            }
+        }
+        let beta = super::matrix::dot(&w, &w).sqrt();
+        if beta < 1e-12 {
+            // Invariant subspace exhausted: T is effectively (i+1)x(i+1).
+            break;
+        }
+        betas.push(beta);
+        q_prev = std::mem::replace(&mut q, w.iter().map(|v| v / beta).collect());
+        beta_prev = beta;
+    }
+
+    (alphas, betas)
+}
+
+/// SLQ estimate of log det(A) from `probes` (each a Rademacher vector).
+///
+/// `probes` is row-major (p, N). The estimate is for the FULL-space
+/// operator; callers subtract padding corrections (see gp::lkgp).
+pub fn slq_logdet(op: &dyn LinOp, probes: &[f64], k: usize) -> f64 {
+    let n = op.len();
+    let p = probes.len() / n;
+    assert!(p > 0, "need at least one probe");
+    let threads = crate::util::num_threads().min(p);
+    let quad_one = |z: &[f64]| -> f64 {
+        let (alphas, betas) = lanczos(op, z, k);
+        let (evals, evecs) = tridiag_eigh(&alphas, &betas);
+        let mut quad = 0.0;
+        for (j, &ev) in evals.iter().enumerate() {
+            let w = evecs[(0, j)] * evecs[(0, j)];
+            quad += w * ev.max(1e-300).ln();
+        }
+        quad
+    };
+    // Probes are independent Lanczos runs — parallelize across them
+    // (§Perf: the logdet estimate is ~40% of an MLL evaluation).
+    let total: f64 = if threads <= 1 || p == 1 {
+        (0..p).map(|pi| quad_one(&probes[pi * n..(pi + 1) * n])).sum()
+    } else {
+        let chunk = p.div_ceil(threads);
+        let partials = std::sync::Mutex::new(vec![0.0; threads]);
+        std::thread::scope(|scope| {
+            for ti in 0..threads {
+                let partials = &partials;
+                let quad_one = &quad_one;
+                scope.spawn(move || {
+                    crate::linalg::matrix::without_nested_parallelism(|| {
+                        let mut local = 0.0;
+                        for pi in (ti * chunk)..((ti + 1) * chunk).min(p) {
+                            local += quad_one(&probes[pi * n..(pi + 1) * n]);
+                        }
+                        partials.lock().unwrap()[ti] = local;
+                    });
+                });
+            }
+        });
+        partials.into_inner().unwrap().iter().sum()
+    };
+    n as f64 * total / p as f64
+}
+
+/// Hutchinson trace estimate of A (not A^{-1}): mean_i z_i^T A z_i.
+/// Exposed for ablation benches and tests.
+pub fn hutchinson_trace(op: &dyn LinOp, probes: &[f64]) -> f64 {
+    let n = op.len();
+    let p = probes.len() / n;
+    let mut az = vec![0.0; n];
+    let mut total = 0.0;
+    for pi in 0..p {
+        let z = &probes[pi * n..(pi + 1) * n];
+        op.apply_batch(z, &mut az, 1);
+        total += super::matrix::dot(z, &az);
+    }
+    total / p as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cg::DenseOp;
+    use crate::linalg::{cholesky, Matrix};
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let mut spd = a.matmul(&a.transpose());
+        spd.add_diag(n as f64 * 0.3);
+        spd
+    }
+
+    #[test]
+    fn lanczos_t_matches_rayleigh_quotients() {
+        let n = 20;
+        let a = random_spd(n, 1);
+        let mut rng = Pcg64::new(2);
+        let z = rng.normal_vec(n);
+        let (alphas, betas) = lanczos(&DenseOp(&a), &z, 8);
+        assert_eq!(alphas.len(), 8);
+        assert_eq!(betas.len(), 7);
+        // Ritz values lie within the spectrum bounds.
+        let (evals, _) = crate::linalg::eigh::jacobi_eigh(&a, 30);
+        let (lo, hi) = (
+            evals.iter().cloned().fold(f64::INFINITY, f64::min),
+            evals.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        );
+        let (ritz, _) = tridiag_eigh(&alphas, &betas);
+        for r in ritz {
+            assert!(r > lo - 1e-8 && r < hi + 1e-8);
+        }
+    }
+
+    #[test]
+    fn full_krylov_recovers_exact_logdet() {
+        let n = 12;
+        let a = random_spd(n, 3);
+        let l = cholesky::cholesky(&a).unwrap();
+        let want = cholesky::chol_logdet(&l);
+        let mut rng = Pcg64::new(4);
+        let probes = rng.rademacher_vec(n * 48);
+        let got = slq_logdet(&DenseOp(&a), &probes, n);
+        assert!(
+            (got - want).abs() / want.abs() < 0.05,
+            "got={got} want={want}"
+        );
+    }
+
+    #[test]
+    fn slq_tightens_with_probes() {
+        let n = 24;
+        let a = random_spd(n, 5);
+        let l = cholesky::cholesky(&a).unwrap();
+        let want = cholesky::chol_logdet(&l);
+        let mut errs = Vec::new();
+        for p in [4usize, 64] {
+            // average over independent probe draws to reduce flake
+            let mut err_sum = 0.0;
+            for s in 0..5 {
+                let mut rng = Pcg64::new(100 + s);
+                let probes = rng.rademacher_vec(n * p);
+                let got = slq_logdet(&DenseOp(&a), &probes, 16);
+                err_sum += (got - want).abs();
+            }
+            errs.push(err_sum / 5.0);
+        }
+        assert!(errs[1] <= errs[0] * 1.5, "errs={errs:?}");
+    }
+
+    #[test]
+    fn hutchinson_estimates_trace() {
+        let n = 16;
+        let a = random_spd(n, 7);
+        let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        let mut rng = Pcg64::new(8);
+        let probes = rng.rademacher_vec(n * 256);
+        let got = hutchinson_trace(&DenseOp(&a), &probes);
+        assert!((got - trace).abs() / trace < 0.1);
+    }
+
+    #[test]
+    fn identity_logdet_is_zero() {
+        let a = Matrix::eye(10);
+        let mut rng = Pcg64::new(9);
+        let probes = rng.rademacher_vec(10 * 4);
+        let got = slq_logdet(&DenseOp(&a), &probes, 6);
+        assert!(got.abs() < 1e-8);
+    }
+
+    #[test]
+    fn early_breakdown_handled() {
+        // Rank-deficient direction: operator with repeated eigenvalues makes
+        // Lanczos terminate early; must not panic and still be finite.
+        let mut a = Matrix::eye(8);
+        a.scale(2.0);
+        let mut rng = Pcg64::new(10);
+        let probes = rng.rademacher_vec(8 * 2);
+        let got = slq_logdet(&DenseOp(&a), &probes, 8);
+        assert!((got - 8.0 * 2f64.ln()).abs() < 1e-6);
+    }
+}

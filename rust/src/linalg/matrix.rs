@@ -1,0 +1,373 @@
+//! Dense row-major f64 matrix with the operations the GP stack needs.
+//!
+//! Deliberately minimal: no generic scalar, no views, no broadcasting — the
+//! engines work with explicit shapes and the hot paths (panel-parallel
+//! matmul, fused masked products) live here so they can be profiled and
+//! tuned in one place (EXPERIMENTS.md §Perf).
+
+use std::ops::{Index, IndexMut};
+
+use crate::metrics::alloc::note_alloc;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        note_alloc(rows * cols * 8);
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/buffer mismatch");
+        note_alloc(rows * cols * 8);
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// `self * other` — panel-parallel blocked matmul (the rust engine's
+    /// hot path; see `matmul_into` for the kernel).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// `out = self * other`, reusing `out`'s buffer.
+    ///
+    /// i-k-j loop order keeps the inner loop contiguous in both `other` and
+    /// `out` (auto-vectorizes); row panels are distributed over threads when
+    /// the product is big enough to amortize spawn cost.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols));
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let flops = 2.0 * n as f64 * k as f64 * m as f64;
+        let threads = crate::util::num_threads();
+        if nested_parallelism_disabled() || threads <= 1 || flops < 4e6 || n < 2 * threads {
+            matmul_panel(&self.data, &other.data, &mut out.data, 0, n, k, m);
+            return;
+        }
+        // Split rows into one panel per thread.
+        let chunk = n.div_ceil(threads);
+        let a = &self.data;
+        let b = &other.data;
+        let out_chunks: Vec<(usize, &mut [f64])> = out
+            .data
+            .chunks_mut(chunk * m)
+            .enumerate()
+            .map(|(ci, c)| (ci * chunk, c))
+            .collect();
+        std::thread::scope(|scope| {
+            for (row0, chunk_out) in out_chunks {
+                let rows = chunk_out.len() / m;
+                scope.spawn(move || {
+                    matmul_panel_slice(a, b, chunk_out, row0, rows, k, m);
+                });
+            }
+        });
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), v);
+        }
+        out
+    }
+
+    /// `self + scale * eye`.
+    pub fn add_diag(&mut self, scale: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += scale;
+        }
+    }
+
+    /// Elementwise addition in place.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+thread_local! {
+    static DISABLE_PAR: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// True when an outer parallel region disabled nested matmul threading.
+pub fn nested_parallelism_disabled() -> bool {
+    DISABLE_PAR.with(|f| f.get())
+}
+
+/// Run `f` with panel-parallel matmul disabled on this thread (used by
+/// outer parallel regions — batch-parallel CG, column-parallel inverse —
+/// to avoid thread oversubscription).
+pub fn without_nested_parallelism<T>(f: impl FnOnce() -> T) -> T {
+    DISABLE_PAR.with(|flag| {
+        let prev = flag.get();
+        flag.set(true);
+        let out = f();
+        flag.set(prev);
+        out
+    })
+}
+
+/// Dot product with 4-way unrolling (reliably vectorized by LLVM).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// axpy: y += a * x.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Row-panel matmul kernel: rows [row0, row0+rows) of out = A[those rows] * B.
+fn matmul_panel(a: &[f64], b: &[f64], out: &mut [f64], row0: usize, rows_end: usize, k: usize, m: usize) {
+    for i in row0..rows_end {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        orow.fill(0.0);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                axpy(aik, &b[kk * m..(kk + 1) * m], orow);
+            }
+        }
+    }
+}
+
+/// Same kernel but writing into a detached output slice (thread panels).
+fn matmul_panel_slice(a: &[f64], b: &[f64], out: &mut [f64], row0: usize, rows: usize, k: usize, m: usize) {
+    for r in 0..rows {
+        let i = row0 + r;
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[r * m..(r + 1) * m];
+        orow.fill(0.0);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                axpy(aik, &b[kk * m..(kk + 1) * m], orow);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_from_fn() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_large() {
+        let mut rng = crate::rng::Pcg64::new(0);
+        let (n, k, m) = (67, 43, 55);
+        let a = Matrix::from_vec(n, k, rng.normal_vec(n * k));
+        let b = Matrix::from_vec(k, m, rng.normal_vec(k * m));
+        let c = a.matmul(&b);
+        let mut naive = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[(i, kk)] * b[(kk, j)];
+                }
+                naive[(i, j)] = s;
+            }
+        }
+        assert!(c.max_abs_diff(&naive) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches() {
+        // Big enough to trigger the threaded path.
+        let mut rng = crate::rng::Pcg64::new(1);
+        let n = 256;
+        let a = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let b = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let c = a.matmul(&b);
+        // Spot-check a few entries against dot products.
+        let bt = b.transpose();
+        for &(i, j) in &[(0, 0), (17, 200), (255, 255), (100, 3)] {
+            let want = dot(a.row(i), bt.row(j));
+            assert!((c[(i, j)] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = crate::rng::Pcg64::new(2);
+        let a = Matrix::from_vec(9, 7, rng.normal_vec(63));
+        let v = rng.normal_vec(7);
+        let got = a.matvec(&v);
+        let vm = Matrix::from_vec(7, 1, v);
+        let want = a.matmul(&vm);
+        for i in 0..9 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        let a = Matrix::from_vec(5, 8, rng.normal_vec(40));
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn add_diag_and_scale() {
+        let mut m = Matrix::zeros(3, 3);
+        m.add_diag(2.0);
+        m.scale(1.5);
+        assert_eq!(m[(1, 1)], 3.0);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+}

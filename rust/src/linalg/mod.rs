@@ -1,0 +1,19 @@
+//! Dense + iterative linear algebra substrate (built from scratch; the
+//! offline crate set has no linalg crates).
+//!
+//! Everything the GP engines need: a dense row-major [`Matrix`], Cholesky
+//! factorization ([`cholesky`]), batched conjugate gradients ([`cg`]),
+//! Lanczos / stochastic Lanczos quadrature ([`lanczos`]), and a Jacobi
+//! symmetric eigensolver ([`eigh`]).
+
+pub mod cg;
+pub mod cholesky;
+pub mod eigh;
+pub mod lanczos;
+pub mod matrix;
+
+pub use cg::{cg_batch, CgStats, LinOp};
+pub use cholesky::{chol_logdet, chol_sample, chol_solve, cholesky, solve_lower, solve_lower_t};
+pub use eigh::{jacobi_eigh, tridiag_eigh};
+pub use lanczos::{lanczos, slq_logdet};
+pub use matrix::Matrix;

@@ -1,0 +1,70 @@
+//! `lkgp` CLI — leader entrypoint for the coordinator and utilities.
+//!
+//! Subcommands:
+//!   serve      run the freeze-thaw AutoML coordinator on a simulated
+//!              LCBench workload (see examples/automl_loop.rs for the
+//!              library-level version)
+//!   artifacts  print the artifact manifest and verify executables load
+//!   smoke      end-to-end smoke: fit + predict on a toy problem
+//!
+//! Run `lkgp <cmd> --help`-ish by reading DESIGN.md; flags use
+//! `--key value` / `--key=value` (see util::Args).
+use lkgp::util::Args;
+
+fn main() -> lkgp::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "artifacts" => cmd_artifacts(&args),
+        "smoke" => cmd_smoke(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: lkgp <artifacts|smoke|serve> [--engine rust|xla] \
+                 [--seed N] [--rounds N] [--configs N]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_artifacts(_args: &Args) -> lkgp::Result<()> {
+    let dir = lkgp::runtime::XlaEngine::default_dir();
+    let man = lkgp::runtime::Manifest::load(&dir)?;
+    println!("artifacts dir: {}", dir.display());
+    println!("buckets: {:?}", man.buckets());
+    println!("{} artifacts, fit_steps={}", man.artifacts.len(), man.fit_steps);
+    let mut engine = lkgp::runtime::XlaEngine::load(&dir)?;
+    // compile one executable as a health check
+    let data = lkgp::lcbench::toy_dataset(8, 16, 3, 1);
+    let theta = lkgp::gp::Theta::default_packed(3);
+    let (value, _grad, iters) = engine.mll_grad(&theta, &data, 0)?;
+    println!("health check: mll={value:.3} (cg iters {iters}) OK");
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> lkgp::Result<()> {
+    let seed = args.get_u64("seed", 0);
+    let prefer_xla = args.get("engine").unwrap_or("xla") == "xla";
+    let mut engine: Box<dyn lkgp::runtime::Engine> =
+        if args.get("trainer") == Some("lbfgs") {
+            // paper-faithful: L-BFGS on the MAP objective (rust engine)
+            Box::new(lkgp::runtime::RustEngine::with_lbfgs())
+        } else {
+            lkgp::runtime::open_engine(prefer_xla)
+        };
+    let data = lkgp::lcbench::toy_dataset(16, 16, 3, seed);
+    let theta0 = lkgp::gp::Theta::default_packed(3);
+    let theta = engine.fit(&theta0, &data, seed)?;
+    let xq = lkgp::linalg::Matrix::from_vec(2, 3, vec![0.3, 0.5, 0.7, 0.6, 0.2, 0.9]);
+    let preds = engine.predict_final(&theta, &data, &xq)?;
+    println!("engine={} theta={theta:.3?}", engine.name());
+    for (i, (mu, var)) in preds.iter().enumerate() {
+        println!("query {i}: final = {mu:.4} +- {:.4}", var.sqrt());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> lkgp::Result<()> {
+    lkgp::coordinator::serve_simulated(args)
+}

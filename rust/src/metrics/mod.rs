@@ -1,0 +1,138 @@
+//! Metrics: prediction quality (MSE / log-likelihood, paper Figure 4),
+//! aggregation over seeds (mean ± standard error), and the allocation /
+//! RSS tracking behind the Figure-3 memory comparison.
+
+pub mod alloc;
+
+/// Mean squared error between predictions and targets.
+pub fn mse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(target)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Mean Gaussian log-likelihood of targets under (mean, variance) pairs.
+pub fn gaussian_llh(pred: &[(f64, f64)], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    pred.iter()
+        .zip(target)
+        .map(|((mu, var), t)| {
+            let v = var.max(1e-12);
+            -0.5 * (ln2pi + v.ln() + (t - mu) * (t - mu) / v)
+        })
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Aggregate over seeds: (mean, standard error).
+pub fn mean_stderr(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, (var / n).sqrt())
+}
+
+/// Simple online latency histogram (microsecond buckets, powers of two).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, micros: u64) {
+        let bucket = (64 - micros.max(1).leading_zeros()) as usize;
+        if self.counts.len() <= bucket {
+            self.counts.resize(bucket + 1, 0);
+        }
+        self.counts[bucket] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (upper edge of the bucket).
+    pub fn quantile_micros(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let want = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= want {
+                return 1u64 << b;
+            }
+        }
+        1u64 << (self.counts.len().saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(mse(&[1.0, 3.0], &[0.0, 1.0]), 2.5);
+    }
+
+    #[test]
+    fn llh_peaks_at_truth() {
+        let t = [0.5];
+        let good = gaussian_llh(&[(0.5, 0.01)], &t);
+        let off = gaussian_llh(&[(0.9, 0.01)], &t);
+        let vague = gaussian_llh(&[(0.5, 10.0)], &t);
+        assert!(good > off);
+        assert!(good > vague);
+    }
+
+    #[test]
+    fn llh_closed_form() {
+        // standard normal at 0: -0.5 ln(2 pi)
+        let v = gaussian_llh(&[(0.0, 1.0)], &[0.0]);
+        assert!((v + 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_stderr_basics() {
+        let (m, se) = mean_stderr(&[1.0, 1.0, 1.0]);
+        assert_eq!(m, 1.0);
+        assert_eq!(se, 0.0);
+        let (m2, se2) = mean_stderr(&[0.0, 2.0]);
+        assert_eq!(m2, 1.0);
+        assert!(se2 > 0.0);
+    }
+
+    #[test]
+    fn latency_hist_quantiles() {
+        let mut h = LatencyHist::default();
+        for i in 1..=1000u64 {
+            h.record(i);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_micros(0.5);
+        let p99 = h.quantile_micros(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= 512);
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifact manifest: the build-time contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! `artifacts/manifest.json` lists every exported HLO module with its shape
+//! bucket (n, m, d, q, s, p) and input/output specs. The runtime picks the
+//! smallest bucket that fits a live problem and pads (see `runtime::engine`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{LkgpError, Result};
+use crate::json::Json;
+
+/// One exported HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Entry-point name: mvm | kernel_matrices | mll_grad | fit_adam |
+    /// predict_mean | posterior.
+    pub entry: String,
+    /// File name inside the artifacts directory.
+    pub file: String,
+    /// Bucket shape.
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+    /// Query configs (predict/posterior entries).
+    pub q: usize,
+    /// Posterior samples per call.
+    pub s: usize,
+    /// Probe count (mll/fit entries).
+    pub p: usize,
+    /// Input names and shapes, in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Output names, in tuple order.
+    pub outputs: Vec<String>,
+    /// Adam steps baked into fit_adam graphs (0 otherwise).
+    pub steps: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub fit_steps: usize,
+    pub fit_lr: f64,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            LkgpError::Manifest(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let doc = Json::parse(&text)?;
+        if doc.get("format").and_then(Json::as_usize) != Some(1) {
+            return Err(LkgpError::Manifest("unsupported manifest format".into()));
+        }
+        let mut artifacts = Vec::new();
+        for rec in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| LkgpError::Manifest("missing artifacts".into()))?
+        {
+            let geti = |k: &str| rec.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let mut inputs = Vec::new();
+            for inp in rec.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let name = inp
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                let shape: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                inputs.push((name, shape));
+            }
+            let outputs: Vec<String> = rec
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|o| o.as_str().map(str::to_string))
+                .collect();
+            artifacts.push(ArtifactSpec {
+                entry: rec
+                    .get("entry")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| LkgpError::Manifest("artifact missing entry".into()))?
+                    .to_string(),
+                file: rec
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| LkgpError::Manifest("artifact missing file".into()))?
+                    .to_string(),
+                n: geti("n"),
+                m: geti("m"),
+                d: geti("d"),
+                q: geti("q"),
+                s: geti("s"),
+                p: geti("p"),
+                inputs,
+                outputs,
+                steps: geti("steps"),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            fit_steps: doc.get("fit_steps").and_then(Json::as_usize).unwrap_or(0),
+            fit_lr: doc
+                .get("fit_lr")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.05),
+        })
+    }
+
+    /// Smallest bucket of `entry` that fits (n, m, d): bucket.n >= n,
+    /// bucket.m >= m, bucket.d == d (dimensions can't be padded — the
+    /// kernel's ARD lengthscales are per-dimension).
+    pub fn pick(&self, entry: &str, n: usize, m: usize, d: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.n >= n && a.m >= m && a.d == d)
+            .min_by_key(|a| (a.n, a.m))
+            .ok_or(LkgpError::NoBucket { n, m, d })
+    }
+
+    /// All distinct buckets (for diagnostics / tests).
+    pub fn buckets(&self) -> Vec<(usize, usize, usize)> {
+        let mut set: BTreeMap<(usize, usize, usize), ()> = BTreeMap::new();
+        for a in &self.artifacts {
+            set.insert((a.n, a.m, a.d), ());
+        }
+        set.into_keys().collect()
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let doc = r#"{"format": 1, "dtype": "f64", "fit_steps": 100, "fit_lr": 0.05,
+          "artifacts": [
+            {"entry": "mvm", "file": "mvm_n16_m16_d3.hlo.txt", "n": 16, "m": 16,
+             "d": 3, "q": 8, "s": 16, "p": 8, "inputs": [], "outputs": ["out"]},
+            {"entry": "mvm", "file": "mvm_n32_m16_d3.hlo.txt", "n": 32, "m": 16,
+             "d": 3, "q": 8, "s": 16, "p": 8, "inputs": [], "outputs": ["out"]},
+            {"entry": "mvm", "file": "mvm_n16_m52_d7.hlo.txt", "n": 16, "m": 52,
+             "d": 7, "q": 8, "s": 16, "p": 8, "inputs": [], "outputs": ["out"]}
+        ]}"#;
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+    }
+
+    #[test]
+    fn loads_and_picks_smallest_fitting_bucket() {
+        let dir = std::env::temp_dir().join("lkgp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.artifacts.len(), 3);
+        assert_eq!(man.fit_steps, 100);
+        let b = man.pick("mvm", 10, 12, 3).unwrap();
+        assert_eq!((b.n, b.m), (16, 16));
+        let b2 = man.pick("mvm", 20, 16, 3).unwrap();
+        assert_eq!((b2.n, b2.m), (32, 16));
+        assert!(man.pick("mvm", 64, 16, 3).is_err());
+        assert!(man.pick("mvm", 8, 8, 5).is_err()); // d mismatch
+        assert_eq!(man.buckets().len(), 3);
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(!man.artifacts.is_empty());
+        // the LCBench quality bucket must exist
+        assert!(man.pick("mll_grad", 16, 52, 7).is_ok());
+        for a in &man.artifacts {
+            assert!(man.path_of(a).exists(), "{}", a.file);
+        }
+    }
+}

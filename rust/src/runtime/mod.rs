@@ -1,0 +1,518 @@
+//! PJRT runtime: load AOT artifacts and run LKGP inference from rust.
+//!
+//! The request path is: coordinator -> [`XlaEngine`] -> compiled
+//! executable (HLO text loaded once per bucket, compiled once, cached).
+//! Python is never involved at runtime — `make artifacts` is the only
+//! place jax runs.
+//!
+//! Shape buckets: HLO modules have static shapes, so a live problem
+//! (n, m, d) is padded up to the smallest exported bucket — extra config
+//! rows are fully masked (the masked operator is block-diagonal across the
+//! mask, so padding is mathematically inert; see gp::operator tests) and
+//! extra grid columns carry mask 0 as well. Outputs are sliced back.
+//!
+//! [`Engine`] abstracts over this XLA path and the pure-rust engine so the
+//! coordinator and benches can switch with a flag.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{LkgpError, Result};
+use crate::gp::lkgp::{Dataset, SolverCfg};
+use crate::gp::{trainer, Theta};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// A GP backend the coordinator can drive.
+pub trait Engine: Send {
+    /// Optimize hyper-parameters from `theta0`; returns packed theta.
+    fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> Result<Vec<f64>>;
+
+    /// (mean, variance) of the final-epoch value for each query config
+    /// (standardized units).
+    fn predict_final(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix)
+        -> Result<Vec<(f64, f64)>>;
+
+    /// Posterior samples of full curves over [X; Xq] x grid.
+    fn sample_curves(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        s: usize,
+        seed: u64,
+    ) -> Result<Vec<Matrix>>;
+
+    /// Posterior mean curves for query configs.
+    fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> Result<Matrix>;
+
+    /// Human-readable backend name (logs/metrics).
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Pure-rust engine
+
+/// Hyper-parameter optimizer choice for [`RustEngine`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trainer {
+    /// First-order default — robust to the stochastic log-det gradient.
+    Adam,
+    /// Quasi-Newton, the paper's §B choice (probe-conditioned objective
+    /// is deterministic, so line searches are well-defined).
+    Lbfgs,
+}
+
+/// Self-contained engine backed by `gp::lkgp` (no artifacts needed).
+pub struct RustEngine {
+    pub cfg: SolverCfg,
+    pub adam: trainer::AdamCfg,
+    pub lbfgs: trainer::LbfgsCfg,
+    pub trainer: Trainer,
+}
+
+impl Default for RustEngine {
+    fn default() -> Self {
+        RustEngine {
+            cfg: SolverCfg::default(),
+            adam: trainer::AdamCfg { steps: 60, lr: 0.08, ..Default::default() },
+            lbfgs: trainer::LbfgsCfg::default(),
+            trainer: Trainer::Adam,
+        }
+    }
+}
+
+impl RustEngine {
+    /// Paper-faithful configuration: L-BFGS on the MAP objective (§B).
+    pub fn with_lbfgs() -> Self {
+        RustEngine { trainer: Trainer::Lbfgs, ..Default::default() }
+    }
+}
+
+impl Engine for RustEngine {
+    fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> Result<Vec<f64>> {
+        let mut rng = Pcg64::new(seed);
+        let probes = rng.rademacher_vec(self.cfg.probes * data.n() * data.m());
+        let cfg = self.cfg.clone();
+        let mut obj = |packed: &[f64]| {
+            crate::gp::lkgp::mll_value_grad(packed, data, &probes, &cfg)
+                .map(|e| (e.value, e.grad))
+        };
+        let trace = match self.trainer {
+            Trainer::Adam => trainer::adam(&mut obj, theta0, &self.adam)?,
+            Trainer::Lbfgs => trainer::lbfgs(&mut obj, theta0, &self.lbfgs)?,
+        };
+        Ok(trace.theta)
+    }
+
+    fn predict_final(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+    ) -> Result<Vec<(f64, f64)>> {
+        crate::gp::lkgp::predict_final(theta, data, xq, &self.cfg)
+    }
+
+    fn sample_curves(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        s: usize,
+        seed: u64,
+    ) -> Result<Vec<Matrix>> {
+        let mut rng = Pcg64::new(seed);
+        crate::gp::lkgp::posterior_samples(theta, data, xq, s, &self.cfg, &mut rng)
+    }
+
+    fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> Result<Matrix> {
+        Ok(crate::gp::lkgp::predict_mean(theta, data, xq, &self.cfg)?.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA artifact engine
+
+/// Engine that executes the AOT-compiled HLO artifacts on the PJRT CPU
+/// client. Executables are compiled lazily and cached per artifact file.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla crate wraps PJRT handles in Rc + raw pointers, which are
+// !Send by default. XlaEngine owns the *only* clones of those Rcs (the
+// client and every cached executable live inside this struct and are never
+// handed out), so moving the whole engine into the prediction-service
+// thread transfers all of them together; there is never concurrent or
+// cross-thread shared access. The PJRT CPU client itself is thread-safe
+// for compile/execute.
+unsafe impl Send for XlaEngine {}
+
+impl XlaEngine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifacts directory (repo-relative, overridable by env).
+    pub fn default_dir() -> std::path::PathBuf {
+        if let Ok(dir) = std::env::var("LKGP_ARTIFACTS") {
+            return dir.into();
+        }
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&spec.file) {
+            let path = self.manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| LkgpError::Manifest("bad path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(spec.file.clone(), exe);
+        }
+        Ok(&self.cache[&spec.file])
+    }
+
+    /// Execute an artifact with f64 inputs; returns each tuple output
+    /// flattened to a Vec<f64>.
+    fn exec(&mut self, spec: &ArtifactSpec, inputs: &[(Vec<usize>, Vec<f64>)]) -> Result<Vec<Vec<f64>>> {
+        let exe = self.executable(spec)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (shape, data) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            let expected: usize = shape.iter().product();
+            debug_assert_eq!(expected, data.len(), "input buffer mismatch");
+            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let mut result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let outs = result.decompose_tuple()?;
+        let mut vecs = Vec::with_capacity(outs.len());
+        for o in outs {
+            vecs.push(o.to_vec::<f64>()?);
+        }
+        Ok(vecs)
+    }
+
+    /// Pad a dataset + theta to the bucket shape; returns flattened inputs
+    /// shared by all entry points (theta, x, t, y, mask).
+    fn padded_core(
+        spec: &ArtifactSpec,
+        theta: &[f64],
+        data: &Dataset,
+    ) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let (bn, bm) = (spec.n, spec.m);
+        let (n, m, d) = (data.n(), data.m(), data.d());
+        debug_assert_eq!(d, spec.d);
+        let mut x = vec![0.5; bn * d];
+        for i in 0..n {
+            x[i * d..(i + 1) * d].copy_from_slice(data.x.row(i));
+        }
+        // Extend the grid linearly beyond the data's range; padded columns
+        // are masked out so the values only need to be finite/distinct.
+        let mut t = vec![0.0; bm];
+        t[..m].copy_from_slice(&data.t);
+        let step = if m > 1 { data.t[m - 1] - data.t[m - 2] } else { 1.0 };
+        for j in m..bm {
+            t[j] = data.t[m - 1] + step.max(1e-3) * (j - m + 1) as f64;
+        }
+        let mut y = vec![0.0; bn * bm];
+        let mut mask = vec![0.0; bn * bm];
+        for i in 0..n {
+            for j in 0..m {
+                y[i * bm + j] = data.y[(i, j)];
+                mask[i * bm + j] = data.mask[(i, j)];
+            }
+        }
+        (theta.to_vec(), x, t, y, mask)
+    }
+
+    fn pad_queries(spec: &ArtifactSpec, xq: &Matrix) -> Vec<f64> {
+        let d = spec.d;
+        let mut out = vec![0.5; spec.q * d];
+        for i in 0..xq.rows().min(spec.q) {
+            out[i * d..(i + 1) * d].copy_from_slice(xq.row(i));
+        }
+        // replicate the first query into unused slots (harmless)
+        if xq.rows() > 0 {
+            for i in xq.rows()..spec.q {
+                let src: Vec<f64> = xq.row(0).to_vec();
+                out[i * d..(i + 1) * d].copy_from_slice(&src);
+            }
+        }
+        out
+    }
+
+    /// One masked-Kronecker MVM through the artifact (tests/benches).
+    pub fn mvm(&mut self, theta: &[f64], data: &Dataset, v: &Matrix) -> Result<Matrix> {
+        let spec = self
+            .manifest
+            .pick("mvm", data.n(), data.m(), data.d())?
+            .clone();
+        let (bn, bm) = (spec.n, spec.m);
+        let (th, x, t, _y, mask) = Self::padded_core(&spec, theta, data);
+        let mut vp = vec![0.0; bn * bm];
+        for i in 0..data.n() {
+            for j in 0..data.m() {
+                vp[i * bm + j] = v[(i, j)];
+            }
+        }
+        let d = data.d();
+        let outs = self.exec(
+            &spec,
+            &[
+                (vec![d + 3], th),
+                (vec![bn, d], x),
+                (vec![bm], t),
+                (vec![bn, bm], mask),
+                (vec![bn, bm], vp),
+            ],
+        )?;
+        let mut out = Matrix::zeros(data.n(), data.m());
+        for i in 0..data.n() {
+            for j in 0..data.m() {
+                out[(i, j)] = outs[0][i * bm + j];
+            }
+        }
+        Ok(out)
+    }
+
+    /// MAP objective value + gradient via the `mll_grad` artifact.
+    /// Returns (value, grad, cg_iterations).
+    pub fn mll_grad(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        seed: u64,
+    ) -> Result<(f64, Vec<f64>, usize)> {
+        let spec = self
+            .manifest
+            .pick("mll_grad", data.n(), data.m(), data.d())?
+            .clone();
+        let (bn, bm, p) = (spec.n, spec.m, spec.p);
+        let (th, x, t, y, mask) = Self::padded_core(&spec, theta, data);
+        let mut rng = Pcg64::new(seed);
+        let probes = rng.rademacher_vec(p * bn * bm);
+        let d = data.d();
+        let outs = self.exec(
+            &spec,
+            &[
+                (vec![d + 3], th),
+                (vec![bn, d], x),
+                (vec![bm], t),
+                (vec![bn, bm], y),
+                (vec![bn, bm], mask),
+                (vec![p, bn, bm], probes),
+            ],
+        )?;
+        Ok((outs[0][0], outs[1].clone(), outs[2][0] as usize))
+    }
+}
+
+impl Engine for XlaEngine {
+    fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> Result<Vec<f64>> {
+        let spec = self
+            .manifest
+            .pick("fit_adam", data.n(), data.m(), data.d())?
+            .clone();
+        let (bn, bm, p) = (spec.n, spec.m, spec.p);
+        let (th, x, t, y, mask) = Self::padded_core(&spec, theta0, data);
+        let mut rng = Pcg64::new(seed);
+        let probes = rng.rademacher_vec(p * bn * bm);
+        let d = data.d();
+        let outs = self.exec(
+            &spec,
+            &[
+                (vec![d + 3], th),
+                (vec![bn, d], x),
+                (vec![bm], t),
+                (vec![bn, bm], y),
+                (vec![bn, bm], mask),
+                (vec![p, bn, bm], probes),
+            ],
+        )?;
+        Ok(outs[0].clone())
+    }
+
+    fn predict_final(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+    ) -> Result<Vec<(f64, f64)>> {
+        // Moments from Matheron samples (the posterior artifact); the rust
+        // engine provides the exact per-query variance alternative.
+        let q = xq.rows();
+        let spec = self
+            .manifest
+            .pick("posterior", data.n(), data.m(), data.d())?
+            .clone();
+        if q > spec.q {
+            // chunk queries through the bucket
+            let mut out = Vec::with_capacity(q);
+            let mut start = 0;
+            while start < q {
+                let end = (start + spec.q).min(q);
+                let mut chunk = Matrix::zeros(end - start, xq.cols());
+                for i in start..end {
+                    chunk.row_mut(i - start).copy_from_slice(xq.row(i));
+                }
+                out.extend(self.predict_final(theta, data, &chunk)?);
+                start = end;
+            }
+            return Ok(out);
+        }
+        let s = spec.s.max(32);
+        let samples = self.sample_curves(theta, data, xq, s, 7_777)?;
+        let m = data.m();
+        let n = data.n();
+        let mut out = Vec::with_capacity(q);
+        let theta_u = Theta::unpack(theta);
+        for qi in 0..q {
+            let vals: Vec<f64> = samples.iter().map(|smp| smp[(n + qi, m - 1)]).collect();
+            let (mean, _) = crate::metrics::mean_stderr(&vals);
+            let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                / (vals.len().max(2) - 1) as f64;
+            out.push((mean, var + theta_u.sigma2));
+        }
+        Ok(out)
+    }
+
+    fn sample_curves(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        s: usize,
+        seed: u64,
+    ) -> Result<Vec<Matrix>> {
+        let spec = self
+            .manifest
+            .pick("posterior", data.n(), data.m(), data.d())?
+            .clone();
+        let (bn, bm, bq, bs) = (spec.n, spec.m, spec.q, spec.s);
+        if xq.rows() > bq {
+            return Err(LkgpError::Shape(format!(
+                "query count {} exceeds bucket q={bq}",
+                xq.rows()
+            )));
+        }
+        let (th, x, t, y, mask) = Self::padded_core(&spec, theta, data);
+        let xqp = Self::pad_queries(&spec, xq);
+        let mut rng = Pcg64::new(seed);
+        let d = data.d();
+        let (n, m) = (data.n(), data.m());
+        let mut out: Vec<Matrix> = Vec::with_capacity(s);
+        // The artifact draws bs samples per execution; run ceil(s/bs) times.
+        while out.len() < s {
+            let zeta = rng.normal_vec(bs * (bn + bq) * bm);
+            let eps = rng.normal_vec(bs * bn * bm);
+            let outs = self.exec(
+                &spec,
+                &[
+                    (vec![d + 3], th.clone()),
+                    (vec![bn, d], x.clone()),
+                    (vec![bm], t.clone()),
+                    (vec![bn, bm], y.clone()),
+                    (vec![bn, bm], mask.clone()),
+                    (vec![bq, d], xqp.clone()),
+                    (vec![bs, bn + bq, bm], zeta),
+                    (vec![bs, bn, bm], eps),
+                ],
+            )?;
+            let samples = &outs[0];
+            for si in 0..bs {
+                if out.len() >= s {
+                    break;
+                }
+                // slice train rows [0, n) and query rows [bn, bn + q)
+                let mut smp = Matrix::zeros(n + xq.rows(), m);
+                for i in 0..n {
+                    for j in 0..m {
+                        smp[(i, j)] = samples[si * (bn + bq) * bm + i * bm + j];
+                    }
+                }
+                for qi in 0..xq.rows() {
+                    for j in 0..m {
+                        smp[(n + qi, j)] = samples[si * (bn + bq) * bm + (bn + qi) * bm + j];
+                    }
+                }
+                out.push(smp);
+            }
+        }
+        Ok(out)
+    }
+
+    fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> Result<Matrix> {
+        let spec = self
+            .manifest
+            .pick("predict_mean", data.n(), data.m(), data.d())?
+            .clone();
+        let (bn, bm, bq) = (spec.n, spec.m, spec.q);
+        let q = xq.rows();
+        if q > bq {
+            return Err(LkgpError::Shape(format!("query count {q} exceeds bucket q={bq}")));
+        }
+        let (th, x, t, y, mask) = Self::padded_core(&spec, theta, data);
+        let xqp = Self::pad_queries(&spec, xq);
+        let d = data.d();
+        let outs = self.exec(
+            &spec,
+            &[
+                (vec![d + 3], th),
+                (vec![bn, d], x),
+                (vec![bm], t),
+                (vec![bn, bm], y),
+                (vec![bn, bm], mask),
+                (vec![bq, d], xqp),
+            ],
+        )?;
+        let mut out = Matrix::zeros(q, data.m());
+        for qi in 0..q {
+            for j in 0..data.m() {
+                out[(qi, j)] = outs[0][qi * bm + j];
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Open the configured engine: XLA artifacts when requested and available,
+/// rust fallback otherwise.
+pub fn open_engine(prefer_xla: bool) -> Box<dyn Engine> {
+    if prefer_xla {
+        match XlaEngine::load(&XlaEngine::default_dir()) {
+            Ok(e) => return Box::new(e),
+            Err(err) => {
+                log::warn!("falling back to rust engine: {err}");
+            }
+        }
+    }
+    Box::<RustEngine>::default()
+}

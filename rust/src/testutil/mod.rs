@@ -1,0 +1,108 @@
+//! Lightweight property-testing helper (proptest is not in the offline
+//! crate set).
+//!
+//! [`property`] runs a closure over `cases` deterministic random seeds; on
+//! failure it reports the failing seed so the case can be replayed as a
+//! unit test. Generators are plain functions over [`crate::rng::Pcg64`].
+
+use crate::rng::Pcg64;
+
+/// Run `f` over `cases` seeded RNGs; panic with the failing seed.
+///
+/// ```ignore
+/// property(100, |rng| {
+///     let n = 1 + rng.below(20);
+///     assert!(my_invariant(n));
+/// });
+/// ```
+pub fn property(cases: u64, mut f: impl FnMut(&mut Pcg64)) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::new(0x5eed_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string());
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn gen_usize(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Random prefix-observation mask (early-stopping pattern): each row
+/// observes a prefix of length in [min_len, m].
+pub fn gen_prefix_mask(rng: &mut Pcg64, n: usize, m: usize, min_len: usize) -> crate::linalg::Matrix {
+    let mut mask = crate::linalg::Matrix::zeros(n, m);
+    for i in 0..n {
+        let len = gen_usize(rng, min_len.min(m), m);
+        for j in 0..len {
+            mask[(i, j)] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Random SPD matrix with controlled conditioning.
+pub fn gen_spd(rng: &mut Pcg64, n: usize, diag_boost: f64) -> crate::linalg::Matrix {
+    let a = crate::linalg::Matrix::from_vec(n, n, rng.normal_vec(n * n));
+    let mut spd = a.matmul(&a.transpose());
+    spd.add_diag(diag_boost * n as f64);
+    spd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property(25, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn property_reports_seed() {
+        property(10, |rng| {
+            assert!(rng.uniform() < 2.0); // always true
+            assert!(gen_usize(rng, 0, 5) != 3); // eventually false
+        });
+    }
+
+    #[test]
+    fn prefix_mask_is_prefix() {
+        property(20, |rng| {
+            let n = gen_usize(rng, 1, 10);
+            let m = gen_usize(rng, 2, 12);
+            let mask = gen_prefix_mask(rng, n, m, 1);
+            for i in 0..n {
+                let mut seen_zero = false;
+                for j in 0..m {
+                    if mask[(i, j)] == 0.0 {
+                        seen_zero = true;
+                    } else {
+                        assert!(!seen_zero, "non-prefix mask");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn spd_is_spd() {
+        property(10, |rng| {
+            let n = gen_usize(rng, 1, 15);
+            let spd = gen_spd(rng, n, 1.0);
+            assert!(crate::linalg::cholesky(&spd).is_ok());
+        });
+    }
+}

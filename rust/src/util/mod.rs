@@ -1,0 +1,170 @@
+//! Small shared utilities: thread-count resolution, timing helpers, CSV
+//! writing, and a tiny CLI argument parser (clap is not in the offline
+//! crate set).
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Number of worker threads for panel-parallel kernels.
+///
+/// Resolution order: `LKGP_THREADS` env var, then available parallelism
+/// minus one (leave a core for the coordinator), min 1.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("LKGP_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(1)
+    })
+}
+
+/// Time a closure, returning (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Write rows as CSV (first row = header) under `results/`.
+pub fn write_csv(path: &str, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+/// Minimal `--key value` / `--flag` argument parser.
+///
+/// Supports `--key=value` and `--key value`; everything else is positional.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub flags: std::collections::BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of tokens.
+    pub fn parse(tokens: impl Iterator<Item = String>) -> Self {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.flags.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Format a Duration as milliseconds with 2 decimals.
+pub fn fmt_ms(d: Duration) -> String {
+    format!("{:.2}", d.as_secs_f64() * 1e3)
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    format!("{x:.1} {}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_forms() {
+        // Positionals come before flags (a bare `--flag token` would bind
+        // the token as the flag's value — documented limitation).
+        let a = Args::parse(
+            ["pos1", "--n", "32", "--tol=0.01", "--verbose"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.get_usize("n", 0), 32);
+        assert_eq!(a.get_f64("tol", 0.0), 0.01);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn args_flag_before_flag() {
+        let a = Args::parse(["--a", "--b", "7"].iter().map(|s| s.to_string()));
+        assert_eq!(a.get("a"), Some("true"));
+        assert_eq!(a.get_usize("b", 0), 7);
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(512), "512.0 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn csv_writes(){
+        let path = "/tmp/lkgp_util_test.csv";
+        write_csv(path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

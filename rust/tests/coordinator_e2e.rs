@@ -1,0 +1,79 @@
+//! Integration: the full coordinator loop over the simulated LCBench
+//! workload, against both engines.
+
+use lkgp::coordinator::{
+    EpochRunner, Policy, PredictionService, Scheduler, SchedulerCfg, TrialId,
+};
+use lkgp::lcbench::{Preset, Task};
+use lkgp::rng::Pcg64;
+use lkgp::runtime::{open_engine, RustEngine};
+
+struct SimRunner {
+    task: Task,
+}
+
+impl EpochRunner for SimRunner {
+    fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
+        self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
+    }
+}
+
+fn run_with(engine: Box<dyn lkgp::runtime::Engine>, seed: u64) -> (lkgp::coordinator::RunReport, f64) {
+    let mut rng = Pcg64::new(seed);
+    let task = Task::generate(Preset::FashionMnist, 16, &mut rng);
+    let oracle = (0..task.n())
+        .map(|i| task.curves[(i, task.m() - 1)])
+        .fold(f64::NEG_INFINITY, f64::max);
+    let cfg = SchedulerCfg {
+        max_concurrent: 4,
+        refit_every: 5,
+        epoch_budget: 160,
+        policy: Policy::PredictedFinal { delta: 0.0, threshold: 0.95 },
+        seed,
+    };
+    let mut sched = Scheduler::new(task.m(), cfg);
+    let configs: Vec<Vec<f64>> = (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
+    sched.add_candidates(&configs);
+    let service = PredictionService::spawn(engine);
+    let mut runner = SimRunner { task };
+    let report = sched.run(&mut runner, &service).unwrap();
+    (report, oracle)
+}
+
+#[test]
+fn coordinator_with_rust_engine_finds_good_config() {
+    let (report, oracle) = run_with(Box::<RustEngine>::default(), 1);
+    assert!(report.epochs_spent <= 165);
+    assert!(
+        report.best_value > oracle - 0.1,
+        "best={} oracle={oracle}",
+        report.best_value
+    );
+    // the freeze-thaw loop spends far less than exhaustive training
+    assert!(report.epochs_spent < 16 * 52 / 2);
+}
+
+#[test]
+fn coordinator_with_xla_engine_when_available() {
+    let dir = lkgp::runtime::XlaEngine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (report, oracle) = run_with(open_engine(true), 2);
+    assert!(
+        report.best_value > oracle - 0.12,
+        "best={} oracle={oracle}",
+        report.best_value
+    );
+    assert!(report.batch_factor >= 1.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let (r1, _) = run_with(Box::<RustEngine>::default(), 7);
+    let (r2, _) = run_with(Box::<RustEngine>::default(), 7);
+    assert_eq!(r1.epochs_spent, r2.epochs_spent);
+    assert_eq!(r1.best_value, r2.best_value);
+    assert_eq!(r1.trace, r2.trace);
+}

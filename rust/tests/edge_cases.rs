@@ -1,0 +1,197 @@
+//! Edge-case and failure-injection integration tests.
+
+use lkgp::gp::lkgp::{Dataset, SolverCfg};
+use lkgp::gp::transforms::{XTransform, YTransform};
+use lkgp::gp::Theta;
+use lkgp::linalg::Matrix;
+use lkgp::rng::Pcg64;
+use lkgp::runtime::{Engine, RustEngine};
+
+/// A single training curve with a single observation — the smallest
+/// problem the coordinator can hand the engine on round one.
+#[test]
+fn single_curve_single_observation() {
+    let data = Dataset {
+        x: Matrix::from_vec(1, 3, vec![0.5, 0.5, 0.5]),
+        t: (0..8).map(|i| i as f64 / 7.0).collect(),
+        y: Matrix::from_vec(1, 8, vec![-1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]),
+        mask: Matrix::from_vec(1, 8, vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]),
+    };
+    let mut eng = RustEngine::default();
+    let theta0 = Theta::default_packed(3);
+    let theta = eng.fit(&theta0, &data, 1).unwrap();
+    let xq = Matrix::from_vec(1, 3, vec![0.4, 0.6, 0.5]);
+    let preds = eng.predict_final(&theta, &data, &xq).unwrap();
+    assert!(preds[0].0.is_finite());
+    assert!(preds[0].1 > 0.0);
+    // with one observation at t=0 the final-epoch prediction must carry
+    // substantial uncertainty
+    assert!(preds[0].1.sqrt() > 0.05);
+}
+
+/// Fully observed data: the masked operator degenerates to the plain
+/// Kronecker case and everything still works.
+#[test]
+fn fully_observed_curves() {
+    let mut data = lkgp::lcbench::toy_dataset(6, 10, 2, 3);
+    for v in data.mask.data_mut().iter_mut() {
+        *v = 1.0;
+    }
+    let packed = Theta::default_packed(2);
+    let mut rng = Pcg64::new(4);
+    let probes = rng.rademacher_vec(16 * 60);
+    let cfg = SolverCfg { probes: 16, ..Default::default() };
+    let eval = lkgp::gp::lkgp::mll_value_grad(&packed, &data, &probes, &cfg).unwrap();
+    assert!(eval.value.is_finite());
+    assert!(eval.cg.converged);
+}
+
+/// Extremely short prefixes everywhere (1 epoch observed per curve).
+#[test]
+fn one_epoch_prefixes() {
+    let n = 8;
+    let m = 12;
+    let mut rng = Pcg64::new(5);
+    let data = Dataset {
+        x: Matrix::from_vec(n, 2, rng.uniform_vec(n * 2, 0.0, 1.0)),
+        t: (0..m).map(|i| i as f64 / (m - 1) as f64).collect(),
+        y: {
+            let mut y = Matrix::zeros(n, m);
+            for i in 0..n {
+                y[(i, 0)] = rng.normal() * 0.1 - 1.0;
+            }
+            y
+        },
+        mask: {
+            let mut mk = Matrix::zeros(n, m);
+            for i in 0..n {
+                mk[(i, 0)] = 1.0;
+            }
+            mk
+        },
+    };
+    let mut eng = RustEngine::default();
+    let theta = eng.fit(&Theta::default_packed(2), &data, 6).unwrap();
+    let samples = eng
+        .sample_curves(&theta, &data, &Matrix::from_vec(1, 2, vec![0.5, 0.5]), 8, 7)
+        .unwrap();
+    for s in &samples {
+        for v in s.data() {
+            assert!(v.is_finite());
+        }
+    }
+}
+
+/// Query configs far outside the training hypercube (transform clamps).
+#[test]
+fn out_of_range_queries_are_clamped() {
+    let x = Matrix::from_vec(3, 2, vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]);
+    let tf = XTransform::fit(&x);
+    let wild = Matrix::from_vec(2, 2, vec![-100.0, 5.0, 100.0, 500.0]);
+    let z = tf.apply(&wild);
+    for v in z.data() {
+        assert!((-1.0..=2.0).contains(v), "{v}");
+    }
+}
+
+/// Constant observed outputs: YTransform must not divide by ~0.
+#[test]
+fn constant_outputs_standardize_safely() {
+    let y = Matrix::from_vec(2, 3, vec![0.7; 6]);
+    let mask = Matrix::from_vec(2, 3, vec![1.0; 6]);
+    let tf = YTransform::fit(&y, &mask);
+    let z = tf.apply(&y, &mask);
+    for v in z.data() {
+        assert!(v.is_finite());
+    }
+    assert!((tf.undo_mean(z[(0, 0)]) - 0.7).abs() < 1e-9);
+}
+
+/// Matheron sampling is deterministic given the seed.
+#[test]
+fn sampling_deterministic_given_seed() {
+    let data = lkgp::lcbench::toy_dataset(6, 8, 2, 8);
+    let theta = Theta::default_packed(2);
+    let xq = Matrix::from_vec(1, 2, vec![0.3, 0.7]);
+    let mut eng = RustEngine::default();
+    let a = eng.sample_curves(&theta, &data, &xq, 4, 99).unwrap();
+    let b = eng.sample_curves(&theta, &data, &xq, 4, 99).unwrap();
+    for (sa, sb) in a.iter().zip(&b) {
+        assert_eq!(sa.data(), sb.data());
+    }
+    let c = eng.sample_curves(&theta, &data, &xq, 4, 100).unwrap();
+    assert_ne!(a[0].data(), c[0].data());
+}
+
+/// Mismatched dataset shapes are rejected, not UB.
+#[test]
+fn shape_errors_are_reported() {
+    let bad = Dataset {
+        x: Matrix::zeros(4, 2),
+        t: vec![0.0, 0.5, 1.0],
+        y: Matrix::zeros(4, 5), // wrong m
+        mask: Matrix::zeros(4, 3),
+    };
+    assert!(bad.check().is_err());
+    let mut rng = Pcg64::new(1);
+    let probes = rng.rademacher_vec(8 * 12);
+    let cfg = SolverCfg::default();
+    assert!(lkgp::gp::lkgp::mll_value_grad(&Theta::default_packed(2), &bad, &probes, &cfg).is_err());
+}
+
+/// Extreme hyper-parameters keep the solver finite (trainer line-search
+/// probes walk into these regions).
+#[test]
+fn extreme_theta_stays_finite() {
+    let data = lkgp::lcbench::toy_dataset(6, 8, 2, 9);
+    let mut rng = Pcg64::new(10);
+    let probes = rng.rademacher_vec(8 * 48);
+    let cfg = SolverCfg { cg_max_iters: 500, ..Default::default() };
+    for packed in [
+        vec![-6.0, -6.0, -6.0, 4.0, -9.0],  // tiny lengthscales, tiny noise
+        vec![6.0, 6.0, 6.0, -6.0, 2.0],     // huge lengthscales, huge noise
+    ] {
+        let eval = lkgp::gp::lkgp::mll_value_grad(&packed, &data, &probes, &cfg).unwrap();
+        assert!(eval.value.is_finite(), "{packed:?}");
+        for g in &eval.grad {
+            assert!(g.is_finite());
+        }
+    }
+}
+
+/// mll_exact and the naive engine agree on a non-prefix (scattered) mask.
+#[test]
+fn scattered_masks_supported() {
+    let mut rng = Pcg64::new(11);
+    let (n, m) = (7, 6);
+    let data = Dataset {
+        x: Matrix::from_vec(n, 2, rng.uniform_vec(n * 2, 0.0, 1.0)),
+        t: (0..m).map(|i| i as f64 / (m - 1) as f64).collect(),
+        y: Matrix::from_vec(n, m, rng.normal_vec(n * m)),
+        mask: Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.5 { 1.0 } else { 0.0 }),
+    };
+    // zero out unobserved y like the transforms do
+    let mut data = data;
+    let mask = data.mask.clone();
+    for (yv, mv) in data.y.data_mut().iter_mut().zip(mask.data()) {
+        *yv *= mv;
+    }
+    let packed = Theta::default_packed(2);
+    let a = lkgp::gp::naive::mll_value_grad_exact(&packed, &data).unwrap().0;
+    let b = lkgp::gp::lkgp::mll_exact(&packed, &data).unwrap();
+    assert!((a - b).abs() < 1e-9);
+}
+
+/// CG handles a zero right-hand side without dividing by zero.
+#[test]
+fn cg_zero_rhs() {
+    let data = lkgp::lcbench::toy_dataset(5, 6, 2, 12);
+    let theta = Theta::unpack(&Theta::default_packed(2));
+    let k1 = lkgp::gp::kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = lkgp::gp::kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+    let rhs = vec![0.0; 30];
+    let (x, stats) = op.solve(&rhs, 1e-8, 100);
+    assert_eq!(stats.iters, 0);
+    assert!(x.iter().all(|&v| v == 0.0));
+}

@@ -1,0 +1,146 @@
+//! Property-based integration tests (via testutil::property) over the
+//! coordinator and operator invariants — randomized shapes, masks, seeds.
+
+use lkgp::coordinator::{CurveStore, Registry, TrialStatus};
+use lkgp::gp::kernels;
+use lkgp::gp::operator::MaskedKronOp;
+use lkgp::gp::Theta;
+use lkgp::linalg::{self, LinOp, Matrix};
+use lkgp::testutil::{gen_prefix_mask, gen_usize, property};
+
+#[test]
+fn prop_operator_symmetric_psd_any_mask() {
+    property(40, |rng| {
+        let n = gen_usize(rng, 1, 12);
+        let m = gen_usize(rng, 1, 10);
+        let d = gen_usize(rng, 1, 4);
+        let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+        let ls: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.3, 2.0)).collect();
+        let k1 = kernels::rbf(&x, &x, &ls);
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / m as f64).collect();
+        let k2 = kernels::matern12(&t, &t, rng.uniform_in(0.1, 1.0), rng.uniform_in(0.5, 2.0));
+        let mask = Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.6 { 1.0 } else { 0.0 });
+        let s2 = rng.uniform_in(0.01, 0.5);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+
+        let u = rng.normal_vec(n * m);
+        let v = rng.normal_vec(n * m);
+        let mut au = vec![0.0; n * m];
+        let mut av = vec![0.0; n * m];
+        op.apply_batch(&u, &mut au, 1);
+        op.apply_batch(&v, &mut av, 1);
+        // symmetry
+        let uav = linalg::matrix::dot(&u, &av);
+        let vau = linalg::matrix::dot(&v, &au);
+        assert!((uav - vau).abs() < 1e-8 * (1.0 + uav.abs()));
+        // positive definiteness along random directions
+        let uau = linalg::matrix::dot(&u, &au);
+        assert!(uau > 0.0, "u^T A u = {uau}");
+    });
+}
+
+#[test]
+fn prop_cg_solves_masked_system() {
+    property(25, |rng| {
+        let n = gen_usize(rng, 2, 8);
+        let m = gen_usize(rng, 2, 8);
+        let x = Matrix::from_vec(n, 2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let k1 = kernels::rbf(&x, &x, &[1.0, 1.0]);
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / m as f64).collect();
+        let k2 = kernels::matern12(&t, &t, 0.5, 1.0);
+        let mask = gen_prefix_mask(rng, n, m, 1);
+        let s2 = rng.uniform_in(0.05, 0.5);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
+        let (sol, stats) = op.solve(&rhs, 1e-9, 3000);
+        assert!(stats.converged);
+        // verify A x = b on observed entries, x = 0 on missing
+        let mut back = vec![0.0; n * m];
+        op.apply_batch(&sol, &mut back, 1);
+        for i in 0..n * m {
+            if mask.data()[i] > 0.0 {
+                assert!((back[i] - rhs[i]).abs() < 1e-6);
+            } else {
+                assert_eq!(sol[i], 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_registry_epoch_accounting() {
+    property(30, |rng| {
+        let mut reg = Registry::new();
+        let k = gen_usize(rng, 1, 10);
+        let max_ep = gen_usize(rng, 2, 12);
+        let mut expected_total = 0;
+        for _ in 0..k {
+            let id = reg.add(vec![rng.uniform(), rng.uniform()]);
+            let eps = gen_usize(rng, 0, max_ep);
+            for e in 0..eps {
+                if reg.observe(id, rng.uniform(), max_ep).is_err() {
+                    break;
+                }
+                expected_total += 1;
+                let _ = e;
+            }
+        }
+        assert_eq!(reg.total_epochs(), expected_total);
+        // completed iff curve length == max_ep
+        for t in reg.iter() {
+            assert_eq!(
+                t.status == TrialStatus::Completed,
+                t.epochs_trained() >= max_ep
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_snapshot_roundtrips_observations() {
+    property(20, |rng| {
+        let mut reg = Registry::new();
+        let k = gen_usize(rng, 1, 8);
+        let max_ep = gen_usize(rng, 3, 10);
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..k {
+            let id = reg.add(vec![rng.uniform(), rng.uniform(), rng.uniform()]);
+            let eps = gen_usize(rng, 1, max_ep - 1);
+            let mut c = Vec::new();
+            for _ in 0..eps {
+                let v = rng.uniform_in(0.2, 0.9);
+                reg.observe(id, v, max_ep).unwrap();
+                c.push(v);
+            }
+            curves.push(c);
+        }
+        let mut store = CurveStore::new(max_ep);
+        let snap = store.snapshot(&reg).unwrap();
+        // undoing the y-transform must recover raw observations exactly
+        for (row, c) in curves.iter().enumerate() {
+            for (j, &v) in c.iter().enumerate() {
+                assert!(snap.data.mask[(row, j)] > 0.0);
+                let back = snap.ytf.undo_mean(snap.data.y[(row, j)]);
+                assert!((back - v).abs() < 1e-9, "row={row} j={j}");
+            }
+            for j in c.len()..max_ep {
+                assert_eq!(snap.data.mask[(row, j)], 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_theta_pack_unpack_identity() {
+    property(50, |rng| {
+        let d = gen_usize(rng, 1, 12);
+        let packed: Vec<f64> = (0..d + 3).map(|_| rng.uniform_in(-4.0, 3.0)).collect();
+        let theta = Theta::unpack(&packed);
+        let back = theta.pack();
+        for (a, b) in packed.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert!(theta.lengthscales.iter().all(|&l| l > 0.0));
+        assert!(theta.sigma2 > 0.0);
+    });
+}
