@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# CI for the lkgp repo.
+#
+#   tier-1 (hard gate):  cargo build --release && cargo test -q
+#   style  (soft gate):  cargo fmt --check, cargo clippy -- -D warnings
+#   perf   (record):     cargo bench --bench hotpath -- --quick
+#                        -> BENCH_hotpath.json at the repo root
+#
+# Style/lint failures are reported but non-fatal unless CI_STRICT=1, so a
+# missing rustfmt/clippy component (minimal offline toolchains) or a
+# legacy-formatting file never masks a real build/test regression.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+MANIFEST=rust/Cargo.toml
+
+echo "== tier-1: build =="
+cargo build --release --manifest-path "$MANIFEST"
+
+echo "== tier-1: test =="
+cargo test -q --manifest-path "$MANIFEST"
+
+soft_status=0
+
+echo "== style: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+  if ! cargo fmt --manifest-path "$MANIFEST" -- --check; then
+    echo "WARN: cargo fmt --check failed"
+    soft_status=1
+  fi
+else
+  echo "rustfmt not installed; skipped"
+fi
+
+echo "== lint: cargo clippy -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+  if ! cargo clippy --manifest-path "$MANIFEST" --all-targets -- -D warnings; then
+    echo "WARN: clippy failed"
+    soft_status=1
+  fi
+else
+  echo "clippy not installed; skipped"
+fi
+
+echo "== perf: hotpath bench (quick) =="
+cargo bench --manifest-path "$MANIFEST" --bench hotpath -- --quick
+if [ -f BENCH_hotpath.json ]; then
+  echo "perf record:"
+  cat BENCH_hotpath.json
+fi
+
+if [ "$soft_status" -ne 0 ]; then
+  echo "style/lint warnings present (set CI_STRICT=1 to make them fatal)"
+  if [ "${CI_STRICT:-0}" = "1" ]; then
+    exit "$soft_status"
+  fi
+fi
+echo "CI OK"

@@ -109,38 +109,43 @@ fn probe_count_sweep(n: usize, m: usize) -> lkgp::Result<()> {
 }
 
 /// XLA bucket padding: same logical problem executed at its natural size
-/// vs padded into a larger bucket.
+/// vs padded into a larger bucket. Needs the `xla` feature.
 fn padding_overhead() -> lkgp::Result<()> {
     println!("\n== ablation: artifact bucket padding overhead ==");
-    let dir = lkgp::runtime::XlaEngine::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("(artifacts not built; skipped)");
-        return Ok(());
+    #[cfg(not(feature = "xla"))]
+    println!("(xla feature disabled; skipped)");
+    #[cfg(feature = "xla")]
+    {
+        let dir = lkgp::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            println!("(artifacts not built; skipped)");
+            return Ok(());
+        }
+        let mut eng = lkgp::runtime::XlaEngine::load(&dir)?;
+        let theta = Theta::default_packed(7);
+        let mut table = Table::new(&["n", "bucket_n", "mll_grad_ms"]);
+        // 52-epoch, d=7 quality buckets: n in {16, 32, 64}
+        for n in [12usize, 16, 24, 32, 48, 64] {
+            let data = toy_dataset(n, 52, 7, n as u64);
+            let Ok(spec) = eng.manifest().pick("mll_grad", n, 52, 7) else {
+                continue;
+            };
+            let bucket_n = spec.n;
+            let stats = bench(
+                || {
+                    let _ = eng.mll_grad(&theta, &data, 1).unwrap();
+                },
+                3,
+                std::time::Duration::from_millis(300),
+            );
+            table.row(vec![
+                n.to_string(),
+                bucket_n.to_string(),
+                format!("{:.1}", stats.median_secs() * 1e3),
+            ]);
+        }
+        table.write_csv("results/ablations_padding.csv")?;
     }
-    let mut eng = lkgp::runtime::XlaEngine::load(&dir)?;
-    let theta = Theta::default_packed(7);
-    let mut table = Table::new(&["n", "bucket_n", "mll_grad_ms"]);
-    // 52-epoch, d=7 quality buckets: n in {16, 32, 64}
-    for n in [12usize, 16, 24, 32, 48, 64] {
-        let data = toy_dataset(n, 52, 7, n as u64);
-        let Ok(spec) = eng.manifest().pick("mll_grad", n, 52, 7) else {
-            continue;
-        };
-        let bucket_n = spec.n;
-        let stats = bench(
-            || {
-                let _ = eng.mll_grad(&theta, &data, 1).unwrap();
-            },
-            3,
-            std::time::Duration::from_millis(300),
-        );
-        table.row(vec![
-            n.to_string(),
-            bucket_n.to_string(),
-            format!("{:.1}", stats.median_secs() * 1e3),
-        ]);
-    }
-    table.write_csv("results/ablations_padding.csv")?;
     Ok(())
 }
 

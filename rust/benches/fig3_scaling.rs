@@ -27,6 +27,7 @@ use lkgp::lcbench::fig3_dataset;
 use lkgp::linalg::Matrix;
 use lkgp::metrics::alloc::AllocTracker;
 use lkgp::rng::Pcg64;
+#[cfg(feature = "xla")]
 use lkgp::runtime::Engine;
 use lkgp::util::Args;
 
@@ -46,7 +47,6 @@ fn main() -> lkgp::Result<()> {
     let cg_cap = args.get_usize("cg-cap", 100);
     let queries = 16; // predict: sample curves for query configs
     let samples = 4;
-    let with_xla = args.has("xla");
 
     let mut table = Table::new(&[
         "size", "engine", "train_s", "predict_s", "peak_alloc_mb", "rss_mb",
@@ -92,9 +92,10 @@ fn main() -> lkgp::Result<()> {
         }
 
         // ---- LKGP through the AOT artifacts (optional series) ----
-        if with_xla {
+        #[cfg(feature = "xla")]
+        if args.has("xla") {
             if let Ok(mut eng) =
-                lkgp::runtime::XlaEngine::load(&lkgp::runtime::XlaEngine::default_dir())
+                lkgp::runtime::XlaEngine::load(&lkgp::runtime::artifacts_dir())
             {
                 if eng.manifest().pick("fit_adam", size, size, 10).is_ok() {
                     let tracker = AllocTracker::start();

@@ -37,7 +37,6 @@ fn main() -> lkgp::Result<()> {
     } else {
         vec![50, 100, 200, 400, 800]
     };
-    let with_xla = args.has("xla");
 
     let mut table = Table::new(&[
         "task", "train_examples", "method", "mse_mean", "mse_stderr", "llh_mean", "llh_stderr",
@@ -75,9 +74,10 @@ fn main() -> lkgp::Result<()> {
                 }
 
                 // ---- LKGP through AOT artifacts ----
-                if with_xla {
+                #[cfg(feature = "xla")]
+                if args.has("xla") {
                     if let Ok(mut eng) = lkgp::runtime::XlaEngine::load(
-                        &lkgp::runtime::XlaEngine::default_dir(),
+                        &lkgp::runtime::artifacts_dir(),
                     ) {
                         if eng
                             .manifest()

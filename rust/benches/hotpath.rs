@@ -4,17 +4,28 @@
 //!   engine and (optionally) the Pallas-backed XLA artifact
 //! * batched CG per-iteration cost
 //! * panel-parallel matmul GFLOP/s (the rust roofline anchor)
-//! * Matheron sampling end-to-end
+//! * warm-started vs cold CG on an incremental-mask refit (the
+//!   scheduler's generation-to-generation workload)
+//! * 4-shard ServicePool vs 4 isolated single-task services on the same
+//!   worker-thread budget (aggregate PredictFinal throughput)
 //!
-//! Output: results/hotpath.csv. Flags: --quick, --xla.
+//! Output: results/hotpath.csv + BENCH_hotpath.json at the repo root (the
+//! perf-trajectory record). Flags: --quick, --xla.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
 
 use lkgp::bench_util::{bench, Table};
+use lkgp::coordinator::{
+    CurveStore, PoolCfg, PredictionService, Registry, Request, ServicePool, Snapshot,
+};
 use lkgp::gp::kernels;
-use lkgp::gp::operator::MaskedKronOp;
 use lkgp::gp::Theta;
-use lkgp::lcbench::fig3_dataset;
+use lkgp::json::Json;
+use lkgp::lcbench::{fig3_dataset, toy_dataset};
 use lkgp::linalg::{LinOp, Matrix};
 use lkgp::rng::Pcg64;
+use lkgp::runtime::{Engine, RustEngine};
 use lkgp::util::Args;
 
 fn main() -> lkgp::Result<()> {
@@ -25,7 +36,6 @@ fn main() -> lkgp::Result<()> {
     } else {
         vec![64, 128, 256, 512]
     };
-    let with_xla = args.has("xla");
     let mut table = Table::new(&["op", "size", "median_us", "gflops"]);
 
     // ---- raw matmul roofline anchor ----
@@ -55,7 +65,7 @@ fn main() -> lkgp::Result<()> {
         let theta = Theta::unpack(&Theta::default_packed(10));
         let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
         let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
-        let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+        let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
         let v = rng.normal_vec(nn * nn);
         let mut out = vec![0.0; nn * nn];
         let stats = bench(
@@ -73,10 +83,9 @@ fn main() -> lkgp::Result<()> {
     }
 
     // ---- MVM through the Pallas-backed artifact ----
-    if with_xla {
-        if let Ok(mut eng) =
-            lkgp::runtime::XlaEngine::load(&lkgp::runtime::XlaEngine::default_dir())
-        {
+    #[cfg(feature = "xla")]
+    if args.has("xla") {
+        if let Ok(mut eng) = lkgp::runtime::XlaEngine::load(&lkgp::runtime::artifacts_dir()) {
             for &nn in &sizes {
                 let mut rng = Pcg64::new(nn as u64);
                 let data = fig3_dataset(nn, &mut rng);
@@ -102,6 +111,8 @@ fn main() -> lkgp::Result<()> {
             }
         }
     }
+    #[cfg(not(feature = "xla"))]
+    let _ = &args;
 
     // ---- one batched CG solve (17 RHS like training) ----
     for &nn in &sizes {
@@ -113,7 +124,7 @@ fn main() -> lkgp::Result<()> {
         let theta = Theta::unpack(&Theta::default_packed(10));
         let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
         let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
-        let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+        let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
         let rhs = rng.normal_vec(17 * nn * nn);
         let stats = bench(
             || {
@@ -130,7 +141,232 @@ fn main() -> lkgp::Result<()> {
         ]);
     }
 
+    // ---- warm vs cold CG on an incremental-mask refit ----
+    let (cold_iters, warm_iters, cold_total, warm_total) = warm_vs_cold_refit(&mut table);
+
+    // ---- 4-shard pool vs 4 isolated services, same thread budget ----
+    let (pool_rps, isolated_rps) = pool_vs_isolated(&mut table, quick);
+
     table.write_csv("results/hotpath.csv")?;
     println!("\nwrote results/hotpath.csv");
+
+    // ---- perf-trajectory record ----
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        (
+            "warm_cg",
+            Json::obj(vec![
+                ("n", Json::Num(64.0)),
+                ("cold_iters_max", Json::Num(cold_iters as f64)),
+                ("warm_iters_max", Json::Num(warm_iters as f64)),
+                ("cold_iters_total", Json::Num(cold_total as f64)),
+                ("warm_iters_total", Json::Num(warm_total as f64)),
+            ]),
+        ),
+        (
+            "serving",
+            Json::obj(vec![
+                ("tasks", Json::Num(4.0)),
+                ("pool_rps", Json::Num(pool_rps)),
+                ("isolated_rps", Json::Num(isolated_rps)),
+                ("speedup", Json::Num(pool_rps / isolated_rps.max(1e-9))),
+            ]),
+        ),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .to_path_buf();
+    std::fs::write(root.join("BENCH_hotpath.json"), summary.pretty())?;
+    println!("wrote {}", root.join("BENCH_hotpath.json").display());
     Ok(())
+}
+
+/// The scheduler's generation-to-generation workload: re-solve the refit
+/// system `[y, probes]` after every curve gains one more observed epoch.
+/// Cold starts from zero; warm starts from the previous generation's
+/// solves (acceptance: measurably fewer iterations at n >= 64).
+fn warm_vs_cold_refit(table: &mut Table) -> (usize, usize, usize, usize) {
+    let (n, m, d, probes_cnt) = (64usize, 48usize, 3usize, 8usize);
+    let gen1 = toy_dataset(n, m, d, 1);
+    // generation 2: every unfinished curve trains one more epoch
+    let mut gen2 = gen1.clone();
+    for i in 0..n {
+        let len = (0..m).take_while(|&j| gen1.mask[(i, j)] > 0.0).count();
+        if len < m {
+            let prev = gen2.y[(i, len.saturating_sub(1))];
+            gen2.mask[(i, len)] = 1.0;
+            gen2.y[(i, len)] = prev;
+        }
+    }
+    let theta = Theta::unpack(&Theta::default_packed(d));
+    let k1 = kernels::rbf(&gen1.x, &gen1.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&gen1.t, &gen1.t, theta.t_lengthscale, theta.outputscale);
+    let op1 = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &gen1.mask, theta.sigma2);
+    let op2 = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &gen2.mask, theta.sigma2);
+
+    let nm = n * m;
+    let probes = Pcg64::new(2).rademacher_vec(probes_cnt * nm);
+    let mut rhs1 = Vec::with_capacity((probes_cnt + 1) * nm);
+    rhs1.extend_from_slice(gen1.y.data());
+    rhs1.extend_from_slice(&probes);
+    let mut rhs2 = Vec::with_capacity((probes_cnt + 1) * nm);
+    rhs2.extend_from_slice(gen2.y.data());
+    rhs2.extend_from_slice(&probes);
+
+    let (solves1, _) = op1.solve(&rhs1, 1e-2, 10_000);
+
+    let t0 = Instant::now();
+    let (_, cold) = op2.solve(&rhs2, 1e-2, 10_000);
+    let cold_us = t0.elapsed().as_micros();
+    let t1 = Instant::now();
+    let (_, warm) = op2.solve_warm(&rhs2, Some(&solves1), 1e-2, 10_000);
+    let warm_us = t1.elapsed().as_micros();
+
+    let cold_total: usize = cold.iters_per_rhs.iter().sum();
+    let warm_total: usize = warm.iters_per_rhs.iter().sum();
+    println!(
+        "\nincremental-mask refit (n={n}, m={m}, {} RHS): \
+         cold {} iters ({cold_us}us) vs warm {} iters ({warm_us}us)",
+        probes_cnt + 1,
+        cold.iters,
+        warm.iters,
+    );
+    table.row(vec![
+        "cg_refit_cold".into(),
+        n.to_string(),
+        cold_us.to_string(),
+        format!("iters={}", cold.iters),
+    ]);
+    table.row(vec![
+        "cg_refit_warm".into(),
+        n.to_string(),
+        warm_us.to_string(),
+        format!("iters={}", warm.iters),
+    ]);
+    (cold.iters, warm.iters, cold_total, warm_total)
+}
+
+fn serving_snapshot(seed: u64) -> Snapshot {
+    let mut rng = Pcg64::new(seed);
+    let mut reg = Registry::new();
+    for _ in 0..24 {
+        let id = reg.add(vec![rng.uniform(), rng.uniform(), rng.uniform()]);
+        for j in 0..4 + rng.below(8) {
+            reg.observe(id, 0.4 + 0.03 * j as f64 + 0.05 * rng.uniform(), 16)
+                .unwrap();
+        }
+    }
+    CurveStore::new(16).snapshot(&reg).unwrap()
+}
+
+/// Aggregate PredictFinal throughput: a 4-shard pool with 4 shared workers
+/// vs 4 isolated single-task services (one worker each — the same thread
+/// budget). The pool's per-shard warm cache makes every round after the
+/// first start its training solve from the previous solution; the
+/// isolated seed-style services solve cold every time.
+fn pool_vs_isolated(table: &mut Table, quick: bool) -> (f64, f64) {
+    const TASKS: usize = 4;
+    let rounds = if quick { 6 } else { 12 };
+    let callers = 8;
+    let snaps: Vec<Snapshot> = (0..TASKS as u64).map(|t| serving_snapshot(100 + t)).collect();
+    // Each round models one scheduler generation: the refit nudges theta,
+    // the active query set stays put. The pool's warm cache turns every
+    // round after the first into a near-converged solve; the isolated
+    // services solve cold each time.
+    let thetas: Vec<Vec<f64>> = (0..rounds)
+        .map(|r| {
+            let mut t = Theta::default_packed(3);
+            t[0] += 0.02 * r as f64;
+            t
+        })
+        .collect();
+    let total = (TASKS * rounds * callers) as f64;
+
+    // --- isolated: one PredictionService (one worker thread) per task ---
+    let services: Vec<PredictionService> = (0..TASKS)
+        .map(|_| PredictionService::spawn(Box::<RustEngine>::default()))
+        .collect();
+    let t0 = Instant::now();
+    for round in 0..rounds {
+        let mut receivers = Vec::new();
+        for (t, service) in services.iter().enumerate() {
+            for c in 0..callers {
+                let (rtx, rrx) = channel();
+                service
+                    .sender()
+                    .send(Request::PredictFinal {
+                        snapshot: snaps[t].clone(),
+                        theta: thetas[round].clone(),
+                        xq: Matrix::from_vec(1, 3, vec![0.1 * c as f64, 0.5, 0.5]),
+                        resp: rtx,
+                    })
+                    .unwrap();
+                receivers.push(rrx);
+            }
+        }
+        for r in receivers {
+            r.recv().unwrap().unwrap();
+        }
+    }
+    let isolated_secs = t0.elapsed().as_secs_f64();
+    drop(services);
+
+    // --- pooled: 4 shards behind 4 shared workers, warm starts on ---
+    let engines: Vec<Box<dyn Engine>> = (0..TASKS)
+        .map(|_| Box::<RustEngine>::default() as Box<dyn Engine>)
+        .collect();
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg { workers: TASKS, warm_start: true, ..Default::default() },
+    );
+    let t1 = Instant::now();
+    for round in 0..rounds {
+        let mut receivers = Vec::new();
+        for (t, snap) in snaps.iter().enumerate() {
+            for c in 0..callers {
+                let (rtx, rrx) = channel();
+                pool.submit(
+                    t,
+                    Request::PredictFinal {
+                        snapshot: snap.clone(),
+                        theta: thetas[round].clone(),
+                        xq: Matrix::from_vec(1, 3, vec![0.1 * c as f64, 0.5, 0.5]),
+                        resp: rtx,
+                    },
+                )
+                .unwrap();
+                receivers.push(rrx);
+            }
+        }
+        for r in receivers {
+            r.recv().unwrap().unwrap();
+        }
+    }
+    let pool_secs = t1.elapsed().as_secs_f64();
+    let warm_hits: u64 = (0..TASKS)
+        .map(|t| pool.stats(t).warm_hits.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    drop(pool);
+
+    let pool_rps = total / pool_secs.max(1e-9);
+    let isolated_rps = total / isolated_secs.max(1e-9);
+    println!(
+        "\nserving throughput ({TASKS} tasks x {rounds} rounds x {callers} callers): \
+         pool {pool_rps:.0} req/s vs isolated {isolated_rps:.0} req/s \
+         ({warm_hits} warm engine calls)"
+    );
+    table.row(vec![
+        "serve_pool_4shard".into(),
+        (TASKS * rounds * callers).to_string(),
+        format!("{:.0}", pool_secs * 1e6),
+        format!("{pool_rps:.0}rps"),
+    ]);
+    table.row(vec![
+        "serve_isolated_4x1".into(),
+        (TASKS * rounds * callers).to_string(),
+        format!("{:.0}", isolated_secs * 1e6),
+        format!("{isolated_rps:.0}rps"),
+    ]);
+    (pool_rps, isolated_rps)
 }

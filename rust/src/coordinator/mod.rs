@@ -22,8 +22,10 @@ pub mod trial;
 
 pub use policy::{Decision, Policy, TrialForecast};
 pub use scheduler::{EpochRunner, RunReport, Scheduler, SchedulerCfg};
-pub use service::{PredictionService, Request, ServiceStats};
-pub use store::{CurveStore, Snapshot};
+pub use service::{
+    PoolCfg, PredictClient, PredictionService, Request, ServicePool, ServiceStats, ShardHandle,
+};
+pub use store::{CurveStore, Snapshot, WarmStart};
 pub use trial::{Registry, Trial, TrialId, TrialStatus};
 
 use crate::util::Args;
@@ -91,5 +93,95 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
         service.stats.latency.lock().unwrap().quantile_micros(0.5),
         service.stats.latency.lock().unwrap().quantile_micros(0.99),
     );
+    Ok(())
+}
+
+/// CLI `lkgp pool`: run several freeze-thaw coordinators concurrently,
+/// each on its own simulated LCBench task, through one multi-task
+/// [`ServicePool`] — the serving topology the north-star calls for. Prints
+/// a per-shard report (regret, batching factor, warm hits, latency,
+/// queue depth).
+pub fn serve_pool(args: &Args) -> crate::Result<()> {
+    let seed = args.get_u64("seed", 0);
+    let tasks = args.get_usize("tasks", 3).max(1);
+    let n_configs = args.get_usize("configs", 16);
+    let budget = args.get_usize("budget", 200);
+    let workers = args
+        .get_usize("workers", crate::util::num_threads().min(tasks.max(1)))
+        .max(1);
+    let warm = args.get("warm").unwrap_or("on") != "off";
+    let presets = crate::lcbench::Preset::all();
+
+    let engines: Vec<Box<dyn crate::runtime::Engine>> = (0..tasks)
+        .map(|_| Box::<crate::runtime::RustEngine>::default() as Box<dyn crate::runtime::Engine>)
+        .collect();
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg { workers, warm_start: warm, ..Default::default() },
+    );
+    println!("pool: {tasks} shards, {workers} workers, warm_start={warm}");
+
+    struct SimRunner {
+        task: crate::lcbench::Task,
+    }
+    impl EpochRunner for SimRunner {
+        fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
+            self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
+        }
+    }
+
+    let mut results: Vec<(usize, &'static str, RunReport, f64)> = Vec::new();
+    std::thread::scope(|scope| -> crate::Result<()> {
+        let mut joins = Vec::new();
+        for t in 0..tasks {
+            let handle = pool.handle(t);
+            let preset = presets[t % presets.len()];
+            joins.push(scope.spawn(move || -> crate::Result<(usize, &'static str, RunReport, f64)> {
+                let mut rng = crate::rng::Pcg64::new(seed + t as u64);
+                let task = crate::lcbench::Task::generate(preset, n_configs, &mut rng);
+                let oracle = (0..task.n())
+                    .map(|i| task.curves[(i, task.m() - 1)])
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let cfg = SchedulerCfg {
+                    epoch_budget: budget,
+                    seed: seed + t as u64,
+                    ..Default::default()
+                };
+                let mut sched = Scheduler::new(task.m(), cfg);
+                let configs: Vec<Vec<f64>> =
+                    (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
+                sched.add_candidates(&configs);
+                let mut runner = SimRunner { task };
+                let report = sched.run(&mut runner, &handle)?;
+                Ok((t, preset.name(), report, oracle))
+            }));
+        }
+        for j in joins {
+            let out = j
+                .join()
+                .map_err(|_| crate::LkgpError::Coordinator("shard scheduler panicked".into()))??;
+            results.push(out);
+        }
+        Ok(())
+    })?;
+
+    results.sort_by_key(|r| r.0);
+    for (t, name, report, oracle) in &results {
+        let stats = pool.stats(*t);
+        println!(
+            "shard {t} ({name}): best={:.4} regret={:.4} epochs={} rounds={} \
+             batch_factor={:.2} warm_hits={} cg_iters={} peak_queue={} p50={}us p99={}us",
+            report.best_value,
+            oracle - report.best_value,
+            report.epochs_spent,
+            report.rounds,
+            report.batch_factor,
+            stats.warm_hits.load(std::sync::atomic::Ordering::Relaxed),
+            stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed),
+            stats.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
+            stats.latency.lock().unwrap().quantile_micros(0.5),
+            stats.latency.lock().unwrap().quantile_micros(0.99),
+        );
+    }
     Ok(())
 }

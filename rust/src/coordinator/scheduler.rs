@@ -15,8 +15,8 @@ use crate::gp::Theta;
 use crate::linalg::Matrix;
 
 use super::policy::{Decision, Policy, TrialForecast};
-use super::service::PredictionService;
-use super::store::CurveStore;
+use super::service::PredictClient;
+use super::store::{CurveStore, WarmStart};
 use super::trial::{Registry, TrialId, TrialStatus};
 
 /// Executes one training epoch of a trial and returns the metric value.
@@ -104,11 +104,13 @@ impl Scheduler {
     }
 
     /// Run the loop until the epoch budget is exhausted or nothing is left
-    /// to train.
+    /// to train. `service` is any [`PredictClient`]: the single-task
+    /// [`super::service::PredictionService`] or a [`super::service::ShardHandle`]
+    /// of a multi-task pool.
     pub fn run(
         &mut self,
         runner: &mut dyn EpochRunner,
-        service: &PredictionService,
+        service: &dyn PredictClient,
     ) -> crate::Result<RunReport> {
         let max_epochs = self.store.max_epochs();
         let mut rounds = 0;
@@ -158,13 +160,13 @@ impl Scheduler {
             best_trial,
             stopped: self.registry.by_status(TrialStatus::Stopped).len(),
             completed: self.registry.by_status(TrialStatus::Completed).len(),
-            batch_factor: service.stats.batch_factor(),
+            batch_factor: service.batch_factor(),
             trace,
         })
     }
 
     /// Refit + forecast + promote/pause/stop.
-    fn replan(&mut self, service: &PredictionService, round: usize) -> crate::Result<()> {
+    fn replan(&mut self, service: &dyn PredictClient, round: usize) -> crate::Result<()> {
         let snapshot = match self.store.snapshot(&self.registry) {
             Ok(s) => s,
             Err(_) => return Ok(()), // nothing observed yet
@@ -177,6 +179,18 @@ impl Scheduler {
             self.theta.clone()
         };
         self.theta = service.refit(snapshot.clone(), theta0, self.cfg.seed + round as u64)?;
+        // Record the fitted theta as warm-start lineage: future snapshots
+        // carry it, so any solver downstream (including a fresh service
+        // shard) can start from it instead of the prior mean.
+        self.store.record_warm(WarmStart {
+            generation: snapshot.generation,
+            theta: self.theta.clone(),
+            row_ids: (*snapshot.row_ids).clone(),
+            m: snapshot.data.m(),
+            alpha: Vec::new(),
+            xq: None,
+            cross: Vec::new(),
+        });
 
         // forecast finals for every active (non-terminal) config
         let active: Vec<TrialId> = snapshot

@@ -1,17 +1,35 @@
-//! Prediction service: a worker thread owning the GP engine, fed through
-//! an mpsc channel with dynamic request batching.
+//! Prediction serving: single-task worker services and the multi-task
+//! sharded [`ServicePool`].
 //!
 //! This is the vLLM-router pattern scaled to this workload: many
 //! concurrent callers (scheduler rounds, UI, benches) enqueue
-//! `PredictFinal` queries; the worker drains the queue and coalesces all
+//! `PredictFinal` queries; a worker drains the queue and coalesces all
 //! queries that target the same model generation into a single engine
 //! call (one artifact execution / one batched CG), then scatters the
 //! per-caller responses. Refits and sampling requests pass through the
 //! same queue, preserving order within a generation.
+//!
+//! Two front-ends share the same batching core:
+//!
+//! * [`PredictionService`] — the original single-task service: one worker
+//!   thread owning one engine, fed through an mpsc channel. Cold solves
+//!   only (stable baseline).
+//! * [`ServicePool`] — the multi-task serving layer: per-task engine
+//!   shards behind a shared worker pool. Requests are routed by task id,
+//!   same-generation `PredictFinal` batches coalesce *across* concurrent
+//!   callers per shard, submission applies backpressure (bounded per-shard
+//!   queues), and every shard tracks latency/queue-depth/warm-start
+//!   metrics. Each shard caches the previous generation's converged
+//!   `alpha` (and fitted theta) as a [`WarmStart`] so the next
+//!   generation's near-identical masked-Kronecker solve starts from the
+//!   prior solution instead of zero (see `linalg::cg_batch_warm`).
+//!
+//! Schedulers drive either front-end through the [`PredictClient`] trait.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::gp::Theta;
@@ -19,7 +37,7 @@ use crate::linalg::Matrix;
 use crate::metrics::LatencyHist;
 use crate::runtime::Engine;
 
-use super::store::Snapshot;
+use super::store::{Snapshot, WarmStart};
 
 /// A request to the prediction service.
 pub enum Request {
@@ -51,13 +69,21 @@ pub enum Request {
     Shutdown,
 }
 
-/// Shared service statistics.
+/// Shared service statistics (one instance per service / per pool shard).
 #[derive(Default)]
 pub struct ServiceStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
     pub latency: Mutex<LatencyHist>,
+    /// Requests enqueued through a pool shard (submit path).
+    pub enqueued: AtomicU64,
+    /// Highest per-shard queue depth observed at enqueue time.
+    pub peak_queue_depth: AtomicU64,
+    /// Engine calls that ran with a warm-start guess.
+    pub warm_hits: AtomicU64,
+    /// Total per-RHS CG iterations reported by warm-capable engines.
+    pub cg_iters: AtomicU64,
 }
 
 impl ServiceStats {
@@ -68,7 +94,250 @@ impl ServiceStats {
     }
 }
 
-/// Handle to the service thread.
+/// Synchronous client interface to a prediction backend: the single-task
+/// [`PredictionService`] or one shard of a [`ServicePool`]. The scheduler
+/// is written against this trait, so it runs unchanged on either.
+pub trait PredictClient {
+    /// Re-fit hyper-parameters on a snapshot (blocking).
+    fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>>;
+
+    /// Final-value predictions for query rows (blocking).
+    fn predict_final(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+    ) -> crate::Result<Vec<(f64, f64)>>;
+
+    /// Posterior curve samples (blocking).
+    fn sample_curves(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        samples: usize,
+        seed: u64,
+    ) -> crate::Result<Vec<Matrix>>;
+
+    /// Mean queries per engine call (batching factor), for run reports.
+    fn batch_factor(&self) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// Shared batching core
+
+/// An engine plus its warm-start cache; exclusive to one worker at a time.
+struct EngineSlot {
+    engine: Box<dyn Engine>,
+    warm: Option<Arc<WarmStart>>,
+}
+
+/// A queued `PredictFinal` awaiting coalescing.
+struct PendingPredict {
+    snapshot: Snapshot,
+    theta: Vec<f64>,
+    xq: Matrix,
+    resp: Sender<crate::Result<Vec<(f64, f64)>>>,
+}
+
+/// Flush queued predictions: group by (generation, theta), stack each
+/// group's queries into one engine call, scatter the responses. With
+/// `warm_enabled`, solves start from the shard's cached alpha (or the
+/// snapshot's lineage) and the converged alpha is cached back.
+fn flush_predicts(
+    slot: &mut EngineSlot,
+    predicts: &mut Vec<PendingPredict>,
+    stats: &ServiceStats,
+    warm_enabled: bool,
+) {
+    while !predicts.is_empty() {
+        let gen0 = predicts[0].snapshot.generation;
+        let theta0 = predicts[0].theta.clone();
+        let cols0 = predicts[0].xq.cols();
+        // Bitwise theta comparison so the head request always matches its
+        // own group even if a caller passed NaN; query width is part of
+        // the key so heterogeneous requests can never corrupt the stack.
+        let same_theta = |t: &[f64]| {
+            t.len() == theta0.len()
+                && t.iter().zip(&theta0).all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        let group: Vec<PendingPredict> = {
+            let (take, keep): (Vec<PendingPredict>, Vec<PendingPredict>) =
+                predicts.drain(..).partition(|p| {
+                    p.snapshot.generation == gen0
+                        && p.xq.cols() == cols0
+                        && same_theta(&p.theta)
+                });
+            *predicts = keep;
+            take
+        };
+        let snap = group[0].snapshot.clone();
+        // stack queries
+        let total: usize = group.iter().map(|p| p.xq.rows()).sum();
+        let d = group[0].xq.cols();
+        let mut xq = Matrix::zeros(total, d);
+        let mut row = 0;
+        for p in &group {
+            for r in 0..p.xq.rows() {
+                xq.row_mut(row).copy_from_slice(p.xq.row(r));
+                row += 1;
+            }
+        }
+        // warm-start guess: shard cache first, then snapshot lineage. The
+        // full batched guess (alpha + cross columns) applies when the same
+        // queries repeat; otherwise the alpha alone is embedded.
+        let guess: Option<Vec<f64>> = if warm_enabled {
+            slot.warm
+                .as_ref()
+                .or(snap.warm.as_ref())
+                .and_then(|w| w.embed_predict(&snap.row_ids, snap.data.m(), &xq))
+        } else {
+            None
+        };
+        let t0 = Instant::now();
+        let result = slot
+            .engine
+            .predict_final_warm(&theta0, &snap.data, &xq, guess.as_deref());
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .batched_queries
+            .fetch_add(group.len() as u64, Ordering::Relaxed);
+        if guess.is_some() {
+            stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        stats
+            .latency
+            .lock()
+            .unwrap()
+            .record(t0.elapsed().as_micros() as u64);
+        match result {
+            Ok(outcome) => {
+                stats
+                    .cg_iters
+                    .fetch_add(outcome.cg_iters as u64, Ordering::Relaxed);
+                if warm_enabled {
+                    if let Some(alpha) = outcome.alpha {
+                        slot.warm = Some(Arc::new(WarmStart {
+                            generation: snap.generation,
+                            theta: theta0.clone(),
+                            row_ids: (*snap.row_ids).clone(),
+                            m: snap.data.m(),
+                            alpha,
+                            xq: Some(xq.clone()),
+                            cross: outcome.cross.unwrap_or_default(),
+                        }));
+                    }
+                }
+                let mut off = 0;
+                for p in group {
+                    let k = p.xq.rows();
+                    let _ = p.resp.send(Ok(outcome.preds[off..off + k].to_vec()));
+                    off += k;
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for p in group {
+                    let _ = p
+                        .resp
+                        .send(Err(crate::LkgpError::Coordinator(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Warm theta for an empty-`theta0` refit: shard cache, then snapshot
+/// lineage, then the prior mean.
+fn warm_theta(slot: &EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
+    if let Some(w) = slot.warm.as_ref().or(snapshot.warm.as_ref()) {
+        if w.theta.len() == d + 3 {
+            return w.theta.clone();
+        }
+    }
+    Theta::default_packed(d)
+}
+
+/// Cache the fitted theta in the shard lineage, preserving any cached
+/// alpha (an alpha solved under nearby hyper-parameters is still an
+/// excellent CG guess).
+fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64>) {
+    let updated = match slot.warm.take() {
+        Some(w) => WarmStart { theta, ..(*w).clone() },
+        None => WarmStart {
+            generation: snapshot.generation,
+            theta,
+            row_ids: (*snapshot.row_ids).clone(),
+            m: snapshot.data.m(),
+            alpha: Vec::new(),
+            xq: None,
+            cross: Vec::new(),
+        },
+    };
+    slot.warm = Some(Arc::new(updated));
+}
+
+/// Process one drained batch of requests against an engine slot. Returns
+/// false when a `Shutdown` was seen (remaining requests are dropped, like
+/// the original single-worker loop).
+fn process_batch(
+    slot: &mut EngineSlot,
+    batch: Vec<Request>,
+    stats: &ServiceStats,
+    warm_enabled: bool,
+) -> bool {
+    let mut predicts: Vec<PendingPredict> = Vec::new();
+    for req in batch {
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        match req {
+            Request::PredictFinal { snapshot, theta, xq, resp } => {
+                predicts.push(PendingPredict { snapshot, theta, xq, resp });
+            }
+            Request::Refit { snapshot, theta0, seed, resp } => {
+                // order barrier: flush batched predictions first
+                flush_predicts(slot, &mut predicts, stats, warm_enabled);
+                let d = snapshot.data.d();
+                let theta0 = if theta0.is_empty() {
+                    if warm_enabled {
+                        warm_theta(slot, &snapshot, d)
+                    } else {
+                        Theta::default_packed(d)
+                    }
+                } else {
+                    theta0
+                };
+                let result = slot.engine.fit(&theta0, &snapshot.data, seed);
+                if warm_enabled {
+                    if let Ok(theta) = &result {
+                        record_fit_lineage(slot, &snapshot, theta.clone());
+                    }
+                }
+                let _ = resp.send(result);
+            }
+            Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
+                flush_predicts(slot, &mut predicts, stats, warm_enabled);
+                let _ = resp.send(slot.engine.sample_curves(
+                    &theta,
+                    &snapshot.data,
+                    &xq,
+                    samples,
+                    seed,
+                ));
+            }
+            Request::Shutdown => {
+                flush_predicts(slot, &mut predicts, stats, warm_enabled);
+                return false;
+            }
+        }
+    }
+    flush_predicts(slot, &mut predicts, stats, warm_enabled);
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Single-task service
+
+/// Handle to the single-task service thread.
 pub struct PredictionService {
     tx: Sender<Request>,
     pub stats: Arc<ServiceStats>,
@@ -136,6 +405,36 @@ impl PredictionService {
     }
 }
 
+impl PredictClient for PredictionService {
+    fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
+        PredictionService::refit(self, snapshot, theta0, seed)
+    }
+
+    fn predict_final(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+    ) -> crate::Result<Vec<(f64, f64)>> {
+        PredictionService::predict_final(self, snapshot, theta, xq)
+    }
+
+    fn sample_curves(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        samples: usize,
+        seed: u64,
+    ) -> crate::Result<Vec<Matrix>> {
+        PredictionService::sample_curves(self, snapshot, theta, xq, samples, seed)
+    }
+
+    fn batch_factor(&self) -> f64 {
+        self.stats.batch_factor()
+    }
+}
+
 impl Drop for PredictionService {
     fn drop(&mut self) {
         let _ = self.tx.send(Request::Shutdown);
@@ -145,15 +444,8 @@ impl Drop for PredictionService {
     }
 }
 
-fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<ServiceStats>) {
-    // Pending predict-final queries grouped by generation.
-    struct Pending {
-        snapshot: Snapshot,
-        theta: Vec<f64>,
-        xq: Matrix,
-        resp: Sender<crate::Result<Vec<(f64, f64)>>>,
-    }
-
+fn worker_loop(engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<ServiceStats>) {
+    let mut slot = EngineSlot { engine, warm: None };
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -164,95 +456,296 @@ fn worker_loop(mut engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<Se
         while let Ok(r) = rx.try_recv() {
             queue.push(r);
         }
-
-        let mut predicts: Vec<Pending> = Vec::new();
-        let flush =
-            |engine: &mut Box<dyn Engine>, predicts: &mut Vec<Pending>, stats: &ServiceStats| {
-                if predicts.is_empty() {
-                    return;
-                }
-                // group by (generation, theta bits)
-                while !predicts.is_empty() {
-                    let gen0 = predicts[0].snapshot.generation;
-                    let theta0 = predicts[0].theta.clone();
-                    let group: Vec<Pending> = {
-                        let (take, keep): (Vec<Pending>, Vec<Pending>) = predicts
-                            .drain(..)
-                            .partition(|p| p.snapshot.generation == gen0 && p.theta == theta0);
-                        *predicts = keep;
-                        take
-                    };
-                    // stack queries
-                    let total: usize = group.iter().map(|p| p.xq.rows()).sum();
-                    let d = group[0].xq.cols();
-                    let mut xq = Matrix::zeros(total, d);
-                    let mut row = 0;
-                    for p in &group {
-                        for r in 0..p.xq.rows() {
-                            xq.row_mut(row).copy_from_slice(p.xq.row(r));
-                            row += 1;
-                        }
-                    }
-                    let t0 = Instant::now();
-                    let result = engine.predict_final(&theta0, &group[0].snapshot.data, &xq);
-                    stats.batches.fetch_add(1, Ordering::Relaxed);
-                    stats
-                        .batched_queries
-                        .fetch_add(group.len() as u64, Ordering::Relaxed);
-                    stats
-                        .latency
-                        .lock()
-                        .unwrap()
-                        .record(t0.elapsed().as_micros() as u64);
-                    match result {
-                        Ok(all) => {
-                            let mut off = 0;
-                            for p in group {
-                                let k = p.xq.rows();
-                                let _ = p.resp.send(Ok(all[off..off + k].to_vec()));
-                                off += k;
-                            }
-                        }
-                        Err(e) => {
-                            let msg = e.to_string();
-                            for p in group {
-                                let _ = p
-                                    .resp
-                                    .send(Err(crate::LkgpError::Coordinator(msg.clone())));
-                            }
-                        }
-                    }
-                }
-            };
-
-        for req in queue {
-            stats.requests.fetch_add(1, Ordering::Relaxed);
-            match req {
-                Request::PredictFinal { snapshot, theta, xq, resp } => {
-                    predicts.push(Pending { snapshot, theta, xq, resp });
-                }
-                Request::Refit { snapshot, theta0, seed, resp } => {
-                    // order barrier: flush batched predictions first
-                    flush(&mut engine, &mut predicts, &stats);
-                    let theta0 = if theta0.is_empty() {
-                        Theta::default_packed(snapshot.data.d())
-                    } else {
-                        theta0
-                    };
-                    let _ = resp.send(engine.fit(&theta0, &snapshot.data, seed));
-                }
-                Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
-                    flush(&mut engine, &mut predicts, &stats);
-                    let _ =
-                        resp.send(engine.sample_curves(&theta, &snapshot.data, &xq, samples, seed));
-                }
-                Request::Shutdown => {
-                    flush(&mut engine, &mut predicts, &stats);
-                    return;
-                }
-            }
+        if !process_batch(&mut slot, queue, &stats, false) {
+            return;
         }
-        flush(&mut engine, &mut predicts, &stats);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-task sharded pool
+
+/// Configuration for [`ServicePool`].
+#[derive(Clone, Copy, Debug)]
+pub struct PoolCfg {
+    /// Worker threads shared across all shards.
+    pub workers: usize,
+    /// Per-shard pending-queue bound; `submit` blocks when a shard's queue
+    /// is full (backpressure).
+    pub max_queue: usize,
+    /// Warm-start solves from each shard's cached alpha/theta lineage.
+    pub warm_start: bool,
+}
+
+impl Default for PoolCfg {
+    fn default() -> Self {
+        PoolCfg {
+            // Each engine call fans out its own batch-parallel threads
+            // (MaskedKronOp::apply_batch), so budget roughly half the
+            // cores for workers to avoid worker x inner-thread
+            // oversubscription. Callers with known task counts should set
+            // this explicitly (see benches/hotpath.rs).
+            workers: (crate::util::num_threads() / 2).max(1),
+            max_queue: 1024,
+            warm_start: true,
+        }
+    }
+}
+
+struct PoolQueues {
+    pending: Vec<VecDeque<Request>>,
+    /// A shard is busy while a worker processes its drained batch; the
+    /// flag serializes engine access per shard and preserves per-shard
+    /// request order.
+    busy: Vec<bool>,
+    /// Round-robin scan start so a continuously-loaded low-index shard
+    /// cannot starve higher-index shards when workers are scarce.
+    cursor: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queues: Mutex<PoolQueues>,
+    /// Workers wait here for claimable work.
+    work_cv: Condvar,
+    /// Submitters wait here for queue space (backpressure).
+    space_cv: Condvar,
+    shards: Vec<Mutex<EngineSlot>>,
+    stats: Vec<Arc<ServiceStats>>,
+    max_queue: usize,
+    warm_start: bool,
+}
+
+/// Multi-task sharded prediction service: one engine shard per task id, a
+/// shared worker pool, request routing by task id, per-shard coalescing
+/// across concurrent callers, bounded queues, and warm-started solves.
+pub struct ServicePool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServicePool {
+    /// Spawn a pool with one shard per engine and `cfg.workers` shared
+    /// worker threads.
+    pub fn spawn(engines: Vec<Box<dyn Engine>>, cfg: PoolCfg) -> Self {
+        let shards: Vec<Mutex<EngineSlot>> = engines
+            .into_iter()
+            .map(|engine| Mutex::new(EngineSlot { engine, warm: None }))
+            .collect();
+        let n = shards.len();
+        let shared = Arc::new(PoolShared {
+            queues: Mutex::new(PoolQueues {
+                pending: (0..n).map(|_| VecDeque::new()).collect(),
+                busy: vec![false; n],
+                cursor: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            shards,
+            stats: (0..n).map(|_| Arc::new(ServiceStats::default())).collect(),
+            max_queue: cfg.max_queue.max(1),
+            warm_start: cfg.warm_start,
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || pool_worker(shared))
+            })
+            .collect();
+        ServicePool { shared, workers }
+    }
+
+    /// Number of shards (tasks) in the pool.
+    pub fn shards(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    /// Enqueue a request for a task shard; blocks while the shard's queue
+    /// is at `max_queue` (backpressure).
+    pub fn submit(&self, shard: usize, req: Request) -> crate::Result<()> {
+        submit_to(&self.shared, shard, req)
+    }
+
+    /// A cloneable synchronous handle bound to one task shard.
+    pub fn handle(&self, shard: usize) -> ShardHandle {
+        assert!(shard < self.shards(), "shard {shard} out of range");
+        ShardHandle {
+            shared: self.shared.clone(),
+            shard,
+        }
+    }
+
+    /// Per-shard statistics.
+    pub fn stats(&self, shard: usize) -> &Arc<ServiceStats> {
+        &self.shared.stats[shard]
+    }
+
+    /// Current pending-queue depth of a shard.
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.shared.queues.lock().unwrap().pending[shard].len()
+    }
+}
+
+impl Drop for ServicePool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queues.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Cloneable synchronous client bound to one shard of a [`ServicePool`].
+/// Implements [`PredictClient`], so a `Scheduler` can drive it directly.
+#[derive(Clone)]
+pub struct ShardHandle {
+    shared: Arc<PoolShared>,
+    shard: usize,
+}
+
+impl ShardHandle {
+    /// The shard this handle routes to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Enqueue a raw request (blocking on backpressure).
+    pub fn submit(&self, req: Request) -> crate::Result<()> {
+        submit_to(&self.shared, self.shard, req)
+    }
+
+    /// This shard's statistics.
+    pub fn stats(&self) -> &Arc<ServiceStats> {
+        &self.shared.stats[self.shard]
+    }
+}
+
+impl PredictClient for ShardHandle {
+    fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
+        let (rtx, rrx) = channel();
+        self.submit(Request::Refit { snapshot, theta0, seed, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
+    }
+
+    fn predict_final(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+    ) -> crate::Result<Vec<(f64, f64)>> {
+        let (rtx, rrx) = channel();
+        self.submit(Request::PredictFinal { snapshot, theta, xq, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
+    }
+
+    fn sample_curves(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        samples: usize,
+        seed: u64,
+    ) -> crate::Result<Vec<Matrix>> {
+        let (rtx, rrx) = channel();
+        self.submit(Request::SampleCurves { snapshot, theta, xq, samples, seed, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
+    }
+
+    fn batch_factor(&self) -> f64 {
+        self.stats().batch_factor()
+    }
+}
+
+fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<()> {
+    if shard >= shared.shards.len() {
+        return Err(crate::LkgpError::Coordinator(format!(
+            "no shard {shard} (pool has {})",
+            shared.shards.len()
+        )));
+    }
+    if matches!(req, Request::Shutdown) {
+        // Per-request shutdown belongs to the single-task service; the
+        // pool's lifecycle is its Drop impl.
+        return Err(crate::LkgpError::Coordinator(
+            "Shutdown is not routable through the pool; drop the pool instead".into(),
+        ));
+    }
+    let depth = {
+        let mut q = shared.queues.lock().unwrap();
+        loop {
+            if q.shutdown {
+                return Err(crate::LkgpError::Coordinator("pool shutting down".into()));
+            }
+            if q.pending[shard].len() < shared.max_queue {
+                break;
+            }
+            q = shared.space_cv.wait(q).unwrap();
+        }
+        q.pending[shard].push_back(req);
+        q.pending[shard].len() as u64
+    };
+    let stats = &shared.stats[shard];
+    stats.enqueued.fetch_add(1, Ordering::Relaxed);
+    stats.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    shared.work_cv.notify_one();
+    Ok(())
+}
+
+fn pool_worker(shared: Arc<PoolShared>) {
+    loop {
+        // Claim an idle shard with pending work (round-robin from the
+        // shared cursor so no shard is starved); drain its queue.
+        let (si, batch) = {
+            let mut q = shared.queues.lock().unwrap();
+            loop {
+                let k = q.pending.len();
+                let start = q.cursor;
+                let claim = (0..k)
+                    .map(|o| (start + o) % k.max(1))
+                    .find(|&i| !q.busy[i] && !q.pending[i].is_empty());
+                if let Some(si) = claim {
+                    q.busy[si] = true;
+                    q.cursor = (si + 1) % k;
+                    let batch: Vec<Request> = q.pending[si].drain(..).collect();
+                    break (si, batch);
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        shared.space_cv.notify_all();
+        // The busy flag guarantees exclusivity, so the shard lock is
+        // uncontended (it exists to satisfy Sync). A panic inside an
+        // engine call must not wedge the shard: catch it, shed the
+        // poisoned-lock state, and always clear the busy flag below.
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut slot = shared.shards[si]
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            process_batch(&mut slot, batch, &shared.stats[si], shared.warm_start);
+        }));
+        if run.is_err() {
+            eprintln!("lkgp: pool worker recovered from a panic on shard {si}");
+        }
+        let more = {
+            let mut q = shared.queues.lock().unwrap();
+            q.busy[si] = false;
+            !q.pending[si].is_empty()
+        };
+        if more {
+            shared.work_cv.notify_one();
+        }
     }
 }
 
@@ -337,5 +830,65 @@ mod tests {
     fn shutdown_on_drop_joins_worker() {
         let service = PredictionService::spawn(Box::<RustEngine>::default());
         drop(service); // must not hang
+    }
+
+    fn pool_of(n: usize, cfg: PoolCfg) -> ServicePool {
+        let engines: Vec<Box<dyn Engine>> = (0..n)
+            .map(|_| Box::<RustEngine>::default() as Box<dyn Engine>)
+            .collect();
+        ServicePool::spawn(engines, cfg)
+    }
+
+    #[test]
+    fn pool_roundtrip_and_routing() {
+        let pool = pool_of(2, PoolCfg { workers: 2, ..Default::default() });
+        let snap = tiny_snapshot();
+        let theta = Theta::default_packed(2);
+        for shard in 0..2 {
+            let handle = pool.handle(shard);
+            let xq = Matrix::from_vec(1, 2, vec![0.3, 0.6]);
+            let preds = handle.predict_final(snap.clone(), theta.clone(), xq).unwrap();
+            assert_eq!(preds.len(), 1);
+            assert!(preds[0].0.is_finite() && preds[0].1 > 0.0);
+            assert_eq!(pool.stats(shard).requests.load(Ordering::Relaxed), 1);
+        }
+        // shard 1's traffic never hit shard 0's engine
+        assert_eq!(pool.stats(0).batches.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats(1).batches.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_warm_cache_populates_and_hits() {
+        let pool = pool_of(1, PoolCfg { workers: 1, ..Default::default() });
+        let snap = tiny_snapshot();
+        let theta = Theta::default_packed(2);
+        let handle = pool.handle(0);
+        let xq = Matrix::from_vec(1, 2, vec![0.4, 0.4]);
+        let a = handle
+            .predict_final(snap.clone(), theta.clone(), xq.clone())
+            .unwrap();
+        // second call hits the cached alpha (same generation -> exact guess)
+        let b = handle.predict_final(snap, theta, xq).unwrap();
+        assert_eq!(pool.stats(0).warm_hits.load(Ordering::Relaxed), 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.0 - y.0).abs() < 1e-6 && (x.1 - y.1).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pool_rejects_unknown_shard_and_drops_cleanly() {
+        let pool = pool_of(1, PoolCfg { workers: 1, ..Default::default() });
+        let (rtx, _rrx) = channel();
+        let err = pool.submit(
+            5,
+            Request::PredictFinal {
+                snapshot: tiny_snapshot(),
+                theta: Theta::default_packed(2),
+                xq: Matrix::from_vec(1, 2, vec![0.5, 0.5]),
+                resp: rtx,
+            },
+        );
+        assert!(err.is_err());
+        drop(pool); // must not hang
     }
 }

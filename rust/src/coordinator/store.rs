@@ -4,7 +4,9 @@
 //! owns the epoch grid and re-fits the paper's §B transforms on every
 //! snapshot (they depend on the observed data). Snapshots carry a
 //! generation counter so the prediction service can batch requests that
-//! refer to the same model state.
+//! refer to the same model state, and a [`WarmStart`] lineage so solves
+//! against the next generation's near-identical masked system can start
+//! from the previous solution instead of zero.
 
 use std::sync::Arc;
 
@@ -13,6 +15,90 @@ use crate::gp::transforms::{TTransform, XTransform, YTransform};
 use crate::linalg::Matrix;
 
 use super::trial::{Registry, TrialId};
+
+/// Cross-generation warm-start lineage: the previous generation's fitted
+/// hyper-parameters and (when a prediction ran) its converged training
+/// solve, keyed by the trial rows it was computed for. Produced by the
+/// scheduler (theta, after refits) and by prediction-service shards
+/// (alpha, after solves); consumed wherever the next generation's
+/// near-identical masked-Kronecker system is solved again.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Generation this lineage was computed at.
+    pub generation: u64,
+    /// Packed theta the solve ran under (also the refit warm start).
+    pub theta: Vec<f64>,
+    /// Trial ids of the alpha rows, in row order.
+    pub row_ids: Vec<TrialId>,
+    /// Grid length the alpha was computed on.
+    pub m: usize,
+    /// Flattened `(row_ids.len(), m)` training solve; may be empty when
+    /// the lineage carries only theta.
+    pub alpha: Vec<f64>,
+    /// Stacked query matrix of the cached prediction solve, when one ran.
+    /// Scheduler rounds re-query a slowly-changing active set, so the
+    /// cross-covariance solves are reusable warm starts too.
+    pub xq: Option<Matrix>,
+    /// Flattened `(xq.rows(), row_ids.len() * m)` cross-covariance solves
+    /// matching `xq`; empty when no prediction is cached.
+    pub cross: Vec<f64>,
+}
+
+impl WarmStart {
+    /// Embed the cached alpha into a problem whose training rows are
+    /// `row_ids` (length n) on the same grid length `m`: rows shared with
+    /// the cached generation copy their previous solution, new rows start
+    /// at zero. Returns None when the grid changed, the cache carries no
+    /// alpha, or nothing overlaps.
+    pub fn embed_alpha(&self, row_ids: &[TrialId], m: usize) -> Option<Vec<f64>> {
+        if m != self.m || self.alpha.is_empty() || self.alpha.len() != self.row_ids.len() * self.m
+        {
+            return None;
+        }
+        let pos: std::collections::HashMap<TrialId, usize> =
+            row_ids.iter().enumerate().map(|(r, &id)| (id, r)).collect();
+        let n = row_ids.len();
+        let mut x0 = vec![0.0; n * m];
+        let mut hit = false;
+        for (old_row, id) in self.row_ids.iter().enumerate() {
+            if let Some(&new_row) = pos.get(id) {
+                x0[new_row * m..(new_row + 1) * m]
+                    .copy_from_slice(&self.alpha[old_row * m..(old_row + 1) * m]);
+                hit = true;
+            }
+        }
+        if hit {
+            Some(x0)
+        } else {
+            None
+        }
+    }
+
+    /// Full warm start for a batched prediction solve `[y, c_1 .. c_q]`:
+    /// the embedded alpha plus — when the training rows and the stacked
+    /// query matrix are identical to the cached solve — every
+    /// cross-covariance column. Returns a `(q + 1) * n * m` buffer, or
+    /// None when not even the alpha can be embedded.
+    pub fn embed_predict(&self, row_ids: &[TrialId], m: usize, xq: &Matrix) -> Option<Vec<f64>> {
+        let alpha0 = self.embed_alpha(row_ids, m)?;
+        let n = row_ids.len();
+        let nm = n * m;
+        let q = xq.rows();
+        let mut x0 = vec![0.0; (q + 1) * nm];
+        x0[..nm].copy_from_slice(&alpha0);
+        if let Some(cached_xq) = &self.xq {
+            if self.row_ids == row_ids
+                && cached_xq.rows() == q
+                && cached_xq.cols() == xq.cols()
+                && cached_xq.data() == xq.data()
+                && self.cross.len() == q * nm
+            {
+                x0[nm..].copy_from_slice(&self.cross);
+            }
+        }
+        Some(x0)
+    }
+}
 
 /// Immutable model-space view of the registry at some generation.
 #[derive(Clone)]
@@ -29,6 +115,8 @@ pub struct Snapshot {
     pub all_ids: Arc<Vec<TrialId>>,
     /// Output transform for undoing predictions.
     pub ytf: Arc<YTransform>,
+    /// Warm-start lineage recorded on an earlier generation, if any.
+    pub warm: Option<Arc<WarmStart>>,
 }
 
 /// Builds snapshots from a registry over a fixed epoch grid.
@@ -36,6 +124,8 @@ pub struct CurveStore {
     /// Raw epoch grid (1-based epochs).
     pub epochs: Vec<f64>,
     generation: u64,
+    /// Most recent warm-start lineage, threaded into future snapshots.
+    last_warm: Option<Arc<WarmStart>>,
 }
 
 impl CurveStore {
@@ -43,7 +133,19 @@ impl CurveStore {
         CurveStore {
             epochs: (1..=max_epochs).map(|e| e as f64).collect(),
             generation: 0,
+            last_warm: None,
         }
+    }
+
+    /// Record warm-start lineage (fitted theta and/or alpha); subsequent
+    /// snapshots carry it so downstream solvers can warm start.
+    pub fn record_warm(&mut self, warm: WarmStart) {
+        self.last_warm = Some(Arc::new(warm));
+    }
+
+    /// The most recently recorded lineage, if any.
+    pub fn last_warm(&self) -> Option<&Arc<WarmStart>> {
+        self.last_warm.as_ref()
     }
 
     pub fn max_epochs(&self) -> usize {
@@ -98,6 +200,7 @@ impl CurveStore {
             all_x: Arc::new(all_x),
             all_ids: Arc::new(all_ids),
             ytf: Arc::new(ytf),
+            warm: self.last_warm.clone(),
         })
     }
 }
@@ -136,6 +239,93 @@ mod tests {
         // generations increment
         let snap2 = store.snapshot(&reg).unwrap();
         assert_eq!(snap2.generation, 2);
+    }
+
+    #[test]
+    fn warm_lineage_threads_through_snapshots() {
+        let mut reg = Registry::new();
+        let a = reg.add(vec![0.1]);
+        let b = reg.add(vec![0.9]);
+        reg.observe(a, 0.5, 4).unwrap();
+        reg.observe(b, 0.4, 4).unwrap();
+        let mut store = CurveStore::new(4);
+        let snap1 = store.snapshot(&reg).unwrap();
+        assert!(snap1.warm.is_none());
+        store.record_warm(WarmStart {
+            generation: snap1.generation,
+            theta: vec![0.0, 0.0, 0.0, -4.0],
+            row_ids: (*snap1.row_ids).clone(),
+            m: 4,
+            alpha: vec![1.0; 8],
+            xq: None,
+            cross: Vec::new(),
+        });
+        reg.observe(a, 0.6, 4).unwrap();
+        let snap2 = store.snapshot(&reg).unwrap();
+        let warm = snap2.warm.as_ref().expect("lineage recorded");
+        assert_eq!(warm.generation, snap1.generation);
+        // embedding onto the same rows recovers the cached alpha
+        let x0 = warm.embed_alpha(&snap2.row_ids, 4).unwrap();
+        assert_eq!(x0, vec![1.0; 8]);
+        // grid mismatch or empty alpha -> no embedding
+        assert!(warm.embed_alpha(&snap2.row_ids, 5).is_none());
+        let theta_only = WarmStart {
+            generation: 1,
+            theta: vec![],
+            row_ids: (*snap1.row_ids).clone(),
+            m: 4,
+            alpha: vec![],
+            xq: None,
+            cross: Vec::new(),
+        };
+        assert!(theta_only.embed_alpha(&snap2.row_ids, 4).is_none());
+    }
+
+    #[test]
+    fn embed_predict_reuses_cross_solves_only_on_exact_query_match() {
+        let xq = Matrix::from_vec(2, 1, vec![0.25, 0.75]);
+        let warm = WarmStart {
+            generation: 5,
+            theta: vec![],
+            row_ids: vec![TrialId(0), TrialId(1)],
+            m: 2,
+            alpha: vec![1.0, 2.0, 3.0, 4.0],
+            xq: Some(xq.clone()),
+            cross: vec![5.0; 8],
+        };
+        // identical rows + queries: alpha and every cross column embed
+        let full = warm
+            .embed_predict(&[TrialId(0), TrialId(1)], 2, &xq)
+            .unwrap();
+        assert_eq!(&full[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&full[4..], &[5.0; 8]);
+        // different queries: alpha embeds, cross columns stay cold
+        let other = Matrix::from_vec(2, 1, vec![0.3, 0.75]);
+        let partial = warm
+            .embed_predict(&[TrialId(0), TrialId(1)], 2, &other)
+            .unwrap();
+        assert_eq!(&partial[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(partial[4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn embed_alpha_maps_rows_by_trial_id() {
+        let warm = WarmStart {
+            generation: 3,
+            theta: vec![],
+            row_ids: vec![TrialId(0), TrialId(2)],
+            m: 2,
+            alpha: vec![1.0, 2.0, 3.0, 4.0],
+            xq: None,
+            cross: Vec::new(),
+        };
+        // new problem has an extra row inserted between the cached ones
+        let x0 = warm
+            .embed_alpha(&[TrialId(0), TrialId(1), TrialId(2)], 2)
+            .unwrap();
+        assert_eq!(x0, vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0]);
+        // disjoint ids -> nothing to embed
+        assert!(warm.embed_alpha(&[TrialId(7)], 2).is_none());
     }
 
     #[test]

@@ -1,44 +1,84 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: `thiserror` is not in the offline
+//! crate set.
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, LkgpError>;
 
 /// Errors surfaced by the LKGP library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LkgpError {
     /// Shape mismatch in a linear-algebra or engine call.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Matrix not positive definite during factorization.
-    #[error("matrix not positive definite at pivot {index} (value {value})")]
     NotPd { index: usize, value: f64 },
 
     /// No AOT artifact bucket can hold the requested problem.
-    #[error("no artifact bucket fits problem (n={n}, m={m}, d={d}); rebuild artifacts or use the rust engine")]
     NoBucket { n: usize, m: usize, d: usize },
 
     /// Artifact manifest missing or malformed.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// PJRT/XLA runtime failure.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Coordinator protocol violation (e.g. observation for unknown trial).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON parse failure.
-    #[error(transparent)]
-    Json(#[from] crate::json::JsonError),
+    Json(crate::json::JsonError),
 }
 
+impl std::fmt::Display for LkgpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LkgpError::Shape(msg) => write!(f, "shape error: {msg}"),
+            LkgpError::NotPd { index, value } => write!(
+                f,
+                "matrix not positive definite at pivot {index} (value {value})"
+            ),
+            LkgpError::NoBucket { n, m, d } => write!(
+                f,
+                "no artifact bucket fits problem (n={n}, m={m}, d={d}); \
+                 rebuild artifacts or use the rust engine"
+            ),
+            LkgpError::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            LkgpError::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            LkgpError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            LkgpError::Io(e) => write!(f, "io error: {e}"),
+            LkgpError::Json(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for LkgpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LkgpError::Io(e) => Some(e),
+            LkgpError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LkgpError {
+    fn from(e: std::io::Error) -> Self {
+        LkgpError::Io(e)
+    }
+}
+
+impl From<crate::json::JsonError> for LkgpError {
+    fn from(e: crate::json::JsonError) -> Self {
+        LkgpError::Json(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for LkgpError {
     fn from(e: xla::Error) -> Self {
         LkgpError::Xla(e.to_string())

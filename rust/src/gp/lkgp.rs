@@ -20,7 +20,7 @@
 use crate::error::Result;
 use crate::gp::kernels;
 use crate::gp::params::{self, Theta};
-use crate::linalg::{self, cg_batch, CgStats, Matrix};
+use crate::linalg::{self, cg_batch, cg_batch_warm, CgStats, Matrix};
 use crate::rng::Pcg64;
 
 use super::operator::MaskedKronOp;
@@ -123,6 +123,24 @@ pub fn mll_value_grad(
     probes: &[f64],
     cfg: &SolverCfg,
 ) -> Result<MllEval> {
+    Ok(mll_value_grad_warm(packed, data, probes, cfg, None)?.0)
+}
+
+/// [`mll_value_grad`] with an optional warm start for the batched CG solve
+/// and the raw solve buffer returned for reuse.
+///
+/// `x0` is a previous `(p + 1, n*m)` solve buffer (as returned by this
+/// function). Optimizer steps change theta slowly, so warm-starting each
+/// step's solve from the previous one cuts CG iterations without changing
+/// the converged tolerance; `RustEngine::fit` threads the buffer through
+/// every Adam/L-BFGS evaluation.
+pub fn mll_value_grad_warm(
+    packed: &[f64],
+    data: &Dataset,
+    probes: &[f64],
+    cfg: &SolverCfg,
+    x0: Option<&[f64]>,
+) -> Result<(MllEval, Vec<f64>)> {
     data.check()?;
     let (n, m) = (data.n(), data.m());
     let nm = n * m;
@@ -140,7 +158,7 @@ pub fn mll_value_grad(
     let mut rhs = Vec::with_capacity((p + 1) * nm);
     rhs.extend_from_slice(data.y.data());
     rhs.extend_from_slice(&probes[..p * nm]);
-    let (solves, cg) = cg_batch(&op, &rhs, cfg.cg_tol, cfg.cg_max_iters);
+    let (solves, cg) = cg_batch_warm(&op, &rhs, x0, cfg.cg_tol, cfg.cg_max_iters);
     let alpha = &solves[..nm];
     let us = &solves[nm..];
 
@@ -205,7 +223,7 @@ pub fn mll_value_grad(
         grad[d + 2] += 0.5 * s2 * a_dot - 0.5 * s2 * tr / p as f64 + 0.5 * (nm as f64 - n_obs);
     }
 
-    Ok(MllEval { value, grad, cg })
+    Ok((MllEval { value, grad, cg }, solves))
 }
 
 fn mask_product(mask: &Matrix, v: &[f64], n: usize, m: usize) -> Matrix {
@@ -282,6 +300,26 @@ pub fn predict_final(
     xq: &Matrix,
     cfg: &SolverCfg,
 ) -> Result<Vec<(f64, f64)>> {
+    Ok(predict_final_warm(packed, data, xq, cfg, None)?.0)
+}
+
+/// [`predict_final`] with an optional warm start for the batched solve.
+///
+/// `guess` is either a flattened `(n, m)` initial guess for the
+/// `A^{-1} vec(Y)` column alone, or a full `(q + 1) * n * m` buffer
+/// covering the cross-covariance columns too (e.g. a previous
+/// generation's solves, embedded by trial row — see
+/// `coordinator::store::WarmStart`). It is ignored when the length
+/// matches neither. Returns the predictions, the full converged solve
+/// buffer (`[alpha, w_1 .. w_q]`, for caching by the serving layer), and
+/// the CG stats.
+pub fn predict_final_warm(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    cfg: &SolverCfg,
+    guess: Option<&[f64]>,
+) -> Result<(Vec<(f64, f64)>, Vec<f64>, CgStats)> {
     data.check()?;
     let theta = Theta::unpack(packed);
     let (n, m) = (data.n(), data.m());
@@ -305,19 +343,35 @@ pub fn predict_final(
             }
         }
     }
-    let (solves, _cg) = cg_batch(&op, &rhs, cfg.cg_tol, cfg.cg_max_iters);
-    let alpha = &solves[..nm];
+    // Embed the guess into the full batched buffer: an alpha-only guess
+    // leaves the cross-covariance columns cold; a full buffer warms them
+    // all (the serving layer caches both).
+    let x0: Option<Vec<f64>> = guess.and_then(|g| {
+        if g.len() == rhs.len() {
+            return Some(g.to_vec());
+        }
+        if g.len() != nm {
+            return None;
+        }
+        let mut x = vec![0.0; rhs.len()];
+        x[..nm].copy_from_slice(g);
+        Some(x)
+    });
+    let (solves, cg) = cg_batch_warm(&op, &rhs, x0.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
 
     let prior_var = theta.outputscale; // k1(xq,xq)=1, k2(t*,t*)=outputscale
     let mut out = Vec::with_capacity(q);
-    for j in 0..q {
-        let c = &rhs[(j + 1) * nm..(j + 2) * nm];
-        let w = &solves[(j + 1) * nm..(j + 2) * nm];
-        let mean = linalg::matrix::dot(c, alpha);
-        let var = (prior_var - linalg::matrix::dot(c, w)).max(1e-12) + theta.sigma2;
-        out.push((mean, var));
+    {
+        let alpha = &solves[..nm];
+        for j in 0..q {
+            let c = &rhs[(j + 1) * nm..(j + 2) * nm];
+            let w = &solves[(j + 1) * nm..(j + 2) * nm];
+            let mean = linalg::matrix::dot(c, alpha);
+            let var = (prior_var - linalg::matrix::dot(c, w)).max(1e-12) + theta.sigma2;
+            out.push((mean, var));
+        }
     }
-    Ok(out)
+    Ok((out, solves, cg))
 }
 
 /// Posterior samples over [X; Xq] x grid via Matheron's rule.
@@ -563,6 +617,42 @@ mod tests {
             let var = theta.outputscale - linalg::matrix::dot(&c, &w) + theta.sigma2;
             assert!((preds[qi].0 - mean).abs() < 1e-6);
             assert!((preds[qi].1 - var).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn predict_final_warm_matches_cold() {
+        let data = toy_dataset(8, 6, 2, 13);
+        let nm = 8 * 6;
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(14);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let cfg = SolverCfg { cg_tol: 1e-10, ..Default::default() };
+        let cold = predict_final(&packed, &data, &xq, &cfg).unwrap();
+        let (preds, solves, _) = predict_final_warm(&packed, &data, &xq, &cfg, None).unwrap();
+        assert_eq!(preds, cold);
+        assert_eq!(solves.len(), 3 * nm); // alpha + one column per query
+        // alpha-only guess: the y column is ~free, cross columns run cold
+        let (warm, _, stats) =
+            predict_final_warm(&packed, &data, &xq, &cfg, Some(&solves[..nm])).unwrap();
+        assert!(
+            stats.iters_per_rhs[0] <= 2,
+            "y column should be warm: {:?}",
+            stats.iters_per_rhs
+        );
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a.0 - b.0).abs() < 1e-6 && (a.1 - b.1).abs() < 1e-6);
+        }
+        // full-buffer guess: every column is ~free
+        let (full, _, full_stats) =
+            predict_final_warm(&packed, &data, &xq, &cfg, Some(&solves)).unwrap();
+        assert!(
+            full_stats.iters_per_rhs.iter().all(|&it| it <= 2),
+            "all columns should be warm: {:?}",
+            full_stats.iters_per_rhs
+        );
+        for (a, b) in full.iter().zip(&cold) {
+            assert!((a.0 - b.0).abs() < 1e-6 && (a.1 - b.1).abs() < 1e-6);
         }
     }
 

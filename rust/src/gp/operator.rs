@@ -70,6 +70,20 @@ impl<'a> MaskedKronOp<'a> {
     pub fn solve(&self, rhs: &[f64], tol: f64, max_iters: usize) -> (Vec<f64>, CgStats) {
         cg_batch(self, rhs, tol, max_iters)
     }
+
+    /// Batched CG solve warm-started from `x0` (same layout as `rhs`).
+    /// Scheduler rounds re-solve near-identical masked systems every
+    /// generation; starting from the previous solution instead of zero cuts
+    /// iterations sharply (see benches/hotpath.rs).
+    pub fn solve_warm(
+        &self,
+        rhs: &[f64],
+        x0: Option<&[f64]>,
+        tol: f64,
+        max_iters: usize,
+    ) -> (Vec<f64>, CgStats) {
+        crate::linalg::cg_batch_warm(self, rhs, x0, tol, max_iters)
+    }
 }
 
 /// Reusable buffers for one apply (avoids per-iteration allocation in CG).
@@ -89,15 +103,15 @@ impl Workspace {
     }
 }
 
-impl LinOp for MaskedKronOp<'_> {
-    fn len(&self) -> usize {
-        self.n() * self.m()
-    }
-
-    fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
+impl MaskedKronOp<'_> {
+    /// [`LinOp::apply_batch`] with an explicit worker-thread count
+    /// (`apply_batch` resolves it from `util::num_threads`). Exposed so
+    /// tests can pin the threaded split deterministically; results are
+    /// bit-identical for every thread count.
+    pub fn apply_batch_with_threads(&self, x: &[f64], out: &mut [f64], batch: usize, threads: usize) {
         let nm = self.len();
         debug_assert_eq!(x.len(), batch * nm);
-        let threads = crate::util::num_threads().min(batch.max(1));
+        let threads = threads.min(batch.max(1));
         // Batched CG feeds 9-33 independent RHS per iteration; distributing
         // them across threads is the engine's main parallelism lever
         // (§Perf: 3.4x on the 17-RHS training solve at size 128).
@@ -127,6 +141,16 @@ impl LinOp for MaskedKronOp<'_> {
                 });
             }
         });
+    }
+}
+
+impl LinOp for MaskedKronOp<'_> {
+    fn len(&self) -> usize {
+        self.n() * self.m()
+    }
+
+    fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
+        self.apply_batch_with_threads(x, out, batch, crate::util::num_threads());
     }
 }
 

@@ -28,28 +28,62 @@ pub trait LinOp: Sync {
 pub struct CgStats {
     /// Iterations used (max over the batch).
     pub iters: usize,
+    /// Iterations each batch element was active for (per-RHS work; warm
+    /// starts show up here as elements converging in 0-2 iterations).
+    pub iters_per_rhs: Vec<usize>,
     /// Relative residual per batch element at exit.
     pub rel_residual: Vec<f64>,
     /// Whether every system met the tolerance.
     pub converged: bool,
-    /// Total operator applications (= iters; one fused batch MVM each).
+    /// Total operator applications (iters, plus one residual apply when a
+    /// warm start was used).
     pub mvms: usize,
 }
 
-/// Solve A X = B for a batch of right-hand sides with plain CG.
-///
-/// `b` is row-major (batch, len). Returns the solutions and stats. Systems
-/// that converge early are frozen (their alpha/beta forced to 0) so the
-/// remaining systems keep full-precision updates — this mirrors GPyTorch's
-/// batched CG semantics that the paper relies on (§B: tol 0.01).
+/// Solve A X = B for a batch of right-hand sides with plain CG from a
+/// zero initial guess. See [`cg_batch_warm`] for warm starts.
 pub fn cg_batch(op: &dyn LinOp, b: &[f64], tol: f64, max_iters: usize) -> (Vec<f64>, CgStats) {
+    cg_batch_warm(op, b, None, tol, max_iters)
+}
+
+/// Solve A X = B for a batch of right-hand sides with plain CG, optionally
+/// warm-started from an initial guess.
+///
+/// `b` is row-major (batch, len); `x0`, when given, must have the same
+/// layout (it is ignored if the length mismatches or it is all zero).
+/// Returns the solutions and stats. Systems that converge early are frozen
+/// (their alpha/beta forced to 0) so the remaining systems keep
+/// full-precision updates — this mirrors GPyTorch's batched CG semantics
+/// that the paper relies on (§B: tol 0.01). Convergence is measured
+/// relative to ||b|| regardless of the guess, so a warm and a cold solve
+/// stop at the same residual quality.
+pub fn cg_batch_warm(
+    op: &dyn LinOp,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, CgStats) {
     let n = op.len();
     let batch = if n == 0 { 0 } else { b.len() / n };
     debug_assert_eq!(b.len(), batch * n);
 
-    let mut x = vec![0.0; b.len()];
+    let (mut x, warm) = match x0 {
+        Some(g) if g.len() == b.len() && g.iter().any(|&v| v != 0.0) => (g.to_vec(), true),
+        _ => (vec![0.0; b.len()], false),
+    };
     let mut r = b.to_vec();
-    let mut p = b.to_vec();
+    let mut warm_mvms = 0;
+    if warm {
+        // r = b - A x0 (one extra fused batch MVM).
+        let mut ax = vec![0.0; b.len()];
+        op.apply_batch(&x, &mut ax, batch);
+        warm_mvms = 1;
+        for (ri, ai) in r.iter_mut().zip(&ax) {
+            *ri -= ai;
+        }
+    }
+    let mut p = r.clone();
     let mut ap = vec![0.0; b.len()];
 
     let bnorm: Vec<f64> = (0..batch)
@@ -63,6 +97,7 @@ pub fn cg_batch(op: &dyn LinOp, b: &[f64], tol: f64, max_iters: usize) -> (Vec<f
         .collect();
 
     let mut iters = 0;
+    let mut iters_per_rhs = vec![0usize; batch];
     for _ in 0..max_iters {
         let active: Vec<bool> = (0..batch)
             .map(|bi| rs[bi].sqrt() > tol * bnorm[bi])
@@ -76,6 +111,7 @@ pub fn cg_batch(op: &dyn LinOp, b: &[f64], tol: f64, max_iters: usize) -> (Vec<f
             if !active[bi] {
                 continue;
             }
+            iters_per_rhs[bi] += 1;
             let (pb, apb) = (&p[bi * n..(bi + 1) * n], &ap[bi * n..(bi + 1) * n]);
             let denom = crate::linalg::matrix::dot(pb, apb);
             if denom <= 0.0 || !denom.is_finite() {
@@ -114,9 +150,10 @@ pub fn cg_batch(op: &dyn LinOp, b: &[f64], tol: f64, max_iters: usize) -> (Vec<f
         x,
         CgStats {
             iters,
+            iters_per_rhs,
             rel_residual: rel,
             converged,
-            mvms: iters,
+            mvms: iters + warm_mvms,
         },
     )
 }
@@ -207,6 +244,75 @@ mod tests {
         let (_, loose) = cg_batch(&DenseOp(&a), &b, 1e-2, 1000);
         assert!(loose.iters < tight.iters);
         assert!(loose.converged);
+    }
+
+    #[test]
+    fn warm_start_from_random_guess_matches_cold() {
+        let n = 35;
+        let a = random_spd(n, 11);
+        let mut rng = Pcg64::new(12);
+        let b = rng.normal_vec(n);
+        let guess = rng.normal_vec(n);
+        let (cold, cs) = cg_batch(&DenseOp(&a), &b, 1e-10, 500);
+        let (warm, ws) = cg_batch_warm(&DenseOp(&a), &b, Some(&guess), 1e-10, 500);
+        assert!(cs.converged && ws.converged);
+        for i in 0..n {
+            assert!((cold[i] - warm[i]).abs() < 1e-6, "i={i}");
+        }
+        // the warm path pays one extra MVM for the initial residual
+        assert_eq!(ws.mvms, ws.iters + 1);
+    }
+
+    #[test]
+    fn warm_start_from_exact_solution_is_free() {
+        let n = 30;
+        let a = random_spd(n, 13);
+        let mut rng = Pcg64::new(14);
+        let b = rng.normal_vec(n);
+        let (x, _) = cg_batch(&DenseOp(&a), &b, 1e-12, 1000);
+        let (x2, stats) = cg_batch_warm(&DenseOp(&a), &b, Some(&x), 1e-8, 1000);
+        assert!(stats.iters <= 2, "iters={}", stats.iters);
+        assert!(stats.converged);
+        for i in 0..n {
+            assert!((x[i] - x2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn warm_start_ignores_mismatched_or_zero_guess() {
+        let n = 12;
+        let a = random_spd(n, 15);
+        let mut rng = Pcg64::new(16);
+        let b = rng.normal_vec(n);
+        let (cold, cs) = cg_batch(&DenseOp(&a), &b, 1e-10, 200);
+        let short = vec![1.0; n - 1];
+        let (w1, s1) = cg_batch_warm(&DenseOp(&a), &b, Some(&short), 1e-10, 200);
+        let zeros = vec![0.0; n];
+        let (w2, s2) = cg_batch_warm(&DenseOp(&a), &b, Some(&zeros), 1e-10, 200);
+        assert_eq!(cold, w1);
+        assert_eq!(cold, w2);
+        assert_eq!(cs.mvms, s1.mvms);
+        assert_eq!(cs.mvms, s2.mvms);
+    }
+
+    #[test]
+    fn per_rhs_iteration_counts_reflect_warmth() {
+        let n = 28;
+        let batch = 2;
+        let a = random_spd(n, 17);
+        let mut rng = Pcg64::new(18);
+        let b = rng.normal_vec(n * batch);
+        // solve the first element tightly, leave the second cold
+        let (x, _) = cg_batch(&DenseOp(&a), &b[..n], 1e-12, 500);
+        let mut guess = vec![0.0; n * batch];
+        guess[..n].copy_from_slice(&x);
+        let (_, stats) = cg_batch_warm(&DenseOp(&a), &b, Some(&guess), 1e-9, 500);
+        assert_eq!(stats.iters_per_rhs.len(), batch);
+        assert!(
+            stats.iters_per_rhs[0] < stats.iters_per_rhs[1],
+            "warm element should be cheaper: {:?}",
+            stats.iters_per_rhs
+        );
     }
 
     #[test]

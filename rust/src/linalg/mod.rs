@@ -12,7 +12,7 @@ pub mod eigh;
 pub mod lanczos;
 pub mod matrix;
 
-pub use cg::{cg_batch, CgStats, LinOp};
+pub use cg::{cg_batch, cg_batch_warm, CgStats, LinOp};
 pub use cholesky::{chol_logdet, chol_sample, chol_solve, cholesky, solve_lower, solve_lower_t};
 pub use eigh::{jacobi_eigh, tridiag_eigh};
 pub use lanczos::{lanczos, slq_logdet};

@@ -1,16 +1,15 @@
 //! Deterministic random number generation.
 //!
-//! The offline crate registry only carries `rand_core`, so this module
-//! implements the generators the library needs on top of it: a PCG64
-//! (XSL-RR 128/64) engine plus Gaussian / Rademacher / uniform helpers.
+//! The offline crate set has no usable RNG crates, so this module is fully
+//! self-contained: a PCG64 (XSL-RR 128/64) engine plus Gaussian /
+//! Rademacher / uniform helpers, with `next_u64`/`next_u32`/`fill_bytes`
+//! as inherent methods (no `rand_core` trait plumbing).
 //!
 //! Everything randomized in the system — probe vectors for Hutchinson/SLQ,
 //! Matheron prior draws, synthetic benchmark data, scheduler tie-breaking —
 //! flows through [`Pcg64`] seeded from a `u64`, which makes artifact
 //! executions bitwise reproducible (randomness is an *input* to the AOT
 //! graphs, never generated inside them).
-
-use rand_core::{impls, RngCore, SeedableRng};
 
 /// PCG XSL-RR 128/64 generator (O'Neill 2014), the same parameterization
 /// rand's `Pcg64` uses. 128-bit LCG state, 64-bit xor-shift/rotate output.
@@ -44,6 +43,39 @@ impl Pcg64 {
     #[inline]
     fn step(&mut self) {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next 64 uniformly random bits (XSL-RR output function).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Next 32 uniformly random bits (upper half of `next_u64`).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Fill a byte buffer with random bytes.
+    pub fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut chunks = dest.chunks_exact_mut(8);
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let bytes = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&bytes[..rem.len()]);
+        }
+    }
+
+    /// Build from an 8-byte little-endian seed.
+    pub fn from_seed(seed: [u8; 8]) -> Self {
+        Self::new(u64::from_le_bytes(seed))
     }
 
     /// Uniform f64 in [0, 1).
@@ -119,42 +151,19 @@ impl Pcg64 {
     }
 }
 
-impl RngCore for Pcg64 {
-    #[inline]
-    fn next_u32(&mut self) -> u32 {
-        (self.next_u64() >> 32) as u32
-    }
-
-    #[inline]
-    fn next_u64(&mut self) -> u64 {
-        self.step();
-        // XSL-RR output function.
-        let rot = (self.state >> 122) as u32;
-        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
-        xored.rotate_right(rot)
-    }
-
-    fn fill_bytes(&mut self, dest: &mut [u8]) {
-        impls::fill_bytes_via_next(self, dest)
-    }
-
-    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), rand_core::Error> {
-        self.fill_bytes(dest);
-        Ok(())
-    }
-}
-
-impl SeedableRng for Pcg64 {
-    type Seed = [u8; 8];
-
-    fn from_seed(seed: Self::Seed) -> Self {
-        Self::new(u64::from_le_bytes(seed))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fill_bytes_and_from_seed() {
+        let mut a = Pcg64::from_seed(42u64.to_le_bytes());
+        let mut b = Pcg64::new(42);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut buf = [0u8; 13];
+        a.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&x| x != 0));
+    }
 
     #[test]
     fn deterministic_across_instances() {

@@ -1,9 +1,9 @@
 //! PJRT runtime: load AOT artifacts and run LKGP inference from rust.
 //!
-//! The request path is: coordinator -> [`XlaEngine`] -> compiled
-//! executable (HLO text loaded once per bucket, compiled once, cached).
-//! Python is never involved at runtime — `make artifacts` is the only
-//! place jax runs.
+//! The request path is: coordinator -> [`Engine`] -> compiled executable
+//! (HLO text loaded once per bucket, compiled once, cached) or the
+//! pure-rust mirror. Python is never involved at runtime — `make
+//! artifacts` is the only place jax runs.
 //!
 //! Shape buckets: HLO modules have static shapes, so a live problem
 //! (n, m, d) is padded up to the smallest exported bucket — extra config
@@ -11,21 +11,44 @@
 //! mask, so padding is mathematically inert; see gp::operator tests) and
 //! extra grid columns carry mask 0 as well. Outputs are sliced back.
 //!
-//! [`Engine`] abstracts over this XLA path and the pure-rust engine so the
-//! coordinator and benches can switch with a flag.
+//! [`Engine`] abstracts over the XLA path and the pure-rust engine so the
+//! coordinator and benches can switch with a flag. The XLA path needs the
+//! `xla` crate (not in the offline set), so `XlaEngine` is gated behind
+//! the `xla` cargo feature; without it [`open_engine`] always returns the
+//! rust engine.
 
 pub mod manifest;
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::error::{LkgpError, Result};
+#[cfg(feature = "xla")]
+use crate::error::LkgpError;
+use crate::error::Result;
 use crate::gp::lkgp::{Dataset, SolverCfg};
-use crate::gp::{trainer, Theta};
+use crate::gp::trainer;
+#[cfg(feature = "xla")]
+use crate::gp::Theta;
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
 
 pub use manifest::{ArtifactSpec, Manifest};
+
+/// Result of a warm-startable final-value prediction.
+pub struct PredictOutcome {
+    /// (mean, variance) per query, standardized units.
+    pub preds: Vec<(f64, f64)>,
+    /// Converged training solve (flattened `(n, m)` alpha) for reuse as a
+    /// warm start by the serving layer, when the engine exposes it.
+    pub alpha: Option<Vec<f64>>,
+    /// Converged cross-covariance solves (flattened `(q, n*m)`), reusable
+    /// when the same queries repeat against the same training rows.
+    pub cross: Option<Vec<f64>>,
+    /// Total CG iterations across the batched solve (0 for engines that
+    /// do not report iteration counts).
+    pub cg_iters: usize,
+}
 
 /// A GP backend the coordinator can drive.
 pub trait Engine: Send {
@@ -36,6 +59,26 @@ pub trait Engine: Send {
     /// (standardized units).
     fn predict_final(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix)
         -> Result<Vec<(f64, f64)>>;
+
+    /// Warm-startable final-value prediction: `warm` is an optional
+    /// initial guess for the training solve (flattened `(n, m)` alpha).
+    /// Engines without warm-start support fall back to [`Engine::predict_final`]
+    /// and report no alpha.
+    fn predict_final_warm(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        warm: Option<&[f64]>,
+    ) -> Result<PredictOutcome> {
+        let _ = warm;
+        Ok(PredictOutcome {
+            preds: self.predict_final(theta, data, xq)?,
+            alpha: None,
+            cross: None,
+            cg_iters: 0,
+        })
+    }
 
     /// Posterior samples of full curves over [X; Xq] x grid.
     fn sample_curves(
@@ -52,6 +95,16 @@ pub trait Engine: Send {
 
     /// Human-readable backend name (logs/metrics).
     fn name(&self) -> &'static str;
+}
+
+/// Artifacts directory (repo-relative, overridable by `LKGP_ARTIFACTS`).
+/// Available without the `xla` feature so manifests can be inspected
+/// everywhere.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("LKGP_ARTIFACTS") {
+        return dir.into();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 // ---------------------------------------------------------------------------
@@ -98,9 +151,20 @@ impl Engine for RustEngine {
         let mut rng = Pcg64::new(seed);
         let probes = rng.rademacher_vec(self.cfg.probes * data.n() * data.m());
         let cfg = self.cfg.clone();
+        // Warm-start each optimizer step's batched CG ([y, probes] solves)
+        // from the previous step's solutions: consecutive iterates change
+        // theta slowly, so the previous solve is an excellent guess and the
+        // converged tolerance is unchanged.
+        let mut warm: Option<Vec<f64>> = None;
         let mut obj = |packed: &[f64]| {
-            crate::gp::lkgp::mll_value_grad(packed, data, &probes, &cfg)
-                .map(|e| (e.value, e.grad))
+            match crate::gp::lkgp::mll_value_grad_warm(packed, data, &probes, &cfg, warm.as_deref())
+            {
+                Ok((eval, solves)) => {
+                    warm = Some(solves);
+                    Ok((eval.value, eval.grad))
+                }
+                Err(e) => Err(e),
+            }
         };
         let trace = match self.trainer {
             Trainer::Adam => trainer::adam(&mut obj, theta0, &self.adam)?,
@@ -116,6 +180,24 @@ impl Engine for RustEngine {
         xq: &Matrix,
     ) -> Result<Vec<(f64, f64)>> {
         crate::gp::lkgp::predict_final(theta, data, xq, &self.cfg)
+    }
+
+    fn predict_final_warm(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        warm: Option<&[f64]>,
+    ) -> Result<PredictOutcome> {
+        let (preds, solves, cg) =
+            crate::gp::lkgp::predict_final_warm(theta, data, xq, &self.cfg, warm)?;
+        let nm = data.n() * data.m();
+        Ok(PredictOutcome {
+            alpha: Some(solves[..nm].to_vec()),
+            cross: Some(solves[nm..].to_vec()),
+            preds,
+            cg_iters: cg.iters_per_rhs.iter().sum(),
+        })
     }
 
     fn sample_curves(
@@ -140,10 +222,11 @@ impl Engine for RustEngine {
 }
 
 // ---------------------------------------------------------------------------
-// XLA artifact engine
+// XLA artifact engine (requires the vendored `xla` crate)
 
 /// Engine that executes the AOT-compiled HLO artifacts on the PJRT CPU
 /// client. Executables are compiled lazily and cached per artifact file.
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -157,8 +240,10 @@ pub struct XlaEngine {
 // thread transfers all of them together; there is never concurrent or
 // cross-thread shared access. The PJRT CPU client itself is thread-safe
 // for compile/execute.
+#[cfg(feature = "xla")]
 unsafe impl Send for XlaEngine {}
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Load the manifest and create the PJRT CPU client.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
@@ -173,10 +258,7 @@ impl XlaEngine {
 
     /// Default artifacts directory (repo-relative, overridable by env).
     pub fn default_dir() -> std::path::PathBuf {
-        if let Ok(dir) = std::env::var("LKGP_ARTIFACTS") {
-            return dir.into();
-        }
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        artifacts_dir()
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -331,6 +413,7 @@ impl XlaEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Engine for XlaEngine {
     fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> Result<Vec<f64>> {
         let spec = self
@@ -503,16 +586,19 @@ impl Engine for XlaEngine {
     }
 }
 
-/// Open the configured engine: XLA artifacts when requested and available,
-/// rust fallback otherwise.
+/// Open the configured engine: XLA artifacts when requested and available
+/// (feature `xla`), rust fallback otherwise.
 pub fn open_engine(prefer_xla: bool) -> Box<dyn Engine> {
+    #[cfg(feature = "xla")]
     if prefer_xla {
-        match XlaEngine::load(&XlaEngine::default_dir()) {
+        match XlaEngine::load(&artifacts_dir()) {
             Ok(e) => return Box::new(e),
             Err(err) => {
-                log::warn!("falling back to rust engine: {err}");
+                eprintln!("lkgp: falling back to rust engine: {err}");
             }
         }
     }
+    #[cfg(not(feature = "xla"))]
+    let _ = prefer_xla;
     Box::<RustEngine>::default()
 }

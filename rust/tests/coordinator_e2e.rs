@@ -6,7 +6,7 @@ use lkgp::coordinator::{
 };
 use lkgp::lcbench::{Preset, Task};
 use lkgp::rng::Pcg64;
-use lkgp::runtime::{open_engine, RustEngine};
+use lkgp::runtime::RustEngine;
 
 struct SimRunner {
     task: Task,
@@ -53,14 +53,15 @@ fn coordinator_with_rust_engine_finds_good_config() {
     assert!(report.epochs_spent < 16 * 52 / 2);
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn coordinator_with_xla_engine_when_available() {
-    let dir = lkgp::runtime::XlaEngine::default_dir();
+    let dir = lkgp::runtime::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let (report, oracle) = run_with(open_engine(true), 2);
+    let (report, oracle) = run_with(lkgp::runtime::open_engine(true), 2);
     assert!(
         report.best_value > oracle - 0.12,
         "best={} oracle={oracle}",

@@ -1,160 +1,15 @@
 //! Integration: the XLA artifact path and the pure-rust engine implement
-//! the same math. These tests require `make artifacts` (skipped otherwise).
+//! the same math.
+//!
+//! The XLA half needs the vendored `xla` crate (`--features xla`) plus
+//! `make artifacts`; those tests live in the feature-gated module below
+//! and skip themselves when artifacts are absent. The rust-engine tests
+//! always run.
 
-use lkgp::gp::lkgp::SolverCfg;
 use lkgp::gp::Theta;
 use lkgp::lcbench;
 use lkgp::linalg::Matrix;
-use lkgp::rng::Pcg64;
-use lkgp::runtime::{Engine, RustEngine, XlaEngine};
-
-fn xla_engine() -> Option<XlaEngine> {
-    let dir = XlaEngine::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return None;
-    }
-    Some(XlaEngine::load(&dir).expect("load artifacts"))
-}
-
-#[test]
-fn mvm_matches_rust_operator() {
-    let Some(mut eng) = xla_engine() else { return };
-    let data = lcbench::toy_dataset(12, 14, 3, 1);
-    let theta = Theta::default_packed(3);
-    let mut rng = Pcg64::new(2);
-    let v = Matrix::from_vec(12, 14, rng.normal_vec(12 * 14));
-
-    let got = eng.mvm(&theta, &data, &v).unwrap();
-
-    let th = Theta::unpack(&theta);
-    let k1 = lkgp::gp::kernels::rbf(&data.x, &data.x, &th.lengthscales);
-    let k2 = lkgp::gp::kernels::matern12(&data.t, &data.t, th.t_lengthscale, th.outputscale);
-    let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, th.sigma2);
-    let want = op.apply_mat(&v);
-    assert!(got.max_abs_diff(&want) < 1e-10, "diff={}", got.max_abs_diff(&want));
-}
-
-#[test]
-fn mvm_padding_is_inert() {
-    // A problem smaller than its bucket must produce identical results.
-    let Some(mut eng) = xla_engine() else { return };
-    let data = lcbench::toy_dataset(9, 11, 3, 3); // pads up to (16, 16)
-    let theta = Theta::default_packed(3);
-    let mut rng = Pcg64::new(4);
-    let v = Matrix::from_vec(9, 11, rng.normal_vec(99));
-    let got = eng.mvm(&theta, &data, &v).unwrap();
-    let th = Theta::unpack(&theta);
-    let k1 = lkgp::gp::kernels::rbf(&data.x, &data.x, &th.lengthscales);
-    let k2 = lkgp::gp::kernels::matern12(&data.t, &data.t, th.t_lengthscale, th.outputscale);
-    let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, th.sigma2);
-    let want = op.apply_mat(&v);
-    assert!(got.max_abs_diff(&want) < 1e-10);
-}
-
-#[test]
-fn mll_grad_matches_rust_engine() {
-    let Some(mut eng) = xla_engine() else { return };
-    // full bucket size so probes are comparable (same operator space)
-    let data = lcbench::toy_dataset(16, 16, 3, 5);
-    let theta = Theta::default_packed(3);
-    let (xval, xgrad, _) = eng.mll_grad(&theta, &data, 11).unwrap();
-
-    let mut rng = Pcg64::new(12);
-    let probes = rng.rademacher_vec(64 * 16 * 16);
-    let cfg = SolverCfg { probes: 64, ..Default::default() };
-    let eval = lkgp::gp::lkgp::mll_value_grad(&theta, &data, &probes, &cfg).unwrap();
-
-    // exact oracle anchors both
-    let exact = lkgp::gp::lkgp::mll_exact(&theta, &data).unwrap();
-    assert!(
-        (xval - exact).abs() < 6.0,
-        "xla value {xval} vs exact {exact}"
-    );
-    assert!((eval.value - exact).abs() < 6.0);
-    // gradients agree directionally (different probe draws)
-    let dot: f64 = xgrad.iter().zip(&eval.grad).map(|(a, b)| a * b).sum();
-    let na: f64 = xgrad.iter().map(|g| g * g).sum::<f64>().sqrt();
-    let nb: f64 = eval.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
-    assert!(dot / (na * nb) > 0.95, "cosine {}", dot / (na * nb));
-}
-
-#[test]
-fn predict_mean_parity() {
-    let Some(mut eng) = xla_engine() else { return };
-    let data = lcbench::toy_dataset(14, 16, 3, 6);
-    let theta = Theta::default_packed(3);
-    let mut rng = Pcg64::new(7);
-    let xq = Matrix::from_vec(4, 3, rng.uniform_vec(12, 0.0, 1.0));
-    let got = eng.predict_mean(&theta, &data, &xq).unwrap();
-    let cfg = SolverCfg { cg_tol: 1e-4, ..Default::default() };
-    let (want, _) = lkgp::gp::lkgp::predict_mean(&theta, &data, &xq, &cfg).unwrap();
-    // both use CG at tol 1e-2 (artifact) vs 1e-4: compare loosely
-    assert!(
-        got.max_abs_diff(&want) < 5e-2,
-        "diff={}",
-        got.max_abs_diff(&want)
-    );
-}
-
-#[test]
-fn fit_improves_exact_mll_both_engines() {
-    let Some(mut eng) = xla_engine() else { return };
-    let data = lcbench::toy_dataset(16, 16, 3, 8);
-    let theta0 = Theta::default_packed(3);
-    let before = lkgp::gp::lkgp::mll_exact(&theta0, &data).unwrap();
-
-    let theta_xla = eng.fit(&theta0, &data, 1).unwrap();
-    let after_xla = lkgp::gp::lkgp::mll_exact(&theta_xla, &data).unwrap();
-    assert!(after_xla > before, "xla fit {before} -> {after_xla}");
-
-    let mut rust = RustEngine::default();
-    let theta_rust = rust.fit(&theta0, &data, 1).unwrap();
-    let after_rust = lkgp::gp::lkgp::mll_exact(&theta_rust, &data).unwrap();
-    assert!(after_rust > before, "rust fit {before} -> {after_rust}");
-}
-
-#[test]
-fn posterior_samples_have_consistent_moments() {
-    let Some(mut eng) = xla_engine() else { return };
-    let data = lcbench::toy_dataset(10, 16, 3, 9);
-    let theta = Theta::default_packed(3);
-    let mut rng = Pcg64::new(10);
-    let xq = Matrix::from_vec(2, 3, rng.uniform_vec(6, 0.0, 1.0));
-
-    let xla_samples = eng.sample_curves(&theta, &data, &xq, 256, 11).unwrap();
-    let cfg = SolverCfg::default();
-    let (want_mean, _) = lkgp::gp::lkgp::predict_mean(&theta, &data, &xq, &cfg).unwrap();
-
-    let n = data.n();
-    for qi in 0..2 {
-        for j in [0usize, 8, 15] {
-            let emp: f64 = xla_samples.iter().map(|s| s[(n + qi, j)]).sum::<f64>()
-                / xla_samples.len() as f64;
-            assert!(
-                (emp - want_mean[(qi, j)]).abs() < 0.25,
-                "qi={qi} j={j} emp={emp} want={}",
-                want_mean[(qi, j)]
-            );
-        }
-    }
-}
-
-#[test]
-fn engines_agree_on_final_predictions() {
-    let Some(mut eng) = xla_engine() else { return };
-    let data = lcbench::toy_dataset(12, 16, 3, 13);
-    let theta = Theta::default_packed(3);
-    let mut rng = Pcg64::new(14);
-    let xq = Matrix::from_vec(3, 3, rng.uniform_vec(9, 0.0, 1.0));
-    let mut rust = RustEngine::default();
-    let exact = rust.predict_final(&theta, &data, &xq).unwrap();
-    let sampled = eng.predict_final(&theta, &data, &xq).unwrap();
-    for (e, s) in exact.iter().zip(&sampled) {
-        assert!((e.0 - s.0).abs() < 3.0 * (e.1.sqrt() / 4.0 + 0.02), "mean {} vs {}", e.0, s.0);
-        assert!(s.1 > 0.0);
-    }
-}
+use lkgp::runtime::{Engine, RustEngine};
 
 #[test]
 fn rust_engine_full_loop_without_artifacts() {
@@ -168,7 +23,6 @@ fn rust_engine_full_loop_without_artifacts() {
     assert_eq!(preds.len(), 2);
     let samples = rust.sample_curves(&theta, &data, &xq, 8, 3).unwrap();
     assert_eq!(samples.len(), 8);
-
 }
 
 #[test]
@@ -183,4 +37,189 @@ fn lbfgs_trainer_improves_mll_like_paper() {
     let theta = eng.fit(&theta0, &data, 1).unwrap();
     let after = lkgp::gp::lkgp::mll_exact(&theta, &data).unwrap();
     assert!(after > before, "{before} -> {after}");
+}
+
+#[test]
+fn warm_predict_parity_through_engine_trait() {
+    // The warm-start entry point must agree with the cold path: identical
+    // with no guess, tolerance-close (and cheaper on the training column)
+    // with the converged alpha as guess.
+    let data = lcbench::toy_dataset(10, 12, 3, 17);
+    let theta = Theta::default_packed(3);
+    let mut eng = RustEngine::default();
+    let xq = Matrix::from_vec(2, 3, vec![0.2, 0.4, 0.6, 0.8, 0.1, 0.3]);
+    let cold = eng.predict_final(&theta, &data, &xq).unwrap();
+    let out = eng.predict_final_warm(&theta, &data, &xq, None).unwrap();
+    assert_eq!(out.preds, cold);
+    let alpha = out.alpha.expect("rust engine reports alpha");
+    let warm = eng
+        .predict_final_warm(&theta, &data, &xq, Some(&alpha))
+        .unwrap();
+    assert!(
+        warm.cg_iters <= out.cg_iters,
+        "warm {} vs cold {}",
+        warm.cg_iters,
+        out.cg_iters
+    );
+    for (a, b) in warm.preds.iter().zip(&cold) {
+        assert!((a.0 - b.0).abs() < 0.05 && (a.1 - b.1).abs() < 0.05);
+    }
+}
+
+#[cfg(feature = "xla")]
+mod xla_parity {
+    use lkgp::gp::lkgp::SolverCfg;
+    use lkgp::gp::Theta;
+    use lkgp::lcbench;
+    use lkgp::linalg::Matrix;
+    use lkgp::rng::Pcg64;
+    use lkgp::runtime::{Engine, RustEngine, XlaEngine};
+
+    fn xla_engine() -> Option<XlaEngine> {
+        let dir = XlaEngine::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(XlaEngine::load(&dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn mvm_matches_rust_operator() {
+        let Some(mut eng) = xla_engine() else { return };
+        let data = lcbench::toy_dataset(12, 14, 3, 1);
+        let theta = Theta::default_packed(3);
+        let mut rng = Pcg64::new(2);
+        let v = Matrix::from_vec(12, 14, rng.normal_vec(12 * 14));
+
+        let got = eng.mvm(&theta, &data, &v).unwrap();
+
+        let th = Theta::unpack(&theta);
+        let k1 = lkgp::gp::kernels::rbf(&data.x, &data.x, &th.lengthscales);
+        let k2 = lkgp::gp::kernels::matern12(&data.t, &data.t, th.t_lengthscale, th.outputscale);
+        let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, th.sigma2);
+        let want = op.apply_mat(&v);
+        assert!(got.max_abs_diff(&want) < 1e-10, "diff={}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn mvm_padding_is_inert() {
+        // A problem smaller than its bucket must produce identical results.
+        let Some(mut eng) = xla_engine() else { return };
+        let data = lcbench::toy_dataset(9, 11, 3, 3); // pads up to (16, 16)
+        let theta = Theta::default_packed(3);
+        let mut rng = Pcg64::new(4);
+        let v = Matrix::from_vec(9, 11, rng.normal_vec(99));
+        let got = eng.mvm(&theta, &data, &v).unwrap();
+        let th = Theta::unpack(&theta);
+        let k1 = lkgp::gp::kernels::rbf(&data.x, &data.x, &th.lengthscales);
+        let k2 = lkgp::gp::kernels::matern12(&data.t, &data.t, th.t_lengthscale, th.outputscale);
+        let op = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &data.mask, th.sigma2);
+        let want = op.apply_mat(&v);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn mll_grad_matches_rust_engine() {
+        let Some(mut eng) = xla_engine() else { return };
+        // full bucket size so probes are comparable (same operator space)
+        let data = lcbench::toy_dataset(16, 16, 3, 5);
+        let theta = Theta::default_packed(3);
+        let (xval, xgrad, _) = eng.mll_grad(&theta, &data, 11).unwrap();
+
+        let mut rng = Pcg64::new(12);
+        let probes = rng.rademacher_vec(64 * 16 * 16);
+        let cfg = SolverCfg { probes: 64, ..Default::default() };
+        let eval = lkgp::gp::lkgp::mll_value_grad(&theta, &data, &probes, &cfg).unwrap();
+
+        // exact oracle anchors both
+        let exact = lkgp::gp::lkgp::mll_exact(&theta, &data).unwrap();
+        assert!(
+            (xval - exact).abs() < 6.0,
+            "xla value {xval} vs exact {exact}"
+        );
+        assert!((eval.value - exact).abs() < 6.0);
+        // gradients agree directionally (different probe draws)
+        let dot: f64 = xgrad.iter().zip(&eval.grad).map(|(a, b)| a * b).sum();
+        let na: f64 = xgrad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        let nb: f64 = eval.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        assert!(dot / (na * nb) > 0.95, "cosine {}", dot / (na * nb));
+    }
+
+    #[test]
+    fn predict_mean_parity() {
+        let Some(mut eng) = xla_engine() else { return };
+        let data = lcbench::toy_dataset(14, 16, 3, 6);
+        let theta = Theta::default_packed(3);
+        let mut rng = Pcg64::new(7);
+        let xq = Matrix::from_vec(4, 3, rng.uniform_vec(12, 0.0, 1.0));
+        let got = eng.predict_mean(&theta, &data, &xq).unwrap();
+        let cfg = SolverCfg { cg_tol: 1e-4, ..Default::default() };
+        let (want, _) = lkgp::gp::lkgp::predict_mean(&theta, &data, &xq, &cfg).unwrap();
+        // both use CG at tol 1e-2 (artifact) vs 1e-4: compare loosely
+        assert!(
+            got.max_abs_diff(&want) < 5e-2,
+            "diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn fit_improves_exact_mll_both_engines() {
+        let Some(mut eng) = xla_engine() else { return };
+        let data = lcbench::toy_dataset(16, 16, 3, 8);
+        let theta0 = Theta::default_packed(3);
+        let before = lkgp::gp::lkgp::mll_exact(&theta0, &data).unwrap();
+
+        let theta_xla = eng.fit(&theta0, &data, 1).unwrap();
+        let after_xla = lkgp::gp::lkgp::mll_exact(&theta_xla, &data).unwrap();
+        assert!(after_xla > before, "xla fit {before} -> {after_xla}");
+
+        let mut rust = RustEngine::default();
+        let theta_rust = rust.fit(&theta0, &data, 1).unwrap();
+        let after_rust = lkgp::gp::lkgp::mll_exact(&theta_rust, &data).unwrap();
+        assert!(after_rust > before, "rust fit {before} -> {after_rust}");
+    }
+
+    #[test]
+    fn posterior_samples_have_consistent_moments() {
+        let Some(mut eng) = xla_engine() else { return };
+        let data = lcbench::toy_dataset(10, 16, 3, 9);
+        let theta = Theta::default_packed(3);
+        let mut rng = Pcg64::new(10);
+        let xq = Matrix::from_vec(2, 3, rng.uniform_vec(6, 0.0, 1.0));
+
+        let xla_samples = eng.sample_curves(&theta, &data, &xq, 256, 11).unwrap();
+        let cfg = SolverCfg::default();
+        let (want_mean, _) = lkgp::gp::lkgp::predict_mean(&theta, &data, &xq, &cfg).unwrap();
+
+        let n = data.n();
+        for qi in 0..2 {
+            for j in [0usize, 8, 15] {
+                let emp: f64 = xla_samples.iter().map(|s| s[(n + qi, j)]).sum::<f64>()
+                    / xla_samples.len() as f64;
+                assert!(
+                    (emp - want_mean[(qi, j)]).abs() < 0.25,
+                    "qi={qi} j={j} emp={emp} want={}",
+                    want_mean[(qi, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_final_predictions() {
+        let Some(mut eng) = xla_engine() else { return };
+        let data = lcbench::toy_dataset(12, 16, 3, 13);
+        let theta = Theta::default_packed(3);
+        let mut rng = Pcg64::new(14);
+        let xq = Matrix::from_vec(3, 3, rng.uniform_vec(9, 0.0, 1.0));
+        let mut rust = RustEngine::default();
+        let exact = rust.predict_final(&theta, &data, &xq).unwrap();
+        let sampled = eng.predict_final(&theta, &data, &xq).unwrap();
+        for (e, s) in exact.iter().zip(&sampled) {
+            assert!((e.0 - s.0).abs() < 3.0 * (e.1.sqrt() / 4.0 + 0.02), "mean {} vs {}", e.0, s.0);
+            assert!(s.1 > 0.0);
+        }
+    }
 }

@@ -3,10 +3,129 @@
 
 use lkgp::coordinator::{CurveStore, Registry, TrialStatus};
 use lkgp::gp::kernels;
-use lkgp::gp::operator::MaskedKronOp;
+use lkgp::gp::operator::{dense_masked_kron, MaskedKronOp};
 use lkgp::gp::Theta;
 use lkgp::linalg::{self, LinOp, Matrix};
+use lkgp::rng::Pcg64;
 use lkgp::testutil::{gen_prefix_mask, gen_usize, property};
+
+/// Random kernel pair for an (n, m) grid.
+fn gen_kernels(rng: &mut Pcg64, n: usize, m: usize, d: usize) -> (Matrix, Matrix) {
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let ls: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.3, 2.0)).collect();
+    let k1 = kernels::rbf(&x, &x, &ls);
+    let t: Vec<f64> = (0..m).map(|i| i as f64 / m as f64).collect();
+    let k2 = kernels::matern12(&t, &t, rng.uniform_in(0.1, 1.0), rng.uniform_in(0.5, 2.0));
+    (k1, k2)
+}
+
+/// The four adversarial mask families the operator must survive:
+/// all-zero rows, all-zero columns, a single observed entry, full mask.
+fn gen_adversarial_mask(rng: &mut Pcg64, n: usize, m: usize, variant: usize) -> Matrix {
+    match variant {
+        0 => {
+            // random mask with several fully-unobserved rows
+            let mut mk =
+                Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.6 { 1.0 } else { 0.0 });
+            for i in 0..n {
+                if rng.uniform() < 0.5 {
+                    for j in 0..m {
+                        mk[(i, j)] = 0.0;
+                    }
+                }
+            }
+            mk
+        }
+        1 => {
+            // fully-unobserved columns (epochs nobody reached)
+            let dead: Vec<bool> = (0..m).map(|_| rng.uniform() < 0.5).collect();
+            Matrix::from_fn(n, m, |_, j| if dead[j] { 0.0 } else { 1.0 })
+        }
+        2 => {
+            // a single observed entry in the whole grid
+            let (ri, cj) = (rng.below(n), rng.below(m));
+            Matrix::from_fn(n, m, |i, j| if i == ri && j == cj { 1.0 } else { 0.0 })
+        }
+        _ => Matrix::from_fn(n, m, |_, _| 1.0),
+    }
+}
+
+#[test]
+fn prop_operator_matches_dense_under_adversarial_masks() {
+    property(24, |rng| {
+        let n = gen_usize(rng, 2, 9);
+        let m = gen_usize(rng, 2, 8);
+        let d = gen_usize(rng, 1, 3);
+        let (k1, k2) = gen_kernels(rng, n, m, d);
+        let s2 = rng.uniform_in(0.05, 0.5);
+        for variant in 0..4 {
+            let mask = gen_adversarial_mask(rng, n, m, variant);
+            let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+            let dense = dense_masked_kron(&k1, &k2, &mask, s2);
+            let v = rng.normal_vec(n * m);
+            let mut got = vec![0.0; n * m];
+            op.apply_batch(&v, &mut got, 1);
+            let want = dense.matvec(&v);
+            for i in 0..n * m {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-9,
+                    "variant={variant} i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+            // solves against masked RHS stay supported on the mask
+            let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
+            let (sol, stats) = op.solve(&rhs, 1e-8, 3000);
+            assert!(stats.converged, "variant={variant}");
+            for (i, &mk) in mask.data().iter().enumerate() {
+                if mk == 0.0 {
+                    assert_eq!(sol[i], 0.0, "variant={variant} i={i}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_apply_batch_parallel_bit_identical_to_sequential() {
+    // Pin the worker-thread count explicitly so the threaded split is
+    // exercised deterministically regardless of the host's core count;
+    // also cross-check the default (`apply_batch`) path.
+    property(16, |rng| {
+        let n = gen_usize(rng, 2, 10);
+        let m = gen_usize(rng, 2, 9);
+        let (k1, k2) = gen_kernels(rng, n, m, 2);
+        let s2 = rng.uniform_in(0.05, 0.5);
+        for variant in 0..4 {
+            let mask = gen_adversarial_mask(rng, n, m, variant);
+            let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+            let batch = gen_usize(rng, 2, 8);
+            let nm = n * m;
+            let v = rng.normal_vec(batch * nm);
+            let mut seq = vec![0.0; batch * nm];
+            for b in 0..batch {
+                op.apply_batch_with_threads(
+                    &v[b * nm..(b + 1) * nm],
+                    &mut seq[b * nm..(b + 1) * nm],
+                    1,
+                    1,
+                );
+            }
+            for threads in [2, 3, 4] {
+                let mut got = vec![0.0; batch * nm];
+                op.apply_batch_with_threads(&v, &mut got, batch, threads);
+                assert_eq!(
+                    got, seq,
+                    "variant={variant} threads={threads} not bit-identical"
+                );
+            }
+            let mut dflt = vec![0.0; batch * nm];
+            op.apply_batch(&v, &mut dflt, batch);
+            assert_eq!(dflt, seq, "variant={variant} default path differs");
+        }
+    });
+}
 
 #[test]
 fn prop_operator_symmetric_psd_any_mask() {

@@ -1,0 +1,256 @@
+//! Multi-task sharded serving e2e: the pool must be a behavior-preserving
+//! deployment of N standalone services — same predictions, same scheduler
+//! decisions — plus warm-start and backpressure behavior on top.
+
+use std::sync::atomic::Ordering;
+
+use lkgp::coordinator::{
+    CurveStore, EpochRunner, PoolCfg, PredictClient, PredictionService, Registry, Scheduler,
+    SchedulerCfg, ServicePool, Snapshot, TrialId,
+};
+use lkgp::gp::Theta;
+use lkgp::lcbench::{Preset, Task};
+use lkgp::linalg::Matrix;
+use lkgp::rng::Pcg64;
+use lkgp::runtime::{Engine, RustEngine};
+
+/// Registry snapshot of a simulated task with prefix-observed curves.
+fn snapshot_for(preset: Preset, n: usize, seed: u64) -> Snapshot {
+    let mut rng = Pcg64::new(seed);
+    let task = Task::generate(preset, n, &mut rng);
+    let mut reg = Registry::new();
+    for i in 0..n {
+        let id = reg.add(task.configs.row(i).to_vec());
+        let len = 3 + rng.below(8);
+        for j in 0..len {
+            reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+        }
+    }
+    CurveStore::new(task.m()).snapshot(&reg).unwrap()
+}
+
+fn rust_engines(n: usize) -> Vec<Box<dyn Engine>> {
+    (0..n)
+        .map(|_| Box::<RustEngine>::default() as Box<dyn Engine>)
+        .collect()
+}
+
+/// Two shards on different LCBench presets, concurrent callers, fixed
+/// seeds: per-task predictions must be *identical* to running each task
+/// through a standalone single-task service.
+#[test]
+fn concurrent_pool_predictions_identical_to_standalone_services() {
+    let presets = [Preset::FashionMnist, Preset::Higgs];
+    let snaps: Vec<Snapshot> = presets
+        .iter()
+        .enumerate()
+        .map(|(t, &p)| snapshot_for(p, 10, 40 + t as u64))
+        .collect();
+    let theta = Theta::default_packed(7);
+    let callers = 5;
+
+    // standalone reference: one cold service per task, sequential callers
+    let mut want: Vec<Vec<Vec<(f64, f64)>>> = Vec::new();
+    for snap in &snaps {
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let mut per_task = Vec::new();
+        for c in 0..callers {
+            let xq = Matrix::from_vec(1, 7, snap.all_x.row(c).to_vec());
+            per_task.push(
+                service
+                    .predict_final(snap.clone(), theta.clone(), xq)
+                    .unwrap(),
+            );
+        }
+        want.push(per_task);
+    }
+
+    // pool: same queries, but issued by concurrent caller threads against
+    // two shards at once. warm_start off keeps every solve cold, so any
+    // coalescing/batch split is behavior-neutral (batched CG elements are
+    // independent).
+    let pool = ServicePool::spawn(
+        rust_engines(2),
+        PoolCfg { workers: 4, warm_start: false, ..Default::default() },
+    );
+    let got: Vec<Vec<Vec<(f64, f64)>>> = std::thread::scope(|scope| {
+        let theta = &theta;
+        let mut joins = Vec::new();
+        for (t, snap) in snaps.iter().enumerate() {
+            let handle = pool.handle(t);
+            joins.push(scope.spawn(move || {
+                let mut per_task = Vec::new();
+                for c in 0..callers {
+                    let xq = Matrix::from_vec(1, 7, snap.all_x.row(c).to_vec());
+                    per_task.push(
+                        handle
+                            .predict_final(snap.clone(), theta.clone(), xq)
+                            .unwrap(),
+                    );
+                }
+                per_task
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    assert_eq!(got, want, "pool predictions diverge from standalone");
+}
+
+struct SimRunner {
+    task: Task,
+}
+
+impl EpochRunner for SimRunner {
+    fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
+        self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
+    }
+}
+
+fn scheduler_for(task: &Task, seed: u64) -> Scheduler {
+    let cfg = SchedulerCfg {
+        max_concurrent: 3,
+        refit_every: 4,
+        epoch_budget: 70,
+        seed,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(task.m(), cfg);
+    let configs: Vec<Vec<f64>> = (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
+    sched.add_candidates(&configs);
+    sched
+}
+
+/// Full freeze-thaw loops on two pool shards running concurrently must
+/// reproduce the standalone runs round for round.
+#[test]
+fn two_shard_schedulers_match_standalone_runs() {
+    let presets = [Preset::FashionMnist, Preset::Airlines];
+
+    // standalone reference runs
+    let mut want = Vec::new();
+    for (t, &preset) in presets.iter().enumerate() {
+        let mut rng = Pcg64::new(7 + t as u64);
+        let task = Task::generate(preset, 10, &mut rng);
+        let mut sched = scheduler_for(&task, 7 + t as u64);
+        let service = PredictionService::spawn(Box::<RustEngine>::default());
+        let mut runner = SimRunner { task };
+        want.push(sched.run(&mut runner, &service).unwrap());
+    }
+
+    // concurrent pool runs (cold shards = standalone semantics)
+    let pool = ServicePool::spawn(
+        rust_engines(2),
+        PoolCfg { workers: 2, warm_start: false, ..Default::default() },
+    );
+    let got: Vec<lkgp::coordinator::RunReport> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for (t, &preset) in presets.iter().enumerate() {
+            let handle = pool.handle(t);
+            joins.push(scope.spawn(move || {
+                let mut rng = Pcg64::new(7 + t as u64);
+                let task = Task::generate(preset, 10, &mut rng);
+                let mut sched = scheduler_for(&task, 7 + t as u64);
+                let mut runner = SimRunner { task };
+                sched.run(&mut runner, &handle).unwrap()
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.epochs_spent, w.epochs_spent);
+        assert_eq!(g.rounds, w.rounds);
+        assert_eq!(g.best_value, w.best_value);
+        assert_eq!(g.trace, w.trace);
+    }
+}
+
+/// Warm-started shards must stay within solver tolerance of cold results
+/// across generations, and actually hit their cache.
+#[test]
+fn warm_shard_tracks_cold_service_across_generations() {
+    let mut rng = Pcg64::new(9);
+    let task = Task::generate(Preset::FashionMnist, 10, &mut rng);
+    let mut reg = Registry::new();
+    for i in 0..task.n() {
+        let id = reg.add(task.configs.row(i).to_vec());
+        for j in 0..4 {
+            reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+        }
+    }
+    let mut store = CurveStore::new(task.m());
+    let snap1 = store.snapshot(&reg).unwrap();
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(2, 7, {
+        let mut v = snap1.all_x.row(0).to_vec();
+        v.extend_from_slice(snap1.all_x.row(1));
+        v
+    });
+
+    let pool = ServicePool::spawn(
+        rust_engines(1),
+        PoolCfg { workers: 1, warm_start: true, ..Default::default() },
+    );
+    let handle = pool.handle(0);
+    let p1 = handle
+        .predict_final(snap1.clone(), theta.clone(), xq.clone())
+        .unwrap();
+    // next generation: every trial trains one more epoch
+    for i in 0..task.n() {
+        reg.observe(TrialId(i), task.curves[(i, 4)], task.m()).unwrap();
+    }
+    let snap2 = store.snapshot(&reg).unwrap();
+    let p2 = handle
+        .predict_final(snap2.clone(), theta.clone(), xq.clone())
+        .unwrap();
+    assert!(pool.stats(0).warm_hits.load(Ordering::Relaxed) >= 1);
+
+    // cold reference on the new generation
+    let service = PredictionService::spawn(Box::<RustEngine>::default());
+    let cold = service.predict_final(snap2, theta, xq).unwrap();
+    for (w, c) in p2.iter().zip(&cold) {
+        assert!(
+            (w.0 - c.0).abs() < 0.1 && (w.1 - c.1).abs() < 0.1,
+            "warm {w:?} vs cold {c:?}"
+        );
+    }
+    // sanity: generation-1 predictions were finite and plausible too
+    for (mu, var) in p1 {
+        assert!(mu.is_finite() && var > 0.0);
+    }
+}
+
+/// Backpressure: a slow shard's queue is bounded by `max_queue` and every
+/// request still completes.
+#[test]
+fn backpressure_bounds_queue_depth() {
+    let snap = snapshot_for(Preset::Airlines, 8, 11);
+    let theta = Theta::default_packed(7);
+    let pool = ServicePool::spawn(
+        rust_engines(1),
+        PoolCfg { workers: 1, max_queue: 4, warm_start: true },
+    );
+    let mut receivers = Vec::new();
+    for c in 0..20 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        pool.submit(
+            0,
+            lkgp::coordinator::Request::PredictFinal {
+                snapshot: snap.clone(),
+                theta: theta.clone(),
+                xq: Matrix::from_vec(1, 7, snap.all_x.row(c % 8).to_vec()),
+                resp: rtx,
+            },
+        )
+        .unwrap();
+        receivers.push(rrx);
+    }
+    for r in receivers {
+        let preds = r.recv().unwrap().unwrap();
+        assert_eq!(preds.len(), 1);
+    }
+    let peak = pool.stats(0).peak_queue_depth.load(Ordering::Relaxed);
+    assert!(peak <= 4, "peak queue depth {peak} exceeds bound");
+    assert_eq!(pool.stats(0).enqueued.load(Ordering::Relaxed), 20);
+}

@@ -1,0 +1,98 @@
+//! Warm-started CG correctness: a warm start must never change *what* the
+//! solver converges to, only how fast it gets there.
+
+use lkgp::gp::kernels;
+use lkgp::gp::operator::MaskedKronOp;
+use lkgp::gp::Theta;
+use lkgp::lcbench::toy_dataset;
+use lkgp::linalg::cg::DenseOp;
+use lkgp::linalg::{cg_batch, cg_batch_warm};
+use lkgp::rng::Pcg64;
+use lkgp::testutil::gen_spd;
+
+#[test]
+fn random_guess_converges_to_the_cold_solution() {
+    let mut rng = Pcg64::new(1);
+    let n = 48;
+    let a = gen_spd(&mut rng, n, 0.5);
+    let b = rng.normal_vec(n);
+    let guess = rng.normal_vec(n);
+    let (cold, cs) = cg_batch(&DenseOp(&a), &b, 1e-10, 1000);
+    let (warm, ws) = cg_batch_warm(&DenseOp(&a), &b, Some(&guess), 1e-10, 1000);
+    assert!(cs.converged && ws.converged);
+    for i in 0..n {
+        assert!((cold[i] - warm[i]).abs() < 1e-6, "i={i}");
+    }
+}
+
+#[test]
+fn exact_solution_guess_converges_almost_instantly() {
+    let mut rng = Pcg64::new(2);
+    let n = 40;
+    let a = gen_spd(&mut rng, n, 0.5);
+    let b = rng.normal_vec(n);
+    let (x, _) = cg_batch(&DenseOp(&a), &b, 1e-12, 2000);
+    let (x2, stats) = cg_batch_warm(&DenseOp(&a), &b, Some(&x), 1e-8, 2000);
+    assert!(stats.iters <= 2, "iters={}", stats.iters);
+    assert!(stats.converged);
+    for i in 0..n {
+        assert!((x[i] - x2[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn incremental_mask_refit_needs_fewer_iterations_warm() {
+    // The scheduler workload: generation g+1 differs from g by one more
+    // observed epoch per curve. Warm-starting from generation g's solves
+    // must converge to the same quality in fewer iterations.
+    let (n, m) = (24usize, 16usize);
+    let gen1 = toy_dataset(n, m, 3, 5);
+    let mut gen2 = gen1.clone();
+    for i in 0..n {
+        let len = (0..m).take_while(|&j| gen1.mask[(i, j)] > 0.0).count();
+        if len < m {
+            let prev = gen2.y[(i, len - 1)];
+            gen2.mask[(i, len)] = 1.0;
+            gen2.y[(i, len)] = prev;
+        }
+    }
+    let theta = Theta::unpack(&Theta::default_packed(3));
+    let k1 = kernels::rbf(&gen1.x, &gen1.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&gen1.t, &gen1.t, theta.t_lengthscale, theta.outputscale);
+    let op1 = MaskedKronOp::new(&k1, &k2, &gen1.mask, theta.sigma2);
+    let op2 = MaskedKronOp::new(&k1, &k2, &gen2.mask, theta.sigma2);
+
+    let (alpha1, _) = op1.solve(gen1.y.data(), 1e-6, 5000);
+    let (_, cold) = op2.solve(gen2.y.data(), 1e-6, 5000);
+    let (warm_sol, warm) = op2.solve_warm(gen2.y.data(), Some(&alpha1), 1e-6, 5000);
+    assert!(cold.converged && warm.converged);
+    assert!(
+        warm.iters < cold.iters,
+        "warm {} vs cold {}",
+        warm.iters,
+        cold.iters
+    );
+    // same converged system: residual quality matches the cold solve
+    let mut back = vec![0.0; n * m];
+    use lkgp::linalg::LinOp;
+    op2.apply_batch(&warm_sol, &mut back, 1);
+    for (i, (&bi, &yi)) in back.iter().zip(gen2.y.data()).enumerate() {
+        if gen2.mask.data()[i] > 0.0 {
+            assert!((bi - yi).abs() < 1e-4, "i={i}");
+        }
+    }
+}
+
+#[test]
+fn warm_fit_reaches_the_same_quality_as_cold_objective() {
+    // RustEngine::fit threads warm solves across optimizer steps; the
+    // fitted hyper-parameters must still improve the exact MAP objective.
+    use lkgp::runtime::{Engine, RustEngine};
+    let data = toy_dataset(10, 12, 3, 7);
+    let theta0 = Theta::default_packed(3);
+    let before = lkgp::gp::lkgp::mll_exact(&theta0, &data).unwrap();
+    let mut eng = RustEngine::default();
+    let theta = eng.fit(&theta0, &data, 3).unwrap();
+    let after = lkgp::gp::lkgp::mll_exact(&theta, &data).unwrap();
+    assert!(after > before, "{before} -> {after}");
+}
