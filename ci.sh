@@ -49,6 +49,24 @@ if [ -f BENCH_hotpath.json ]; then
   cat BENCH_hotpath.json
 fi
 
+echo "== perf gate: preconditioned CG =="
+# The hotpath bench dumps BENCH_pcg.json with acceptance booleans:
+# PCG must never use more MVM rows than plain CG on the benchmark
+# systems, warm+PCG must stay strictly below warm-only, and the
+# ill-conditioned regime must show a >= 2x iteration cut.
+if [ ! -f BENCH_pcg.json ]; then
+  echo "FAIL: BENCH_pcg.json not produced by the hotpath bench"
+  exit 1
+fi
+cat BENCH_pcg.json
+for gate in assert_pcg_never_worse assert_warm_pcg_below assert_pcg_2x_ill; do
+  if ! grep -q "\"$gate\": true" BENCH_pcg.json; then
+    echo "FAIL: $gate is not true in BENCH_pcg.json"
+    exit 1
+  fi
+done
+echo "pcg gates OK"
+
 if [ "$soft_status" -ne 0 ]; then
   echo "style/lint warnings present (set CI_STRICT=1 to make them fatal)"
   if [ "${CI_STRICT:-0}" = "1" ]; then

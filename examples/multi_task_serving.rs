@@ -11,12 +11,13 @@
 //! iterations, latency) and writes `results/multi_task_serving.json`.
 //!
 //! ```bash
-//! cargo run --release --example multi_task_serving [-- --configs 16 --budget 200 --workers 3]
+//! cargo run --release --example multi_task_serving [-- --configs 16 --budget 200 --workers 3 --precond auto]
 //! ```
 
 use lkgp::coordinator::{
     EpochRunner, PoolCfg, RunReport, Scheduler, SchedulerCfg, ServicePool, TrialId,
 };
+use lkgp::gp::PrecondCfg;
 use lkgp::json::Json;
 use lkgp::lcbench::{Preset, Task};
 use lkgp::rng::Pcg64;
@@ -42,15 +43,25 @@ fn main() -> lkgp::Result<()> {
     let tasks = presets.len();
     let workers = args.get_usize("workers", tasks);
     let warm = args.get("warm").unwrap_or("on") != "off";
+    let precond_arg = args.get("precond").unwrap_or("auto");
+    let precond = PrecondCfg::parse(precond_arg).ok_or_else(|| {
+        lkgp::LkgpError::Coordinator(format!(
+            "bad --precond '{precond_arg}' (expected off|auto|rank=R)"
+        ))
+    })?;
 
     let engines: Vec<Box<dyn Engine>> = (0..tasks)
-        .map(|_| Box::<RustEngine>::default() as Box<dyn Engine>)
+        .map(|_| {
+            let mut eng = RustEngine::default();
+            eng.cfg.precond = precond;
+            Box::new(eng) as Box<dyn Engine>
+        })
         .collect();
     let pool = ServicePool::spawn(
         engines,
         PoolCfg { workers, warm_start: warm, ..Default::default() },
     );
-    println!("pool: {tasks} shards, {workers} workers, warm_start={warm}\n");
+    println!("pool: {tasks} shards, {workers} workers, warm_start={warm}, precond={precond:?}\n");
 
     let t0 = std::time::Instant::now();
     let mut results: Vec<(usize, &'static str, RunReport, f64)> = Vec::new();
@@ -96,12 +107,13 @@ fn main() -> lkgp::Result<()> {
         let stats = pool.stats(*t);
         let warm_hits = stats.warm_hits.load(std::sync::atomic::Ordering::Relaxed);
         let cg_iters = stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed);
+        let mvm_rows = stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed);
         let p50 = stats.latency.lock().unwrap().quantile_micros(0.5);
         let p99 = stats.latency.lock().unwrap().quantile_micros(0.99);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} \
              batch_factor={:.2} warm_hits={warm_hits} cg_iters={cg_iters} \
-             p50={p50}us p99={p99}us",
+             mvm_rows={mvm_rows} p50={p50}us p99={p99}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
@@ -116,6 +128,7 @@ fn main() -> lkgp::Result<()> {
             ("batch_factor", Json::Num(report.batch_factor)),
             ("warm_hits", Json::Num(warm_hits as f64)),
             ("cg_iters", Json::Num(cg_iters as f64)),
+            ("cg_mvm_rows", Json::Num(mvm_rows as f64)),
             ("p50_us", Json::Num(p50 as f64)),
             ("p99_us", Json::Num(p99 as f64)),
         ]));
@@ -126,6 +139,7 @@ fn main() -> lkgp::Result<()> {
         ("tasks", Json::Num(tasks as f64)),
         ("workers", Json::Num(workers as f64)),
         ("warm_start", Json::Bool(warm)),
+        ("precond", Json::Str(format!("{precond:?}"))),
         ("wall_seconds", Json::Num(wall.as_secs_f64())),
         ("shards", Json::Arr(shard_json)),
     ]);

@@ -144,6 +144,9 @@ fn main() -> lkgp::Result<()> {
     // ---- warm vs cold CG on an incremental-mask refit ----
     let (cold_iters, warm_iters, cold_total, warm_total) = warm_vs_cold_refit(&mut table);
 
+    // ---- preconditioned vs plain CG at two condition regimes ----
+    let pcg_json = pcg_vs_plain(&mut table);
+
     // ---- 4-shard pool vs 4 isolated services, same thread budget ----
     let (pool_rps, isolated_rps) = pool_vs_isolated(&mut table, quick);
 
@@ -179,7 +182,182 @@ fn main() -> lkgp::Result<()> {
         .to_path_buf();
     std::fs::write(root.join("BENCH_hotpath.json"), summary.pretty())?;
     println!("wrote {}", root.join("BENCH_hotpath.json").display());
+    std::fs::write(root.join("BENCH_pcg.json"), pcg_json.pretty())?;
+    println!("wrote {}", root.join("BENCH_pcg.json").display());
     Ok(())
+}
+
+/// One (iterations, mvm_rows, wall-µs) measurement of a batched solve.
+struct SolveCost {
+    iters: usize,
+    mvm_rows: usize,
+    us: u128,
+}
+
+impl SolveCost {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::Num(self.iters as f64)),
+            ("mvm_rows", Json::Num(self.mvm_rows as f64)),
+            ("us", Json::Num(self.us as f64)),
+        ])
+    }
+}
+
+/// Preconditioned vs plain CG on the training system `[y, probes]` at two
+/// condition regimes (n=128, m=48, prefix masks):
+///
+/// * `benign` — default theta (σ² = e⁻⁴)
+/// * `ill`    — long lengthscales + σ² = 1e-4, the regime where plain CG
+///   grinds for hundreds of iterations
+///
+/// For each regime: cold plain CG, cold PCG (Auto strategy), then a
+/// generation-2 system (one more observed epoch per curve + a small theta
+/// drift) solved warm-only and warm+PCG. The returned JSON carries the
+/// acceptance booleans ci.sh gates on:
+///
+/// * `assert_pcg_2x_ill`       — PCG cuts iterations ≥ 2x on `ill`
+/// * `assert_warm_pcg_below`   — warm+PCG mvm_rows strictly below
+///   warm-only on the ill regime (benign is covered by never-worse)
+/// * `assert_pcg_never_worse`  — PCG never exceeds plain CG's or
+///   warm-only's mvm_rows on any measured system
+fn pcg_vs_plain(table: &mut Table) -> Json {
+    use lkgp::gp::{PrecondCfg, PrecondFactors};
+
+    let (n, m, d, probes_cnt) = (128usize, 48usize, 3usize, 8usize);
+    let nm = n * m;
+    let tol = 1e-2;
+    let cap = 10_000;
+
+    let ill_packed = {
+        let mut p = Theta::default_packed(d);
+        for v in p.iter_mut().take(d) {
+            *v = 3.0f64.ln(); // long lengthscales -> numerically low-rank K1
+        }
+        p[d] = 0.0; // t lengthscale 1.0
+        p[d + 1] = 0.0; // outputscale 1.0
+        p[d + 2] = 1e-4f64.ln(); // near-interpolation noise
+        p
+    };
+    let regimes = [("benign", Theta::default_packed(d)), ("ill", ill_packed)];
+
+    let mut regime_json = Vec::new();
+    let mut two_x_ill = false;
+    let mut warm_below = true;
+    let mut never_worse = true;
+
+    for (name, packed) in regimes {
+        let gen1 = toy_dataset(n, m, d, 1);
+        let mut gen2 = gen1.clone();
+        for i in 0..n {
+            let len = (0..m).take_while(|&j| gen1.mask[(i, j)] > 0.0).count();
+            if len < m {
+                let prev = gen2.y[(i, len.saturating_sub(1))];
+                gen2.mask[(i, len)] = 1.0;
+                gen2.y[(i, len)] = prev;
+            }
+        }
+        let theta = Theta::unpack(&packed);
+        let k1 = kernels::rbf(&gen1.x, &gen1.x, &theta.lengthscales);
+        let k2 = kernels::matern12(&gen1.t, &gen1.t, theta.t_lengthscale, theta.outputscale);
+        let op1 = lkgp::gp::operator::MaskedKronOp::new(&k1, &k2, &gen1.mask, theta.sigma2);
+
+        let probes = Pcg64::new(2).rademacher_vec(probes_cnt * nm);
+        let mut rhs1 = Vec::with_capacity((probes_cnt + 1) * nm);
+        rhs1.extend_from_slice(gen1.y.data());
+        rhs1.extend_from_slice(&probes);
+        let mut rhs2 = Vec::with_capacity((probes_cnt + 1) * nm);
+        rhs2.extend_from_slice(gen2.y.data());
+        rhs2.extend_from_slice(&probes);
+
+        // generation 1, cold: plain vs preconditioned. PCG timings START
+        // BEFORE the factorization so BENCH_pcg.json carries the full cost
+        // the serving path pays when factors must be (re)built.
+        let t0 = Instant::now();
+        let (sol_plain, st_plain) = op1.solve(&rhs1, tol, cap);
+        let plain = SolveCost { iters: st_plain.iters, mvm_rows: st_plain.mvm_rows, us: t0.elapsed().as_micros() };
+        let t1 = Instant::now();
+        let factors1 = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &gen1.mask, &packed)
+            .expect("preconditioner factors");
+        let (sol_pcg, st_pcg) = op1.solve_precond(&rhs1, None, Some(&factors1), tol, cap);
+        let pcg = SolveCost { iters: st_pcg.iters, mvm_rows: st_pcg.mvm_rows, us: t1.elapsed().as_micros() };
+
+        // generation 2: theta drifts slightly, masks grow one epoch
+        let mut packed2 = packed.clone();
+        for v in packed2.iter_mut().take(d) {
+            *v += 0.02;
+        }
+        let theta2 = Theta::unpack(&packed2);
+        let k1b = kernels::rbf(&gen2.x, &gen2.x, &theta2.lengthscales);
+        let op2 = lkgp::gp::operator::MaskedKronOp::new(&k1b, &k2, &gen2.mask, theta2.sigma2);
+        let t2 = Instant::now();
+        let (_, st_warm) = op2.solve_warm(&rhs2, Some(&sol_plain), tol, cap);
+        let warm = SolveCost { iters: st_warm.iters, mvm_rows: st_warm.mvm_rows, us: t2.elapsed().as_micros() };
+        // the cached factors are stale (mask grew) -> rebuild, as the
+        // serving layer's compatibility check would; the rebuild is
+        // inside the warm+PCG timing for the same reason as above
+        assert!(!factors1.compatible(&packed2, n, m, &gen2.mask));
+        let t3 = Instant::now();
+        let factors2 = PrecondFactors::build(PrecondCfg::Auto, &k1b, &k2, &gen2.mask, &packed2)
+            .expect("gen2 factors");
+        let (_, st_wp) = op2.solve_precond(&rhs2, Some(&sol_pcg), Some(&factors2), tol, cap);
+        let warm_pcg = SolveCost { iters: st_wp.iters, mvm_rows: st_wp.mvm_rows, us: t3.elapsed().as_micros() };
+
+        assert!(
+            st_plain.converged && st_pcg.converged && st_warm.converged && st_wp.converged,
+            "pcg bench solve did not converge ({name})"
+        );
+        println!(
+            "pcg [{name}] ({} rank {}): cold plain {} iters / {} rows vs pcg {} iters / {} rows; \
+             warm {} rows vs warm+pcg {} rows",
+            factors1.strategy(),
+            factors1.rank(),
+            plain.iters,
+            plain.mvm_rows,
+            pcg.iters,
+            pcg.mvm_rows,
+            warm.mvm_rows,
+            warm_pcg.mvm_rows,
+        );
+        for (variant, cost) in [("plain", &plain), ("pcg", &pcg), ("warm", &warm), ("warm_pcg", &warm_pcg)] {
+            table.row(vec![
+                format!("pcg_{name}_{variant}"),
+                n.to_string(),
+                cost.us.to_string(),
+                format!("iters={} rows={}", cost.iters, cost.mvm_rows),
+            ]);
+        }
+
+        if name == "ill" {
+            two_x_ill = pcg.iters * 2 <= plain.iters;
+            // strict gate only where warm starts leave real work behind;
+            // on the benign regime a perfect warm guess can tie at
+            // exactly `batch` residual rows, which is not a regression
+            warm_below &= warm_pcg.mvm_rows < warm.mvm_rows;
+        }
+        never_worse &= pcg.mvm_rows <= plain.mvm_rows && warm_pcg.mvm_rows <= warm.mvm_rows;
+
+        regime_json.push(Json::obj(vec![
+            ("regime", Json::Str(name.into())),
+            ("strategy", Json::Str(factors1.strategy().into())),
+            ("rank", Json::Num(factors1.rank() as f64)),
+            ("plain", plain.json()),
+            ("pcg", pcg.json()),
+            ("warm", warm.json()),
+            ("warm_pcg", warm_pcg.json()),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("bench", Json::Str("pcg".into())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("probes", Json::Num(probes_cnt as f64)),
+        ("regimes", Json::Arr(regime_json)),
+        ("assert_pcg_2x_ill", Json::Bool(two_x_ill)),
+        ("assert_warm_pcg_below", Json::Bool(warm_below)),
+        ("assert_pcg_never_worse", Json::Bool(never_worse)),
+    ])
 }
 
 /// The scheduler's generation-to-generation workload: re-solve the refit

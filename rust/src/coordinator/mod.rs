@@ -110,16 +110,26 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         .get_usize("workers", crate::util::num_threads().min(tasks.max(1)))
         .max(1);
     let warm = args.get("warm").unwrap_or("on") != "off";
+    let precond_arg = args.get("precond").unwrap_or("auto");
+    let precond = crate::gp::PrecondCfg::parse(precond_arg).ok_or_else(|| {
+        crate::LkgpError::Coordinator(format!(
+            "bad --precond '{precond_arg}' (expected off|auto|rank=R)"
+        ))
+    })?;
     let presets = crate::lcbench::Preset::all();
 
     let engines: Vec<Box<dyn crate::runtime::Engine>> = (0..tasks)
-        .map(|_| Box::<crate::runtime::RustEngine>::default() as Box<dyn crate::runtime::Engine>)
+        .map(|_| {
+            let mut eng = crate::runtime::RustEngine::default();
+            eng.cfg.precond = precond;
+            Box::new(eng) as Box<dyn crate::runtime::Engine>
+        })
         .collect();
     let pool = ServicePool::spawn(
         engines,
         PoolCfg { workers, warm_start: warm, ..Default::default() },
     );
-    println!("pool: {tasks} shards, {workers} workers, warm_start={warm}");
+    println!("pool: {tasks} shards, {workers} workers, warm_start={warm}, precond={precond:?}");
 
     struct SimRunner {
         task: crate::lcbench::Task,
@@ -170,7 +180,7 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         let stats = pool.stats(*t);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} rounds={} \
-             batch_factor={:.2} warm_hits={} cg_iters={} peak_queue={} p50={}us p99={}us",
+             batch_factor={:.2} warm_hits={} cg_iters={} mvm_rows={} peak_queue={} p50={}us p99={}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
@@ -178,6 +188,7 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             report.batch_factor,
             stats.warm_hits.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed),
+            stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed),
             stats.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
             stats.latency.lock().unwrap().quantile_micros(0.5),
             stats.latency.lock().unwrap().quantile_micros(0.99),

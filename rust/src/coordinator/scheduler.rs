@@ -190,6 +190,7 @@ impl Scheduler {
             alpha: Vec::new(),
             xq: None,
             cross: Vec::new(),
+            precond: None,
         });
 
         // forecast finals for every active (non-terminal) config

@@ -84,6 +84,10 @@ pub struct ServiceStats {
     pub warm_hits: AtomicU64,
     /// Total per-RHS CG iterations reported by warm-capable engines.
     pub cg_iters: AtomicU64,
+    /// Total per-RHS operator rows applied (`CgStats::mvm_rows`) — the
+    /// true MVM work after warm starts, preconditioning, and active-set
+    /// compaction.
+    pub cg_mvm_rows: AtomicU64,
 }
 
 impl ServiceStats {
@@ -185,19 +189,22 @@ fn flush_predicts(
         }
         // warm-start guess: shard cache first, then snapshot lineage. The
         // full batched guess (alpha + cross columns) applies when the same
-        // queries repeat; otherwise the alpha alone is embedded.
+        // queries repeat; otherwise the alpha alone is embedded. The
+        // factored preconditioner rides the same lineage but is NOT gated
+        // by `warm_enabled` — the flags are independent (a `--warm off`
+        // shard still amortizes the factorization), and the engine checks
+        // factor staleness itself, so passing old factors is always safe.
+        let lineage = slot.warm.as_ref().or(snap.warm.as_ref());
         let guess: Option<Vec<f64>> = if warm_enabled {
-            slot.warm
-                .as_ref()
-                .or(snap.warm.as_ref())
-                .and_then(|w| w.embed_predict(&snap.row_ids, snap.data.m(), &xq))
+            lineage.and_then(|w| w.embed_predict(&snap.row_ids, snap.data.m(), &xq))
         } else {
             None
         };
+        let precond = lineage.and_then(|w| w.precond.clone());
         let t0 = Instant::now();
-        let result = slot
-            .engine
-            .predict_final_warm(&theta0, &snap.data, &xq, guess.as_deref());
+        let result =
+            slot.engine
+                .predict_final_cached(&theta0, &snap.data, &xq, guess.as_deref(), precond);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats
             .batched_queries
@@ -215,6 +222,9 @@ fn flush_predicts(
                 stats
                     .cg_iters
                     .fetch_add(outcome.cg_iters as u64, Ordering::Relaxed);
+                stats
+                    .cg_mvm_rows
+                    .fetch_add(outcome.cg_mvm_rows as u64, Ordering::Relaxed);
                 if warm_enabled {
                     if let Some(alpha) = outcome.alpha {
                         slot.warm = Some(Arc::new(WarmStart {
@@ -225,8 +235,23 @@ fn flush_predicts(
                             alpha,
                             xq: Some(xq.clone()),
                             cross: outcome.cross.unwrap_or_default(),
+                            precond: outcome.precond,
                         }));
                     }
+                } else if let Some(factors) = outcome.precond {
+                    // warm starts off: cache ONLY the factored
+                    // preconditioner (empty alpha means nothing embeds as
+                    // a guess, so solves stay cold as requested).
+                    slot.warm = Some(Arc::new(WarmStart {
+                        generation: snap.generation,
+                        theta: theta0.clone(),
+                        row_ids: (*snap.row_ids).clone(),
+                        m: snap.data.m(),
+                        alpha: Vec::new(),
+                        xq: None,
+                        cross: Vec::new(),
+                        precond: Some(factors),
+                    }));
                 }
                 let mut off = 0;
                 for p in group {
@@ -259,8 +284,8 @@ fn warm_theta(slot: &EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
 }
 
 /// Cache the fitted theta in the shard lineage, preserving any cached
-/// alpha (an alpha solved under nearby hyper-parameters is still an
-/// excellent CG guess).
+/// alpha and factored preconditioner (both solved under nearby
+/// hyper-parameters, so both remain excellent across the refit).
 fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64>) {
     let updated = match slot.warm.take() {
         Some(w) => WarmStart { theta, ..(*w).clone() },
@@ -272,6 +297,7 @@ fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64
             alpha: Vec::new(),
             xq: None,
             cross: Vec::new(),
+            precond: None,
         },
     };
     slot.warm = Some(Arc::new(updated));

@@ -11,6 +11,7 @@
 use std::sync::Arc;
 
 use crate::gp::lkgp::Dataset;
+use crate::gp::operator::PrecondFactors;
 use crate::gp::transforms::{TTransform, XTransform, YTransform};
 use crate::linalg::Matrix;
 
@@ -42,6 +43,12 @@ pub struct WarmStart {
     /// Flattened `(xq.rows(), row_ids.len() * m)` cross-covariance solves
     /// matching `xq`; empty when no prediction is cached.
     pub cross: Vec<f64>,
+    /// Factored CG preconditioner from the cached solve. Reused while
+    /// hyper-parameters drift slowly (and, for the observed-Gram strategy,
+    /// while the mask is unchanged) — staleness is checked by the solver
+    /// via `PrecondFactors::compatible`, so carrying old factors is always
+    /// safe. None when preconditioning is off.
+    pub precond: Option<Arc<PrecondFactors>>,
 }
 
 impl WarmStart {
@@ -259,6 +266,7 @@ mod tests {
             alpha: vec![1.0; 8],
             xq: None,
             cross: Vec::new(),
+            precond: None,
         });
         reg.observe(a, 0.6, 4).unwrap();
         let snap2 = store.snapshot(&reg).unwrap();
@@ -277,6 +285,7 @@ mod tests {
             alpha: vec![],
             xq: None,
             cross: Vec::new(),
+            precond: None,
         };
         assert!(theta_only.embed_alpha(&snap2.row_ids, 4).is_none());
     }
@@ -292,6 +301,7 @@ mod tests {
             alpha: vec![1.0, 2.0, 3.0, 4.0],
             xq: Some(xq.clone()),
             cross: vec![5.0; 8],
+            precond: None,
         };
         // identical rows + queries: alpha and every cross column embed
         let full = warm
@@ -318,6 +328,7 @@ mod tests {
             alpha: vec![1.0, 2.0, 3.0, 4.0],
             xq: None,
             cross: Vec::new(),
+            precond: None,
         };
         // new problem has an extra row inserted between the cached ones
         let x0 = warm

@@ -17,13 +17,15 @@
 //! each other's math), the fallback when no artifact bucket fits, and the
 //! subject of the Figure-3 LKGP series.
 
+use std::sync::Arc;
+
 use crate::error::Result;
 use crate::gp::kernels;
 use crate::gp::params::{self, Theta};
-use crate::linalg::{self, cg_batch, cg_batch_warm, CgStats, Matrix};
+use crate::linalg::{self, CgStats, Matrix};
 use crate::rng::Pcg64;
 
-use super::operator::MaskedKronOp;
+use super::operator::{MaskedKronOp, PrecondCfg, PrecondFactors};
 
 /// A learning-curve training set in *model* space (already transformed).
 #[derive(Clone, Debug)]
@@ -87,6 +89,11 @@ pub struct SolverCfg {
     pub lanczos_iters: usize,
     /// Jitter added to Kronecker-factor Choleskys in Matheron sampling.
     pub jitter: f64,
+    /// Preconditioner policy for the masked-Kronecker CG solves (fit,
+    /// predict, posterior samples). SLQ's Lanczos quadrature stays on the
+    /// raw operator — preconditioning it changes the estimated quantity
+    /// (it would need a logdet(P) correction; see docs/solvers.md).
+    pub precond: PrecondCfg,
 }
 
 impl Default for SolverCfg {
@@ -97,8 +104,32 @@ impl Default for SolverCfg {
             probes: 8,
             lanczos_iters: 16,
             jitter: 1e-6,
+            precond: PrecondCfg::Off,
         }
     }
+}
+
+/// Resolve the preconditioner for one solve: reuse compatible cached
+/// factors (hyper-parameters drift slowly across optimizer steps and
+/// scheduler generations), rebuild otherwise.
+fn resolve_precond(
+    cfg: &SolverCfg,
+    packed: &[f64],
+    k1: &Matrix,
+    k2: &Matrix,
+    mask: &Matrix,
+    cached: Option<&Arc<PrecondFactors>>,
+) -> Option<Arc<PrecondFactors>> {
+    if !cfg.precond.enabled() {
+        return None;
+    }
+    let (n, m) = (k1.rows(), k2.rows());
+    if let Some(f) = cached {
+        if f.compatible(packed, n, m, mask) {
+            return Some(f.clone());
+        }
+    }
+    PrecondFactors::build(cfg.precond, k1, k2, mask, packed).map(Arc::new)
 }
 
 /// MAP objective evaluation output.
@@ -141,6 +172,23 @@ pub fn mll_value_grad_warm(
     cfg: &SolverCfg,
     x0: Option<&[f64]>,
 ) -> Result<(MllEval, Vec<f64>)> {
+    let mut precond_cache = None;
+    mll_value_grad_cached(packed, data, probes, cfg, x0, &mut precond_cache)
+}
+
+/// [`mll_value_grad_warm`] with persistent preconditioner state:
+/// `precond_cache` carries the factored preconditioner across optimizer
+/// steps (rebuilt only when theta drifts past the compatibility window or
+/// the mask changes). `RustEngine::fit` threads one cache through every
+/// Adam/L-BFGS evaluation alongside the warm solve buffer.
+pub fn mll_value_grad_cached(
+    packed: &[f64],
+    data: &Dataset,
+    probes: &[f64],
+    cfg: &SolverCfg,
+    x0: Option<&[f64]>,
+    precond_cache: &mut Option<Arc<PrecondFactors>>,
+) -> Result<(MllEval, Vec<f64>)> {
     data.check()?;
     let (n, m) = (data.n(), data.m());
     let nm = n * m;
@@ -154,11 +202,13 @@ pub fn mll_value_grad_warm(
     let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
     let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
 
-    // --- batched CG: [y, z_1 .. z_p] ---
+    // --- batched (P)CG: [y, z_1 .. z_p] ---
     let mut rhs = Vec::with_capacity((p + 1) * nm);
     rhs.extend_from_slice(data.y.data());
     rhs.extend_from_slice(&probes[..p * nm]);
-    let (solves, cg) = cg_batch_warm(&op, &rhs, x0, cfg.cg_tol, cfg.cg_max_iters);
+    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
+    let (solves, cg) = op.solve_precond(&rhs, x0, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
+    *precond_cache = factors;
     let alpha = &solves[..nm];
     let us = &solves[nm..];
 
@@ -277,13 +327,19 @@ pub fn mll_exact(packed: &[f64], data: &Dataset) -> Result<f64> {
 /// Posterior mean over the full grid for query configs.
 ///
 /// mean(xq, .) = k1(xq, X) (M . A) K2 with A = reshape(CG(A, vec(Y))).
+///
+/// Cold path: with `cfg.precond` enabled the factors are rebuilt per
+/// call (no cache parameter — the serving hot path goes through
+/// [`predict_final_cached`], which threads one).
 pub fn predict_mean(packed: &[f64], data: &Dataset, xq: &Matrix, cfg: &SolverCfg) -> Result<(Matrix, CgStats)> {
     data.check()?;
     let theta = Theta::unpack(packed);
     let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
     let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
     let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
-    let (alpha, cg) = op.solve(data.y.data(), cfg.cg_tol, cfg.cg_max_iters);
+    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, None);
+    let (alpha, cg) =
+        op.solve_precond(data.y.data(), None, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
     let am = mask_product(&data.mask, &alpha, data.n(), data.m());
     let k1q = kernels::rbf(xq, &data.x, &theta.lengthscales);
     Ok((k1q.matmul(&am).matmul(&k2), cg))
@@ -319,6 +375,22 @@ pub fn predict_final_warm(
     xq: &Matrix,
     cfg: &SolverCfg,
     guess: Option<&[f64]>,
+) -> Result<(Vec<(f64, f64)>, Vec<f64>, CgStats)> {
+    let mut precond_cache = None;
+    predict_final_cached(packed, data, xq, cfg, guess, &mut precond_cache)
+}
+
+/// [`predict_final_warm`] with persistent preconditioner state. The
+/// serving layer caches `precond_cache` in the `WarmStart` lineage next to
+/// the converged alpha, so repeated predicts against one snapshot (and
+/// full-mask problems across generations) skip the factorization.
+pub fn predict_final_cached(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    cfg: &SolverCfg,
+    guess: Option<&[f64]>,
+    precond_cache: &mut Option<Arc<PrecondFactors>>,
 ) -> Result<(Vec<(f64, f64)>, Vec<f64>, CgStats)> {
     data.check()?;
     let theta = Theta::unpack(packed);
@@ -357,7 +429,15 @@ pub fn predict_final_warm(
         x[..nm].copy_from_slice(g);
         Some(x)
     });
-    let (solves, cg) = cg_batch_warm(&op, &rhs, x0.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
+    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
+    let (solves, cg) = op.solve_precond(
+        &rhs,
+        x0.as_deref(),
+        factors.as_deref(),
+        cfg.cg_tol,
+        cfg.cg_max_iters,
+    );
+    *precond_cache = factors;
 
     let prior_var = theta.outputscale; // k1(xq,xq)=1, k2(t*,t*)=outputscale
     let mut out = Vec::with_capacity(q);
@@ -379,7 +459,8 @@ pub fn predict_final_warm(
 /// Returns `s` samples, each an (n+q, m) matrix. Prior draws use the
 /// Kronecker factorization f = L1 Z L2^T; the pathwise update is one
 /// batched masked-CG solve (paper §2, "Posterior Samples via Matheron's
-/// Rule").
+/// Rule"). With `cfg.precond` enabled the factors are rebuilt per call —
+/// the one-time build amortizes over the `s`-RHS pathwise solve.
 pub fn posterior_samples(
     packed: &[f64],
     data: &Dataset,
@@ -430,7 +511,8 @@ pub fn posterior_samples(
         }
         priors.push(f);
     }
-    let (ws, _cg) = cg_batch(&op, &rhs, cfg.cg_tol, cfg.cg_max_iters);
+    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, None);
+    let (ws, _cg) = op.solve_precond(&rhs, None, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
 
     // k1([X; Xq], X) is the left block of k1j (jitter only touched diag).
     let k1cross = {
@@ -654,6 +736,74 @@ mod tests {
         for (a, b) in full.iter().zip(&cold) {
             assert!((a.0 - b.0).abs() < 1e-6 && (a.1 - b.1).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn preconditioned_predictions_match_plain() {
+        // Preconditioning changes the iteration path, never the answer:
+        // at tight tolerance predictions and the MAP objective agree with
+        // the plain-CG path on both prefix-masked and full-mask data.
+        for (seed, densify) in [(19u64, false), (20u64, true)] {
+            let mut data = toy_dataset(12, 10, 2, seed);
+            if densify {
+                for v in data.mask.data_mut().iter_mut() {
+                    *v = 1.0;
+                }
+            }
+            let packed = Theta::default_packed(2);
+            let mut rng = Pcg64::new(seed + 100);
+            let xq = Matrix::from_vec(3, 2, rng.uniform_vec(6, 0.0, 1.0));
+            let plain_cfg = SolverCfg { cg_tol: 1e-10, ..Default::default() };
+            let pcg_cfg = SolverCfg {
+                cg_tol: 1e-10,
+                precond: PrecondCfg::Auto,
+                ..Default::default()
+            };
+            let plain = predict_final(&packed, &data, &xq, &plain_cfg).unwrap();
+            let pcg = predict_final(&packed, &data, &xq, &pcg_cfg).unwrap();
+            for (a, b) in plain.iter().zip(&pcg) {
+                assert!(
+                    (a.0 - b.0).abs() < 1e-6 && (a.1 - b.1).abs() < 1e-6,
+                    "densify={densify}: {a:?} vs {b:?}"
+                );
+            }
+
+            let probes = rng.rademacher_vec(16 * 120);
+            let pc = SolverCfg { probes: 16, ..plain_cfg.clone() };
+            let qc = SolverCfg { probes: 16, ..pcg_cfg.clone() };
+            let ev_plain = mll_value_grad(&packed, &data, &probes, &pc).unwrap();
+            let ev_pcg = mll_value_grad(&packed, &data, &probes, &qc).unwrap();
+            assert!(
+                (ev_plain.value - ev_pcg.value).abs() < 1e-5,
+                "densify={densify}: {} vs {}",
+                ev_plain.value,
+                ev_pcg.value
+            );
+            for (g1, g2) in ev_plain.grad.iter().zip(&ev_pcg.grad) {
+                assert!((g1 - g2).abs() < 1e-4, "densify={densify}");
+            }
+        }
+    }
+
+    #[test]
+    fn precond_cache_reused_across_calls() {
+        let data = toy_dataset(10, 8, 2, 23);
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(24);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let cfg = SolverCfg { precond: PrecondCfg::Auto, ..Default::default() };
+        let mut cache = None;
+        let _ = predict_final_cached(&packed, &data, &xq, &cfg, None, &mut cache).unwrap();
+        let first = cache.clone().expect("factors built");
+        let _ = predict_final_cached(&packed, &data, &xq, &cfg, None, &mut cache).unwrap();
+        let second = cache.expect("factors kept");
+        assert!(Arc::ptr_eq(&first, &second), "cache should be reused");
+        // a drifted theta stales the cache
+        let mut drifted = packed.clone();
+        drifted[0] += 1.0;
+        let mut cache2 = Some(first.clone());
+        let _ = predict_final_cached(&drifted, &data, &xq, &cfg, None, &mut cache2).unwrap();
+        assert!(!Arc::ptr_eq(&first, &cache2.unwrap()), "drift must rebuild");
     }
 
     #[test]

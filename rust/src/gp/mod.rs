@@ -17,4 +17,8 @@ pub mod trainer;
 pub mod transforms;
 
 pub use lkgp::{Dataset, MllEval, SolverCfg};
+pub use operator::{
+    KronPrecondFactors, LatentKronPrecond, MaskedKronOp, ObsGramPrecond, ObsGramPrecondFactors,
+    PrecondApply, PrecondCfg, PrecondFactors,
+};
 pub use params::Theta;

@@ -7,7 +7,8 @@
 //! two dense matmuls — O(n^2 m + n m^2) time, O(nm) space — and the mask
 //! plays the role of the zero-pad / slice-index projections (paper §2).
 
-use crate::linalg::{cg_batch, CgStats, LinOp, Matrix};
+use crate::linalg::pcg::Preconditioner;
+use crate::linalg::{cg_batch, jacobi_eigh, pivoted_cholesky, CgStats, LinOp, Matrix};
 
 /// Masked Kronecker operator over the (n x m) learning-curve grid.
 pub struct MaskedKronOp<'a> {
@@ -84,6 +85,28 @@ impl<'a> MaskedKronOp<'a> {
     ) -> (Vec<f64>, CgStats) {
         crate::linalg::cg_batch_warm(self, rhs, x0, tol, max_iters)
     }
+
+    /// Batched *preconditioned* CG solve, optionally warm-started.
+    /// `factors` is the factored preconditioner state (cacheable across
+    /// scheduler generations / repeated predicts — see
+    /// [`PrecondFactors`]); the mask and σ² are bound live so slightly
+    /// stale factors remain a valid SPD preconditioner.
+    pub fn solve_precond(
+        &self,
+        rhs: &[f64],
+        x0: Option<&[f64]>,
+        factors: Option<&PrecondFactors>,
+        tol: f64,
+        max_iters: usize,
+    ) -> (Vec<f64>, CgStats) {
+        match factors {
+            Some(f) => {
+                let pc = f.apply_state(self.mask, self.sigma2);
+                crate::linalg::pcg_batch_warm(self, rhs, x0, Some(&pc), tol, max_iters)
+            }
+            None => crate::linalg::cg_batch_warm(self, rhs, x0, tol, max_iters),
+        }
+    }
 }
 
 /// Reusable buffers for one apply (avoids per-iteration allocation in CG).
@@ -103,44 +126,68 @@ impl Workspace {
     }
 }
 
+/// Shared scaffold for row-independent batched kernels (the operator and
+/// both preconditioners): split the batch into per-thread chunks, give
+/// each thread its own workspace, and disable nested matmul parallelism
+/// inside the workers. Batched CG feeds 9-33 independent RHS per
+/// iteration; distributing them across threads is the engine's main
+/// parallelism lever (§Perf: 3.4x on the 17-RHS training solve at size
+/// 128). Results are bit-identical for every thread count because each
+/// row is computed independently.
+fn apply_rows_threaded<WS>(
+    x: &[f64],
+    out: &mut [f64],
+    batch: usize,
+    nm: usize,
+    threads: usize,
+    make_ws: &(impl Fn() -> WS + Sync),
+    row: &(impl Fn(&[f64], &mut [f64], &mut WS) + Sync),
+) {
+    debug_assert_eq!(x.len(), batch * nm);
+    let threads = threads.min(batch.max(1));
+    if threads <= 1 || batch <= 1 {
+        let mut ws = make_ws();
+        for b in 0..batch {
+            row(&x[b * nm..(b + 1) * nm], &mut out[b * nm..(b + 1) * nm], &mut ws);
+        }
+        return;
+    }
+    let chunk = batch.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in out.chunks_mut(chunk * nm).enumerate() {
+            let x_chunk = &x[ci * chunk * nm..(ci * chunk * nm + out_chunk.len())];
+            scope.spawn(move || {
+                crate::linalg::matrix::without_nested_parallelism(|| {
+                    let mut ws = make_ws();
+                    let local = out_chunk.len() / nm;
+                    for b in 0..local {
+                        row(
+                            &x_chunk[b * nm..(b + 1) * nm],
+                            &mut out_chunk[b * nm..(b + 1) * nm],
+                            &mut ws,
+                        );
+                    }
+                });
+            });
+        }
+    });
+}
+
 impl MaskedKronOp<'_> {
     /// [`LinOp::apply_batch`] with an explicit worker-thread count
     /// (`apply_batch` resolves it from `util::num_threads`). Exposed so
     /// tests can pin the threaded split deterministically; results are
     /// bit-identical for every thread count.
     pub fn apply_batch_with_threads(&self, x: &[f64], out: &mut [f64], batch: usize, threads: usize) {
-        let nm = self.len();
-        debug_assert_eq!(x.len(), batch * nm);
-        let threads = threads.min(batch.max(1));
-        // Batched CG feeds 9-33 independent RHS per iteration; distributing
-        // them across threads is the engine's main parallelism lever
-        // (§Perf: 3.4x on the 17-RHS training solve at size 128).
-        if threads <= 1 || batch <= 1 {
-            let mut ws = Workspace::new(self.n(), self.m());
-            for b in 0..batch {
-                self.apply_into(&x[b * nm..(b + 1) * nm], &mut out[b * nm..(b + 1) * nm], &mut ws);
-            }
-            return;
-        }
-        let chunk = batch.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (ci, out_chunk) in out.chunks_mut(chunk * nm).enumerate() {
-                let x_chunk = &x[ci * chunk * nm..(ci * chunk * nm + out_chunk.len())];
-                scope.spawn(move || {
-                    crate::linalg::matrix::without_nested_parallelism(|| {
-                        let mut ws = Workspace::new(self.n(), self.m());
-                        let local = out_chunk.len() / nm;
-                        for b in 0..local {
-                            self.apply_into(
-                                &x_chunk[b * nm..(b + 1) * nm],
-                                &mut out_chunk[b * nm..(b + 1) * nm],
-                                &mut ws,
-                            );
-                        }
-                    });
-                });
-            }
-        });
+        apply_rows_threaded(
+            x,
+            out,
+            batch,
+            self.len(),
+            threads,
+            &|| Workspace::new(self.n(), self.m()),
+            &|xi, oi, ws| self.apply_into(xi, oi, ws),
+        );
     }
 }
 
@@ -151,6 +198,579 @@ impl LinOp for MaskedKronOp<'_> {
 
     fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
         self.apply_batch_with_threads(x, out, batch, crate::util::num_threads());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latent-Kronecker preconditioner
+
+/// Preconditioner policy for the masked-Kronecker CG solves.
+///
+/// `Auto` and `Rank` choose the *strategy* by mask shape (measured in
+/// benches/hotpath.rs, BENCH_pcg.json):
+///
+/// * **full mask** → [`KronPrecondFactors`] (latent-Kronecker): K1 is
+///   factored at low rank, K2 exactly, and `(L1L1ᵀ ⊗ K2 + σ²I)⁻¹` is the
+///   near-exact inverse of the operator — CG converges in O(1) iterations.
+/// * **partial mask** → [`ObsGramPrecondFactors`] (observed-Gram): the
+///   GPyTorch-style rank-r pivoted Cholesky of the observed covariance
+///   P K Pᵀ itself, inverted by Woodbury. Masking couples the latent
+///   factors' observed/unobserved blocks, which caps their win at ~1.8x
+///   on ill-conditioned prefix-mask systems; factoring the observed Gram
+///   directly sidesteps the coupling entirely (8-14x measured).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PrecondCfg {
+    /// Plain CG (bit-exact with the historical solver).
+    #[default]
+    Off,
+    /// Strategy by mask shape; rank min(n, 32) latent / min(n_obs, 64)
+    /// observed-Gram.
+    Auto,
+    /// Explicit pivoted-Cholesky rank (clamped to the factored dimension).
+    Rank(usize),
+}
+
+impl PrecondCfg {
+    /// Whether preconditioning is requested at all.
+    pub fn enabled(&self) -> bool {
+        !matches!(self, PrecondCfg::Off)
+    }
+
+    /// Rank for the latent-Kronecker strategy (K1 is n×n); None when off.
+    pub fn latent_rank(&self, n: usize) -> Option<usize> {
+        match self {
+            PrecondCfg::Off => None,
+            PrecondCfg::Auto => Some(n.min(32).max(1)),
+            PrecondCfg::Rank(r) => Some((*r).clamp(1, n.max(1))),
+        }
+    }
+
+    /// Rank for the observed-Gram strategy; None when off.
+    pub fn obs_rank(&self, n_obs: usize) -> Option<usize> {
+        match self {
+            PrecondCfg::Off => None,
+            PrecondCfg::Auto => Some(n_obs.min(64).max(1)),
+            PrecondCfg::Rank(r) => Some((*r).clamp(1, n_obs.max(1))),
+        }
+    }
+
+    /// Parse a CLI spec: `off`, `auto`, or `rank=R`.
+    pub fn parse(s: &str) -> Option<PrecondCfg> {
+        match s {
+            "off" => Some(PrecondCfg::Off),
+            "auto" => Some(PrecondCfg::Auto),
+            _ => s
+                .strip_prefix("rank=")
+                .and_then(|r| r.parse::<usize>().ok())
+                .map(PrecondCfg::Rank),
+        }
+    }
+}
+
+/// Mask-free factored state of the latent-Kronecker preconditioner:
+/// K1 ≈ L1 L1ᵀ (rank-r pivoted Cholesky) and K2 = V2 D2 V2ᵀ (exact Jacobi
+/// eigendecomposition; m ≤ ~52 in this workload). The preconditioner
+/// applies
+///
+/// ```text
+/// (L1 L1ᵀ ⊗ K2 + σ² I)⁻¹
+///   = (I ⊗ V2) · blockdiag_j (σ² I + d_j L1 L1ᵀ)⁻¹ · (I ⊗ V2ᵀ)
+/// ```
+///
+/// with each n×n block inverted by Woodbury through the r×r
+/// eigendecomposition L1ᵀL1 = U S Uᵀ:
+///
+/// ```text
+/// (σ² I + d L1L1ᵀ)⁻¹ = (1/σ²) [ I − L1 U diag(d / (σ² + d s_k)) Uᵀ L1ᵀ ]
+/// ```
+///
+/// Per-apply cost is O(n m² + n m r + m r²) — two V2 rotations, two L1
+/// products, two U rotations — against the operator's O(n² m + n m²) MVM.
+/// σ² and the mask are NOT baked in: they are supplied at apply time, so
+/// the factors stay valid while hyper-parameters drift slowly and can be
+/// cached in the `coordinator::store::WarmStart` lineage across scheduler
+/// generations.
+#[derive(Clone, Debug)]
+pub struct KronPrecondFactors {
+    n: usize,
+    m: usize,
+    rank: usize,
+    /// Packed theta the factors were built under (drift check).
+    theta: Vec<f64>,
+    /// (n, r) pivoted-Cholesky factor of K1 and its transpose.
+    l1: Matrix,
+    l1t: Matrix,
+    /// (r, r) eigenvectors of L1ᵀL1 and transpose; eigenvalues s.
+    u: Matrix,
+    ut: Matrix,
+    s: Vec<f64>,
+    /// (m, m) eigenvectors of K2 and transpose; eigenvalues d2.
+    v2: Matrix,
+    v2t: Matrix,
+    d2: Vec<f64>,
+}
+
+impl KronPrecondFactors {
+    /// Factor K1 at `rank` and K2 exactly. `theta` is the packed
+    /// hyper-parameter vector the kernels were evaluated at (recorded for
+    /// the staleness check; the noise entry is excluded there because σ²
+    /// is applied live).
+    pub fn build(k1: &Matrix, k2: &Matrix, rank: usize, theta: &[f64]) -> Self {
+        let (n, m) = (k1.rows(), k2.rows());
+        let pc = pivoted_cholesky(k1, rank.min(n), 1e-12);
+        let l1 = pc.l;
+        let l1t = l1.transpose();
+        let c = l1t.matmul(&l1); // (r, r)
+        let (mut s, u) = jacobi_eigh(&c, 30);
+        for v in s.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let ut = u.transpose();
+        let (mut d2, v2) = jacobi_eigh(k2, 30);
+        for v in d2.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let v2t = v2.transpose();
+        KronPrecondFactors {
+            n,
+            m,
+            rank: l1.cols(),
+            theta: theta.to_vec(),
+            l1,
+            l1t,
+            u,
+            ut,
+            s,
+            v2,
+            v2t,
+            d2,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Rank actually factored (≤ requested when K1 compresses early).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Whether these factors are still a useful preconditioner for a
+    /// problem of shape (n, m) at `theta`: same grid, same config count,
+    /// and kernel hyper-parameters within a log-space drift budget. The
+    /// noise entry (last packed slot) is excluded — σ² enters the apply
+    /// live, so noise drift never stales the factors. Any SPD factors are
+    /// *correct* (PCG converges on the true residual regardless); this
+    /// check only guards iteration-count quality.
+    pub fn compatible(&self, theta: &[f64], n: usize, m: usize) -> bool {
+        if self.n != n || self.m != m || self.theta.len() != theta.len() {
+            return false;
+        }
+        let kernel_dims = theta.len().saturating_sub(1);
+        self.theta[..kernel_dims]
+            .iter()
+            .zip(&theta[..kernel_dims])
+            .all(|(a, b)| (a - b).abs() < 0.25)
+    }
+}
+
+/// The masked latent-Kronecker preconditioner: block-diagonal across the
+/// observed/unobserved split, matching the operator's structure.
+///
+/// ```text
+/// z = M ∘ P⁻¹ (M ∘ r)  +  (1/σ²) (1 − M) ∘ r
+/// ```
+///
+/// where P = L1L1ᵀ ⊗ K2 + σ²I (see [`KronPrecondFactors`]). On the
+/// unobserved complement the operator is exactly σ²I, so the second term
+/// is its exact inverse; on the observed block the masked restriction of
+/// P⁻¹ is SPD (vᵀ M P⁻¹ M v = (Mv)ᵀ P⁻¹ (Mv) > 0 for mask-supported v).
+pub struct LatentKronPrecond<'a> {
+    pub factors: &'a KronPrecondFactors,
+    /// (n, m) observation mask in {0, 1} (applied live).
+    pub mask: &'a Matrix,
+    /// Current noise variance (applied live; may differ from build time).
+    pub sigma2: f64,
+}
+
+/// Reusable buffers for one preconditioner apply.
+struct PrecondWorkspace {
+    w: Matrix,    // (n, m) rotated residual
+    t: Matrix,    // (r, m)
+    t2: Matrix,   // (r, m)
+    t3: Matrix,   // (r, m)
+    corr: Matrix, // (n, m)
+    zm: Matrix,   // (n, m) back-rotated output
+}
+
+impl PrecondWorkspace {
+    fn new(n: usize, m: usize, r: usize) -> Self {
+        PrecondWorkspace {
+            w: Matrix::zeros(n, m),
+            t: Matrix::zeros(r, m),
+            t2: Matrix::zeros(r, m),
+            t3: Matrix::zeros(r, m),
+            corr: Matrix::zeros(n, m),
+            zm: Matrix::zeros(n, m),
+        }
+    }
+}
+
+impl LatentKronPrecond<'_> {
+    fn apply_one(&self, v: &[f64], out: &mut [f64], ws: &mut PrecondWorkspace) {
+        let f = self.factors;
+        let (n, m, r) = (f.n, f.m, f.rank);
+        let nm = n * m;
+        debug_assert_eq!(v.len(), nm);
+        let mk = self.mask.data();
+        let inv_s2 = 1.0 / self.sigma2;
+
+        // rm = M ∘ v, staged into the w-input slot via corr as scratch.
+        for i in 0..nm {
+            ws.corr.data_mut()[i] = mk[i] * v[i];
+        }
+        // W = (M ∘ v) V2   — into the D2 eigenbasis on the grid axis.
+        ws.corr.matmul_into(&f.v2, &mut ws.w);
+        // T = L1ᵀ W, T2 = Uᵀ T  — into the r-dim eigenbasis on configs.
+        f.l1t.matmul_into(&ws.w, &mut ws.t);
+        f.ut.matmul_into(&ws.t, &mut ws.t2);
+        // Woodbury scaling per (k, j): d_j / (σ² + d_j s_k); a zero grid
+        // eigenvalue contributes no correction (block is exactly σ²I).
+        for k in 0..r {
+            let sk = f.s[k];
+            let row = ws.t2.row_mut(k);
+            for (j, val) in row.iter_mut().enumerate() {
+                let dj = f.d2[j];
+                if dj > 0.0 {
+                    *val *= dj / (self.sigma2 + dj * sk);
+                } else {
+                    *val = 0.0;
+                }
+            }
+        }
+        // T3 = U T2, corr = L1 T3, W' = (W − corr) / σ².
+        f.u.matmul_into(&ws.t2, &mut ws.t3);
+        f.l1.matmul_into(&ws.t3, &mut ws.corr);
+        {
+            let wd = ws.w.data_mut();
+            let cd = ws.corr.data();
+            for i in 0..nm {
+                wd[i] = (wd[i] - cd[i]) * inv_s2;
+            }
+        }
+        // Z = W' V2ᵀ, then the masked epilogue.
+        ws.w.matmul_into(&f.v2t, &mut ws.zm);
+        let zd = ws.zm.data();
+        for i in 0..nm {
+            out[i] = if mk[i] != 0.0 { zd[i] } else { v[i] * inv_s2 };
+        }
+    }
+
+    /// Batched apply with an explicit thread count (shares the operator's
+    /// scaffold; results are bit-identical for every thread count because
+    /// rows are independent).
+    pub fn apply_batch_with_threads(&self, r: &[f64], z: &mut [f64], batch: usize, threads: usize) {
+        let f = self.factors;
+        apply_rows_threaded(
+            r,
+            z,
+            batch,
+            f.n * f.m,
+            threads,
+            &|| PrecondWorkspace::new(f.n, f.m, f.rank),
+            &|ri, zi, ws| self.apply_one(ri, zi, ws),
+        );
+    }
+}
+
+impl Preconditioner for LatentKronPrecond<'_> {
+    fn apply_batch(&self, r: &[f64], z: &mut [f64], batch: usize) {
+        self.apply_batch_with_threads(r, z, batch, crate::util::num_threads());
+    }
+}
+
+/// Observed-Gram preconditioner factors: rank-r pivoted Cholesky of the
+/// observed covariance (P (K1 ⊗ K2) Pᵀ) itself — the machinery GPyTorch
+/// uses (Gardner et al. 2018). Entries of the observed Gram are kernel
+/// products `k1[i1,i2]·k2[j1,j2]`, so the factorization touches O(n_obs·r)
+/// entries through `pivoted_cholesky_fn` without materializing the
+/// n_obs × n_obs matrix. The preconditioner is
+///
+/// ```text
+/// z_obs  = (L Lᵀ + σ² I)⁻¹ r_obs
+///        = (1/σ²) [ r_obs − L (σ² I + LᵀL)⁻¹ Lᵀ r_obs ]   (Woodbury)
+/// z_miss = r_miss / σ²
+/// ```
+///
+/// O(n_obs · r) per apply. σ² enters only the r×r capacitance, which is
+/// re-factored per solve, so the factors survive noise drift; the mask is
+/// baked in (the factorization lives on the observed index set `idx`), so
+/// a mask change stales them — `compatible` checks the observed set
+/// exactly against `idx`, which together with (n, m) fully determines the
+/// {0,1} mask.
+#[derive(Clone, Debug)]
+pub struct ObsGramPrecondFactors {
+    n: usize,
+    m: usize,
+    /// Packed theta the factors were built under (drift check).
+    theta: Vec<f64>,
+    /// Flat grid indices of the observed entries, row-major ascending.
+    idx: Vec<usize>,
+    /// (n_obs, r) pivoted-Cholesky factor of the observed Gram.
+    l: Matrix,
+    /// (r, r) Gram LᵀL, precomputed for the capacitance.
+    ltl: Matrix,
+}
+
+impl ObsGramPrecondFactors {
+    /// Factor the observed covariance at `rank` (≤ n_obs).
+    pub fn build(k1: &Matrix, k2: &Matrix, mask: &Matrix, rank: usize, theta: &[f64]) -> Self {
+        let (n, m) = (k1.rows(), k2.rows());
+        debug_assert_eq!((mask.rows(), mask.cols()), (n, m));
+        let idx: Vec<usize> = mask
+            .data()
+            .iter()
+            .enumerate()
+            .filter(|(_, &mv)| mv > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        let diag: Vec<f64> = idx.iter().map(|&i| k1[(i / m, i / m)] * k2[(i % m, i % m)]).collect();
+        let pc = crate::linalg::pivoted_cholesky_fn(
+            &diag,
+            &mut |piv, out| {
+                let (pi, pj) = (idx[piv] / m, idx[piv] % m);
+                for (a, o) in out.iter_mut().enumerate() {
+                    let (i, j) = (idx[a] / m, idx[a] % m);
+                    *o = k1[(i, pi)] * k2[(j, pj)];
+                }
+            },
+            rank.min(idx.len()),
+            1e-12,
+        );
+        let l = pc.l;
+        let ltl = l.transpose().matmul(&l);
+        ObsGramPrecondFactors {
+            n,
+            m,
+            theta: theta.to_vec(),
+            idx,
+            l,
+            ltl,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.l.cols()
+    }
+
+    /// Valid for a problem at `theta` with this exact mask: kernel
+    /// hyper-parameters within the drift window (noise excluded — σ² only
+    /// enters the per-solve capacitance) and an unchanged observed set
+    /// (streamed against the stored `idx`, no mask copy kept).
+    pub fn compatible(&self, theta: &[f64], n: usize, m: usize, mask: &Matrix) -> bool {
+        if self.n != n || self.m != m || self.theta.len() != theta.len() {
+            return false;
+        }
+        let mut stored = self.idx.iter();
+        let same_observed = mask
+            .data()
+            .iter()
+            .enumerate()
+            .all(|(i, &mv)| mv <= 0.0 || stored.next() == Some(&i))
+            && stored.next().is_none();
+        if !same_observed {
+            return false;
+        }
+        let kernel_dims = theta.len().saturating_sub(1);
+        self.theta[..kernel_dims]
+            .iter()
+            .zip(&theta[..kernel_dims])
+            .all(|(a, b)| (a - b).abs() < 0.25)
+    }
+}
+
+/// Live apply state for [`ObsGramPrecondFactors`]: the σ²-dependent
+/// capacitance Cholesky is built once per solve.
+pub struct ObsGramPrecond<'a> {
+    factors: &'a ObsGramPrecondFactors,
+    sigma2: f64,
+    /// Cholesky factor of (σ² I + LᵀL).
+    cap_l: Matrix,
+}
+
+impl<'a> ObsGramPrecond<'a> {
+    pub fn new(factors: &'a ObsGramPrecondFactors, sigma2: f64) -> Self {
+        let mut cap = factors.ltl.clone();
+        cap.add_diag(sigma2);
+        // σ² I + LᵀL is SPD by construction; cholesky cannot fail for
+        // sigma2 > 0 barring catastrophic roundoff, in which case we
+        // neutralize the low-rank correction (capacitance inverse → 0)
+        // so the preconditioner degrades to the SPD 1/σ² scaling.
+        let cap_l = crate::linalg::cholesky(&cap).unwrap_or_else(|_| {
+            let mut eye = Matrix::eye(factors.rank());
+            eye.scale(1e150);
+            eye
+        });
+        ObsGramPrecond { factors, sigma2, cap_l }
+    }
+
+    fn apply_one(&self, v: &[f64], out: &mut [f64], robs: &mut [f64], t: &mut [f64]) {
+        let f = self.factors;
+        let inv_s2 = 1.0 / self.sigma2;
+        for (o, vi) in out.iter_mut().zip(v.iter()) {
+            *o = vi * inv_s2;
+        }
+        let no = f.idx.len();
+        let r = f.rank();
+        if no == 0 || r == 0 {
+            return;
+        }
+        for (a, &i) in f.idx.iter().enumerate() {
+            robs[a] = v[i];
+        }
+        // t = Lᵀ r_obs (row-wise accumulation keeps L accesses contiguous)
+        t.fill(0.0);
+        for (a, &ra) in robs.iter().enumerate() {
+            crate::linalg::matrix::axpy(ra, f.l.row(a), t);
+        }
+        // t ← (σ²I + LᵀL)⁻¹ t via the capacitance Cholesky
+        let t2 = crate::linalg::chol_solve(&self.cap_l, t);
+        // z_obs = (r_obs − L t2) / σ²
+        for (a, &i) in f.idx.iter().enumerate() {
+            let corr = crate::linalg::matrix::dot(f.l.row(a), &t2);
+            out[i] = (robs[a] - corr) * inv_s2;
+        }
+    }
+
+    /// Batched apply with an explicit thread count (shares the operator's
+    /// scaffold; rows independent, so results are bit-identical for every
+    /// thread count).
+    pub fn apply_batch_with_threads(&self, r: &[f64], z: &mut [f64], batch: usize, threads: usize) {
+        let f = self.factors;
+        apply_rows_threaded(
+            r,
+            z,
+            batch,
+            f.n * f.m,
+            threads,
+            &|| (vec![0.0; f.idx.len()], vec![0.0; f.rank()]),
+            &|ri, zi, ws: &mut (Vec<f64>, Vec<f64>)| self.apply_one(ri, zi, &mut ws.0, &mut ws.1),
+        );
+    }
+}
+
+impl Preconditioner for ObsGramPrecond<'_> {
+    fn apply_batch(&self, r: &[f64], z: &mut [f64], batch: usize) {
+        self.apply_batch_with_threads(r, z, batch, crate::util::num_threads());
+    }
+}
+
+/// The factored preconditioner state threaded through the solve stack and
+/// cached in the `coordinator::store::WarmStart` lineage. Strategy is
+/// chosen by mask shape at build time (see [`PrecondCfg`]).
+#[derive(Clone, Debug)]
+pub enum PrecondFactors {
+    /// Mask-free latent-Kronecker factors (full-mask problems; reusable
+    /// across generations even as the mask would change — it is applied
+    /// live).
+    LatentKron(KronPrecondFactors),
+    /// Observed-Gram factors (partial masks; reusable while the observed
+    /// set is unchanged, e.g. repeated predicts against one snapshot).
+    ObservedGram(ObsGramPrecondFactors),
+}
+
+impl PrecondFactors {
+    /// Build factors for a masked-Kronecker system under `cfg`. Returns
+    /// None when preconditioning is off (or the mask is empty).
+    pub fn build(
+        cfg: PrecondCfg,
+        k1: &Matrix,
+        k2: &Matrix,
+        mask: &Matrix,
+        theta: &[f64],
+    ) -> Option<PrecondFactors> {
+        if !cfg.enabled() {
+            return None;
+        }
+        let n = k1.rows();
+        let full_mask = mask.data().iter().all(|&mv| mv > 0.0);
+        if full_mask {
+            let rank = cfg.latent_rank(n)?;
+            Some(PrecondFactors::LatentKron(KronPrecondFactors::build(
+                k1, k2, rank, theta,
+            )))
+        } else {
+            let n_obs = mask.data().iter().filter(|&&mv| mv > 0.0).count();
+            if n_obs == 0 {
+                return None;
+            }
+            let rank = cfg.obs_rank(n_obs)?;
+            Some(PrecondFactors::ObservedGram(ObsGramPrecondFactors::build(
+                k1, k2, mask, rank, theta,
+            )))
+        }
+    }
+
+    /// Whether cached factors still fit a problem of shape (n, m) at
+    /// `theta` with `mask` (see the per-strategy `compatible` docs).
+    pub fn compatible(&self, theta: &[f64], n: usize, m: usize, mask: &Matrix) -> bool {
+        match self {
+            PrecondFactors::LatentKron(f) => {
+                f.compatible(theta, n, m) && mask.data().iter().all(|&mv| mv > 0.0)
+            }
+            PrecondFactors::ObservedGram(f) => f.compatible(theta, n, m, mask),
+        }
+    }
+
+    /// Bind the factors to a live (mask, σ²) pair for one solve.
+    pub fn apply_state<'a>(&'a self, mask: &'a Matrix, sigma2: f64) -> PrecondApply<'a> {
+        match self {
+            PrecondFactors::LatentKron(f) => PrecondApply::LatentKron(LatentKronPrecond {
+                factors: f,
+                mask,
+                sigma2,
+            }),
+            PrecondFactors::ObservedGram(f) => {
+                PrecondApply::ObservedGram(ObsGramPrecond::new(f, sigma2))
+            }
+        }
+    }
+
+    /// Rank of the underlying factor (observability / reports).
+    pub fn rank(&self) -> usize {
+        match self {
+            PrecondFactors::LatentKron(f) => f.rank(),
+            PrecondFactors::ObservedGram(f) => f.rank(),
+        }
+    }
+
+    /// Short strategy tag for logs.
+    pub fn strategy(&self) -> &'static str {
+        match self {
+            PrecondFactors::LatentKron(_) => "latent-kron",
+            PrecondFactors::ObservedGram(_) => "obs-gram",
+        }
+    }
+}
+
+/// Per-solve apply state for [`PrecondFactors`] (implements
+/// [`Preconditioner`] uniformly over both strategies).
+pub enum PrecondApply<'a> {
+    LatentKron(LatentKronPrecond<'a>),
+    ObservedGram(ObsGramPrecond<'a>),
+}
+
+impl Preconditioner for PrecondApply<'_> {
+    fn apply_batch(&self, r: &[f64], z: &mut [f64], batch: usize) {
+        match self {
+            PrecondApply::LatentKron(p) => p.apply_batch(r, z, batch),
+            PrecondApply::ObservedGram(p) => p.apply_batch(r, z, batch),
+        }
     }
 }
 
@@ -292,6 +912,215 @@ mod tests {
                 assert_eq!(x[i], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn precond_matches_dense_inverse_at_full_rank() {
+        // Full mask + full rank: the preconditioner IS (K1 ⊗ K2 + σ²I)⁻¹.
+        let (k1, k2, _) = setup(6, 5, 21);
+        let mask = Matrix::from_fn(6, 5, |_, _| 1.0);
+        let s2 = 0.17;
+        let theta = vec![0.0; 6];
+        let f = KronPrecondFactors::build(&k1, &k2, 6, &theta);
+        let pc = LatentKronPrecond { factors: &f, mask: &mask, sigma2: s2 };
+
+        let dense = dense_masked_kron(&k1, &k2, &mask, s2);
+        let l = crate::linalg::cholesky(&dense).unwrap();
+        let mut rng = Pcg64::new(22);
+        let v = rng.normal_vec(30);
+        let mut z = vec![0.0; 30];
+        pc.apply_batch(&v, &mut z, 1);
+        let want = crate::linalg::chol_solve(&l, &v);
+        for i in 0..30 {
+            assert!((z[i] - want[i]).abs() < 1e-7, "i={i}: {} vs {}", z[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn precond_is_exact_noise_inverse_off_mask() {
+        let (k1, k2, mask) = setup(7, 6, 23);
+        let s2 = 0.4;
+        let theta = vec![0.0; 6];
+        let f = KronPrecondFactors::build(&k1, &k2, 4, &theta);
+        let pc = LatentKronPrecond { factors: &f, mask: &mask, sigma2: s2 };
+        let mut rng = Pcg64::new(24);
+        let v = rng.normal_vec(42);
+        let mut z = vec![0.0; 42];
+        pc.apply_batch(&v, &mut z, 1);
+        for (i, &mk) in mask.data().iter().enumerate() {
+            if mk == 0.0 {
+                assert!((z[i] - v[i] / s2).abs() < 1e-12, "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn precond_is_symmetric_positive_definite() {
+        let (k1, k2, mask) = setup(6, 5, 25);
+        let theta = vec![0.0; 6];
+        let f = KronPrecondFactors::build(&k1, &k2, 3, &theta);
+        let pc = LatentKronPrecond { factors: &f, mask: &mask, sigma2: 0.09 };
+        let mut rng = Pcg64::new(26);
+        let u = rng.normal_vec(30);
+        let v = rng.normal_vec(30);
+        let mut mu = vec![0.0; 30];
+        let mut mv = vec![0.0; 30];
+        pc.apply_batch(&u, &mut mu, 1);
+        pc.apply_batch(&v, &mut mv, 1);
+        let umv = crate::linalg::matrix::dot(&u, &mv);
+        let vmu = crate::linalg::matrix::dot(&v, &mu);
+        assert!((umv - vmu).abs() < 1e-8 * (1.0 + umv.abs()), "not symmetric");
+        let umu = crate::linalg::matrix::dot(&u, &mu);
+        assert!(umu > 0.0, "u M⁻¹ u = {umu}");
+    }
+
+    #[test]
+    fn precond_batch_parallel_bit_identical() {
+        let (k1, k2, mask) = setup(8, 6, 27);
+        let theta = vec![0.0; 6];
+        let f = KronPrecondFactors::build(&k1, &k2, 5, &theta);
+        let pc = LatentKronPrecond { factors: &f, mask: &mask, sigma2: 0.2 };
+        let nm = 48;
+        let batch = 5;
+        let mut rng = Pcg64::new(28);
+        let v = rng.normal_vec(batch * nm);
+        let mut seq = vec![0.0; batch * nm];
+        for b in 0..batch {
+            pc.apply_batch_with_threads(&v[b * nm..(b + 1) * nm], &mut seq[b * nm..(b + 1) * nm], 1, 1);
+        }
+        for threads in [2, 3, 4] {
+            let mut got = vec![0.0; batch * nm];
+            pc.apply_batch_with_threads(&v, &mut got, batch, threads);
+            assert_eq!(got, seq, "threads={threads}");
+        }
+    }
+
+    /// Ill-conditioned test system: small noise + smooth kernels.
+    fn ill_system(n: usize, m: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Pcg64::new(seed);
+        let x = Matrix::from_vec(n, 2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let k1 = kernels::rbf(&x, &x, &[2.0, 2.0]);
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1) as f64).collect();
+        let k2 = kernels::matern12(&t, &t, 1.5, 1.0);
+        (k1, k2)
+    }
+
+    fn assert_pcg_beats_plain(
+        op: &MaskedKronOp,
+        factors: &PrecondFactors,
+        rhs: &[f64],
+        min_ratio: usize,
+    ) {
+        let (_, plain) = op.solve(rhs, 1e-2, 10_000);
+        let (pcg_x, pcg) = op.solve_precond(rhs, None, Some(factors), 1e-2, 10_000);
+        assert!(plain.converged && pcg.converged);
+        assert!(
+            pcg.iters * min_ratio <= plain.iters,
+            "[{}] pcg {} vs plain {}",
+            factors.strategy(),
+            pcg.iters,
+            plain.iters
+        );
+        assert!(pcg.mvm_rows <= plain.mvm_rows);
+        // the preconditioned solve lands on the same system solution
+        let nm = op.len();
+        let mut back = vec![0.0; nm];
+        op.apply_batch(&pcg_x, &mut back, 1);
+        let bnorm = crate::linalg::matrix::dot(rhs, rhs).sqrt();
+        let mut err = 0.0f64;
+        for i in 0..nm {
+            err += (back[i] - rhs[i]) * (back[i] - rhs[i]);
+        }
+        assert!(err.sqrt() <= 1.1e-2 * bnorm, "pcg residual too large");
+    }
+
+    #[test]
+    fn latent_kron_precond_crushes_full_mask_ill_conditioned() {
+        // Full mask -> Auto picks the latent-Kronecker factors, which are
+        // the near-exact inverse: expect O(1) iterations vs hundreds.
+        let (n, m) = (24, 16);
+        let (k1, k2) = ill_system(n, m, 29);
+        let mask = Matrix::from_fn(n, m, |_, _| 1.0);
+        let s2 = 1e-4;
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let mut rng = Pcg64::new(30);
+        let rhs = rng.normal_vec(n * m);
+        let theta = vec![0.0; 5];
+        let f = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &mask, &theta).unwrap();
+        assert_eq!(f.strategy(), "latent-kron");
+        assert_pcg_beats_plain(&op, &f, &rhs, 4);
+    }
+
+    #[test]
+    fn obs_gram_precond_cuts_masked_ill_conditioned() {
+        // Partial mask -> Auto picks the observed-Gram factors (the
+        // latent factors' observed/unobserved coupling caps their win).
+        let (n, m) = (24, 16);
+        let (k1, k2) = ill_system(n, m, 31);
+        let mut rng = Pcg64::new(32);
+        let mask = Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.8 { 1.0 } else { 0.0 });
+        let s2 = 1e-4;
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
+        let theta = vec![0.0; 5];
+        let f = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &mask, &theta).unwrap();
+        assert_eq!(f.strategy(), "obs-gram");
+        assert_pcg_beats_plain(&op, &f, &rhs, 2);
+    }
+
+    #[test]
+    fn obs_gram_precond_matches_dense_inverse_at_full_rank() {
+        // At rank = n_obs the Woodbury apply is the exact inverse of the
+        // observed block (K_obs + σ²I) and 1/σ² off-mask.
+        let (k1, k2, mask) = setup(6, 5, 33);
+        let s2 = 0.21;
+        let theta = vec![0.0; 6];
+        let n_obs = mask.data().iter().filter(|&&mv| mv > 0.0).count();
+        let f = ObsGramPrecondFactors::build(&k1, &k2, &mask, n_obs, &theta);
+        let pc = ObsGramPrecond::new(&f, s2);
+        let dense = dense_masked_kron(&k1, &k2, &mask, s2);
+        let l = crate::linalg::cholesky(&dense).unwrap();
+        let mut rng = Pcg64::new(34);
+        let v = rng.normal_vec(30);
+        let mut z = vec![0.0; 30];
+        pc.apply_batch(&v, &mut z, 1);
+        let want = crate::linalg::chol_solve(&l, &v);
+        for i in 0..30 {
+            assert!((z[i] - want[i]).abs() < 1e-7, "i={i}: {} vs {}", z[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn obs_gram_factors_stale_on_mask_change() {
+        let (k1, k2, mask) = setup(6, 5, 35);
+        let theta = vec![0.0; 6];
+        let f = PrecondFactors::build(PrecondCfg::Rank(8), &k1, &k2, &mask, &theta).unwrap();
+        assert!(f.compatible(&theta, 6, 5, &mask));
+        let mut grown = mask.clone();
+        let flip = grown.data().iter().position(|&mv| mv == 0.0);
+        if let Some(i) = flip {
+            grown.data_mut()[i] = 1.0;
+            assert!(!f.compatible(&theta, 6, 5, &grown));
+        }
+    }
+
+    #[test]
+    fn precond_factors_compatibility_window() {
+        let (k1, k2, _) = setup(6, 5, 31);
+        let theta = vec![0.1, 0.2, 0.3, -0.5, 0.0, -2.0];
+        let f = KronPrecondFactors::build(&k1, &k2, 4, &theta);
+        assert!(f.compatible(&theta, 6, 5));
+        // noise drift is free (σ² applied live)
+        let mut noise_shift = theta.clone();
+        noise_shift[5] -= 3.0;
+        assert!(f.compatible(&noise_shift, 6, 5));
+        // kernel drift beyond the window stales the factors
+        let mut ls_shift = theta.clone();
+        ls_shift[0] += 0.5;
+        assert!(!f.compatible(&ls_shift, 6, 5));
+        // shape changes always stale
+        assert!(!f.compatible(&theta, 7, 5));
+        assert!(!f.compatible(&theta, 6, 4));
     }
 
     #[test]

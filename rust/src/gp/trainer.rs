@@ -33,6 +33,10 @@ pub struct FitTrace {
     pub theta: Vec<f64>,
     /// Steps actually taken.
     pub steps: usize,
+    /// Objective evaluations, including rejected line-search probes. Each
+    /// evaluation is one batched (P)CG solve + SLQ pass, so this is the
+    /// fit's solver-work denominator (pairs with `CgStats::mvm_rows`).
+    pub evals: usize,
 }
 
 /// Adam configuration.
@@ -63,8 +67,10 @@ pub fn adam(obj: &mut dyn Objective, theta0: &[f64], cfg: &AdamCfg) -> Result<Fi
     let mut mu = vec![0.0; theta.len()];
     let mut nu = vec![0.0; theta.len()];
     let mut values = Vec::with_capacity(cfg.steps);
+    let mut evals = 0;
     for step in 0..cfg.steps {
         let (value, grad) = obj.eval(&theta)?;
+        evals += 1;
         values.push(value);
         let t = (step + 1) as f64;
         for i in 0..theta.len() {
@@ -80,6 +86,7 @@ pub fn adam(obj: &mut dyn Objective, theta0: &[f64], cfg: &AdamCfg) -> Result<Fi
         steps: values.len(),
         values,
         theta,
+        evals,
     })
 }
 
@@ -117,6 +124,7 @@ pub fn lbfgs(obj: &mut dyn Objective, theta0: &[f64], cfg: &LbfgsCfg) -> Result<
     let n = theta0.len();
     let mut theta = theta0.to_vec();
     let (mut fval, mut grad) = neg(obj.eval(&theta)?);
+    let mut evals = 1;
     let mut values = vec![-fval];
 
     let mut s_hist: Vec<Vec<f64>> = Vec::new();
@@ -167,6 +175,7 @@ pub fn lbfgs(obj: &mut dyn Objective, theta0: &[f64], cfg: &LbfgsCfg) -> Result<
             for i in 0..n {
                 new_theta[i] = theta[i] + step * dir[i];
             }
+            evals += 1;
             match obj.eval(&new_theta) {
                 Ok(vg) => {
                     let (f2, g2) = neg(vg);
@@ -208,6 +217,7 @@ pub fn lbfgs(obj: &mut dyn Objective, theta0: &[f64], cfg: &LbfgsCfg) -> Result<
         steps: values.len(),
         values,
         theta,
+        evals,
     })
 }
 
@@ -323,6 +333,22 @@ mod tests {
         .unwrap();
         assert!((trace.theta[0] - 1.0).abs() < 1e-2, "{:?}", trace.theta);
         assert!((trace.theta[1] - 1.0).abs() < 2e-2);
+    }
+
+    #[test]
+    fn trainers_count_objective_evaluations() {
+        let mut q = Quad { c: vec![1.0, 2.0], d: vec![1.0, 2.0] };
+        let tr = adam(
+            &mut q,
+            &[0.0, 0.0],
+            &AdamCfg { steps: 7, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(tr.evals, 7);
+        let mut q2 = Quad { c: vec![1.0, 2.0], d: vec![1.0, 2.0] };
+        let tr2 = lbfgs(&mut q2, &[0.0, 0.0], &LbfgsCfg::default()).unwrap();
+        // line searches may probe more than once per accepted step
+        assert!(tr2.evals >= tr2.steps, "{} < {}", tr2.evals, tr2.steps);
     }
 
     #[test]

@@ -35,9 +35,14 @@ pub struct CgStats {
     pub rel_residual: Vec<f64>,
     /// Whether every system met the tolerance.
     pub converged: bool,
-    /// Total operator applications (iters, plus one residual apply when a
-    /// warm start was used).
+    /// Total batched operator applications (iters, plus one residual apply
+    /// when a warm start was used).
     pub mvms: usize,
+    /// Total per-RHS operator rows applied. Converged systems are
+    /// compacted out of the batch before each apply, so this is the true
+    /// MVM work: `sum(iters_per_rhs)` plus `batch` rows for the warm
+    /// residual. Without compaction it would be `batch * mvms`.
+    pub mvm_rows: usize,
 }
 
 /// Solve A X = B for a batch of right-hand sides with plain CG from a
@@ -51,12 +56,16 @@ pub fn cg_batch(op: &dyn LinOp, b: &[f64], tol: f64, max_iters: usize) -> (Vec<f
 ///
 /// `b` is row-major (batch, len); `x0`, when given, must have the same
 /// layout (it is ignored if the length mismatches or it is all zero).
-/// Returns the solutions and stats. Systems that converge early are frozen
-/// (their alpha/beta forced to 0) so the remaining systems keep
-/// full-precision updates — this mirrors GPyTorch's batched CG semantics
-/// that the paper relies on (§B: tol 0.01). Convergence is measured
-/// relative to ||b|| regardless of the guess, so a warm and a cold solve
-/// stop at the same residual quality.
+/// Returns the solutions and stats. Systems that converge early are
+/// compacted out of the batch (they stop paying operator applications
+/// entirely; see `linalg::pcg`) — this mirrors GPyTorch's batched CG
+/// semantics that the paper relies on (§B: tol 0.01). Convergence is
+/// measured relative to ||b|| regardless of the guess, so a warm and a
+/// cold solve stop at the same residual quality.
+///
+/// This is the identity-preconditioner specialization of
+/// [`crate::linalg::pcg::pcg_batch_warm`]; the iterate sequence per RHS is
+/// bit-exact with the historical uncompacted plain-CG loop.
 pub fn cg_batch_warm(
     op: &dyn LinOp,
     b: &[f64],
@@ -64,102 +73,7 @@ pub fn cg_batch_warm(
     tol: f64,
     max_iters: usize,
 ) -> (Vec<f64>, CgStats) {
-    let n = op.len();
-    let batch = if n == 0 { 0 } else { b.len() / n };
-    debug_assert_eq!(b.len(), batch * n);
-
-    let (mut x, warm) = match x0 {
-        Some(g) if g.len() == b.len() && g.iter().any(|&v| v != 0.0) => (g.to_vec(), true),
-        _ => (vec![0.0; b.len()], false),
-    };
-    let mut r = b.to_vec();
-    let mut warm_mvms = 0;
-    if warm {
-        // r = b - A x0 (one extra fused batch MVM).
-        let mut ax = vec![0.0; b.len()];
-        op.apply_batch(&x, &mut ax, batch);
-        warm_mvms = 1;
-        for (ri, ai) in r.iter_mut().zip(&ax) {
-            *ri -= ai;
-        }
-    }
-    let mut p = r.clone();
-    let mut ap = vec![0.0; b.len()];
-
-    let bnorm: Vec<f64> = (0..batch)
-        .map(|bi| norm(&b[bi * n..(bi + 1) * n]).max(1e-300))
-        .collect();
-    let mut rs: Vec<f64> = (0..batch)
-        .map(|bi| {
-            let rb = &r[bi * n..(bi + 1) * n];
-            crate::linalg::matrix::dot(rb, rb)
-        })
-        .collect();
-
-    let mut iters = 0;
-    let mut iters_per_rhs = vec![0usize; batch];
-    for _ in 0..max_iters {
-        let active: Vec<bool> = (0..batch)
-            .map(|bi| rs[bi].sqrt() > tol * bnorm[bi])
-            .collect();
-        if !active.iter().any(|&a| a) {
-            break;
-        }
-        iters += 1;
-        op.apply_batch(&p, &mut ap, batch);
-        for bi in 0..batch {
-            if !active[bi] {
-                continue;
-            }
-            iters_per_rhs[bi] += 1;
-            let (pb, apb) = (&p[bi * n..(bi + 1) * n], &ap[bi * n..(bi + 1) * n]);
-            let denom = crate::linalg::matrix::dot(pb, apb);
-            if denom <= 0.0 || !denom.is_finite() {
-                // Operator not PD along p (should not happen); freeze.
-                rs[bi] = 0.0;
-                continue;
-            }
-            let alpha = rs[bi] / denom;
-            let (xb, rb) = (bi * n, (bi + 1) * n);
-            {
-                let pslice = &p[xb..rb];
-                let xs = &mut x[xb..rb];
-                crate::linalg::matrix::axpy(alpha, pslice, xs);
-            }
-            {
-                let apslice = &ap[xb..rb];
-                let rsl = &mut r[xb..rb];
-                crate::linalg::matrix::axpy(-alpha, apslice, rsl);
-            }
-            let rnew = {
-                let rsl = &r[xb..rb];
-                crate::linalg::matrix::dot(rsl, rsl)
-            };
-            let beta = rnew / rs[bi];
-            rs[bi] = rnew;
-            let (rsl, psl) = (&r[xb..rb], &mut p[xb..rb]);
-            for i in 0..n {
-                psl[i] = rsl[i] + beta * psl[i];
-            }
-        }
-    }
-
-    let rel: Vec<f64> = (0..batch).map(|bi| rs[bi].sqrt() / bnorm[bi]).collect();
-    let converged = rel.iter().all(|&r| r <= tol * 1.0001);
-    (
-        x,
-        CgStats {
-            iters,
-            iters_per_rhs,
-            rel_residual: rel,
-            converged,
-            mvms: iters + warm_mvms,
-        },
-    )
-}
-
-fn norm(v: &[f64]) -> f64 {
-    crate::linalg::matrix::dot(v, v).sqrt()
+    crate::linalg::pcg::pcg_batch_warm(op, b, x0, None, tol, max_iters)
 }
 
 /// Dense matrix as a LinOp (tests + the naive engine's solver reuse).

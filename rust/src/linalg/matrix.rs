@@ -258,6 +258,19 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Fused axpby: y = a * x + b * y (one pass, auto-vectorizes).
+///
+/// With a = 1.0 the multiply is exact (IEEE), so `axpby(1.0, x, b, y)` is
+/// bitwise identical to the scalar loop `y[i] = x[i] + b * y[i]` — the CG
+/// search-direction update relies on this for bit-exact solver parity.
+#[inline]
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
 /// Row-panel matmul kernel: rows [row0, row0+rows) of out = A[those rows] * B.
 fn matmul_panel(a: &[f64], b: &[f64], out: &mut [f64], row0: usize, rows_end: usize, k: usize, m: usize) {
     for i in row0..rows_end {
@@ -360,6 +373,27 @@ mod tests {
         let mut rng = crate::rng::Pcg64::new(3);
         let a = Matrix::from_vec(5, 8, rng.normal_vec(40));
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn axpby_matches_scalar_loop_bitwise() {
+        let mut rng = crate::rng::Pcg64::new(4);
+        let x = rng.normal_vec(37);
+        let y0 = rng.normal_vec(37);
+        let beta = 0.73;
+        let mut want = y0.clone();
+        for i in 0..37 {
+            want[i] = x[i] + beta * want[i];
+        }
+        let mut got = y0.clone();
+        axpby(1.0, &x, beta, &mut got);
+        assert_eq!(got, want);
+        // general coefficients
+        let mut g2 = y0.clone();
+        axpby(-2.5, &x, 0.5, &mut g2);
+        for i in 0..37 {
+            assert!((g2[i] - (-2.5 * x[i] + 0.5 * y0[i])).abs() < 1e-15);
+        }
     }
 
     #[test]

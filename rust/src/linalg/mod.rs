@@ -3,17 +3,23 @@
 //!
 //! Everything the GP engines need: a dense row-major [`Matrix`], Cholesky
 //! factorization ([`cholesky`]), batched conjugate gradients ([`cg`]),
-//! Lanczos / stochastic Lanczos quadrature ([`lanczos`]), and a Jacobi
-//! symmetric eigensolver ([`eigh`]).
+//! batched *preconditioned* CG with active-set compaction ([`pcg`]),
+//! rank-r partial pivoted Cholesky ([`pivoted_cholesky`]), Lanczos /
+//! stochastic Lanczos quadrature ([`lanczos`]), and a Jacobi symmetric
+//! eigensolver ([`eigh`]).
 
 pub mod cg;
 pub mod cholesky;
 pub mod eigh;
 pub mod lanczos;
 pub mod matrix;
+pub mod pcg;
+pub mod pivoted_cholesky;
 
 pub use cg::{cg_batch, cg_batch_warm, CgStats, LinOp};
 pub use cholesky::{chol_logdet, chol_sample, chol_solve, cholesky, solve_lower, solve_lower_t};
 pub use eigh::{jacobi_eigh, tridiag_eigh};
 pub use lanczos::{lanczos, slq_logdet};
 pub use matrix::Matrix;
+pub use pcg::{pcg_batch_warm, IdentityPrecond, Preconditioner};
+pub use pivoted_cholesky::{pivoted_cholesky, pivoted_cholesky_fn, PivotedCholesky};

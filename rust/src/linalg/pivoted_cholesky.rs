@@ -1,0 +1,262 @@
+//! Rank-r partial pivoted Cholesky of a PSD matrix.
+//!
+//! The low-rank kernel approximation behind the latent-Kronecker CG
+//! preconditioner (GPyTorch's machinery, Gardner et al. 2018): greedily
+//! factor A ≈ L Lᵀ with L ∈ R^{n×r}, picking at each step the pivot with
+//! the largest remaining diagonal (Schur-complement) entry. The residual
+//! A − L_r L_rᵀ is itself a Schur complement, hence PSD, so the
+//! approximation error is monotone non-increasing in rank and exactly zero
+//! at full rank. O(n r²) time, O(n r) space, touches only the rows of A it
+//! pivots on (callers with implicit kernels can pass a dense `Matrix`
+//! here because K1 is n×n and already materialized by the GP stack).
+
+use super::Matrix;
+
+/// Result of a partial pivoted Cholesky factorization.
+#[derive(Clone, Debug)]
+pub struct PivotedCholesky {
+    /// (n, rank) factor in ORIGINAL row order: A ≈ l · lᵀ.
+    pub l: Matrix,
+    /// Pivot indices in selection order (length = rank).
+    pub pivots: Vec<usize>,
+    /// Trace of the PSD residual A − L Lᵀ at exit (0 at full rank).
+    pub trace_residual: f64,
+}
+
+impl PivotedCholesky {
+    /// Rank actually reached (may be below the requested cap when the
+    /// residual trace fell under tolerance first).
+    pub fn rank(&self) -> usize {
+        self.l.cols()
+    }
+}
+
+/// Greedy diagonal-pivoted partial Cholesky of a PSD matrix.
+///
+/// Stops at `max_rank` columns or when the residual trace drops below
+/// `rel_tol * trace(A)`, whichever comes first. A non-PSD input (negative
+/// residual diagonal beyond roundoff) stops early rather than producing
+/// NaNs; the factor built so far is still a valid PSD approximation.
+pub fn pivoted_cholesky(a: &Matrix, max_rank: usize, rel_tol: f64) -> PivotedCholesky {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "pivoted_cholesky needs square");
+    let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    pivoted_cholesky_fn(
+        &diag,
+        &mut |piv, out| {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = a[(i, piv)];
+            }
+        },
+        max_rank,
+        rel_tol,
+    )
+}
+
+/// [`pivoted_cholesky`] against an *implicit* matrix: `diag` is the full
+/// diagonal, `column(piv, out)` fills column `piv`. Only `rank` columns
+/// are ever requested, so an n_obs × n_obs observed-covariance Gram is
+/// factored in O(n·r) entry evaluations without materializing it — the
+/// GPyTorch-style preconditioner path relies on this.
+pub fn pivoted_cholesky_fn(
+    diag: &[f64],
+    column: &mut dyn FnMut(usize, &mut [f64]),
+    max_rank: usize,
+    rel_tol: f64,
+) -> PivotedCholesky {
+    let n = diag.len();
+    let max_rank = max_rank.min(n);
+
+    // Remaining Schur-complement diagonal.
+    let mut d: Vec<f64> = diag.to_vec();
+    let trace0: f64 = d.iter().sum();
+    let stop = rel_tol * trace0.max(0.0);
+
+    // Columns are built in selection order, then packed into (n, rank).
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(max_rank);
+    let mut pivots: Vec<usize> = Vec::with_capacity(max_rank);
+
+    for _ in 0..max_rank {
+        // Largest remaining diagonal entry (pivoted rows were zeroed, so
+        // they can never win the scan again).
+        let mut piv = usize::MAX;
+        let mut best = 0.0;
+        for (i, &di) in d.iter().enumerate() {
+            if di > best {
+                best = di;
+                piv = i;
+            }
+        }
+        if piv == usize::MAX || best <= 1e-300 {
+            break;
+        }
+        let root = best.sqrt();
+        // col = (A[:, piv] - sum_j l[:,j] l[piv,j]) / root
+        let mut col = vec![0.0; n];
+        column(piv, &mut col);
+        for c in cols.iter() {
+            let cp = c[piv];
+            for (ci, ca) in col.iter_mut().zip(c.iter()) {
+                *ci -= ca * cp;
+            }
+        }
+        for ci in col.iter_mut() {
+            *ci /= root;
+        }
+        // Update the residual diagonal; clamp roundoff negatives to zero.
+        for (di, ci) in d.iter_mut().zip(&col) {
+            *di = (*di - ci * ci).max(0.0);
+        }
+        d[piv] = 0.0;
+        pivots.push(piv);
+        cols.push(col);
+        let remaining: f64 = d.iter().sum();
+        if remaining <= stop {
+            break;
+        }
+    }
+
+    let rank = cols.len();
+    let mut l = Matrix::zeros(n, rank);
+    for (j, c) in cols.iter().enumerate() {
+        for i in 0..n {
+            l[(i, j)] = c[i];
+        }
+    }
+    PivotedCholesky {
+        l,
+        pivots,
+        trace_residual: d.iter().sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_psd(n: usize, seed: u64, jitter: f64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let a = Matrix::from_vec(n, n, rng.normal_vec(n * n));
+        let mut psd = a.matmul(&a.transpose());
+        psd.add_diag(jitter);
+        psd
+    }
+
+    fn approx_error(a: &Matrix, pc: &PivotedCholesky) -> f64 {
+        let rec = pc.l.matmul(&pc.l.transpose());
+        a.max_abs_diff(&rec)
+    }
+
+    #[test]
+    fn error_monotone_in_rank_and_exact_at_full() {
+        let n = 18;
+        let a = random_psd(n, 1, 0.5);
+        let mut prev = f64::INFINITY;
+        for r in [1, 2, 4, 8, 12, n] {
+            let pc = pivoted_cholesky(&a, r, 0.0);
+            let err = approx_error(&a, &pc);
+            assert!(
+                err <= prev + 1e-9,
+                "rank {r}: error {err} grew past {prev}"
+            );
+            prev = err;
+        }
+        let full = pivoted_cholesky(&a, n, 0.0);
+        assert!(approx_error(&a, &full) < 1e-8, "full rank not exact");
+        assert!(full.trace_residual < 1e-8);
+    }
+
+    #[test]
+    fn trace_residual_monotone() {
+        let a = random_psd(14, 2, 0.1);
+        let mut prev = f64::INFINITY;
+        for r in 1..=14 {
+            let pc = pivoted_cholesky(&a, r, 0.0);
+            assert!(pc.trace_residual <= prev + 1e-10, "rank {r}");
+            assert!(pc.trace_residual >= -1e-10);
+            prev = pc.trace_residual;
+        }
+    }
+
+    #[test]
+    fn low_rank_matrix_recovered_at_its_rank() {
+        // A = B Bᵀ with B (n, 3) has exact rank 3.
+        let n = 20;
+        let mut rng = Pcg64::new(3);
+        let b = Matrix::from_vec(n, 3, rng.normal_vec(n * 3));
+        let a = b.matmul(&b.transpose());
+        let pc = pivoted_cholesky(&a, 10, 1e-12);
+        assert!(pc.rank() <= 4, "rank {} for a rank-3 matrix", pc.rank());
+        assert!(approx_error(&a, &pc) < 1e-8);
+    }
+
+    #[test]
+    fn smooth_kernel_compresses_fast() {
+        // Long-lengthscale RBF Gram matrices are numerically low rank; a
+        // small rank budget must capture nearly all the trace.
+        let n = 40;
+        let mut rng = Pcg64::new(4);
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let a = Matrix::from_fn(n, n, |i, j| {
+            let d = (x[i] - x[j]) / 2.0;
+            (-0.5 * d * d).exp()
+        });
+        let pc = pivoted_cholesky(&a, 8, 0.0);
+        let trace0: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        assert!(
+            pc.trace_residual < 1e-6 * trace0,
+            "residual {} of trace {trace0}",
+            pc.trace_residual
+        );
+    }
+
+    #[test]
+    fn psd_approximation_from_below() {
+        // The residual A − L Lᵀ is PSD: quadratic forms stay nonnegative.
+        let n = 12;
+        let a = random_psd(n, 5, 0.2);
+        let pc = pivoted_cholesky(&a, 5, 0.0);
+        let rec = pc.l.matmul(&pc.l.transpose());
+        let mut rng = Pcg64::new(6);
+        for _ in 0..20 {
+            let v = rng.normal_vec(n);
+            let av = a.matvec(&v);
+            let rv = rec.matvec(&v);
+            let quad: f64 = (0..n).map(|i| v[i] * (av[i] - rv[i])).sum();
+            assert!(quad > -1e-8, "residual not PSD: {quad}");
+        }
+    }
+
+    #[test]
+    fn implicit_column_oracle_matches_dense() {
+        let a = random_psd(16, 7, 0.3);
+        let dense = pivoted_cholesky(&a, 6, 0.0);
+        let diag: Vec<f64> = (0..16).map(|i| a[(i, i)]).collect();
+        let implicit = pivoted_cholesky_fn(
+            &diag,
+            &mut |piv, out| {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = a[(i, piv)];
+                }
+            },
+            6,
+            0.0,
+        );
+        assert_eq!(dense.pivots, implicit.pivots);
+        assert_eq!(dense.l, implicit.l);
+    }
+
+    #[test]
+    fn zero_and_identity_edge_cases() {
+        let z = Matrix::zeros(5, 5);
+        let pc = pivoted_cholesky(&z, 5, 0.0);
+        assert_eq!(pc.rank(), 0);
+        assert_eq!(pc.trace_residual, 0.0);
+
+        let e = Matrix::eye(6);
+        let pc = pivoted_cholesky(&e, 6, 0.0);
+        assert_eq!(pc.rank(), 6);
+        assert!(approx_error(&e, &pc) < 1e-12);
+    }
+}

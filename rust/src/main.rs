@@ -24,7 +24,8 @@ fn main() -> lkgp::Result<()> {
         _ => {
             eprintln!(
                 "usage: lkgp <artifacts|smoke|serve|pool> [--engine rust|xla] \
-                 [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off]"
+                 [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off] \
+                 [--precond off|auto|rank=R]"
             );
             Ok(())
         }

@@ -22,11 +22,13 @@ pub mod manifest;
 #[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 #[cfg(feature = "xla")]
 use crate::error::LkgpError;
 use crate::error::Result;
 use crate::gp::lkgp::{Dataset, SolverCfg};
+use crate::gp::operator::PrecondFactors;
 use crate::gp::trainer;
 #[cfg(feature = "xla")]
 use crate::gp::Theta;
@@ -48,6 +50,13 @@ pub struct PredictOutcome {
     /// Total CG iterations across the batched solve (0 for engines that
     /// do not report iteration counts).
     pub cg_iters: usize,
+    /// Total per-RHS operator rows applied (see `CgStats::mvm_rows`; 0
+    /// for engines that do not report it).
+    pub cg_mvm_rows: usize,
+    /// Factored preconditioner state used/built by the solve, for the
+    /// serving layer to cache in the `WarmStart` lineage (None when
+    /// preconditioning is off or the engine does not expose it).
+    pub precond: Option<Arc<PrecondFactors>>,
 }
 
 /// A GP backend the coordinator can drive.
@@ -77,7 +86,26 @@ pub trait Engine: Send {
             alpha: None,
             cross: None,
             cg_iters: 0,
+            cg_mvm_rows: 0,
+            precond: None,
         })
+    }
+
+    /// [`Engine::predict_final_warm`] plus cached preconditioner state:
+    /// `precond` is the previous generation's factored preconditioner
+    /// (from the `WarmStart` lineage); the outcome carries the factors the
+    /// solve actually used for re-caching. Engines without a
+    /// preconditioned path ignore it.
+    fn predict_final_cached(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        warm: Option<&[f64]>,
+        precond: Option<Arc<PrecondFactors>>,
+    ) -> Result<PredictOutcome> {
+        let _ = precond;
+        self.predict_final_warm(theta, data, xq, warm)
     }
 
     /// Posterior samples of full curves over [X; Xq] x grid.
@@ -154,11 +182,20 @@ impl Engine for RustEngine {
         // Warm-start each optimizer step's batched CG ([y, probes] solves)
         // from the previous step's solutions: consecutive iterates change
         // theta slowly, so the previous solve is an excellent guess and the
-        // converged tolerance is unchanged.
+        // converged tolerance is unchanged. The factored preconditioner
+        // rides along the same way — rebuilt only when theta drifts past
+        // the compatibility window (gp::operator::PrecondFactors).
         let mut warm: Option<Vec<f64>> = None;
+        let mut precond: Option<Arc<PrecondFactors>> = None;
         let mut obj = |packed: &[f64]| {
-            match crate::gp::lkgp::mll_value_grad_warm(packed, data, &probes, &cfg, warm.as_deref())
-            {
+            match crate::gp::lkgp::mll_value_grad_cached(
+                packed,
+                data,
+                &probes,
+                &cfg,
+                warm.as_deref(),
+                &mut precond,
+            ) {
                 Ok((eval, solves)) => {
                     warm = Some(solves);
                     Ok((eval.value, eval.grad))
@@ -189,14 +226,28 @@ impl Engine for RustEngine {
         xq: &Matrix,
         warm: Option<&[f64]>,
     ) -> Result<PredictOutcome> {
+        self.predict_final_cached(theta, data, xq, warm, None)
+    }
+
+    fn predict_final_cached(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        warm: Option<&[f64]>,
+        precond: Option<Arc<PrecondFactors>>,
+    ) -> Result<PredictOutcome> {
+        let mut cache = precond;
         let (preds, solves, cg) =
-            crate::gp::lkgp::predict_final_warm(theta, data, xq, &self.cfg, warm)?;
+            crate::gp::lkgp::predict_final_cached(theta, data, xq, &self.cfg, warm, &mut cache)?;
         let nm = data.n() * data.m();
         Ok(PredictOutcome {
             alpha: Some(solves[..nm].to_vec()),
             cross: Some(solves[nm..].to_vec()),
             preds,
             cg_iters: cg.iters_per_rhs.iter().sum(),
+            cg_mvm_rows: cg.mvm_rows,
+            precond: cache,
         })
     }
 

@@ -1,0 +1,324 @@
+//! Preconditioned-CG correctness: a preconditioner must never change
+//! *what* the solver converges to, only how fast it gets there — and the
+//! identity preconditioner must not change anything at all.
+
+use lkgp::gp::kernels;
+use lkgp::gp::operator::{dense_masked_kron, MaskedKronOp};
+use lkgp::gp::{PrecondCfg, PrecondFactors, Theta};
+use lkgp::lcbench::toy_dataset;
+use lkgp::linalg::pcg::{pcg_batch_warm, IdentityPrecond};
+use lkgp::linalg::{cg_batch_warm, pivoted_cholesky, LinOp, Matrix};
+use lkgp::rng::Pcg64;
+
+/// Random kernel pair for an (n, m) grid.
+fn gen_kernels(rng: &mut Pcg64, n: usize, m: usize, d: usize) -> (Matrix, Matrix) {
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let ls: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.5, 2.0)).collect();
+    let k1 = kernels::rbf(&x, &x, &ls);
+    let t: Vec<f64> = (0..m).map(|i| i as f64 / m as f64).collect();
+    let k2 = kernels::matern12(&t, &t, rng.uniform_in(0.2, 1.0), rng.uniform_in(0.5, 2.0));
+    (k1, k2)
+}
+
+/// The four adversarial mask families (mirrors tests/props.rs): all-zero
+/// rows, all-zero columns, a single observed entry, full mask.
+fn gen_adversarial_mask(rng: &mut Pcg64, n: usize, m: usize, variant: usize) -> Matrix {
+    match variant {
+        0 => {
+            let mut mk = Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.6 { 1.0 } else { 0.0 });
+            for i in 0..n {
+                if rng.uniform() < 0.5 {
+                    for j in 0..m {
+                        mk[(i, j)] = 0.0;
+                    }
+                }
+            }
+            mk
+        }
+        1 => {
+            let dead: Vec<bool> = (0..m).map(|_| rng.uniform() < 0.5).collect();
+            Matrix::from_fn(n, m, |_, j| if dead[j] { 0.0 } else { 1.0 })
+        }
+        2 => {
+            let (ri, cj) = (rng.below(n), rng.below(m));
+            Matrix::from_fn(n, m, |i, j| if i == ri && j == cj { 1.0 } else { 0.0 })
+        }
+        _ => Matrix::from_fn(n, m, |_, _| 1.0),
+    }
+}
+
+#[test]
+fn identity_precond_is_bit_exact_with_cg_on_masked_kron() {
+    let mut rng = Pcg64::new(1);
+    let (n, m) = (9, 7);
+    let (k1, k2) = gen_kernels(&mut rng, n, m, 2);
+    let mask = gen_adversarial_mask(&mut rng, n, m, 0);
+    let op = MaskedKronOp::new(&k1, &k2, &mask, 0.15);
+    let nm = n * m;
+    let batch = 4;
+    let b = rng.normal_vec(batch * nm);
+    let guess = rng.normal_vec(batch * nm);
+    for x0 in [None, Some(&guess[..])] {
+        let (cg_x, cg_s) = cg_batch_warm(&op, &b, x0, 1e-9, 2000);
+        let (pcg_x, pcg_s) = pcg_batch_warm(&op, &b, x0, Some(&IdentityPrecond), 1e-9, 2000);
+        assert_eq!(cg_x, pcg_x, "warm={}", x0.is_some());
+        assert_eq!(cg_s.iters, pcg_s.iters);
+        assert_eq!(cg_s.iters_per_rhs, pcg_s.iters_per_rhs);
+        assert_eq!(cg_s.rel_residual, pcg_s.rel_residual);
+        assert_eq!(cg_s.mvms, pcg_s.mvms);
+        assert_eq!(cg_s.mvm_rows, pcg_s.mvm_rows);
+    }
+}
+
+#[test]
+fn pcg_matches_cg_solutions_under_adversarial_masks() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(100 + seed);
+        let n = 4 + rng.below(6);
+        let m = 3 + rng.below(6);
+        let (k1, k2) = gen_kernels(&mut rng, n, m, 2);
+        let s2 = rng.uniform_in(0.05, 0.5);
+        for variant in 0..4 {
+            let mask = gen_adversarial_mask(&mut rng, n, m, variant);
+            let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+            let packed = Theta::default_packed(2);
+            let factors = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &mask, &packed);
+            let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
+            if rhs.iter().all(|&v| v == 0.0) {
+                continue; // fully-unobserved grid: nothing to solve
+            }
+            let (plain, ps) = op.solve(&rhs, 1e-10, 5000);
+            let (pcgx, ss) = op.solve_precond(&rhs, None, factors.as_ref(), 1e-10, 5000);
+            assert!(ps.converged, "variant={variant} plain");
+            assert!(ss.converged, "variant={variant} pcg");
+            for i in 0..n * m {
+                assert!(
+                    (plain[i] - pcgx[i]).abs() < 1e-6,
+                    "variant={variant} i={i}: {} vs {}",
+                    plain[i],
+                    pcgx[i]
+                );
+                if mask.data()[i] == 0.0 {
+                    assert_eq!(pcgx[i], 0.0, "variant={variant} off-mask leak");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn precond_apply_matches_dense_solve_oracle() {
+    // Masked preconditioner == blockdiag(dense (K̃+σ²I)⁻¹ on the observed
+    // block via its own mask-embedded definition, 1/σ² elsewhere). Checked
+    // for the observed-Gram strategy at full rank, where the observed
+    // block is EXACTLY (K_obs + σ²I)⁻¹.
+    let mut rng = Pcg64::new(7);
+    let (n, m) = (6, 5);
+    let (k1, k2) = gen_kernels(&mut rng, n, m, 2);
+    let mask = gen_adversarial_mask(&mut rng, n, m, 0);
+    let s2 = 0.3;
+    let packed = Theta::default_packed(2);
+    let n_obs = mask.data().iter().filter(|&&mv| mv > 0.0).count();
+    if n_obs == 0 {
+        return;
+    }
+    let factors =
+        PrecondFactors::build(PrecondCfg::Rank(n_obs), &k1, &k2, &mask, &packed).unwrap();
+    let pc = factors.apply_state(&mask, s2);
+    use lkgp::linalg::pcg::Preconditioner;
+    let v = rng.normal_vec(n * m);
+    let mut z = vec![0.0; n * m];
+    pc.apply_batch(&v, &mut z, 1);
+
+    let dense = dense_masked_kron(&k1, &k2, &mask, s2);
+    let idx: Vec<usize> = mask
+        .data()
+        .iter()
+        .enumerate()
+        .filter(|(_, &mv)| mv > 0.0)
+        .map(|(i, _)| i)
+        .collect();
+    let mut proj = Matrix::zeros(n_obs, n_obs);
+    for (a, &ia) in idx.iter().enumerate() {
+        for (b, &ib) in idx.iter().enumerate() {
+            proj[(a, b)] = dense[(ia, ib)];
+        }
+    }
+    let l = lkgp::linalg::cholesky(&proj).unwrap();
+    let vobs: Vec<f64> = idx.iter().map(|&i| v[i]).collect();
+    let want = lkgp::linalg::chol_solve(&l, &vobs);
+    for (a, &ia) in idx.iter().enumerate() {
+        assert!((z[ia] - want[a]).abs() < 1e-7, "obs {a}");
+    }
+    for (i, &mk) in mask.data().iter().enumerate() {
+        if mk == 0.0 {
+            assert!((z[i] - v[i] / s2).abs() < 1e-12, "miss {i}");
+        }
+    }
+}
+
+#[test]
+fn pivoted_cholesky_rank_ladder_on_kernel_matrix() {
+    // Kernel Gram matrices are the production input: approximation error
+    // must fall monotonically with rank and vanish at full rank.
+    let mut rng = Pcg64::new(11);
+    let n = 20;
+    let x = Matrix::from_vec(n, 3, rng.uniform_vec(n * 3, 0.0, 1.0));
+    let k1 = kernels::rbf(&x, &x, &[1.0, 1.0, 1.0]);
+    let mut prev = f64::INFINITY;
+    for r in [1, 2, 4, 8, 16, n] {
+        let pc = pivoted_cholesky(&k1, r, 0.0);
+        let rec = pc.l.matmul(&pc.l.transpose());
+        let err = k1.max_abs_diff(&rec);
+        assert!(err <= prev + 1e-9, "rank {r}: {err} > {prev}");
+        prev = err;
+    }
+    assert!(prev < 1e-7, "full rank not exact: {prev}");
+}
+
+#[test]
+fn preconditioned_engine_parity_and_full_loop() {
+    use lkgp::runtime::{Engine, RustEngine};
+    let data = toy_dataset(10, 12, 3, 15);
+    let theta = Theta::default_packed(3);
+    let xq = Matrix::from_vec(2, 3, vec![0.2, 0.4, 0.6, 0.8, 0.1, 0.3]);
+
+    // same theta, tight tolerance: plain and preconditioned engines agree
+    let mut plain_eng = RustEngine::default();
+    plain_eng.cfg.cg_tol = 1e-8;
+    let mut pcg_eng = RustEngine::default();
+    pcg_eng.cfg.cg_tol = 1e-8;
+    pcg_eng.cfg.precond = PrecondCfg::Auto;
+    let a = plain_eng.predict_final(&theta, &data, &xq).unwrap();
+    let b = pcg_eng.predict_final(&theta, &data, &xq).unwrap();
+    for (pa, pb) in a.iter().zip(&b) {
+        assert!(
+            (pa.0 - pb.0).abs() < 1e-5 && (pa.1 - pb.1).abs() < 1e-5,
+            "{pa:?} vs {pb:?}"
+        );
+    }
+
+    // the full fit/predict/sample loop runs and improves the exact MAP
+    // objective with preconditioning on
+    let before = lkgp::gp::lkgp::mll_exact(&theta, &data).unwrap();
+    let mut eng = RustEngine::default();
+    eng.cfg.precond = PrecondCfg::Auto;
+    let fitted = eng.fit(&theta, &data, 2).unwrap();
+    let after = lkgp::gp::lkgp::mll_exact(&fitted, &data).unwrap();
+    assert!(after > before, "{before} -> {after}");
+    let preds = eng.predict_final(&fitted, &data, &xq).unwrap();
+    for (mu, var) in preds {
+        assert!(mu.is_finite() && var > 0.0);
+    }
+    let samples = eng.sample_curves(&fitted, &data, &xq, 4, 3).unwrap();
+    assert_eq!(samples.len(), 4);
+}
+
+#[test]
+fn preconditioned_warm_predict_reports_factors_and_fewer_rows() {
+    use lkgp::runtime::{Engine, RustEngine};
+    let data = toy_dataset(12, 14, 3, 17);
+    let theta = Theta::default_packed(3);
+    let xq = Matrix::from_vec(2, 3, vec![0.3, 0.5, 0.7, 0.6, 0.2, 0.9]);
+
+    let mut eng = RustEngine::default();
+    eng.cfg.precond = PrecondCfg::Auto;
+    eng.cfg.cg_tol = 1e-6;
+    let cold = eng
+        .predict_final_cached(&theta, &data, &xq, None, None)
+        .unwrap();
+    let factors = cold.precond.clone().expect("factors reported");
+    assert!(cold.cg_mvm_rows > 0);
+
+    // second call: cached factors + the full converged solve buffer as the
+    // guess -> no more work than the cold pass (the strict at-scale claim
+    // is gated by BENCH_pcg.json)
+    let mut guess = cold.alpha.clone().unwrap();
+    guess.extend_from_slice(cold.cross.as_ref().unwrap());
+    let warm = eng
+        .predict_final_cached(&theta, &data, &xq, Some(&guess), Some(factors.clone()))
+        .unwrap();
+    assert!(
+        warm.cg_mvm_rows <= cold.cg_mvm_rows,
+        "warm {} vs cold {}",
+        warm.cg_mvm_rows,
+        cold.cg_mvm_rows
+    );
+    assert!(warm.cg_iters <= cold.cg_iters);
+    // the factors round-trip unchanged (mask and theta identical)
+    let reused = warm.precond.expect("factors still reported");
+    assert!(std::sync::Arc::ptr_eq(&factors, &reused), "factors rebuilt");
+    for (a, b) in warm.preds.iter().zip(&cold.preds) {
+        assert!((a.0 - b.0).abs() < 0.05 && (a.1 - b.1).abs() < 0.05);
+    }
+}
+
+#[test]
+fn pool_serves_with_preconditioning_on() {
+    use lkgp::coordinator::{CurveStore, PoolCfg, Registry, ServicePool};
+    use lkgp::runtime::{Engine, RustEngine};
+
+    let mut reg = Registry::new();
+    for i in 0..6 {
+        let id = reg.add(vec![i as f64 * 0.1, 0.5 - i as f64 * 0.05]);
+        for j in 0..3 + i % 3 {
+            reg.observe(id, 0.4 + 0.05 * j as f64 + 0.01 * i as f64, 8).unwrap();
+        }
+    }
+    let snap = CurveStore::new(8).snapshot(&reg).unwrap();
+
+    let engines: Vec<Box<dyn Engine>> = (0..1)
+        .map(|_| {
+            let mut eng = RustEngine::default();
+            eng.cfg.precond = PrecondCfg::Auto;
+            Box::new(eng) as Box<dyn Engine>
+        })
+        .collect();
+    let pool = ServicePool::spawn(engines, PoolCfg { workers: 1, ..Default::default() });
+    let handle = pool.handle(0);
+    let theta = Theta::default_packed(2);
+    let xq = Matrix::from_vec(1, 2, vec![0.4, 0.4]);
+    use lkgp::coordinator::PredictClient;
+    let a = handle
+        .predict_final(snap.clone(), theta.clone(), xq.clone())
+        .unwrap();
+    // second call hits the warm cache (alpha + factors from the lineage)
+    let b = handle.predict_final(snap, theta, xq).unwrap();
+    assert_eq!(
+        pool.stats(0)
+            .warm_hits
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x.0 - y.0).abs() < 1e-6 && (x.1 - y.1).abs() < 1e-6);
+        assert!(x.0.is_finite() && x.1 > 0.0);
+    }
+}
+
+#[test]
+fn mask_compaction_visible_through_operator_stats() {
+    // A batch where one RHS is pre-converged: mvm_rows must charge the
+    // frozen system only for the warm residual apply.
+    let mut rng = Pcg64::new(21);
+    let (n, m) = (10, 8);
+    let (k1, k2) = gen_kernels(&mut rng, n, m, 2);
+    let mask = gen_adversarial_mask(&mut rng, n, m, 3);
+    let op = MaskedKronOp::new(&k1, &k2, &mask, 0.2);
+    let nm = n * m;
+    let b1 = rng.normal_vec(nm);
+    let (x1, _) = op.solve(&b1, 1e-12, 4000);
+    let mut b = vec![0.0; 2 * nm];
+    b[..nm].copy_from_slice(&b1);
+    b[nm..].copy_from_slice(&rng.normal_vec(nm));
+    let mut guess = vec![0.0; 2 * nm];
+    guess[..nm].copy_from_slice(&x1);
+    let (_, stats) = op.solve_warm(&b, Some(&guess), 1e-8, 4000);
+    assert_eq!(
+        stats.mvm_rows,
+        2 + stats.iters_per_rhs.iter().sum::<usize>(),
+        "stats={stats:?}"
+    );
+    assert!(stats.iters_per_rhs[0] <= 1);
+    assert!(op.len() == nm);
+}
