@@ -20,6 +20,15 @@ cargo build --release --manifest-path "$MANIFEST"
 echo "== tier-1: test =="
 cargo test -q --manifest-path "$MANIFEST"
 
+echo "== api gate: deny-warnings build (no in-crate deprecated-shim callers) =="
+# The session-API redesign left the old free functions (`predict_final*`,
+# `mll_value_grad*`, `posterior_samples`, `predict_mean`) as #[deprecated]
+# shims. This pass fails if any lib/bin code still calls one (deprecation
+# is a warning, -D warnings makes it fatal). Tests/benches that exercise
+# the shims on purpose carry #![allow(deprecated)] and are not built here.
+RUSTFLAGS="${RUSTFLAGS:-} -D warnings" cargo build --manifest-path "$MANIFEST"
+echo "deprecated-shim gate OK"
+
 soft_status=0
 
 echo "== style: cargo fmt --check =="
@@ -66,6 +75,23 @@ for gate in assert_pcg_never_worse assert_warm_pcg_below assert_pcg_2x_ill; do
   fi
 done
 echo "pcg gates OK"
+
+echo "== perf gate: multi-query amortization =="
+# The hotpath bench dumps BENCH_queries.json: one session solve must serve
+# MeanAtFinal + Variance + Quantiles + MeanAtSteps, and apply strictly
+# fewer operator rows than the one-solve-per-statistic path.
+if [ ! -f BENCH_queries.json ]; then
+  echo "FAIL: BENCH_queries.json not produced by the hotpath bench"
+  exit 1
+fi
+cat BENCH_queries.json
+for gate in assert_shared_single_solve assert_shared_fewer_rows; do
+  if ! grep -q "\"$gate\": true" BENCH_queries.json; then
+    echo "FAIL: $gate is not true in BENCH_queries.json"
+    exit 1
+  fi
+done
+echo "query gates OK"
 
 if [ "$soft_status" -ne 0 ]; then
   echo "style/lint warnings present (set CI_STRICT=1 to make them fatal)"

@@ -101,6 +101,50 @@ fn main() -> lkgp::Result<()> {
     })?;
     let wall = t0.elapsed();
 
+    // Dashboard traffic through the typed-query surface: variance bands,
+    // quantiles and step-wise extrapolation ride the exact same
+    // coalescing/backpressure/warm machinery as the schedulers' MeanAtFinal
+    // queries — one underlying solve serves the whole batch per generation.
+    {
+        use lkgp::coordinator::{Answer, CurveStore, PredictClient, Query, Registry};
+        let mut rng = Pcg64::new(seed + 999);
+        let task = Task::generate(presets[0], 8, &mut rng);
+        let mut reg = Registry::new();
+        for i in 0..task.n() {
+            let id = reg.add(task.configs.row(i).to_vec());
+            for j in 0..4 {
+                reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+            }
+        }
+        let snap = CurveStore::new(task.m()).snapshot(&reg).unwrap();
+        let theta = lkgp::gp::Theta::default_packed(snap.data.d());
+        let xq = lkgp::linalg::Matrix::from_vec(1, snap.data.d(), snap.all_x.row(0).to_vec());
+        let m = snap.data.m();
+        let answers = pool.handle(0).query(
+            snap,
+            theta,
+            vec![
+                Query::MeanAtFinal { xq: xq.clone() },
+                Query::Variance { xq: xq.clone() },
+                Query::Quantiles { xq: xq.clone(), ps: vec![0.1, 0.9] },
+                Query::MeanAtSteps { xq, steps: vec![m / 2, m - 1] },
+            ],
+        )?;
+        if let (Answer::Final(f), Answer::Quantiles(q), Answer::Steps(s)) =
+            (&answers[0], &answers[2], &answers[3])
+        {
+            println!(
+                "dashboard (shard 0, config 0): final={:.4}±{:.4} band=[{:.4},{:.4}] \
+                 mid-curve={:.4} (standardized units, 1 solve for 4 queries)\n",
+                f[0].0,
+                f[0].1.sqrt(),
+                q[(0, 0)],
+                q[(0, 1)],
+                s[(0, 0)],
+            );
+        }
+    }
+
     results.sort_by_key(|r| r.0);
     let mut shard_json = Vec::new();
     for (t, name, report, oracle) in &results {

@@ -9,7 +9,9 @@
 //! pure-rust engine — the numbers agree either way (see
 //! rust/tests/engine_parity.rs).
 
-use lkgp::gp::Theta;
+use std::sync::Arc;
+
+use lkgp::gp::{Answer, Query, Theta};
 use lkgp::lcbench::{build_problem, PartialView, Preset, Task};
 use lkgp::rng::Pcg64;
 use lkgp::util::Args;
@@ -44,17 +46,35 @@ fn main() -> lkgp::Result<()> {
         unpacked.t_lengthscale, unpacked.outputscale, unpacked.sigma2
     );
 
-    // 3. Predict each curve's final validation accuracy.
-    let preds = engine.predict_final(&theta, &problem.data, &problem.xq)?;
-    println!("\n  curve  observed  predicted final        truth");
+    // 3. Predict each curve's final validation accuracy PLUS an 80%
+    //    predictive band — one typed-query batch, one underlying solve
+    //    (the session API; see docs/api.md).
+    let data = Arc::new(problem.data.clone());
+    let outcome = engine.answer_batch(
+        &theta,
+        &data,
+        &[
+            Query::MeanAtFinal { xq: problem.xq.clone() },
+            Query::Quantiles { xq: problem.xq.clone(), ps: vec![0.1, 0.9] },
+        ],
+        None,
+        None,
+    )?;
+    let (preds, bands) = match (&outcome.answers[0], &outcome.answers[1]) {
+        (Answer::Final(f), Answer::Quantiles(q)) => (f, q),
+        _ => unreachable!("queries answer Final + Quantiles"),
+    };
+    println!("\n  curve  observed  predicted final      80% band         truth");
     let mut se = 0.0;
     for (i, (mu, var)) in preds.iter().enumerate() {
         let mean = problem.ytf.undo_mean(*mu);
         let sd = problem.ytf.undo_var(*var).sqrt();
+        let lo = problem.ytf.undo_mean(bands[(i, 0)]);
+        let hi = problem.ytf.undo_mean(bands[(i, 1)]);
         let truth = problem.targets[i];
         se += (mean - truth) * (mean - truth);
         println!(
-            "  {i:>5}  {:>8}  {mean:.4} +- {sd:.4}   {truth:.4}",
+            "  {i:>5}  {:>8}  {mean:.4} +- {sd:.4}  [{lo:.4}, {hi:.4}]   {truth:.4}",
             view.lengths[i]
         );
     }

@@ -32,26 +32,30 @@ fn main() -> lkgp::Result<()> {
         let theta0 = Theta::default_packed(10);
         let xq = Matrix::from_vec(16, 10, rng.uniform_vec(160, 0.0, 1.0));
 
-        // --- LKGP (iterative) ---
+        // --- LKGP (iterative, session API) ---
         let cfg = SolverCfg::default();
         let tracker = AllocTracker::start();
         let t0 = std::time::Instant::now();
-        let mut theta = theta0.clone();
         let probes = Pcg64::new(1).rademacher_vec(cfg.probes * size * size);
-        let mut obj = |p: &[f64]| {
-            lkgp::gp::lkgp::mll_value_grad(p, &data, &probes, &cfg).map(|e| (e.value, e.grad))
-        };
-        let trace = lkgp::gp::trainer::adam(
-            &mut obj,
-            &theta,
-            &lkgp::gp::trainer::AdamCfg { steps, ..Default::default() },
+        let mut session = lkgp::gp::FitSession::with_probes(
+            std::sync::Arc::new(data.clone()),
+            cfg.clone(),
+            probes,
         )?;
-        theta = trace.theta;
+        let trace = session.fit(
+            &theta0,
+            &lkgp::gp::FitMethod::Adam(lkgp::gp::trainer::AdamCfg {
+                steps,
+                ..Default::default()
+            }),
+        )?;
+        let theta = trace.theta;
         let train_t = t0.elapsed();
         let t1 = std::time::Instant::now();
+        // the posterior inherits the fit's preconditioner lineage
+        let mut post = session.posterior(theta.clone());
         let mut prng = Pcg64::new(2);
-        let _samples =
-            lkgp::gp::lkgp::posterior_samples(&theta, &data, &xq, 4, &cfg, &mut prng)?;
+        let _samples = post.sample_curves_with(&xq, 4, &mut prng)?;
         let pred_t = t1.elapsed();
         println!(
             "{size:>4} | lkgp   | {:>9.3} | {:>11.3} | {}",

@@ -8,6 +8,8 @@
 //!
 //! Output: results/ablations_*.csv. Flags: --quick.
 
+#![allow(deprecated)] // exercises the deprecated free-function shims by design
+
 use std::sync::mpsc::channel;
 
 use lkgp::bench_util::{bench, time_once, Table};

@@ -18,6 +18,8 @@
 //! Flags: --quick (CI sizes), --max-size N, --naive-max N, --steps K,
 //!        --xla (adds the AOT-artifact engine series where buckets exist).
 
+#![allow(deprecated)] // exercises the deprecated free-function shims by design
+
 use std::time::Duration;
 
 use lkgp::bench_util::{time_once, Table};

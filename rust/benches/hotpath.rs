@@ -147,6 +147,9 @@ fn main() -> lkgp::Result<()> {
     // ---- preconditioned vs plain CG at two condition regimes ----
     let pcg_json = pcg_vs_plain(&mut table);
 
+    // ---- multi-query amortization through the session API ----
+    let queries_json = queries_amortization(&mut table);
+
     // ---- 4-shard pool vs 4 isolated services, same thread budget ----
     let (pool_rps, isolated_rps) = pool_vs_isolated(&mut table, quick);
 
@@ -184,7 +187,111 @@ fn main() -> lkgp::Result<()> {
     println!("wrote {}", root.join("BENCH_hotpath.json").display());
     std::fs::write(root.join("BENCH_pcg.json"), pcg_json.pretty())?;
     println!("wrote {}", root.join("BENCH_pcg.json").display());
+    std::fs::write(root.join("BENCH_queries.json"), queries_json.pretty())?;
+    println!("wrote {}", root.join("BENCH_queries.json").display());
     Ok(())
+}
+
+/// Multi-query amortization through the session API (the tentpole of the
+/// typed-query redesign): answering `MeanAtFinal` + `Variance` +
+/// `Quantiles` + `MeanAtSteps` over the same configs costs ONE batched
+/// solve through `Posterior::answer_batch`, vs one solve per statistic the
+/// pre-session serving path paid. The returned JSON carries the gates
+/// ci.sh enforces:
+///
+/// * `assert_shared_single_solve` — the 4-variant batch ran exactly one
+///   underlying batched CG solve
+/// * `assert_shared_fewer_rows`   — the shared batch applied strictly
+///   fewer operator rows (`CgStats::mvm_rows`) than the per-query path
+fn queries_amortization(table: &mut Table) -> Json {
+    use lkgp::gp::session::{Posterior, Query};
+    use lkgp::gp::SolverCfg;
+
+    let (n, m, d) = (96usize, 32usize, 3usize);
+    let data = std::sync::Arc::new(toy_dataset(n, m, d, 21));
+    let packed = Theta::default_packed(d);
+    let mut rng = Pcg64::new(22);
+    let xq = Matrix::from_vec(8, d, rng.uniform_vec(8 * d, 0.0, 1.0));
+    let ps = vec![0.1, 0.5, 0.9];
+    let steps = vec![m / 2, m - 1];
+    let cfg = SolverCfg::default();
+    let batch = [
+        Query::MeanAtFinal { xq: xq.clone() },
+        Query::Variance { xq: xq.clone() },
+        Query::Quantiles { xq: xq.clone(), ps: ps.clone() },
+        Query::MeanAtSteps { xq: xq.clone(), steps: steps.clone() },
+    ];
+
+    // separate: one posterior per query — every statistic cold-solves
+    let t0 = Instant::now();
+    let mut separate_rows = 0usize;
+    let mut separate_solves = 0usize;
+    for q in &batch {
+        let mut post = Posterior::new(data.clone(), packed.clone(), cfg.clone());
+        post.answer(q).expect("separate query");
+        separate_rows += post.cg_mvm_rows();
+        separate_solves += post.solve_calls();
+    }
+    let separate_us = t0.elapsed().as_micros();
+
+    // shared: one posterior answers the whole batch
+    let t1 = Instant::now();
+    let mut post = Posterior::new(data.clone(), packed.clone(), cfg.clone());
+    let answers = post.answer_batch(&batch).expect("shared batch");
+    let shared_us = t1.elapsed().as_micros();
+    assert_eq!(answers.len(), batch.len());
+    let shared_rows = post.cg_mvm_rows();
+    let shared_solves = post.solve_calls();
+
+    println!(
+        "\nquery amortization (n={n}, m={m}, 8 configs, 4 variants): \
+         shared {shared_solves} solve / {shared_rows} rows ({shared_us}us) vs \
+         separate {separate_solves} solves / {separate_rows} rows ({separate_us}us)"
+    );
+    table.row(vec![
+        "queries_shared".into(),
+        n.to_string(),
+        shared_us.to_string(),
+        format!("solves={shared_solves} rows={shared_rows}"),
+    ]);
+    table.row(vec![
+        "queries_separate".into(),
+        n.to_string(),
+        separate_us.to_string(),
+        format!("solves={separate_solves} rows={separate_rows}"),
+    ]);
+
+    Json::obj(vec![
+        ("bench", Json::Str("queries".into())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("configs", Json::Num(8.0)),
+        ("variants", Json::Num(batch.len() as f64)),
+        (
+            "shared",
+            Json::obj(vec![
+                ("solves", Json::Num(shared_solves as f64)),
+                ("mvm_rows", Json::Num(shared_rows as f64)),
+                ("us", Json::Num(shared_us as f64)),
+            ]),
+        ),
+        (
+            "separate",
+            Json::obj(vec![
+                ("solves", Json::Num(separate_solves as f64)),
+                ("mvm_rows", Json::Num(separate_rows as f64)),
+                ("us", Json::Num(separate_us as f64)),
+            ]),
+        ),
+        (
+            "assert_shared_single_solve",
+            Json::Bool(shared_solves == 1),
+        ),
+        (
+            "assert_shared_fewer_rows",
+            Json::Bool(shared_rows < separate_rows),
+        ),
+    ])
 }
 
 /// One (iterations, mvm_rows, wall-µs) measurement of a batched solve.

@@ -6,9 +6,9 @@
 //!   Scheduler (round loop)          PredictionService (worker thread)
 //!   ├─ Registry: trial lifecycle    ├─ owns Box<dyn Engine> (xla|rust)
 //!   ├─ CurveStore: snapshots     ──►├─ mpsc queue, dynamic batching:
-//!   ├─ EpochRunner: the workload    │  coalesces same-generation
-//!   └─ Policy: stop/pause/promote ◄─┘  PredictFinal queries into one
-//!                                      batched artifact execution
+//!   ├─ EpochRunner: the workload    │  coalesces same-generation typed
+//!   └─ Policy: stop/pause/promote ◄─┘  Query batches into one shared
+//!                                      solve (Engine::answer_batch)
 //! ```
 //!
 //! See `examples/automl_loop.rs` for the end-to-end driver and
@@ -20,6 +20,7 @@ pub mod service;
 pub mod store;
 pub mod trial;
 
+pub use crate::gp::session::{Answer, Query};
 pub use policy::{Decision, Policy, TrialForecast};
 pub use scheduler::{EpochRunner, RunReport, Scheduler, SchedulerCfg};
 pub use service::{
@@ -113,7 +114,7 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
     let precond_arg = args.get("precond").unwrap_or("auto");
     let precond = crate::gp::PrecondCfg::parse(precond_arg).ok_or_else(|| {
         crate::LkgpError::Coordinator(format!(
-            "bad --precond '{precond_arg}' (expected off|auto|rank=R)"
+            "bad --precond '{precond_arg}' (expected off, auto, or rank=R with R >= 1)"
         ))
     })?;
     let presets = crate::lcbench::Preset::all();
@@ -180,13 +181,17 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         let stats = pool.stats(*t);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} rounds={} \
-             batch_factor={:.2} warm_hits={} cg_iters={} mvm_rows={} peak_queue={} p50={}us p99={}us",
+             batch_factor={:.2} warm_hits={} warm_cache={}h/{}m solves={} cg_iters={} \
+             mvm_rows={} peak_queue={} p50={}us p99={}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
             report.rounds,
             report.batch_factor,
             stats.warm_hits.load(std::sync::atomic::Ordering::Relaxed),
+            stats.warm_cache_hits.load(std::sync::atomic::Ordering::Relaxed),
+            stats.warm_cache_misses.load(std::sync::atomic::Ordering::Relaxed),
+            stats.engine_solves.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed),
             stats.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),

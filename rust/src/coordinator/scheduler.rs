@@ -11,6 +11,7 @@
 //! task in examples/benches, a real training farm behind an RPC in
 //! production.
 
+use crate::gp::session::{Answer, Query};
 use crate::gp::Theta;
 use crate::linalg::Matrix;
 
@@ -221,7 +222,21 @@ impl Scheduler {
             let src_row: Vec<f64> = snapshot.all_x.row(src).to_vec();
             xq.row_mut(row).copy_from_slice(&src_row);
         }
-        let preds = service.predict_final(snapshot.clone(), self.theta.clone(), xq)?;
+        // one typed query through the service; coalesces with any other
+        // same-generation traffic into a single shared solve
+        let answers = service.query(
+            snapshot.clone(),
+            self.theta.clone(),
+            vec![Query::MeanAtFinal { xq }],
+        )?;
+        let preds = match answers.into_iter().next() {
+            Some(Answer::Final(v)) => v,
+            _ => {
+                return Err(crate::LkgpError::Coordinator(
+                    "prediction service answered MeanAtFinal with an unexpected shape".into(),
+                ))
+            }
+        };
 
         // undo standardization for decisions in original units
         let preds: Vec<(f64, f64)> = preds

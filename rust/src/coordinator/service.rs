@@ -2,12 +2,14 @@
 //! sharded [`ServicePool`].
 //!
 //! This is the vLLM-router pattern scaled to this workload: many
-//! concurrent callers (scheduler rounds, UI, benches) enqueue
-//! `PredictFinal` queries; a worker drains the queue and coalesces all
-//! queries that target the same model generation into a single engine
-//! call (one artifact execution / one batched CG), then scatters the
-//! per-caller responses. Refits and sampling requests pass through the
-//! same queue, preserving order within a generation.
+//! concurrent callers (scheduler rounds, UI, benches) enqueue typed
+//! [`Query`] batches (`MeanAtFinal`, `Variance`, `Quantiles`,
+//! `MeanAtSteps`, ... — `PredictFinal` remains as a compatibility front);
+//! a worker drains the queue and coalesces all queries that target the
+//! same model generation into a single `Engine::answer_batch` call (one
+//! artifact execution / one batched CG shared across every variant), then
+//! scatters the per-caller responses. Refits and sampling requests pass
+//! through the same queue, preserving order within a generation.
 //!
 //! Two front-ends share the same batching core:
 //!
@@ -32,6 +34,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use crate::gp::session::{self, Answer, Query};
 use crate::gp::Theta;
 use crate::linalg::Matrix;
 use crate::metrics::LatencyHist;
@@ -49,12 +52,24 @@ pub enum Request {
         resp: Sender<crate::Result<Vec<f64>>>,
     },
     /// Final-value prediction for query rows (standardized units).
+    /// Compatibility front for `Query` with a single
+    /// [`Query::MeanAtFinal`]; coalesces with typed-query traffic.
     PredictFinal {
         snapshot: Snapshot,
         theta: Vec<f64>,
         /// Normalized query configs.
         xq: Matrix,
         resp: Sender<crate::Result<Vec<(f64, f64)>>>,
+    },
+    /// A batch of typed posterior queries against one snapshot + theta.
+    /// All queries in the batch — and any same-generation queries
+    /// coalesced from concurrent callers — share one underlying solve
+    /// (see `gp::session::Posterior::answer_batch`).
+    Query {
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        queries: Vec<Query>,
+        resp: Sender<crate::Result<Vec<Answer>>>,
     },
     /// Posterior curve samples over [train; query] x grid.
     SampleCurves {
@@ -88,6 +103,16 @@ pub struct ServiceStats {
     /// true MVM work after warm starts, preconditioning, and active-set
     /// compaction.
     pub cg_mvm_rows: AtomicU64,
+    /// Exact-generation hits in the keyed warm-start LRU (the queried
+    /// generation's own lineage was cached).
+    pub warm_cache_hits: AtomicU64,
+    /// Keyed warm-cache misses (fell back to the most-recent lineage or
+    /// the snapshot's own, or started cold).
+    pub warm_cache_misses: AtomicU64,
+    /// Underlying batched solves reported by the engine
+    /// (`QueryOutcome::solves`): with coalescing plus the session layer,
+    /// many queries amortize into few solves.
+    pub engine_solves: AtomicU64,
 }
 
 impl ServiceStats {
@@ -104,6 +129,16 @@ impl ServiceStats {
 pub trait PredictClient {
     /// Re-fit hyper-parameters on a snapshot (blocking).
     fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>>;
+
+    /// Answer a batch of typed posterior queries (blocking). The batch —
+    /// plus any coalesced same-generation traffic — shares one underlying
+    /// solve on session-capable engines.
+    fn query(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        queries: Vec<Query>,
+    ) -> crate::Result<Vec<Answer>>;
 
     /// Final-value predictions for query rows (blocking).
     fn predict_final(
@@ -130,85 +165,151 @@ pub trait PredictClient {
 // ---------------------------------------------------------------------------
 // Shared batching core
 
-/// An engine plus its warm-start cache; exclusive to one worker at a time.
+/// Small keyed warm-start cache, most-recently-used first, keyed by
+/// snapshot generation (ROADMAP "warm-cache LRU"). Mixed-generation
+/// traffic — dashboards re-reading old generations while the scheduler
+/// advances — hits the exact lineage it solved under instead of
+/// cold-solving or cross-embedding from the newest generation.
+struct WarmLru {
+    entries: Vec<(u64, Arc<WarmStart>)>,
+    cap: usize,
+}
+
+impl WarmLru {
+    fn new(cap: usize) -> Self {
+        WarmLru { entries: Vec::new(), cap: cap.max(1) }
+    }
+
+    /// Exact-generation lookup; refreshes the entry's recency.
+    fn get(&mut self, generation: u64) -> Option<Arc<WarmStart>> {
+        let i = self.entries.iter().position(|(g, _)| *g == generation)?;
+        let e = self.entries.remove(i);
+        let w = e.1.clone();
+        self.entries.insert(0, e);
+        Some(w)
+    }
+
+    /// Most-recently-used lineage (the historical single-slot semantics).
+    fn latest(&self) -> Option<&Arc<WarmStart>> {
+        self.entries.first().map(|(_, w)| w)
+    }
+
+    /// Insert/replace the lineage for its generation; evicts LRU entries
+    /// beyond the cap.
+    fn put(&mut self, w: Arc<WarmStart>) {
+        let generation = w.generation;
+        if let Some(i) = self.entries.iter().position(|(g, _)| *g == generation) {
+            self.entries.remove(i);
+        }
+        self.entries.insert(0, (generation, w));
+        self.entries.truncate(self.cap);
+    }
+}
+
+/// An engine plus its keyed warm-start cache; exclusive to one worker at
+/// a time.
 struct EngineSlot {
     engine: Box<dyn Engine>,
-    warm: Option<Arc<WarmStart>>,
+    warm: WarmLru,
 }
 
-/// A queued `PredictFinal` awaiting coalescing.
-struct PendingPredict {
+/// How a pending query batch's answers are delivered: raw typed answers,
+/// or unwrapped to the legacy `PredictFinal` shape.
+enum PendingReply {
+    Preds(Sender<crate::Result<Vec<(f64, f64)>>>),
+    Answers(Sender<crate::Result<Vec<Answer>>>),
+}
+
+/// A queued query batch awaiting coalescing.
+struct PendingQuery {
     snapshot: Snapshot,
     theta: Vec<f64>,
-    xq: Matrix,
-    resp: Sender<crate::Result<Vec<(f64, f64)>>>,
+    queries: Vec<Query>,
+    reply: PendingReply,
 }
 
-/// Flush queued predictions: group by (generation, theta), stack each
-/// group's queries into one engine call, scatter the responses. With
-/// `warm_enabled`, solves start from the shard's cached alpha (or the
-/// snapshot's lineage) and the converged alpha is cached back.
-fn flush_predicts(
+/// Flush queued query batches: group by (generation, theta), concatenate
+/// each group's typed queries into one `Engine::answer_batch` call (one
+/// underlying solve for session-capable engines), scatter the responses.
+/// With `warm_enabled`, solves start from the shard's keyed warm cache
+/// (exact generation first, most-recent lineage as fallback, then the
+/// snapshot's own) and the converged state is cached back under the
+/// generation.
+fn flush_queries(
     slot: &mut EngineSlot,
-    predicts: &mut Vec<PendingPredict>,
+    pending: &mut Vec<PendingQuery>,
     stats: &ServiceStats,
     warm_enabled: bool,
 ) {
-    while !predicts.is_empty() {
-        let gen0 = predicts[0].snapshot.generation;
-        let theta0 = predicts[0].theta.clone();
-        let cols0 = predicts[0].xq.cols();
+    while !pending.is_empty() {
+        let gen0 = pending[0].snapshot.generation;
+        let theta0 = pending[0].theta.clone();
         // Bitwise theta comparison so the head request always matches its
-        // own group even if a caller passed NaN; query width is part of
-        // the key so heterogeneous requests can never corrupt the stack.
+        // own group even if a caller passed NaN.
         let same_theta = |t: &[f64]| {
             t.len() == theta0.len()
                 && t.iter().zip(&theta0).all(|(a, b)| a.to_bits() == b.to_bits())
         };
-        let group: Vec<PendingPredict> = {
-            let (take, keep): (Vec<PendingPredict>, Vec<PendingPredict>) =
-                predicts.drain(..).partition(|p| {
-                    p.snapshot.generation == gen0
-                        && p.xq.cols() == cols0
-                        && same_theta(&p.theta)
-                });
-            *predicts = keep;
+        let group: Vec<PendingQuery> = {
+            let (take, keep): (Vec<PendingQuery>, Vec<PendingQuery>) = pending
+                .drain(..)
+                .partition(|p| p.snapshot.generation == gen0 && same_theta(&p.theta));
+            *pending = keep;
             take
         };
-        let snap = group[0].snapshot.clone();
-        // stack queries
-        let total: usize = group.iter().map(|p| p.xq.rows()).sum();
-        let d = group[0].xq.cols();
-        let mut xq = Matrix::zeros(total, d);
-        let mut row = 0;
-        for p in &group {
-            for r in 0..p.xq.rows() {
-                xq.row_mut(row).copy_from_slice(p.xq.row(r));
-                row += 1;
+        // flatten the typed queries, remembering each request's span
+        let mut snap: Option<Snapshot> = None;
+        let mut replies: Vec<(PendingReply, usize)> = Vec::with_capacity(group.len());
+        let mut all: Vec<Query> = Vec::new();
+        for p in group {
+            if snap.is_none() {
+                snap = Some(p.snapshot);
             }
+            replies.push((p.reply, p.queries.len()));
+            all.extend(p.queries);
         }
-        // warm-start guess: shard cache first, then snapshot lineage. The
-        // full batched guess (alpha + cross columns) applies when the same
-        // queries repeat; otherwise the alpha alone is embedded. The
-        // factored preconditioner rides the same lineage but is NOT gated
-        // by `warm_enabled` — the flags are independent (a `--warm off`
-        // shard still amortizes the factorization), and the engine checks
-        // factor staleness itself, so passing old factors is always safe.
-        let lineage = slot.warm.as_ref().or(snap.warm.as_ref());
+        let snap = snap.expect("non-empty group");
+        // Warm lineage: exact generation from the keyed LRU, else the
+        // most-recent entry (cross-generation embed by trial id), else the
+        // snapshot's own lineage.
+        let lineage: Option<Arc<WarmStart>> = match slot.warm.get(gen0) {
+            Some(w) => {
+                stats.warm_cache_hits.fetch_add(1, Ordering::Relaxed);
+                Some(w)
+            }
+            None => {
+                stats.warm_cache_misses.fetch_add(1, Ordering::Relaxed);
+                slot.warm.latest().cloned().or_else(|| snap.warm.clone())
+            }
+        };
+        // The guess targets the batch's stacked final-step layout (the
+        // same stacking the session solves); batches with no final-step
+        // queries embed the alpha alone. The factored preconditioner is
+        // NOT gated by `warm_enabled` — the flags are independent (a
+        // `--warm off` shard still amortizes the factorization), and the
+        // engine checks factor staleness itself, so old factors are safe.
+        let stacked = session::stacked_final_xq(&all);
         let guess: Option<Vec<f64>> = if warm_enabled {
-            lineage.and_then(|w| w.embed_predict(&snap.row_ids, snap.data.m(), &xq))
+            lineage.as_ref().and_then(|w| match &stacked {
+                Some(xq) => w.embed_predict(&snap.row_ids, snap.data.m(), xq),
+                None => w.embed_alpha(&snap.row_ids, snap.data.m()),
+            })
         } else {
             None
         };
-        let precond = lineage.and_then(|w| w.precond.clone());
+        let precond = lineage.as_ref().and_then(|w| w.precond.clone());
         let t0 = Instant::now();
-        let result =
-            slot.engine
-                .predict_final_cached(&theta0, &snap.data, &xq, guess.as_deref(), precond);
+        let result = slot.engine.answer_batch(
+            &theta0,
+            &snap.data,
+            &all,
+            guess.as_deref(),
+            precond.clone(),
+        );
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats
             .batched_queries
-            .fetch_add(group.len() as u64, Ordering::Relaxed);
+            .fetch_add(replies.len() as u64, Ordering::Relaxed);
         if guess.is_some() {
             stats.warm_hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -219,63 +320,157 @@ fn flush_predicts(
             .record(t0.elapsed().as_micros() as u64);
         match result {
             Ok(outcome) => {
-                stats
-                    .cg_iters
-                    .fetch_add(outcome.cg_iters as u64, Ordering::Relaxed);
+                let crate::runtime::QueryOutcome {
+                    answers,
+                    alpha,
+                    xq,
+                    cross,
+                    cg_iters,
+                    cg_mvm_rows,
+                    solves,
+                    precond: out_precond,
+                } = outcome;
+                stats.cg_iters.fetch_add(cg_iters as u64, Ordering::Relaxed);
                 stats
                     .cg_mvm_rows
-                    .fetch_add(outcome.cg_mvm_rows as u64, Ordering::Relaxed);
-                if warm_enabled {
-                    if let Some(alpha) = outcome.alpha {
-                        slot.warm = Some(Arc::new(WarmStart {
+                    .fetch_add(cg_mvm_rows as u64, Ordering::Relaxed);
+                stats
+                    .engine_solves
+                    .fetch_add(solves as u64, Ordering::Relaxed);
+                match (warm_enabled, alpha) {
+                    (true, Some(alpha)) => {
+                        slot.warm.put(Arc::new(WarmStart {
                             generation: snap.generation,
                             theta: theta0.clone(),
                             row_ids: (*snap.row_ids).clone(),
                             m: snap.data.m(),
                             alpha,
-                            xq: Some(xq.clone()),
-                            cross: outcome.cross.unwrap_or_default(),
-                            precond: outcome.precond,
+                            xq,
+                            cross: cross.unwrap_or_default(),
+                            precond: out_precond,
                         }));
                     }
-                } else if let Some(factors) = outcome.precond {
-                    // warm starts off: cache ONLY the factored
-                    // preconditioner (empty alpha means nothing embeds as
-                    // a guess, so solves stay cold as requested).
-                    slot.warm = Some(Arc::new(WarmStart {
-                        generation: snap.generation,
-                        theta: theta0.clone(),
-                        row_ids: (*snap.row_ids).clone(),
-                        m: snap.data.m(),
-                        alpha: Vec::new(),
-                        xq: None,
-                        cross: Vec::new(),
-                        precond: Some(factors),
-                    }));
+                    _ => {
+                        // warm starts off (or no alpha exposed): cache
+                        // ONLY the factored preconditioner (empty alpha
+                        // means nothing embeds as a guess, so solves stay
+                        // cold as requested).
+                        if let Some(factors) = out_precond {
+                            slot.warm.put(Arc::new(WarmStart {
+                                generation: snap.generation,
+                                theta: theta0.clone(),
+                                row_ids: (*snap.row_ids).clone(),
+                                m: snap.data.m(),
+                                alpha: Vec::new(),
+                                xq: None,
+                                cross: Vec::new(),
+                                precond: Some(factors),
+                            }));
+                        }
+                    }
                 }
-                let mut off = 0;
-                for p in group {
-                    let k = p.xq.rows();
-                    let _ = p.resp.send(Ok(outcome.preds[off..off + k].to_vec()));
-                    off += k;
+                let mut answers = answers.into_iter();
+                for (reply, len) in replies {
+                    let span: Vec<Answer> = answers.by_ref().take(len).collect();
+                    match reply {
+                        PendingReply::Answers(tx) => {
+                            let _ = tx.send(Ok(span));
+                        }
+                        PendingReply::Preds(tx) => {
+                            let send = match span.into_iter().next() {
+                                Some(Answer::Final(v)) => Ok(v),
+                                _ => Err(crate::LkgpError::Coordinator(
+                                    "engine answered PredictFinal with a non-Final answer"
+                                        .into(),
+                                )),
+                            };
+                            let _ = tx.send(send);
+                        }
+                    }
                 }
             }
-            Err(e) => {
+            Err(e) if replies.len() == 1 => {
                 let msg = e.to_string();
-                for p in group {
-                    let _ = p
-                        .resp
-                        .send(Err(crate::LkgpError::Coordinator(msg.clone())));
+                let (reply, _) = replies.into_iter().next().expect("one reply");
+                send_error(reply, &msg);
+            }
+            Err(_) => {
+                // Failure isolation for coalesced groups: shape errors are
+                // already rejected per-request at enqueue time, but an
+                // engine can still refuse a whole batch (e.g. the legacy
+                // mapping has no Mll path) or fail numerically. Re-run
+                // each request on its own so one caller's failure never
+                // errors out its same-generation neighbors.
+                let mut off = 0;
+                for (reply, len) in replies {
+                    let span = &all[off..off + len];
+                    off += len;
+                    let res = slot.engine.answer_batch(
+                        &theta0,
+                        &snap.data,
+                        span,
+                        None,
+                        precond.clone(),
+                    );
+                    match res {
+                        Ok(outcome) => {
+                            stats
+                                .cg_iters
+                                .fetch_add(outcome.cg_iters as u64, Ordering::Relaxed);
+                            stats
+                                .cg_mvm_rows
+                                .fetch_add(outcome.cg_mvm_rows as u64, Ordering::Relaxed);
+                            stats
+                                .engine_solves
+                                .fetch_add(outcome.solves as u64, Ordering::Relaxed);
+                            let mut answers = outcome.answers.into_iter();
+                            match reply {
+                                PendingReply::Answers(tx) => {
+                                    let _ = tx.send(Ok(answers.collect()));
+                                }
+                                PendingReply::Preds(tx) => {
+                                    let send = match answers.next() {
+                                        Some(Answer::Final(v)) => Ok(v),
+                                        _ => Err(crate::LkgpError::Coordinator(
+                                            "engine answered PredictFinal with a non-Final \
+                                             answer"
+                                                .into(),
+                                        )),
+                                    };
+                                    let _ = tx.send(send);
+                                }
+                            }
+                        }
+                        Err(e) => send_error(reply, &e.to_string()),
+                    }
                 }
             }
         }
     }
 }
 
-/// Warm theta for an empty-`theta0` refit: shard cache, then snapshot
-/// lineage, then the prior mean.
-fn warm_theta(slot: &EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
-    if let Some(w) = slot.warm.as_ref().or(snapshot.warm.as_ref()) {
+/// Deliver an error string to either reply flavor.
+fn send_error(reply: PendingReply, msg: &str) {
+    match reply {
+        PendingReply::Preds(tx) => {
+            let _ = tx.send(Err(crate::LkgpError::Coordinator(msg.to_string())));
+        }
+        PendingReply::Answers(tx) => {
+            let _ = tx.send(Err(crate::LkgpError::Coordinator(msg.to_string())));
+        }
+    }
+}
+
+/// Warm theta for an empty-`theta0` refit: exact-generation lineage, then
+/// the most-recent cache entry, then the snapshot lineage, then the prior
+/// mean.
+fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
+    let lineage = slot
+        .warm
+        .get(snapshot.generation)
+        .or_else(|| slot.warm.latest().cloned())
+        .or_else(|| snapshot.warm.clone());
+    if let Some(w) = lineage {
         if w.theta.len() == d + 3 {
             return w.theta.clone();
         }
@@ -287,7 +482,14 @@ fn warm_theta(slot: &EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
 /// alpha and factored preconditioner (both solved under nearby
 /// hyper-parameters, so both remain excellent across the refit).
 fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64>) {
-    let updated = match slot.warm.take() {
+    let base = slot
+        .warm
+        .get(snapshot.generation)
+        .or_else(|| slot.warm.latest().cloned());
+    // Keep the base entry's own generation: the alpha/cross it carries
+    // were solved under THAT generation, and re-keying it would make the
+    // exact-generation hit counters lie about lineage provenance.
+    let updated = match base {
         Some(w) => WarmStart { theta, ..(*w).clone() },
         None => WarmStart {
             generation: snapshot.generation,
@@ -300,7 +502,7 @@ fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64
             precond: None,
         },
     };
-    slot.warm = Some(Arc::new(updated));
+    slot.warm.put(Arc::new(updated));
 }
 
 /// Process one drained batch of requests against an engine slot. Returns
@@ -312,16 +514,45 @@ fn process_batch(
     stats: &ServiceStats,
     warm_enabled: bool,
 ) -> bool {
-    let mut predicts: Vec<PendingPredict> = Vec::new();
+    let mut pending: Vec<PendingQuery> = Vec::new();
     for req in batch {
         stats.requests.fetch_add(1, Ordering::Relaxed);
         match req {
+            // Malformed requests are failed individually BEFORE coalescing
+            // so one caller's bad query can never error out a whole
+            // same-generation group (the historical stack kept malformed
+            // widths out of the group key for the same reason).
             Request::PredictFinal { snapshot, theta, xq, resp } => {
-                predicts.push(PendingPredict { snapshot, theta, xq, resp });
+                let query = Query::MeanAtFinal { xq };
+                if let Err(e) = session::validate_query(&snapshot.data, &query) {
+                    let _ = resp.send(Err(e));
+                    continue;
+                }
+                pending.push(PendingQuery {
+                    snapshot,
+                    theta,
+                    queries: vec![query],
+                    reply: PendingReply::Preds(resp),
+                });
+            }
+            Request::Query { snapshot, theta, queries, resp } => {
+                if let Some(e) = queries
+                    .iter()
+                    .find_map(|q| session::validate_query(&snapshot.data, q).err())
+                {
+                    let _ = resp.send(Err(e));
+                    continue;
+                }
+                pending.push(PendingQuery {
+                    snapshot,
+                    theta,
+                    queries,
+                    reply: PendingReply::Answers(resp),
+                });
             }
             Request::Refit { snapshot, theta0, seed, resp } => {
-                // order barrier: flush batched predictions first
-                flush_predicts(slot, &mut predicts, stats, warm_enabled);
+                // order barrier: flush batched queries first
+                flush_queries(slot, &mut pending, stats, warm_enabled);
                 let d = snapshot.data.d();
                 let theta0 = if theta0.is_empty() {
                     if warm_enabled {
@@ -341,7 +572,7 @@ fn process_batch(
                 let _ = resp.send(result);
             }
             Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
-                flush_predicts(slot, &mut predicts, stats, warm_enabled);
+                flush_queries(slot, &mut pending, stats, warm_enabled);
                 let _ = resp.send(slot.engine.sample_curves(
                     &theta,
                     &snapshot.data,
@@ -351,12 +582,12 @@ fn process_batch(
                 ));
             }
             Request::Shutdown => {
-                flush_predicts(slot, &mut predicts, stats, warm_enabled);
+                flush_queries(slot, &mut pending, stats, warm_enabled);
                 return false;
             }
         }
     }
-    flush_predicts(slot, &mut predicts, stats, warm_enabled);
+    flush_queries(slot, &mut pending, stats, warm_enabled);
     true
 }
 
@@ -413,6 +644,21 @@ impl PredictionService {
             .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
     }
 
+    /// Synchronous typed-query helper.
+    pub fn query(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        queries: Vec<Query>,
+    ) -> crate::Result<Vec<Answer>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Query { snapshot, theta, queries, resp: rtx })
+            .map_err(|_| crate::LkgpError::Coordinator("service down".into()))?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
+    }
+
     /// Synchronous sampling helper.
     pub fn sample_curves(
         &self,
@@ -434,6 +680,15 @@ impl PredictionService {
 impl PredictClient for PredictionService {
     fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
         PredictionService::refit(self, snapshot, theta0, seed)
+    }
+
+    fn query(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        queries: Vec<Query>,
+    ) -> crate::Result<Vec<Answer>> {
+        PredictionService::query(self, snapshot, theta, queries)
     }
 
     fn predict_final(
@@ -471,7 +726,9 @@ impl Drop for PredictionService {
 }
 
 fn worker_loop(engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<ServiceStats>) {
-    let mut slot = EngineSlot { engine, warm: None };
+    // single-task service: cold solves (warm_enabled = false below), so a
+    // one-entry cache only carries preconditioner lineage
+    let mut slot = EngineSlot { engine, warm: WarmLru::new(1) };
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -501,6 +758,10 @@ pub struct PoolCfg {
     pub max_queue: usize,
     /// Warm-start solves from each shard's cached alpha/theta lineage.
     pub warm_start: bool,
+    /// Entries in each shard's keyed warm-start LRU (by generation).
+    /// 1 reproduces the historical latest-only cache; a few entries let
+    /// mixed-generation dashboard traffic warm-hit old generations.
+    pub warm_cache: usize,
 }
 
 impl Default for PoolCfg {
@@ -514,6 +775,7 @@ impl Default for PoolCfg {
             workers: (crate::util::num_threads() / 2).max(1),
             max_queue: 1024,
             warm_start: true,
+            warm_cache: 4,
         }
     }
 }
@@ -556,7 +818,9 @@ impl ServicePool {
     pub fn spawn(engines: Vec<Box<dyn Engine>>, cfg: PoolCfg) -> Self {
         let shards: Vec<Mutex<EngineSlot>> = engines
             .into_iter()
-            .map(|engine| Mutex::new(EngineSlot { engine, warm: None }))
+            .map(|engine| {
+                Mutex::new(EngineSlot { engine, warm: WarmLru::new(cfg.warm_cache) })
+            })
             .collect();
         let n = shards.len();
         let shared = Arc::new(PoolShared {
@@ -656,6 +920,18 @@ impl PredictClient for ShardHandle {
     fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
         let (rtx, rrx) = channel();
         self.submit(Request::Refit { snapshot, theta0, seed, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
+    }
+
+    fn query(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        queries: Vec<Query>,
+    ) -> crate::Result<Vec<Answer>> {
+        let (rtx, rrx) = channel();
+        self.submit(Request::Query { snapshot, theta, queries, resp: rtx })?;
         rrx.recv()
             .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
     }
@@ -899,6 +1175,98 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x.0 - y.0).abs() < 1e-6 && (x.1 - y.1).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn warm_lru_keys_by_generation_and_evicts() {
+        fn entry(generation: u64) -> Arc<WarmStart> {
+            Arc::new(WarmStart {
+                generation,
+                theta: vec![generation as f64],
+                row_ids: Vec::new(),
+                m: 1,
+                alpha: Vec::new(),
+                xq: None,
+                cross: Vec::new(),
+                precond: None,
+            })
+        }
+        let mut lru = WarmLru::new(2);
+        assert!(lru.get(1).is_none());
+        lru.put(entry(1));
+        lru.put(entry(2));
+        // exact-generation hits, MRU refresh
+        assert_eq!(lru.get(1).unwrap().generation, 1);
+        assert_eq!(lru.latest().unwrap().generation, 1);
+        // inserting a third evicts the least recently used (gen 2)
+        lru.put(entry(3));
+        assert!(lru.get(2).is_none());
+        assert_eq!(lru.get(1).unwrap().generation, 1);
+        assert_eq!(lru.get(3).unwrap().generation, 3);
+        // replacing a generation keeps one entry
+        lru.put(entry(3));
+        assert_eq!(lru.latest().unwrap().generation, 3);
+    }
+
+    #[test]
+    fn typed_query_batch_through_pool_shares_one_solve() {
+        let pool = pool_of(1, PoolCfg { workers: 1, ..Default::default() });
+        let snap = tiny_snapshot();
+        let theta = Theta::default_packed(2);
+        let handle = pool.handle(0);
+        let xq = Matrix::from_vec(2, 2, vec![0.2, 0.3, 0.7, 0.6]);
+        let queries = vec![
+            Query::MeanAtFinal { xq: xq.clone() },
+            Query::Variance { xq: xq.clone() },
+            Query::Quantiles { xq: xq.clone(), ps: vec![0.1, 0.9] },
+            Query::MeanAtSteps { xq: xq.clone(), steps: vec![0, 7] },
+        ];
+        let answers = handle.query(snap.clone(), theta.clone(), queries).unwrap();
+        assert_eq!(answers.len(), 4);
+        assert_eq!(
+            pool.stats(0).engine_solves.load(Ordering::Relaxed),
+            1,
+            "four variants must share one underlying solve"
+        );
+        match (&answers[0], &answers[1]) {
+            (Answer::Final(f), Answer::Variance(v)) => {
+                for (a, b) in f.iter().zip(v) {
+                    assert_eq!(a.1.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected answers {other:?}"),
+        }
+        // the first batch was a keyed-cache miss, a same-generation
+        // repeat is an exact hit
+        assert_eq!(pool.stats(0).warm_cache_misses.load(Ordering::Relaxed), 1);
+        let again = handle
+            .query(snap, theta, vec![Query::MeanAtFinal { xq }])
+            .unwrap();
+        assert_eq!(again.len(), 1);
+        assert_eq!(pool.stats(0).warm_cache_hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn malformed_query_fails_alone_without_engine_call() {
+        let pool = pool_of(1, PoolCfg { workers: 1, ..Default::default() });
+        let snap = tiny_snapshot();
+        let theta = Theta::default_packed(2);
+        let handle = pool.handle(0);
+        // wrong width: rejected per-request, never reaches the engine
+        let bad = Matrix::from_vec(1, 3, vec![0.1, 0.2, 0.3]);
+        let err = handle.query(
+            snap.clone(),
+            theta.clone(),
+            vec![Query::MeanAtFinal { xq: bad }],
+        );
+        assert!(err.is_err());
+        assert_eq!(pool.stats(0).batches.load(Ordering::Relaxed), 0);
+        // a healthy same-generation query still succeeds afterwards
+        let good = Matrix::from_vec(1, 2, vec![0.4, 0.4]);
+        let ok = handle
+            .query(snap, theta, vec![Query::MeanAtFinal { xq: good }])
+            .unwrap();
+        assert_eq!(ok.len(), 1);
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //! This engine is the correctness oracle for the AOT artifacts (they mirror
 //! each other's math), the fallback when no artifact bucket fits, and the
 //! subject of the Figure-3 LKGP series.
+//!
+//! The preferred entry point is the session API in [`crate::gp::session`]
+//! ([`crate::gp::session::FitSession`] / [`crate::gp::session::Posterior`]
+//! with typed queries); the free functions in this module remain as
+//! `#[deprecated]` bit-exact shims over it. The `*_impl` internals here
+//! are the pure computations the sessions drive.
 
 use std::sync::Arc;
 
@@ -112,7 +118,7 @@ impl Default for SolverCfg {
 /// Resolve the preconditioner for one solve: reuse compatible cached
 /// factors (hyper-parameters drift slowly across optimizer steps and
 /// scheduler generations), rebuild otherwise.
-fn resolve_precond(
+pub(crate) fn resolve_precond(
     cfg: &SolverCfg,
     packed: &[f64],
     k1: &Matrix,
@@ -148,6 +154,7 @@ pub struct MllEval {
 /// `probes` is a (p, n*m) row-major Rademacher buffer; passing the same
 /// probes across optimizer steps gives a deterministic (probe-conditioned)
 /// objective, which is what both trainers rely on.
+#[deprecated(note = "use gp::session::FitSession::eval — see docs/api.md")]
 pub fn mll_value_grad(
     packed: &[f64],
     data: &Dataset,
@@ -161,10 +168,9 @@ pub fn mll_value_grad(
 /// and the raw solve buffer returned for reuse.
 ///
 /// `x0` is a previous `(p + 1, n*m)` solve buffer (as returned by this
-/// function). Optimizer steps change theta slowly, so warm-starting each
-/// step's solve from the previous one cuts CG iterations without changing
-/// the converged tolerance; `RustEngine::fit` threads the buffer through
-/// every Adam/L-BFGS evaluation.
+/// function). A [`crate::gp::session::FitSession`] owns this buffer for
+/// you — this shim exists for callers that still thread it by hand.
+#[deprecated(note = "use gp::session::FitSession (warm state is owned by the session) — see docs/api.md")]
 pub fn mll_value_grad_warm(
     packed: &[f64],
     data: &Dataset,
@@ -176,12 +182,43 @@ pub fn mll_value_grad_warm(
     mll_value_grad_cached(packed, data, probes, cfg, x0, &mut precond_cache)
 }
 
-/// [`mll_value_grad_warm`] with persistent preconditioner state:
-/// `precond_cache` carries the factored preconditioner across optimizer
-/// steps (rebuilt only when theta drifts past the compatibility window or
-/// the mask changes). `RustEngine::fit` threads one cache through every
-/// Adam/L-BFGS evaluation alongside the warm solve buffer.
+/// [`mll_value_grad_warm`] with persistent preconditioner state. Thin
+/// shim: builds a one-shot [`crate::gp::session::FitSession`], seeds it
+/// with the caller's state, evaluates, and copies the state back out —
+/// bit-exact with the historical free function (see tests/session.rs).
+#[deprecated(note = "use gp::session::FitSession (eval/fit) — see docs/api.md")]
 pub fn mll_value_grad_cached(
+    packed: &[f64],
+    data: &Dataset,
+    probes: &[f64],
+    cfg: &SolverCfg,
+    x0: Option<&[f64]>,
+    precond_cache: &mut Option<Arc<PrecondFactors>>,
+) -> Result<(MllEval, Vec<f64>)> {
+    // NOTE: a one-shot session copies the dataset and probe buffer —
+    // another reason to migrate; a real FitSession pays this once, not
+    // per evaluation. The caller's factor cache is cloned (cheap Arc),
+    // not taken, so an error leaves it intact like the historical code.
+    let mut session = crate::gp::session::FitSession::with_probes(
+        Arc::new(data.clone()),
+        cfg.clone(),
+        probes.to_vec(),
+    )?;
+    session.seed_state(x0.map(|g| g.to_vec()), precond_cache.clone());
+    let eval = session.eval(packed)?;
+    *precond_cache = session.precond();
+    let solves = session
+        .warm_buffer()
+        .map(|w| w.to_vec())
+        .unwrap_or_default();
+    Ok((eval, solves))
+}
+
+/// MAP objective + gradient core: one batched `[y, probes]` (P)CG solve,
+/// SLQ log-det, Hutchinson trace gradients. State threading (warm buffer,
+/// preconditioner cache) is owned by `gp::session`; this is the pure
+/// computation.
+pub(crate) fn mll_impl(
     packed: &[f64],
     data: &Dataset,
     probes: &[f64],
@@ -276,7 +313,7 @@ pub fn mll_value_grad_cached(
     Ok((MllEval { value, grad, cg }, solves))
 }
 
-fn mask_product(mask: &Matrix, v: &[f64], n: usize, m: usize) -> Matrix {
+pub(crate) fn mask_product(mask: &Matrix, v: &[f64], n: usize, m: usize) -> Matrix {
     let mut out = Matrix::zeros(n, m);
     for (dst, (a, b)) in out
         .data_mut()
@@ -327,22 +364,23 @@ pub fn mll_exact(packed: &[f64], data: &Dataset) -> Result<f64> {
 /// Posterior mean over the full grid for query configs.
 ///
 /// mean(xq, .) = k1(xq, X) (M . A) K2 with A = reshape(CG(A, vec(Y))).
-///
-/// Cold path: with `cfg.precond` enabled the factors are rebuilt per
-/// call (no cache parameter — the serving hot path goes through
-/// [`predict_final_cached`], which threads one).
+/// Thin shim: a one-shot [`crate::gp::session::Posterior`] answering
+/// `Query::MeanAtSteps` over the whole grid.
+#[deprecated(note = "use gp::session::Posterior with Query::MeanAtSteps — see docs/api.md")]
 pub fn predict_mean(packed: &[f64], data: &Dataset, xq: &Matrix, cfg: &SolverCfg) -> Result<(Matrix, CgStats)> {
-    data.check()?;
-    let theta = Theta::unpack(packed);
-    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
-    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
-    let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
-    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, None);
-    let (alpha, cg) =
-        op.solve_precond(data.y.data(), None, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
-    let am = mask_product(&data.mask, &alpha, data.n(), data.m());
-    let k1q = kernels::rbf(xq, &data.x, &theta.lengthscales);
-    Ok((k1q.matmul(&am).matmul(&k2), cg))
+    let mut post = crate::gp::session::Posterior::new(
+        Arc::new(data.clone()),
+        packed.to_vec(),
+        cfg.clone(),
+    );
+    let steps: Vec<usize> = (0..data.m()).collect();
+    let answer = post.answer(&crate::gp::session::Query::MeanAtSteps { xq: xq.clone(), steps })?;
+    let mean = match answer {
+        crate::gp::session::Answer::Steps(mat) => mat,
+        _ => unreachable!("MeanAtSteps answers Steps"),
+    };
+    let cg = post.last_cg().cloned().expect("mean query ran a solve");
+    Ok((mean, cg))
 }
 
 /// Exact Gaussian predictive for the *final* progression value of each
@@ -350,6 +388,7 @@ pub fn predict_mean(packed: &[f64], data: &Dataset, xq: &Matrix, cfg: &SolverCfg
 ///
 /// Each query needs one extra CG solve against its masked cross-covariance
 /// vector; the q solves are batched into a single CG call.
+#[deprecated(note = "use gp::session::Posterior with Query::MeanAtFinal — see docs/api.md")]
 pub fn predict_final(
     packed: &[f64],
     data: &Dataset,
@@ -369,6 +408,7 @@ pub fn predict_final(
 /// matches neither. Returns the predictions, the full converged solve
 /// buffer (`[alpha, w_1 .. w_q]`, for caching by the serving layer), and
 /// the CG stats.
+#[deprecated(note = "use gp::session::Posterior::with_guess + Query::MeanAtFinal — see docs/api.md")]
 pub fn predict_final_warm(
     packed: &[f64],
     data: &Dataset,
@@ -380,11 +420,44 @@ pub fn predict_final_warm(
     predict_final_cached(packed, data, xq, cfg, guess, &mut precond_cache)
 }
 
-/// [`predict_final_warm`] with persistent preconditioner state. The
-/// serving layer caches `precond_cache` in the `WarmStart` lineage next to
-/// the converged alpha, so repeated predicts against one snapshot (and
-/// full-mask problems across generations) skip the factorization.
+/// [`predict_final_warm`] with persistent preconditioner state. Thin
+/// shim: builds a one-shot [`crate::gp::session::Posterior`] seeded with
+/// the caller's guess and factors, answers `Query::MeanAtFinal`, and
+/// copies the converged state back out — bit-exact with the historical
+/// free function (see tests/session.rs).
+#[deprecated(note = "use gp::session::Posterior (guess/precond lineage is owned by the session) — see docs/api.md")]
 pub fn predict_final_cached(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    cfg: &SolverCfg,
+    guess: Option<&[f64]>,
+    precond_cache: &mut Option<Arc<PrecondFactors>>,
+) -> Result<(Vec<(f64, f64)>, Vec<f64>, CgStats)> {
+    // The caller's factor cache is cloned (cheap Arc), not taken, so an
+    // error path leaves it intact like the historical code did.
+    let mut post = crate::gp::session::Posterior::new(
+        Arc::new(data.clone()),
+        packed.to_vec(),
+        cfg.clone(),
+    )
+    .with_guess(guess.map(|g| g.to_vec()))
+    .with_precond(precond_cache.clone());
+    let answer = post.answer(&crate::gp::session::Query::MeanAtFinal { xq: xq.clone() })?;
+    *precond_cache = post.precond();
+    let preds = match answer {
+        crate::gp::session::Answer::Final(v) => v,
+        _ => unreachable!("MeanAtFinal answers Final"),
+    };
+    let solves = post.solve_buffer().expect("predict ran a solve");
+    let cg = post.last_cg().cloned().expect("predict ran a solve");
+    Ok((preds, solves, cg))
+}
+
+/// Final-value predictive core: one batched `[y, c_1..c_q]` (P)CG solve
+/// against the masked cross-covariance columns. State threading is owned
+/// by `gp::session`; this is the pure computation.
+pub(crate) fn predict_final_impl(
     packed: &[f64],
     data: &Dataset,
     xq: &Matrix,
@@ -456,11 +529,10 @@ pub fn predict_final_cached(
 
 /// Posterior samples over [X; Xq] x grid via Matheron's rule.
 ///
-/// Returns `s` samples, each an (n+q, m) matrix. Prior draws use the
-/// Kronecker factorization f = L1 Z L2^T; the pathwise update is one
-/// batched masked-CG solve (paper §2, "Posterior Samples via Matheron's
-/// Rule"). With `cfg.precond` enabled the factors are rebuilt per call —
-/// the one-time build amortizes over the `s`-RHS pathwise solve.
+/// Returns `s` samples, each an (n+q, m) matrix. Thin shim over
+/// [`crate::gp::session::Posterior::sample_curves_with`] (bit-exact given
+/// the same RNG stream; `Query::CurveSamples { seed }` seeds its own).
+#[deprecated(note = "use gp::session::Posterior with Query::CurveSamples — see docs/api.md")]
 pub fn posterior_samples(
     packed: &[f64],
     data: &Dataset,
@@ -469,6 +541,27 @@ pub fn posterior_samples(
     cfg: &SolverCfg,
     rng: &mut Pcg64,
 ) -> Result<Vec<Matrix>> {
+    let mut post = crate::gp::session::Posterior::new(
+        Arc::new(data.clone()),
+        packed.to_vec(),
+        cfg.clone(),
+    );
+    post.sample_curves_with(xq, s, rng)
+}
+
+/// Matheron-sampling core: Kronecker-factored prior draws plus one
+/// batched pathwise (P)CG solve. `precond_cache` lets a session amortize
+/// the factorization across calls; the converged stats are returned for
+/// the session's telemetry.
+pub(crate) fn posterior_samples_impl(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    s: usize,
+    cfg: &SolverCfg,
+    rng: &mut Pcg64,
+    precond_cache: &mut Option<Arc<PrecondFactors>>,
+) -> Result<(Vec<Matrix>, CgStats)> {
     data.check()?;
     let theta = Theta::unpack(packed);
     let (n, m) = (data.n(), data.m());
@@ -511,8 +604,9 @@ pub fn posterior_samples(
         }
         priors.push(f);
     }
-    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, None);
-    let (ws, _cg) = op.solve_precond(&rhs, None, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
+    let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
+    let (ws, cg) = op.solve_precond(&rhs, None, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
+    *precond_cache = factors;
 
     // k1([X; Xq], X) is the left block of k1j (jitter only touched diag).
     let k1cross = {
@@ -532,10 +626,11 @@ pub fn posterior_samples(
         f.add_assign(&update);
         out.push(f);
     }
-    Ok(out)
+    Ok((out, cg))
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // unit tests double as coverage for the deprecated shims
 mod tests {
     use super::*;
 

@@ -13,10 +13,12 @@ pub mod lkgp;
 pub mod naive;
 pub mod operator;
 pub mod params;
+pub mod session;
 pub mod trainer;
 pub mod transforms;
 
 pub use lkgp::{Dataset, MllEval, SolverCfg};
+pub use session::{Answer, FitMethod, FitSession, Posterior, Query};
 pub use operator::{
     KronPrecondFactors, LatentKronPrecond, MaskedKronOp, ObsGramPrecond, ObsGramPrecondFactors,
     PrecondApply, PrecondCfg, PrecondFactors,

@@ -245,6 +245,7 @@ pub fn sample_curves_exact(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // compares against the deprecated shims on purpose
 mod tests {
     use super::*;
     use crate::gp::lkgp::{self, SolverCfg};

@@ -254,15 +254,22 @@ impl PrecondCfg {
         }
     }
 
-    /// Parse a CLI spec: `off`, `auto`, or `rank=R`.
+    /// Parse a CLI spec: `off`, `auto`, or `rank=R` (R >= 1). Whitespace
+    /// around the spec and around the `=` is tolerated (`" rank = 8 "`);
+    /// `rank=0` is rejected as None so callers surface a proper error
+    /// instead of driving the factorization down a degenerate path.
     pub fn parse(s: &str) -> Option<PrecondCfg> {
+        let s = s.trim();
         match s {
             "off" => Some(PrecondCfg::Off),
             "auto" => Some(PrecondCfg::Auto),
-            _ => s
-                .strip_prefix("rank=")
-                .and_then(|r| r.parse::<usize>().ok())
-                .map(PrecondCfg::Rank),
+            _ => {
+                let rest = s.strip_prefix("rank")?.trim_start().strip_prefix('=')?.trim();
+                match rest.parse::<usize>() {
+                    Ok(0) | Err(_) => None,
+                    Ok(r) => Some(PrecondCfg::Rank(r)),
+                }
+            }
         }
     }
 }
@@ -801,6 +808,23 @@ mod tests {
     use super::*;
     use crate::gp::kernels;
     use crate::rng::Pcg64;
+
+    #[test]
+    fn precond_cfg_parse_accepts_whitespace_and_rejects_zero() {
+        assert_eq!(PrecondCfg::parse("off"), Some(PrecondCfg::Off));
+        assert_eq!(PrecondCfg::parse(" auto "), Some(PrecondCfg::Auto));
+        assert_eq!(PrecondCfg::parse("rank=12"), Some(PrecondCfg::Rank(12)));
+        assert_eq!(PrecondCfg::parse("  rank=8  "), Some(PrecondCfg::Rank(8)));
+        assert_eq!(PrecondCfg::parse("rank = 3"), Some(PrecondCfg::Rank(3)));
+        assert_eq!(PrecondCfg::parse("rank =7"), Some(PrecondCfg::Rank(7)));
+        // rank=0 must surface as a parse error, not a degenerate config
+        assert_eq!(PrecondCfg::parse("rank=0"), None);
+        assert_eq!(PrecondCfg::parse("rank = 0"), None);
+        assert_eq!(PrecondCfg::parse("rank="), None);
+        assert_eq!(PrecondCfg::parse("rank=abc"), None);
+        assert_eq!(PrecondCfg::parse("bogus"), None);
+        assert_eq!(PrecondCfg::parse(""), None);
+    }
 
     fn setup(n: usize, m: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
         let mut rng = Pcg64::new(seed);

@@ -1,0 +1,942 @@
+//! Session-scoped inference API: [`FitSession`], [`Posterior`], and typed
+//! [`Query`]s.
+//!
+//! The engine's math is one thing — latent-Kronecker MVMs plus iterative
+//! solvers — but the crate historically exposed it as three parallel
+//! families of free functions (`mll_value_grad{,_warm,_cached}`,
+//! `predict_final{,_warm,_cached}`, `predict_mean`, `posterior_samples`)
+//! whose warm-start buffers and preconditioner factors every caller had to
+//! hand-thread. This module folds that lineage into two session objects:
+//!
+//! * [`FitSession`] owns the dataset, the probe set, the warm solve buffer
+//!   and the factored preconditioner across optimizer steps. Warm vs cold
+//!   vs cached is a lifecycle state of the session, not a choice of
+//!   function name.
+//! * [`Posterior`] freezes one `(dataset, theta)` pair and answers typed
+//!   [`Query`] values. Queries submitted together share one underlying
+//!   batched solve (`[y, c_1..c_q]` with deduplicated cross-covariance
+//!   columns), and the converged `alpha` is reused across every later
+//!   query against the same session.
+//!
+//! The historical free functions survive as `#[deprecated]` thin shims
+//! over this API (bit-exact: they build a one-shot session and delegate),
+//! and the serving layer routes `coordinator::Request::Query` batches here
+//! through `runtime::Engine::answer_batch`. See `docs/api.md` for the
+//! lifecycle and the migration table.
+
+use std::sync::Arc;
+
+use crate::error::{LkgpError, Result};
+use crate::gp::kernels;
+use crate::gp::params::Theta;
+use crate::gp::trainer::{self, FitTrace};
+use crate::linalg::{CgStats, Matrix};
+use crate::rng::Pcg64;
+
+use super::lkgp::{self, Dataset, MllEval, SolverCfg};
+use super::operator::PrecondFactors;
+
+// ---------------------------------------------------------------------------
+// Typed queries
+
+/// A typed posterior query. Queries carry their own query-config matrices
+/// so a heterogeneous batch can be answered by one session; final-step
+/// queries (`MeanAtFinal`, `Variance`, `Quantiles`) against identical
+/// configs share cross-covariance solve columns.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// Exact Gaussian predictive of the final progression value:
+    /// `(mean, variance-with-noise)` per query row.
+    MeanAtFinal { xq: Matrix },
+    /// Posterior mean at specific progression-grid steps: a
+    /// `(xq.rows(), steps.len())` matrix. Needs only the training solve.
+    MeanAtSteps { xq: Matrix, steps: Vec<usize> },
+    /// Predictive variance (with noise) of the final value per query row.
+    Variance { xq: Matrix },
+    /// Gaussian predictive quantiles of the final value: a
+    /// `(xq.rows(), ps.len())` matrix, levels strictly inside (0, 1).
+    Quantiles { xq: Matrix, ps: Vec<f64> },
+    /// `n` posterior curve samples over `[X; xq] x grid` via Matheron's
+    /// rule, drawn from a fresh `Pcg64::new(seed)` stream.
+    CurveSamples { xq: Matrix, n: usize, seed: u64 },
+    /// MAP objective (value + gradient) under the session's theta, with a
+    /// fresh Rademacher probe set from `seed`.
+    Mll { seed: u64 },
+}
+
+/// The answer to one [`Query`], in the same order as submitted.
+#[derive(Clone, Debug)]
+pub enum Answer {
+    /// `MeanAtFinal`: `(mean, variance-with-noise)` per query row.
+    Final(Vec<(f64, f64)>),
+    /// `MeanAtSteps`: `(q, steps.len())` posterior means.
+    Steps(Matrix),
+    /// `Variance`: final-step predictive variance per query row.
+    Variance(Vec<f64>),
+    /// `Quantiles`: `(q, ps.len())` predictive quantiles.
+    Quantiles(Matrix),
+    /// `CurveSamples`: one `(n + q, m)` matrix per sample.
+    Curves(Vec<Matrix>),
+    /// `Mll`: objective value, gradient and solve stats.
+    Mll(MllEval),
+}
+
+/// Stack the final-step query matrices of a batch into the layout the
+/// shared `[y, c_1..c_q]` solve uses, deduplicating bitwise-identical
+/// blocks (a `MeanAtFinal` + `Variance` + `Quantiles` trio over the same
+/// configs costs one set of cross columns, not three). Returns the stacked
+/// matrix and, per query, the `(row_offset, rows)` slice it reads.
+/// Blocks whose width disagrees with the first block are skipped (the
+/// session rejects such batches during validation; the serving layer only
+/// uses the stacked matrix for warm-start embedding).
+fn stack_final_queries(queries: &[Query]) -> (Option<Matrix>, Vec<Option<(usize, usize)>>) {
+    let mut blocks: Vec<&Matrix> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::new();
+    let mut total = 0usize;
+    let mut slices: Vec<Option<(usize, usize)>> = Vec::with_capacity(queries.len());
+    for q in queries {
+        let xq = match q {
+            Query::MeanAtFinal { xq } | Query::Variance { xq } | Query::Quantiles { xq, .. } => {
+                Some(xq)
+            }
+            _ => None,
+        };
+        let Some(xq) = xq else {
+            slices.push(None);
+            continue;
+        };
+        if let Some(first) = blocks.first() {
+            if first.cols() != xq.cols() {
+                slices.push(None);
+                continue;
+            }
+        }
+        let found = blocks
+            .iter()
+            .position(|b| b.rows() == xq.rows() && b.cols() == xq.cols() && b.data() == xq.data());
+        let off = match found {
+            Some(i) => offsets[i],
+            None => {
+                let off = total;
+                blocks.push(xq);
+                offsets.push(off);
+                total += xq.rows();
+                off
+            }
+        };
+        slices.push(Some((off, xq.rows())));
+    }
+    if blocks.is_empty() {
+        return (None, slices);
+    }
+    let cols = blocks[0].cols();
+    let mut stacked = Matrix::zeros(total, cols);
+    let mut row = 0;
+    for b in &blocks {
+        for r in 0..b.rows() {
+            stacked.row_mut(row).copy_from_slice(b.row(r));
+            row += 1;
+        }
+    }
+    (Some(stacked), slices)
+}
+
+/// The deduplicated stacked final-step query matrix of a batch — the
+/// layout [`Posterior::answer_batch`] solves cross-covariance columns for,
+/// shared with the serving layer's warm-start embedding
+/// (`coordinator::store::WarmStart::embed_predict`). `None` when the
+/// batch has no final-step queries.
+pub fn stacked_final_xq(queries: &[Query]) -> Option<Matrix> {
+    stack_final_queries(queries).0
+}
+
+/// Validate one query against a dataset's shape. Shared by
+/// [`Posterior::answer_batch`], the default `Engine::answer_batch`
+/// mapping, and the serving layer (which fails malformed requests
+/// individually *before* coalescing them with healthy same-generation
+/// traffic).
+pub fn validate_query(data: &Dataset, q: &Query) -> Result<()> {
+    let (m, d) = (data.m(), data.d());
+    let check_xq = |xq: &Matrix| -> Result<()> {
+        if xq.cols() != d {
+            return Err(LkgpError::Shape(format!(
+                "query configs are {}-dim, dataset is {d}-dim",
+                xq.cols()
+            )));
+        }
+        if xq.rows() == 0 {
+            return Err(LkgpError::Shape("query needs at least one config row".into()));
+        }
+        Ok(())
+    };
+    match q {
+        Query::MeanAtFinal { xq } | Query::Variance { xq } => check_xq(xq),
+        Query::Quantiles { xq, ps } => {
+            check_xq(xq)?;
+            if ps.is_empty() {
+                return Err(LkgpError::Shape("Quantiles needs at least one level".into()));
+            }
+            if ps.iter().any(|&p| !(p > 0.0 && p < 1.0)) {
+                return Err(LkgpError::Shape(
+                    "quantile levels must lie strictly inside (0, 1)".into(),
+                ));
+            }
+            Ok(())
+        }
+        Query::MeanAtSteps { xq, steps } => {
+            check_xq(xq)?;
+            if steps.is_empty() {
+                return Err(LkgpError::Shape("MeanAtSteps needs at least one step".into()));
+            }
+            if steps.iter().any(|&j| j >= m) {
+                return Err(LkgpError::Shape(format!(
+                    "step index out of range (grid has {m} steps)"
+                )));
+            }
+            Ok(())
+        }
+        Query::CurveSamples { xq, n, .. } => {
+            check_xq(xq)?;
+            if *n == 0 {
+                return Err(LkgpError::Shape("CurveSamples needs n >= 1".into()));
+            }
+            Ok(())
+        }
+        Query::Mll { .. } => Ok(()),
+    }
+}
+
+/// Gaussian predictive quantiles from `(mean, variance-with-noise)`
+/// pairs: a `(preds.len(), ps.len())` matrix with entries
+/// `mean + Φ⁻¹(p)·sd`. Shared by [`Posterior::answer_batch`] and the
+/// default `Engine::answer_batch` mapping so session-capable and
+/// legacy-mapped engines can never diverge on the same query.
+pub fn quantiles_from_preds(preds: &[(f64, f64)], ps: &[f64]) -> Matrix {
+    let mut qm = Matrix::zeros(preds.len(), ps.len());
+    for (r, &(mu, var)) in preds.iter().enumerate() {
+        let sd = var.max(0.0).sqrt();
+        for (c, &p) in ps.iter().enumerate() {
+            qm[(r, c)] = mu + sd * normal_quantile(p);
+        }
+    }
+    qm
+}
+
+/// Select grid-step columns out of a full `(q, m)` posterior-mean matrix
+/// (the `MeanAtSteps` answer shape). Shared like [`quantiles_from_preds`].
+pub fn select_steps(full: &Matrix, steps: &[usize]) -> Matrix {
+    let mut sm = Matrix::zeros(full.rows(), steps.len());
+    for r in 0..full.rows() {
+        for (c, &j) in steps.iter().enumerate() {
+            sm[(r, c)] = full[(r, j)];
+        }
+    }
+    sm
+}
+
+/// Standard-normal quantile function Φ⁻¹(p) (Acklam's rational
+/// approximation, absolute error < 1.2e-9 on (0, 1)). Used to turn the
+/// exact Gaussian predictive `(mean, variance)` into `Quantiles` answers.
+pub fn normal_quantile(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0, "quantile level must be in (0, 1)");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p > 1.0 - P_LOW {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FitSession
+
+/// Hyper-parameter optimizer choice for [`FitSession::fit`].
+#[derive(Clone, Debug)]
+pub enum FitMethod {
+    /// First-order default — robust to the stochastic log-det gradient.
+    Adam(trainer::AdamCfg),
+    /// Quasi-Newton, the paper's §B choice.
+    Lbfgs(trainer::LbfgsCfg),
+}
+
+/// A hyper-parameter fitting session: owns the dataset, the Rademacher
+/// probe set (so the probe-conditioned objective is deterministic), the
+/// warm CG solve buffer and the factored preconditioner. Every
+/// [`FitSession::eval`] warm-starts from the previous evaluation and
+/// rebuilds the preconditioner only when theta drifts past the
+/// compatibility window — the threading `RustEngine::fit` used to do by
+/// hand.
+pub struct FitSession {
+    data: Arc<Dataset>,
+    cfg: SolverCfg,
+    probes: Vec<f64>,
+    warm: Option<Vec<f64>>,
+    precond: Option<Arc<PrecondFactors>>,
+    evals: usize,
+}
+
+impl FitSession {
+    /// New session with `cfg.probes` Rademacher probes drawn from `seed`.
+    pub fn new(data: Arc<Dataset>, cfg: SolverCfg, seed: u64) -> Result<Self> {
+        let nm = data.n() * data.m();
+        let mut rng = Pcg64::new(seed);
+        let probes = rng.rademacher_vec(cfg.probes * nm);
+        Self::with_probes(data, cfg, probes)
+    }
+
+    /// New session over an explicit `(p, n*m)` row-major probe buffer
+    /// (deterministic parity with pre-session callers that draw their own).
+    pub fn with_probes(data: Arc<Dataset>, cfg: SolverCfg, probes: Vec<f64>) -> Result<Self> {
+        data.check()?;
+        Ok(FitSession {
+            data,
+            cfg,
+            probes,
+            warm: None,
+            precond: None,
+            evals: 0,
+        })
+    }
+
+    /// Inject previously-converged state (a warm solve buffer in the
+    /// `[y, probes]` layout and/or factored preconditioner), e.g. from a
+    /// prior session's lineage.
+    pub fn seed_state(&mut self, warm: Option<Vec<f64>>, precond: Option<Arc<PrecondFactors>>) {
+        if warm.is_some() {
+            self.warm = warm;
+        }
+        if precond.is_some() {
+            self.precond = precond;
+        }
+    }
+
+    /// Evaluate the MAP objective and gradient at `packed`, warm-starting
+    /// the batched `[y, probes]` solve from the previous evaluation.
+    pub fn eval(&mut self, packed: &[f64]) -> Result<MllEval> {
+        let (eval, solves) = lkgp::mll_impl(
+            packed,
+            &self.data,
+            &self.probes,
+            &self.cfg,
+            self.warm.as_deref(),
+            &mut self.precond,
+        )?;
+        self.warm = Some(solves);
+        self.evals += 1;
+        Ok(eval)
+    }
+
+    /// Optimize from `theta0` with the given method; every objective
+    /// evaluation flows through [`FitSession::eval`] (warm + cached).
+    pub fn fit(&mut self, theta0: &[f64], method: &FitMethod) -> Result<FitTrace> {
+        let mut obj = |p: &[f64]| self.eval(p).map(|e| (e.value, e.grad));
+        match method {
+            FitMethod::Adam(cfg) => trainer::adam(&mut obj, theta0, cfg),
+            FitMethod::Lbfgs(cfg) => trainer::lbfgs(&mut obj, theta0, cfg),
+        }
+    }
+
+    /// Freeze a [`Posterior`] at `theta`, carrying the preconditioner
+    /// lineage forward (the factors were built under nearby
+    /// hyper-parameters, so prediction solves reuse them).
+    pub fn posterior(&self, theta: Vec<f64>) -> Posterior {
+        Posterior::new(self.data.clone(), theta, self.cfg.clone())
+            .with_precond(self.precond.clone())
+    }
+
+    /// The converged `[y, probes]` solve buffer of the last evaluation.
+    pub fn warm_buffer(&self) -> Option<&[f64]> {
+        self.warm.as_deref()
+    }
+
+    /// The factored preconditioner currently cached by the session.
+    pub fn precond(&self) -> Option<Arc<PrecondFactors>> {
+        self.precond.clone()
+    }
+
+    /// Objective evaluations performed so far.
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    /// The session's dataset.
+    pub fn data(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    /// The session's solver configuration.
+    pub fn cfg(&self) -> &SolverCfg {
+        &self.cfg
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Posterior
+
+/// A posterior session: one `(dataset, theta, solver config)` triple plus
+/// every piece of converged solver state — the training solve `alpha`, the
+/// cross-covariance solves for the last final-step query matrix, and the
+/// factored preconditioner. [`Posterior::answer_batch`] shares one
+/// underlying batched solve across a query batch and reuses `alpha` for
+/// every later query against the same session.
+pub struct Posterior {
+    data: Arc<Dataset>,
+    theta: Vec<f64>,
+    cfg: SolverCfg,
+    /// Converged flattened `(n, m)` training solve, once any query ran.
+    alpha: Option<Vec<f64>>,
+    /// The stacked final-step query matrix the cached cross solves (and
+    /// predictions) were computed for.
+    cross_xq: Option<Matrix>,
+    /// Flattened `(cross_xq.rows(), n*m)` cross-covariance solves.
+    cross: Vec<f64>,
+    /// `(mean, variance-with-noise)` per `cross_xq` row.
+    preds: Vec<(f64, f64)>,
+    precond: Option<Arc<PrecondFactors>>,
+    /// External warm-start guess (lineage) consumed by the first solve:
+    /// either a flattened `(n, m)` alpha or a full `(q+1)*n*m` buffer.
+    guess: Option<Vec<f64>>,
+    cg_iters: usize,
+    cg_mvm_rows: usize,
+    solve_calls: usize,
+    last_cg: Option<CgStats>,
+}
+
+impl Posterior {
+    /// New posterior session; no solve runs until the first query.
+    pub fn new(data: Arc<Dataset>, theta: Vec<f64>, cfg: SolverCfg) -> Self {
+        Posterior {
+            data,
+            theta,
+            cfg,
+            alpha: None,
+            cross_xq: None,
+            cross: Vec::new(),
+            preds: Vec::new(),
+            precond: None,
+            guess: None,
+            cg_iters: 0,
+            cg_mvm_rows: 0,
+            solve_calls: 0,
+            last_cg: None,
+        }
+    }
+
+    /// Inject a warm-start guess from external lineage: a flattened
+    /// `(n, m)` alpha, or a full `(q+1)*n*m` buffer matching the stacked
+    /// final-step layout of the first query batch.
+    pub fn with_guess(mut self, guess: Option<Vec<f64>>) -> Self {
+        self.guess = guess;
+        self
+    }
+
+    /// Inject cached preconditioner factors (staleness is re-checked
+    /// against theta and the mask before use, so old factors are safe).
+    pub fn with_precond(mut self, precond: Option<Arc<PrecondFactors>>) -> Self {
+        self.precond = precond;
+        self
+    }
+
+    /// Answer one query (see [`Posterior::answer_batch`]).
+    pub fn answer(&mut self, query: &Query) -> Result<Answer> {
+        let mut answers = self.answer_batch(std::slice::from_ref(query))?;
+        Ok(answers.pop().expect("one answer per query"))
+    }
+
+    /// Answer a batch of typed queries. All final-step queries share one
+    /// batched `[y, c_1..c_q]` solve (duplicate query matrices share
+    /// columns); `MeanAtSteps` reuses the same converged `alpha`. Answers
+    /// are returned in submission order.
+    pub fn answer_batch(&mut self, queries: &[Query]) -> Result<Vec<Answer>> {
+        for q in queries {
+            self.validate(q)?;
+        }
+        let (stacked, slices) = stack_final_queries(queries);
+        if let Some(xq) = &stacked {
+            self.ensure_final_solve(xq)?;
+        }
+        let mut out = Vec::with_capacity(queries.len());
+        for (q, slice) in queries.iter().zip(slices) {
+            let ans = match q {
+                Query::MeanAtFinal { .. } => {
+                    let (off, rows) = slice.expect("final-step query has a slice");
+                    Answer::Final(self.preds[off..off + rows].to_vec())
+                }
+                Query::Variance { .. } => {
+                    let (off, rows) = slice.expect("final-step query has a slice");
+                    Answer::Variance(self.preds[off..off + rows].iter().map(|p| p.1).collect())
+                }
+                Query::Quantiles { ps, .. } => {
+                    let (off, rows) = slice.expect("final-step query has a slice");
+                    Answer::Quantiles(quantiles_from_preds(&self.preds[off..off + rows], ps))
+                }
+                Query::MeanAtSteps { xq, steps } => {
+                    let full = self.mean_rows(xq)?;
+                    Answer::Steps(select_steps(&full, steps))
+                }
+                Query::CurveSamples { xq, n: s, seed } => {
+                    let mut rng = Pcg64::new(*seed);
+                    Answer::Curves(self.sample_curves_with(xq, *s, &mut rng)?)
+                }
+                Query::Mll { seed } => Answer::Mll(self.mll(*seed)?),
+            };
+            out.push(ans);
+        }
+        Ok(out)
+    }
+
+    /// Posterior curve samples via Matheron's rule using an external RNG
+    /// stream (the `Query::CurveSamples` path seeds its own). Reuses the
+    /// session's preconditioner cache for the pathwise solve.
+    pub fn sample_curves_with(
+        &mut self,
+        xq: &Matrix,
+        s: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Matrix>> {
+        let (samples, cg) = lkgp::posterior_samples_impl(
+            &self.theta,
+            &self.data,
+            xq,
+            s,
+            &self.cfg,
+            rng,
+            &mut self.precond,
+        )?;
+        self.record_cg(cg);
+        Ok(samples)
+    }
+
+    /// MAP objective value + gradient at the session's theta with a fresh
+    /// probe set from `seed`. The cached `alpha` warm-starts the `y`
+    /// column of the `[y, probes]` solve.
+    pub fn mll(&mut self, seed: u64) -> Result<MllEval> {
+        let nm = self.data.n() * self.data.m();
+        let mut rng = Pcg64::new(seed);
+        let probes = rng.rademacher_vec(self.cfg.probes.max(1) * nm);
+        let x0: Option<Vec<f64>> = self.alpha.as_ref().map(|a| {
+            let p = probes.len() / nm;
+            let mut buf = vec![0.0; (p + 1) * nm];
+            buf[..nm].copy_from_slice(a);
+            buf
+        });
+        let (eval, _solves) = lkgp::mll_impl(
+            &self.theta,
+            &self.data,
+            &probes,
+            &self.cfg,
+            x0.as_deref(),
+            &mut self.precond,
+        )?;
+        self.record_cg(eval.cg.clone());
+        Ok(eval)
+    }
+
+    fn validate(&self, q: &Query) -> Result<()> {
+        validate_query(&self.data, q)
+    }
+
+    /// Run (or reuse) the shared `[y, c_1..c_q]` solve for a stacked
+    /// final-step query matrix. A bitwise-identical repeat is free; a new
+    /// matrix warm-starts from the converged `alpha` (or the injected
+    /// lineage guess on the very first solve).
+    fn ensure_final_solve(&mut self, xq: &Matrix) -> Result<()> {
+        if self.alpha.is_some() {
+            if let Some(cached) = &self.cross_xq {
+                if cached.rows() == xq.rows()
+                    && cached.cols() == xq.cols()
+                    && cached.data() == xq.data()
+                {
+                    return Ok(());
+                }
+            }
+        }
+        let nm = self.data.n() * self.data.m();
+        let guess: Option<Vec<f64>> = match &self.alpha {
+            Some(a) => Some(a.clone()),
+            None => self.guess.clone(),
+        };
+        let (preds, solves, cg) = lkgp::predict_final_impl(
+            &self.theta,
+            &self.data,
+            xq,
+            &self.cfg,
+            guess.as_deref(),
+            &mut self.precond,
+        )?;
+        self.alpha = Some(solves[..nm].to_vec());
+        self.cross = solves[nm..].to_vec();
+        self.cross_xq = Some(xq.clone());
+        self.preds = preds;
+        self.record_cg(cg);
+        Ok(())
+    }
+
+    /// Solve (or reuse) the single-RHS training system `A alpha = vec(Y)`.
+    fn ensure_alpha(&mut self) -> Result<()> {
+        if self.alpha.is_some() {
+            return Ok(());
+        }
+        self.data.check()?;
+        let theta = Theta::unpack(&self.theta);
+        let nm = self.data.n() * self.data.m();
+        let k1 = kernels::rbf(&self.data.x, &self.data.x, &theta.lengthscales);
+        let k2 = kernels::matern12(
+            &self.data.t,
+            &self.data.t,
+            theta.t_lengthscale,
+            theta.outputscale,
+        );
+        let op = super::operator::MaskedKronOp::new(&k1, &k2, &self.data.mask, theta.sigma2);
+        let factors = lkgp::resolve_precond(
+            &self.cfg,
+            &self.theta,
+            &k1,
+            &k2,
+            &self.data.mask,
+            self.precond.as_ref(),
+        );
+        // the alpha slice of an injected lineage guess warms the y column
+        let g0: Option<Vec<f64>> = self.guess.as_ref().and_then(|g| {
+            if g.len() >= nm && g.len() % nm == 0 {
+                Some(g[..nm].to_vec())
+            } else {
+                None
+            }
+        });
+        let (sol, cg) = op.solve_precond(
+            self.data.y.data(),
+            g0.as_deref(),
+            factors.as_deref(),
+            self.cfg.cg_tol,
+            self.cfg.cg_max_iters,
+        );
+        self.precond = factors;
+        self.alpha = Some(sol);
+        self.record_cg(cg);
+        Ok(())
+    }
+
+    /// Full-grid posterior mean rows `k1(xq, X) (M ∘ A) K2` from the
+    /// cached training solve.
+    fn mean_rows(&mut self, xq: &Matrix) -> Result<Matrix> {
+        self.ensure_alpha()?;
+        let theta = Theta::unpack(&self.theta);
+        let (n, m) = (self.data.n(), self.data.m());
+        let alpha = self.alpha.as_ref().expect("alpha ensured");
+        let am = lkgp::mask_product(&self.data.mask, alpha, n, m);
+        let k1q = kernels::rbf(xq, &self.data.x, &theta.lengthscales);
+        let k2 = kernels::matern12(
+            &self.data.t,
+            &self.data.t,
+            theta.t_lengthscale,
+            theta.outputscale,
+        );
+        Ok(k1q.matmul(&am).matmul(&k2))
+    }
+
+    fn record_cg(&mut self, cg: CgStats) {
+        self.cg_iters += cg.iters_per_rhs.iter().sum::<usize>();
+        self.cg_mvm_rows += cg.mvm_rows;
+        self.solve_calls += 1;
+        self.last_cg = Some(cg);
+    }
+
+    // -- accessors (serving-layer lineage + telemetry) ---------------------
+
+    /// The converged training solve, once any query ran.
+    pub fn alpha(&self) -> Option<&[f64]> {
+        self.alpha.as_deref()
+    }
+
+    /// The stacked query matrix the cached cross solves correspond to.
+    pub fn cross_xq(&self) -> Option<&Matrix> {
+        self.cross_xq.as_ref()
+    }
+
+    /// The cached cross-covariance solves (flattened `(q, n*m)`).
+    pub fn cross_solves(&self) -> Option<&[f64]> {
+        if self.cross_xq.is_some() {
+            Some(&self.cross)
+        } else {
+            None
+        }
+    }
+
+    /// The full converged `[alpha, c_1.., c_q]` buffer of the last
+    /// final-step solve (the historical `predict_final_warm` return).
+    pub fn solve_buffer(&self) -> Option<Vec<f64>> {
+        let alpha = self.alpha.as_ref()?;
+        let mut buf = Vec::with_capacity(alpha.len() + self.cross.len());
+        buf.extend_from_slice(alpha);
+        buf.extend_from_slice(&self.cross);
+        Some(buf)
+    }
+
+    /// Factored preconditioner state after the last solve.
+    pub fn precond(&self) -> Option<Arc<PrecondFactors>> {
+        self.precond.clone()
+    }
+
+    /// Stats of the most recent underlying solve.
+    pub fn last_cg(&self) -> Option<&CgStats> {
+        self.last_cg.as_ref()
+    }
+
+    /// Total per-RHS CG iterations across the session's solves.
+    pub fn cg_iters(&self) -> usize {
+        self.cg_iters
+    }
+
+    /// Total operator rows applied across the session's solves
+    /// (`CgStats::mvm_rows` — the true MVM work).
+    pub fn cg_mvm_rows(&self) -> usize {
+        self.cg_mvm_rows
+    }
+
+    /// Underlying batched solves run so far (query batches amortize many
+    /// queries into one).
+    pub fn solve_calls(&self) -> usize {
+        self.solve_calls
+    }
+
+    /// The session's packed hyper-parameters.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// The session's dataset.
+    pub fn data(&self) -> &Arc<Dataset> {
+        &self.data
+    }
+
+    /// The session's solver configuration.
+    pub fn cfg(&self) -> &SolverCfg {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, m: usize, d: usize, seed: u64) -> Arc<Dataset> {
+        let mut rng = Pcg64::new(seed);
+        let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1).max(1) as f64).collect();
+        let mut mask = Matrix::zeros(n, m);
+        for i in 0..n {
+            let len = 2 + rng.below(m - 1);
+            for j in 0..len {
+                mask[(i, j)] = 1.0;
+            }
+        }
+        let mut y = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                if mask[(i, j)] > 0.0 {
+                    y[(i, j)] = -0.5 + 0.1 * j as f64 + 0.02 * rng.normal();
+                }
+            }
+        }
+        Arc::new(Dataset { x, t, y, mask })
+    }
+
+    #[test]
+    fn normal_quantile_known_values() {
+        assert!(normal_quantile(0.5).abs() < 1e-12);
+        assert!((normal_quantile(0.975) - 1.959963985).abs() < 1e-7);
+        assert!((normal_quantile(0.025) + 1.959963985).abs() < 1e-7);
+        // tail branch + symmetry
+        assert!((normal_quantile(0.001) + normal_quantile(0.999)).abs() < 1e-7);
+        assert!((normal_quantile(0.001) + 3.090232306).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stacking_dedupes_identical_query_blocks() {
+        let xq = Matrix::from_vec(2, 2, vec![0.1, 0.2, 0.3, 0.4]);
+        let other = Matrix::from_vec(1, 2, vec![0.9, 0.9]);
+        let queries = vec![
+            Query::MeanAtFinal { xq: xq.clone() },
+            Query::Variance { xq: xq.clone() },
+            Query::MeanAtSteps { xq: xq.clone(), steps: vec![0] },
+            Query::Quantiles { xq: other.clone(), ps: vec![0.5] },
+        ];
+        let (stacked, slices) = stack_final_queries(&queries);
+        let stacked = stacked.expect("final-step queries present");
+        // identical blocks share rows: 2 (xq) + 1 (other), not 5
+        assert_eq!(stacked.rows(), 3);
+        assert_eq!(slices[0], Some((0, 2)));
+        assert_eq!(slices[1], Some((0, 2)));
+        assert_eq!(slices[2], None); // MeanAtSteps adds no cross columns
+        assert_eq!(slices[3], Some((2, 1)));
+        assert_eq!(stacked.row(2), other.row(0));
+    }
+
+    #[test]
+    fn batch_shares_one_solve_across_variants() {
+        let data = toy(6, 5, 2, 3);
+        let theta = Theta::default_packed(2);
+        let mut rng = Pcg64::new(4);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let mut post = Posterior::new(data, theta, SolverCfg::default());
+        let answers = post
+            .answer_batch(&[
+                Query::MeanAtFinal { xq: xq.clone() },
+                Query::Variance { xq: xq.clone() },
+                Query::Quantiles { xq: xq.clone(), ps: vec![0.25, 0.75] },
+                Query::MeanAtSteps { xq: xq.clone(), steps: vec![0, 4] },
+            ])
+            .unwrap();
+        assert_eq!(post.solve_calls(), 1, "four variants, one solve");
+        // internal consistency: Variance == Final.1, quantile order
+        let finals = match &answers[0] {
+            Answer::Final(v) => v.clone(),
+            other => panic!("want Final, got {other:?}"),
+        };
+        match &answers[1] {
+            Answer::Variance(v) => {
+                for (a, b) in v.iter().zip(&finals) {
+                    assert_eq!(a.to_bits(), b.1.to_bits());
+                }
+            }
+            other => panic!("want Variance, got {other:?}"),
+        }
+        match &answers[2] {
+            Answer::Quantiles(q) => {
+                for r in 0..2 {
+                    assert!(q[(r, 0)] < q[(r, 1)], "quantiles must be ordered");
+                }
+            }
+            other => panic!("want Quantiles, got {other:?}"),
+        }
+        // an identical follow-up batch answers from cache: still one solve
+        let again = post.answer(&Query::MeanAtFinal { xq: xq.clone() }).unwrap();
+        assert_eq!(post.solve_calls(), 1);
+        match again {
+            Answer::Final(v) => {
+                for (a, b) in v.iter().zip(&finals) {
+                    assert_eq!(a.0.to_bits(), b.0.to_bits());
+                    assert_eq!(a.1.to_bits(), b.1.to_bits());
+                }
+            }
+            other => panic!("want Final, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn steps_only_batch_solves_single_rhs_then_warms_finals() {
+        let data = toy(6, 5, 2, 7);
+        let theta = Theta::default_packed(2);
+        let mut rng = Pcg64::new(8);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let mut post = Posterior::new(data, theta, SolverCfg::default());
+        let ans = post
+            .answer(&Query::MeanAtSteps { xq: xq.clone(), steps: vec![4] })
+            .unwrap();
+        match ans {
+            Answer::Steps(s) => assert_eq!((s.rows(), s.cols()), (2, 1)),
+            other => panic!("want Steps, got {other:?}"),
+        }
+        assert_eq!(post.solve_calls(), 1);
+        let rows_alpha_only = post.cg_mvm_rows();
+        // a later final-step query warm-starts its y column from alpha
+        let _ = post.answer(&Query::MeanAtFinal { xq }).unwrap();
+        assert_eq!(post.solve_calls(), 2);
+        let cg = post.last_cg().unwrap();
+        assert!(
+            cg.iters_per_rhs[0] <= 2,
+            "y column should be warm: {:?}",
+            cg.iters_per_rhs
+        );
+        assert!(rows_alpha_only > 0);
+    }
+
+    #[test]
+    fn invalid_queries_are_rejected() {
+        let data = toy(5, 4, 2, 9);
+        let theta = Theta::default_packed(2);
+        let mut post = Posterior::new(data, theta, SolverCfg::default());
+        let xq = Matrix::from_vec(1, 2, vec![0.5, 0.5]);
+        let wrong_d = Matrix::from_vec(1, 3, vec![0.5, 0.5, 0.5]);
+        assert!(post.answer(&Query::MeanAtFinal { xq: wrong_d }).is_err());
+        assert!(post
+            .answer(&Query::MeanAtSteps { xq: xq.clone(), steps: vec![4] })
+            .is_err());
+        assert!(post
+            .answer(&Query::Quantiles { xq: xq.clone(), ps: vec![0.0] })
+            .is_err());
+        assert!(post
+            .answer(&Query::Quantiles { xq: xq.clone(), ps: vec![] })
+            .is_err());
+        assert!(post
+            .answer(&Query::CurveSamples { xq, n: 0, seed: 1 })
+            .is_err());
+        // nothing solved on the error paths
+        assert_eq!(post.solve_calls(), 0);
+    }
+
+    #[test]
+    fn fit_session_matches_hand_threaded_eval() {
+        let data = toy(6, 5, 2, 11);
+        let cfg = SolverCfg::default();
+        let nm = 30;
+        let probes = Pcg64::new(12).rademacher_vec(cfg.probes * nm);
+        let theta = Theta::default_packed(2);
+        let mut session =
+            FitSession::with_probes(data.clone(), cfg.clone(), probes.clone()).unwrap();
+        let eval = session.eval(&theta).unwrap();
+        assert_eq!(session.evals(), 1);
+        // hand-threaded reference through the internal impl
+        let mut cache = None;
+        let (want, solves) =
+            lkgp::mll_impl(&theta, &data, &probes, &cfg, None, &mut cache).unwrap();
+        assert_eq!(eval.value.to_bits(), want.value.to_bits());
+        for (a, b) in eval.grad.iter().zip(&want.grad) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let warm = session.warm_buffer().unwrap();
+        assert_eq!(warm.len(), solves.len());
+        for (a, b) in warm.iter().zip(&solves) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -53,6 +53,7 @@ fn cmd_artifacts(_args: &Args) -> lkgp::Result<()> {
 }
 
 fn cmd_smoke(args: &Args) -> lkgp::Result<()> {
+    use lkgp::gp::{Answer, Query};
     let seed = args.get_u64("seed", 0);
     let prefer_xla = args.get("engine").unwrap_or("xla") == "xla";
     let mut engine: Box<dyn lkgp::runtime::Engine> =
@@ -62,14 +63,34 @@ fn cmd_smoke(args: &Args) -> lkgp::Result<()> {
         } else {
             lkgp::runtime::open_engine(prefer_xla)
         };
-    let data = lkgp::lcbench::toy_dataset(16, 16, 3, seed);
+    let data = std::sync::Arc::new(lkgp::lcbench::toy_dataset(16, 16, 3, seed));
     let theta0 = lkgp::gp::Theta::default_packed(3);
     let theta = engine.fit(&theta0, &data, seed)?;
     let xq = lkgp::linalg::Matrix::from_vec(2, 3, vec![0.3, 0.5, 0.7, 0.6, 0.2, 0.9]);
-    let preds = engine.predict_final(&theta, &data, &xq)?;
+    // one typed-query batch: mean/variance and quantile band from a
+    // single underlying solve (see docs/api.md)
+    let outcome = engine.answer_batch(
+        &theta,
+        &data,
+        &[
+            Query::MeanAtFinal { xq: xq.clone() },
+            Query::Quantiles { xq: xq.clone(), ps: vec![0.1, 0.9] },
+        ],
+        None,
+        None,
+    )?;
     println!("engine={} theta={theta:.3?}", engine.name());
-    for (i, (mu, var)) in preds.iter().enumerate() {
-        println!("query {i}: final = {mu:.4} +- {:.4}", var.sqrt());
+    let (finals, bands) = match (&outcome.answers[0], &outcome.answers[1]) {
+        (Answer::Final(f), Answer::Quantiles(q)) => (f, q),
+        _ => unreachable!("smoke queries answer Final + Quantiles"),
+    };
+    for (i, (mu, var)) in finals.iter().enumerate() {
+        println!(
+            "query {i}: final = {mu:.4} +- {:.4}  (p10={:.4} p90={:.4})",
+            var.sqrt(),
+            bands[(i, 0)],
+            bands[(i, 1)],
+        );
     }
     Ok(())
 }

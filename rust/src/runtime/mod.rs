@@ -29,6 +29,7 @@ use crate::error::LkgpError;
 use crate::error::Result;
 use crate::gp::lkgp::{Dataset, SolverCfg};
 use crate::gp::operator::PrecondFactors;
+use crate::gp::session::{Answer, FitMethod, FitSession, Posterior, Query};
 use crate::gp::trainer;
 #[cfg(feature = "xla")]
 use crate::gp::Theta;
@@ -56,6 +57,30 @@ pub struct PredictOutcome {
     /// Factored preconditioner state used/built by the solve, for the
     /// serving layer to cache in the `WarmStart` lineage (None when
     /// preconditioning is off or the engine does not expose it).
+    pub precond: Option<Arc<PrecondFactors>>,
+}
+
+/// Result of a typed-query batch ([`Engine::answer_batch`]): the answers
+/// in submission order plus the converged solver state the serving layer
+/// caches as `WarmStart` lineage.
+pub struct QueryOutcome {
+    /// One [`Answer`] per submitted [`Query`], in order.
+    pub answers: Vec<Answer>,
+    /// Converged training solve (flattened `(n, m)` alpha), when exposed.
+    pub alpha: Option<Vec<f64>>,
+    /// The stacked final-step query matrix the cross solves correspond to
+    /// (the `gp::session::stacked_final_xq` layout of the batch).
+    pub xq: Option<Matrix>,
+    /// Converged cross-covariance solves matching `xq`.
+    pub cross: Option<Vec<f64>>,
+    /// Total per-RHS CG iterations across the batch's solves.
+    pub cg_iters: usize,
+    /// Total per-RHS operator rows applied (`CgStats::mvm_rows`).
+    pub cg_mvm_rows: usize,
+    /// Underlying batched solves run (session engines amortize a whole
+    /// query batch into one; legacy mapping pays one per query).
+    pub solves: usize,
+    /// Factored preconditioner state after the batch.
     pub precond: Option<Arc<PrecondFactors>>,
 }
 
@@ -106,6 +131,80 @@ pub trait Engine: Send {
     ) -> Result<PredictOutcome> {
         let _ = precond;
         self.predict_final_warm(theta, data, xq, warm)
+    }
+
+    /// Answer a batch of typed queries against one model state. `warm` is
+    /// an optional initial guess in the batch's stacked final-step layout
+    /// (see `gp::session::stacked_final_xq`); `precond` is cached factored
+    /// preconditioner lineage. The default maps each query onto the legacy
+    /// per-query entry points — correct but with no solve sharing — so
+    /// artifact engines work unchanged; warm-capable engines override it
+    /// to amortize the whole batch into one underlying solve.
+    fn answer_batch(
+        &mut self,
+        theta: &[f64],
+        data: &Arc<Dataset>,
+        queries: &[Query],
+        warm: Option<&[f64]>,
+        precond: Option<Arc<PrecondFactors>>,
+    ) -> Result<QueryOutcome> {
+        let _ = (warm, precond);
+        // same shape/level validation the session applies, so engines are
+        // interchangeable: a malformed query errors instead of producing
+        // engine-dependent output (e.g. NaN quantiles at p = 0)
+        for q in queries {
+            crate::gp::session::validate_query(data, q)?;
+        }
+        let mut answers = Vec::with_capacity(queries.len());
+        let mut solves = 0usize;
+        for q in queries {
+            let ans = match q {
+                Query::MeanAtFinal { xq } => {
+                    solves += 1;
+                    Answer::Final(self.predict_final(theta, data, xq)?)
+                }
+                Query::Variance { xq } => {
+                    solves += 1;
+                    Answer::Variance(
+                        self.predict_final(theta, data, xq)?
+                            .into_iter()
+                            .map(|p| p.1)
+                            .collect(),
+                    )
+                }
+                Query::Quantiles { xq, ps } => {
+                    solves += 1;
+                    let preds = self.predict_final(theta, data, xq)?;
+                    Answer::Quantiles(crate::gp::session::quantiles_from_preds(&preds, ps))
+                }
+                Query::MeanAtSteps { xq, steps } => {
+                    solves += 1;
+                    let full = self.predict_mean(theta, data, xq)?;
+                    Answer::Steps(crate::gp::session::select_steps(&full, steps))
+                }
+                Query::CurveSamples { xq, n, seed } => {
+                    solves += 1;
+                    Answer::Curves(self.sample_curves(theta, data, xq, *n, *seed)?)
+                }
+                Query::Mll { .. } => {
+                    return Err(crate::error::LkgpError::Coordinator(format!(
+                        "engine '{}' does not serve Mll queries",
+                        self.name()
+                    )))
+                }
+            };
+            answers.push(ans);
+        }
+        Ok(QueryOutcome {
+            answers,
+            alpha: None,
+            xq: None,
+            cross: None,
+            cg_iters: 0,
+            cg_mvm_rows: 0,
+            solves,
+            precond: None,
+        })
     }
 
     /// Posterior samples of full curves over [X; Xq] x grid.
@@ -176,38 +275,16 @@ impl RustEngine {
 
 impl Engine for RustEngine {
     fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> Result<Vec<f64>> {
-        let mut rng = Pcg64::new(seed);
-        let probes = rng.rademacher_vec(self.cfg.probes * data.n() * data.m());
-        let cfg = self.cfg.clone();
-        // Warm-start each optimizer step's batched CG ([y, probes] solves)
-        // from the previous step's solutions: consecutive iterates change
-        // theta slowly, so the previous solve is an excellent guess and the
-        // converged tolerance is unchanged. The factored preconditioner
-        // rides along the same way — rebuilt only when theta drifts past
-        // the compatibility window (gp::operator::PrecondFactors).
-        let mut warm: Option<Vec<f64>> = None;
-        let mut precond: Option<Arc<PrecondFactors>> = None;
-        let mut obj = |packed: &[f64]| {
-            match crate::gp::lkgp::mll_value_grad_cached(
-                packed,
-                data,
-                &probes,
-                &cfg,
-                warm.as_deref(),
-                &mut precond,
-            ) {
-                Ok((eval, solves)) => {
-                    warm = Some(solves);
-                    Ok((eval.value, eval.grad))
-                }
-                Err(e) => Err(e),
-            }
+        // The FitSession owns the probe set, the warm solve buffer and the
+        // factored preconditioner: every optimizer step warm-starts from
+        // the previous one and factors are rebuilt only when theta drifts
+        // past the compatibility window (gp::operator::PrecondFactors).
+        let mut session = FitSession::new(Arc::new(data.clone()), self.cfg.clone(), seed)?;
+        let method = match self.trainer {
+            Trainer::Adam => FitMethod::Adam(self.adam.clone()),
+            Trainer::Lbfgs => FitMethod::Lbfgs(self.lbfgs.clone()),
         };
-        let trace = match self.trainer {
-            Trainer::Adam => trainer::adam(&mut obj, theta0, &self.adam)?,
-            Trainer::Lbfgs => trainer::lbfgs(&mut obj, theta0, &self.lbfgs)?,
-        };
-        Ok(trace.theta)
+        Ok(session.fit(theta0, &method)?.theta)
     }
 
     fn predict_final(
@@ -216,7 +293,7 @@ impl Engine for RustEngine {
         data: &Dataset,
         xq: &Matrix,
     ) -> Result<Vec<(f64, f64)>> {
-        crate::gp::lkgp::predict_final(theta, data, xq, &self.cfg)
+        Ok(self.predict_final_cached(theta, data, xq, None, None)?.preds)
     }
 
     fn predict_final_warm(
@@ -237,9 +314,14 @@ impl Engine for RustEngine {
         warm: Option<&[f64]>,
         precond: Option<Arc<PrecondFactors>>,
     ) -> Result<PredictOutcome> {
+        // Zero-copy path onto the same core the session drives
+        // (`predict_final_impl`): these borrowed-Dataset entry points are
+        // hit per-request (engine-parity tests, warm-CG benches), so they
+        // must not pay a Dataset clone to build a one-shot session.
         let mut cache = precond;
-        let (preds, solves, cg) =
-            crate::gp::lkgp::predict_final_cached(theta, data, xq, &self.cfg, warm, &mut cache)?;
+        let (preds, solves, cg) = crate::gp::lkgp::predict_final_impl(
+            theta, data, xq, &self.cfg, warm, &mut cache,
+        )?;
         let nm = data.n() * data.m();
         Ok(PredictOutcome {
             alpha: Some(solves[..nm].to_vec()),
@@ -251,6 +333,32 @@ impl Engine for RustEngine {
         })
     }
 
+    /// One session answers the whole batch: final-step queries share a
+    /// single `[y, c_1..c_q]` solve and `MeanAtSteps` reuses its alpha.
+    fn answer_batch(
+        &mut self,
+        theta: &[f64],
+        data: &Arc<Dataset>,
+        queries: &[Query],
+        warm: Option<&[f64]>,
+        precond: Option<Arc<PrecondFactors>>,
+    ) -> Result<QueryOutcome> {
+        let mut post = Posterior::new(data.clone(), theta.to_vec(), self.cfg.clone())
+            .with_guess(warm.map(|g| g.to_vec()))
+            .with_precond(precond);
+        let answers = post.answer_batch(queries)?;
+        Ok(QueryOutcome {
+            answers,
+            alpha: post.alpha().map(|a| a.to_vec()),
+            xq: post.cross_xq().cloned(),
+            cross: post.cross_solves().map(|c| c.to_vec()),
+            cg_iters: post.cg_iters(),
+            cg_mvm_rows: post.cg_mvm_rows(),
+            solves: post.solve_calls(),
+            precond: post.precond(),
+        })
+    }
+
     fn sample_curves(
         &mut self,
         theta: &[f64],
@@ -259,12 +367,22 @@ impl Engine for RustEngine {
         s: usize,
         seed: u64,
     ) -> Result<Vec<Matrix>> {
+        // zero-copy onto the Matheron core (see predict_final_cached)
         let mut rng = Pcg64::new(seed);
-        crate::gp::lkgp::posterior_samples(theta, data, xq, s, &self.cfg, &mut rng)
+        let mut cache = None;
+        let (samples, _cg) = crate::gp::lkgp::posterior_samples_impl(
+            theta, data, xq, s, &self.cfg, &mut rng, &mut cache,
+        )?;
+        Ok(samples)
     }
 
     fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> Result<Matrix> {
-        Ok(crate::gp::lkgp::predict_mean(theta, data, xq, &self.cfg)?.0)
+        let steps: Vec<usize> = (0..data.m()).collect();
+        let mut post = Posterior::new(Arc::new(data.clone()), theta.to_vec(), self.cfg.clone());
+        match post.answer(&Query::MeanAtSteps { xq: xq.clone(), steps })? {
+            Answer::Steps(mat) => Ok(mat),
+            _ => unreachable!("MeanAtSteps answers Steps"),
+        }
     }
 
     fn name(&self) -> &'static str {

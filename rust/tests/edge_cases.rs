@@ -1,5 +1,7 @@
 //! Edge-case and failure-injection integration tests.
 
+#![allow(deprecated)] // exercises the deprecated free-function shims by design
+
 use lkgp::gp::lkgp::{Dataset, SolverCfg};
 use lkgp::gp::transforms::{XTransform, YTransform};
 use lkgp::gp::Theta;

@@ -6,6 +6,8 @@
 //! and skip themselves when artifacts are absent. The rust-engine tests
 //! always run.
 
+#![allow(deprecated)] // exercises the deprecated free-function shims by design
+
 use lkgp::gp::Theta;
 use lkgp::lcbench;
 use lkgp::linalg::Matrix;

@@ -229,7 +229,7 @@ fn backpressure_bounds_queue_depth() {
     let theta = Theta::default_packed(7);
     let pool = ServicePool::spawn(
         rust_engines(1),
-        PoolCfg { workers: 1, max_queue: 4, warm_start: true },
+        PoolCfg { workers: 1, max_queue: 4, ..Default::default() },
     );
     let mut receivers = Vec::new();
     for c in 0..20 {

@@ -1,0 +1,330 @@
+//! Session-API acceptance: every deprecated free-function shim is a
+//! bit-exact thin wrapper over the session objects, `Variance`/`Quantiles`
+//! agree with the dense Cholesky oracle, and typed query batches share one
+//! underlying solve end-to-end through the `ServicePool`.
+#![allow(deprecated)] // the parity tests exercise the deprecated shims on purpose
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use lkgp::coordinator::{CurveStore, PoolCfg, PredictClient, Registry, ServicePool, Snapshot};
+use lkgp::gp::lkgp as lkgp_fns;
+use lkgp::gp::lkgp::{Dataset, SolverCfg};
+use lkgp::gp::session::{normal_quantile, Answer, FitSession, Posterior, Query};
+use lkgp::gp::{naive, PrecondCfg, Theta};
+use lkgp::linalg::Matrix;
+use lkgp::rng::Pcg64;
+use lkgp::runtime::{Engine, RustEngine};
+
+/// Adversarial masks: fully observed, single-entry, prefix, gapped,
+/// fully-masked (padding) and final-entry-only rows, all in one dataset.
+fn adversarial_dataset(seed: u64) -> Dataset {
+    let (n, m, d) = (7usize, 6usize, 2usize);
+    let mut rng = Pcg64::new(seed);
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1) as f64).collect();
+    let mut mask = Matrix::zeros(n, m);
+    for j in 0..m {
+        mask[(0, j)] = 1.0; // fully observed
+    }
+    mask[(1, 0)] = 1.0; // single entry
+    for j in 0..3 {
+        mask[(2, j)] = 1.0; // prefix
+    }
+    mask[(3, 0)] = 1.0;
+    mask[(3, 2)] = 1.0;
+    mask[(3, 4)] = 1.0; // gaps
+    // row 4 stays fully masked (padding row — the operator must treat it
+    // as inert)
+    for j in 0..5 {
+        mask[(5, j)] = 1.0;
+    }
+    mask[(6, m - 1)] = 1.0; // final entry only
+    let mut y = Matrix::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            if mask[(i, j)] > 0.0 {
+                y[(i, j)] = -0.6 + 0.1 * j as f64 + 0.05 * rng.normal();
+            }
+        }
+    }
+    Dataset { x, t, y, mask }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn predict_final_shims_are_bit_exact_with_session() {
+    for seed in [1u64, 2, 3] {
+        let data = adversarial_dataset(seed);
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(100 + seed);
+        let xq = Matrix::from_vec(3, 2, rng.uniform_vec(6, 0.0, 1.0));
+        for precond in [PrecondCfg::Off, PrecondCfg::Auto] {
+            let cfg = SolverCfg { precond, ..Default::default() };
+            let (shim_preds, shim_solves, shim_cg) =
+                lkgp_fns::predict_final_warm(&packed, &data, &xq, &cfg, None).unwrap();
+            let mut post =
+                Posterior::new(Arc::new(data.clone()), packed.clone(), cfg.clone());
+            let preds = match post.answer(&Query::MeanAtFinal { xq: xq.clone() }).unwrap() {
+                Answer::Final(v) => v,
+                other => panic!("want Final, got {other:?}"),
+            };
+            let flat_shim: Vec<f64> =
+                shim_preds.iter().flat_map(|p| [p.0, p.1]).collect();
+            let flat_post: Vec<f64> = preds.iter().flat_map(|p| [p.0, p.1]).collect();
+            assert_bits_eq(&flat_post, &flat_shim, "predictions");
+            assert_bits_eq(
+                &post.solve_buffer().unwrap(),
+                &shim_solves,
+                "solve buffer",
+            );
+            assert_eq!(post.last_cg().unwrap().mvm_rows, shim_cg.mvm_rows);
+
+            // warm variant: an alpha-only guess must agree bit-for-bit too
+            let nm = data.n() * data.m();
+            let (warm_preds, _, _) = lkgp_fns::predict_final_warm(
+                &packed,
+                &data,
+                &xq,
+                &cfg,
+                Some(&shim_solves[..nm]),
+            )
+            .unwrap();
+            let mut warm_post =
+                Posterior::new(Arc::new(data.clone()), packed.clone(), cfg.clone())
+                    .with_guess(Some(shim_solves[..nm].to_vec()));
+            let wp = match warm_post
+                .answer(&Query::MeanAtFinal { xq: xq.clone() })
+                .unwrap()
+            {
+                Answer::Final(v) => v,
+                other => panic!("want Final, got {other:?}"),
+            };
+            let flat_warm_shim: Vec<f64> =
+                warm_preds.iter().flat_map(|p| [p.0, p.1]).collect();
+            let flat_warm_post: Vec<f64> = wp.iter().flat_map(|p| [p.0, p.1]).collect();
+            assert_bits_eq(&flat_warm_post, &flat_warm_shim, "warm predictions");
+        }
+    }
+}
+
+#[test]
+fn predict_mean_shim_is_bit_exact_with_session_steps() {
+    let data = adversarial_dataset(4);
+    let packed = Theta::default_packed(2);
+    let mut rng = Pcg64::new(104);
+    let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+    let cfg = SolverCfg::default();
+    let (shim_mean, shim_cg) = lkgp_fns::predict_mean(&packed, &data, &xq, &cfg).unwrap();
+    let mut post = Posterior::new(Arc::new(data.clone()), packed.clone(), cfg.clone());
+    let steps: Vec<usize> = (0..data.m()).collect();
+    let mean = match post
+        .answer(&Query::MeanAtSteps { xq: xq.clone(), steps })
+        .unwrap()
+    {
+        Answer::Steps(mat) => mat,
+        other => panic!("want Steps, got {other:?}"),
+    };
+    assert_bits_eq(mean.data(), shim_mean.data(), "posterior mean grid");
+    assert_eq!(post.last_cg().unwrap().mvm_rows, shim_cg.mvm_rows);
+}
+
+#[test]
+fn mll_shim_is_bit_exact_with_fit_session() {
+    let data = adversarial_dataset(5);
+    let mut packed = Theta::default_packed(2);
+    packed[0] -= 0.3;
+    let nm = data.n() * data.m();
+    let cfg = SolverCfg::default();
+    let probes = Pcg64::new(9).rademacher_vec(cfg.probes * nm);
+
+    let mut cache = None;
+    let (shim_eval, shim_solves) =
+        lkgp_fns::mll_value_grad_cached(&packed, &data, &probes, &cfg, None, &mut cache).unwrap();
+    let mut session =
+        FitSession::with_probes(Arc::new(data.clone()), cfg.clone(), probes.clone()).unwrap();
+    let eval = session.eval(&packed).unwrap();
+    assert_eq!(eval.value.to_bits(), shim_eval.value.to_bits());
+    assert_bits_eq(&eval.grad, &shim_eval.grad, "gradient");
+    assert_bits_eq(session.warm_buffer().unwrap(), &shim_solves, "warm buffer");
+
+    // a warm second step must agree too (the shim threads state by hand,
+    // the session owns it)
+    let mut packed2 = packed.clone();
+    packed2[1] += 0.05;
+    let (shim_eval2, _) = lkgp_fns::mll_value_grad_cached(
+        &packed2,
+        &data,
+        &probes,
+        &cfg,
+        Some(&shim_solves),
+        &mut cache,
+    )
+    .unwrap();
+    let eval2 = session.eval(&packed2).unwrap();
+    assert_eq!(eval2.value.to_bits(), shim_eval2.value.to_bits());
+    assert_bits_eq(&eval2.grad, &shim_eval2.grad, "warm gradient");
+    assert_eq!(session.evals(), 2);
+}
+
+#[test]
+fn posterior_samples_shim_is_bit_exact_with_curve_samples_query() {
+    let data = adversarial_dataset(6);
+    let packed = Theta::default_packed(2);
+    let mut rng = Pcg64::new(106);
+    let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+    let cfg = SolverCfg::default();
+    let seed = 77u64;
+    let mut shim_rng = Pcg64::new(seed);
+    let shim = lkgp_fns::posterior_samples(&packed, &data, &xq, 3, &cfg, &mut shim_rng).unwrap();
+    let mut post = Posterior::new(Arc::new(data.clone()), packed.clone(), cfg.clone());
+    let samples = match post
+        .answer(&Query::CurveSamples { xq: xq.clone(), n: 3, seed })
+        .unwrap()
+    {
+        Answer::Curves(s) => s,
+        other => panic!("want Curves, got {other:?}"),
+    };
+    assert_eq!(samples.len(), shim.len());
+    for (a, b) in samples.iter().zip(&shim) {
+        assert_bits_eq(a.data(), b.data(), "sample");
+    }
+}
+
+/// Dense 6x5 problem, fully observed: session `Variance`/`Quantiles`
+/// against the naive dense-Cholesky engine.
+#[test]
+fn variance_and_quantiles_match_dense_oracle() {
+    let (n, m, d) = (6usize, 5usize, 2usize);
+    let mut rng = Pcg64::new(31);
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1) as f64).collect();
+    let mask = Matrix::from_vec(n, m, vec![1.0; n * m]);
+    let mut y = Matrix::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            y[(i, j)] = -0.8 + 0.15 * j as f64 + 0.05 * rng.normal();
+        }
+    }
+    let data = Dataset { x, t, y, mask };
+    let packed = Theta::default_packed(d);
+    let xq = Matrix::from_vec(3, d, rng.uniform_vec(3 * d, 0.0, 1.0));
+    let naive_preds = naive::predict_final_exact(&packed, &data, &xq).unwrap();
+
+    let cfg = SolverCfg { cg_tol: 1e-11, ..Default::default() };
+    let mut post = Posterior::new(Arc::new(data), packed, cfg);
+    let answers = post
+        .answer_batch(&[
+            Query::Variance { xq: xq.clone() },
+            Query::Quantiles { xq: xq.clone(), ps: vec![0.5, 0.975] },
+        ])
+        .unwrap();
+    assert_eq!(post.solve_calls(), 1, "variance + quantiles share one solve");
+    match &answers[0] {
+        Answer::Variance(vars) => {
+            for (v, want) in vars.iter().zip(&naive_preds) {
+                assert!(
+                    (v - want.1).abs() < 1e-6,
+                    "variance {v} vs dense {}",
+                    want.1
+                );
+            }
+        }
+        other => panic!("want Variance, got {other:?}"),
+    }
+    match &answers[1] {
+        Answer::Quantiles(q) => {
+            for (i, want) in naive_preds.iter().enumerate() {
+                // p = 0.5 is exactly the predictive mean
+                assert!((q[(i, 0)] - want.0).abs() < 1e-6, "median vs mean");
+                // p = 0.975 is mean + 1.959964 sd (known z-value)
+                let z = 1.959963985;
+                let want_hi = want.0 + z * want.1.sqrt();
+                assert!(
+                    (q[(i, 1)] - want_hi).abs() < 1e-5,
+                    "q97.5 {} vs dense {want_hi}",
+                    q[(i, 1)]
+                );
+            }
+        }
+        other => panic!("want Quantiles, got {other:?}"),
+    }
+    let _ = normal_quantile(0.5); // exercised transitively; keep the import honest
+}
+
+/// Acceptance: the ServicePool answers >= 3 distinct Query variants
+/// through one shard with a single underlying solve per generation,
+/// verified via the engine-solve counter, `cg_mvm_rows`, and the keyed
+/// warm-cache counters.
+#[test]
+fn pool_answers_three_variants_with_single_solve_per_generation() {
+    fn snapshot() -> Snapshot {
+        let mut reg = Registry::new();
+        for i in 0..6 {
+            let id = reg.add(vec![i as f64 * 0.15, 0.9 - i as f64 * 0.1]);
+            for j in 0..3 + i % 3 {
+                reg.observe(id, 0.5 + 0.04 * j as f64 + 0.01 * i as f64, 8).unwrap();
+            }
+        }
+        CurveStore::new(8).snapshot(&reg).unwrap()
+    }
+    let engines: Vec<Box<dyn Engine>> = vec![Box::<RustEngine>::default()];
+    let pool = ServicePool::spawn(engines, PoolCfg { workers: 1, ..Default::default() });
+    let handle = pool.handle(0);
+    let snap = snapshot();
+    let theta = Theta::default_packed(2);
+    let xq = Matrix::from_vec(2, 2, vec![0.2, 0.6, 0.8, 0.3]);
+
+    let answers = handle
+        .query(
+            snap.clone(),
+            theta.clone(),
+            vec![
+                Query::MeanAtFinal { xq: xq.clone() },
+                Query::Variance { xq: xq.clone() },
+                Query::MeanAtSteps { xq: xq.clone(), steps: vec![0, 3, 7] },
+            ],
+        )
+        .unwrap();
+    assert_eq!(answers.len(), 3);
+    match (&answers[0], &answers[1], &answers[2]) {
+        (Answer::Final(f), Answer::Variance(v), Answer::Steps(s)) => {
+            assert_eq!(f.len(), 2);
+            assert_eq!(v.len(), 2);
+            assert_eq!((s.rows(), s.cols()), (2, 3));
+            for ((mu, var), vv) in f.iter().zip(v) {
+                assert!(mu.is_finite());
+                assert!(*var > 0.0);
+                assert_eq!(var.to_bits(), vv.to_bits(), "shared solve, same variance");
+            }
+        }
+        other => panic!("unexpected answer shapes: {other:?}"),
+    }
+    let stats = pool.stats(0);
+    assert_eq!(
+        stats.engine_solves.load(Ordering::Relaxed),
+        1,
+        "three variants, one underlying solve"
+    );
+    let rows_first = stats.cg_mvm_rows.load(Ordering::Relaxed);
+    assert!(rows_first > 0, "solve did real MVM work");
+    assert_eq!(stats.warm_cache_misses.load(Ordering::Relaxed), 1);
+
+    // same generation again: exact keyed-cache hit, near-free solve
+    let again = handle
+        .query(snap, theta, vec![Query::MeanAtFinal { xq }])
+        .unwrap();
+    assert_eq!(again.len(), 1);
+    assert!(stats.warm_cache_hits.load(Ordering::Relaxed) >= 1);
+    let rows_second = stats.cg_mvm_rows.load(Ordering::Relaxed) - rows_first;
+    assert!(
+        rows_second * 2 <= rows_first,
+        "warm repeat must be far cheaper: {rows_second} vs {rows_first}"
+    );
+}
