@@ -43,6 +43,7 @@ fn main() -> lkgp::Result<()> {
     let tasks = presets.len();
     let workers = args.get_usize("workers", tasks);
     let warm = args.get("warm").unwrap_or("on") != "off";
+    let replicas = args.get_usize("replicas", PoolCfg::default().max_replicas);
     let precond_arg = args.get("precond").unwrap_or("auto");
     let precond = PrecondCfg::parse(precond_arg).ok_or_else(|| {
         lkgp::LkgpError::Coordinator(format!(
@@ -59,9 +60,17 @@ fn main() -> lkgp::Result<()> {
         .collect();
     let pool = ServicePool::spawn(
         engines,
-        PoolCfg { workers, warm_start: warm, ..Default::default() },
+        PoolCfg {
+            workers,
+            warm_start: warm,
+            max_replicas: replicas,
+            ..Default::default()
+        },
     );
-    println!("pool: {tasks} shards, {workers} workers, warm_start={warm}, precond={precond:?}\n");
+    println!(
+        "pool: {tasks} shards, {workers} workers, warm_start={warm}, \
+         max_replicas={replicas}, precond={precond:?}\n"
+    );
 
     let t0 = std::time::Instant::now();
     let mut results: Vec<(usize, &'static str, RunReport, f64)> = Vec::new();
@@ -152,12 +161,14 @@ fn main() -> lkgp::Result<()> {
         let warm_hits = stats.warm_hits.load(std::sync::atomic::Ordering::Relaxed);
         let cg_iters = stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed);
         let mvm_rows = stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed);
+        let replica_hits = stats.replica_hits.load(std::sync::atomic::Ordering::Relaxed);
+        let replica_solves = stats.replica_solves.load(std::sync::atomic::Ordering::Relaxed);
         let p50 = stats.latency.lock().unwrap().quantile_micros(0.5);
         let p99 = stats.latency.lock().unwrap().quantile_micros(0.99);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} \
-             batch_factor={:.2} warm_hits={warm_hits} cg_iters={cg_iters} \
-             mvm_rows={mvm_rows} p50={p50}us p99={p99}us",
+             batch_factor={:.2} warm_hits={warm_hits} replicas={replica_hits}h/{replica_solves}s \
+             cg_iters={cg_iters} mvm_rows={mvm_rows} p50={p50}us p99={p99}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
@@ -171,6 +182,8 @@ fn main() -> lkgp::Result<()> {
             ("epochs", Json::Num(report.epochs_spent as f64)),
             ("batch_factor", Json::Num(report.batch_factor)),
             ("warm_hits", Json::Num(warm_hits as f64)),
+            ("replica_hits", Json::Num(replica_hits as f64)),
+            ("replica_solves", Json::Num(replica_solves as f64)),
             ("cg_iters", Json::Num(cg_iters as f64)),
             ("cg_mvm_rows", Json::Num(mvm_rows as f64)),
             ("p50_us", Json::Num(p50 as f64)),
@@ -183,6 +196,7 @@ fn main() -> lkgp::Result<()> {
         ("tasks", Json::Num(tasks as f64)),
         ("workers", Json::Num(workers as f64)),
         ("warm_start", Json::Bool(warm)),
+        ("max_replicas", Json::Num(replicas as f64)),
         ("precond", Json::Str(format!("{precond:?}"))),
         ("wall_seconds", Json::Num(wall.as_secs_f64())),
         ("shards", Json::Arr(shard_json)),

@@ -150,6 +150,9 @@ fn main() -> lkgp::Result<()> {
     // ---- multi-query amortization through the session API ----
     let queries_json = queries_amortization(&mut table);
 
+    // ---- read-only replica shards vs the serialized single-shard path ----
+    let replicas_json = replica_burst(&mut table);
+
     // ---- 4-shard pool vs 4 isolated services, same thread budget ----
     let (pool_rps, isolated_rps) = pool_vs_isolated(&mut table, quick);
 
@@ -189,7 +192,208 @@ fn main() -> lkgp::Result<()> {
     println!("wrote {}", root.join("BENCH_pcg.json").display());
     std::fs::write(root.join("BENCH_queries.json"), queries_json.pretty())?;
     println!("wrote {}", root.join("BENCH_queries.json").display());
+    std::fs::write(root.join("BENCH_replicas.json"), replicas_json.pretty())?;
+    println!("wrote {}", root.join("BENCH_replicas.json").display());
     Ok(())
+}
+
+/// Read-only replica shards on a single-task read burst (the tentpole of
+/// the replica redesign): one shard, four workers, the writer pinned on a
+/// refit, then a burst of concurrent typed-query batches against the
+/// already-fitted generation. With `max_replicas = 0` the burst serializes
+/// behind the refit (the historical behavior); with replicas enabled,
+/// spare workers answer it from the shard's cached `WarmStart` lineage via
+/// forked `Posterior`s. The returned JSON carries the gates ci.sh
+/// enforces:
+///
+/// * `assert_replica_speedup`         — the replica burst finishes >= 2x
+///   faster than the serialized burst (and replicas actually served it)
+/// * `assert_replica_no_extra_solves` — the replica burst adds ZERO
+///   underlying solves, and total solves never exceed the serialized run
+/// * `assert_replica_parity`          — every replica answer is
+///   bit-identical to the writer's answers for the same
+///   (generation, theta, query)
+fn replica_burst(table: &mut Table) -> Json {
+    use lkgp::coordinator::PredictClient;
+    use lkgp::gp::session::Answer;
+    use lkgp::gp::session::Query;
+    use std::sync::atomic::Ordering;
+
+    const BURST: usize = 6;
+
+    struct Variant {
+        burst_us: u128,
+        total_us: u128,
+        burst_solves: u64,
+        total_solves: u64,
+        replica_hits: u64,
+        replica_solves: u64,
+        retires: u64,
+        parity: bool,
+    }
+
+    fn answers_bits_equal(a: &[Answer], b: &[Answer]) -> bool {
+        if a.len() != b.len() {
+            return false;
+        }
+        a.iter().zip(b).all(|(x, y)| match (x, y) {
+            (Answer::Final(u), Answer::Final(v)) => {
+                u.len() == v.len()
+                    && u.iter().zip(v).all(|(p, q)| {
+                        p.0.to_bits() == q.0.to_bits() && p.1.to_bits() == q.1.to_bits()
+                    })
+            }
+            (Answer::Variance(u), Answer::Variance(v)) => {
+                u.len() == v.len()
+                    && u.iter().zip(v).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            (Answer::Quantiles(u), Answer::Quantiles(v))
+            | (Answer::Steps(u), Answer::Steps(v)) => {
+                u.rows() == v.rows()
+                    && u.cols() == v.cols()
+                    && u.data()
+                        .iter()
+                        .zip(v.data())
+                        .all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            _ => false,
+        })
+    }
+
+    fn run(max_replicas: usize) -> Variant {
+        let snap = serving_snapshot(7);
+        let theta = Theta::default_packed(3);
+        let mut rng = Pcg64::new(8);
+        let xq = Matrix::from_vec(8, 3, rng.uniform_vec(24, 0.0, 1.0));
+        let queries = vec![
+            Query::MeanAtFinal { xq: xq.clone() },
+            Query::Variance { xq: xq.clone() },
+            Query::Quantiles { xq: xq.clone(), ps: vec![0.1, 0.5, 0.9] },
+        ];
+        let engines: Vec<Box<dyn Engine>> =
+            vec![Box::<RustEngine>::default() as Box<dyn Engine>];
+        let pool = ServicePool::spawn(
+            engines,
+            PoolCfg {
+                workers: 4,
+                warm_start: true,
+                max_replicas,
+                ..Default::default()
+            },
+        );
+        let handle = pool.handle(0);
+        let t_all = Instant::now();
+        // 1. fit the generation once on the writer (this also caches the
+        //    WarmStart lineage replicas fork from) — the parity reference
+        let reference = handle
+            .query(snap.clone(), theta.clone(), queries.clone())
+            .expect("reference query");
+        let solves_before = pool.stats(0).engine_solves.load(Ordering::Relaxed);
+        // 2. pin the writer on a refit (a write: strictly ordered on the
+        //    writer) and wait until a worker has claimed it
+        let (ftx, frx) = channel();
+        pool.submit(
+            0,
+            Request::Refit {
+                snapshot: snap.clone(),
+                theta0: theta.clone(),
+                seed: 1,
+                resp: ftx,
+            },
+        )
+        .expect("submit refit");
+        while pool.queue_depth(0) > 0 {
+            std::thread::yield_now();
+        }
+        // 3. concurrent read burst against the already-fitted generation
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for _ in 0..BURST {
+            let (rtx, rrx) = channel();
+            pool.submit(
+                0,
+                Request::Query {
+                    snapshot: snap.clone(),
+                    theta: theta.clone(),
+                    queries: queries.clone(),
+                    resp: rtx,
+                },
+            )
+            .expect("submit burst");
+            rxs.push(rrx);
+        }
+        let answers: Vec<Vec<Answer>> = rxs
+            .into_iter()
+            .map(|r| r.recv().expect("burst recv").expect("burst answers"))
+            .collect();
+        let burst_us = t0.elapsed().as_micros();
+        let burst_solves =
+            pool.stats(0).engine_solves.load(Ordering::Relaxed) - solves_before;
+        frx.recv().expect("refit recv").expect("refit theta");
+        let total_us = t_all.elapsed().as_micros();
+        let stats = pool.stats(0);
+        Variant {
+            burst_us,
+            total_us,
+            burst_solves,
+            total_solves: stats.engine_solves.load(Ordering::Relaxed),
+            replica_hits: stats.replica_hits.load(Ordering::Relaxed),
+            replica_solves: stats.replica_solves.load(Ordering::Relaxed),
+            retires: stats.stale_replica_retires.load(Ordering::Relaxed),
+            parity: answers.iter().all(|a| answers_bits_equal(a, &reference)),
+        }
+    }
+
+    let serialized = run(0);
+    let replicas = run(3);
+
+    println!(
+        "\nreplica burst (1 task, 4 workers, {BURST} concurrent batches, writer pinned on a \
+         refit): serialized {}us vs replicas {}us ({} replica-served groups, {} replica \
+         solves, {} retires)",
+        serialized.burst_us,
+        replicas.burst_us,
+        replicas.replica_hits,
+        replicas.replica_solves,
+        replicas.retires,
+    );
+    for (name, v) in [("serialized", &serialized), ("replicas", &replicas)] {
+        table.row(vec![
+            format!("replica_burst_{name}"),
+            BURST.to_string(),
+            v.burst_us.to_string(),
+            format!("solves={} hits={}", v.total_solves, v.replica_hits),
+        ]);
+    }
+
+    let speedup = serialized.burst_us >= replicas.burst_us.saturating_mul(2)
+        && replicas.replica_hits >= 1;
+    let no_extra =
+        replicas.burst_solves == 0 && replicas.total_solves <= serialized.total_solves;
+    let parity = replicas.parity && serialized.parity;
+    let variant_json = |v: &Variant| {
+        Json::obj(vec![
+            ("burst_us", Json::Num(v.burst_us as f64)),
+            ("total_us", Json::Num(v.total_us as f64)),
+            ("burst_solves", Json::Num(v.burst_solves as f64)),
+            ("engine_solves", Json::Num(v.total_solves as f64)),
+            ("replica_hits", Json::Num(v.replica_hits as f64)),
+            ("replica_solves", Json::Num(v.replica_solves as f64)),
+            ("stale_replica_retires", Json::Num(v.retires as f64)),
+            ("parity", Json::Bool(v.parity)),
+        ])
+    };
+    Json::obj(vec![
+        ("bench", Json::Str("replicas".into())),
+        ("tasks", Json::Num(1.0)),
+        ("workers", Json::Num(4.0)),
+        ("burst", Json::Num(BURST as f64)),
+        ("serialized", variant_json(&serialized)),
+        ("replicas", variant_json(&replicas)),
+        ("assert_replica_speedup", Json::Bool(speedup)),
+        ("assert_replica_no_extra_solves", Json::Bool(no_extra)),
+        ("assert_replica_parity", Json::Bool(parity)),
+    ])
 }
 
 /// Multi-query amortization through the session API (the tentpole of the

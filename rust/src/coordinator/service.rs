@@ -34,8 +34,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::gp::session::{self, Answer, Query};
-use crate::gp::Theta;
+use crate::gp::session::{self, Answer, Posterior, Query};
+use crate::gp::{SolverCfg, Theta};
 use crate::linalg::Matrix;
 use crate::metrics::LatencyHist;
 use crate::runtime::Engine;
@@ -110,9 +110,21 @@ pub struct ServiceStats {
     /// the snapshot's own, or started cold).
     pub warm_cache_misses: AtomicU64,
     /// Underlying batched solves reported by the engine
-    /// (`QueryOutcome::solves`): with coalescing plus the session layer,
-    /// many queries amortize into few solves.
+    /// (`QueryOutcome::solves`) — plus, for pool shards, the solves run by
+    /// read-only replicas: with coalescing, the session layer, and replica
+    /// lineage reuse, many queries amortize into few solves.
     pub engine_solves: AtomicU64,
+    /// Coalesced query groups answered by a read-only replica instead of
+    /// the writer shard (replica fast path + replica solves).
+    pub replica_hits: AtomicU64,
+    /// Underlying solves replicas actually paid (0 when the cached lineage
+    /// covered the queries; also counted into `engine_solves`).
+    pub replica_solves: AtomicU64,
+    /// Replica batches retired because a writer advanced the shard's
+    /// generation fence mid-serve: the replica's answers were discarded
+    /// and the requests were handed back to the writer, so no stale
+    /// replica answer is ever delivered.
+    pub stale_replica_retires: AtomicU64,
 }
 
 impl ServiceStats {
@@ -189,6 +201,16 @@ impl WarmLru {
         Some(w)
     }
 
+    /// Exact-generation lookup without touching recency — the read-only
+    /// replica path, so replica traffic never perturbs the writer's
+    /// eviction order.
+    fn peek(&self, generation: u64) -> Option<Arc<WarmStart>> {
+        self.entries
+            .iter()
+            .find(|(g, _)| *g == generation)
+            .map(|(_, w)| w.clone())
+    }
+
     /// Most-recently-used lineage (the historical single-slot semantics).
     fn latest(&self) -> Option<&Arc<WarmStart>> {
         self.entries.first().map(|(_, w)| w)
@@ -206,11 +228,13 @@ impl WarmLru {
     }
 }
 
-/// An engine plus its keyed warm-start cache; exclusive to one worker at
-/// a time.
+/// An engine plus its keyed warm-start cache; the engine is exclusive to
+/// one worker at a time, while the cache sits behind its own short-lived
+/// lock so read-only replicas can peek lineage while the writer computes
+/// (the writer never holds the cache lock across an engine call).
 struct EngineSlot {
     engine: Box<dyn Engine>,
-    warm: WarmLru,
+    warm: Arc<Mutex<WarmLru>>,
 }
 
 /// How a pending query batch's answers are delivered: raw typed answers,
@@ -272,14 +296,17 @@ fn flush_queries(
         // Warm lineage: exact generation from the keyed LRU, else the
         // most-recent entry (cross-generation embed by trial id), else the
         // snapshot's own lineage.
-        let lineage: Option<Arc<WarmStart>> = match slot.warm.get(gen0) {
-            Some(w) => {
-                stats.warm_cache_hits.fetch_add(1, Ordering::Relaxed);
-                Some(w)
-            }
-            None => {
-                stats.warm_cache_misses.fetch_add(1, Ordering::Relaxed);
-                slot.warm.latest().cloned().or_else(|| snap.warm.clone())
+        let lineage: Option<Arc<WarmStart>> = {
+            let mut warm = slot.warm.lock().unwrap();
+            match warm.get(gen0) {
+                Some(w) => {
+                    stats.warm_cache_hits.fetch_add(1, Ordering::Relaxed);
+                    Some(w)
+                }
+                None => {
+                    stats.warm_cache_misses.fetch_add(1, Ordering::Relaxed);
+                    warm.latest().cloned().or_else(|| snap.warm.clone())
+                }
             }
         };
         // The guess targets the batch's stacked final-step layout (the
@@ -339,7 +366,7 @@ fn flush_queries(
                     .fetch_add(solves as u64, Ordering::Relaxed);
                 match (warm_enabled, alpha) {
                     (true, Some(alpha)) => {
-                        slot.warm.put(Arc::new(WarmStart {
+                        slot.warm.lock().unwrap().put(Arc::new(WarmStart {
                             generation: snap.generation,
                             theta: theta0.clone(),
                             row_ids: (*snap.row_ids).clone(),
@@ -356,7 +383,7 @@ fn flush_queries(
                         // means nothing embeds as a guess, so solves stay
                         // cold as requested).
                         if let Some(factors) = out_precond {
-                            slot.warm.put(Arc::new(WarmStart {
+                            slot.warm.lock().unwrap().put(Arc::new(WarmStart {
                                 generation: snap.generation,
                                 theta: theta0.clone(),
                                 row_ids: (*snap.row_ids).clone(),
@@ -369,25 +396,7 @@ fn flush_queries(
                         }
                     }
                 }
-                let mut answers = answers.into_iter();
-                for (reply, len) in replies {
-                    let span: Vec<Answer> = answers.by_ref().take(len).collect();
-                    match reply {
-                        PendingReply::Answers(tx) => {
-                            let _ = tx.send(Ok(span));
-                        }
-                        PendingReply::Preds(tx) => {
-                            let send = match span.into_iter().next() {
-                                Some(Answer::Final(v)) => Ok(v),
-                                _ => Err(crate::LkgpError::Coordinator(
-                                    "engine answered PredictFinal with a non-Final answer"
-                                        .into(),
-                                )),
-                            };
-                            let _ = tx.send(send);
-                        }
-                    }
-                }
+                scatter_answers(replies, answers);
             }
             Err(e) if replies.len() == 1 => {
                 let msg = e.to_string();
@@ -449,6 +458,31 @@ fn flush_queries(
     }
 }
 
+/// Scatter a flat answer vector back to per-caller replies (each reply
+/// consumes `len` answers, in submission order). Shared by the writer's
+/// coalesced flush and the replica serving path so the two can never
+/// disagree on response framing.
+fn scatter_answers(replies: Vec<(PendingReply, usize)>, answers: Vec<Answer>) {
+    let mut answers = answers.into_iter();
+    for (reply, len) in replies {
+        let span: Vec<Answer> = answers.by_ref().take(len).collect();
+        match reply {
+            PendingReply::Answers(tx) => {
+                let _ = tx.send(Ok(span));
+            }
+            PendingReply::Preds(tx) => {
+                let send = match span.into_iter().next() {
+                    Some(Answer::Final(v)) => Ok(v),
+                    _ => Err(crate::LkgpError::Coordinator(
+                        "engine answered PredictFinal with a non-Final answer".into(),
+                    )),
+                };
+                let _ = tx.send(send);
+            }
+        }
+    }
+}
+
 /// Deliver an error string to either reply flavor.
 fn send_error(reply: PendingReply, msg: &str) {
     match reply {
@@ -465,11 +499,12 @@ fn send_error(reply: PendingReply, msg: &str) {
 /// the most-recent cache entry, then the snapshot lineage, then the prior
 /// mean.
 fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
-    let lineage = slot
-        .warm
-        .get(snapshot.generation)
-        .or_else(|| slot.warm.latest().cloned())
-        .or_else(|| snapshot.warm.clone());
+    let lineage = {
+        let mut warm = slot.warm.lock().unwrap();
+        warm.get(snapshot.generation)
+            .or_else(|| warm.latest().cloned())
+    }
+    .or_else(|| snapshot.warm.clone());
     if let Some(w) = lineage {
         if w.theta.len() == d + 3 {
             return w.theta.clone();
@@ -482,10 +517,10 @@ fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> 
 /// alpha and factored preconditioner (both solved under nearby
 /// hyper-parameters, so both remain excellent across the refit).
 fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64>) {
-    let base = slot
-        .warm
+    let mut warm = slot.warm.lock().unwrap();
+    let base = warm
         .get(snapshot.generation)
-        .or_else(|| slot.warm.latest().cloned());
+        .or_else(|| warm.latest().cloned());
     // Keep the base entry's own generation: the alpha/cross it carries
     // were solved under THAT generation, and re-keying it would make the
     // exact-generation hit counters lie about lineage provenance.
@@ -502,7 +537,7 @@ fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64
             precond: None,
         },
     };
-    slot.warm.put(Arc::new(updated));
+    warm.put(Arc::new(updated));
 }
 
 /// Process one drained batch of requests against an engine slot. Returns
@@ -728,7 +763,10 @@ impl Drop for PredictionService {
 fn worker_loop(engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<ServiceStats>) {
     // single-task service: cold solves (warm_enabled = false below), so a
     // one-entry cache only carries preconditioner lineage
-    let mut slot = EngineSlot { engine, warm: WarmLru::new(1) };
+    let mut slot = EngineSlot {
+        engine,
+        warm: Arc::new(Mutex::new(WarmLru::new(1))),
+    };
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -762,6 +800,14 @@ pub struct PoolCfg {
     /// 1 reproduces the historical latest-only cache; a few entries let
     /// mixed-generation dashboard traffic warm-hit old generations.
     pub warm_cache: usize,
+    /// Read-only replicas allowed per task shard (0 disables). While a
+    /// writer shard is busy, spare workers may claim queued read-only
+    /// `Request::Query`/`PredictFinal` traffic for an already-fitted
+    /// generation and answer it from a `Posterior` forked off the shard's
+    /// cached `WarmStart` lineage — writes (refits) stay strictly ordered
+    /// on the writer, and a generation fence retires replicas whose
+    /// generation a writer has advanced past (see docs/serving.md).
+    pub max_replicas: usize,
 }
 
 impl Default for PoolCfg {
@@ -776,6 +822,7 @@ impl Default for PoolCfg {
             max_queue: 1024,
             warm_start: true,
             warm_cache: 4,
+            max_replicas: 2,
         }
     }
 }
@@ -784,8 +831,13 @@ struct PoolQueues {
     pending: Vec<VecDeque<Request>>,
     /// A shard is busy while a worker processes its drained batch; the
     /// flag serializes engine access per shard and preserves per-shard
-    /// request order.
+    /// request order for everything the writer runs. Read-only replica
+    /// serving is the one deliberate exception (reads commute; see
+    /// `try_steal_reads`).
     busy: Vec<bool>,
+    /// Live read-only replicas per shard (capped by
+    /// `PoolCfg::max_replicas`).
+    replicas: Vec<usize>,
     /// Round-robin scan start so a continuously-loaded low-index shard
     /// cannot starve higher-index shards when workers are scarce.
     cursor: usize,
@@ -799,9 +851,25 @@ struct PoolShared {
     /// Submitters wait here for queue space (backpressure).
     space_cv: Condvar,
     shards: Vec<Mutex<EngineSlot>>,
+    /// Each shard's keyed warm-start cache, shared between the writer
+    /// (same `Arc` lives in the shard's `EngineSlot`) and read-only
+    /// replicas. Lock order where both are held: `queues` before `warm`;
+    /// nothing ever takes `queues` while holding a `warm` lock.
+    warm: Vec<Arc<Mutex<WarmLru>>>,
+    /// Per-shard generation fence: the newest generation any write
+    /// (refit) has been enqueued for. Replicas only serve reads at or
+    /// beyond the fence and re-check it immediately before delivering, so
+    /// a replica never answers a generation a writer has advanced past.
+    fences: Vec<AtomicU64>,
+    /// Per-shard solver config for replica `Posterior`s, captured from
+    /// `Engine::session_cfg` at spawn (`None` disables replicas for that
+    /// shard — e.g. artifact engines whose answers don't come from
+    /// `gp::session`).
+    session_cfgs: Vec<Option<SolverCfg>>,
     stats: Vec<Arc<ServiceStats>>,
     max_queue: usize,
     warm_start: bool,
+    max_replicas: usize,
 }
 
 /// Multi-task sharded prediction service: one engine shard per task id, a
@@ -816,26 +884,35 @@ impl ServicePool {
     /// Spawn a pool with one shard per engine and `cfg.workers` shared
     /// worker threads.
     pub fn spawn(engines: Vec<Box<dyn Engine>>, cfg: PoolCfg) -> Self {
+        let session_cfgs: Vec<Option<SolverCfg>> =
+            engines.iter().map(|e| e.session_cfg()).collect();
+        let warm: Vec<Arc<Mutex<WarmLru>>> = (0..engines.len())
+            .map(|_| Arc::new(Mutex::new(WarmLru::new(cfg.warm_cache))))
+            .collect();
         let shards: Vec<Mutex<EngineSlot>> = engines
             .into_iter()
-            .map(|engine| {
-                Mutex::new(EngineSlot { engine, warm: WarmLru::new(cfg.warm_cache) })
-            })
+            .zip(&warm)
+            .map(|(engine, w)| Mutex::new(EngineSlot { engine, warm: w.clone() }))
             .collect();
         let n = shards.len();
         let shared = Arc::new(PoolShared {
             queues: Mutex::new(PoolQueues {
                 pending: (0..n).map(|_| VecDeque::new()).collect(),
                 busy: vec![false; n],
+                replicas: vec![0; n],
                 cursor: 0,
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             shards,
+            warm,
+            fences: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            session_cfgs,
             stats: (0..n).map(|_| Arc::new(ServiceStats::default())).collect(),
             max_queue: cfg.max_queue.max(1),
             warm_start: cfg.warm_start,
+            max_replicas: cfg.max_replicas,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -981,6 +1058,12 @@ fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<(
             "Shutdown is not routable through the pool; drop the pool instead".into(),
         ));
     }
+    // Writes advance the shard's generation fence at enqueue time — the
+    // earliest point a replica can learn that its generation is about to
+    // be superseded.
+    if let Request::Refit { snapshot, .. } = &req {
+        shared.fences[shard].fetch_max(snapshot.generation, Ordering::Relaxed);
+    }
     let depth = {
         let mut q = shared.queues.lock().unwrap();
         loop {
@@ -1002,11 +1085,334 @@ fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<(
     Ok(())
 }
 
+/// What a pool worker claimed: exclusive writer access to a shard's
+/// drained queue, or a read-only replica group stolen from a busy shard.
+enum PoolWork {
+    Writer(usize, Vec<Request>),
+    Replica {
+        shard: usize,
+        generation: u64,
+        reads: Vec<PendingQuery>,
+    },
+}
+
+/// Replica claim: from a busy shard's queue, steal every read-only
+/// request (`Query` / `PredictFinal`) of one *servable* generation — a
+/// generation at or beyond the shard's write fence whose lineage (cached
+/// `WarmStart` with a converged alpha) already sits in the warm cache.
+/// Writes and reads of other generations stay queued in order for the
+/// writer. Returns None when nothing is stealable.
+fn try_steal_reads(
+    q: &mut PoolQueues,
+    shared: &PoolShared,
+) -> Option<(usize, u64, Vec<PendingQuery>)> {
+    if shared.max_replicas == 0 {
+        return None;
+    }
+    let k = q.pending.len();
+    for si in 0..k {
+        if !q.busy[si]
+            || q.pending[si].is_empty()
+            || q.replicas[si] >= shared.max_replicas
+            || shared.session_cfgs[si].is_none()
+        {
+            continue;
+        }
+        // Find the first read whose generation passes the fence and is
+        // already fitted (exact-generation lineage with an alpha). The
+        // warm lock nests inside the queues lock here; the reverse order
+        // never occurs (see PoolShared::warm).
+        let fence = shared.fences[si].load(Ordering::Relaxed);
+        let mut target: Option<u64> = None;
+        // Memoize the lineage check per distinct generation: a deep read
+        // backlog must not turn one scan into a warm-lock acquisition per
+        // queued request (this whole scan runs under the queues lock).
+        let mut checked: Vec<(u64, bool)> = Vec::new();
+        for req in q.pending[si].iter() {
+            let g = match req {
+                Request::Query { snapshot, .. } | Request::PredictFinal { snapshot, .. } => {
+                    snapshot.generation
+                }
+                _ => continue,
+            };
+            if g < fence {
+                continue;
+            }
+            let fitted = match checked.iter().find(|(cg, _)| *cg == g) {
+                Some(&(_, fitted)) => fitted,
+                None => {
+                    let fitted = shared.warm[si]
+                        .lock()
+                        .unwrap()
+                        .peek(g)
+                        .map_or(false, |w| !w.alpha.is_empty());
+                    checked.push((g, fitted));
+                    fitted
+                }
+            };
+            if fitted {
+                target = Some(g);
+                break;
+            }
+        }
+        let Some(g) = target else { continue };
+        let mut stolen = Vec::new();
+        let mut keep = VecDeque::with_capacity(q.pending[si].len());
+        for req in q.pending[si].drain(..) {
+            match req {
+                Request::Query { snapshot, theta, queries, resp }
+                    if snapshot.generation == g =>
+                {
+                    stolen.push(PendingQuery {
+                        snapshot,
+                        theta,
+                        queries,
+                        reply: PendingReply::Answers(resp),
+                    });
+                }
+                Request::PredictFinal { snapshot, theta, xq, resp }
+                    if snapshot.generation == g =>
+                {
+                    stolen.push(PendingQuery {
+                        snapshot,
+                        theta,
+                        queries: vec![Query::MeanAtFinal { xq }],
+                        reply: PendingReply::Preds(resp),
+                    });
+                }
+                other => keep.push_back(other),
+            }
+        }
+        q.pending[si] = keep;
+        q.replicas[si] += 1;
+        return Some((si, g, stolen));
+    }
+    None
+}
+
+/// Hand a replica's unserved reads back to the writer queue (front,
+/// original order preserved) — the retire path, and the fallback when the
+/// lineage disappeared between claim and serve.
+fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
+    {
+        let mut q = shared.queues.lock().unwrap();
+        for p in reads.into_iter().rev() {
+            let req = match p.reply {
+                PendingReply::Answers(tx) => Request::Query {
+                    snapshot: p.snapshot,
+                    theta: p.theta,
+                    queries: p.queries,
+                    resp: tx,
+                },
+                PendingReply::Preds(tx) => {
+                    let xq = match p.queries.into_iter().next() {
+                        Some(Query::MeanAtFinal { xq }) => xq,
+                        _ => unreachable!("PredictFinal reads carry one MeanAtFinal"),
+                    };
+                    Request::PredictFinal {
+                        snapshot: p.snapshot,
+                        theta: p.theta,
+                        xq,
+                        resp: tx,
+                    }
+                }
+            };
+            q.pending[shard].push_front(req);
+        }
+    }
+    shared.work_cv.notify_one();
+}
+
+/// Serve a stolen read group on a spare worker: group by theta (the
+/// generation is fixed), fork a `Posterior` off the cached lineage —
+/// covered queries answer with zero solves, anything else warm-starts
+/// from the lineage exactly like the writer would — and deliver, unless
+/// a writer advanced the shard's fence mid-serve, in which case the whole
+/// group retires back to the writer unanswered.
+fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQuery>) {
+    let stats = &shared.stats[si];
+    let cfg = shared.session_cfgs[si]
+        .as_ref()
+        .expect("replica eligibility checked session_cfg");
+    // Same per-request validation the writer applies before coalescing:
+    // malformed queries fail alone and never poison a group. A request is
+    // counted into `stats.requests` only when the replica terminally
+    // responds to it — retired/requeued reads are counted by the writer
+    // that eventually answers them, so nothing is double-counted.
+    let mut valid = Vec::with_capacity(reads.len());
+    for p in reads.drain(..) {
+        if let Some(e) = p
+            .queries
+            .iter()
+            .find_map(|qr| session::validate_query(&p.snapshot.data, qr).err())
+        {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            send_error(p.reply, &e.to_string());
+            continue;
+        }
+        valid.push(p);
+    }
+    let mut pending = valid;
+    while !pending.is_empty() {
+        let theta0 = pending[0].theta.clone();
+        let same_theta = |t: &[f64]| {
+            t.len() == theta0.len()
+                && t.iter().zip(&theta0).all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        let group: Vec<PendingQuery> = {
+            let (take, keep): (Vec<PendingQuery>, Vec<PendingQuery>) =
+                pending.drain(..).partition(|p| same_theta(&p.theta));
+            pending = keep;
+            take
+        };
+        let Some(lineage) = shared.warm[si].lock().unwrap().peek(g) else {
+            // Evicted between claim and serve (tiny window): not stale,
+            // just unlucky — hand the group back to the writer.
+            requeue_reads(shared, si, group);
+            continue;
+        };
+        let snap = group[0].snapshot.clone();
+        let mut replies: Vec<(PendingReply, usize)> = Vec::with_capacity(group.len());
+        let mut all: Vec<Query> = Vec::new();
+        for p in group {
+            replies.push((p.reply, p.queries.len()));
+            all.extend(p.queries);
+        }
+        let stacked = session::stacked_final_xq(&all);
+        let mut post = Posterior::new(snap.data.clone(), theta0.clone(), cfg.clone())
+            .with_precond(lineage.precond.clone());
+        let seeded = same_theta(&lineage.theta)
+            && lineage.m == snap.data.m()
+            && lineage.row_ids == *snap.row_ids
+            && !lineage.alpha.is_empty();
+        if seeded {
+            // Converged state of the SAME (generation, theta): covered
+            // queries answer bit-identically with zero solves.
+            post = post.with_solves(
+                lineage.alpha.clone(),
+                lineage.xq.clone(),
+                lineage.cross.clone(),
+            );
+        } else if shared.warm_start {
+            // Different theta: the lineage is only a warm *guess*, exactly
+            // what the writer's flush would embed.
+            let guess = match &stacked {
+                Some(xq) => lineage.embed_predict(&snap.row_ids, snap.data.m(), xq),
+                None => lineage.embed_alpha(&snap.row_ids, snap.data.m()),
+            };
+            post = post.with_guess(guess);
+        }
+        let t0 = Instant::now();
+        let result = post.answer_batch(&all);
+        // Generation fence: a writer advanced past g while we computed —
+        // discard the answers and hand the requests back (they carry
+        // their own snapshots, so the writer still answers them
+        // correctly; the replica just must not).
+        if shared.fences[si].load(Ordering::Relaxed) > g {
+            stats.stale_replica_retires.fetch_add(1, Ordering::Relaxed);
+            let rebuilt: Vec<PendingQuery> = {
+                let mut offs = 0usize;
+                replies
+                    .into_iter()
+                    .map(|(reply, len)| {
+                        let queries = all[offs..offs + len].to_vec();
+                        offs += len;
+                        PendingQuery {
+                            snapshot: snap.clone(),
+                            theta: theta0.clone(),
+                            queries,
+                            reply,
+                        }
+                    })
+                    .collect()
+            };
+            requeue_reads(shared, si, rebuilt);
+            continue;
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .batched_queries
+            .fetch_add(replies.len() as u64, Ordering::Relaxed);
+        stats.replica_hits.fetch_add(1, Ordering::Relaxed);
+        stats
+            .latency
+            .lock()
+            .unwrap()
+            .record(t0.elapsed().as_micros() as u64);
+        let solves = post.solve_calls() as u64;
+        stats.replica_solves.fetch_add(solves, Ordering::Relaxed);
+        stats.engine_solves.fetch_add(solves, Ordering::Relaxed);
+        stats
+            .cg_iters
+            .fetch_add(post.cg_iters() as u64, Ordering::Relaxed);
+        stats
+            .cg_mvm_rows
+            .fetch_add(post.cg_mvm_rows() as u64, Ordering::Relaxed);
+        match result {
+            Ok(answers) => {
+                stats
+                    .requests
+                    .fetch_add(replies.len() as u64, Ordering::Relaxed);
+                scatter_answers(replies, answers);
+            }
+            Err(e) => {
+                // Failure isolation, mirroring the writer: retry each
+                // request on its own forked posterior so one caller's
+                // numeric failure never errors out its neighbors. The
+                // fence is re-checked before every solo delivery — the
+                // stale-answer invariant holds on this path too, and
+                // requests superseded mid-loop retire back to the writer.
+                let msg = e.to_string();
+                if replies.len() == 1 {
+                    let (reply, _) = replies.into_iter().next().expect("one reply");
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    send_error(reply, &msg);
+                } else {
+                    let mut off = 0;
+                    let mut retired: Vec<PendingQuery> = Vec::new();
+                    for (reply, len) in replies {
+                        let span_off = off;
+                        off += len;
+                        let span = &all[span_off..span_off + len];
+                        let mut solo =
+                            Posterior::new(snap.data.clone(), theta0.clone(), cfg.clone())
+                                .with_precond(lineage.precond.clone());
+                        let res = solo.answer_batch(span);
+                        let solves = solo.solve_calls() as u64;
+                        stats.replica_solves.fetch_add(solves, Ordering::Relaxed);
+                        stats.engine_solves.fetch_add(solves, Ordering::Relaxed);
+                        if shared.fences[si].load(Ordering::Relaxed) > g {
+                            retired.push(PendingQuery {
+                                snapshot: snap.clone(),
+                                theta: theta0.clone(),
+                                queries: span.to_vec(),
+                                reply,
+                            });
+                            continue;
+                        }
+                        stats.requests.fetch_add(1, Ordering::Relaxed);
+                        match res {
+                            Ok(answers) => scatter_answers(vec![(reply, len)], answers),
+                            Err(e) => send_error(reply, &e.to_string()),
+                        }
+                    }
+                    if !retired.is_empty() {
+                        stats.stale_replica_retires.fetch_add(1, Ordering::Relaxed);
+                        requeue_reads(shared, si, retired);
+                    }
+                }
+            }
+        }
+    }
+}
+
 fn pool_worker(shared: Arc<PoolShared>) {
     loop {
-        // Claim an idle shard with pending work (round-robin from the
-        // shared cursor so no shard is starved); drain its queue.
-        let (si, batch) = {
+        // Claim work: an idle shard with pending requests (writer path,
+        // round-robin from the shared cursor so no shard is starved), or
+        // — when every pending shard is writer-busy — a read-only replica
+        // group stolen from a busy shard's queue.
+        let work = {
             let mut q = shared.queues.lock().unwrap();
             loop {
                 let k = q.pending.len();
@@ -1018,7 +1424,10 @@ fn pool_worker(shared: Arc<PoolShared>) {
                     q.busy[si] = true;
                     q.cursor = (si + 1) % k;
                     let batch: Vec<Request> = q.pending[si].drain(..).collect();
-                    break (si, batch);
+                    break PoolWork::Writer(si, batch);
+                }
+                if let Some((si, g, reads)) = try_steal_reads(&mut q, &shared) {
+                    break PoolWork::Replica { shard: si, generation: g, reads };
                 }
                 if q.shutdown {
                     return;
@@ -1027,26 +1436,49 @@ fn pool_worker(shared: Arc<PoolShared>) {
             }
         };
         shared.space_cv.notify_all();
-        // The busy flag guarantees exclusivity, so the shard lock is
-        // uncontended (it exists to satisfy Sync). A panic inside an
-        // engine call must not wedge the shard: catch it, shed the
-        // poisoned-lock state, and always clear the busy flag below.
-        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut slot = shared.shards[si]
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner());
-            process_batch(&mut slot, batch, &shared.stats[si], shared.warm_start);
-        }));
-        if run.is_err() {
-            eprintln!("lkgp: pool worker recovered from a panic on shard {si}");
-        }
-        let more = {
-            let mut q = shared.queues.lock().unwrap();
-            q.busy[si] = false;
-            !q.pending[si].is_empty()
-        };
-        if more {
-            shared.work_cv.notify_one();
+        match work {
+            PoolWork::Writer(si, batch) => {
+                // The busy flag guarantees exclusivity, so the shard lock
+                // is uncontended (it exists to satisfy Sync). A panic
+                // inside an engine call must not wedge the shard: catch
+                // it, shed the poisoned-lock state, and always clear the
+                // busy flag below.
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut slot = shared.shards[si]
+                        .lock()
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                    process_batch(&mut slot, batch, &shared.stats[si], shared.warm_start);
+                }));
+                if run.is_err() {
+                    eprintln!("lkgp: pool worker recovered from a panic on shard {si}");
+                }
+                let more = {
+                    let mut q = shared.queues.lock().unwrap();
+                    q.busy[si] = false;
+                    !q.pending[si].is_empty()
+                };
+                if more {
+                    shared.work_cv.notify_one();
+                }
+            }
+            PoolWork::Replica { shard, generation, reads } => {
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    replica_serve(&shared, shard, generation, reads);
+                }));
+                if run.is_err() {
+                    eprintln!(
+                        "lkgp: pool worker recovered from a panic on shard {shard} (replica)"
+                    );
+                }
+                let more = {
+                    let mut q = shared.queues.lock().unwrap();
+                    q.replicas[shard] = q.replicas[shard].saturating_sub(1);
+                    !q.pending[shard].is_empty()
+                };
+                if more {
+                    shared.work_cv.notify_one();
+                }
+            }
         }
     }
 }

@@ -527,6 +527,51 @@ pub(crate) fn predict_final_impl(
     Ok((out, solves, cg))
 }
 
+/// Final-value predictions from an already-converged `[alpha, w_1..w_q]`
+/// solve buffer, with NO solver involvement: rebuilds the cross-covariance
+/// columns and applies the same mean/variance arithmetic as
+/// [`predict_final_impl`], so the result is bit-identical to the solve
+/// that produced the buffer. This is how a forked read-only `Posterior`
+/// (replica shards, `docs/serving.md`) serves cached lineage without
+/// paying a CG solve. Returns `None` when the buffer shapes do not match
+/// the problem.
+pub(crate) fn preds_from_solves(
+    packed: &[f64],
+    data: &Dataset,
+    xq: &Matrix,
+    alpha: &[f64],
+    cross_solves: &[f64],
+) -> Option<Vec<(f64, f64)>> {
+    let theta = Theta::unpack(packed);
+    let (n, m) = (data.n(), data.m());
+    let nm = n * m;
+    let q = xq.rows();
+    if alpha.len() != nm || cross_solves.len() != q * nm || xq.cols() != data.d() {
+        return None;
+    }
+    let k1qx = kernels::rbf(&data.x, xq, &theta.lengthscales); // (n, q)
+    let t_last = [data.t[m - 1]];
+    let k2t = kernels::matern12(&data.t, &t_last, theta.t_lengthscale, theta.outputscale);
+    let prior_var = theta.outputscale;
+    let mut out = Vec::with_capacity(q);
+    // c_j is materialized row-by-row with the exact expression
+    // predict_final_impl uses to build its RHS, so the dot products see
+    // bitwise-identical inputs.
+    let mut c = vec![0.0; nm];
+    for j in 0..q {
+        for i in 0..n {
+            for jj in 0..m {
+                c[i * m + jj] = data.mask[(i, jj)] * k1qx[(i, j)] * k2t[(jj, 0)];
+            }
+        }
+        let w = &cross_solves[j * nm..(j + 1) * nm];
+        let mean = linalg::matrix::dot(&c, alpha);
+        let var = (prior_var - linalg::matrix::dot(&c, w)).max(1e-12) + theta.sigma2;
+        out.push((mean, var));
+    }
+    Some(out)
+}
+
 /// Posterior samples over [X; Xq] x grid via Matheron's rule.
 ///
 /// Returns `s` samples, each an (n+q, m) matrix. Thin shim over

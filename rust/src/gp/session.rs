@@ -475,6 +475,68 @@ impl Posterior {
         self
     }
 
+    /// Seed the session with an already-converged solve: `alpha` is the
+    /// flattened `(n, m)` training solve and, when `cross_xq` is given,
+    /// `cross` holds the matching flattened `(cross_xq.rows(), n*m)`
+    /// cross-covariance solves. The predictions for `cross_xq` are
+    /// recomputed from the seeded buffers with the exact arithmetic of the
+    /// original solve (no CG runs), so a query batch whose stacked
+    /// final-step matrix equals `cross_xq` answers with **zero** solves and
+    /// bit-identical results.
+    ///
+    /// The seeded state must come from a solve of the SAME `(dataset,
+    /// theta)` pair — a solve under different hyper-parameters is a warm
+    /// *guess*, not converged state; use [`Posterior::with_guess`] for
+    /// that. Mismatched buffer shapes are ignored (the session simply
+    /// solves on demand), so stale lineage is safe to pass.
+    pub fn with_solves(
+        mut self,
+        alpha: Vec<f64>,
+        cross_xq: Option<Matrix>,
+        cross: Vec<f64>,
+    ) -> Self {
+        let nm = self.data.n() * self.data.m();
+        if alpha.len() != nm {
+            return self;
+        }
+        if let Some(xq) = cross_xq {
+            let preds = lkgp::preds_from_solves(&self.theta, &self.data, &xq, &alpha, &cross);
+            if let Some(preds) = preds {
+                self.preds = preds;
+                self.cross = cross;
+                self.cross_xq = Some(xq);
+            }
+        }
+        self.alpha = Some(alpha);
+        self
+    }
+
+    /// Cheap read-only fork: shares the dataset `Arc` and copies every
+    /// piece of converged solver state (training solve, cross solves,
+    /// predictions, preconditioner, pending lineage guess) so the fork
+    /// answers already-covered queries without re-solving — and answers
+    /// new ones independently of the parent. Solve telemetry
+    /// (`cg_iters`/`cg_mvm_rows`/`solve_calls`) restarts at zero so the
+    /// fork reports only its own work. This is the primitive behind the
+    /// `ServicePool`'s read-only replica shards (docs/serving.md).
+    pub fn fork(&self) -> Posterior {
+        Posterior {
+            data: self.data.clone(),
+            theta: self.theta.clone(),
+            cfg: self.cfg.clone(),
+            alpha: self.alpha.clone(),
+            cross_xq: self.cross_xq.clone(),
+            cross: self.cross.clone(),
+            preds: self.preds.clone(),
+            precond: self.precond.clone(),
+            guess: self.guess.clone(),
+            cg_iters: 0,
+            cg_mvm_rows: 0,
+            solve_calls: 0,
+            last_cg: None,
+        }
+    }
+
     /// Answer one query (see [`Posterior::answer_batch`]).
     pub fn answer(&mut self, query: &Query) -> Result<Answer> {
         let mut answers = self.answer_batch(std::slice::from_ref(query))?;
@@ -912,6 +974,86 @@ mod tests {
             .is_err());
         // nothing solved on the error paths
         assert_eq!(post.solve_calls(), 0);
+    }
+
+    #[test]
+    fn fork_answers_cached_queries_without_solving() {
+        let data = toy(6, 5, 2, 13);
+        let theta = Theta::default_packed(2);
+        let mut rng = Pcg64::new(14);
+        let xq = Matrix::from_vec(3, 2, rng.uniform_vec(6, 0.0, 1.0));
+        let mut parent = Posterior::new(data, theta, SolverCfg::default());
+        let batch = [
+            Query::MeanAtFinal { xq: xq.clone() },
+            Query::Quantiles { xq: xq.clone(), ps: vec![0.2, 0.8] },
+        ];
+        let want = parent.answer_batch(&batch).unwrap();
+        assert_eq!(parent.solve_calls(), 1);
+
+        // the fork serves the covered batch from copied state: zero solves
+        let mut fork = parent.fork();
+        assert_eq!(fork.solve_calls(), 0);
+        let got = fork.answer_batch(&batch).unwrap();
+        assert_eq!(fork.solve_calls(), 0, "fork must not re-solve cached state");
+        match (&want[0], &got[0]) {
+            (Answer::Final(a), Answer::Final(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.0.to_bits(), y.0.to_bits());
+                    assert_eq!(x.1.to_bits(), y.1.to_bits());
+                }
+            }
+            other => panic!("unexpected answers {other:?}"),
+        }
+        // a new query matrix solves on the fork alone; the parent's cache
+        // is untouched (MeanAtSteps on the parent still reuses alpha)
+        let other = Matrix::from_vec(1, 2, vec![0.9, 0.1]);
+        let _ = fork.answer(&Query::MeanAtFinal { xq: other }).unwrap();
+        assert_eq!(fork.solve_calls(), 1);
+        assert_eq!(parent.solve_calls(), 1);
+        let _ = parent
+            .answer(&Query::MeanAtSteps { xq: xq.clone(), steps: vec![0] })
+            .unwrap();
+        assert_eq!(parent.solve_calls(), 1);
+    }
+
+    #[test]
+    fn with_solves_seeds_converged_state_bit_exactly() {
+        let data = toy(7, 4, 2, 15);
+        let theta = Theta::default_packed(2);
+        let mut rng = Pcg64::new(16);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let mut parent = Posterior::new(data.clone(), theta.clone(), SolverCfg::default());
+        let want = parent.answer(&Query::MeanAtFinal { xq: xq.clone() }).unwrap();
+        let alpha = parent.alpha().unwrap().to_vec();
+        let cross = parent.cross_solves().unwrap().to_vec();
+
+        // rebuild a posterior from the raw lineage buffers (the serving
+        // layer's WarmStart shape): zero solves, bit-identical answers
+        let mut seeded = Posterior::new(data.clone(), theta.clone(), SolverCfg::default())
+            .with_solves(alpha.clone(), Some(xq.clone()), cross.clone());
+        let got = seeded.answer(&Query::MeanAtFinal { xq: xq.clone() }).unwrap();
+        assert_eq!(seeded.solve_calls(), 0);
+        match (&want, &got) {
+            (Answer::Final(a), Answer::Final(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.0.to_bits(), y.0.to_bits());
+                    assert_eq!(x.1.to_bits(), y.1.to_bits());
+                }
+            }
+            other => panic!("unexpected answers {other:?}"),
+        }
+        // steps-only queries reuse the seeded alpha without a solve
+        let _ = seeded
+            .answer(&Query::MeanAtSteps { xq: xq.clone(), steps: vec![0, 3] })
+            .unwrap();
+        assert_eq!(seeded.solve_calls(), 0);
+
+        // mismatched lineage is ignored, not trusted
+        let mut bad = Posterior::new(data, theta, SolverCfg::default())
+            .with_solves(vec![1.0; 3], Some(xq.clone()), cross);
+        assert!(bad.alpha().is_none());
+        let _ = bad.answer(&Query::MeanAtFinal { xq }).unwrap();
+        assert_eq!(bad.solve_calls(), 1);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //!              LCBench workload (see examples/automl_loop.rs for the
 //!              library-level version)
 //!   pool       run several coordinators concurrently through the
-//!              multi-task sharded ServicePool (see docs/serving.md)
+//!              multi-task sharded ServicePool (see docs/serving.md);
+//!              with --replay FILE it replays a recorded request trace
+//!              and asserts zero errors + stats invariants (docs/ci.md)
 //!   artifacts  print the artifact manifest and verify executables load
 //!   smoke      end-to-end smoke: fit + predict on a toy problem
 //!
@@ -25,7 +27,7 @@ fn main() -> lkgp::Result<()> {
             eprintln!(
                 "usage: lkgp <artifacts|smoke|serve|pool> [--engine rust|xla] \
                  [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off] \
-                 [--precond off|auto|rank=R]"
+                 [--replicas N] [--precond off|auto|rank=R] [--replay FILE]"
             );
             Ok(())
         }

@@ -220,6 +220,17 @@ pub trait Engine: Send {
     /// Posterior mean curves for query configs.
     fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> Result<Matrix>;
 
+    /// Solver configuration for read-only replica sessions. Engines whose
+    /// query path runs through `gp::session` return their `SolverCfg` so a
+    /// `coordinator::ServicePool` can serve read-only `Query` bursts from
+    /// forked `Posterior`s on spare workers while the writer shard is
+    /// busy (same solver settings ⇒ same answers as the writer). Engines
+    /// with a different compute path (e.g. the XLA artifact engine) keep
+    /// the default `None`, which disables replicas for their shards.
+    fn session_cfg(&self) -> Option<SolverCfg> {
+        None
+    }
+
     /// Human-readable backend name (logs/metrics).
     fn name(&self) -> &'static str;
 }
@@ -383,6 +394,10 @@ impl Engine for RustEngine {
             Answer::Steps(mat) => Ok(mat),
             _ => unreachable!("MeanAtSteps answers Steps"),
         }
+    }
+
+    fn session_cfg(&self) -> Option<SolverCfg> {
+        Some(self.cfg.clone())
     }
 
     fn name(&self) -> &'static str {

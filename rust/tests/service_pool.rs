@@ -3,12 +3,15 @@
 //! decisions — plus warm-start and backpressure behavior on top.
 
 use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use lkgp::coordinator::{
-    CurveStore, EpochRunner, PoolCfg, PredictClient, PredictionService, Registry, Scheduler,
-    SchedulerCfg, ServicePool, Snapshot, TrialId,
+    Answer, CurveStore, EpochRunner, PoolCfg, PredictClient, PredictionService, Query, Registry,
+    Request, Scheduler, SchedulerCfg, ServicePool, Snapshot, TrialId,
 };
-use lkgp::gp::Theta;
+use lkgp::gp::transforms::YTransform;
+use lkgp::gp::{Dataset, SolverCfg, Theta};
 use lkgp::lcbench::{Preset, Task};
 use lkgp::linalg::Matrix;
 use lkgp::rng::Pcg64;
@@ -253,4 +256,346 @@ fn backpressure_bounds_queue_depth() {
     let peak = pool.stats(0).peak_queue_depth.load(Ordering::Relaxed);
     assert!(peak <= 4, "peak queue depth {peak} exceeds bound");
     assert_eq!(pool.stats(0).enqueued.load(Ordering::Relaxed), 20);
+}
+
+// ---------------------------------------------------------------------------
+// Read-only replica shards
+
+/// A `RustEngine` whose `fit` blocks until the test sends a token: the
+/// deterministic way to pin a pool's writer on a "slow refit" while
+/// read-only traffic queues up behind it.
+struct GatedEngine {
+    inner: RustEngine,
+    gate: mpsc::Receiver<()>,
+}
+
+impl GatedEngine {
+    fn pair() -> (mpsc::Sender<()>, Box<dyn Engine>) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Box::new(GatedEngine { inner: RustEngine::default(), gate: rx }))
+    }
+}
+
+impl Engine for GatedEngine {
+    fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> lkgp::Result<Vec<f64>> {
+        let _ = self.gate.recv();
+        self.inner.fit(theta0, data, seed)
+    }
+
+    fn predict_final(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+    ) -> lkgp::Result<Vec<(f64, f64)>> {
+        self.inner.predict_final(theta, data, xq)
+    }
+
+    fn answer_batch(
+        &mut self,
+        theta: &[f64],
+        data: &Arc<Dataset>,
+        queries: &[Query],
+        warm: Option<&[f64]>,
+        precond: Option<Arc<lkgp::gp::PrecondFactors>>,
+    ) -> lkgp::Result<lkgp::runtime::QueryOutcome> {
+        self.inner.answer_batch(theta, data, queries, warm, precond)
+    }
+
+    fn sample_curves(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        s: usize,
+        seed: u64,
+    ) -> lkgp::Result<Vec<Matrix>> {
+        self.inner.sample_curves(theta, data, xq, s, seed)
+    }
+
+    fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> lkgp::Result<Matrix> {
+        self.inner.predict_mean(theta, data, xq)
+    }
+
+    fn session_cfg(&self) -> Option<SolverCfg> {
+        self.inner.session_cfg()
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+fn assert_answers_bit_equal(got: &[Answer], want: &[Answer]) {
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want) {
+        match (g, w) {
+            (Answer::Final(a), Answer::Final(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.0.to_bits(), y.0.to_bits(), "mean diverged");
+                    assert_eq!(x.1.to_bits(), y.1.to_bits(), "variance diverged");
+                }
+            }
+            (Answer::Variance(a), Answer::Variance(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "variance diverged");
+                }
+            }
+            (Answer::Quantiles(a), Answer::Quantiles(b))
+            | (Answer::Steps(a), Answer::Steps(b)) => {
+                assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "matrix answer diverged");
+                }
+            }
+            other => panic!("answer kinds diverged: {other:?}"),
+        }
+    }
+}
+
+/// Pin the writer on a gated refit and wait until a worker claims it.
+fn pin_writer(
+    pool: &ServicePool,
+    snap: &Snapshot,
+    theta: &[f64],
+) -> mpsc::Receiver<lkgp::Result<Vec<f64>>> {
+    let (ftx, frx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Refit {
+            snapshot: snap.clone(),
+            theta0: theta.to_vec(),
+            seed: 3,
+            resp: ftx,
+        },
+    )
+    .unwrap();
+    while pool.queue_depth(0) > 0 {
+        std::thread::yield_now();
+    }
+    frx
+}
+
+/// While the writer is pinned on a refit, a burst of read-only query
+/// batches for the already-fitted generation must be served by replicas:
+/// bit-identical to the writer's answers, with ZERO additional underlying
+/// solves (the lineage fast path) and no retires.
+#[test]
+fn replica_serves_read_burst_while_writer_is_busy() {
+    let (gate, engine) = GatedEngine::pair();
+    let pool = ServicePool::spawn(
+        vec![engine],
+        PoolCfg { workers: 2, warm_start: true, max_replicas: 2, ..Default::default() },
+    );
+    let snap = snapshot_for(Preset::FashionMnist, 10, 21);
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(2, 7, {
+        let mut v = snap.all_x.row(0).to_vec();
+        v.extend_from_slice(snap.all_x.row(3));
+        v
+    });
+    let queries = vec![
+        Query::MeanAtFinal { xq: xq.clone() },
+        Query::Variance { xq: xq.clone() },
+        Query::Quantiles { xq, ps: vec![0.1, 0.9] },
+    ];
+    let handle = pool.handle(0);
+    // writer fits the generation once; its answers are the parity oracle
+    let want = handle.query(snap.clone(), theta.clone(), queries.clone()).unwrap();
+    let solves_before = pool.stats(0).engine_solves.load(Ordering::Relaxed);
+
+    let frx = pin_writer(&pool, &snap, &theta);
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let (rtx, rrx) = mpsc::channel();
+        pool.submit(
+            0,
+            Request::Query {
+                snapshot: snap.clone(),
+                theta: theta.clone(),
+                queries: queries.clone(),
+                resp: rtx,
+            },
+        )
+        .unwrap();
+        rxs.push(rrx);
+    }
+    for rrx in rxs {
+        let got = rrx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("replicas must serve reads while the writer is busy")
+            .unwrap();
+        assert_answers_bit_equal(&got, &want);
+    }
+    let stats = pool.stats(0);
+    assert!(
+        stats.replica_hits.load(Ordering::Relaxed) >= 1,
+        "burst must be replica-served"
+    );
+    assert_eq!(
+        stats.engine_solves.load(Ordering::Relaxed),
+        solves_before,
+        "lineage-covered replica burst must add zero solves"
+    );
+    assert_eq!(stats.stale_replica_retires.load(Ordering::Relaxed), 0);
+    gate.send(()).unwrap();
+    frx.recv().unwrap().unwrap();
+}
+
+/// A writer advancing the generation mid-burst must retire the replica:
+/// its computed answers are discarded (never delivered), the requests go
+/// back to the writer, and `stale_replica_retires` counts the event.
+#[test]
+fn stale_replica_retires_when_writer_advances_mid_burst() {
+    let (gate, engine) = GatedEngine::pair();
+    let pool = ServicePool::spawn(
+        vec![engine],
+        PoolCfg { workers: 2, warm_start: true, max_replicas: 2, ..Default::default() },
+    );
+    let mut rng = Pcg64::new(9);
+    let task = Task::generate(Preset::Higgs, 24, &mut rng);
+    let mut reg = Registry::new();
+    for i in 0..task.n() {
+        let id = reg.add(task.configs.row(i).to_vec());
+        for j in 0..4 {
+            reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+        }
+    }
+    let mut store = CurveStore::new(task.m());
+    let snap1 = store.snapshot(&reg).unwrap();
+    // build generation 2 UP FRONT so that, once the steal is observed,
+    // advancing the fence is a single submit call (microseconds) while
+    // the replica is still inside a many-millisecond sampling solve
+    for i in 0..task.n() {
+        reg.observe(TrialId(i), task.curves[(i, 4)], task.m()).unwrap();
+    }
+    let snap2 = store.snapshot(&reg).unwrap();
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(1, 7, snap1.all_x.row(0).to_vec());
+    let handle = pool.handle(0);
+    let want = handle
+        .query(snap1.clone(), theta.clone(), vec![Query::MeanAtFinal { xq: xq.clone() }])
+        .unwrap();
+
+    let frx1 = pin_writer(&pool, &snap1, &theta);
+    // a deliberately heavy read (big pathwise sampling solve) so the
+    // fence can move while the replica is mid-computation
+    let (rtx, rrx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Query {
+            snapshot: snap1.clone(),
+            theta: theta.clone(),
+            queries: vec![
+                Query::CurveSamples { xq: xq.clone(), n: 128, seed: 5 },
+                Query::MeanAtFinal { xq: xq.clone() },
+            ],
+            resp: rtx,
+        },
+    )
+    .unwrap();
+    // wait until a replica stole the read (the writer is pinned, so only
+    // a replica can empty the queue) ...
+    while pool.queue_depth(0) > 0 {
+        std::thread::yield_now();
+    }
+    // ... then advance the generation fence with a queued write
+    let (f2tx, f2rx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Refit { snapshot: snap2, theta0: theta.clone(), seed: 4, resp: f2tx },
+    )
+    .unwrap();
+    // release both gated refits; the retired read is answered by the
+    // writer afterwards
+    gate.send(()).unwrap();
+    gate.send(()).unwrap();
+    let answers = rrx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("retired reads must still be answered (by the writer)")
+        .unwrap();
+    assert_eq!(answers.len(), 2);
+    assert!(
+        pool.stats(0).stale_replica_retires.load(Ordering::Relaxed) >= 1,
+        "the replica must retire when the fence advances mid-burst"
+    );
+    // the writer's answer for the retired read matches its own earlier
+    // answer for the same (generation, theta, query) to solver tolerance
+    match (&answers[1], &want[0]) {
+        (Answer::Final(a), Answer::Final(b)) => {
+            assert!((a[0].0 - b[0].0).abs() < 1e-6 && (a[0].1 - b[0].1).abs() < 1e-6);
+        }
+        other => panic!("unexpected answers {other:?}"),
+    }
+    frx1.recv().unwrap().unwrap();
+    f2rx.recv().unwrap().unwrap();
+}
+
+/// A task whose dataset carries a fully-masked row (registered but never
+/// observed at the model level) must be servable through a replica, with
+/// answers bit-identical to the writer's.
+#[test]
+fn fully_masked_row_task_served_via_replica() {
+    let (n, m, d) = (5usize, 6usize, 2usize);
+    let mut rng = Pcg64::new(31);
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|j| j as f64 / (m - 1) as f64).collect();
+    let mut y = Matrix::zeros(n, m);
+    let mut mask = Matrix::zeros(n, m);
+    for i in 0..n {
+        if i == 3 {
+            continue; // row 3 stays fully masked
+        }
+        for j in 0..2 + i % 3 {
+            mask[(i, j)] = 1.0;
+            y[(i, j)] = -0.4 + 0.08 * j as f64 + 0.01 * i as f64;
+        }
+    }
+    let ids: Vec<TrialId> = (0..n).map(TrialId).collect();
+    let snap = Snapshot {
+        generation: 1,
+        data: Arc::new(Dataset { x: x.clone(), t, y: y.clone(), mask: mask.clone() }),
+        row_ids: Arc::new(ids.clone()),
+        all_x: Arc::new(x),
+        all_ids: Arc::new(ids),
+        ytf: Arc::new(YTransform::fit(&y, &mask)),
+        warm: None,
+    };
+    let theta = Theta::default_packed(d);
+    let xq = Matrix::from_vec(1, d, vec![0.4, 0.6]);
+    let queries = vec![
+        Query::MeanAtFinal { xq: xq.clone() },
+        Query::MeanAtSteps { xq, steps: vec![0, m - 1] },
+    ];
+
+    let (gate, engine) = GatedEngine::pair();
+    let pool = ServicePool::spawn(
+        vec![engine],
+        PoolCfg { workers: 2, warm_start: true, max_replicas: 2, ..Default::default() },
+    );
+    let handle = pool.handle(0);
+    let want = handle.query(snap.clone(), theta.clone(), queries.clone()).unwrap();
+
+    let frx = pin_writer(&pool, &snap, &theta);
+    let (rtx, rrx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Query {
+            snapshot: snap.clone(),
+            theta: theta.clone(),
+            queries: queries.clone(),
+            resp: rtx,
+        },
+    )
+    .unwrap();
+    let got = rrx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("replica must serve the fully-masked-row task")
+        .unwrap();
+    assert_answers_bit_equal(&got, &want);
+    assert!(pool.stats(0).replica_hits.load(Ordering::Relaxed) >= 1);
+    gate.send(()).unwrap();
+    frx.recv().unwrap().unwrap();
 }
