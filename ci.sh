@@ -6,8 +6,11 @@
 #   style  (strict when available): cargo fmt --check, cargo clippy -- -D warnings
 #   perf   (hard gates): cargo bench --bench hotpath -- --quick
 #                        -> BENCH_hotpath.json (record) plus gated
-#                           BENCH_pcg.json, BENCH_queries.json, BENCH_replicas.json
-#   smoke  (hard gate):  trace replay through `lkgp pool --replay traces/smoke.jsonl`
+#                           BENCH_pcg.json, BENCH_queries.json,
+#                           BENCH_replicas.json, BENCH_ingest.json
+#   smoke  (hard gates): trace replay through `lkgp pool --replay traces/smoke.jsonl`,
+#                        sequentially (exact stats equalities) AND with
+#                        --concurrent (storm + parity pass, relaxed bounds)
 #
 # Environment knobs:
 #   CI_STRICT=0|1  Make fmt/clippy failures fatal. DEFAULTS TO 1 when both
@@ -24,7 +27,8 @@
 # The script always ends by printing a machine-readable one-line summary
 # with ALL of these gates present, in this order:
 #   CI_SUMMARY build=pass test=pass shims=pass fmt=pass clippy=pass \
-#              bench=pass pcg=pass queries=pass replicas=pass replay=pass
+#              bench=pass pcg=pass queries=pass replicas=pass ingest=pass \
+#              replay=pass creplay=pass
 # Each gate is one of pass|fail|soft-fail|skip (skip = component missing,
 # CI_QUICK, or never reached because an earlier gate failed; soft-fail =
 # style finding under CI_STRICT=0). Exit code is non-zero iff any hard
@@ -43,7 +47,7 @@ note() { # note <gate> <pass|fail|soft-fail|skip>
 finish() {
   # gates never reached (early exit) report as skip, so the summary always
   # carries the full fixed field set parsers rely on
-  for g in build test shims fmt clippy bench pcg queries replicas replay; do
+  for g in build test shims fmt clippy bench pcg queries replicas ingest replay creplay; do
     case " $SUMMARY " in
       *" $g="*) ;;
       *) SUMMARY="$SUMMARY $g=skip" ;;
@@ -144,7 +148,7 @@ fi
 # ---- perf + smoke gates (mandatory in the pipeline; CI_QUICK skips) -------
 if [ "${CI_QUICK:-0}" = "1" ]; then
   echo "== perf/smoke gates skipped (CI_QUICK=1) =="
-  for gate in bench pcg queries replicas replay; do note "$gate" skip; done
+  for gate in bench pcg queries replicas ingest replay creplay; do note "$gate" skip; done
   exit 0
 fi
 
@@ -204,6 +208,16 @@ echo "== perf gate: read-only replica shards =="
 gate_file replicas BENCH_replicas.json \
   assert_replica_speedup assert_replica_no_extra_solves assert_replica_parity
 
+echo "== perf gate: corpus ingestion =="
+# Many-task cold admission through ServicePool::from_corpus must sustain
+# the throughput floor with zero errors, shards must materialize lazily
+# (and evict when idle), the real-shaped fixture corpus must ingest with
+# its ragged rows intact, and sequential smoke replay must hold its
+# request-rate floor.
+gate_file ingest BENCH_ingest.json \
+  assert_ingest_zero_errors assert_ingest_lazy \
+  assert_ingest_admission_floor assert_ingest_replay_floor
+
 echo "== smoke gate: trace replay =="
 # Replays traces/smoke.jsonl (typed queries, 3 tasks, mixed generations)
 # through `lkgp pool --replay` sequentially; the replayer itself asserts
@@ -224,5 +238,26 @@ else
   exit 1
 fi
 rm -f "$REPLAY_LOG"
+
+echo "== smoke gate: concurrent trace replay =="
+# The same trace replayed as a storm (every request in flight at once,
+# replicas stealing reads) with relaxed invariants: zero errors, solve
+# counts bounded by submissions, and a post-storm parity pass — each
+# distinct (task, generation, signature) submitted twice back-to-back
+# must answer bit-identically (docs/ci.md).
+CREPLAY_LOG=$(mktemp)
+if cargo run --release --manifest-path "$MANIFEST" -- pool --replay traces/smoke.jsonl \
+    --concurrent > "$CREPLAY_LOG" 2>&1 && grep -q "^REPLAY_OK$" "$CREPLAY_LOG"; then
+  cat "$CREPLAY_LOG"
+  note creplay pass
+  echo "concurrent replay gate OK"
+else
+  cat "$CREPLAY_LOG"
+  echo "FAIL: concurrent trace replay reported errors or invariant violations"
+  note creplay fail
+  rm -f "$CREPLAY_LOG"
+  exit 1
+fi
+rm -f "$CREPLAY_LOG"
 
 echo "CI OK"

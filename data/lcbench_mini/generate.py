@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Regenerate the lcbench_mini fixture corpus (deterministic).
+
+12 LCBench-shaped tasks: 10 configs x up to 20 epochs of validation
+accuracy, d = 7 hyper-parameters in plausible LCBench ranges, saturating
+power-law curves with config-dependent asymptotes, and EARLY-STOPPED rows
+(ragged curve lengths) like a real dump of a freeze-thaw run. Values are
+rounded to 6 decimals so the JSON is small and byte-stable.
+
+Uses a hand-rolled 64-bit LCG (no `random` module) so the output is
+identical on every Python version/platform. Run from the repo root:
+
+    python3 data/lcbench_mini/generate.py
+
+Tests, the ingest bench, and the record/replay smoke consume these files;
+regenerating them changes the corpus fingerprint, so any recorded trace
+pinned to the old bytes will (correctly) refuse to replay.
+"""
+import json
+import os
+
+MULT = 6364136223846793005
+INC = 1442695040888963407
+MASK = (1 << 64) - 1
+
+
+class Lcg:
+    def __init__(self, seed):
+        self.state = (seed * 2862933555777941757 + 3037000493) & MASK
+
+    def next_u64(self):
+        self.state = (self.state * MULT + INC) & MASK
+        return self.state
+
+    def uniform(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def uniform_in(self, lo, hi):
+        return lo + (hi - lo) * self.uniform()
+
+
+TASKS = 12
+CONFIGS = 10
+MAX_EPOCHS = 20
+
+
+def gen_task(t):
+    rng = Lcg(1000 + t)
+    # per-task accuracy regime (fashion-mnist-ish .. higgs-ish)
+    floor = 0.10 + 0.04 * (t % 3)
+    a_center = 0.60 + 0.03 * (t % 5)
+    configs, curves = [], []
+    for i in range(CONFIGS):
+        log_lr = rng.uniform_in(-4.0, -1.0)
+        batch = rng.uniform_in(4.0, 9.0)
+        momentum = rng.uniform_in(0.1, 0.99)
+        weight_decay = rng.uniform_in(-5.0, -2.0)
+        layers = rng.uniform_in(1.0, 5.0)
+        units = rng.uniform_in(4.0, 10.0)
+        dropout = rng.uniform_in(0.0, 0.8)
+        configs.append([round(v, 6) for v in
+                        (log_lr, batch, momentum, weight_decay, layers, units, dropout)])
+        quality = max(-1.0, min(1.0, 1.0 - ((log_lr + 2.5) / 1.5) ** 2
+                                - 0.3 * (dropout - 0.4) ** 2))
+        a_inf = min(0.97, a_center + 0.08 * quality)
+        a_0 = floor + 0.05 * rng.uniform()
+        tau = 1.0 + 6.0 * rng.uniform()
+        beta = rng.uniform_in(0.7, 1.5)
+        # early stopping: ~half the configs stop before the full grid,
+        # mimicking a freeze-thaw scheduler's pause/stop decisions
+        if i % 2 == 1:
+            length = 3 + (i * 5 + t * 3) % (MAX_EPOCHS - 6)
+        else:
+            length = MAX_EPOCHS
+        row = []
+        for j in range(length):
+            e = j + 1
+            acc = a_inf - (a_inf - a_0) * (1.0 + e / tau) ** (-beta)
+            acc += 0.004 * (rng.uniform() - 0.5)
+            row.append(round(max(0.0, min(1.0, acc)), 6))
+        curves.append(row)
+    return {
+        "name": "lcbench_mini_%02d" % t,
+        "ids": list(range(CONFIGS)),
+        "configs": configs,
+        "curves": curves,
+    }
+
+
+def main():
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    for t in range(TASKS):
+        task = gen_task(t)
+        path = os.path.join(out_dir, "task_%02d.json" % t)
+        with open(path, "w") as f:
+            json.dump(task, f, separators=(",", ":"))
+            f.write("\n")
+        print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,47 +1,38 @@
-//! Multi-task serving: three freeze-thaw AutoML coordinators — one per
-//! LCBench preset — running concurrently against a single sharded
-//! [`ServicePool`].
+//! Multi-task serving: one freeze-thaw AutoML coordinator per corpus
+//! task, running concurrently against a single sharded [`ServicePool`]
+//! admitted from a [`Corpus`] (the data plane, docs/data.md).
 //!
 //! Each scheduler drives its own shard through a `ShardHandle`; the pool
 //! routes by task id, coalesces same-generation prediction batches per
-//! shard, applies backpressure, and warm-starts every solve from the
-//! shard's cached previous-generation solution (see docs/serving.md).
+//! shard, applies backpressure, warm-starts every solve from the shard's
+//! cached previous-generation solution, and pre-warms freshly refitted
+//! generations (see docs/serving.md). Shards materialize lazily on first
+//! request (`ServicePool::from_corpus`).
 //!
 //! Prints a per-shard report (regret, batching factor, warm hits, CG
 //! iterations, latency) and writes `results/multi_task_serving.json`.
 //!
 //! ```bash
-//! cargo run --release --example multi_task_serving [-- --configs 16 --budget 200 --workers 3 --precond auto]
+//! cargo run --release --example multi_task_serving \
+//!     [-- --corpus sim|data/lcbench_mini --configs 16 --budget 200 --workers 3 --precond auto]
 //! ```
 
+use std::sync::Arc;
+
 use lkgp::coordinator::{
-    EpochRunner, PoolCfg, RunReport, Scheduler, SchedulerCfg, ServicePool, TrialId,
+    CorpusRunner, EngineFactory, PoolCfg, RunReport, Scheduler, SchedulerCfg, ServicePool,
 };
 use lkgp::gp::PrecondCfg;
 use lkgp::json::Json;
-use lkgp::lcbench::{Preset, Task};
-use lkgp::rng::Pcg64;
+use lkgp::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
 use lkgp::runtime::{Engine, RustEngine};
 use lkgp::util::Args;
-
-struct SimRunner {
-    task: Task,
-}
-
-impl EpochRunner for SimRunner {
-    fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
-        self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
-    }
-}
 
 fn main() -> lkgp::Result<()> {
     let args = Args::from_env();
     let seed = args.get_u64("seed", 0);
     let n_configs = args.get_usize("configs", 16);
     let budget = args.get_usize("budget", 200);
-    let presets = Preset::all();
-    let tasks = presets.len();
-    let workers = args.get_usize("workers", tasks);
     let warm = args.get("warm").unwrap_or("on") != "off";
     let replicas = args.get_usize("replicas", PoolCfg::default().max_replicas);
     let precond_arg = args.get("precond").unwrap_or("auto");
@@ -51,15 +42,25 @@ fn main() -> lkgp::Result<()> {
         ))
     })?;
 
-    let engines: Vec<Box<dyn Engine>> = (0..tasks)
-        .map(|_| {
-            let mut eng = RustEngine::default();
-            eng.cfg.precond = precond;
-            Box::new(eng) as Box<dyn Engine>
-        })
-        .collect();
-    let pool = ServicePool::spawn(
-        engines,
+    // The data plane: the three-preset simulator by default, or any
+    // directory of LCBench-style JSON dumps.
+    let corpus_arg = args.get("corpus").unwrap_or("sim");
+    let corpus: Arc<dyn Corpus> = if corpus_arg == "sim" {
+        Arc::new(SimCorpus::new(3, n_configs, seed))
+    } else {
+        Arc::new(JsonDirCorpus::open(corpus_arg)?)
+    };
+    let tasks = corpus.len();
+    let workers = args.get_usize("workers", tasks);
+
+    let factory: EngineFactory = Box::new(move |_| {
+        let mut eng = RustEngine::default();
+        eng.cfg.precond = precond;
+        Box::new(eng) as Box<dyn Engine>
+    });
+    let pool = ServicePool::from_corpus(
+        &*corpus,
+        factory,
         PoolCfg {
             workers,
             warm_start: warm,
@@ -68,22 +69,29 @@ fn main() -> lkgp::Result<()> {
         },
     );
     println!(
-        "pool: {tasks} shards, {workers} workers, warm_start={warm}, \
-         max_replicas={replicas}, precond={precond:?}\n"
+        "pool: {tasks} shards from corpus {} ({}), {workers} workers, warm_start={warm}, \
+         max_replicas={replicas}, precond={precond:?}\n",
+        corpus.name(),
+        corpus.fingerprint(),
     );
 
     let t0 = std::time::Instant::now();
-    let mut results: Vec<(usize, &'static str, RunReport, f64)> = Vec::new();
+    let mut results: Vec<(usize, String, RunReport, f64)> = Vec::new();
     std::thread::scope(|scope| -> lkgp::Result<()> {
         let mut joins = Vec::new();
-        for (t, &preset) in presets.iter().enumerate() {
+        for t in 0..tasks {
+            let task = match corpus.task(t) {
+                Ok(task) => task,
+                Err(e) => {
+                    eprintln!("shard {t}: skipped (corrupt task isolated): {e}");
+                    continue;
+                }
+            };
             let handle = pool.handle(t);
             joins.push(scope.spawn(
-                move || -> lkgp::Result<(usize, &'static str, RunReport, f64)> {
-                    let mut rng = Pcg64::new(seed + t as u64);
-                    let task = Task::generate(preset, n_configs, &mut rng);
+                move || -> lkgp::Result<(usize, String, RunReport, f64)> {
                     let oracle = (0..task.n())
-                        .map(|i| task.curves[(i, task.m() - 1)])
+                        .map(|i| task.curves[(i, task.lengths[i].max(1) - 1)])
                         .fold(f64::NEG_INFINITY, f64::max);
                     let cfg = SchedulerCfg {
                         epoch_budget: budget,
@@ -94,9 +102,10 @@ fn main() -> lkgp::Result<()> {
                     let configs: Vec<Vec<f64>> =
                         (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
                     sched.add_candidates(&configs);
-                    let mut runner = SimRunner { task };
+                    let name = task.name.clone();
+                    let mut runner = CorpusRunner { task };
                     let report = sched.run(&mut runner, &handle)?;
-                    Ok((t, preset.name(), report, oracle))
+                    Ok((t, name, report, oracle))
                 },
             ));
         }
@@ -114,14 +123,14 @@ fn main() -> lkgp::Result<()> {
     // quantiles and step-wise extrapolation ride the exact same
     // coalescing/backpressure/warm machinery as the schedulers' MeanAtFinal
     // queries — one underlying solve serves the whole batch per generation.
-    {
+    // dashboard demo: first loadable task (per-task error isolation — a
+    // corrupt leading dump must not abort the report below)
+    if let Some((shard, task)) = (0..tasks).find_map(|t| corpus.task(t).ok().map(|k| (t, k))) {
         use lkgp::coordinator::{Answer, CurveStore, PredictClient, Query, Registry};
-        let mut rng = Pcg64::new(seed + 999);
-        let task = Task::generate(presets[0], 8, &mut rng);
         let mut reg = Registry::new();
         for i in 0..task.n() {
             let id = reg.add(task.configs.row(i).to_vec());
-            for j in 0..4 {
+            for j in 0..task.lengths[i].min(4) {
                 reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
             }
         }
@@ -129,7 +138,7 @@ fn main() -> lkgp::Result<()> {
         let theta = lkgp::gp::Theta::default_packed(snap.data.d());
         let xq = lkgp::linalg::Matrix::from_vec(1, snap.data.d(), snap.all_x.row(0).to_vec());
         let m = snap.data.m();
-        let answers = pool.handle(0).query(
+        let answers = pool.handle(shard).query(
             snap,
             theta,
             vec![
@@ -143,7 +152,7 @@ fn main() -> lkgp::Result<()> {
             (&answers[0], &answers[2], &answers[3])
         {
             println!(
-                "dashboard (shard 0, config 0): final={:.4}±{:.4} band=[{:.4},{:.4}] \
+                "dashboard (shard {shard}, config 0): final={:.4}±{:.4} band=[{:.4},{:.4}] \
                  mid-curve={:.4} (standardized units, 1 solve for 4 queries)\n",
                 f[0].0,
                 f[0].1.sqrt(),
@@ -163,11 +172,14 @@ fn main() -> lkgp::Result<()> {
         let mvm_rows = stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed);
         let replica_hits = stats.replica_hits.load(std::sync::atomic::Ordering::Relaxed);
         let replica_solves = stats.replica_solves.load(std::sync::atomic::Ordering::Relaxed);
+        let prewarmed = stats.prewarmed.load(std::sync::atomic::Ordering::Relaxed);
+        let precond_rank = stats.precond_rank.load(std::sync::atomic::Ordering::Relaxed);
         let p50 = stats.latency.lock().unwrap().quantile_micros(0.5);
         let p99 = stats.latency.lock().unwrap().quantile_micros(0.99);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} \
              batch_factor={:.2} warm_hits={warm_hits} replicas={replica_hits}h/{replica_solves}s \
+             prewarmed={prewarmed} precond_rank={precond_rank} \
              cg_iters={cg_iters} mvm_rows={mvm_rows} p50={p50}us p99={p99}us",
             report.best_value,
             oracle - report.best_value,
@@ -184,19 +196,29 @@ fn main() -> lkgp::Result<()> {
             ("warm_hits", Json::Num(warm_hits as f64)),
             ("replica_hits", Json::Num(replica_hits as f64)),
             ("replica_solves", Json::Num(replica_solves as f64)),
+            ("prewarmed", Json::Num(prewarmed as f64)),
+            ("precond_rank", Json::Num(precond_rank as f64)),
             ("cg_iters", Json::Num(cg_iters as f64)),
             ("cg_mvm_rows", Json::Num(mvm_rows as f64)),
             ("p50_us", Json::Num(p50 as f64)),
             ("p99_us", Json::Num(p99 as f64)),
         ]));
     }
-    println!("\nwall time: {wall:.2?}");
+    println!(
+        "\nwall time: {wall:.2?} (admission: {} materialized / {} shards, {} evicted)",
+        pool.materialized(),
+        tasks,
+        pool.evicted(),
+    );
 
     let summary = Json::obj(vec![
         ("tasks", Json::Num(tasks as f64)),
+        ("corpus", Json::Str(corpus.name())),
+        ("fingerprint", Json::Str(corpus.fingerprint())),
         ("workers", Json::Num(workers as f64)),
         ("warm_start", Json::Bool(warm)),
         ("max_replicas", Json::Num(replicas as f64)),
+        ("materialized", Json::Num(pool.materialized() as f64)),
         ("precond", Json::Str(format!("{precond:?}"))),
         ("wall_seconds", Json::Num(wall.as_secs_f64())),
         ("shards", Json::Arr(shard_json)),

@@ -153,6 +153,9 @@ fn main() -> lkgp::Result<()> {
     // ---- read-only replica shards vs the serialized single-shard path ----
     let replicas_json = replica_burst(&mut table);
 
+    // ---- corpus data plane: many-task admission + replay throughput ----
+    let ingest_json = ingest_scale(&mut table, quick);
+
     // ---- 4-shard pool vs 4 isolated services, same thread budget ----
     let (pool_rps, isolated_rps) = pool_vs_isolated(&mut table, quick);
 
@@ -194,7 +197,244 @@ fn main() -> lkgp::Result<()> {
     println!("wrote {}", root.join("BENCH_queries.json").display());
     std::fs::write(root.join("BENCH_replicas.json"), replicas_json.pretty())?;
     println!("wrote {}", root.join("BENCH_replicas.json").display());
+    std::fs::write(root.join("BENCH_ingest.json"), ingest_json.pretty())?;
+    println!("wrote {}", root.join("BENCH_ingest.json").display());
     Ok(())
+}
+
+/// Corpus data plane at scale (the ingestion tentpole): admit a many-task
+/// corpus through `ServicePool::from_corpus` and measure (a) cold
+/// admission throughput — one `PredictFinal` per task, every shard
+/// materializing lazily on first touch — (b) lazy materialization +
+/// idle eviction bookkeeping, (c) fixture-corpus ingestion
+/// (`data/lcbench_mini`, real-shaped ragged dumps through the hardened
+/// `Task::load_json`), and (d) sequential replay throughput of
+/// `traces/smoke.jsonl` through the library replayer. The returned JSON
+/// carries the gates ci.sh enforces:
+///
+/// * `assert_ingest_zero_errors`    — every admission answer and every
+///   fixture task parse succeeded, and the smoke replay reported zero
+///   errors/violations
+/// * `assert_ingest_lazy`           — a pool that only touches half its
+///   corpus materializes exactly that half, and an `evict_idle` sweep
+///   frees it once quiet
+/// * `assert_ingest_admission_floor` — cold admission sustains >= 2
+///   tasks/s (deliberately conservative: admission = engine build + first
+///   full GP solve per task)
+/// * `assert_ingest_replay_floor`   — sequential smoke replay sustains
+///   >= 10 req/s
+fn ingest_scale(table: &mut Table, quick: bool) -> Json {
+    use lkgp::coordinator::trace::run_replay;
+    use lkgp::coordinator::EngineFactory;
+    use lkgp::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .to_path_buf();
+    let mut zero_errors = true;
+
+    // ---- (a) many-task cold admission ------------------------------------
+    let tasks = if quick { 16 } else { 48 };
+    let corpus = SimCorpus::new(tasks, 8, 5);
+    let factory: EngineFactory =
+        Box::new(|_| Box::<RustEngine>::default() as Box<dyn Engine>);
+    let workers = lkgp::util::num_threads().clamp(2, 8);
+    let pool = ServicePool::from_corpus(
+        &corpus,
+        factory,
+        PoolCfg { workers, ..Default::default() },
+    );
+    // one tiny snapshot per task, derived from the corpus curves
+    let snaps: Vec<Snapshot> = (0..tasks)
+        .map(|t| {
+            let task = corpus.task(t).expect("sim task");
+            let mut reg = Registry::new();
+            for i in 0..task.n() {
+                let id = reg.add(task.configs.row(i).to_vec());
+                for j in 0..3 + i % 3 {
+                    reg.observe(id, task.curves[(i, j)], 8).unwrap();
+                }
+            }
+            CurveStore::new(8).snapshot(&reg).unwrap()
+        })
+        .collect();
+    let theta = Theta::default_packed(lkgp::lcbench::DIMS);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for (t, snap) in snaps.iter().enumerate() {
+        let (rtx, rrx) = channel();
+        pool.submit(
+            t,
+            Request::PredictFinal {
+                snapshot: snap.clone(),
+                theta: theta.clone(),
+                xq: Matrix::from_vec(1, lkgp::lcbench::DIMS, snap.all_x.row(0).to_vec()),
+                resp: rtx,
+            },
+        )
+        .unwrap();
+        rxs.push(rrx);
+    }
+    for r in rxs {
+        match r.recv() {
+            Ok(Ok(_)) => {}
+            _ => zero_errors = false,
+        }
+    }
+    let admit_secs = t0.elapsed().as_secs_f64();
+    let admission_rps = tasks as f64 / admit_secs.max(1e-9);
+    let all_materialized = pool.materialized() == tasks as u64;
+    drop(pool);
+
+    // ---- (b) lazy materialization + idle eviction ------------------------
+    let corpus2 = SimCorpus::new(tasks, 8, 6);
+    let factory2: EngineFactory =
+        Box::new(|_| Box::<RustEngine>::default() as Box<dyn Engine>);
+    let pool2 = ServicePool::from_corpus(
+        &corpus2,
+        factory2,
+        PoolCfg { workers: 2, ..Default::default() },
+    );
+    let touched = tasks / 2;
+    for (t, snap) in snaps.iter().take(touched).enumerate() {
+        let (rtx, rrx) = channel();
+        pool2
+            .submit(
+                t,
+                Request::PredictFinal {
+                    snapshot: snap.clone(),
+                    theta: theta.clone(),
+                    xq: Matrix::from_vec(1, lkgp::lcbench::DIMS, snap.all_x.row(0).to_vec()),
+                    resp: rtx,
+                },
+            )
+            .unwrap();
+        if r_recv_ok(rrx).is_none() {
+            zero_errors = false;
+        }
+    }
+    let lazily_materialized = pool2.materialized() == touched as u64
+        && pool2.live_shards() == touched;
+    // first sweep records the enqueued watermark; later sweeps find the
+    // shards quiet and free them (loop: a worker may still be clearing
+    // its busy flag right after the last response)
+    let mut evicted = pool2.evict_idle();
+    let deadline = Instant::now() + std::time::Duration::from_secs(5);
+    while evicted < touched && Instant::now() < deadline {
+        std::thread::yield_now();
+        evicted += pool2.evict_idle();
+    }
+    let evicted_ok = evicted == touched && pool2.live_shards() == 0;
+    // an evicted shard re-materializes transparently
+    let (rtx, rrx) = channel();
+    pool2
+        .submit(
+            0,
+            Request::PredictFinal {
+                snapshot: snaps[0].clone(),
+                theta: theta.clone(),
+                xq: Matrix::from_vec(1, lkgp::lcbench::DIMS, snaps[0].all_x.row(0).to_vec()),
+                resp: rtx,
+            },
+        )
+        .unwrap();
+    let rematerialized = r_recv_ok(rrx).is_some() && pool2.live_shards() == 1;
+    drop(pool2);
+    let lazy_ok = lazily_materialized && evicted_ok && rematerialized;
+
+    // ---- (c) fixture-corpus ingestion (ragged real-shaped dumps) ---------
+    let fixture_dir = root.join("data/lcbench_mini");
+    let t1 = Instant::now();
+    let (fixture_tasks, fixture_ragged, fixture_ok) = match JsonDirCorpus::open(&fixture_dir) {
+        Ok(fixture) => {
+            let mut ragged = 0usize;
+            let mut ok = true;
+            let n = fixture.len();
+            for (id, task) in fixture.tasks() {
+                match task {
+                    Ok(t) => {
+                        if t.mask_density() < 1.0 {
+                            ragged += 1;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("fixture task {id}: {e}");
+                        ok = false;
+                    }
+                }
+            }
+            (n, ragged, ok && ragged > 0)
+        }
+        Err(e) => {
+            eprintln!("fixture corpus: {e}");
+            (0, 0, false)
+        }
+    };
+    let fixture_secs = t1.elapsed().as_secs_f64();
+    zero_errors &= fixture_ok;
+
+    // ---- (d) sequential replay throughput --------------------------------
+    let smoke = root.join("traces/smoke.jsonl");
+    let (replay_rps, replay_requests) = match run_replay(smoke.to_str().unwrap(), false, None) {
+        Ok(summary) => {
+            if summary.errors > 0 || !summary.violations.is_empty() {
+                zero_errors = false;
+            }
+            (
+                summary.requests as f64 / summary.wall.as_secs_f64().max(1e-9),
+                summary.requests,
+            )
+        }
+        Err(e) => {
+            eprintln!("smoke replay: {e}");
+            zero_errors = false;
+            (0.0, 0)
+        }
+    };
+
+    println!(
+        "\ningest scale: {tasks}-task cold admission {admission_rps:.1} tasks/s \
+         ({admit_secs:.2}s), lazy={lazy_ok} (touched {touched}, evicted {evicted}), \
+         fixture {fixture_tasks} tasks ({fixture_ragged} ragged) in {fixture_secs:.3}s, \
+         replay {replay_requests} reqs at {replay_rps:.0} req/s"
+    );
+    table.row(vec![
+        "ingest_admission".into(),
+        tasks.to_string(),
+        format!("{:.0}", admit_secs * 1e6),
+        format!("{admission_rps:.1}tasks/s"),
+    ]);
+    table.row(vec![
+        "ingest_replay".into(),
+        replay_requests.to_string(),
+        "-".into(),
+        format!("{replay_rps:.0}rps"),
+    ]);
+
+    Json::obj(vec![
+        ("bench", Json::Str("ingest".into())),
+        ("tasks", Json::Num(tasks as f64)),
+        ("admission_tasks_per_s", Json::Num(admission_rps)),
+        ("all_materialized", Json::Bool(all_materialized)),
+        ("touched", Json::Num(touched as f64)),
+        ("evicted", Json::Num(evicted as f64)),
+        ("fixture_tasks", Json::Num(fixture_tasks as f64)),
+        ("fixture_ragged_tasks", Json::Num(fixture_ragged as f64)),
+        ("replay_requests", Json::Num(replay_requests as f64)),
+        ("replay_req_per_s", Json::Num(replay_rps)),
+        ("assert_ingest_zero_errors", Json::Bool(zero_errors && all_materialized)),
+        ("assert_ingest_lazy", Json::Bool(lazy_ok)),
+        ("assert_ingest_admission_floor", Json::Bool(admission_rps >= 2.0)),
+        ("assert_ingest_replay_floor", Json::Bool(replay_rps >= 10.0)),
+    ])
+}
+
+/// recv a PredictFinal response, flattening the double Result.
+fn r_recv_ok(
+    rrx: std::sync::mpsc::Receiver<lkgp::Result<Vec<(f64, f64)>>>,
+) -> Option<Vec<(f64, f64)>> {
+    rrx.recv().ok().and_then(|r| r.ok())
 }
 
 /// Read-only replica shards on a single-task read burst (the tentpole of

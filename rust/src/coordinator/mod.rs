@@ -18,15 +18,18 @@ pub mod policy;
 pub mod scheduler;
 pub mod service;
 pub mod store;
+pub mod trace;
 pub mod trial;
 
 pub use crate::gp::session::{Answer, Query};
 pub use policy::{Decision, Policy, TrialForecast};
-pub use scheduler::{EpochRunner, RunReport, Scheduler, SchedulerCfg};
+pub use scheduler::{CorpusRunner, EpochRunner, RunReport, Scheduler, SchedulerCfg};
 pub use service::{
-    PoolCfg, PredictClient, PredictionService, Request, ServicePool, ServiceStats, ShardHandle,
+    EngineFactory, PoolCfg, PredictClient, PredictionService, Request, ServicePool, ServiceStats,
+    ShardHandle,
 };
 pub use store::{CurveStore, Snapshot, WarmStart};
+pub use trace::{replay_trace, RecordingHandle, ReplaySummary, TraceRecorder};
 pub use trial::{Registry, Trial, TrialId, TrialStatus};
 
 use crate::util::Args;
@@ -97,23 +100,32 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
     Ok(())
 }
 
-/// CLI `lkgp pool`: run several freeze-thaw coordinators concurrently,
-/// each on its own simulated LCBench task, through one multi-task
-/// [`ServicePool`] — the serving topology the north-star calls for. Prints
-/// a per-shard report (regret, batching factor, warm hits, replica stats,
-/// latency, queue depth). With `--replay <file>` it instead replays a
-/// recorded request trace through the pool (see [`replay_trace`]).
+/// CLI `lkgp pool`: run one freeze-thaw coordinator per corpus task,
+/// concurrently, through one multi-task [`ServicePool`] — the serving
+/// topology the north-star calls for. The data plane is a
+/// [`crate::lcbench::corpus::Corpus`]: the deterministic simulator by
+/// default (`--corpus sim`, bit-identical to the historical inline
+/// generation) or a directory of LCBench-style JSON dumps
+/// (`--corpus data/lcbench_mini`), admitted lazily via
+/// [`ServicePool::from_corpus`] with per-task error isolation (a corrupt
+/// dump skips its shard, everything else serves). Prints a per-shard
+/// report (regret, batching factor, warm hits, replica stats, pre-warm
+/// count, preconditioner rank, latency, queue depth).
+///
+/// `--record FILE` captures the live typed-query + refit traffic as a
+/// replayable trace whose header pins the corpus fingerprint;
+/// `--replay FILE [--concurrent]` replays a recorded trace instead of
+/// running schedulers (see [`trace`] and docs/data.md).
 pub fn serve_pool(args: &Args) -> crate::Result<()> {
+    use crate::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
+    use std::sync::{Arc, Mutex};
+
     if let Some(path) = args.get("replay") {
-        return replay_trace(args, path);
+        return trace::replay_trace(args, path);
     }
     let seed = args.get_u64("seed", 0);
-    let tasks = args.get_usize("tasks", 3).max(1);
     let n_configs = args.get_usize("configs", 16);
     let budget = args.get_usize("budget", 200);
-    let workers = args
-        .get_usize("workers", crate::util::num_threads().min(tasks.max(1)))
-        .max(1);
     let warm = args.get("warm").unwrap_or("on") != "off";
     let replicas = args.get_usize("replicas", PoolCfg::default().max_replicas);
     let precond_arg = args.get("precond").unwrap_or("auto");
@@ -122,17 +134,30 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             "bad --precond '{precond_arg}' (expected off, auto, or rank=R with R >= 1)"
         ))
     })?;
-    let presets = crate::lcbench::Preset::all();
 
-    let engines: Vec<Box<dyn crate::runtime::Engine>> = (0..tasks)
-        .map(|_| {
-            let mut eng = crate::runtime::RustEngine::default();
-            eng.cfg.precond = precond;
-            Box::new(eng) as Box<dyn crate::runtime::Engine>
-        })
-        .collect();
-    let pool = ServicePool::spawn(
-        engines,
+    let corpus_arg = args.get("corpus").unwrap_or("sim");
+    let corpus: Arc<dyn Corpus> = if corpus_arg == "sim" {
+        Arc::new(SimCorpus::new(
+            args.get_usize("tasks", 3).max(1),
+            n_configs,
+            seed,
+        ))
+    } else {
+        Arc::new(JsonDirCorpus::open(corpus_arg)?)
+    };
+    let tasks = corpus.len();
+    let workers = args
+        .get_usize("workers", crate::util::num_threads().min(tasks.max(1)))
+        .max(1);
+
+    let factory: EngineFactory = Box::new(move |_shard| {
+        let mut eng = crate::runtime::RustEngine::default();
+        eng.cfg.precond = precond;
+        Box::new(eng) as Box<dyn crate::runtime::Engine>
+    });
+    let pool = ServicePool::from_corpus(
+        &*corpus,
+        factory,
         PoolCfg {
             workers,
             warm_start: warm,
@@ -141,44 +166,58 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         },
     );
     println!(
-        "pool: {tasks} shards, {workers} workers, warm_start={warm}, \
-         max_replicas={replicas}, precond={precond:?}"
+        "pool: {tasks} shards from corpus {} ({}), {workers} workers, warm_start={warm}, \
+         max_replicas={replicas}, precond={precond:?}",
+        corpus.name(),
+        corpus.fingerprint(),
     );
 
-    struct SimRunner {
-        task: crate::lcbench::Task,
-    }
-    impl EpochRunner for SimRunner {
-        fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
-            self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
-        }
-    }
+    let recorder: Option<Arc<Mutex<TraceRecorder>>> = match args.get("record") {
+        Some(path) => Some(Arc::new(Mutex::new(TraceRecorder::new(&*corpus, path)?))),
+        None => None,
+    };
 
-    let mut results: Vec<(usize, &'static str, RunReport, f64)> = Vec::new();
+    let mut results: Vec<(usize, String, RunReport, f64)> = Vec::new();
+    let mut skipped: Vec<(usize, String)> = Vec::new();
     std::thread::scope(|scope| -> crate::Result<()> {
         let mut joins = Vec::new();
         for t in 0..tasks {
+            // per-task error isolation: a corrupt dump skips its shard
+            let task = match corpus.task(t) {
+                Ok(task) => task,
+                Err(e) => {
+                    skipped.push((t, e.to_string()));
+                    continue;
+                }
+            };
             let handle = pool.handle(t);
-            let preset = presets[t % presets.len()];
-            joins.push(scope.spawn(move || -> crate::Result<(usize, &'static str, RunReport, f64)> {
-                let mut rng = crate::rng::Pcg64::new(seed + t as u64);
-                let task = crate::lcbench::Task::generate(preset, n_configs, &mut rng);
-                let oracle = (0..task.n())
-                    .map(|i| task.curves[(i, task.m() - 1)])
-                    .fold(f64::NEG_INFINITY, f64::max);
-                let cfg = SchedulerCfg {
-                    epoch_budget: budget,
-                    seed: seed + t as u64,
-                    ..Default::default()
-                };
-                let mut sched = Scheduler::new(task.m(), cfg);
-                let configs: Vec<Vec<f64>> =
-                    (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
-                sched.add_candidates(&configs);
-                let mut runner = SimRunner { task };
-                let report = sched.run(&mut runner, &handle)?;
-                Ok((t, preset.name(), report, oracle))
-            }));
+            let recorder = recorder.clone();
+            joins.push(scope.spawn(
+                move || -> crate::Result<(usize, String, RunReport, f64)> {
+                    let oracle = (0..task.n())
+                        .map(|i| task.curves[(i, task.lengths[i].max(1) - 1)])
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    let cfg = SchedulerCfg {
+                        epoch_budget: budget,
+                        seed: seed + t as u64,
+                        ..Default::default()
+                    };
+                    let mut sched = Scheduler::new(task.m(), cfg);
+                    let configs: Vec<Vec<f64>> =
+                        (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
+                    sched.add_candidates(&configs);
+                    let name = task.name.clone();
+                    let mut runner = CorpusRunner { task };
+                    let report = match recorder {
+                        Some(rec) => {
+                            let client = RecordingHandle::new(handle, t, rec);
+                            sched.run(&mut runner, &client)?
+                        }
+                        None => sched.run(&mut runner, &handle)?,
+                    };
+                    Ok((t, name, report, oracle))
+                },
+            ));
         }
         for j in joins {
             let out = j
@@ -189,14 +228,17 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         Ok(())
     })?;
 
+    for (t, e) in &skipped {
+        eprintln!("shard {t}: skipped (corrupt task isolated, others served): {e}");
+    }
     results.sort_by_key(|r| r.0);
     for (t, name, report, oracle) in &results {
         let stats = pool.stats(*t);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} rounds={} \
              batch_factor={:.2} warm_hits={} warm_cache={}h/{}m solves={} \
-             replicas={}h/{}s/{}r cg_iters={} mvm_rows={} peak_queue={} \
-             p50={}us p99={}us",
+             replicas={}h/{}s/{}r prewarmed={} precond_rank={} cg_iters={} mvm_rows={} \
+             peak_queue={} p50={}us p99={}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
@@ -209,6 +251,8 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             stats.replica_hits.load(std::sync::atomic::Ordering::Relaxed),
             stats.replica_solves.load(std::sync::atomic::Ordering::Relaxed),
             stats.stale_replica_retires.load(std::sync::atomic::Ordering::Relaxed),
+            stats.prewarmed.load(std::sync::atomic::Ordering::Relaxed),
+            stats.precond_rank.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed),
             stats.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
@@ -216,334 +260,14 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             stats.latency.lock().unwrap().quantile_micros(0.99),
         );
     }
-    Ok(())
-}
-
-// ---------------------------------------------------------------------------
-// Trace replay
-
-/// One typed query parsed from a trace line. The trace stores config ROW
-/// INDICES rather than coordinates — all generations share a task's
-/// config set, so indices are stable and the file stays robust to
-/// transform changes; [`TraceQuery::materialize`] substitutes the
-/// snapshot's normalized rows right before submission.
-enum TraceQuery {
-    MeanAtFinal { rows: Vec<usize> },
-    Variance { rows: Vec<usize> },
-    Quantiles { rows: Vec<usize>, ps: Vec<f64> },
-    MeanAtSteps { rows: Vec<usize>, steps: Vec<usize> },
-}
-
-impl TraceQuery {
-    fn materialize(&self, snap: &Snapshot) -> Query {
-        let xq = |rows: &[usize]| {
-            let d = snap.all_x.cols();
-            let mut m = crate::linalg::Matrix::zeros(rows.len(), d);
-            for (r, &i) in rows.iter().enumerate() {
-                let src: Vec<f64> = snap.all_x.row(i).to_vec();
-                m.row_mut(r).copy_from_slice(&src);
-            }
-            m
-        };
-        match self {
-            TraceQuery::MeanAtFinal { rows } => Query::MeanAtFinal { xq: xq(rows) },
-            TraceQuery::Variance { rows } => Query::Variance { xq: xq(rows) },
-            TraceQuery::Quantiles { rows, ps } => {
-                Query::Quantiles { xq: xq(rows), ps: ps.clone() }
-            }
-            TraceQuery::MeanAtSteps { rows, steps } => {
-                Query::MeanAtSteps { xq: xq(rows), steps: steps.clone() }
-            }
-        }
-    }
-}
-
-/// One replayable request parsed from a trace line.
-struct TraceRequest {
-    line: usize,
-    task: usize,
-    generation: u64,
-    queries: Vec<TraceQuery>,
-}
-
-/// CLI `lkgp pool --replay <file>`: replay a recorded request trace —
-/// JSON lines of typed queries across several tasks and generations —
-/// through a [`ServicePool`] and assert zero errors plus stats
-/// invariants. This is the first concrete step toward the ROADMAP's
-/// "replayable request trace" item: the trace pins the *request shapes*
-/// (task, generation, query kinds, config rows) while the harness
-/// regenerates the deterministic simulated datasets, so the file stays
-/// tiny and diffable (see `traces/smoke.jsonl` and docs/ci.md).
-///
-/// Trace format (one JSON object per line, `#`-prefixed lines ignored):
-///
-/// ```text
-/// {"trace":"lkgp.requests","version":1,"tasks":3,"configs":8,
-///  "max_epochs":12,"seed":17,"generation_epochs":[4,7,10]}
-/// {"task":0,"generation":2,"queries":[
-///    {"kind":"mean_at_final","rows":[0,1]},
-///    {"kind":"quantiles","rows":[2],"ps":[0.1,0.9]}]}
-/// ```
-///
-/// `generation_epochs[i]` is the observed-epoch budget of generation
-/// `i + 1`; `rows` index the task's config matrix. The replay is
-/// sequential (each request blocks for its answer), which makes the
-/// stats invariants exact:
-///
-/// * zero request errors;
-/// * per shard, `warm_cache_hits + warm_cache_misses ==` replayed
-///   requests (every request is one coalescing group);
-/// * per shard, `engine_solves ==` replayed requests (every typed-query
-///   batch runs exactly one underlying solve through the session layer);
-/// * per shard, `warm_cache_misses ==` distinct generations replayed
-///   (each generation cold-misses exactly once, then warm-hits).
-pub fn replay_trace(args: &Args, path: &str) -> crate::Result<()> {
-    use crate::json::Json;
-
-    let bad = |line: usize, msg: &str| {
-        crate::LkgpError::Coordinator(format!("trace {path}:{line}: {msg}"))
-    };
-    let text = std::fs::read_to_string(path)?;
-    let mut parsed: Vec<(usize, Json)> = Vec::new();
-    for (i, raw) in text.lines().enumerate() {
-        let raw = raw.trim();
-        if raw.is_empty() || raw.starts_with('#') {
-            continue;
-        }
-        let v = Json::parse(raw).map_err(|e| bad(i + 1, &format!("bad json: {e}")))?;
-        parsed.push((i + 1, v));
-    }
-    let Some((hline, header)) = parsed.first() else {
-        return Err(crate::LkgpError::Coordinator(format!("trace {path} is empty")));
-    };
-    if header.get("trace").and_then(Json::as_str) != Some("lkgp.requests") {
-        return Err(bad(*hline, "header must set \"trace\": \"lkgp.requests\""));
-    }
-    let get_n = |key: &str| header.get(key).and_then(Json::as_usize);
-    let tasks = get_n("tasks").ok_or_else(|| bad(*hline, "header needs tasks"))?.max(1);
-    let configs = get_n("configs").ok_or_else(|| bad(*hline, "header needs configs"))?.max(2);
-    let max_epochs = get_n("max_epochs").ok_or_else(|| bad(*hline, "header needs max_epochs"))?;
-    let seed = header.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-    let gen_epochs: Vec<usize> = header
-        .get("generation_epochs")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| bad(*hline, "header needs generation_epochs"))?
-        .iter()
-        .filter_map(Json::as_usize)
-        .collect();
-    if gen_epochs.is_empty() || gen_epochs.iter().any(|&e| e == 0 || e > max_epochs) {
-        return Err(bad(*hline, "generation_epochs must be in 1..=max_epochs"));
-    }
-
-    // Parse request lines up front so a malformed trace fails before any
-    // solve runs.
-    let mut requests: Vec<TraceRequest> = Vec::new();
-    for (line, v) in parsed.iter().skip(1) {
-        let line = *line;
-        let task = v
-            .get("task")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| bad(line, "request needs task"))?;
-        if task >= tasks {
-            return Err(bad(line, "task out of range"));
-        }
-        let generation = v
-            .get("generation")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| bad(line, "request needs generation"))? as u64;
-        if generation == 0 || generation as usize > gen_epochs.len() {
-            return Err(bad(line, "generation out of range"));
-        }
-        let raw_queries = v
-            .get("queries")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| bad(line, "request needs queries"))?;
-        if raw_queries.is_empty() {
-            return Err(bad(line, "request needs at least one query"));
-        }
-        requests.push(TraceRequest {
-            line,
-            task,
-            generation,
-            queries: raw_queries
-                .iter()
-                .map(|q| parse_trace_query(q, configs, max_epochs).map_err(|m| bad(line, &m)))
-                .collect::<crate::Result<Vec<TraceQuery>>>()?,
-        });
-    }
-    if requests.is_empty() {
-        return Err(crate::LkgpError::Coordinator(format!(
-            "trace {path} has a header but no requests"
-        )));
-    }
-
-    // Deterministic simulated corpus: one LCBench-style task per shard,
-    // observed progressively so generation g has `generation_epochs[g-1]`
-    // epochs on config 0 (configs stagger by index for realistic masks).
-    let presets = crate::lcbench::Preset::all();
-    let mut snapshots: Vec<Vec<Snapshot>> = Vec::with_capacity(tasks);
-    for t in 0..tasks {
-        let mut rng = crate::rng::Pcg64::new(seed + t as u64);
-        let task = crate::lcbench::Task::generate(presets[t % presets.len()], configs, &mut rng);
-        let mut reg = Registry::new();
-        let ids: Vec<TrialId> = (0..task.n())
-            .map(|i| reg.add(task.configs.row(i).to_vec()))
-            .collect();
-        let mut store = CurveStore::new(max_epochs);
-        let mut observed = vec![0usize; task.n()];
-        let mut snaps = Vec::with_capacity(gen_epochs.len());
-        for &budget in &gen_epochs {
-            for (i, &id) in ids.iter().enumerate() {
-                let upto = budget.saturating_sub(i % 3).max(1).min(max_epochs);
-                while observed[i] < upto {
-                    let j = observed[i].min(task.m() - 1);
-                    reg.observe(id, task.curves[(i, j)], max_epochs)?;
-                    observed[i] += 1;
-                }
-            }
-            snaps.push(store.snapshot(&reg)?);
-        }
-        snapshots.push(snaps);
-    }
-    let d = snapshots[0][0].data.d();
-    let theta = crate::gp::Theta::default_packed(d);
-
-    let workers = args.get_usize("workers", tasks.min(crate::util::num_threads())).max(1);
-    let engines: Vec<Box<dyn crate::runtime::Engine>> = (0..tasks)
-        .map(|_| Box::<crate::runtime::RustEngine>::default() as Box<dyn crate::runtime::Engine>)
-        .collect();
-    // The misses == distinct-generations invariant needs the keyed LRU to
-    // retain every replayed generation, so size it from the trace.
-    let warm_cache = gen_epochs.len().max(PoolCfg::default().warm_cache);
-    let pool = ServicePool::spawn(engines, PoolCfg { workers, warm_cache, ..Default::default() });
     println!(
-        "replay: {path} -> {tasks} shards, {} generations, {} requests",
-        gen_epochs.len(),
-        requests.len()
+        "admission: {tasks} shards admitted, {} materialized, {} evicted, {} skipped",
+        pool.materialized(),
+        pool.evicted(),
+        skipped.len(),
     );
-
-    // Sequential replay: deterministic coalescing (one group per request)
-    // makes the stats invariants exact equalities.
-    let mut errors = 0usize;
-    let mut per_shard = vec![0u64; tasks];
-    let mut shard_gens: Vec<std::collections::BTreeSet<u64>> =
-        vec![std::collections::BTreeSet::new(); tasks];
-    for req in &requests {
-        let snap = snapshots[req.task][(req.generation - 1) as usize].clone();
-        let queries: Vec<Query> = req.queries.iter().map(|q| q.materialize(&snap)).collect();
-        let n_queries = queries.len();
-        let answers = pool.handle(req.task).query(snap, theta.clone(), queries);
-        per_shard[req.task] += 1;
-        shard_gens[req.task].insert(req.generation);
-        match answers {
-            Ok(a) if a.len() == n_queries => {}
-            Ok(_) => {
-                errors += 1;
-                eprintln!("replay line {}: wrong answer count", req.line);
-            }
-            Err(e) => {
-                errors += 1;
-                eprintln!("replay line {}: {e}", req.line);
-            }
-        }
+    if let Some(rec) = recorder {
+        rec.lock().unwrap().finish(&pool)?;
     }
-
-    let mut violations = Vec::new();
-    for t in 0..tasks {
-        let stats = pool.stats(t);
-        let hits = stats.warm_cache_hits.load(std::sync::atomic::Ordering::Relaxed);
-        let misses = stats.warm_cache_misses.load(std::sync::atomic::Ordering::Relaxed);
-        let solves = stats.engine_solves.load(std::sync::atomic::Ordering::Relaxed);
-        let want = per_shard[t];
-        let want_misses = shard_gens[t].len() as u64;
-        println!(
-            "shard {t}: requests={want} warm_cache={hits}h/{misses}m engine_solves={solves}"
-        );
-        if hits + misses != want {
-            violations.push(format!(
-                "shard {t}: warm_cache_hits + warm_cache_misses = {} != requests {want}",
-                hits + misses
-            ));
-        }
-        if misses != want_misses {
-            violations.push(format!(
-                "shard {t}: warm_cache_misses = {misses} != distinct generations {want_misses}"
-            ));
-        }
-        if solves != want {
-            violations.push(format!(
-                "shard {t}: engine_solves = {solves} != requests {want}"
-            ));
-        }
-    }
-    println!(
-        "TRACE_REPLAY file={path} requests={} errors={errors} violations={}",
-        requests.len(),
-        violations.len()
-    );
-    if errors > 0 || !violations.is_empty() {
-        for v in &violations {
-            eprintln!("REPLAY_VIOLATION {v}");
-        }
-        return Err(crate::LkgpError::Coordinator(format!(
-            "trace replay failed: {errors} request errors, {} invariant violations",
-            violations.len()
-        )));
-    }
-    println!("REPLAY_OK");
     Ok(())
-}
-
-/// Parse one trace query object into a [`TraceQuery`].
-fn parse_trace_query(
-    v: &crate::json::Json,
-    configs: usize,
-    max_epochs: usize,
-) -> std::result::Result<TraceQuery, String> {
-    use crate::json::Json;
-    let kind = v.get("kind").and_then(Json::as_str).ok_or("query needs kind")?;
-    let rows: Vec<usize> = v
-        .get("rows")
-        .and_then(Json::as_arr)
-        .ok_or("query needs rows")?
-        .iter()
-        .filter_map(Json::as_usize)
-        .collect();
-    if rows.is_empty() {
-        return Err("query needs at least one row".into());
-    }
-    if rows.iter().any(|&r| r >= configs) {
-        return Err(format!("row index out of range (task has {configs} configs)"));
-    }
-    match kind {
-        "mean_at_final" => Ok(TraceQuery::MeanAtFinal { rows }),
-        "variance" => Ok(TraceQuery::Variance { rows }),
-        "quantiles" => {
-            let ps: Vec<f64> = v
-                .get("ps")
-                .and_then(Json::as_arr)
-                .ok_or("quantiles needs ps")?
-                .iter()
-                .filter_map(Json::as_f64)
-                .collect();
-            if ps.is_empty() || ps.iter().any(|&p| !(p > 0.0 && p < 1.0)) {
-                return Err("quantiles ps must lie in (0, 1)".into());
-            }
-            Ok(TraceQuery::Quantiles { rows, ps })
-        }
-        "mean_at_steps" => {
-            let steps: Vec<usize> = v
-                .get("steps")
-                .and_then(Json::as_arr)
-                .ok_or("mean_at_steps needs steps")?
-                .iter()
-                .filter_map(Json::as_usize)
-                .collect();
-            if steps.is_empty() || steps.iter().any(|&s| s >= max_epochs) {
-                return Err(format!("steps must lie in 0..{max_epochs}"));
-            }
-            Ok(TraceQuery::MeanAtSteps { rows, steps })
-        }
-        other => Err(format!("unknown query kind '{other}'")),
-    }
 }

@@ -34,6 +34,26 @@ where
     }
 }
 
+/// [`EpochRunner`] over one corpus task: trial `i` replays config `i`'s
+/// recorded curve (trials are registered in config order; a trial id
+/// beyond the task's configs is a caller bug and panics, like the
+/// historical `SimRunner` indexing did). Requests past a config's
+/// observed prefix repeat its last recorded value — an early-stopped dump
+/// has nothing later to reveal, and a constant tail is the conservative
+/// stand-in. For full-length tasks (every simulated one) this is exactly
+/// the historical `SimRunner` clamp, value for value.
+pub struct CorpusRunner {
+    pub task: std::sync::Arc<crate::lcbench::Task>,
+}
+
+impl EpochRunner for CorpusRunner {
+    fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
+        let i = trial.0;
+        let last = self.task.lengths[i].max(1) - 1;
+        self.task.curves[(i, epoch.min(last).min(self.task.m() - 1))]
+    }
+}
+
 /// Scheduler configuration.
 #[derive(Clone, Debug)]
 pub struct SchedulerCfg {

@@ -125,6 +125,19 @@ pub struct ServiceStats {
     /// and the requests were handed back to the writer, so no stale
     /// replica answer is ever delivered.
     pub stale_replica_retires: AtomicU64,
+    /// Generations pre-warmed on refit completion: the writer ran the
+    /// fresh generation's training solve right after fitting and cached a
+    /// replica-ready lineage, so the first read burst against it forks
+    /// instead of serializing on a cold solve. Pre-warm solves are counted
+    /// here (plus `cg_iters`/`cg_mvm_rows`), NOT in `engine_solves`, which
+    /// stays a query-path counter (the replay equalities and the
+    /// `BENCH_replicas.json` gates depend on that).
+    pub prewarmed: AtomicU64,
+    /// Rank of the factored CG preconditioner used by this shard's most
+    /// recent solve (0 = unpreconditioned). Makes `PrecondCfg::Auto`'s
+    /// fixed 32/64 choices observable in the pool report ahead of the
+    /// adaptive-rank work (ROADMAP).
+    pub precond_rank: AtomicU64,
 }
 
 impl ServiceStats {
@@ -225,6 +238,11 @@ impl WarmLru {
         }
         self.entries.insert(0, (generation, w));
         self.entries.truncate(self.cap);
+    }
+
+    /// Drop every cached lineage (shard eviction).
+    fn clear(&mut self) {
+        self.entries.clear();
     }
 }
 
@@ -364,6 +382,9 @@ fn flush_queries(
                 stats
                     .engine_solves
                     .fetch_add(solves as u64, Ordering::Relaxed);
+                if let Some(f) = &out_precond {
+                    stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
+                }
                 match (warm_enabled, alpha) {
                     (true, Some(alpha)) => {
                         slot.warm.lock().unwrap().put(Arc::new(WarmStart {
@@ -513,6 +534,72 @@ fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> 
     Theta::default_packed(d)
 }
 
+/// Pre-warm a freshly refitted generation on the writer: run the training
+/// solve once under the fitted theta (warm-started from whatever lineage
+/// exists) and cache the converged alpha as replica-ready `WarmStart`
+/// lineage for `snapshot.generation`, so the first read burst against the
+/// fresh generation forks off the cache instead of serializing on a cold
+/// writer solve (docs/serving.md). Skipped when the generation already has
+/// alpha-carrying lineage (nothing to warm — and clobbering it would
+/// replace a richer entry, e.g. one with cached cross solves) or when the
+/// engine has no session path. Pre-warm work lands in
+/// `ServiceStats::{prewarmed, cg_iters, cg_mvm_rows}` but NOT in
+/// `engine_solves` (see the field docs).
+fn prewarm_generation(
+    slot: &mut EngineSlot,
+    snapshot: &Snapshot,
+    theta: Vec<f64>,
+    cfg: SolverCfg,
+    stats: &ServiceStats,
+) {
+    let (guess, precond) = {
+        let mut warm = slot.warm.lock().unwrap();
+        if warm
+            .peek(snapshot.generation)
+            .map_or(false, |w| !w.alpha.is_empty())
+        {
+            return; // already replica-ready
+        }
+        match warm.get(snapshot.generation).or_else(|| warm.latest().cloned()) {
+            Some(w) => (
+                w.embed_alpha(&snapshot.row_ids, snapshot.data.m()),
+                w.precond.clone(),
+            ),
+            None => (None, None),
+        }
+    };
+    let mut post = Posterior::new(snapshot.data.clone(), theta.clone(), cfg)
+        .with_guess(guess)
+        .with_precond(precond);
+    if post.prewarm().is_err() {
+        return; // numeric failure: the read path simply stays cold
+    }
+    let Some(alpha) = post.alpha().map(|a| a.to_vec()) else {
+        return;
+    };
+    let precond = post.precond();
+    if let Some(f) = &precond {
+        stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
+    }
+    slot.warm.lock().unwrap().put(Arc::new(WarmStart {
+        generation: snapshot.generation,
+        theta,
+        row_ids: (*snapshot.row_ids).clone(),
+        m: snapshot.data.m(),
+        alpha,
+        xq: None,
+        cross: Vec::new(),
+        precond,
+    }));
+    stats.prewarmed.fetch_add(1, Ordering::Relaxed);
+    stats
+        .cg_iters
+        .fetch_add(post.cg_iters() as u64, Ordering::Relaxed);
+    stats
+        .cg_mvm_rows
+        .fetch_add(post.cg_mvm_rows() as u64, Ordering::Relaxed);
+}
+
 /// Cache the fitted theta in the shard lineage, preserving any cached
 /// alpha and factored preconditioner (both solved under nearby
 /// hyper-parameters, so both remain excellent across the refit).
@@ -548,6 +635,7 @@ fn process_batch(
     batch: Vec<Request>,
     stats: &ServiceStats,
     warm_enabled: bool,
+    prewarm: bool,
 ) -> bool {
     let mut pending: Vec<PendingQuery> = Vec::new();
     for req in batch {
@@ -602,6 +690,14 @@ fn process_batch(
                 if warm_enabled {
                     if let Ok(theta) = &result {
                         record_fit_lineage(slot, &snapshot, theta.clone());
+                        // Pre-warm BEFORE acknowledging the refit, so the
+                        // lineage is replica-ready the moment the caller
+                        // can start issuing reads against the fresh fit.
+                        if prewarm {
+                            if let Some(cfg) = slot.engine.session_cfg() {
+                                prewarm_generation(slot, &snapshot, theta.clone(), cfg, stats);
+                            }
+                        }
                     }
                 }
                 let _ = resp.send(result);
@@ -777,7 +873,7 @@ fn worker_loop(engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<Servic
         while let Ok(r) = rx.try_recv() {
             queue.push(r);
         }
-        if !process_batch(&mut slot, queue, &stats, false) {
+        if !process_batch(&mut slot, queue, &stats, false, false) {
             return;
         }
     }
@@ -808,6 +904,13 @@ pub struct PoolCfg {
     /// on the writer, and a generation fence retires replicas whose
     /// generation a writer has advanced past (see docs/serving.md).
     pub max_replicas: usize,
+    /// Pre-warm freshly refitted generations: after a successful `Refit`,
+    /// the writer immediately runs the new generation's training solve and
+    /// caches replica-ready lineage (`ServiceStats::prewarmed`), closing
+    /// the "first read burst against a fresh fit serializes on the writer"
+    /// gap. Requires `warm_start`; no-op for engines without a session
+    /// path.
+    pub prewarm: bool,
 }
 
 impl Default for PoolCfg {
@@ -823,6 +926,7 @@ impl Default for PoolCfg {
             warm_start: true,
             warm_cache: 4,
             max_replicas: 2,
+            prewarm: true,
         }
     }
 }
@@ -844,13 +948,27 @@ struct PoolQueues {
     shutdown: bool,
 }
 
+/// Builds one engine per shard id, on demand. Pools admitted from a
+/// corpus materialize shards lazily through this (see
+/// [`ServicePool::from_corpus`]).
+pub type EngineFactory = Box<dyn Fn(usize) -> Box<dyn Engine> + Send + Sync>;
+
 struct PoolShared {
     queues: Mutex<PoolQueues>,
     /// Workers wait here for claimable work.
     work_cv: Condvar,
     /// Submitters wait here for queue space (backpressure).
     space_cv: Condvar,
-    shards: Vec<Mutex<EngineSlot>>,
+    /// Per-shard engine slot. `None` = admitted but never touched: pools
+    /// built by [`ServicePool::from_corpus`] materialize a slot through
+    /// `factory` on a shard's first writer claim, so admitting a
+    /// 1000-task corpus costs 1000 queue cells, not 1000 engines.
+    /// `spawn` pre-materializes every slot (the historical behavior).
+    shards: Vec<Mutex<Option<EngineSlot>>>,
+    /// Engine builder for lazy shards (`None` for `spawn` pools, which
+    /// also makes `evict_idle` a no-op — engines handed in by the caller
+    /// cannot be rebuilt).
+    factory: Option<EngineFactory>,
     /// Each shard's keyed warm-start cache, shared between the writer
     /// (same `Arc` lives in the shard's `EngineSlot`) and read-only
     /// replicas. Lock order where both are held: `queues` before `warm`;
@@ -862,14 +980,26 @@ struct PoolShared {
     /// a replica never answers a generation a writer has advanced past.
     fences: Vec<AtomicU64>,
     /// Per-shard solver config for replica `Posterior`s, captured from
-    /// `Engine::session_cfg` at spawn (`None` disables replicas for that
-    /// shard — e.g. artifact engines whose answers don't come from
-    /// `gp::session`).
-    session_cfgs: Vec<Option<SolverCfg>>,
+    /// `Engine::session_cfg` at spawn or lazy materialization (`None`
+    /// inside disables replicas for that shard — e.g. artifact engines
+    /// whose answers don't come from `gp::session`; an unset cell means
+    /// the shard never materialized, which also disables replicas — there
+    /// is no lineage to fork anyway).
+    session_cfgs: Vec<std::sync::OnceLock<Option<SolverCfg>>>,
     stats: Vec<Arc<ServiceStats>>,
+    /// Shards materialized over the pool's lifetime (monotone; eviction
+    /// does not decrement — see `live_shards`).
+    materialized: AtomicU64,
+    /// Shards evicted by `evict_idle` over the pool's lifetime.
+    evicted: AtomicU64,
+    /// Per-shard `enqueued` watermark at the previous `evict_idle` sweep.
+    evict_seen: Vec<AtomicU64>,
+    /// Fingerprint of the corpus this pool was admitted from, if any.
+    corpus_fingerprint: Option<String>,
     max_queue: usize,
     warm_start: bool,
     max_replicas: usize,
+    prewarm: bool,
 }
 
 /// Multi-task sharded prediction service: one engine shard per task id, a
@@ -882,18 +1012,68 @@ pub struct ServicePool {
 
 impl ServicePool {
     /// Spawn a pool with one shard per engine and `cfg.workers` shared
-    /// worker threads.
+    /// worker threads. Every shard is materialized up front (the
+    /// historical behavior); see [`ServicePool::from_corpus`] for lazy
+    /// admission.
     pub fn spawn(engines: Vec<Box<dyn Engine>>, cfg: PoolCfg) -> Self {
-        let session_cfgs: Vec<Option<SolverCfg>> =
-            engines.iter().map(|e| e.session_cfg()).collect();
+        let session_cfgs: Vec<std::sync::OnceLock<Option<SolverCfg>>> = engines
+            .iter()
+            .map(|e| {
+                let cell = std::sync::OnceLock::new();
+                let _ = cell.set(e.session_cfg());
+                cell
+            })
+            .collect();
         let warm: Vec<Arc<Mutex<WarmLru>>> = (0..engines.len())
             .map(|_| Arc::new(Mutex::new(WarmLru::new(cfg.warm_cache))))
             .collect();
-        let shards: Vec<Mutex<EngineSlot>> = engines
+        let n = engines.len();
+        let shards: Vec<Mutex<Option<EngineSlot>>> = engines
             .into_iter()
             .zip(&warm)
-            .map(|(engine, w)| Mutex::new(EngineSlot { engine, warm: w.clone() }))
+            .map(|(engine, w)| Mutex::new(Some(EngineSlot { engine, warm: w.clone() })))
             .collect();
+        Self::build(shards, None, warm, session_cfgs, None, n as u64, cfg)
+    }
+
+    /// Admit every task of a corpus as a shard, materializing engines
+    /// lazily: a shard builds its engine through `factory` on the first
+    /// request that reaches it, so a 1000-task corpus with a 5-task hot
+    /// set pays for 5 engines. Idle shards can be torn back down with
+    /// [`ServicePool::evict_idle`]. The pool records the corpus
+    /// fingerprint for reports and trace headers.
+    pub fn from_corpus(
+        corpus: &dyn crate::lcbench::corpus::Corpus,
+        factory: EngineFactory,
+        cfg: PoolCfg,
+    ) -> Self {
+        let n = corpus.len();
+        let warm: Vec<Arc<Mutex<WarmLru>>> = (0..n)
+            .map(|_| Arc::new(Mutex::new(WarmLru::new(cfg.warm_cache))))
+            .collect();
+        let shards: Vec<Mutex<Option<EngineSlot>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let session_cfgs = (0..n).map(|_| std::sync::OnceLock::new()).collect();
+        Self::build(
+            shards,
+            Some(factory),
+            warm,
+            session_cfgs,
+            Some(corpus.fingerprint()),
+            0,
+            cfg,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        shards: Vec<Mutex<Option<EngineSlot>>>,
+        factory: Option<EngineFactory>,
+        warm: Vec<Arc<Mutex<WarmLru>>>,
+        session_cfgs: Vec<std::sync::OnceLock<Option<SolverCfg>>>,
+        corpus_fingerprint: Option<String>,
+        materialized: u64,
+        cfg: PoolCfg,
+    ) -> Self {
         let n = shards.len();
         let shared = Arc::new(PoolShared {
             queues: Mutex::new(PoolQueues {
@@ -906,13 +1086,19 @@ impl ServicePool {
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             shards,
+            factory,
             warm,
             fences: (0..n).map(|_| AtomicU64::new(0)).collect(),
             session_cfgs,
             stats: (0..n).map(|_| Arc::new(ServiceStats::default())).collect(),
+            materialized: AtomicU64::new(materialized),
+            evicted: AtomicU64::new(0),
+            evict_seen: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            corpus_fingerprint,
             max_queue: cfg.max_queue.max(1),
             warm_start: cfg.warm_start,
             max_replicas: cfg.max_replicas,
+            prewarm: cfg.prewarm,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -926,6 +1112,82 @@ impl ServicePool {
     /// Number of shards (tasks) in the pool.
     pub fn shards(&self) -> usize {
         self.shared.shards.len()
+    }
+
+    /// Shards materialized over the pool's lifetime (monotone: re-warming
+    /// an evicted shard counts again).
+    pub fn materialized(&self) -> u64 {
+        self.shared.materialized.load(Ordering::Relaxed)
+    }
+
+    /// Shards torn down by [`ServicePool::evict_idle`] so far.
+    pub fn evicted(&self) -> u64 {
+        self.shared.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Shards currently holding a live engine.
+    pub fn live_shards(&self) -> usize {
+        self.shared
+            .shards
+            .iter()
+            .filter(|s| s.lock().map(|g| g.is_some()).unwrap_or(false))
+            .count()
+    }
+
+    /// Fingerprint of the corpus this pool was admitted from, if any.
+    pub fn corpus_fingerprint(&self) -> Option<&str> {
+        self.shared.corpus_fingerprint.as_deref()
+    }
+
+    /// Tear down shards that saw no traffic since the previous sweep:
+    /// drop the engine and clear the warm cache for every quiet,
+    /// unmaterialized-able shard (lazy pools only — `spawn` engines cannot
+    /// be rebuilt, so the call is a no-op there). Returns the number of
+    /// shards evicted this sweep. An evicted shard is re-materialized
+    /// transparently by its next request; call this periodically (e.g.
+    /// between scheduler rounds) to keep a wide corpus's resident set at
+    /// its hot set.
+    pub fn evict_idle(&self) -> usize {
+        let shared = &self.shared;
+        if shared.factory.is_none() {
+            return 0;
+        }
+        let mut freed = 0usize;
+        for si in 0..shared.shards.len() {
+            // Claim the shard exactly like a writer would so the teardown
+            // can never race an engine call or a replica claim.
+            {
+                let mut q = shared.queues.lock().unwrap();
+                let seen = shared.stats[si].enqueued.load(Ordering::Relaxed);
+                let quiet = seen == shared.evict_seen[si].swap(seen, Ordering::Relaxed);
+                if !quiet
+                    || q.busy[si]
+                    || q.replicas[si] > 0
+                    || !q.pending[si].is_empty()
+                    || q.shutdown
+                {
+                    continue;
+                }
+                q.busy[si] = true;
+            }
+            let had_engine = shared.shards[si]
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .take()
+                .is_some();
+            if had_engine {
+                shared.warm[si].lock().unwrap().clear();
+                shared.evicted.fetch_add(1, Ordering::Relaxed);
+                freed += 1;
+            }
+            {
+                let mut q = shared.queues.lock().unwrap();
+                q.busy[si] = false;
+            }
+            // a request may have queued while the shard was claimed
+            shared.work_cv.notify_one();
+        }
+        freed
     }
 
     /// Enqueue a request for a task shard; blocks while the shard's queue
@@ -1111,10 +1373,15 @@ fn try_steal_reads(
     }
     let k = q.pending.len();
     for si in 0..k {
+        // An unset session_cfg cell means the shard never materialized:
+        // no lineage exists, so there is nothing for a replica to fork.
+        let session_capable = shared.session_cfgs[si]
+            .get()
+            .map_or(false, |c| c.is_some());
         if !q.busy[si]
             || q.pending[si].is_empty()
             || q.replicas[si] >= shared.max_replicas
-            || shared.session_cfgs[si].is_none()
+            || !session_capable
         {
             continue;
         }
@@ -1232,7 +1499,8 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
 fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQuery>) {
     let stats = &shared.stats[si];
     let cfg = shared.session_cfgs[si]
-        .as_ref()
+        .get()
+        .and_then(|c| c.as_ref())
         .expect("replica eligibility checked session_cfg");
     // Same per-request validation the writer applies before coalescing:
     // malformed queries fail alone and never poison a group. A request is
@@ -1348,6 +1616,9 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
         stats
             .cg_mvm_rows
             .fetch_add(post.cg_mvm_rows() as u64, Ordering::Relaxed);
+        if let Some(f) = post.precond() {
+            stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
+        }
         match result {
             Ok(answers) => {
                 stats
@@ -1444,10 +1715,32 @@ fn pool_worker(shared: Arc<PoolShared>) {
                 // it, shed the poisoned-lock state, and always clear the
                 // busy flag below.
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let mut slot = shared.shards[si]
+                    let mut guard = shared.shards[si]
                         .lock()
                         .unwrap_or_else(|poisoned| poisoned.into_inner());
-                    process_batch(&mut slot, batch, &shared.stats[si], shared.warm_start);
+                    // Lazy admission: a corpus shard materializes its
+                    // engine on first writer claim (and after eviction).
+                    if guard.is_none() {
+                        let factory = shared
+                            .factory
+                            .as_ref()
+                            .expect("unmaterialized shard in a pool without a factory");
+                        let engine = factory(si);
+                        let _ = shared.session_cfgs[si].set(engine.session_cfg());
+                        shared.materialized.fetch_add(1, Ordering::Relaxed);
+                        *guard = Some(EngineSlot {
+                            engine,
+                            warm: shared.warm[si].clone(),
+                        });
+                    }
+                    let slot = guard.as_mut().expect("materialized above");
+                    process_batch(
+                        slot,
+                        batch,
+                        &shared.stats[si],
+                        shared.warm_start,
+                        shared.prewarm,
+                    );
                 }));
                 if run.is_err() {
                     eprintln!("lkgp: pool worker recovered from a panic on shard {si}");

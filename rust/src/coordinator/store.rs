@@ -126,6 +126,31 @@ pub struct Snapshot {
     pub warm: Option<Arc<WarmStart>>,
 }
 
+impl Snapshot {
+    /// Observed prefix length per registered config, in `all_ids` order
+    /// (0 for configs with no observations yet). This is the per-config
+    /// state a trace's generation line pins: replaying the lengths against
+    /// the same corpus reconstructs this snapshot's training set exactly
+    /// (coordinator::trace, docs/data.md).
+    pub fn observed_lengths(&self) -> Vec<usize> {
+        let pos: std::collections::HashMap<TrialId, usize> = self
+            .row_ids
+            .iter()
+            .enumerate()
+            .map(|(r, &id)| (id, r))
+            .collect();
+        let m = self.data.m();
+        self.all_ids
+            .iter()
+            .map(|id| {
+                pos.get(id).map_or(0, |&r| {
+                    (0..m).filter(|&j| self.data.mask[(r, j)] > 0.0).count()
+                })
+            })
+            .collect()
+    }
+}
+
 /// Builds snapshots from a registry over a fixed epoch grid.
 pub struct CurveStore {
     /// Raw epoch grid (1-based epochs).

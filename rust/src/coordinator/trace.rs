@@ -1,0 +1,1106 @@
+//! Request-trace record and replay: the data plane's regression harness.
+//!
+//! A trace is JSON lines (`#` comments ignored). The header pins the
+//! corpus (`docs/data.md`); subsequent lines are generation definitions,
+//! refits, and typed-query requests. Two versions coexist:
+//!
+//! * **v1** (hand-written smokes, `traces/smoke.jsonl`): the header pins a
+//!   deterministic simulated corpus plus a generation ladder
+//!   (`generation_epochs`), and every non-header line is a query request.
+//!   Sequential v1 replay asserts the exact stats equalities the CI gate
+//!   wall relies on — this path is bit-identical to the pre-corpus
+//!   replayer.
+//! * **v2** (written by `lkgp pool --record`): the header pins the corpus
+//!   by kind + fingerprint (`sim` parameters or a dump-directory path),
+//!   generation lines pin each generation's per-config observed lengths
+//!   (`Snapshot::observed_lengths`), and refit lines replay the write
+//!   path so the generation fence is exercised under load.
+//!
+//! `--concurrent` replays the whole trace as a storm (every request
+//! submitted before any answer is awaited) with **relaxed invariants**:
+//! zero errors, per-shard solve counts bounded above by the submitted
+//! request count (coalescing and replica lineage reuse only ever reduce
+//! work), and a post-storm parity pass — each distinct
+//! `(task, generation, query-signature)` is submitted twice back-to-back
+//! and the two answers must match bit for bit (the warm-cache exact-
+//! lineage path makes the second solve a zero-iteration replay of the
+//! first; this is the same determinism contract `BENCH_replicas.json`
+//! gates).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::gp::session::{Answer, Query};
+use crate::json::Json;
+use crate::lcbench::corpus::{progressive_snapshots, Corpus, TraceCorpus};
+use crate::lcbench::Task;
+use crate::linalg::Matrix;
+use crate::util::Args;
+
+use super::service::{PoolCfg, PredictClient, Request, ServicePool, ShardHandle};
+use super::store::{CurveStore, Snapshot};
+use super::trial::Registry;
+
+// ---------------------------------------------------------------------------
+// Trace queries
+
+/// One typed query parsed from a trace line. The trace stores config ROW
+/// INDICES rather than coordinates — all generations share a task's
+/// config set, so indices are stable and the file stays robust to
+/// transform changes; [`TraceQuery::materialize`] substitutes the
+/// snapshot's normalized rows right before submission.
+enum TraceQuery {
+    MeanAtFinal { rows: Vec<usize> },
+    Variance { rows: Vec<usize> },
+    Quantiles { rows: Vec<usize>, ps: Vec<f64> },
+    MeanAtSteps { rows: Vec<usize>, steps: Vec<usize> },
+}
+
+impl TraceQuery {
+    fn materialize(&self, snap: &Snapshot) -> Query {
+        let xq = |rows: &[usize]| {
+            let d = snap.all_x.cols();
+            let mut m = Matrix::zeros(rows.len(), d);
+            for (r, &i) in rows.iter().enumerate() {
+                let src: Vec<f64> = snap.all_x.row(i).to_vec();
+                m.row_mut(r).copy_from_slice(&src);
+            }
+            m
+        };
+        match self {
+            TraceQuery::MeanAtFinal { rows } => Query::MeanAtFinal { xq: xq(rows) },
+            TraceQuery::Variance { rows } => Query::Variance { xq: xq(rows) },
+            TraceQuery::Quantiles { rows, ps } => {
+                Query::Quantiles { xq: xq(rows), ps: ps.clone() }
+            }
+            TraceQuery::MeanAtSteps { rows, steps } => {
+                Query::MeanAtSteps { xq: xq(rows), steps: steps.clone() }
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            TraceQuery::MeanAtFinal { rows } => Json::obj(vec![
+                ("kind", Json::Str("mean_at_final".into())),
+                ("rows", Json::arr_usize(rows)),
+            ]),
+            TraceQuery::Variance { rows } => Json::obj(vec![
+                ("kind", Json::Str("variance".into())),
+                ("rows", Json::arr_usize(rows)),
+            ]),
+            TraceQuery::Quantiles { rows, ps } => Json::obj(vec![
+                ("kind", Json::Str("quantiles".into())),
+                ("rows", Json::arr_usize(rows)),
+                ("ps", Json::arr_f64(ps)),
+            ]),
+            TraceQuery::MeanAtSteps { rows, steps } => Json::obj(vec![
+                ("kind", Json::Str("mean_at_steps".into())),
+                ("rows", Json::arr_usize(rows)),
+                ("steps", Json::arr_usize(steps)),
+            ]),
+        }
+    }
+
+    /// Map a live typed query back to trace form by locating each query
+    /// row in the snapshot's normalized config matrix (bitwise). `None`
+    /// when the query is not trace-representable (`CurveSamples`, `Mll`,
+    /// or ad-hoc coordinates that match no registered config).
+    fn from_query(q: &Query, all_x: &Matrix) -> Option<TraceQuery> {
+        let map_rows = |xq: &Matrix| -> Option<Vec<usize>> {
+            let mut rows = Vec::with_capacity(xq.rows());
+            'outer: for r in 0..xq.rows() {
+                let target = xq.row(r);
+                for i in 0..all_x.rows() {
+                    if all_x.cols() == xq.cols()
+                        && all_x
+                            .row(i)
+                            .iter()
+                            .zip(target)
+                            .all(|(a, b)| a.to_bits() == b.to_bits())
+                    {
+                        rows.push(i);
+                        continue 'outer;
+                    }
+                }
+                return None;
+            }
+            Some(rows)
+        };
+        match q {
+            Query::MeanAtFinal { xq } => {
+                map_rows(xq).map(|rows| TraceQuery::MeanAtFinal { rows })
+            }
+            Query::Variance { xq } => map_rows(xq).map(|rows| TraceQuery::Variance { rows }),
+            Query::Quantiles { xq, ps } => {
+                map_rows(xq).map(|rows| TraceQuery::Quantiles { rows, ps: ps.clone() })
+            }
+            Query::MeanAtSteps { xq, steps } => {
+                map_rows(xq).map(|rows| TraceQuery::MeanAtSteps { rows, steps: steps.clone() })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse one trace query object into a [`TraceQuery`], validating indices
+/// against the task's config count and grid length.
+fn parse_trace_query(
+    v: &Json,
+    configs: usize,
+    max_epochs: usize,
+) -> std::result::Result<TraceQuery, String> {
+    let kind = v.get("kind").and_then(Json::as_str).ok_or("query needs kind")?;
+    let rows: Vec<usize> = v
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or("query needs rows")?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    if rows.is_empty() {
+        return Err("query needs at least one row".into());
+    }
+    if rows.iter().any(|&r| r >= configs) {
+        return Err(format!("row index out of range (task has {configs} configs)"));
+    }
+    match kind {
+        "mean_at_final" => Ok(TraceQuery::MeanAtFinal { rows }),
+        "variance" => Ok(TraceQuery::Variance { rows }),
+        "quantiles" => {
+            let ps: Vec<f64> = v
+                .get("ps")
+                .and_then(Json::as_arr)
+                .ok_or("quantiles needs ps")?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect();
+            if ps.is_empty() || ps.iter().any(|&p| !(p > 0.0 && p < 1.0)) {
+                return Err("quantiles ps must lie in (0, 1)".into());
+            }
+            Ok(TraceQuery::Quantiles { rows, ps })
+        }
+        "mean_at_steps" => {
+            let steps: Vec<usize> = v
+                .get("steps")
+                .and_then(Json::as_arr)
+                .ok_or("mean_at_steps needs steps")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            if steps.is_empty() || steps.iter().any(|&s| s >= max_epochs) {
+                return Err(format!("steps must lie in 0..{max_epochs}"));
+            }
+            Ok(TraceQuery::MeanAtSteps { rows, steps })
+        }
+        other => Err(format!("unknown query kind '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsed traces
+
+/// One replayable event, in file order.
+enum TraceEvent {
+    /// v2: pins generation `generation` of `task` (per-config observed
+    /// lengths; replay reconstructs the snapshot from the corpus).
+    Gen {
+        line: usize,
+        task: usize,
+        generation: u64,
+        lengths: Vec<usize>,
+    },
+    /// v2: a refit request (the write path; bumps the generation fence).
+    Refit {
+        line: usize,
+        task: usize,
+        generation: u64,
+        seed: u64,
+    },
+    /// A typed-query request.
+    Request {
+        line: usize,
+        task: usize,
+        generation: u64,
+        queries: Vec<TraceQuery>,
+    },
+}
+
+struct ParsedTrace {
+    version: usize,
+    corpus: TraceCorpus,
+    /// v1 only: the generation ladder the header pins.
+    gen_epochs: Vec<usize>,
+    /// v1 only: grid length of the simulated snapshots.
+    max_epochs: usize,
+    events: Vec<TraceEvent>,
+    /// Highest generation any event references, per warm-cache sizing.
+    max_generation: u64,
+    tasks: usize,
+    /// Per-shard engine_solves of the RECORDING run, when the trace
+    /// carries a stats trailer — reported alongside the replay's own
+    /// counts so solve regressions are visible in the output (the hard
+    /// bound a replay enforces is its own submitted-request count; the
+    /// recording coalesced under different timing, so its counts are a
+    /// reference, not an invariant).
+    recorded_solves: Option<Vec<usize>>,
+}
+
+fn parse_trace(path: &str) -> crate::Result<ParsedTrace> {
+    let bad = |line: usize, msg: &str| {
+        crate::LkgpError::Coordinator(format!("trace {path}:{line}: {msg}"))
+    };
+    let text = std::fs::read_to_string(path)?;
+    let mut parsed: Vec<(usize, Json)> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let raw = raw.trim();
+        if raw.is_empty() || raw.starts_with('#') {
+            continue;
+        }
+        let v = Json::parse(raw).map_err(|e| bad(i + 1, &format!("bad json: {e}")))?;
+        parsed.push((i + 1, v));
+    }
+    let Some((hline, header)) = parsed.first() else {
+        return Err(crate::LkgpError::Coordinator(format!("trace {path} is empty")));
+    };
+    let hline = *hline;
+    if header.get("trace").and_then(Json::as_str) != Some("lkgp.requests") {
+        return Err(bad(hline, "header must set \"trace\": \"lkgp.requests\""));
+    }
+    let version = header
+        .get("version")
+        .and_then(Json::as_usize)
+        .unwrap_or(1);
+    let get_n = |key: &str| header.get(key).and_then(Json::as_usize);
+    let seed = header.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+
+    // --- corpus pin -------------------------------------------------------
+    let (corpus, gen_epochs, max_epochs) = match version {
+        1 => {
+            let tasks = get_n("tasks").ok_or_else(|| bad(hline, "header needs tasks"))?.max(1);
+            let configs = get_n("configs")
+                .ok_or_else(|| bad(hline, "header needs configs"))?
+                .max(2);
+            let max_epochs =
+                get_n("max_epochs").ok_or_else(|| bad(hline, "header needs max_epochs"))?;
+            let gen_epochs: Vec<usize> = header
+                .get("generation_epochs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad(hline, "header needs generation_epochs"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            if gen_epochs.is_empty() || gen_epochs.iter().any(|&e| e == 0 || e > max_epochs) {
+                return Err(bad(hline, "generation_epochs must be in 1..=max_epochs"));
+            }
+            (TraceCorpus::sim(tasks, configs, seed), gen_epochs, max_epochs)
+        }
+        2 => {
+            let kind = header
+                .get("corpus")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad(hline, "v2 header needs corpus (\"sim\" or \"dir\")"))?;
+            let corpus = match kind {
+                "sim" => {
+                    let tasks =
+                        get_n("tasks").ok_or_else(|| bad(hline, "sim corpus needs tasks"))?;
+                    let configs =
+                        get_n("configs").ok_or_else(|| bad(hline, "sim corpus needs configs"))?;
+                    TraceCorpus::sim(tasks.max(1), configs.max(2), seed)
+                }
+                "dir" => {
+                    let dir = header
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad(hline, "dir corpus needs path"))?;
+                    let fp = header.get("fingerprint").and_then(Json::as_str);
+                    TraceCorpus::dir(dir, fp)?
+                }
+                other => return Err(bad(hline, &format!("unknown corpus kind '{other}'"))),
+            };
+            // `TraceCorpus::dir` already verified its fingerprint against
+            // the header's; only the sim pin still needs the check here.
+            if matches!(corpus, TraceCorpus::Sim(_)) {
+                if let Some(want) = header.get("fingerprint").and_then(Json::as_str) {
+                    let got = corpus.fingerprint();
+                    if got != want {
+                        return Err(bad(
+                            hline,
+                            &format!("corpus fingerprint {got} does not match the trace's {want}"),
+                        ));
+                    }
+                }
+            }
+            (corpus, Vec::new(), 0)
+        }
+        other => return Err(bad(hline, &format!("unsupported trace version {other}"))),
+    };
+    let tasks = corpus.len();
+
+    // --- events -----------------------------------------------------------
+    // Task shapes for validation (materialized lazily, errors isolated to
+    // the tasks a line actually references).
+    let mut shapes: Vec<Option<(usize, usize)>> = vec![None; tasks];
+    let mut shape = |t: usize, line: usize| -> crate::Result<(usize, usize)> {
+        if t >= tasks {
+            return Err(bad(line, "task out of range"));
+        }
+        if shapes[t].is_none() {
+            let task = corpus.task(t).map_err(|e| bad(line, &e.to_string()))?;
+            shapes[t] = Some((task.n(), task.m()));
+        }
+        Ok(shapes[t].unwrap())
+    };
+
+    let mut events = Vec::new();
+    let mut max_generation = 0u64;
+    let mut recorded_solves: Option<Vec<usize>> = None;
+    for (line, v) in parsed.iter().skip(1) {
+        let line = *line;
+        if v.get("trailer").is_some() {
+            // stats trailer: keep the recording's solve counts for the
+            // replay report
+            recorded_solves = v.get("engine_solves").and_then(Json::as_arr).map(|xs| {
+                xs.iter().filter_map(Json::as_usize).collect()
+            });
+            continue;
+        }
+        let task = v
+            .get("task")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad(line, "line needs task"))?;
+        let generation = v
+            .get("generation")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad(line, "line needs generation"))? as u64;
+        if generation == 0 {
+            return Err(bad(line, "generation must be >= 1"));
+        }
+        if version == 1 && generation as usize > gen_epochs.len() {
+            return Err(bad(line, "generation out of range"));
+        }
+        max_generation = max_generation.max(generation);
+        let (n, m) = if version == 1 {
+            if task >= tasks {
+                return Err(bad(line, "task out of range"));
+            }
+            (
+                header.get("configs").and_then(Json::as_usize).unwrap_or(2).max(2),
+                max_epochs,
+            )
+        } else {
+            shape(task, line)?
+        };
+        if let Some(lengths) = v.get("lengths").and_then(Json::as_arr) {
+            if version == 1 {
+                return Err(bad(line, "generation lines need a version-2 trace"));
+            }
+            let lengths: Vec<usize> = lengths.iter().filter_map(Json::as_usize).collect();
+            if lengths.len() != n {
+                return Err(bad(
+                    line,
+                    &format!("lengths has {} entries, task has {n} configs", lengths.len()),
+                ));
+            }
+            if lengths.iter().any(|&l| l > m) {
+                return Err(bad(line, &format!("lengths exceed the task grid ({m})")));
+            }
+            events.push(TraceEvent::Gen { line, task, generation, lengths });
+            continue;
+        }
+        if v.get("refit").is_some() {
+            if version == 1 {
+                return Err(bad(line, "refit lines need a version-2 trace"));
+            }
+            let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            events.push(TraceEvent::Refit { line, task, generation, seed });
+            continue;
+        }
+        let raw_queries = v
+            .get("queries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad(line, "request needs queries"))?;
+        if raw_queries.is_empty() {
+            return Err(bad(line, "request needs at least one query"));
+        }
+        events.push(TraceEvent::Request {
+            line,
+            task,
+            generation,
+            queries: raw_queries
+                .iter()
+                .map(|q| parse_trace_query(q, n, m).map_err(|msg| bad(line, &msg)))
+                .collect::<crate::Result<Vec<TraceQuery>>>()?,
+        });
+    }
+    if !events
+        .iter()
+        .any(|e| matches!(e, TraceEvent::Request { .. }))
+    {
+        return Err(crate::LkgpError::Coordinator(format!(
+            "trace {path} has a header but no requests"
+        )));
+    }
+    Ok(ParsedTrace {
+        version,
+        corpus,
+        gen_epochs,
+        max_epochs,
+        events,
+        max_generation,
+        tasks,
+        recorded_solves,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot reconstruction
+
+/// Rebuild every snapshot the trace references. v1 regenerates the
+/// deterministic generation ladder (bit-identical to the historical
+/// replayer); v2 replays each generation line's observed lengths against
+/// the pinned corpus, reproducing the recorded run's training sets value
+/// for value (the recorded observations came from the same corpus
+/// curves).
+fn build_snapshots(trace: &ParsedTrace) -> crate::Result<BTreeMap<(usize, u64), Snapshot>> {
+    let mut snaps: BTreeMap<(usize, u64), Snapshot> = BTreeMap::new();
+    if trace.version == 1 {
+        for t in 0..trace.tasks {
+            let task = trace.corpus.task(t)?;
+            for (g, snap) in progressive_snapshots(&task, &trace.gen_epochs, trace.max_epochs)?
+                .into_iter()
+                .enumerate()
+            {
+                snaps.insert((t, g as u64 + 1), snap);
+            }
+        }
+        return Ok(snaps);
+    }
+    struct TaskReplay {
+        task: Arc<Task>,
+        reg: Registry,
+        store: CurveStore,
+        observed: Vec<usize>,
+    }
+    let mut state: BTreeMap<usize, TaskReplay> = BTreeMap::new();
+    for event in &trace.events {
+        let TraceEvent::Gen { line, task: t, generation, lengths } = event else {
+            continue;
+        };
+        let bad = |msg: String| crate::LkgpError::Coordinator(format!("trace line {line}: {msg}"));
+        if !state.contains_key(t) {
+            let task = trace.corpus.task(*t)?;
+            let mut reg = Registry::new();
+            for i in 0..task.n() {
+                reg.add(task.configs.row(i).to_vec());
+            }
+            let m = task.m();
+            state.insert(
+                *t,
+                TaskReplay {
+                    observed: vec![0; task.n()],
+                    task,
+                    reg,
+                    store: CurveStore::new(m),
+                },
+            );
+        }
+        let st = state.get_mut(t).expect("state inserted above");
+        let m = st.task.m();
+        for (i, &target) in lengths.iter().enumerate() {
+            if target < st.observed[i] {
+                return Err(bad(format!(
+                    "config {i} lengths regressed ({} -> {target})",
+                    st.observed[i]
+                )));
+            }
+            while st.observed[i] < target.min(m) {
+                // exactly the CorpusRunner clamp: epochs past an
+                // early-stopped prefix repeat the last recorded value
+                let j = st.observed[i]
+                    .min(st.task.lengths[i].max(1) - 1)
+                    .min(m - 1);
+                st.reg
+                    .observe(super::trial::TrialId(i), st.task.curves[(i, j)], m)?;
+                st.observed[i] += 1;
+            }
+        }
+        let snap = st.store.snapshot(&st.reg)?;
+        if snap.generation != *generation {
+            return Err(bad(format!(
+                "generation lines must be consecutive per task (got {}, expected {generation})",
+                snap.generation
+            )));
+        }
+        snaps.insert((*t, *generation), snap);
+    }
+    // every refit/request must reference a pinned generation
+    for event in &trace.events {
+        let (line, t, g) = match event {
+            TraceEvent::Refit { line, task, generation, .. }
+            | TraceEvent::Request { line, task, generation, .. } => (line, task, generation),
+            TraceEvent::Gen { .. } => continue,
+        };
+        if !snaps.contains_key(&(*t, *g)) {
+            return Err(crate::LkgpError::Coordinator(format!(
+                "trace line {line}: generation {g} of task {t} was never pinned by a \
+                 generation line"
+            )));
+        }
+    }
+    Ok(snaps)
+}
+
+// ---------------------------------------------------------------------------
+// Replay
+
+/// Outcome of a trace replay, for callers that gate on it (ci.sh via the
+/// CLI, the ingest bench via [`run_replay`]).
+pub struct ReplaySummary {
+    /// Query requests replayed (storm only; parity-pass submissions are
+    /// accounted separately).
+    pub requests: usize,
+    /// Refit (write-path) requests replayed.
+    pub refits: usize,
+    /// Request errors (must be zero for a passing replay).
+    pub errors: usize,
+    /// Distinct `(task, generation, signature)` parity groups checked
+    /// (concurrent mode only).
+    pub parity_checks: usize,
+    /// Invariant violations (empty for a passing replay).
+    pub violations: Vec<String>,
+    /// Wall-clock of the storm/sequential request loop (excludes parsing,
+    /// snapshot building, and the parity pass) — the replay-throughput
+    /// number `BENCH_ingest.json` gates.
+    pub wall: Duration,
+}
+
+/// Replay a trace through a fresh [`ServicePool`]. Sequential mode
+/// (`concurrent = false`) asserts the exact v1 equalities (or their v2
+/// relaxations); concurrent mode floods the pool first and then runs the
+/// parity pass. See the module docs for the invariants.
+pub fn run_replay(
+    path: &str,
+    concurrent: bool,
+    workers: Option<usize>,
+) -> crate::Result<ReplaySummary> {
+    let trace = parse_trace(path)?;
+    let snaps = build_snapshots(&trace)?;
+    let tasks = trace.tasks;
+    if snaps.is_empty() {
+        return Err(crate::LkgpError::Coordinator("trace pins no generations".into()));
+    }
+    // theta per snapshot dimensionality (dir corpora may mix task d's)
+    let theta_for = |snap: &Snapshot| crate::gp::Theta::default_packed(snap.data.d());
+
+    let default_workers = if concurrent {
+        // leave headroom for replicas to steal reads behind busy writers
+        (tasks * 2).min(crate::util::num_threads()).max(2)
+    } else {
+        tasks.min(crate::util::num_threads()).max(1)
+    };
+    let workers = workers.unwrap_or(default_workers).max(1);
+    let engines: Vec<Box<dyn crate::runtime::Engine>> = (0..tasks)
+        .map(|_| Box::<crate::runtime::RustEngine>::default() as Box<dyn crate::runtime::Engine>)
+        .collect();
+    // The misses == distinct-generations invariant needs the keyed LRU to
+    // retain every replayed generation, so size it from the trace.
+    let warm_cache = (trace.max_generation as usize).max(PoolCfg::default().warm_cache);
+    let pool = ServicePool::spawn(engines, PoolCfg { workers, warm_cache, ..Default::default() });
+    println!(
+        "replay: {path} v{} ({}) -> {tasks} shards, {} workers, {} events{}",
+        trace.version,
+        trace.corpus.fingerprint(),
+        workers,
+        trace.events.len(),
+        if concurrent { ", concurrent" } else { "" },
+    );
+
+    let mut errors = 0usize;
+    let mut refits = 0usize;
+    let mut per_shard_requests = vec![0u64; tasks];
+    let mut per_shard_parity = vec![0u64; tasks];
+    let mut shard_gens: Vec<BTreeSet<u64>> = vec![BTreeSet::new(); tasks];
+    let snap_of = |t: usize, g: u64| snaps.get(&(t, g)).expect("validated above").clone();
+
+    let t0 = Instant::now();
+    if !concurrent {
+        for event in &trace.events {
+            match event {
+                TraceEvent::Gen { .. } => {}
+                TraceEvent::Refit { line, task, generation, seed } => {
+                    refits += 1;
+                    if let Err(e) =
+                        pool.handle(*task).refit(snap_of(*task, *generation), vec![], *seed)
+                    {
+                        errors += 1;
+                        eprintln!("replay line {line}: refit: {e}");
+                    }
+                }
+                TraceEvent::Request { line, task, generation, queries } => {
+                    let snap = snap_of(*task, *generation);
+                    let theta = theta_for(&snap);
+                    let qs: Vec<Query> = queries.iter().map(|q| q.materialize(&snap)).collect();
+                    let n_queries = qs.len();
+                    per_shard_requests[*task] += 1;
+                    shard_gens[*task].insert(*generation);
+                    match pool.handle(*task).query(snap, theta, qs) {
+                        Ok(a) if a.len() == n_queries => {}
+                        Ok(_) => {
+                            errors += 1;
+                            eprintln!("replay line {line}: wrong answer count");
+                        }
+                        Err(e) => {
+                            errors += 1;
+                            eprintln!("replay line {line}: {e}");
+                        }
+                    }
+                }
+            }
+        }
+    } else {
+        // ---- the storm: submit everything before awaiting anything ----
+        enum PendingAnswer {
+            Query(usize, std::sync::mpsc::Receiver<crate::Result<Vec<Answer>>>, usize),
+            Refit(usize, std::sync::mpsc::Receiver<crate::Result<Vec<f64>>>),
+        }
+        let mut pending = Vec::new();
+        for event in &trace.events {
+            match event {
+                TraceEvent::Gen { .. } => {}
+                TraceEvent::Refit { line, task, generation, seed } => {
+                    refits += 1;
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    pool.submit(
+                        *task,
+                        Request::Refit {
+                            snapshot: snap_of(*task, *generation),
+                            theta0: vec![],
+                            seed: *seed,
+                            resp: rtx,
+                        },
+                    )?;
+                    pending.push(PendingAnswer::Refit(*line, rrx));
+                }
+                TraceEvent::Request { line, task, generation, queries } => {
+                    let snap = snap_of(*task, *generation);
+                    let theta = theta_for(&snap);
+                    let qs: Vec<Query> = queries.iter().map(|q| q.materialize(&snap)).collect();
+                    let n = qs.len();
+                    per_shard_requests[*task] += 1;
+                    shard_gens[*task].insert(*generation);
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    pool.submit(
+                        *task,
+                        Request::Query { snapshot: snap, theta, queries: qs, resp: rtx },
+                    )?;
+                    pending.push(PendingAnswer::Query(*line, rrx, n));
+                }
+            }
+        }
+        for p in pending {
+            match p {
+                PendingAnswer::Refit(line, rrx) => match rrx.recv() {
+                    Ok(Ok(_)) => {}
+                    Ok(Err(e)) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: refit: {e}");
+                    }
+                    Err(_) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: refit response dropped");
+                    }
+                },
+                PendingAnswer::Query(line, rrx, n) => match rrx.recv() {
+                    Ok(Ok(a)) if a.len() == n => {}
+                    Ok(Ok(_)) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: wrong answer count");
+                    }
+                    Ok(Err(e)) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: {e}");
+                    }
+                    Err(_) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: response dropped");
+                    }
+                },
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
+    // ---- parity pass (concurrent mode) -----------------------------------
+    let mut parity_checks = 0usize;
+    let mut violations = Vec::new();
+    if concurrent {
+        let mut groups: BTreeMap<(usize, u64, String), (usize, &Vec<TraceQuery>)> =
+            BTreeMap::new();
+        for event in &trace.events {
+            if let TraceEvent::Request { line, task, generation, queries } = event {
+                let sig = Json::Arr(queries.iter().map(TraceQuery::to_json).collect()).compact();
+                groups.entry((*task, *generation, sig)).or_insert((*line, queries));
+            }
+        }
+        for ((task, generation, _sig), (line, queries)) in &groups {
+            let snap = snap_of(*task, *generation);
+            let theta = theta_for(&snap);
+            let qs: Vec<Query> = queries.iter().map(|q| q.materialize(&snap)).collect();
+            parity_checks += 1;
+            per_shard_parity[*task] += 2;
+            let a = pool.handle(*task).query(snap.clone(), theta.clone(), qs.clone());
+            let b = pool.handle(*task).query(snap, theta, qs);
+            match (a, b) {
+                (Ok(a), Ok(b)) => {
+                    let same =
+                        a.len() == b.len() && a.iter().zip(&b).all(|(x, y)| x.bits_eq(y));
+                    if !same {
+                        violations.push(format!(
+                            "line {line}: back-to-back replays of task {task} gen {generation} \
+                             disagree bitwise"
+                        ));
+                    }
+                }
+                _ => {
+                    errors += 1;
+                    eprintln!("replay line {line}: parity query failed");
+                }
+            }
+        }
+    }
+
+    // ---- invariants -------------------------------------------------------
+    for t in 0..tasks {
+        let stats = pool.stats(t);
+        let hits = stats.warm_cache_hits.load(Ordering::Relaxed);
+        let misses = stats.warm_cache_misses.load(Ordering::Relaxed);
+        let solves = stats.engine_solves.load(Ordering::Relaxed);
+        let want = per_shard_requests[t];
+        let want_misses = shard_gens[t].len() as u64;
+        let bound = want + per_shard_parity[t];
+        let recorded = trace
+            .recorded_solves
+            .as_ref()
+            .and_then(|rs| rs.get(t))
+            .map(|s| format!(" (recording solved {s})"))
+            .unwrap_or_default();
+        println!(
+            "shard {t}: requests={want} warm_cache={hits}h/{misses}m engine_solves={solves}{recorded} \
+             prewarmed={} replicas={}h/{}s/{}r",
+            stats.prewarmed.load(Ordering::Relaxed),
+            stats.replica_hits.load(Ordering::Relaxed),
+            stats.replica_solves.load(Ordering::Relaxed),
+            stats.stale_replica_retires.load(Ordering::Relaxed),
+        );
+        if concurrent {
+            // Relaxed: coalescing/replica reuse only ever reduce solves.
+            if solves > bound {
+                violations.push(format!(
+                    "shard {t}: engine_solves = {solves} exceeds the submitted bound {bound}"
+                ));
+            }
+            if hits + misses > bound {
+                violations.push(format!(
+                    "shard {t}: warm_cache lookups {} exceed the submitted bound {bound}",
+                    hits + misses
+                ));
+            }
+        } else if trace.version == 1 {
+            // Exact v1 equalities (the historical gate wall).
+            if hits + misses != want {
+                violations.push(format!(
+                    "shard {t}: warm_cache_hits + warm_cache_misses = {} != requests {want}",
+                    hits + misses
+                ));
+            }
+            if misses != want_misses {
+                violations.push(format!(
+                    "shard {t}: warm_cache_misses = {misses} != distinct generations {want_misses}"
+                ));
+            }
+            if solves != want {
+                violations.push(format!(
+                    "shard {t}: engine_solves = {solves} != requests {want}"
+                ));
+            }
+        } else {
+            // Sequential v2: refits pre-warm fresh generations, so a
+            // later query can exact-hit a generation that never missed —
+            // equalities relax to bounds.
+            if hits + misses != want {
+                violations.push(format!(
+                    "shard {t}: warm_cache_hits + warm_cache_misses = {} != requests {want}",
+                    hits + misses
+                ));
+            }
+            if misses > want_misses {
+                violations.push(format!(
+                    "shard {t}: warm_cache_misses = {misses} > distinct generations {want_misses}"
+                ));
+            }
+            if solves > want {
+                violations.push(format!(
+                    "shard {t}: engine_solves = {solves} > requests {want}"
+                ));
+            }
+        }
+    }
+    let requests: usize = per_shard_requests.iter().map(|&r| r as usize).sum();
+    println!(
+        "TRACE_REPLAY file={path} version={} requests={requests} refits={refits} \
+         errors={errors} parity_checks={parity_checks} violations={} wall_ms={:.1}",
+        trace.version,
+        violations.len(),
+        wall.as_secs_f64() * 1e3,
+    );
+    Ok(ReplaySummary {
+        requests,
+        refits,
+        errors,
+        parity_checks,
+        violations,
+        wall,
+    })
+}
+
+/// CLI `lkgp pool --replay <file> [--concurrent] [--workers N]`: replay a
+/// trace and exit non-zero on any request error or invariant violation.
+/// Prints `REPLAY_OK` on success (ci.sh greps for it).
+pub fn replay_trace(args: &Args, path: &str) -> crate::Result<()> {
+    let concurrent = args.has("concurrent");
+    let workers = args.get("workers").and_then(|w| w.parse::<usize>().ok());
+    let summary = run_replay(path, concurrent, workers)?;
+    if summary.errors > 0 || !summary.violations.is_empty() {
+        for v in &summary.violations {
+            eprintln!("REPLAY_VIOLATION {v}");
+        }
+        return Err(crate::LkgpError::Coordinator(format!(
+            "trace replay failed: {} request errors, {} invariant violations",
+            summary.errors,
+            summary.violations.len()
+        )));
+    }
+    println!("REPLAY_OK");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Recording
+
+/// Captures live pool traffic as a version-2 trace. Shared behind an
+/// `Arc<Mutex<_>>` by every [`RecordingHandle`]; lines append in arrival
+/// order (per-task order is the issuing scheduler's own program order,
+/// which is all replay relies on — generations are per task).
+pub struct TraceRecorder {
+    path: String,
+    header: Json,
+    lines: Vec<String>,
+    seen_gens: BTreeSet<(usize, u64)>,
+    /// Requests that could not be expressed in trace form (CurveSamples,
+    /// Mll, or query rows matching no registered config) — forwarded to
+    /// the pool but not recorded.
+    skipped: usize,
+    requests: Vec<u64>,
+    refits: Vec<u64>,
+}
+
+impl TraceRecorder {
+    /// New recorder writing to `path` on [`TraceRecorder::finish`]; the
+    /// header pins `corpus` by kind and fingerprint. Fails up front when a
+    /// numeric pin value (e.g. a `--seed` above 2^53) cannot round-trip
+    /// through JSON's f64 numbers — recording it would produce a trace
+    /// whose corpus can never be reconstructed, and the replay-side
+    /// fingerprint mismatch would be far more confusing than this error.
+    pub fn new(corpus: &dyn Corpus, path: &str) -> crate::Result<Self> {
+        let mut map: BTreeMap<String, Json> = BTreeMap::new();
+        map.insert("trace".into(), Json::Str("lkgp.requests".into()));
+        map.insert("version".into(), Json::Num(2.0));
+        map.insert("tasks".into(), Json::Num(corpus.len() as f64));
+        map.insert("fingerprint".into(), Json::Str(corpus.fingerprint()));
+        for (k, v) in corpus.trace_pin() {
+            if let Json::Num(x) = &v {
+                if x.fract() != 0.0 || x.abs() >= 9_007_199_254_740_992.0 {
+                    return Err(crate::LkgpError::Coordinator(format!(
+                        "corpus pin '{k}' = {x} does not round-trip through JSON numbers; \
+                         pick a value below 2^53"
+                    )));
+                }
+            }
+            map.insert(k, v);
+        }
+        let tasks = corpus.len();
+        Ok(TraceRecorder {
+            path: path.to_string(),
+            header: Json::Obj(map),
+            lines: Vec::new(),
+            seen_gens: BTreeSet::new(),
+            skipped: 0,
+            requests: vec![0; tasks],
+            refits: vec![0; tasks],
+        })
+    }
+
+    fn record_gen(&mut self, task: usize, snap: &Snapshot) {
+        if !self.seen_gens.insert((task, snap.generation)) {
+            return;
+        }
+        self.lines.push(
+            Json::obj(vec![
+                ("task", Json::Num(task as f64)),
+                ("generation", Json::Num(snap.generation as f64)),
+                ("lengths", Json::arr_usize(&snap.observed_lengths())),
+            ])
+            .compact(),
+        );
+    }
+
+    fn record_refit(&mut self, task: usize, snap: &Snapshot, seed: u64) {
+        self.record_gen(task, snap);
+        if let Some(r) = self.refits.get_mut(task) {
+            *r += 1;
+        }
+        self.lines.push(
+            Json::obj(vec![
+                ("task", Json::Num(task as f64)),
+                ("generation", Json::Num(snap.generation as f64)),
+                ("refit", Json::Num(1.0)),
+                ("seed", Json::Num(seed as f64)),
+            ])
+            .compact(),
+        );
+    }
+
+    fn record_query(&mut self, task: usize, snap: &Snapshot, queries: &[Query]) {
+        let mapped: Option<Vec<TraceQuery>> = queries
+            .iter()
+            .map(|q| TraceQuery::from_query(q, &snap.all_x))
+            .collect();
+        let Some(mapped) = mapped else {
+            self.skipped += 1;
+            return;
+        };
+        self.record_gen(task, snap);
+        if let Some(r) = self.requests.get_mut(task) {
+            *r += 1;
+        }
+        self.lines.push(
+            Json::obj(vec![
+                ("task", Json::Num(task as f64)),
+                ("generation", Json::Num(snap.generation as f64)),
+                (
+                    "queries",
+                    Json::Arr(mapped.iter().map(TraceQuery::to_json).collect()),
+                ),
+            ])
+            .compact(),
+        );
+    }
+
+    /// Write the trace (header, lines, stats trailer). The trailer keeps
+    /// the recording run's per-shard request/refit/solve counts: the
+    /// replay report prints the recorded solves next to its own for
+    /// regression eyeballing (the enforced solve bound is the replay's
+    /// submitted-request count — the recording coalesced under different
+    /// timing, so its counts are a reference, not an invariant).
+    pub fn finish(&mut self, pool: &ServicePool) -> crate::Result<()> {
+        let solves: Vec<usize> = (0..pool.shards())
+            .map(|t| pool.stats(t).engine_solves.load(Ordering::Relaxed) as usize)
+            .collect();
+        let requests: Vec<usize> = self.requests.iter().map(|&r| r as usize).collect();
+        let refits: Vec<usize> = self.refits.iter().map(|&r| r as usize).collect();
+        let trailer = Json::obj(vec![
+            ("trailer", Json::Num(1.0)),
+            ("requests", Json::arr_usize(&requests)),
+            ("refits", Json::arr_usize(&refits)),
+            ("engine_solves", Json::arr_usize(&solves)),
+        ]);
+        let mut out = String::new();
+        out.push_str("# lkgp request trace v2 (recorded by `lkgp pool --record`; replay with\n");
+        out.push_str("# `lkgp pool --replay FILE [--concurrent]`, see docs/data.md).\n");
+        out.push_str(&self.header.compact());
+        out.push('\n');
+        for line in &self.lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out.push_str(&trailer.compact());
+        out.push('\n');
+        std::fs::write(&self.path, out)?;
+        println!(
+            "recorded {} requests + {} refits ({} unrepresentable skipped) -> {}",
+            requests.iter().sum::<usize>(),
+            refits.iter().sum::<usize>(),
+            self.skipped,
+            self.path,
+        );
+        Ok(())
+    }
+}
+
+/// A [`PredictClient`] that records every replayable request before
+/// forwarding it to its pool shard. Wraps a [`ShardHandle`], so a
+/// `Scheduler` drives it unchanged (`lkgp pool --record`).
+pub struct RecordingHandle {
+    inner: ShardHandle,
+    task: usize,
+    rec: Arc<Mutex<TraceRecorder>>,
+}
+
+impl RecordingHandle {
+    pub fn new(inner: ShardHandle, task: usize, rec: Arc<Mutex<TraceRecorder>>) -> Self {
+        RecordingHandle { inner, task, rec }
+    }
+}
+
+impl PredictClient for RecordingHandle {
+    fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
+        self.rec.lock().unwrap().record_refit(self.task, &snapshot, seed);
+        self.inner.refit(snapshot, theta0, seed)
+    }
+
+    fn query(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        queries: Vec<Query>,
+    ) -> crate::Result<Vec<Answer>> {
+        self.rec
+            .lock()
+            .unwrap()
+            .record_query(self.task, &snapshot, &queries);
+        self.inner.query(snapshot, theta, queries)
+    }
+
+    fn predict_final(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+    ) -> crate::Result<Vec<(f64, f64)>> {
+        let query = vec![Query::MeanAtFinal { xq: xq.clone() }];
+        self.rec
+            .lock()
+            .unwrap()
+            .record_query(self.task, &snapshot, &query);
+        self.inner.predict_final(snapshot, theta, xq)
+    }
+
+    fn sample_curves(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+        xq: Matrix,
+        samples: usize,
+        seed: u64,
+    ) -> crate::Result<Vec<Matrix>> {
+        // sampling is not trace-representable; forward without recording
+        self.inner.sample_curves(snapshot, theta, xq, samples, seed)
+    }
+
+    fn batch_factor(&self) -> f64 {
+        self.inner.batch_factor()
+    }
+}

@@ -81,6 +81,48 @@ pub enum Answer {
     Mll(MllEval),
 }
 
+impl Answer {
+    /// Bitwise equality of two answers — the parity predicate the replica
+    /// gates and the concurrent trace replay share. Stronger than
+    /// `PartialEq` on floats: every value must match bit for bit (NaNs
+    /// included), and differing answer kinds never compare equal.
+    pub fn bits_eq(&self, other: &Answer) -> bool {
+        fn mat_eq(a: &Matrix, b: &Matrix) -> bool {
+            a.rows() == b.rows()
+                && a.cols() == b.cols()
+                && a.data()
+                    .iter()
+                    .zip(b.data())
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        match (self, other) {
+            (Answer::Final(a), Answer::Final(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| {
+                        x.0.to_bits() == y.0.to_bits() && x.1.to_bits() == y.1.to_bits()
+                    })
+            }
+            (Answer::Variance(a), Answer::Variance(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (Answer::Quantiles(a), Answer::Quantiles(b))
+            | (Answer::Steps(a), Answer::Steps(b)) => mat_eq(a, b),
+            (Answer::Curves(a), Answer::Curves(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| mat_eq(x, y))
+            }
+            (Answer::Mll(a), Answer::Mll(b)) => {
+                a.value.to_bits() == b.value.to_bits()
+                    && a.grad.len() == b.grad.len()
+                    && a.grad
+                        .iter()
+                        .zip(&b.grad)
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            _ => false,
+        }
+    }
+}
+
 /// Stack the final-step query matrices of a batch into the layout the
 /// shared `[y, c_1..c_q]` solve uses, deduplicating bitwise-identical
 /// blocks (a `MeanAtFinal` + `Variance` + `Quantiles` trio over the same
@@ -535,6 +577,16 @@ impl Posterior {
             solve_calls: 0,
             last_cg: None,
         }
+    }
+
+    /// Run the training solve now (or reuse it) without answering any
+    /// query — the pre-warm hook: after a refit, the serving layer calls
+    /// this on the writer so the fresh generation's lineage carries a
+    /// converged `alpha` (replica-ready) before the first read arrives
+    /// (docs/serving.md "pre-warm on refit completion"). An injected
+    /// [`Posterior::with_guess`] lineage warms the solve like any other.
+    pub fn prewarm(&mut self) -> Result<()> {
+        self.ensure_alpha()
     }
 
     /// Answer one query (see [`Posterior::answer_batch`]).

@@ -1,0 +1,479 @@
+//! The data plane: many-task corpora behind one [`Corpus`] trait.
+//!
+//! The serving stack historically had two ad-hoc data entry points — the
+//! built-in simulator and a dangling `Task::load_json` nobody above it
+//! consumed. This module unifies them: a [`Corpus`] is an ordered set of
+//! learning-curve tasks with per-task metadata, lazy task materialization,
+//! streaming iteration with **per-task error isolation** (one corrupt file
+//! must not kill a 1000-task run), and a stable [`Corpus::fingerprint`]
+//! that request traces pin so a replay can refuse to run against the wrong
+//! data (docs/data.md).
+//!
+//! Three implementations:
+//!
+//! * [`SimCorpus`] — the deterministic simulator as a corpus. Task `t` is
+//!   `Task::generate(presets[t % 3], configs, Pcg64::new(seed + t))`,
+//!   bit-identical to the historical inline generation in `lkgp pool` and
+//!   the trace replayer, so every simulator-driven path keeps its exact
+//!   behavior through the adapter.
+//! * [`JsonDirCorpus`] — a directory of LCBench-style JSON dumps, one task
+//!   per `*.json` file (sorted by file name), parsed lazily through the
+//!   hardened [`Task::load_json`] and cached. A file that fails
+//!   validation yields an error for *that* task only.
+//! * [`TraceCorpus`] — the corpus a trace header pins (sim parameters or
+//!   a directory path + fingerprint), resolved back into one of the above.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{CurveStore, Registry, Snapshot, TrialId};
+use crate::rng::Pcg64;
+
+use super::{Preset, Task};
+
+/// Per-task metadata a corpus can report without (for sim) or after (for
+/// JSON) materializing the task.
+#[derive(Clone, Debug)]
+pub struct TaskMeta {
+    /// Index of the task within the corpus.
+    pub id: usize,
+    /// Human-readable task name (preset name or file stem).
+    pub name: String,
+    /// Number of hyper-parameter configurations.
+    pub n: usize,
+    /// Grid length (epochs).
+    pub m: usize,
+    /// Hyper-parameter dimensionality.
+    pub d: usize,
+    /// Observed fraction of the (n, m) curve grid — 1.0 when no config is
+    /// early-stopped.
+    pub mask_density: f64,
+}
+
+/// An ordered collection of learning-curve tasks: the single data-plane
+/// abstraction every consumer (pool admission, trace record/replay, CLI,
+/// benches) is written against.
+pub trait Corpus: Send + Sync {
+    /// Number of tasks in the corpus.
+    fn len(&self) -> usize;
+
+    /// Whether the corpus holds no tasks.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Short corpus name for logs and reports.
+    fn name(&self) -> String;
+
+    /// Stable content fingerprint. Traces record it; replays verify it.
+    fn fingerprint(&self) -> String;
+
+    /// Header fields a trace records to pin this corpus: the `"corpus"`
+    /// kind (`"sim"` or `"dir"`) plus whatever reconstructs it
+    /// (`coordinator::trace` resolves the pin back through
+    /// [`TraceCorpus`]).
+    fn trace_pin(&self) -> Vec<(String, crate::json::Json)>;
+
+    /// Materialize (and cache) one task. Errors are per-task: a corrupt
+    /// task leaves every other id servable.
+    fn task(&self, id: usize) -> crate::Result<Arc<Task>>;
+
+    /// Metadata for one task (materializes it for JSON corpora).
+    fn meta(&self, id: usize) -> crate::Result<TaskMeta> {
+        let task = self.task(id)?;
+        Ok(TaskMeta {
+            id,
+            name: task.name.clone(),
+            n: task.n(),
+            m: task.m(),
+            d: task.configs.cols(),
+            mask_density: task.mask_density(),
+        })
+    }
+
+    /// Streaming iteration over `(id, task-or-error)` pairs — the
+    /// error-isolated ingestion loop (`for (id, t) in corpus.tasks()`).
+    fn tasks(&self) -> CorpusIter<'_>
+    where
+        Self: Sized,
+    {
+        CorpusIter { corpus: self, next: 0 }
+    }
+}
+
+/// Iterator returned by [`Corpus::tasks`]: yields every task id with its
+/// materialization result, isolating per-task failures.
+pub struct CorpusIter<'a> {
+    corpus: &'a dyn Corpus,
+    next: usize,
+}
+
+impl Iterator for CorpusIter<'_> {
+    type Item = (usize, crate::Result<Arc<Task>>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.corpus.len() {
+            return None;
+        }
+        let id = self.next;
+        self.next += 1;
+        Some((id, self.corpus.task(id)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprinting
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// SimCorpus
+
+/// The deterministic workload simulator as a corpus (see module docs for
+/// the exact generation recipe — it matches the historical inline paths
+/// bit for bit).
+pub struct SimCorpus {
+    tasks: usize,
+    configs: usize,
+    seed: u64,
+    cache: Mutex<HashMap<usize, Arc<Task>>>,
+}
+
+impl SimCorpus {
+    pub fn new(tasks: usize, configs: usize, seed: u64) -> Self {
+        SimCorpus {
+            tasks: tasks.max(1),
+            configs: configs.max(2),
+            seed,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Configs per task (uniform for simulated corpora).
+    pub fn configs(&self) -> usize {
+        self.configs
+    }
+
+    /// Base RNG seed (task `t` derives `seed + t`).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl Corpus for SimCorpus {
+    fn len(&self) -> usize {
+        self.tasks
+    }
+
+    fn name(&self) -> String {
+        "sim".into()
+    }
+
+    fn fingerprint(&self) -> String {
+        // parameters fully determine the content, so they ARE the print
+        format!("sim-t{}-c{}-s{}", self.tasks, self.configs, self.seed)
+    }
+
+    fn trace_pin(&self) -> Vec<(String, crate::json::Json)> {
+        use crate::json::Json;
+        vec![
+            ("corpus".into(), Json::Str("sim".into())),
+            ("configs".into(), Json::Num(self.configs as f64)),
+            ("seed".into(), Json::Num(self.seed as f64)),
+        ]
+    }
+
+    fn task(&self, id: usize) -> crate::Result<Arc<Task>> {
+        if id >= self.tasks {
+            return Err(crate::LkgpError::Coordinator(format!(
+                "sim corpus has {} tasks, no task {id}",
+                self.tasks
+            )));
+        }
+        if let Some(t) = self.cache.lock().unwrap().get(&id) {
+            return Ok(t.clone());
+        }
+        let presets = Preset::all();
+        let mut rng = Pcg64::new(self.seed + id as u64);
+        let task = Arc::new(Task::generate(
+            presets[id % presets.len()],
+            self.configs,
+            &mut rng,
+        ));
+        self.cache.lock().unwrap().insert(id, task.clone());
+        Ok(task)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JsonDirCorpus
+
+/// A directory of LCBench-style JSON dumps: one task per `*.json` file,
+/// ordered by file name, parsed lazily through [`Task::load_json`].
+pub struct JsonDirCorpus {
+    dir: PathBuf,
+    /// (stem, path) per task, sorted by file name for a stable order.
+    files: Vec<(String, PathBuf)>,
+    cache: Mutex<HashMap<usize, Arc<Task>>>,
+    /// Memoized content digest — computing it reads every file, and
+    /// callers (pool admission, reports, trace headers) ask repeatedly.
+    print: std::sync::OnceLock<String>,
+}
+
+impl JsonDirCorpus {
+    /// Scan `dir` for `*.json` task files. Fails only when the directory
+    /// itself is unreadable or holds no task files — individual files are
+    /// validated lazily, per task.
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut files = Vec::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let stem = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("task")
+                .to_string();
+            files.push((stem, path));
+        }
+        files.sort_by(|a, b| a.1.file_name().cmp(&b.1.file_name()));
+        if files.is_empty() {
+            return Err(crate::LkgpError::Coordinator(format!(
+                "corpus dir {} holds no *.json task files",
+                dir.display()
+            )));
+        }
+        Ok(JsonDirCorpus {
+            dir,
+            files,
+            cache: Mutex::new(HashMap::new()),
+            print: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// The directory this corpus was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Corpus for JsonDirCorpus {
+    fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    fn name(&self) -> String {
+        self.dir.display().to_string()
+    }
+
+    fn fingerprint(&self) -> String {
+        // FNV-1a over (file name, content) in task order: any rename,
+        // reorder, or byte change re-prints. Computed once per corpus
+        // (memoized — it reads every file); unreadable files hash their
+        // error marker so the print stays stable and total.
+        self.print
+            .get_or_init(|| {
+                let mut h = FNV_OFFSET;
+                for (stem, path) in &self.files {
+                    h = fnv1a(stem.as_bytes(), h);
+                    match std::fs::read(path) {
+                        Ok(bytes) => h = fnv1a(&bytes, h),
+                        Err(_) => h = fnv1a(b"<unreadable>", h),
+                    }
+                }
+                format!("dir-{h:016x}")
+            })
+            .clone()
+    }
+
+    fn trace_pin(&self) -> Vec<(String, crate::json::Json)> {
+        use crate::json::Json;
+        vec![
+            ("corpus".into(), Json::Str("dir".into())),
+            ("path".into(), Json::Str(self.dir.display().to_string())),
+        ]
+    }
+
+    fn task(&self, id: usize) -> crate::Result<Arc<Task>> {
+        let Some((stem, path)) = self.files.get(id) else {
+            return Err(crate::LkgpError::Coordinator(format!(
+                "corpus {} has {} tasks, no task {id}",
+                self.dir.display(),
+                self.files.len()
+            )));
+        };
+        if let Some(t) = self.cache.lock().unwrap().get(&id) {
+            return Ok(t.clone());
+        }
+        let text = std::fs::read_to_string(path)?;
+        let task = Arc::new(Task::load_json(stem, &text)?);
+        self.cache.lock().unwrap().insert(id, task.clone());
+        Ok(task)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TraceCorpus
+
+/// The corpus pinned by a recorded trace header: simulator parameters or
+/// a dump-directory path, plus the fingerprint the replay verifies.
+pub enum TraceCorpus {
+    Sim(SimCorpus),
+    Dir(JsonDirCorpus),
+}
+
+impl TraceCorpus {
+    /// Resolve a sim-corpus pin.
+    pub fn sim(tasks: usize, configs: usize, seed: u64) -> Self {
+        TraceCorpus::Sim(SimCorpus::new(tasks, configs, seed))
+    }
+
+    /// Resolve a directory pin (path as recorded, relative to the
+    /// replayer's working directory) and verify the fingerprint when the
+    /// trace carries one — replaying against drifted data is an error,
+    /// not a silent wrong-answer run.
+    pub fn dir(path: &str, fingerprint: Option<&str>) -> crate::Result<Self> {
+        let corpus = JsonDirCorpus::open(path)?;
+        if let Some(want) = fingerprint {
+            let got = corpus.fingerprint();
+            if got != want {
+                return Err(crate::LkgpError::Coordinator(format!(
+                    "corpus {path} fingerprint {got} does not match the trace's {want}"
+                )));
+            }
+        }
+        Ok(TraceCorpus::Dir(corpus))
+    }
+
+    fn inner(&self) -> &dyn Corpus {
+        match self {
+            TraceCorpus::Sim(c) => c,
+            TraceCorpus::Dir(c) => c,
+        }
+    }
+}
+
+impl Corpus for TraceCorpus {
+    fn len(&self) -> usize {
+        self.inner().len()
+    }
+
+    fn name(&self) -> String {
+        self.inner().name()
+    }
+
+    fn fingerprint(&self) -> String {
+        self.inner().fingerprint()
+    }
+
+    fn trace_pin(&self) -> Vec<(String, crate::json::Json)> {
+        self.inner().trace_pin()
+    }
+
+    fn task(&self, id: usize) -> crate::Result<Arc<Task>> {
+        self.inner().task(id)
+    }
+
+    fn meta(&self, id: usize) -> crate::Result<TaskMeta> {
+        self.inner().meta(id)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot reconstruction
+
+/// Build the deterministic generation ladder the v1 trace format pins:
+/// generation `g + 1` observes `gen_epochs[g]` epochs on config 0, with
+/// per-config stagger `i % 3` for realistic prefix masks. Extracted
+/// verbatim from the original replay harness so v1 traces reconstruct
+/// bit-identical snapshots; observation values clamp to the task's
+/// observed prefix so early-stopped (ragged) corpus tasks replay too.
+pub fn progressive_snapshots(
+    task: &Task,
+    gen_epochs: &[usize],
+    max_epochs: usize,
+) -> crate::Result<Vec<Snapshot>> {
+    let mut reg = Registry::new();
+    let ids: Vec<TrialId> = (0..task.n())
+        .map(|i| reg.add(task.configs.row(i).to_vec()))
+        .collect();
+    let mut store = CurveStore::new(max_epochs);
+    let mut observed = vec![0usize; task.n()];
+    let mut snaps = Vec::with_capacity(gen_epochs.len());
+    for &budget in gen_epochs {
+        for (i, &id) in ids.iter().enumerate() {
+            let upto = budget.saturating_sub(i % 3).max(1).min(max_epochs);
+            while observed[i] < upto {
+                let j = observed[i].min(task.lengths[i].saturating_sub(1)).min(task.m() - 1);
+                reg.observe(id, task.curves[(i, j)], max_epochs)?;
+                observed[i] += 1;
+            }
+        }
+        snaps.push(store.snapshot(&reg)?);
+    }
+    Ok(snaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_corpus_matches_inline_generation_bit_for_bit() {
+        let corpus = SimCorpus::new(4, 10, 17);
+        for t in 0..4 {
+            let presets = Preset::all();
+            let mut rng = Pcg64::new(17 + t as u64);
+            let want = Task::generate(presets[t % presets.len()], 10, &mut rng);
+            let got = corpus.task(t).unwrap();
+            assert_eq!(got.curves.data(), want.curves.data(), "task {t}");
+            assert_eq!(got.configs.data(), want.configs.data(), "task {t}");
+        }
+        // cached second read is the same Arc
+        let a = corpus.task(0).unwrap();
+        let b = corpus.task(0).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(corpus.task(4).is_err());
+    }
+
+    #[test]
+    fn sim_meta_and_fingerprint() {
+        let corpus = SimCorpus::new(2, 8, 5);
+        let meta = corpus.meta(1).unwrap();
+        assert_eq!((meta.n, meta.m, meta.d), (8, super::super::EPOCHS, super::super::DIMS));
+        assert_eq!(meta.mask_density, 1.0);
+        assert_eq!(corpus.fingerprint(), "sim-t2-c8-s5");
+        assert_ne!(corpus.fingerprint(), SimCorpus::new(2, 8, 6).fingerprint());
+    }
+
+    #[test]
+    fn progressive_snapshots_build_the_v1_ladder() {
+        let corpus = SimCorpus::new(1, 8, 17);
+        let task = corpus.task(0).unwrap();
+        let snaps = progressive_snapshots(&task, &[4, 7, 10], 12).unwrap();
+        assert_eq!(snaps.len(), 3);
+        for (g, s) in snaps.iter().enumerate() {
+            assert_eq!(s.generation, g as u64 + 1);
+            assert_eq!(s.data.n(), 8);
+            assert_eq!(s.data.m(), 12);
+        }
+        // config 0 observes exactly the budget; config 1 staggers by 1
+        let m0: usize = (0..12).filter(|&j| snaps[0].data.mask[(0, j)] > 0.0).count();
+        let m1: usize = (0..12).filter(|&j| snaps[0].data.mask[(1, j)] > 0.0).count();
+        assert_eq!(m0, 4);
+        assert_eq!(m1, 3);
+    }
+}

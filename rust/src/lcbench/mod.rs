@@ -15,8 +15,13 @@
 //!   divergence regime for extreme learning rates (Figure 1 right)
 //!
 //! If a real LCBench JSON dump is available, [`Task::load_json`] accepts
-//! `{"configs": [[f64; d]], "curves": [[f64; m]]}` and everything
-//! downstream is identical.
+//! `{"configs": [[f64; d]], "curves": [[f64; m]]}` — with ragged
+//! (early-stopped) curve rows and optional unique `"ids"` — and
+//! everything downstream is identical. The [`corpus`] module scales this
+//! from one file to a many-task data plane (simulated, JSON-directory,
+//! and trace-pinned corpora behind one `Corpus` trait).
+
+pub mod corpus;
 
 use crate::gp::lkgp::Dataset;
 use crate::gp::transforms::{TTransform, XTransform, YTransform};
@@ -63,16 +68,24 @@ impl Preset {
     }
 }
 
-/// A learning-curve prediction task: configs + full ground-truth curves.
+/// A learning-curve prediction task: configs + ground-truth curves.
+///
+/// Real dumps are ragged — early-stopped configs record fewer epochs than
+/// the grid — so `lengths[i]` is the observed prefix of curve `i`
+/// (`curves` entries past it are padding zeros). Simulated tasks are
+/// always full (`lengths[i] == m`).
 #[derive(Clone, Debug)]
 pub struct Task {
     pub name: String,
     /// (n, d) raw hyper-parameter configurations.
     pub configs: Matrix,
-    /// (n, m) full learning curves (ground truth).
+    /// (n, m) learning curves (ground truth); entries past `lengths[i]`
+    /// are unobserved padding.
     pub curves: Matrix,
     /// Raw epoch grid 1..=m.
     pub epochs: Vec<f64>,
+    /// Observed prefix length per config (>= 1, <= m).
+    pub lengths: Vec<usize>,
 }
 
 impl Task {
@@ -135,41 +148,109 @@ impl Task {
             configs,
             curves,
             epochs: (1..=EPOCHS).map(|e| e as f64).collect(),
+            lengths: vec![EPOCHS; n],
         }
     }
 
-    /// Load a real LCBench-style dump: `{"configs": [[..]], "curves": [[..]]}`.
+    /// Load a real LCBench-style dump:
+    /// `{"configs": [[..]], "curves": [[..]], "ids": [..]?}`.
+    ///
+    /// Curve rows may be ragged (early-stopped configs); the grid length is
+    /// the longest row and shorter rows keep their observed prefix length
+    /// in [`Task::lengths`]. The loader validates adversarial inputs
+    /// instead of panicking or silently mangling them: non-numeric or
+    /// non-finite values, ragged config rows, empty curves, and duplicate
+    /// `ids` are all hard errors naming the offending row.
     pub fn load_json(name: &str, text: &str) -> crate::Result<Task> {
         let doc = crate::json::Json::parse(text)?;
+        let bad = |msg: String| crate::LkgpError::Manifest(format!("task '{name}': {msg}"));
         let rows = |key: &str| -> crate::Result<Vec<Vec<f64>>> {
             doc.get(key)
                 .and_then(crate::json::Json::as_arr)
-                .ok_or_else(|| crate::LkgpError::Manifest(format!("missing {key}")))?
+                .ok_or_else(|| bad(format!("missing {key}")))?
                 .iter()
-                .map(|r| {
-                    r.as_arr()
-                        .ok_or_else(|| crate::LkgpError::Manifest("row not array".into()))
-                        .map(|xs| xs.iter().filter_map(crate::json::Json::as_f64).collect())
+                .enumerate()
+                .map(|(i, r)| {
+                    let xs = r
+                        .as_arr()
+                        .ok_or_else(|| bad(format!("{key} row {i} is not an array")))?;
+                    xs.iter()
+                        .map(|v| {
+                            let x = v
+                                .as_f64()
+                                .ok_or_else(|| bad(format!("{key} row {i} has a non-number")))?;
+                            if !x.is_finite() {
+                                return Err(bad(format!("{key} row {i} has a non-finite value")));
+                            }
+                            Ok(x)
+                        })
+                        .collect()
                 })
                 .collect()
         };
         let configs = rows("configs")?;
         let curves = rows("curves")?;
-        if configs.is_empty() || configs.len() != curves.len() {
-            return Err(crate::LkgpError::Manifest("configs/curves mismatch".into()));
+        if configs.is_empty() {
+            return Err(bad("configs is empty".into()));
         }
-        let (n, d, m) = (configs.len(), configs[0].len(), curves[0].len());
+        if configs.len() != curves.len() {
+            return Err(bad(format!(
+                "{} configs but {} curves",
+                configs.len(),
+                curves.len()
+            )));
+        }
+        let d = configs[0].len();
+        if d == 0 {
+            return Err(bad("config rows are zero-dimensional".into()));
+        }
+        if let Some(i) = configs.iter().position(|r| r.len() != d) {
+            return Err(bad(format!(
+                "config row {i} has width {}, expected {d}",
+                configs[i].len()
+            )));
+        }
+        if let Some(i) = curves.iter().position(Vec::is_empty) {
+            return Err(bad(format!("curve row {i} is empty")));
+        }
+        if let Some(ids) = doc.get("ids").and_then(crate::json::Json::as_arr) {
+            if ids.len() != configs.len() {
+                return Err(bad(format!(
+                    "{} ids for {} configs",
+                    ids.len(),
+                    configs.len()
+                )));
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for (i, id) in ids.iter().enumerate() {
+                let key = match id {
+                    crate::json::Json::Num(x) if x.is_finite() => format!("{x}"),
+                    crate::json::Json::Str(s) => s.clone(),
+                    _ => return Err(bad(format!("id {i} is neither a number nor a string"))),
+                };
+                if !seen.insert(key.clone()) {
+                    return Err(bad(format!("duplicate config id '{key}' (row {i})")));
+                }
+            }
+        }
+        // ragged curves are legal: the grid is the longest row, shorter
+        // rows are early-stopped prefixes
+        let n = configs.len();
+        let m = curves.iter().map(Vec::len).max().unwrap_or(0);
         let mut cm = Matrix::zeros(n, d);
         let mut vm = Matrix::zeros(n, m);
+        let mut lengths = Vec::with_capacity(n);
         for i in 0..n {
             cm.row_mut(i).copy_from_slice(&configs[i]);
-            vm.row_mut(i).copy_from_slice(&curves[i]);
+            vm.row_mut(i)[..curves[i].len()].copy_from_slice(&curves[i]);
+            lengths.push(curves[i].len());
         }
         Ok(Task {
             name: name.to_string(),
             configs: cm,
             curves: vm,
             epochs: (1..=m).map(|e| e as f64).collect(),
+            lengths,
         })
     }
 
@@ -179,6 +260,13 @@ impl Task {
 
     pub fn m(&self) -> usize {
         self.epochs.len()
+    }
+
+    /// Fraction of the (n, m) curve grid that is observed (1.0 when no
+    /// row is early-stopped) — the mask density a corpus reports per task.
+    pub fn mask_density(&self) -> f64 {
+        let total = (self.n() * self.m()).max(1);
+        self.lengths.iter().sum::<usize>() as f64 / total as f64
     }
 }
 
@@ -402,7 +490,22 @@ mod tests {
         assert_eq!(task.n(), 2);
         assert_eq!(task.m(), 3);
         assert_eq!(task.curves[(1, 2)], 0.55);
+        assert_eq!(task.lengths, vec![3, 3]);
+        assert_eq!(task.mask_density(), 1.0);
         assert!(Task::load_json("bad", "{\"configs\": []}").is_err());
+    }
+
+    #[test]
+    fn json_ragged_curves_are_early_stopped_prefixes() {
+        let text = r#"{"configs": [[0.1], [0.2], [0.3]],
+                       "curves": [[0.5, 0.6, 0.7, 0.8], [0.4], [0.3, 0.35]]}"#;
+        let task = Task::load_json("ragged", text).unwrap();
+        assert_eq!(task.m(), 4);
+        assert_eq!(task.lengths, vec![4, 1, 2]);
+        // padding past the observed prefix is zero
+        assert_eq!(task.curves[(1, 1)], 0.0);
+        assert_eq!(task.curves[(2, 2)], 0.0);
+        assert!((task.mask_density() - 7.0 / 12.0).abs() < 1e-12);
     }
 
     #[test]

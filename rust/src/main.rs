@@ -4,10 +4,13 @@
 //!   serve      run the freeze-thaw AutoML coordinator on a simulated
 //!              LCBench workload (see examples/automl_loop.rs for the
 //!              library-level version)
-//!   pool       run several coordinators concurrently through the
-//!              multi-task sharded ServicePool (see docs/serving.md);
-//!              with --replay FILE it replays a recorded request trace
-//!              and asserts zero errors + stats invariants (docs/ci.md)
+//!   pool       run one coordinator per corpus task concurrently through
+//!              the multi-task sharded ServicePool (see docs/serving.md).
+//!              --corpus sim|DIR picks the data plane (simulator or a
+//!              directory of LCBench-style JSON dumps, docs/data.md);
+//!              --record FILE captures the live traffic as a replayable
+//!              trace; --replay FILE [--concurrent] replays a trace and
+//!              asserts zero errors + stats invariants (docs/ci.md)
 //!   artifacts  print the artifact manifest and verify executables load
 //!   smoke      end-to-end smoke: fit + predict on a toy problem
 //!
@@ -27,7 +30,8 @@ fn main() -> lkgp::Result<()> {
             eprintln!(
                 "usage: lkgp <artifacts|smoke|serve|pool> [--engine rust|xla] \
                  [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off] \
-                 [--replicas N] [--precond off|auto|rank=R] [--replay FILE]"
+                 [--replicas N] [--precond off|auto|rank=R] [--corpus sim|DIR] \
+                 [--record FILE] [--replay FILE [--concurrent]]"
             );
             Ok(())
         }

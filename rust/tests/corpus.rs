@@ -1,0 +1,377 @@
+//! Data-plane e2e: hardened `Task::load_json` on adversarial dumps, the
+//! `Corpus` implementations (sim / JSON-dir / trace-pinned), per-task
+//! error isolation, the checked-in `data/lcbench_mini` fixture, and lazy
+//! pool admission (`ServicePool::from_corpus`) with idle eviction.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lkgp::coordinator::{
+    CurveStore, EngineFactory, PoolCfg, PredictClient, Registry, ServicePool, Snapshot,
+};
+use lkgp::gp::Theta;
+use lkgp::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus, TraceCorpus};
+use lkgp::lcbench::Task;
+use lkgp::linalg::Matrix;
+use lkgp::runtime::{Engine, RustEngine};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .to_path_buf()
+}
+
+/// Unique scratch dir per test (std-only; no tempfile crate offline).
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lkgp_corpus_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Task::load_json adversarial inputs
+
+#[test]
+fn load_json_rejects_nan_and_inf() {
+    for bad in [
+        r#"{"configs": [[0.1]], "curves": [[NaN]]}"#,
+        r#"{"configs": [[0.1]], "curves": [[Infinity]]}"#,
+    ] {
+        // our parser rejects bare NaN/Infinity tokens outright
+        assert!(Task::load_json("t", bad).is_err(), "{bad}");
+    }
+    // a numeric overflow that parses to inf must still be rejected
+    let huge = r#"{"configs": [[0.1]], "curves": [[1e999]]}"#;
+    assert!(Task::load_json("t", huge).is_err());
+    // null mid-curve is a non-number, not a silent gap
+    let nul = r#"{"configs": [[0.1]], "curves": [[0.5, null, 0.7]]}"#;
+    assert!(Task::load_json("t", nul).is_err());
+}
+
+#[test]
+fn load_json_rejects_ragged_configs_and_empty_curves() {
+    let ragged_cfg = r#"{"configs": [[0.1, 0.2], [0.3]], "curves": [[0.5], [0.6]]}"#;
+    let err = Task::load_json("t", ragged_cfg).unwrap_err().to_string();
+    assert!(err.contains("config row 1"), "{err}");
+
+    let empty_curve = r#"{"configs": [[0.1], [0.2]], "curves": [[0.5], []]}"#;
+    let err = Task::load_json("t", empty_curve).unwrap_err().to_string();
+    assert!(err.contains("curve row 1"), "{err}");
+
+    let count_mismatch = r#"{"configs": [[0.1]], "curves": [[0.5], [0.6]]}"#;
+    assert!(Task::load_json("t", count_mismatch).is_err());
+
+    let zero_dim = r#"{"configs": [[], []], "curves": [[0.5], [0.6]]}"#;
+    assert!(Task::load_json("t", zero_dim).is_err());
+}
+
+#[test]
+fn load_json_rejects_duplicate_config_ids() {
+    let dup = r#"{"ids": [7, 7], "configs": [[0.1], [0.2]], "curves": [[0.5], [0.6]]}"#;
+    let err = Task::load_json("t", dup).unwrap_err().to_string();
+    assert!(err.contains("duplicate config id"), "{err}");
+
+    let ok = r#"{"ids": [7, 8], "configs": [[0.1], [0.2]], "curves": [[0.5], [0.6]]}"#;
+    assert!(Task::load_json("t", ok).is_ok());
+
+    let wrong_len = r#"{"ids": [7], "configs": [[0.1], [0.2]], "curves": [[0.5], [0.6]]}"#;
+    assert!(Task::load_json("t", wrong_len).is_err());
+}
+
+#[test]
+fn load_json_accepts_ragged_curves_as_early_stopping() {
+    let text = r#"{"configs": [[0.1], [0.2]], "curves": [[0.5, 0.6, 0.7], [0.4]]}"#;
+    let task = Task::load_json("t", text).unwrap();
+    assert_eq!(task.m(), 3);
+    assert_eq!(task.lengths, vec![3, 1]);
+    assert!(task.mask_density() < 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// JsonDirCorpus: lazy parse + per-task error isolation
+
+fn write_task(dir: &PathBuf, name: &str, text: &str) {
+    std::fs::write(dir.join(name), text).unwrap();
+}
+
+fn good_task_json(v: f64) -> String {
+    format!(
+        r#"{{"configs": [[0.1, {v}], [0.3, 0.4], [0.5, 0.6]],
+            "curves": [[0.5, 0.6], [0.4, 0.5], [0.3]]}}"#
+    )
+}
+
+#[test]
+fn json_dir_corpus_isolates_one_corrupt_file() {
+    let dir = scratch_dir("isolate");
+    write_task(&dir, "a.json", &good_task_json(0.11));
+    write_task(&dir, "b.json", "{\"configs\": [[0.1]], \"curves\": [[");
+    write_task(&dir, "c.json", &good_task_json(0.22));
+    write_task(&dir, "d.json", &good_task_json(0.33));
+    write_task(&dir, "notes.txt", "not a task");
+
+    let corpus = JsonDirCorpus::open(&dir).unwrap();
+    assert_eq!(corpus.len(), 4, "only *.json files are tasks");
+    let mut ok = 0;
+    let mut failed = Vec::new();
+    for (id, task) in corpus.tasks() {
+        match task {
+            Ok(t) => {
+                ok += 1;
+                assert_eq!(t.n(), 3);
+                assert_eq!(t.lengths, vec![2, 2, 1]);
+            }
+            Err(_) => failed.push(id),
+        }
+    }
+    assert_eq!(ok, 3, "three well-formed tasks must serve");
+    assert_eq!(failed, vec![1], "only b.json (sorted order) fails");
+    // metadata for a good task works; the corrupt one keeps erroring
+    let meta = corpus.meta(0).unwrap();
+    assert_eq!((meta.n, meta.m, meta.d), (3, 2, 2));
+    assert!((meta.mask_density - 5.0 / 6.0).abs() < 1e-12);
+    assert!(corpus.meta(1).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn json_dir_fingerprint_tracks_content() {
+    let dir = scratch_dir("fp");
+    write_task(&dir, "a.json", &good_task_json(0.5));
+    let corpus = JsonDirCorpus::open(&dir).unwrap();
+    let fp1 = corpus.fingerprint();
+    assert!(fp1.starts_with("dir-"), "{fp1}");
+    assert_eq!(fp1, JsonDirCorpus::open(&dir).unwrap().fingerprint());
+    write_task(&dir, "a.json", &good_task_json(0.6));
+    let fp2 = JsonDirCorpus::open(&dir).unwrap().fingerprint();
+    assert_ne!(fp1, fp2, "byte change must re-print");
+    // TraceCorpus pin verification: the stale fingerprint is refused
+    assert!(TraceCorpus::dir(dir.to_str().unwrap(), Some(&fp1)).is_err());
+    assert!(TraceCorpus::dir(dir.to_str().unwrap(), Some(&fp2)).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn empty_dir_is_an_error() {
+    let dir = scratch_dir("empty");
+    assert!(JsonDirCorpus::open(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The checked-in fixture corpus
+
+#[test]
+fn fixture_corpus_is_real_shaped_and_fully_servable() {
+    let corpus = JsonDirCorpus::open(repo_root().join("data/lcbench_mini")).unwrap();
+    assert!(
+        (8..=16).contains(&corpus.len()),
+        "fixture holds 8-16 tasks, got {}",
+        corpus.len()
+    );
+    let mut ragged = 0;
+    for (id, task) in corpus.tasks() {
+        let task = task.unwrap_or_else(|e| panic!("fixture task {id} must load: {e}"));
+        assert_eq!(task.configs.cols(), 7, "LCBench d = 7");
+        assert!(task.n() >= 8);
+        assert!(task.m() >= 10);
+        for v in task.curves.data() {
+            assert!(v.is_finite() && (0.0..=1.0).contains(v));
+        }
+        if task.mask_density() < 1.0 {
+            ragged += 1;
+        }
+    }
+    assert!(ragged >= 4, "fixture must carry early-stopped rows ({ragged})");
+}
+
+// ---------------------------------------------------------------------------
+// SimCorpus + TraceCorpus pins
+
+#[test]
+fn trace_corpus_sim_pin_reproduces_the_sim_corpus() {
+    let sim = SimCorpus::new(3, 8, 17);
+    let pinned = TraceCorpus::sim(3, 8, 17);
+    assert_eq!(sim.fingerprint(), pinned.fingerprint());
+    assert_eq!(
+        sim.task(2).unwrap().curves.data(),
+        pinned.task(2).unwrap().curves.data()
+    );
+    // the pin carries the reconstruction parameters
+    let pin = sim.trace_pin();
+    assert!(pin.iter().any(|(k, _)| k == "corpus"));
+    assert!(pin.iter().any(|(k, _)| k == "configs"));
+    assert!(pin.iter().any(|(k, _)| k == "seed"));
+}
+
+// ---------------------------------------------------------------------------
+// Lazy pool admission from a corpus + idle eviction
+
+fn tiny_snapshot_for(task: &Arc<Task>) -> Snapshot {
+    let mut reg = Registry::new();
+    for i in 0..task.n() {
+        let id = reg.add(task.configs.row(i).to_vec());
+        for j in 0..task.lengths[i].min(3) {
+            reg.observe(id, task.curves[(i, j)], 6).unwrap();
+        }
+    }
+    CurveStore::new(6).snapshot(&reg).unwrap()
+}
+
+#[test]
+fn from_corpus_materializes_lazily_and_evicts_idle_shards() {
+    let corpus = SimCorpus::new(6, 6, 3);
+    let factory: EngineFactory = Box::new(|_| Box::<RustEngine>::default() as Box<dyn Engine>);
+    let pool = ServicePool::from_corpus(
+        &corpus,
+        factory,
+        PoolCfg { workers: 2, ..Default::default() },
+    );
+    assert_eq!(pool.shards(), 6);
+    assert_eq!(pool.materialized(), 0, "admission must not build engines");
+    assert_eq!(pool.live_shards(), 0);
+    assert_eq!(pool.corpus_fingerprint(), Some("sim-t6-c6-s3"));
+
+    // touch shards 0 and 1 only
+    let theta = Theta::default_packed(7);
+    for t in 0..2usize {
+        let task = corpus.task(t).unwrap();
+        let snap = tiny_snapshot_for(&task);
+        let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+        let preds = pool.handle(t).predict_final(snap, theta.clone(), xq).unwrap();
+        assert!(preds[0].0.is_finite() && preds[0].1 > 0.0);
+    }
+    assert_eq!(pool.materialized(), 2, "only touched shards materialize");
+    assert_eq!(pool.live_shards(), 2);
+
+    // sweep 1 records watermarks; later sweeps free the now-quiet shards
+    let mut evicted = pool.evict_idle();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while evicted < 2 && Instant::now() < deadline {
+        std::thread::yield_now();
+        evicted += pool.evict_idle();
+    }
+    assert_eq!(evicted, 2, "both quiet shards must evict");
+    assert_eq!(pool.live_shards(), 0);
+    assert_eq!(pool.evicted(), 2);
+
+    // an evicted shard re-materializes transparently on its next request
+    let task = corpus.task(0).unwrap();
+    let snap = tiny_snapshot_for(&task);
+    let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+    let preds = pool.handle(0).predict_final(snap, theta, xq).unwrap();
+    assert!(preds[0].0.is_finite());
+    assert_eq!(pool.materialized(), 3, "re-materialization counts again");
+    assert_eq!(pool.live_shards(), 1);
+}
+
+#[test]
+fn spawn_pools_do_not_evict() {
+    let engines: Vec<Box<dyn Engine>> =
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>];
+    let pool = ServicePool::spawn(engines, PoolCfg { workers: 1, ..Default::default() });
+    assert_eq!(pool.evict_idle(), 0);
+    assert_eq!(pool.evict_idle(), 0, "caller-owned engines are never torn down");
+    assert_eq!(pool.live_shards(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Pre-warm on refit completion
+
+#[test]
+fn refit_prewarms_the_fresh_generation() {
+    let corpus = SimCorpus::new(1, 6, 9);
+    let task = corpus.task(0).unwrap();
+    let snap = tiny_snapshot_for(&task);
+    let engines: Vec<Box<dyn Engine>> =
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>];
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg { workers: 1, warm_start: true, prewarm: true, ..Default::default() },
+    );
+    let handle = pool.handle(0);
+    // refit a never-queried generation: the writer must pre-warm it
+    let fitted = handle.refit(snap.clone(), vec![], 4).unwrap();
+    assert_eq!(pool.stats(0).prewarmed.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        pool.stats(0).engine_solves.load(Ordering::Relaxed),
+        0,
+        "pre-warm work must not count as a query-path solve"
+    );
+    // the first read against the fresh fit exact-hits the pre-warmed
+    // lineage instead of cold-missing
+    let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+    let preds = handle.predict_final(snap.clone(), fitted, xq).unwrap();
+    assert!(preds[0].0.is_finite() && preds[0].1 > 0.0);
+    let stats = pool.stats(0);
+    assert_eq!(stats.warm_cache_hits.load(Ordering::Relaxed), 1);
+    assert_eq!(stats.warm_cache_misses.load(Ordering::Relaxed), 0);
+    assert_eq!(stats.engine_solves.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn prewarm_skips_generations_that_already_have_lineage() {
+    let corpus = SimCorpus::new(1, 6, 10);
+    let task = corpus.task(0).unwrap();
+    let snap = tiny_snapshot_for(&task);
+    let engines: Vec<Box<dyn Engine>> =
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>];
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg { workers: 1, warm_start: true, prewarm: true, ..Default::default() },
+    );
+    let handle = pool.handle(0);
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+    // a query fits the generation first (caches alpha + cross lineage)
+    handle.predict_final(snap.clone(), theta.clone(), xq).unwrap();
+    // the refit must NOT clobber that richer lineage with a prewarm
+    handle.refit(snap, theta, 4).unwrap();
+    assert_eq!(pool.stats(0).prewarmed.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn prewarm_disabled_by_config() {
+    let corpus = SimCorpus::new(1, 6, 11);
+    let task = corpus.task(0).unwrap();
+    let snap = tiny_snapshot_for(&task);
+    let engines: Vec<Box<dyn Engine>> =
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>];
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg { workers: 1, warm_start: true, prewarm: false, ..Default::default() },
+    );
+    pool.handle(0).refit(snap, vec![], 4).unwrap();
+    assert_eq!(pool.stats(0).prewarmed.load(Ordering::Relaxed), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Preconditioner rank observability
+
+#[test]
+fn pool_report_exposes_preconditioner_rank() {
+    let corpus = SimCorpus::new(1, 8, 12);
+    let task = corpus.task(0).unwrap();
+    let snap = tiny_snapshot_for(&task);
+    let mut eng = RustEngine::default();
+    eng.cfg.precond = lkgp::gp::PrecondCfg::Auto;
+    let pool = ServicePool::spawn(
+        vec![Box::new(eng) as Box<dyn Engine>],
+        PoolCfg { workers: 1, ..Default::default() },
+    );
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+    pool.handle(0).predict_final(snap, theta, xq).unwrap();
+    let rank = pool.stats(0).precond_rank.load(Ordering::Relaxed);
+    assert!(rank > 0, "Auto preconditioning must report its rank");
+}

@@ -1,0 +1,124 @@
+//! Record/replay e2e: live scheduler traffic recorded through
+//! `RecordingHandle` must replay — sequentially and concurrently — with
+//! zero errors and intact invariants, and the checked-in v1 smoke must
+//! pass the concurrent storm + parity pass.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use lkgp::coordinator::trace::run_replay;
+use lkgp::coordinator::{
+    CorpusRunner, EngineFactory, PoolCfg, RecordingHandle, Scheduler, SchedulerCfg, ServicePool,
+    TraceRecorder,
+};
+use lkgp::lcbench::corpus::{Corpus, SimCorpus};
+use lkgp::runtime::{Engine, RustEngine};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .to_path_buf()
+}
+
+fn scratch_file(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "lkgp_trace_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// Run two small freeze-thaw schedulers over a sim corpus with recording
+/// on, returning the recorded trace path.
+fn record_run(path: &PathBuf) {
+    let corpus = SimCorpus::new(2, 8, 23);
+    let factory: EngineFactory = Box::new(|_| Box::<RustEngine>::default() as Box<dyn Engine>);
+    let pool = ServicePool::from_corpus(
+        &corpus,
+        factory,
+        PoolCfg { workers: 2, ..Default::default() },
+    );
+    let recorder = Arc::new(Mutex::new(
+        TraceRecorder::new(&corpus, path.to_str().unwrap()).unwrap(),
+    ));
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for t in 0..corpus.len() {
+            let task = corpus.task(t).unwrap();
+            let handle = pool.handle(t);
+            let rec = recorder.clone();
+            joins.push(scope.spawn(move || {
+                let cfg = SchedulerCfg {
+                    max_concurrent: 3,
+                    refit_every: 3,
+                    epoch_budget: 24,
+                    seed: 23 + t as u64,
+                    ..Default::default()
+                };
+                let mut sched = Scheduler::new(task.m(), cfg);
+                let configs: Vec<Vec<f64>> =
+                    (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
+                sched.add_candidates(&configs);
+                let client = RecordingHandle::new(handle, t, rec);
+                let mut runner = CorpusRunner { task };
+                sched.run(&mut runner, &client).unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+    recorder.lock().unwrap().finish(&pool).unwrap();
+}
+
+#[test]
+fn recorded_trace_replays_sequentially_and_concurrently() {
+    let path = scratch_file("roundtrip");
+    record_run(&path);
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"version\":2"));
+    assert!(text.contains("\"lengths\""), "gen lines must be recorded");
+    assert!(text.contains("\"refit\""), "refit lines must be recorded");
+    assert!(text.contains("\"queries\""), "query lines must be recorded");
+    assert!(text.contains("\"fingerprint\":\"sim-t2-c8-s23\""));
+
+    // sequential: zero errors, relaxed v2 equalities hold
+    let seq = run_replay(path.to_str().unwrap(), false, None).unwrap();
+    assert!(seq.requests > 0, "trace must carry query requests");
+    assert!(seq.refits > 0, "trace must carry refit (write) requests");
+    assert_eq!(seq.errors, 0);
+    assert!(seq.violations.is_empty(), "{:?}", seq.violations);
+
+    // concurrent: the storm + parity pass
+    let con = run_replay(path.to_str().unwrap(), true, None).unwrap();
+    assert_eq!(con.errors, 0);
+    assert!(con.violations.is_empty(), "{:?}", con.violations);
+    assert!(con.parity_checks > 0, "parity pass must run");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tampered_fingerprint_refuses_to_replay() {
+    let path = scratch_file("tamper");
+    record_run(&path);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let tampered = text.replace("sim-t2-c8-s23", "sim-t2-c8-s99");
+    std::fs::write(&path, tampered).unwrap();
+    let err = run_replay(path.to_str().unwrap(), false, None);
+    assert!(err.is_err(), "fingerprint drift must refuse to replay");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v1_smoke_replays_concurrently_with_parity() {
+    let smoke = repo_root().join("traces/smoke.jsonl");
+    let summary = run_replay(smoke.to_str().unwrap(), true, None).unwrap();
+    assert_eq!(summary.errors, 0);
+    assert!(summary.violations.is_empty(), "{:?}", summary.violations);
+    assert_eq!(summary.requests, 18, "smoke carries 18 requests");
+    assert!(summary.parity_checks >= 18);
+}
