@@ -8,6 +8,11 @@
 #                        -> BENCH_hotpath.json (record) plus gated
 #                           BENCH_pcg.json, BENCH_queries.json,
 #                           BENCH_replicas.json, BENCH_ingest.json
+#   par    (hard gate):  cargo bench --bench simd twice (LKGP_THREADS=1 / =4),
+#                        cross-process PAR_CHECKSUM bitwise parity on the f64
+#                        path + BENCH_simd.json asserts (in-process thread
+#                        parity, >=1.5x batched-MVM speedup floor at 4 threads
+#                        on >=4-core runners, f32 refinement parity)
 #   smoke  (hard gates): trace replay through `lkgp pool --replay traces/smoke.jsonl`,
 #                        sequentially (exact stats equalities) AND with
 #                        --concurrent (storm + parity pass, relaxed bounds)
@@ -28,7 +33,7 @@
 # with ALL of these gates present, in this order:
 #   CI_SUMMARY build=pass test=pass shims=pass fmt=pass clippy=pass \
 #              bench=pass pcg=pass queries=pass replicas=pass ingest=pass \
-#              replay=pass creplay=pass
+#              par=pass replay=pass creplay=pass
 # Each gate is one of pass|fail|soft-fail|skip (skip = component missing,
 # CI_QUICK, or never reached because an earlier gate failed; soft-fail =
 # style finding under CI_STRICT=0). Exit code is non-zero iff any hard
@@ -47,7 +52,7 @@ note() { # note <gate> <pass|fail|soft-fail|skip>
 finish() {
   # gates never reached (early exit) report as skip, so the summary always
   # carries the full fixed field set parsers rely on
-  for g in build test shims fmt clippy bench pcg queries replicas ingest replay creplay; do
+  for g in build test shims fmt clippy bench pcg queries replicas ingest par replay creplay; do
     case " $SUMMARY " in
       *" $g="*) ;;
       *) SUMMARY="$SUMMARY $g=skip" ;;
@@ -148,7 +153,7 @@ fi
 # ---- perf + smoke gates (mandatory in the pipeline; CI_QUICK skips) -------
 if [ "${CI_QUICK:-0}" = "1" ]; then
   echo "== perf/smoke gates skipped (CI_QUICK=1) =="
-  for gate in bench pcg queries replicas ingest replay creplay; do note "$gate" skip; done
+  for gate in bench pcg queries replicas ingest par replay creplay; do note "$gate" skip; done
   exit 0
 fi
 
@@ -217,6 +222,42 @@ echo "== perf gate: corpus ingestion =="
 gate_file ingest BENCH_ingest.json \
   assert_ingest_zero_errors assert_ingest_lazy \
   assert_ingest_admission_floor assert_ingest_replay_floor
+
+echo "== perf gate: data-parallel compute core =="
+# Runs the simd bench twice — pinned to LKGP_THREADS=1 and =4 — and
+# compares the PAR_CHECKSUM lines bitwise: the cross-process half of the
+# f64 determinism contract (docs/parallelism.md). The in-process halves
+# (pinned-thread MVM/solve parity, the >=1.5x batched-MVM speedup floor
+# at 4 threads, f32 iterative-refinement parity) are asserted inside
+# BENCH_simd.json. On runners with < 4 cores the speedup is not
+# measurable; the bench records speedup_measured=false and the assert
+# passes vacuously (see docs/ci.md).
+PAR_LOG1=$(mktemp)
+PAR_LOG4=$(mktemp)
+if LKGP_THREADS=1 cargo bench --manifest-path "$MANIFEST" --bench simd -- --quick \
+    > "$PAR_LOG1" 2>&1 \
+   && LKGP_THREADS=4 cargo bench --manifest-path "$MANIFEST" --bench simd -- --quick \
+    > "$PAR_LOG4" 2>&1; then
+  cat "$PAR_LOG4"
+  CK1=$(grep '^PAR_CHECKSUM ' "$PAR_LOG1" | tail -n 1)
+  CK4=$(grep '^PAR_CHECKSUM ' "$PAR_LOG4" | tail -n 1)
+  rm -f "$PAR_LOG1" "$PAR_LOG4"
+  if [ -z "$CK1" ] || [ "$CK1" != "$CK4" ]; then
+    echo "FAIL: PAR_CHECKSUM differs across LKGP_THREADS=1/4 ('$CK1' vs '$CK4')"
+    note par fail
+    exit 1
+  fi
+  echo "cross-process checksum parity OK ($CK1)"
+  gate_file par BENCH_simd.json \
+    assert_par_parity_mvm assert_par_parity_solve \
+    assert_simd_speedup assert_f32_refine_parity
+else
+  cat "$PAR_LOG1" "$PAR_LOG4"
+  rm -f "$PAR_LOG1" "$PAR_LOG4"
+  echo "FAIL: simd bench run failed"
+  note par fail
+  exit 1
+fi
 
 echo "== smoke gate: trace replay =="
 # Replays traces/smoke.jsonl (typed queries, 3 tasks, mixed generations)

@@ -1,0 +1,218 @@
+//! Data-parallel + mixed-precision compute-core bench (`ci.sh` `par`
+//! gate):
+//!
+//! * thread parity — the batched masked-Kronecker MVM and a full PCG
+//!   solve must be *bit-identical* across worker-team widths on the f64
+//!   path (pinned in-process at 1/2/N threads)
+//! * batched-MVM speedup — the worker team must clear a 1.5x floor at 4
+//!   threads over the sequential path (skipped, with
+//!   `speedup_measured: false`, on boxes with < 4 cores — the gate then
+//!   passes vacuously and says so)
+//! * f32 + iterative refinement — the mixed-precision solve must land
+//!   within tolerance of the f64 oracle while converging on the *exact*
+//!   operator's residual
+//!
+//! Besides BENCH_simd.json / results/simd.csv, the bench prints one
+//! `PAR_CHECKSUM <hex>` line: an FNV-1a digest over the result bits of an
+//! MVM + solve run at the *ambient* `util::num_threads()`. ci.sh runs the
+//! bench twice (LKGP_THREADS=1 and =4) and compares the lines — the
+//! cross-process half of the determinism contract (docs/parallelism.md).
+
+use std::time::Duration;
+
+use lkgp::bench_util::{bench, Table};
+use lkgp::gp::kernels;
+use lkgp::gp::operator::{MaskedKronOp, MaskedKronOpF32};
+use lkgp::gp::Theta;
+use lkgp::json::Json;
+use lkgp::lcbench::fig3_dataset;
+use lkgp::linalg::{pcg_batch_warm, refined_solve, LinOp};
+use lkgp::rng::Pcg64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bits(values: &[f64], mut h: u64) -> u64 {
+    for v in values {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// `LinOp` adapter pinning the operator's worker-thread count.
+struct PinnedOp<'a> {
+    op: &'a MaskedKronOp<'a>,
+    threads: usize,
+}
+
+impl LinOp for PinnedOp<'_> {
+    fn len(&self) -> usize {
+        self.op.len()
+    }
+
+    fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
+        self.op.apply_batch_with_threads(x, out, batch, self.threads);
+    }
+}
+
+fn main() -> lkgp::Result<()> {
+    let quick = lkgp::bench_util::is_quick();
+    let nn = if quick { 96 } else { 192 };
+    let batch = if quick { 8 } else { 16 };
+    let mut table = Table::new(&["op", "threads", "median_us", "note"]);
+
+    let mut rng = Pcg64::new(nn as u64);
+    let data = fig3_dataset(nn, &mut rng);
+    let theta = Theta::unpack(&Theta::default_packed(10));
+    let k1 = kernels::rbf(&data.x, &data.x, &theta.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, theta.t_lengthscale, theta.outputscale);
+    let op = MaskedKronOp::new(&k1, &k2, &data.mask, theta.sigma2);
+    let nm = op.len();
+    let x = rng.normal_vec(batch * nm);
+
+    // ---- (a) f64 MVM parity across pinned thread counts ------------------
+    let mut base = vec![0.0; batch * nm];
+    op.apply_batch_with_threads(&x, &mut base, batch, 1);
+    let ambient = lkgp::util::num_threads();
+    let mut parity_mvm = true;
+    for threads in [2usize, 4, ambient.max(2)] {
+        let mut out = vec![0.0; batch * nm];
+        op.apply_batch_with_threads(&x, &mut out, batch, threads);
+        let ok = out.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits());
+        parity_mvm &= ok;
+        table.row(vec![
+            "mvm_parity".into(),
+            threads.to_string(),
+            "-".into(),
+            if ok { "bitwise==T1".into() } else { "DIVERGED".into() },
+        ]);
+    }
+
+    // ---- (b) f64 PCG solve parity across pinned thread counts ------------
+    let solve_batch = 3usize;
+    let b = rng.normal_vec(solve_batch * nm);
+    let p1 = PinnedOp { op: &op, threads: 1 };
+    let (x1, s1) = pcg_batch_warm(&p1, &b, None, None, 1e-6, 2000);
+    let mut parity_solve = s1.converged;
+    for threads in [2usize, 4] {
+        let pt = PinnedOp { op: &op, threads };
+        let (xt, st) = pcg_batch_warm(&pt, &b, None, None, 1e-6, 2000);
+        let ok = st.iters == s1.iters
+            && xt.iter().zip(&x1).all(|(a, c)| a.to_bits() == c.to_bits());
+        parity_solve &= ok;
+        table.row(vec![
+            "solve_parity".into(),
+            threads.to_string(),
+            "-".into(),
+            if ok { "bitwise==T1".into() } else { "DIVERGED".into() },
+        ]);
+    }
+
+    // ---- (c) batched-MVM speedup: 1 thread vs 4 --------------------------
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let speedup_measured = cores >= 4;
+    let (t1_us, t4_us, speedup) = {
+        let mut out = vec![0.0; batch * nm];
+        let s1 = bench(
+            || op.apply_batch_with_threads(&x, &mut out, batch, 1),
+            3,
+            Duration::from_millis(300),
+        );
+        let s4 = bench(
+            || op.apply_batch_with_threads(&x, &mut out, batch, 4),
+            3,
+            Duration::from_millis(300),
+        );
+        (
+            s1.median_secs() * 1e6,
+            s4.median_secs() * 1e6,
+            s1.median_secs() / s4.median_secs().max(1e-12),
+        )
+    };
+    table.row(vec![
+        "mvm_batched".into(),
+        "1".into(),
+        format!("{t1_us:.1}"),
+        format!("batch={batch}"),
+    ]);
+    table.row(vec![
+        "mvm_batched".into(),
+        "4".into(),
+        format!("{t4_us:.1}"),
+        format!("speedup={speedup:.2}x"),
+    ]);
+    let speedup_ok = if speedup_measured {
+        speedup >= 1.5
+    } else {
+        eprintln!(
+            "warning: only {cores} core(s) available — the 4-thread speedup floor cannot be \
+             measured here; BENCH_simd.json records speedup_measured=false and the gate \
+             passes vacuously (run on a >=4-core box for a real measurement)"
+        );
+        true
+    };
+
+    // ---- (d) f32 + iterative refinement vs the f64 oracle ----------------
+    let fast = MaskedKronOpF32::from_op(&op);
+    let rb = rng.normal_vec(2 * nm);
+    let (oracle, os) = pcg_batch_warm(&op, &rb, None, None, 1e-10, 4000);
+    let (xr, rs) = refined_solve(&op, &fast, &rb, None, None, 1e-8, 1e-4, 10, 2000);
+    let scale = oracle.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+    let max_err = xr
+        .iter()
+        .zip(&oracle)
+        .map(|(a, c)| (a - c).abs())
+        .fold(0.0f64, f64::max);
+    let refine_ok = os.converged && rs.converged && max_err < 1e-5 * scale;
+    table.row(vec![
+        "f32_refined".into(),
+        "-".into(),
+        "-".into(),
+        format!(
+            "outer={} inner={} max_err={max_err:.2e}",
+            rs.outer_iters, rs.inner_iters
+        ),
+    ]);
+
+    // ---- PAR_CHECKSUM: ambient-thread-count result digest ----------------
+    // ci.sh compares this line across LKGP_THREADS=1 / =4 runs.
+    let mut amb = vec![0.0; batch * nm];
+    op.apply_batch_with_threads(&x, &mut amb, batch, ambient);
+    let pamb = PinnedOp { op: &op, threads: ambient };
+    let (xa, _) = pcg_batch_warm(&pamb, &b, None, None, 1e-6, 2000);
+    let checksum = fnv_bits(&xa, fnv_bits(&amb, FNV_OFFSET));
+    println!("PAR_CHECKSUM {checksum:016x}");
+
+    table.write_csv("results/simd.csv")?;
+    println!("\nwrote results/simd.csv");
+
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("simd".into())),
+        ("n", Json::Num(nn as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("cores", Json::Num(cores as f64)),
+        ("ambient_threads", Json::Num(ambient as f64)),
+        ("mvm_t1_us", Json::Num(t1_us)),
+        ("mvm_t4_us", Json::Num(t4_us)),
+        ("mvm_speedup_4t", Json::Num(speedup)),
+        ("speedup_measured", Json::Bool(speedup_measured)),
+        ("refine_outer_iters", Json::Num(rs.outer_iters as f64)),
+        ("refine_inner_iters", Json::Num(rs.inner_iters as f64)),
+        ("refine_max_err", Json::Num(max_err)),
+        ("par_checksum", Json::Str(format!("{checksum:016x}"))),
+        ("assert_par_parity_mvm", Json::Bool(parity_mvm)),
+        ("assert_par_parity_solve", Json::Bool(parity_solve)),
+        ("assert_simd_speedup", Json::Bool(speedup_ok)),
+        ("assert_f32_refine_parity", Json::Bool(refine_ok)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .to_path_buf();
+    std::fs::write(root.join("BENCH_simd.json"), summary.pretty())?;
+    println!("wrote {}", root.join("BENCH_simd.json").display());
+    Ok(())
+}

@@ -116,6 +116,12 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
 /// replayable trace whose header pins the corpus fingerprint;
 /// `--replay FILE [--concurrent]` replays a recorded trace instead of
 /// running schedulers (see [`trace`] and docs/data.md).
+///
+/// `--threads N` pins the compute-team width (equivalent to
+/// `LKGP_THREADS`; the f64 path is bit-identical for every value) and
+/// `--precision f64|f32` selects the solver's numeric mode — `f32` stores
+/// Kronecker factors in single precision and recovers f64-grade residuals
+/// through iterative refinement (see docs/parallelism.md).
 pub fn serve_pool(args: &Args) -> crate::Result<()> {
     use crate::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
     use std::sync::{Arc, Mutex};
@@ -134,6 +140,26 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             "bad --precond '{precond_arg}' (expected off, auto, or rank=R with R >= 1)"
         ))
     })?;
+    let precision_arg = args.get("precision").unwrap_or("f64");
+    let precision = crate::gp::Precision::parse(precision_arg).ok_or_else(|| {
+        crate::LkgpError::Coordinator(format!(
+            "bad --precision '{precision_arg}' (expected f64 or f32)"
+        ))
+    })?;
+    // Pin the compute-team width before any engine touches it: the logical
+    // thread count keys the deterministic work split (docs/parallelism.md),
+    // so it must be resolved once, up front, for the whole process.
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse().map_err(|_| {
+            crate::LkgpError::Coordinator(format!("bad --threads '{t}' (expected a count >= 1)"))
+        })?;
+        if !crate::util::set_num_threads(n) && crate::util::num_threads() != n.max(1) {
+            eprintln!(
+                "warning: --threads {n} ignored; thread count already resolved to {}",
+                crate::util::num_threads()
+            );
+        }
+    }
 
     let corpus_arg = args.get("corpus").unwrap_or("sim");
     let corpus: Arc<dyn Corpus> = if corpus_arg == "sim" {
@@ -153,6 +179,7 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
     let factory: EngineFactory = Box::new(move |_shard| {
         let mut eng = crate::runtime::RustEngine::default();
         eng.cfg.precond = precond;
+        eng.cfg.precision = precision;
         Box::new(eng) as Box<dyn crate::runtime::Engine>
     });
     let pool = ServicePool::from_corpus(
@@ -167,9 +194,11 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
     );
     println!(
         "pool: {tasks} shards from corpus {} ({}), {workers} workers, warm_start={warm}, \
-         max_replicas={replicas}, precond={precond:?}",
+         max_replicas={replicas}, precond={precond:?}, precision={}, threads={}",
         corpus.name(),
         corpus.fingerprint(),
+        precision.tag(),
+        crate::util::num_threads(),
     );
 
     let recorder: Option<Arc<Mutex<TraceRecorder>>> = match args.get("record") {

@@ -138,6 +138,11 @@ pub struct ServiceStats {
     /// fixed 32/64 choices observable in the pool report ahead of the
     /// adaptive-rank work (ROADMAP).
     pub precond_rank: AtomicU64,
+    /// Oversized stacked query batches the shard handle split into chunks
+    /// before enqueueing (`PoolCfg::split_rows`), so a single giant batch
+    /// fans across pool workers / read replicas instead of serializing on
+    /// one shard writer. Counts batches split, not chunks produced.
+    pub split_batches: AtomicU64,
 }
 
 impl ServiceStats {
@@ -911,6 +916,15 @@ pub struct PoolCfg {
     /// gap. Requires `warm_start`; no-op for engines without a session
     /// path.
     pub prewarm: bool,
+    /// Intra-batch split threshold in stacked solve rows
+    /// (`gp::session::query_weight`): a `ShardHandle::query` batch heavier
+    /// than this is split into `split_queries` chunks and enqueued as
+    /// independent requests, so read replicas can steal pieces of one
+    /// giant batch while the writer chews the rest. 0 disables splitting
+    /// (the historical single-request behavior). Answers are concatenated
+    /// back in batch order; the chunks remain eligible for same-generation
+    /// coalescing downstream.
+    pub split_rows: usize,
 }
 
 impl Default for PoolCfg {
@@ -927,6 +941,9 @@ impl Default for PoolCfg {
             warm_cache: 4,
             max_replicas: 2,
             prewarm: true,
+            // A 64-row stacked solve is where one batch starts dominating
+            // a shard's writer occupancy on the bench datasets.
+            split_rows: 64,
         }
     }
 }
@@ -1000,6 +1017,7 @@ struct PoolShared {
     warm_start: bool,
     max_replicas: usize,
     prewarm: bool,
+    split_rows: usize,
 }
 
 /// Multi-task sharded prediction service: one engine shard per task id, a
@@ -1099,6 +1117,7 @@ impl ServicePool {
             warm_start: cfg.warm_start,
             max_replicas: cfg.max_replicas,
             prewarm: cfg.prewarm,
+            split_rows: cfg.split_rows,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -1269,10 +1288,43 @@ impl PredictClient for ShardHandle {
         theta: Vec<f64>,
         queries: Vec<Query>,
     ) -> crate::Result<Vec<Answer>> {
+        let mut chunks = crate::gp::session::split_queries(&queries, self.shared.split_rows);
+        if chunks.len() <= 1 {
+            let (rtx, rrx) = channel();
+            self.submit(Request::Query { snapshot, theta, queries, resp: rtx })?;
+            return rrx
+                .recv()
+                .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?;
+        }
+        // Oversized batch: enqueue every chunk before collecting any
+        // answer, so spare workers (and read replicas, which steal
+        // same-generation reads from a busy shard) can serve chunks
+        // concurrently while the writer chews the first one. Answers come
+        // back in submission order, which restores the batch order.
+        self.stats().split_batches.fetch_add(1, Ordering::Relaxed);
+        let last = chunks.pop().expect("len > 1");
+        let mut rxs = Vec::with_capacity(chunks.len() + 1);
+        for chunk in chunks {
+            let (rtx, rrx) = channel();
+            self.submit(Request::Query {
+                snapshot: snapshot.clone(),
+                theta: theta.clone(),
+                queries: chunk,
+                resp: rtx,
+            })?;
+            rxs.push(rrx);
+        }
         let (rtx, rrx) = channel();
-        self.submit(Request::Query { snapshot, theta, queries, resp: rtx })?;
-        rrx.recv()
-            .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
+        self.submit(Request::Query { snapshot, theta, queries: last, resp: rtx })?;
+        rxs.push(rrx);
+        let mut out = Vec::new();
+        for rrx in rxs {
+            out.extend(
+                rrx.recv()
+                    .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))??,
+            );
+        }
+        Ok(out)
     }
 
     fn predict_final(

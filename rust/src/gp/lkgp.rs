@@ -82,6 +82,42 @@ impl Dataset {
     }
 }
 
+/// Numeric precision mode for the masked-Kronecker CG solves.
+///
+/// `F64` is the historical bit-exact path. `F32` stores the Kronecker
+/// factors in f32 (halving the hot working set), accumulates in f64, and
+/// wraps the inner solves in an iterative-refinement outer loop whose
+/// convergence is measured against the exact f64 operator — so returned
+/// residuals are f64-grade even though the heavy matmuls run on rounded
+/// storage (cf. arXiv 2312.15305).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Pure f64 compute, bit-exact with the historical solver.
+    #[default]
+    F64,
+    /// f32-storage factors + f64 accumulation + iterative refinement.
+    F32,
+}
+
+impl Precision {
+    /// Parse a CLI/config token (`"f64"` / `"f32"`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" | "double" => Some(Precision::F64),
+            "f32" | "single" | "mixed" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    /// Stable token for logs and bench artifacts.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
 /// Solver configuration (paper §B defaults).
 #[derive(Clone, Debug)]
 pub struct SolverCfg {
@@ -100,6 +136,9 @@ pub struct SolverCfg {
     /// raw operator — preconditioning it changes the estimated quantity
     /// (it would need a logdet(P) correction; see docs/solvers.md).
     pub precond: PrecondCfg,
+    /// Precision mode for the CG solves (fit, predict, posterior samples,
+    /// session training solve). SLQ always runs f64 on the exact operator.
+    pub precision: Precision,
 }
 
 impl Default for SolverCfg {
@@ -111,6 +150,29 @@ impl Default for SolverCfg {
             lanczos_iters: 16,
             jitter: 1e-6,
             precond: PrecondCfg::Off,
+            precision: Precision::F64,
+        }
+    }
+}
+
+/// Run one batched solve through the configured precision mode.
+///
+/// `F64` is a transparent pass-through to [`MaskedKronOp::solve_precond`]
+/// (bit-identical to calling it directly); `F32` routes through the
+/// iterative-refinement path and folds the refinement stats into the same
+/// [`CgStats`] shape every caller already reports.
+pub(crate) fn solve_cfg(
+    op: &MaskedKronOp,
+    cfg: &SolverCfg,
+    rhs: &[f64],
+    x0: Option<&[f64]>,
+    factors: Option<&PrecondFactors>,
+) -> (Vec<f64>, CgStats) {
+    match cfg.precision {
+        Precision::F64 => op.solve_precond(rhs, x0, factors, cfg.cg_tol, cfg.cg_max_iters),
+        Precision::F32 => {
+            let (x, st) = op.solve_refined(rhs, x0, factors, cfg.cg_tol, cfg.cg_max_iters);
+            (x, st.to_cg_stats())
         }
     }
 }
@@ -244,7 +306,7 @@ pub(crate) fn mll_impl(
     rhs.extend_from_slice(data.y.data());
     rhs.extend_from_slice(&probes[..p * nm]);
     let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
-    let (solves, cg) = op.solve_precond(&rhs, x0, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
+    let (solves, cg) = solve_cfg(&op, cfg, &rhs, x0, factors.as_deref());
     *precond_cache = factors;
     let alpha = &solves[..nm];
     let us = &solves[nm..];
@@ -503,13 +565,7 @@ pub(crate) fn predict_final_impl(
         Some(x)
     });
     let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
-    let (solves, cg) = op.solve_precond(
-        &rhs,
-        x0.as_deref(),
-        factors.as_deref(),
-        cfg.cg_tol,
-        cfg.cg_max_iters,
-    );
+    let (solves, cg) = solve_cfg(&op, cfg, &rhs, x0.as_deref(), factors.as_deref());
     *precond_cache = factors;
 
     let prior_var = theta.outputscale; // k1(xq,xq)=1, k2(t*,t*)=outputscale
@@ -650,7 +706,7 @@ pub(crate) fn posterior_samples_impl(
         priors.push(f);
     }
     let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
-    let (ws, cg) = op.solve_precond(&rhs, None, factors.as_deref(), cfg.cg_tol, cfg.cg_max_iters);
+    let (ws, cg) = solve_cfg(&op, cfg, &rhs, None, factors.as_deref());
     *precond_cache = factors;
 
     // k1([X; Xq], X) is the left block of k1j (jitter only touched diag).
@@ -1001,6 +1057,40 @@ mod tests {
                     "qi={qi} j={j} emp={emp} want={want}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse(" F32 "), Some(Precision::F32));
+        assert_eq!(Precision::parse("mixed"), Some(Precision::F32));
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::F32.tag(), "f32");
+        assert_eq!(Precision::parse(Precision::F64.tag()), Some(Precision::F64));
+    }
+
+    #[test]
+    fn f32_precision_predictions_match_f64() {
+        // The refinement loop measures convergence on the exact operator, so
+        // a tight tol must carry through to predictions even though the heavy
+        // matmuls run on f32-rounded factors.
+        let data = toy_dataset(9, 7, 2, 21);
+        let packed = Theta::default_packed(2);
+        let mut rng = Pcg64::new(22);
+        let xq = Matrix::from_vec(3, 2, rng.uniform_vec(6, 0.0, 1.0));
+        let exact_cfg = SolverCfg { cg_tol: 1e-10, ..Default::default() };
+        let fast_cfg = SolverCfg {
+            cg_tol: 1e-8,
+            precision: Precision::F32,
+            ..Default::default()
+        };
+        let (want, _) = predict_mean(&packed, &data, &xq, &exact_cfg).unwrap();
+        let (got, cg) = predict_mean(&packed, &data, &xq, &fast_cfg).unwrap();
+        assert!(cg.converged, "refined solve must converge: {cg:?}");
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-5, "got={a} want={b}");
         }
     }
 

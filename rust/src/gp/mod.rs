@@ -17,10 +17,10 @@ pub mod session;
 pub mod trainer;
 pub mod transforms;
 
-pub use lkgp::{Dataset, MllEval, SolverCfg};
-pub use session::{Answer, FitMethod, FitSession, Posterior, Query};
+pub use lkgp::{Dataset, MllEval, Precision, SolverCfg};
+pub use session::{split_queries, Answer, FitMethod, FitSession, Posterior, Query};
 pub use operator::{
-    KronPrecondFactors, LatentKronPrecond, MaskedKronOp, ObsGramPrecond, ObsGramPrecondFactors,
-    PrecondApply, PrecondCfg, PrecondFactors,
+    KronPrecondFactors, LatentKronPrecond, MaskedKronOp, MaskedKronOpF32, ObsGramPrecond,
+    ObsGramPrecondFactors, PrecondApply, PrecondCfg, PrecondFactors,
 };
 pub use params::Theta;

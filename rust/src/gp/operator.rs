@@ -7,8 +7,11 @@
 //! two dense matmuls — O(n^2 m + n m^2) time, O(nm) space — and the mask
 //! plays the role of the zero-pad / slice-index projections (paper §2).
 
+use crate::linalg::matrix::{matmul_mixed_a32b, matmul_mixed_ab32, MatrixF32};
 use crate::linalg::pcg::Preconditioner;
-use crate::linalg::{cg_batch, jacobi_eigh, pivoted_cholesky, CgStats, LinOp, Matrix};
+use crate::linalg::{
+    cg_batch, jacobi_eigh, pivoted_cholesky, refined_solve, CgStats, LinOp, Matrix, RefineStats,
+};
 
 /// Masked Kronecker operator over the (n x m) learning-curve grid.
 pub struct MaskedKronOp<'a> {
@@ -126,14 +129,17 @@ impl Workspace {
     }
 }
 
-/// Shared scaffold for row-independent batched kernels (the operator and
-/// both preconditioners): split the batch into per-thread chunks, give
-/// each thread its own workspace, and disable nested matmul parallelism
-/// inside the workers. Batched CG feeds 9-33 independent RHS per
+/// Shared scaffold for row-independent batched kernels (the operator,
+/// its mixed-precision twin, and both preconditioners): split the batch
+/// into RHS-column chunks keyed by the *logical* thread count, give each
+/// chunk its own workspace, and hand the chunks to the persistent
+/// [`crate::util::team::WorkerTeam`] (nested matmul parallelism is
+/// disabled inside the parts). Batched CG feeds 9-33 independent RHS per
 /// iteration; distributing them across threads is the engine's main
 /// parallelism lever (§Perf: 3.4x on the 17-RHS training solve at size
-/// 128). Results are bit-identical for every thread count because each
-/// row is computed independently.
+/// 128). Results are bit-identical for every thread count — and for
+/// every *team size* — because the chunk split depends only on `threads`
+/// and each row's arithmetic is independent of where it runs.
 fn apply_rows_threaded<WS>(
     x: &[f64],
     out: &mut [f64],
@@ -153,23 +159,27 @@ fn apply_rows_threaded<WS>(
         return;
     }
     let chunk = batch.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (ci, out_chunk) in out.chunks_mut(chunk * nm).enumerate() {
-            let x_chunk = &x[ci * chunk * nm..(ci * chunk * nm + out_chunk.len())];
-            scope.spawn(move || {
-                crate::linalg::matrix::without_nested_parallelism(|| {
-                    let mut ws = make_ws();
-                    let local = out_chunk.len() / nm;
-                    for b in 0..local {
-                        row(
-                            &x_chunk[b * nm..(b + 1) * nm],
-                            &mut out_chunk[b * nm..(b + 1) * nm],
-                            &mut ws,
-                        );
-                    }
-                });
-            });
-        }
+    let parts = batch.div_ceil(chunk);
+    let base = crate::linalg::matrix::SendMutPtr(out.as_mut_ptr());
+    crate::util::team::WorkerTeam::global().run(parts, &|p| {
+        crate::linalg::matrix::without_nested_parallelism(|| {
+            let b0 = p * chunk;
+            let local = chunk.min(batch - b0);
+            // SAFETY: RHS blocks [b0, b0 + local) are disjoint across part
+            // indices, and the team's completion barrier keeps the `out`
+            // borrow live while any part runs.
+            let out_chunk =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(b0 * nm), local * nm) };
+            let x_chunk = &x[b0 * nm..(b0 + local) * nm];
+            let mut ws = make_ws();
+            for b in 0..local {
+                row(
+                    &x_chunk[b * nm..(b + 1) * nm],
+                    &mut out_chunk[b * nm..(b + 1) * nm],
+                    &mut ws,
+                );
+            }
+        });
     });
 }
 
@@ -198,6 +208,115 @@ impl LinOp for MaskedKronOp<'_> {
 
     fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
         self.apply_batch_with_threads(x, out, batch, crate::util::num_threads());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-precision operator (f32 storage, f64 accumulation)
+
+/// The mixed-precision twin of [`MaskedKronOp`]: the Kronecker factors K1
+/// and K2 are stored rounded to f32 (halving the memory traffic that
+/// bounds the MVM), while the mask, the vectors, σ², and every product
+/// accumulation stay f64. It is the *fast* operator inside the
+/// [`refined_solve`] outer loop (`SolverCfg::precision = F32`); the exact
+/// f64 operator still measures the residual, so final answers carry
+/// f64-grade residual guarantees (docs/parallelism.md).
+pub struct MaskedKronOpF32<'a> {
+    k1: MatrixF32,
+    k2: MatrixF32,
+    mask: &'a Matrix,
+    sigma2: f64,
+}
+
+impl<'a> MaskedKronOpF32<'a> {
+    /// Round an exact operator's factors down to f32 storage (O(n² + m²)
+    /// one-off cast, trivial next to one O(n²m) apply).
+    pub fn from_op(op: &MaskedKronOp<'a>) -> Self {
+        MaskedKronOpF32 {
+            k1: MatrixF32::from_f64(op.k1),
+            k2: MatrixF32::from_f64(op.k2),
+            mask: op.mask,
+            sigma2: op.sigma2,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.k1.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.k2.rows()
+    }
+
+    /// Core kernel: same structure as [`MaskedKronOp::apply_into`], with
+    /// the two matmuls running against f32-storage factors.
+    fn apply_into(&self, v: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let (n, m) = (self.n(), self.m());
+        for (dst, (a, b)) in ws.mv.data_mut().iter_mut().zip(v.iter().zip(self.mask.data())) {
+            *dst = a * b;
+        }
+        matmul_mixed_ab32(&ws.mv, &self.k2, &mut ws.w);
+        matmul_mixed_a32b(&self.k1, &ws.w, &mut ws.out_mat);
+        let om = ws.out_mat.data();
+        let mk = self.mask.data();
+        debug_assert_eq!(out.len(), n * m);
+        for i in 0..n * m {
+            out[i] = mk[i] * om[i] + self.sigma2 * v[i];
+        }
+    }
+
+    /// [`LinOp::apply_batch`] with an explicit worker-thread count; same
+    /// determinism contract as the exact operator (bit-identical for
+    /// every thread count at fixed precision mode).
+    pub fn apply_batch_with_threads(&self, x: &[f64], out: &mut [f64], batch: usize, threads: usize) {
+        apply_rows_threaded(
+            x,
+            out,
+            batch,
+            self.n() * self.m(),
+            threads,
+            &|| Workspace::new(self.n(), self.m()),
+            &|xi, oi, ws| self.apply_into(xi, oi, ws),
+        );
+    }
+}
+
+impl LinOp for MaskedKronOpF32<'_> {
+    fn len(&self) -> usize {
+        self.n() * self.m()
+    }
+
+    fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
+        self.apply_batch_with_threads(x, out, batch, crate::util::num_threads());
+    }
+}
+
+impl MaskedKronOp<'_> {
+    /// Mixed-precision batched solve: inner PCG iterations run against
+    /// the f32-storage twin, an iterative-refinement outer loop measures
+    /// residuals against `self` (exact f64) until they clear `tol` — see
+    /// [`refined_solve`]. `factors` precondition the inner solves exactly
+    /// as in [`solve_precond`](Self::solve_precond).
+    pub fn solve_refined(
+        &self,
+        rhs: &[f64],
+        x0: Option<&[f64]>,
+        factors: Option<&PrecondFactors>,
+        tol: f64,
+        max_iters: usize,
+    ) -> (Vec<f64>, RefineStats) {
+        // Inner solves only need enough reduction for the outer loop to
+        // contract; far-below-tol inner targets would fight f32 rounding.
+        let inner_tol = (tol * 0.1).max(1e-6).min(0.1);
+        let max_outer = 8;
+        let fast = MaskedKronOpF32::from_op(self);
+        match factors {
+            Some(f) => {
+                let pc = f.apply_state(self.mask, self.sigma2);
+                refined_solve(self, &fast, rhs, x0, Some(&pc), tol, inner_tol, max_outer, max_iters)
+            }
+            None => refined_solve(self, &fast, rhs, x0, None, tol, inner_tol, max_outer, max_iters),
+        }
     }
 }
 
@@ -1161,5 +1280,105 @@ mod tests {
         let uav = crate::linalg::matrix::dot(&u, &av);
         let vau = crate::linalg::matrix::dot(&v, &au);
         assert!((uav - vau).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f32_operator_matches_exact_within_rounding() {
+        let (k1, k2, mask) = setup(10, 8, 41);
+        let s2 = 0.15;
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let fast = MaskedKronOpF32::from_op(&op);
+        let mut rng = Pcg64::new(42);
+        let v = rng.normal_vec(80);
+        let mut exact = vec![0.0; 80];
+        let mut approx = vec![0.0; 80];
+        op.apply_batch(&v, &mut exact, 1);
+        fast.apply_batch(&v, &mut approx, 1);
+        // Storage rounding only: error scales with f32 eps times the
+        // operator norm, far below f64 but far above zero.
+        let scale = k1.fro_norm() * k2.fro_norm();
+        for i in 0..80 {
+            assert!(
+                (exact[i] - approx[i]).abs() < 1e-4 * scale.max(1.0),
+                "i={i}: {} vs {}",
+                exact[i],
+                approx[i]
+            );
+        }
+        // And the sigma2 diagonal is applied in full precision: off-mask
+        // rows are exactly sigma2 * v in both.
+        for (i, &mk) in mask.data().iter().enumerate() {
+            if mk == 0.0 {
+                assert_eq!(exact[i].to_bits(), approx[i].to_bits(), "off-mask i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_batched_apply_bit_identical_across_threads() {
+        let (k1, k2, mask) = setup(8, 6, 43);
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 0.1);
+        let fast = MaskedKronOpF32::from_op(&op);
+        let nm = 48;
+        let batch = 5;
+        let mut rng = Pcg64::new(44);
+        let v = rng.normal_vec(batch * nm);
+        let mut seq = vec![0.0; batch * nm];
+        fast.apply_batch_with_threads(&v, &mut seq, batch, 1);
+        for threads in [2, 3, 8] {
+            let mut got = vec![0.0; batch * nm];
+            fast.apply_batch_with_threads(&v, &mut got, batch, threads);
+            assert_eq!(got, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn solve_refined_reaches_f64_grade_residual() {
+        let (k1, k2, mask) = setup(12, 9, 45);
+        let s2 = 0.2;
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let mut rng = Pcg64::new(46);
+        let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
+        let tol = 1e-8;
+        let (x, st) = op.solve_refined(&rhs, None, None, tol, 10_000);
+        assert!(st.converged, "stats={st:?}");
+        // residual measured against the exact operator
+        let mut back = vec![0.0; rhs.len()];
+        op.apply_batch(&x, &mut back, 1);
+        let bn = crate::linalg::matrix::dot(&rhs, &rhs).sqrt();
+        let rn = back
+            .iter()
+            .zip(&rhs)
+            .map(|(a, b)| (b - a) * (b - a))
+            .sum::<f64>()
+            .sqrt();
+        assert!(rn <= tol * 1.001 * bn, "rel={}", rn / bn);
+        // and the solution matches the pure-f64 solve well beyond f32
+        let (oracle, os) = op.solve_warm(&rhs, None, 1e-10, 10_000);
+        assert!(os.converged);
+        for (a, o) in x.iter().zip(&oracle) {
+            assert!((a - o).abs() < 1e-6, "{a} vs {o}");
+        }
+    }
+
+    #[test]
+    fn solve_refined_with_precond_and_warm_start() {
+        let (n, m) = (16, 10);
+        let (k1, k2) = ill_system(n, m, 47);
+        let mask = Matrix::from_fn(n, m, |_, _| 1.0);
+        let s2 = 1e-3;
+        let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let mut rng = Pcg64::new(48);
+        let rhs = rng.normal_vec(n * m);
+        let theta = vec![0.0; 4];
+        let f = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &mask, &theta).unwrap();
+        let tol = 1e-6;
+        let (x, st) = op.solve_refined(&rhs, None, Some(&f), tol, 10_000);
+        assert!(st.converged, "stats={st:?}");
+        // warm re-solve from the converged answer: zero inner iterations
+        let (x2, st2) = op.solve_refined(&rhs, Some(&x), Some(&f), tol, 10_000);
+        assert!(st2.converged);
+        assert_eq!(st2.inner_iters, 0, "stats={st2:?}");
+        assert_eq!(x, x2, "already-converged warm start must be a no-op");
     }
 }

@@ -192,6 +192,59 @@ pub fn stacked_final_xq(queries: &[Query]) -> Option<Matrix> {
     stack_final_queries(queries).0
 }
 
+/// Stacked-solve row weight of one query — the cost proxy the serving
+/// layer's intra-batch splitter uses. Final-step queries contribute their
+/// cross-covariance rows, `CurveSamples` is weighted by its Matheron solve
+/// count, and `Mll` counts as one row (its probe solves are fixed-cost and
+/// never split).
+pub fn query_weight(q: &Query) -> usize {
+    match q {
+        Query::MeanAtFinal { xq } | Query::Variance { xq } | Query::Quantiles { xq, .. } => {
+            xq.rows()
+        }
+        Query::MeanAtSteps { xq, .. } => xq.rows(),
+        Query::CurveSamples { xq, n, .. } => (xq.rows() + 1) * (*n).max(1),
+        Query::Mll { .. } => 1,
+    }
+}
+
+/// Split one query batch into ordered chunks whose summed row weight stays
+/// at or below `max_rows`, so the serving layer can fan a single oversized
+/// stacked batch across pool workers and read replicas instead of
+/// serializing it on one shard writer; concatenating the per-chunk answers
+/// restores the original batch order. A single query heavier than
+/// `max_rows` gets its own chunk — queries are never split internally —
+/// and `max_rows == 0` (splitting disabled) or a batch that already fits
+/// returns one chunk. Chunking never reorders queries, and because every
+/// RHS of the shared batched solve iterates under its own convergence
+/// criterion, per-query answers match the unsplit batch bit for bit when
+/// the chunks run under the same warm-start lineage.
+pub fn split_queries(queries: &[Query], max_rows: usize) -> Vec<Vec<Query>> {
+    if queries.is_empty() {
+        return Vec::new();
+    }
+    let total: usize = queries.iter().map(query_weight).sum();
+    if max_rows == 0 || total <= max_rows {
+        return vec![queries.to_vec()];
+    }
+    let mut chunks = Vec::new();
+    let mut cur: Vec<Query> = Vec::new();
+    let mut w = 0usize;
+    for q in queries {
+        let qw = query_weight(q);
+        if !cur.is_empty() && w + qw > max_rows {
+            chunks.push(std::mem::take(&mut cur));
+            w = 0;
+        }
+        w += qw;
+        cur.push(q.clone());
+    }
+    if !cur.is_empty() {
+        chunks.push(cur);
+    }
+    chunks
+}
+
 /// Validate one query against a dataset's shape. Shared by
 /// [`Posterior::answer_batch`], the default `Engine::answer_batch`
 /// mapping, and the serving layer (which fails malformed requests
@@ -756,13 +809,8 @@ impl Posterior {
                 None
             }
         });
-        let (sol, cg) = op.solve_precond(
-            self.data.y.data(),
-            g0.as_deref(),
-            factors.as_deref(),
-            self.cfg.cg_tol,
-            self.cfg.cg_max_iters,
-        );
+        let (sol, cg) =
+            lkgp::solve_cfg(&op, &self.cfg, self.data.y.data(), g0.as_deref(), factors.as_deref());
         self.precond = factors;
         self.alpha = Some(sol);
         self.record_cg(cg);
@@ -892,6 +940,69 @@ mod tests {
             }
         }
         Arc::new(Dataset { x, t, y, mask })
+    }
+
+    #[test]
+    fn split_queries_respects_weight_budget_and_order() {
+        let xq = |rows: usize, tag: f64| Matrix::from_vec(rows, 2, vec![tag; rows * 2]);
+        let queries = vec![
+            Query::MeanAtFinal { xq: xq(3, 0.1) },
+            Query::Variance { xq: xq(2, 0.2) },
+            Query::Quantiles { xq: xq(4, 0.3), ps: vec![0.5] },
+            Query::Mll { seed: 7 },
+            Query::MeanAtSteps { xq: xq(5, 0.4), steps: vec![0, 1] },
+        ];
+        // weights: 3, 2, 4, 1, 5 (total 15)
+        let chunks = split_queries(&queries, 5);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1], "greedy packing: [3+2][4+1][5]");
+        let flat: Vec<Query> = chunks.into_iter().flatten().collect();
+        assert_eq!(flat.len(), queries.len());
+        for (a, b) in flat.iter().zip(&queries) {
+            assert_eq!(query_weight(a), query_weight(b), "order preserved");
+        }
+    }
+
+    #[test]
+    fn split_queries_edge_cases() {
+        let xq = Matrix::from_vec(8, 2, vec![0.5; 16]);
+        let big = vec![Query::MeanAtFinal { xq: xq.clone() }];
+        // an oversized single query still gets exactly one chunk
+        assert_eq!(split_queries(&big, 3).len(), 1);
+        // disabled splitting and already-fitting batches stay whole
+        assert_eq!(split_queries(&big, 0).len(), 1);
+        assert_eq!(split_queries(&big, 100).len(), 1);
+        assert!(split_queries(&[], 4).is_empty());
+        // CurveSamples weight scales with the sample count
+        let cs = Query::CurveSamples { xq: Matrix::from_vec(2, 2, vec![0.1; 4]), n: 3, seed: 1 };
+        assert_eq!(query_weight(&cs), 9);
+    }
+
+    #[test]
+    fn split_batch_answers_match_unsplit_bitwise() {
+        let data = toy(7, 6, 2, 31);
+        let mut rng = Pcg64::new(32);
+        let xq1 = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let xq2 = Matrix::from_vec(3, 2, rng.uniform_vec(6, 0.0, 1.0));
+        let queries = vec![
+            Query::MeanAtFinal { xq: xq1.clone() },
+            Query::Variance { xq: xq2.clone() },
+            Query::Quantiles { xq: xq1.clone(), ps: vec![0.25, 0.75] },
+        ];
+        let theta = Theta::default_packed(2);
+        let cfg = SolverCfg::default();
+        let mut whole = Posterior::new(data.clone(), theta.clone(), cfg.clone());
+        let want = whole.answer_batch(&queries).unwrap();
+        let mut got: Vec<Answer> = Vec::new();
+        for chunk in split_queries(&queries, 3) {
+            // fresh cold session per chunk — the serving layer's split path
+            let mut part = Posterior::new(data.clone(), theta.clone(), cfg.clone());
+            got.extend(part.answer_batch(&chunk).unwrap());
+        }
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(g.bits_eq(w), "split answers must match unsplit bitwise");
+        }
     }
 
     #[test]

@@ -225,9 +225,20 @@ pub struct JsonDirCorpus {
     /// (stem, path) per task, sorted by file name for a stable order.
     files: Vec<(String, PathBuf)>,
     cache: Mutex<HashMap<usize, Arc<Task>>>,
-    /// Memoized content digest — computing it reads every file, and
-    /// callers (pool admission, reports, trace headers) ask repeatedly.
-    print: std::sync::OnceLock<String>,
+    /// Per-file content digests keyed by path and validated by
+    /// `(mtime, len)`. Repeated fingerprint calls — pool admission,
+    /// reports, trace headers, every record/replay handshake — cost one
+    /// metadata stat per file instead of re-reading the whole corpus, and
+    /// a file appended or rewritten between calls (streaming ingestion)
+    /// re-reads only itself.
+    digests: Mutex<HashMap<PathBuf, FileDigest>>,
+}
+
+/// One cached per-file digest with the metadata that validates it.
+struct FileDigest {
+    mtime: Option<std::time::SystemTime>,
+    len: u64,
+    digest: u64,
 }
 
 impl JsonDirCorpus {
@@ -260,7 +271,7 @@ impl JsonDirCorpus {
             dir,
             files,
             cache: Mutex::new(HashMap::new()),
-            print: std::sync::OnceLock::new(),
+            digests: Mutex::new(HashMap::new()),
         })
     }
 
@@ -280,23 +291,41 @@ impl Corpus for JsonDirCorpus {
     }
 
     fn fingerprint(&self) -> String {
-        // FNV-1a over (file name, content) in task order: any rename,
-        // reorder, or byte change re-prints. Computed once per corpus
-        // (memoized — it reads every file); unreadable files hash their
-        // error marker so the print stays stable and total.
-        self.print
-            .get_or_init(|| {
-                let mut h = FNV_OFFSET;
-                for (stem, path) in &self.files {
-                    h = fnv1a(stem.as_bytes(), h);
-                    match std::fs::read(path) {
-                        Ok(bytes) => h = fnv1a(&bytes, h),
-                        Err(_) => h = fnv1a(b"<unreadable>", h),
+        // FNV-1a over per-file digests in task order: any rename, reorder,
+        // or byte change re-prints. Each file's digest (seeded by its stem,
+        // run over its content) is cached keyed by `(mtime, len)`, so only
+        // changed files are re-read on later calls — the print always
+        // reflects current content, unlike the old once-forever memo.
+        // Unreadable files hash an error marker (uncached, so recovery is
+        // noticed) to keep the print stable and total.
+        let mut cache = self.digests.lock().unwrap();
+        let mut h = FNV_OFFSET;
+        for (stem, path) in &self.files {
+            let seed = fnv1a(stem.as_bytes(), FNV_OFFSET);
+            let digest = match std::fs::metadata(path) {
+                Ok(meta) => {
+                    let (mtime, len) = (meta.modified().ok(), meta.len());
+                    let hit = cache
+                        .get(path)
+                        .filter(|e| e.mtime == mtime && mtime.is_some() && e.len == len)
+                        .map(|e| e.digest);
+                    match hit {
+                        Some(d) => d,
+                        None => match std::fs::read(path) {
+                            Ok(bytes) => {
+                                let d = fnv1a(&bytes, seed);
+                                cache.insert(path.clone(), FileDigest { mtime, len, digest: d });
+                                d
+                            }
+                            Err(_) => fnv1a(b"<unreadable>", seed),
+                        },
                     }
                 }
-                format!("dir-{h:016x}")
-            })
-            .clone()
+                Err(_) => fnv1a(b"<unreadable>", seed),
+            };
+            h = fnv1a(&digest.to_le_bytes(), h);
+        }
+        format!("dir-{h:016x}")
     }
 
     fn trace_pin(&self) -> Vec<(String, crate::json::Json)> {

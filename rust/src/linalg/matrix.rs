@@ -123,8 +123,12 @@ impl Matrix {
     /// `out = self * other`, reusing `out`'s buffer.
     ///
     /// i-k-j loop order keeps the inner loop contiguous in both `other` and
-    /// `out` (auto-vectorizes); row panels are distributed over threads when
-    /// the product is big enough to amortize spawn cost.
+    /// `out` (auto-vectorizes); row panels (n-axis blocks) are distributed
+    /// over the persistent [`crate::util::team::WorkerTeam`] when the
+    /// product is big enough to amortize the handoff. The panel split is
+    /// keyed by the logical thread count, and each panel's arithmetic is
+    /// independent of where it runs, so results are bit-identical for
+    /// every thread count (including the sequential path).
     pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         assert_eq!((out.rows, out.cols), (self.rows, other.cols));
@@ -135,23 +139,22 @@ impl Matrix {
             matmul_panel(&self.data, &other.data, &mut out.data, 0, n, k, m);
             return;
         }
-        // Split rows into one panel per thread.
+        // One row panel per logical thread; the team maps panels onto
+        // however many lanes are actually free.
         let chunk = n.div_ceil(threads);
+        let parts = n.div_ceil(chunk);
         let a = &self.data;
         let b = &other.data;
-        let out_chunks: Vec<(usize, &mut [f64])> = out
-            .data
-            .chunks_mut(chunk * m)
-            .enumerate()
-            .map(|(ci, c)| (ci * chunk, c))
-            .collect();
-        std::thread::scope(|scope| {
-            for (row0, chunk_out) in out_chunks {
-                let rows = chunk_out.len() / m;
-                scope.spawn(move || {
-                    matmul_panel_slice(a, b, chunk_out, row0, rows, k, m);
-                });
-            }
+        let base = SendMutPtr(out.data.as_mut_ptr());
+        crate::util::team::WorkerTeam::global().run(parts, &|p| {
+            let row0 = p * chunk;
+            let rows = chunk.min(n - row0);
+            // SAFETY: panels [row0, row0 + rows) are disjoint across part
+            // indices and the team's barrier keeps `out` borrowed for the
+            // duration; each part writes only its own panel.
+            let panel =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(row0 * m), rows * m) };
+            matmul_panel_slice(a, b, panel, row0, rows, k, m);
         });
     }
 
@@ -206,6 +209,13 @@ impl IndexMut<(usize, usize)> for Matrix {
         &mut self.data[i * self.cols + j]
     }
 }
+
+/// Shared raw base pointer for lending disjoint output panels to worker
+/// team parts (each part computes its own slice bounds from the part
+/// index; see the SAFETY notes at the use sites).
+pub(crate) struct SendMutPtr(pub(crate) *mut f64);
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
 
 thread_local! {
     static DISABLE_PAR: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
@@ -295,6 +305,96 @@ fn matmul_panel_slice(a: &[f64], b: &[f64], out: &mut [f64], row0: usize, rows: 
         for (kk, &aik) in arow.iter().enumerate() {
             if aik != 0.0 {
                 axpy(aik, &b[kk * m..(kk + 1) * m], orow);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed precision: f32 storage, f64 accumulation
+
+/// Row-major f32 snapshot of a [`Matrix`] — the storage half of the
+/// mixed-precision fast path (arXiv 2312.15305 direction): kernel factors
+/// are rounded once to f32 (halving memory traffic on the MVM-bound
+/// solves), while every product and sum still accumulates in f64. The
+/// iterative-refinement driver (`linalg::pcg::refined_solve`) recovers
+/// f64-grade residuals on top.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatrixF32 {
+    /// Round an f64 matrix to f32 storage.
+    pub fn from_f64(m: &Matrix) -> Self {
+        note_alloc(m.rows() * m.cols() * 4);
+        MatrixF32 {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Widen back to f64 (tests / diagnostics).
+    pub fn to_f64(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.iter().map(|&v| v as f64).collect())
+    }
+}
+
+/// `out = a · b32` — f64 left operand, f32-storage right operand, f64
+/// accumulation. Same i-k-j panel kernel as `matmul_into`, with the B row
+/// widened element-wise inside the axpy. Sequential by design: the
+/// mixed-precision operator parallelizes one level up (across batch RHS).
+pub fn matmul_mixed_ab32(a: &Matrix, b32: &MatrixF32, out: &mut Matrix) {
+    assert_eq!(a.cols(), b32.rows(), "matmul shape mismatch");
+    assert_eq!((out.rows(), out.cols()), (a.rows(), b32.cols()));
+    let (n, k, m) = (a.rows(), a.cols(), b32.cols());
+    let (ad, bd) = (a.data(), b32.data());
+    let od = out.data_mut();
+    for i in 0..n {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * m..(i + 1) * m];
+        orow.fill(0.0);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                let brow = &bd[kk * m..(kk + 1) * m];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += aik * b as f64;
+                }
+            }
+        }
+    }
+}
+
+/// `out = a32 · b` — f32-storage left operand, f64 right operand, f64
+/// accumulation (the widened `a_ik` multiplies full-precision B rows).
+pub fn matmul_mixed_a32b(a32: &MatrixF32, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a32.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!((out.rows(), out.cols()), (a32.rows(), b.cols()));
+    let (n, k, m) = (a32.rows(), a32.cols(), b.cols());
+    let (ad, bd) = (a32.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..n {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * m..(i + 1) * m];
+        orow.fill(0.0);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                axpy(aik as f64, &bd[kk * m..(kk + 1) * m], orow);
             }
         }
     }
@@ -394,6 +494,40 @@ mod tests {
         for i in 0..37 {
             assert!((g2[i] - (-2.5 * x[i] + 0.5 * y0[i])).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn mixed_kernels_match_f64_within_f32_rounding() {
+        let mut rng = crate::rng::Pcg64::new(11);
+        let (n, k, m) = (23, 17, 19);
+        let a = Matrix::from_vec(n, k, rng.normal_vec(n * k));
+        let b = Matrix::from_vec(k, m, rng.normal_vec(k * m));
+        let exact = a.matmul(&b);
+        let scale = a.fro_norm() * b.fro_norm();
+
+        let b32 = MatrixF32::from_f64(&b);
+        let mut got = Matrix::zeros(n, m);
+        matmul_mixed_ab32(&a, &b32, &mut got);
+        assert!(got.max_abs_diff(&exact) < 1e-5 * scale, "ab32");
+        // Bit-exact against the widened-storage oracle: only the storage
+        // rounding differs from f64, never the accumulation.
+        let oracle = a.matmul(&b32.to_f64());
+        assert_eq!(got.data(), oracle.data(), "ab32 accumulation drifted");
+
+        let a32 = MatrixF32::from_f64(&a);
+        let mut got2 = Matrix::zeros(n, m);
+        matmul_mixed_a32b(&a32, &b, &mut got2);
+        assert!(got2.max_abs_diff(&exact) < 1e-5 * scale, "a32b");
+        let oracle2 = a32.to_f64().matmul(&b);
+        assert_eq!(got2.data(), oracle2.data(), "a32b accumulation drifted");
+    }
+
+    #[test]
+    fn matrix_f32_roundtrip_shapes() {
+        let m = Matrix::from_fn(4, 6, |i, j| (i * 6 + j) as f64 * 0.5);
+        let m32 = MatrixF32::from_f64(&m);
+        assert_eq!((m32.rows(), m32.cols()), (4, 6));
+        assert_eq!(m32.to_f64(), m, "small integers/halves are f32-exact");
     }
 
     #[test]

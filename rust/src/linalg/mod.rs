@@ -20,6 +20,6 @@ pub use cg::{cg_batch, cg_batch_warm, CgStats, LinOp};
 pub use cholesky::{chol_logdet, chol_sample, chol_solve, cholesky, solve_lower, solve_lower_t};
 pub use eigh::{jacobi_eigh, tridiag_eigh};
 pub use lanczos::{lanczos, slq_logdet};
-pub use matrix::Matrix;
-pub use pcg::{pcg_batch_warm, IdentityPrecond, Preconditioner};
+pub use matrix::{matmul_mixed_a32b, matmul_mixed_ab32, Matrix, MatrixF32};
+pub use pcg::{pcg_batch_warm, refined_solve, IdentityPrecond, Preconditioner, RefineStats};
 pub use pivoted_cholesky::{pivoted_cholesky, pivoted_cholesky_fn, PivotedCholesky};

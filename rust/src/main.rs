@@ -30,7 +30,8 @@ fn main() -> lkgp::Result<()> {
             eprintln!(
                 "usage: lkgp <artifacts|smoke|serve|pool> [--engine rust|xla] \
                  [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off] \
-                 [--replicas N] [--precond off|auto|rank=R] [--corpus sim|DIR] \
+                 [--replicas N] [--precond off|auto|rank=R] [--threads N] \
+                 [--precision f64|f32] [--corpus sim|DIR] \
                  [--record FILE] [--replay FILE [--concurrent]]"
             );
             Ok(())

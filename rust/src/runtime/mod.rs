@@ -282,6 +282,18 @@ impl RustEngine {
     pub fn with_lbfgs() -> Self {
         RustEngine { trainer: Trainer::Lbfgs, ..Default::default() }
     }
+
+    /// Engine with the given solver precision mode. `Precision::F32` keeps
+    /// Kronecker-factor storage in single precision and wraps every CG
+    /// solve in iterative refinement measured against the exact f64
+    /// operator (docs/parallelism.md). Replicas forked from this engine's
+    /// `session_cfg` inherit the mode, so a pool shard answers
+    /// consistently whether the writer or a replica serves.
+    pub fn with_precision(precision: crate::gp::Precision) -> Self {
+        let mut eng = RustEngine::default();
+        eng.cfg.precision = precision;
+        eng
+    }
 }
 
 impl Engine for RustEngine {

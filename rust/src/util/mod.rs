@@ -1,26 +1,53 @@
-//! Small shared utilities: thread-count resolution, timing helpers, CSV
-//! writing, and a tiny CLI argument parser (clap is not in the offline
-//! crate set).
+//! Small shared utilities: thread-count resolution, the persistent worker
+//! team behind the data-parallel kernels, timing helpers, CSV writing, and
+//! a tiny CLI argument parser (clap is not in the offline crate set).
 
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
-/// Number of worker threads for panel-parallel kernels.
+pub mod team;
+
+/// Resolved worker-thread count; 0 = not yet resolved.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of worker threads for the data-parallel kernels.
 ///
-/// Resolution order: `LKGP_THREADS` env var, then available parallelism
-/// minus one (leave a core for the coordinator), min 1.
+/// Resolution order: an explicit [`set_num_threads`] call (the `--threads`
+/// CLI flag), then the `LKGP_THREADS` env var, then available parallelism
+/// minus one (leave a core for the coordinator), min 1. The first
+/// resolution wins and is cached for the process lifetime — the worker
+/// team and the parallel kernels key off one stable number.
 pub fn num_threads() -> usize {
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        if let Ok(s) = std::env::var("LKGP_THREADS") {
-            if let Ok(n) = s.parse::<usize>() {
-                return n.max(1);
-            }
-        }
+    let n = THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let resolved = if let Some(n) = std::env::var("LKGP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        n.max(1)
+    } else {
         std::thread::available_parallelism()
             .map(|n| n.get().saturating_sub(1).max(1))
             .unwrap_or(1)
-    })
+    };
+    // Racing first readers resolve to the same value; keep whichever
+    // store landed so every caller observes one stable count.
+    match THREADS.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => resolved,
+        Err(cur) => cur,
+    }
+}
+
+/// Pin the worker-thread count before first use (the `lkgp pool
+/// --threads N` flag). Returns false — and changes nothing — when the
+/// count was already resolved (env read or a kernel already ran); callers
+/// should warn rather than silently serve with a different count.
+pub fn set_num_threads(n: usize) -> bool {
+    THREADS
+        .compare_exchange(0, n.max(1), Ordering::Relaxed, Ordering::Relaxed)
+        .is_ok()
 }
 
 /// Time a closure, returning (result, elapsed).

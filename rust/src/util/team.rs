@@ -1,0 +1,349 @@
+//! Persistent scoped worker team — the process-wide thread pool behind
+//! every data-parallel kernel (panel matmul, batched operator/
+//! preconditioner applies, refinement sweeps).
+//!
+//! The seed crate parallelized with per-call `std::thread::scope` spawns;
+//! correct, but each batched CG iteration paid thread spawn + join on the
+//! hot path. The team keeps `num_threads() - 1` workers parked on a
+//! condvar and hands them *jobs*: a part count and a borrowed
+//! `Fn(usize)` closure. `run` does not return until every part has
+//! executed, which is what makes lending stack references to the workers
+//! sound (the lifetime is erased through a raw pointer, but no worker can
+//! touch it after `run` returns — see the safety notes on [`WorkerTeam::run`]).
+//!
+//! Determinism contract: the team only decides *where* a part executes,
+//! never *what* a part computes. Callers split work into parts by a
+//! logical thread count (pinned or from [`crate::util::num_threads`]) and
+//! each part performs the same arithmetic regardless of which worker runs
+//! it — so results are bit-identical for every team size, including the
+//! degenerate single-lane team that runs everything inline. The parity
+//! gates in `benches/simd.rs` and `tests/parallel_determinism.rs` hold
+//! the crate to this.
+//!
+//! Re-entrancy: a part that calls back into `run` (nested parallel
+//! region), or a second thread calling `run` while a job is in flight,
+//! executes its parts inline on the calling thread instead of blocking.
+//! This keeps pool workers live (no nested-join deadlock, no
+//! oversubscription) at the cost of sequential execution for the loser —
+//! results are unchanged either way.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Set while this thread is executing team parts (worker loop or a
+    /// leading `run`); nested `run` calls then execute inline.
+    static IN_TEAM: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Type-erased borrowed job closure. The raw pointer strips the caller's
+/// lifetime so the job can sit in the shared slot; `run`'s completion
+/// barrier guarantees no dereference outlives the borrow.
+#[derive(Clone, Copy)]
+struct ErasedFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and the pointer is only dereferenced between job publication and the
+// completion barrier inside `run`, while the caller's borrow is live.
+unsafe impl Send for ErasedFn {}
+unsafe impl Sync for ErasedFn {}
+
+/// One published job: claim part indices from `next` until exhausted.
+#[derive(Clone)]
+struct Job {
+    epoch: u64,
+    parts: usize,
+    next: Arc<AtomicUsize>,
+    finished: Arc<AtomicUsize>,
+    panicked: Arc<AtomicBool>,
+    f: ErasedFn,
+}
+
+struct Shared {
+    /// Latest published job (workers compare epochs to spot new work).
+    slot: Mutex<Option<Job>>,
+    work_cv: Condvar,
+    /// Completion barrier: leaders wait here for straggler parts.
+    done: Mutex<()>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent worker team; see the module docs.
+pub struct WorkerTeam {
+    shared: Arc<Shared>,
+    /// Execution lanes: parked workers + the leading caller.
+    lanes: usize,
+    /// Held by the single active leader; `try_lock` losers run inline.
+    submit: Mutex<()>,
+    epoch: AtomicU64,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerTeam {
+    /// Team with `lanes` execution lanes (spawns `lanes - 1` workers; the
+    /// caller of [`run`](Self::run) is the final lane).
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(None),
+            work_cv: Condvar::new(),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..lanes)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lkgp-team-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn worker team thread")
+            })
+            .collect();
+        WorkerTeam { shared, lanes, submit: Mutex::new(()), epoch: AtomicU64::new(0), handles }
+    }
+
+    /// The process-wide team, sized by [`crate::util::num_threads`] on
+    /// first use (so `--threads` / `LKGP_THREADS` must be applied before
+    /// any parallel kernel runs).
+    pub fn global() -> &'static WorkerTeam {
+        static TEAM: OnceLock<WorkerTeam> = OnceLock::new();
+        TEAM.get_or_init(|| WorkerTeam::new(crate::util::num_threads()))
+    }
+
+    /// Execution lanes (including the leading caller).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Execute `f(0), f(1), ..., f(parts - 1)` exactly once each, possibly
+    /// concurrently, returning only after all parts finished. Parts must
+    /// write disjoint state (or none); the part index is the only
+    /// coordination the team provides.
+    ///
+    /// Runs inline (sequentially, same results) when the team has one
+    /// lane, the caller is itself a team part, or another leader holds the
+    /// team. Panics in any part are re-raised on the caller once all parts
+    /// have finished.
+    pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
+        if parts == 0 {
+            return;
+        }
+        let inline = parts == 1 || self.lanes <= 1 || IN_TEAM.with(|c| c.get());
+        if inline {
+            for p in 0..parts {
+                f(p);
+            }
+            return;
+        }
+        // A poisoned lock only means a previous job panicked after its
+        // barrier; the team itself is intact, so reclaim it.
+        let _leader = match self.submit.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                // Another leader is mid-job; do not queue behind it.
+                for p in 0..parts {
+                    f(p);
+                }
+                return;
+            }
+        };
+        let job = Job {
+            epoch: self.epoch.fetch_add(1, Ordering::Relaxed) + 1,
+            parts,
+            next: Arc::new(AtomicUsize::new(0)),
+            finished: Arc::new(AtomicUsize::new(0)),
+            panicked: Arc::new(AtomicBool::new(false)),
+            // Lifetime erasure — sound because this function does not
+            // return until `finished == parts` and late workers that
+            // missed every part never dereference `f`.
+            f: ErasedFn(f as *const (dyn Fn(usize) + Sync)),
+        };
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            *slot = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        // Lead from the calling thread (IN_TEAM makes nested runs inline).
+        IN_TEAM.with(|c| c.set(true));
+        run_parts(&self.shared, &job);
+        IN_TEAM.with(|c| c.set(false));
+        // Completion barrier for parts claimed by workers. The timeout
+        // guards the notify-before-wait race without a busy spin.
+        let mut g = self.shared.done.lock().unwrap();
+        while job.finished.load(Ordering::Acquire) < job.parts {
+            let (ng, _) = self
+                .shared
+                .done_cv
+                .wait_timeout(g, std::time::Duration::from_millis(1))
+                .unwrap();
+            g = ng;
+        }
+        drop(g);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker team job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerTeam {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        {
+            let _slot = self.shared.slot.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute parts of `job` until none remain.
+fn run_parts(shared: &Shared, job: &Job) {
+    loop {
+        let p = job.next.fetch_add(1, Ordering::Relaxed);
+        if p >= job.parts {
+            return;
+        }
+        // SAFETY: a claimed part implies the leader is still inside `run`
+        // (it cannot pass the barrier before this part reports finished),
+        // so the borrow behind the erased pointer is live.
+        let f = unsafe { &*job.f.0 };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(p))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        let done = job.finished.fetch_add(1, Ordering::Release) + 1;
+        if done == job.parts {
+            let _g = shared.done.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_TEAM.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                match &*slot {
+                    Some(j) if j.epoch != seen => break j.clone(),
+                    _ => {}
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        seen = job.epoch;
+        run_parts(shared, &job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_every_part_exactly_once() {
+        let team = WorkerTeam::new(4);
+        let hits: Vec<AtomicU32> = (0..37).map(|_| AtomicU32::new(0)).collect();
+        team.run(hits.len(), &|p| {
+            hits[p].fetch_add(1, Ordering::Relaxed);
+        });
+        for (p, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "part {p}");
+        }
+    }
+
+    #[test]
+    fn single_lane_runs_inline() {
+        let team = WorkerTeam::new(1);
+        let sum = AtomicUsize::new(0);
+        team.run(10, &|p| {
+            sum.fetch_add(p, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_run_executes_inline_without_deadlock() {
+        let team = WorkerTeam::new(3);
+        let total = AtomicUsize::new(0);
+        team.run(3, &|_outer| {
+            // Nested region: must run inline on this worker, not block on
+            // the busy team.
+            team.run(4, &|_inner| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn reusable_across_jobs() {
+        let team = WorkerTeam::new(2);
+        for round in 1..=5usize {
+            let sum = AtomicUsize::new(0);
+            team.run(round, &|p| {
+                sum.fetch_add(p + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), round * (round + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn parallel_disjoint_writes_land() {
+        let team = WorkerTeam::new(4);
+        let mut out = vec![0.0f64; 1000];
+        let chunk = 97;
+        let parts = out.len().div_ceil(chunk);
+        // Lend disjoint chunks through a shared pointer, as the matrix
+        // kernels do.
+        struct SendPtr(*mut f64);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let base = SendPtr(out.as_mut_ptr());
+        let n = out.len();
+        team.run(parts, &|p| {
+            let start = p * chunk;
+            let len = chunk.min(n - start);
+            let dst = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+            for (i, v) in dst.iter_mut().enumerate() {
+                *v = (start + i) as f64;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn panicking_part_propagates_after_all_parts() {
+        let team = WorkerTeam::new(3);
+        let ran = AtomicUsize::new(0);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            team.run(8, &|p| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if p == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        assert_eq!(ran.load(Ordering::Relaxed), 8, "all parts still execute");
+        // Team survives a panicked job.
+        let sum = AtomicUsize::new(0);
+        team.run(4, &|p| {
+            sum.fetch_add(p, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+}

@@ -161,6 +161,33 @@ fn json_dir_fingerprint_tracks_content() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The per-file digest cache must revalidate, not memoize: the SAME
+/// corpus instance notices a file rewritten after its first fingerprint
+/// call (streaming ingestion appends to dumps between generations), and
+/// repeated calls on unchanged files stay stable and cheap (cache keyed
+/// by `(path, mtime, len)` — only changed files are re-read).
+#[test]
+fn json_dir_fingerprint_revalidates_per_file() {
+    let dir = scratch_dir("fp_stream");
+    write_task(&dir, "a.json", &good_task_json(0.5));
+    write_task(&dir, "b.json", &good_task_json(0.7));
+    let corpus = JsonDirCorpus::open(&dir).unwrap();
+    let fp1 = corpus.fingerprint();
+    assert_eq!(fp1, corpus.fingerprint(), "unchanged corpus must re-print identically");
+
+    // rewrite one file with different content *and length* (length is
+    // part of the cache key, so this invalidates even on filesystems
+    // with coarse mtime granularity)
+    let grown = r#"{"configs": [[0.1, 0.2], [0.3, 0.4], [0.5, 0.6]],
+            "curves": [[0.5, 0.6, 0.65], [0.4, 0.5], [0.3]]}"#;
+    write_task(&dir, "b.json", grown);
+    let fp2 = corpus.fingerprint();
+    assert_ne!(fp1, fp2, "same instance must notice the rewritten file");
+    // and a fresh instance (cold cache) agrees on the new print
+    assert_eq!(fp2, JsonDirCorpus::open(&dir).unwrap().fingerprint());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn empty_dir_is_an_error() {
     let dir = scratch_dir("empty");

@@ -1,0 +1,184 @@
+//! Determinism property tests for the data-parallel compute core.
+//!
+//! The worker team's contract (docs/parallelism.md): work is split into
+//! parts keyed by the *logical* thread count, and each part's arithmetic
+//! is independent of which lane executes it — so on the f64 path, every
+//! result is bit-identical for every thread count, on adversarial masks
+//! included. The mixed-precision (f32-storage) path gets tolerance-based
+//! parity against the f64 oracle instead, with iterative refinement
+//! recovering f64-grade residuals. `ci.sh`'s `par` gate adds the
+//! cross-process `LKGP_THREADS=1` vs `=N` check on top of these
+//! in-process pinned-thread-count properties.
+
+use lkgp::gp::kernels;
+use lkgp::gp::{MaskedKronOp, MaskedKronOpF32, Theta};
+use lkgp::linalg::{pcg_batch_warm, refined_solve, LinOp, Matrix};
+use lkgp::rng::Pcg64;
+
+/// Adversarial observation masks: full, empty, single live row, ragged
+/// early-stopping prefixes, random holes, and a checkerboard (worst case
+/// for the masked epilogue's branch behavior).
+fn adversarial_masks(n: usize, m: usize, seed: u64) -> Vec<(&'static str, Matrix)> {
+    let mut rng = Pcg64::new(seed);
+    let mut masks = Vec::new();
+    masks.push(("full", Matrix::from_fn(n, m, |_, _| 1.0)));
+    masks.push(("empty", Matrix::zeros(n, m)));
+    masks.push((
+        "single-row",
+        Matrix::from_fn(n, m, |i, _| if i == n / 2 { 1.0 } else { 0.0 }),
+    ));
+    let mut ragged = Matrix::zeros(n, m);
+    for i in 0..n {
+        let len = 1 + (i * 7) % m;
+        for j in 0..len {
+            ragged[(i, j)] = 1.0;
+        }
+    }
+    masks.push(("ragged-prefix", ragged));
+    masks.push((
+        "random",
+        Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.6 { 1.0 } else { 0.0 }),
+    ));
+    masks.push((
+        "checkerboard",
+        Matrix::from_fn(n, m, |i, j| ((i + j) % 2) as f64),
+    ));
+    masks
+}
+
+fn toy_factors(n: usize, m: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Pcg64::new(seed);
+    let theta = Theta::default_packed(3);
+    let th = Theta::unpack(&theta);
+    let x = Matrix::from_vec(n, 3, rng.uniform_vec(n * 3, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|j| j as f64 / (m - 1).max(1) as f64).collect();
+    let k1 = kernels::rbf(&x, &x, &th.lengthscales);
+    let k2 = kernels::matern12(&t, &t, th.t_lengthscale, th.outputscale);
+    (k1, k2)
+}
+
+/// `LinOp` adapter that pins the operator's worker-thread count, so one
+/// process can drive a full PCG solve through different simulated team
+/// widths and compare bitwise.
+struct PinnedOp<'a> {
+    op: &'a MaskedKronOp<'a>,
+    threads: usize,
+}
+
+impl LinOp for PinnedOp<'_> {
+    fn len(&self) -> usize {
+        self.op.len()
+    }
+
+    fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize) {
+        self.op.apply_batch_with_threads(x, out, batch, self.threads);
+    }
+}
+
+#[test]
+fn f64_mvm_bit_identical_across_thread_counts_on_adversarial_masks() {
+    let (n, m) = (13, 9);
+    let (k1, k2) = toy_factors(n, m, 5);
+    let mut rng = Pcg64::new(6);
+    for (name, mask) in adversarial_masks(n, m, 7) {
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 1e-2);
+        let batch = 5;
+        let x = rng.normal_vec(batch * n * m);
+        let mut base = vec![0.0; batch * n * m];
+        op.apply_batch_with_threads(&x, &mut base, batch, 1);
+        for threads in [2, 3, 8, 64] {
+            let mut got = vec![0.0; batch * n * m];
+            op.apply_batch_with_threads(&x, &mut got, batch, threads);
+            for (i, (a, b)) in got.iter().zip(&base).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "mask={name} threads={threads} idx={i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f64_pcg_solve_bit_identical_across_thread_counts() {
+    let (n, m) = (11, 8);
+    let (k1, k2) = toy_factors(n, m, 15);
+    let mut rng = Pcg64::new(16);
+    for (name, mask) in adversarial_masks(n, m, 17) {
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 1e-2);
+        let batch = 3;
+        let b = rng.normal_vec(batch * n * m);
+        let pinned1 = PinnedOp { op: &op, threads: 1 };
+        let (x1, s1) = pcg_batch_warm(&pinned1, &b, None, None, 1e-10, 2000);
+        assert!(s1.converged, "mask={name} must converge");
+        for threads in [2, 8] {
+            let pinned = PinnedOp { op: &op, threads };
+            let (xt, st) = pcg_batch_warm(&pinned, &b, None, None, 1e-10, 2000);
+            assert_eq!(s1.iters, st.iters, "mask={name} threads={threads}");
+            for (i, (a, c)) in xt.iter().zip(&x1).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    c.to_bits(),
+                    "mask={name} threads={threads} idx={i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_mvm_within_tolerance_and_thread_invariant() {
+    let (n, m) = (12, 7);
+    let (k1, k2) = toy_factors(n, m, 25);
+    let mut rng = Pcg64::new(26);
+    for (name, mask) in adversarial_masks(n, m, 27) {
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 1e-2);
+        let fast = MaskedKronOpF32::from_op(&op);
+        let batch = 4;
+        let x = rng.normal_vec(batch * n * m);
+        let mut exact = vec![0.0; batch * n * m];
+        let mut got = vec![0.0; batch * n * m];
+        op.apply_batch_with_threads(&x, &mut exact, batch, 1);
+        fast.apply_batch_with_threads(&x, &mut got, batch, 1);
+        let scale = exact.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+        for (i, (a, b)) in got.iter().zip(&exact).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * scale,
+                "mask={name} idx={i}: f32 MVM drifted {a} vs {b}"
+            );
+        }
+        // the f32 path obeys the same thread-count determinism contract
+        for threads in [2, 8] {
+            let mut gt = vec![0.0; batch * n * m];
+            fast.apply_batch_with_threads(&x, &mut gt, batch, threads);
+            for (i, (a, b)) in gt.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "mask={name} threads={threads} idx={i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn refined_f32_solve_matches_f64_oracle_within_tolerance() {
+    let (n, m) = (10, 8);
+    let (k1, k2) = toy_factors(n, m, 35);
+    let mut rng = Pcg64::new(36);
+    for (name, mask) in adversarial_masks(n, m, 37) {
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 1e-2);
+        let fast = MaskedKronOpF32::from_op(&op);
+        let batch = 2;
+        let b = rng.normal_vec(batch * n * m);
+        let (oracle, os) = pcg_batch_warm(&op, &b, None, None, 1e-12, 4000);
+        assert!(os.converged, "mask={name} oracle must converge");
+        let (x, rs) = refined_solve(&op, &fast, &b, None, None, 1e-9, 1e-4, 12, 2000);
+        assert!(rs.converged, "mask={name} refinement must converge: {:?}", rs.rel_residual);
+        let scale = oracle.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+        for (i, (a, c)) in x.iter().zip(&oracle).enumerate() {
+            assert!(
+                (a - c).abs() < 1e-6 * scale,
+                "mask={name} idx={i}: refined {a} vs oracle {c}"
+            );
+        }
+    }
+}

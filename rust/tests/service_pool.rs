@@ -599,3 +599,61 @@ fn fully_masked_row_task_served_via_replica() {
     gate.send(()).unwrap();
     frx.recv().unwrap().unwrap();
 }
+
+/// Intra-batch split: a single oversized stacked query batch submitted
+/// through a shard handle with a small `split_rows` threshold must (a)
+/// fan into multiple queued requests (observable via `split_batches` and
+/// `enqueued`), and (b) return answers bit-identical to the same batch on
+/// an unsplit pool — cold solves make batched-CG composition
+/// behavior-neutral, so chunking must not change a single bit.
+#[test]
+fn oversized_batch_split_matches_unsplit_bitwise() {
+    let snap = snapshot_for(Preset::FashionMnist, 12, 77);
+    let theta = Theta::default_packed(7);
+    let big_xq = Matrix::from_vec(6, 7, {
+        let mut v = Vec::new();
+        for r in 0..6 {
+            v.extend_from_slice(snap.all_x.row(r));
+        }
+        v
+    });
+    let small_xq = Matrix::from_vec(2, 7, {
+        let mut v = snap.all_x.row(6).to_vec();
+        v.extend_from_slice(snap.all_x.row(7));
+        v
+    });
+    let queries = vec![
+        Query::MeanAtFinal { xq: big_xq.clone() },
+        Query::Variance { xq: small_xq.clone() },
+        Query::Quantiles { xq: big_xq, ps: vec![0.25, 0.75] },
+        Query::MeanAtFinal { xq: small_xq },
+    ];
+
+    // reference: splitting disabled, cold solves
+    let whole = ServicePool::spawn(
+        rust_engines(1),
+        PoolCfg { workers: 2, warm_start: false, split_rows: 0, ..Default::default() },
+    );
+    let want = whole
+        .handle(0)
+        .query(snap.clone(), theta.clone(), queries.clone())
+        .unwrap();
+    assert_eq!(whole.stats(0).split_batches.load(Ordering::Relaxed), 0);
+    assert_eq!(whole.stats(0).enqueued.load(Ordering::Relaxed), 1);
+
+    // split pool: weights are 6, 2, 6, 2 -> threshold 8 chunks as [6+2][6+2]
+    let split = ServicePool::spawn(
+        rust_engines(1),
+        PoolCfg { workers: 2, warm_start: false, split_rows: 8, ..Default::default() },
+    );
+    let got = split
+        .handle(0)
+        .query(snap.clone(), theta.clone(), queries.clone())
+        .unwrap();
+    assert_eq!(split.stats(0).split_batches.load(Ordering::Relaxed), 1);
+    assert!(
+        split.stats(0).enqueued.load(Ordering::Relaxed) >= 2,
+        "split batch must enqueue one request per chunk"
+    );
+    assert_answers_bit_equal(&got, &want);
+}
