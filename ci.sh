@@ -7,7 +7,10 @@
 #   perf   (hard gates): cargo bench --bench hotpath -- --quick
 #                        -> BENCH_hotpath.json (record) plus gated
 #                           BENCH_pcg.json, BENCH_queries.json,
-#                           BENCH_replicas.json, BENCH_ingest.json
+#                           BENCH_replicas.json, BENCH_ingest.json,
+#                           BENCH_chaos.json (seeded fault-injection soak:
+#                           zero lost requests, typed errors only, healthy
+#                           shards bit-identical, recovery engaged)
 #   par    (hard gate):  cargo bench --bench simd twice (LKGP_THREADS=1 / =4),
 #                        cross-process PAR_CHECKSUM bitwise parity on the f64
 #                        path + BENCH_simd.json asserts (in-process thread
@@ -33,7 +36,7 @@
 # with ALL of these gates present, in this order:
 #   CI_SUMMARY build=pass test=pass shims=pass fmt=pass clippy=pass \
 #              bench=pass pcg=pass queries=pass replicas=pass ingest=pass \
-#              par=pass replay=pass creplay=pass
+#              chaos=pass par=pass replay=pass creplay=pass
 # Each gate is one of pass|fail|soft-fail|skip (skip = component missing,
 # CI_QUICK, or never reached because an earlier gate failed; soft-fail =
 # style finding under CI_STRICT=0). Exit code is non-zero iff any hard
@@ -52,7 +55,7 @@ note() { # note <gate> <pass|fail|soft-fail|skip>
 finish() {
   # gates never reached (early exit) report as skip, so the summary always
   # carries the full fixed field set parsers rely on
-  for g in build test shims fmt clippy bench pcg queries replicas ingest par replay creplay; do
+  for g in build test shims fmt clippy bench pcg queries replicas ingest chaos par replay creplay; do
     case " $SUMMARY " in
       *" $g="*) ;;
       *) SUMMARY="$SUMMARY $g=skip" ;;
@@ -153,7 +156,7 @@ fi
 # ---- perf + smoke gates (mandatory in the pipeline; CI_QUICK skips) -------
 if [ "${CI_QUICK:-0}" = "1" ]; then
   echo "== perf/smoke gates skipped (CI_QUICK=1) =="
-  for gate in bench pcg queries replicas ingest par replay creplay; do note "$gate" skip; done
+  for gate in bench pcg queries replicas ingest chaos par replay creplay; do note "$gate" skip; done
   exit 0
 fi
 
@@ -222,6 +225,18 @@ echo "== perf gate: corpus ingestion =="
 gate_file ingest BENCH_ingest.json \
   assert_ingest_zero_errors assert_ingest_lazy \
   assert_ingest_admission_floor assert_ingest_replay_floor
+
+echo "== perf gate: chaos soak =="
+# Seeded fault injection (engine panics, forced CG divergence, slow
+# solves, near-expired deadlines) over a mixed-shard pool: every request
+# must resolve to an answer or a typed error within the bound (zero
+# hangs, zero lost replies), no NaN may escape, the clean shard must stay
+# bit-identical to a chaos-free pool, and the recovery machinery
+# (catch-unwind + breaker, escalation ladder) must visibly engage
+# (docs/robustness.md).
+gate_file chaos BENCH_chaos.json \
+  assert_chaos_no_lost_requests assert_chaos_typed_errors_only \
+  assert_chaos_healthy_parity assert_chaos_recovered
 
 echo "== perf gate: data-parallel compute core =="
 # Runs the simd bench twice — pinned to LKGP_THREADS=1 and =4 — and

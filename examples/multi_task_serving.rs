@@ -174,13 +174,16 @@ fn main() -> lkgp::Result<()> {
         let replica_solves = stats.replica_solves.load(std::sync::atomic::Ordering::Relaxed);
         let prewarmed = stats.prewarmed.load(std::sync::atomic::Ordering::Relaxed);
         let precond_rank = stats.precond_rank.load(std::sync::atomic::Ordering::Relaxed);
-        let p50 = stats.latency.lock().unwrap().quantile_micros(0.5);
-        let p99 = stats.latency.lock().unwrap().quantile_micros(0.99);
+        let escalations = stats.escalations.load(std::sync::atomic::Ordering::Relaxed);
+        let panics_recovered = stats.panics_recovered.load(std::sync::atomic::Ordering::Relaxed);
+        let p50 = stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.5);
+        let p99 = stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.99);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} \
              batch_factor={:.2} warm_hits={warm_hits} replicas={replica_hits}h/{replica_solves}s \
              prewarmed={prewarmed} precond_rank={precond_rank} \
-             cg_iters={cg_iters} mvm_rows={mvm_rows} p50={p50}us p99={p99}us",
+             cg_iters={cg_iters} mvm_rows={mvm_rows} escalations={escalations} \
+             panics_recovered={panics_recovered} p50={p50}us p99={p99}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
@@ -200,6 +203,8 @@ fn main() -> lkgp::Result<()> {
             ("precond_rank", Json::Num(precond_rank as f64)),
             ("cg_iters", Json::Num(cg_iters as f64)),
             ("cg_mvm_rows", Json::Num(mvm_rows as f64)),
+            ("escalations", Json::Num(escalations as f64)),
+            ("panics_recovered", Json::Num(panics_recovered as f64)),
             ("p50_us", Json::Num(p50 as f64)),
             ("p99_us", Json::Num(p99 as f64)),
         ]));

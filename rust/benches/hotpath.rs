@@ -156,6 +156,9 @@ fn main() -> lkgp::Result<()> {
     // ---- corpus data plane: many-task admission + replay throughput ----
     let ingest_json = ingest_scale(&mut table, quick);
 
+    // ---- seeded chaos soak: faults in, typed errors out, zero hangs ----
+    let chaos_json = chaos_soak(&mut table, quick);
+
     // ---- 4-shard pool vs 4 isolated services, same thread budget ----
     let (pool_rps, isolated_rps) = pool_vs_isolated(&mut table, quick);
 
@@ -199,7 +202,258 @@ fn main() -> lkgp::Result<()> {
     println!("wrote {}", root.join("BENCH_replicas.json").display());
     std::fs::write(root.join("BENCH_ingest.json"), ingest_json.pretty())?;
     println!("wrote {}", root.join("BENCH_ingest.json").display());
+    std::fs::write(root.join("BENCH_chaos.json"), chaos_json.pretty())?;
+    println!("wrote {}", root.join("BENCH_chaos.json").display());
     Ok(())
+}
+
+/// Seeded chaos soak over the sharded pool (the robustness tentpole):
+/// shard 0 runs a clean engine, the remaining shards run `ChaosEngine`s
+/// injecting panics, forced CG divergence, and slow solves from a fixed
+/// `FaultPlan` seed, plus a leg of near-expired deadline requests. The
+/// soak drives a mixed query/refit stream at every shard with a bounded
+/// receive timeout and checks the contract the robustness layer promises.
+/// The returned JSON carries the gates ci.sh enforces:
+///
+/// * `assert_chaos_no_lost_requests` — every submitted request resolved
+///   (answer, typed error, or typed submit rejection) within the bound:
+///   zero hangs, zero lost replies
+/// * `assert_chaos_typed_errors_only` — every failure surfaced as a typed
+///   `LkgpError` (Quarantined/Timeout/Solver/Io/Coordinator) and every
+///   successful answer was finite — no NaN ever escaped
+/// * `assert_chaos_healthy_parity`   — the clean shard's answers are
+///   bit-identical to a chaos-free pool on the same queries
+/// * `assert_chaos_recovered`        — faults actually fired and the
+///   recovery machinery visibly engaged (panics recovered or solves
+///   escalated): a soak that injects nothing proves nothing
+fn chaos_soak(table: &mut Table, quick: bool) -> Json {
+    use lkgp::coordinator::{Answer, PredictClient, Query};
+    use lkgp::runtime::chaos::{ChaosEngine, ChaosStats, FaultPlan};
+    use lkgp::LkgpError;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let shards = 4usize;
+    let reqs_per_shard = if quick { 6 } else { 14 };
+    let recv_bound = Duration::from_secs(120);
+    let plan = FaultPlan {
+        seed: 7,
+        panic_rate: 0.15,
+        diverge_rate: 0.25,
+        slow_rate: 0.10,
+        slow_ms: 2,
+        ..Default::default()
+    };
+
+    let chaos_stats = Arc::new(ChaosStats::default());
+    let engines: Vec<Box<dyn Engine>> = (0..shards)
+        .map(|s| {
+            if s == 0 {
+                Box::<RustEngine>::default() as Box<dyn Engine>
+            } else {
+                Box::new(ChaosEngine::new(
+                    RustEngine::default(),
+                    plan,
+                    s as u64,
+                    chaos_stats.clone(),
+                )) as Box<dyn Engine>
+            }
+        })
+        .collect();
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg { workers: shards, warm_start: false, ..Default::default() },
+    );
+
+    // one small generation per shard
+    let snaps: Vec<Snapshot> = (0..shards)
+        .map(|s| {
+            let mut rng = Pcg64::new(90 + s as u64);
+            let task =
+                lkgp::lcbench::Task::generate(lkgp::lcbench::Preset::Airlines, 8, &mut rng);
+            let mut reg = Registry::new();
+            for i in 0..task.n() {
+                let id = reg.add(task.configs.row(i).to_vec());
+                for j in 0..3 + i % 3 {
+                    reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+                }
+            }
+            CurveStore::new(task.m()).snapshot(&reg).unwrap()
+        })
+        .collect();
+    let theta = Theta::default_packed(lkgp::lcbench::DIMS);
+    let query_for = |snap: &Snapshot, r: usize| Query::MeanAtFinal {
+        xq: Matrix::from_vec(
+            1,
+            lkgp::lcbench::DIMS,
+            snap.all_x.row(r % snap.all_x.rows()).to_vec(),
+        ),
+    };
+    let finite_answer = |answers: &[Answer]| {
+        answers.iter().all(|a| match a {
+            Answer::Final(preds) => preds.iter().all(|(m, v)| m.is_finite() && v.is_finite()),
+            _ => true,
+        })
+    };
+
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    let mut resolved = 0u64;
+    let mut answered = 0u64;
+    let mut typed_errors = 0u64;
+    let mut untyped = 0u64;
+    let mut nonfinite = 0u64;
+    let mut receivers = Vec::new();
+    for s in 0..shards {
+        for r in 0..reqs_per_shard {
+            submitted += 1;
+            let (rtx, rrx) = channel();
+            let query = Request::Query {
+                snapshot: snaps[s].clone(),
+                theta: theta.clone(),
+                queries: vec![query_for(&snaps[s], r)],
+                resp: rtx,
+            };
+            // every third request on a chaotic shard rides a tight deadline
+            let req = if s > 0 && r % 3 == 2 {
+                Request::Deadline {
+                    deadline: Instant::now() + Duration::from_micros(200),
+                    inner: Box::new(query),
+                }
+            } else {
+                query
+            };
+            match pool.submit(s, req) {
+                Ok(()) => receivers.push(rrx),
+                Err(LkgpError::Quarantined { .. }) | Err(LkgpError::Coordinator(_)) => {
+                    // typed fail-fast rejection IS a resolution
+                    resolved += 1;
+                    typed_errors += 1;
+                }
+                Err(_) => {
+                    resolved += 1;
+                    untyped += 1;
+                }
+            }
+        }
+    }
+    for rrx in receivers {
+        match rrx.recv_timeout(recv_bound) {
+            Ok(Ok(answers)) => {
+                resolved += 1;
+                answered += 1;
+                if !finite_answer(&answers) {
+                    nonfinite += 1;
+                }
+            }
+            Ok(Err(
+                LkgpError::Solver { .. }
+                | LkgpError::Timeout { .. }
+                | LkgpError::Quarantined { .. }
+                | LkgpError::Io(_)
+                | LkgpError::Coordinator(_),
+            )) => {
+                resolved += 1;
+                typed_errors += 1;
+            }
+            Ok(Err(_)) => {
+                resolved += 1;
+                untyped += 1;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // reply channel dropped by a recovered panic: typed at the
+                // client as a Coordinator "pool dropped request" error
+                resolved += 1;
+                typed_errors += 1;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {} // a hang: unresolved
+        }
+    }
+    let soak_secs = t0.elapsed().as_secs_f64();
+
+    // healthy-shard parity against a chaos-free pool, cold solves
+    let clean = ServicePool::spawn(
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>],
+        PoolCfg { workers: 1, warm_start: false, ..Default::default() },
+    );
+    let parity_queries: Vec<Query> = (0..3).map(|r| query_for(&snaps[0], r)).collect();
+    let want = clean
+        .handle(0)
+        .query(snaps[0].clone(), theta.clone(), parity_queries.clone())
+        .ok();
+    let got = pool
+        .handle(0)
+        .query(snaps[0].clone(), theta.clone(), parity_queries)
+        .ok();
+    let parity = match (&got, &want) {
+        (Some(g), Some(w)) => {
+            g.len() == w.len()
+                && g.iter().zip(w).all(|(x, y)| match (x, y) {
+                    (Answer::Final(a), Answer::Final(b)) => {
+                        a.len() == b.len()
+                            && a.iter().zip(b).all(|(p, q)| {
+                                p.0.to_bits() == q.0.to_bits() && p.1.to_bits() == q.1.to_bits()
+                            })
+                    }
+                    _ => false,
+                })
+        }
+        _ => false,
+    };
+
+    let mut panics_recovered = 0u64;
+    let mut escalations = 0u64;
+    let mut timeouts = 0u64;
+    let mut trips = 0u64;
+    for s in 0..shards {
+        let st = pool.stats(s);
+        panics_recovered += st.panics_recovered.load(Ordering::Relaxed);
+        escalations += st.escalations.load(Ordering::Relaxed);
+        timeouts += st.timeouts.load(Ordering::Relaxed);
+        trips += st.quarantine_trips.load(Ordering::Relaxed);
+    }
+    let injected = chaos_stats.total();
+    let recovered = injected > 0 && (panics_recovered > 0 || escalations > 0);
+
+    println!(
+        "\nchaos soak: {submitted} requests over {shards} shards in {soak_secs:.2}s — \
+         {answered} answered, {typed_errors} typed errors, {untyped} untyped, \
+         {} unresolved; injected={injected} (panics={} diverges={} slows={}), \
+         recovered: panics={panics_recovered} escalations={escalations} \
+         timeouts={timeouts} trips={trips}, healthy parity={parity}",
+        submitted - resolved,
+        chaos_stats.panics.load(Ordering::Relaxed),
+        chaos_stats.diverges.load(Ordering::Relaxed),
+        chaos_stats.slows.load(Ordering::Relaxed),
+    );
+    table.row(vec![
+        "chaos_soak".into(),
+        submitted.to_string(),
+        format!("{:.0}", soak_secs * 1e6),
+        format!("{answered}ok/{typed_errors}err"),
+    ]);
+
+    Json::obj(vec![
+        ("bench", Json::Str("chaos".into())),
+        ("shards", Json::Num(shards as f64)),
+        ("requests", Json::Num(submitted as f64)),
+        ("answered", Json::Num(answered as f64)),
+        ("typed_errors", Json::Num(typed_errors as f64)),
+        ("injected_faults", Json::Num(injected as f64)),
+        ("panics_recovered", Json::Num(panics_recovered as f64)),
+        ("escalations", Json::Num(escalations as f64)),
+        ("timeouts", Json::Num(timeouts as f64)),
+        ("quarantine_trips", Json::Num(trips as f64)),
+        ("soak_secs", Json::Num(soak_secs)),
+        ("assert_chaos_no_lost_requests", Json::Bool(resolved == submitted)),
+        (
+            "assert_chaos_typed_errors_only",
+            Json::Bool(untyped == 0 && nonfinite == 0),
+        ),
+        ("assert_chaos_healthy_parity", Json::Bool(parity)),
+        ("assert_chaos_recovered", Json::Bool(recovered)),
+    ])
 }
 
 /// Corpus data plane at scale (the ingestion tentpole): admit a many-task

@@ -94,8 +94,8 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
         report.stopped,
         report.completed,
         report.batch_factor,
-        service.stats.latency.lock().unwrap().quantile_micros(0.5),
-        service.stats.latency.lock().unwrap().quantile_micros(0.99),
+        service.stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.5),
+        service.stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.99),
     );
     Ok(())
 }
@@ -122,6 +122,15 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
 /// `--precision f64|f32` selects the solver's numeric mode — `f32` stores
 /// Kronecker factors in single precision and recovers f64-grade residuals
 /// through iterative refinement (see docs/parallelism.md).
+///
+/// Robustness controls (docs/robustness.md): `--deadline-ms N` attaches a
+/// pool-wide deadline to every submitted request (expired work is shed
+/// with a typed `Timeout` instead of occupying a worker), and
+/// `--chaos SPEC` runs the whole pool under seeded fault injection
+/// (`panic=0.05,diverge=0.2,slow=0.1,io=0.02,nan=0.01,seed=7` — see
+/// [`crate::runtime::chaos::FaultPlan::parse`]). Under chaos, per-shard
+/// scheduler failures are reported and tolerated rather than aborting the
+/// run, and the final report includes injected-fault totals.
 pub fn serve_pool(args: &Args) -> crate::Result<()> {
     use crate::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
     use std::sync::{Arc, Mutex};
@@ -161,6 +170,31 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         }
     }
 
+    let deadline = match args.get("deadline-ms") {
+        Some(v) => {
+            let ms: u64 = v.parse().map_err(|_| {
+                crate::LkgpError::Coordinator(format!(
+                    "bad --deadline-ms '{v}' (expected milliseconds >= 1)"
+                ))
+            })?;
+            Some(std::time::Duration::from_millis(ms.max(1)))
+        }
+        None => None,
+    };
+    let chaos_plan = match args.get("chaos") {
+        Some(spec) => Some(
+            crate::runtime::chaos::FaultPlan::parse(spec).ok_or_else(|| {
+                crate::LkgpError::Coordinator(format!(
+                    "bad --chaos '{spec}' (expected a key=value list over \
+                     panic, diverge, slow, slow_ms, io, nan, seed with rates in [0, 1])"
+                ))
+            })?,
+        ),
+        None => None,
+    };
+    let chaos_stats = chaos_plan
+        .map(|_| Arc::new(crate::runtime::chaos::ChaosStats::default()));
+
     let corpus_arg = args.get("corpus").unwrap_or("sim");
     let corpus: Arc<dyn Corpus> = if corpus_arg == "sim" {
         Arc::new(SimCorpus::new(
@@ -171,17 +205,38 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
     } else {
         Arc::new(JsonDirCorpus::open(corpus_arg)?)
     };
+    let corpus: Arc<dyn Corpus> = match (chaos_plan, &chaos_stats) {
+        (Some(plan), Some(stats)) if plan.corpus_faults() => Arc::new(
+            crate::runtime::chaos::ChaosCorpus::new(corpus, plan, stats.clone()),
+        ),
+        _ => corpus,
+    };
     let tasks = corpus.len();
     let workers = args
         .get_usize("workers", crate::util::num_threads().min(tasks.max(1)))
         .max(1);
 
-    let factory: EngineFactory = Box::new(move |_shard| {
-        let mut eng = crate::runtime::RustEngine::default();
-        eng.cfg.precond = precond;
-        eng.cfg.precision = precision;
-        Box::new(eng) as Box<dyn crate::runtime::Engine>
-    });
+    let factory: EngineFactory = {
+        let chaos_stats = chaos_stats.clone();
+        Box::new(move |shard| {
+            let mut eng = crate::runtime::RustEngine::default();
+            eng.cfg.precond = precond;
+            eng.cfg.precision = precision;
+            match (chaos_plan, &chaos_stats) {
+                // per-shard salt: each shard draws its own deterministic
+                // fault stream instead of sharing one global sequence
+                (Some(plan), Some(stats)) if plan.engine_faults() => {
+                    Box::new(crate::runtime::chaos::ChaosEngine::new(
+                        eng,
+                        plan,
+                        shard as u64,
+                        stats.clone(),
+                    )) as Box<dyn crate::runtime::Engine>
+                }
+                _ => Box::new(eng) as Box<dyn crate::runtime::Engine>,
+            }
+        })
+    };
     let pool = ServicePool::from_corpus(
         &*corpus,
         factory,
@@ -189,6 +244,7 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             workers,
             warm_start: warm,
             max_replicas: replicas,
+            deadline,
             ..Default::default()
         },
     );
@@ -206,8 +262,14 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         None => None,
     };
 
+    // Under fault injection (or tight deadlines) a shard's scheduler may
+    // legitimately abort with a typed error; that is the harness working,
+    // not a run failure, so those shards are reported instead of aborting
+    // the whole pool.
+    let tolerate_failures = chaos_plan.is_some() || deadline.is_some();
     let mut results: Vec<(usize, String, RunReport, f64)> = Vec::new();
     let mut skipped: Vec<(usize, String)> = Vec::new();
+    let mut failed: Vec<(usize, String)> = Vec::new();
     std::thread::scope(|scope| -> crate::Result<()> {
         let mut joins = Vec::new();
         for t in 0..tasks {
@@ -221,7 +283,7 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             };
             let handle = pool.handle(t);
             let recorder = recorder.clone();
-            joins.push(scope.spawn(
+            joins.push((t, scope.spawn(
                 move || -> crate::Result<(usize, String, RunReport, f64)> {
                     let oracle = (0..task.n())
                         .map(|i| task.curves[(i, task.lengths[i].max(1) - 1)])
@@ -246,19 +308,28 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
                     };
                     Ok((t, name, report, oracle))
                 },
-            ));
+            )));
         }
-        for j in joins {
-            let out = j
-                .join()
-                .map_err(|_| crate::LkgpError::Coordinator("shard scheduler panicked".into()))??;
-            results.push(out);
+        for (t, j) in joins {
+            match j.join() {
+                Err(_) => {
+                    return Err(crate::LkgpError::Coordinator(
+                        "shard scheduler panicked".into(),
+                    ))
+                }
+                Ok(Ok(out)) => results.push(out),
+                Ok(Err(e)) if tolerate_failures => failed.push((t, e.to_string())),
+                Ok(Err(e)) => return Err(e),
+            }
         }
         Ok(())
     })?;
 
     for (t, e) in &skipped {
         eprintln!("shard {t}: skipped (corrupt task isolated, others served): {e}");
+    }
+    for (t, e) in &failed {
+        eprintln!("shard {t}: scheduler aborted under fault injection: {e}");
     }
     results.sort_by_key(|r| r.0);
     for (t, name, report, oracle) in &results {
@@ -285,8 +356,20 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed),
             stats.peak_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
-            stats.latency.lock().unwrap().quantile_micros(0.5),
-            stats.latency.lock().unwrap().quantile_micros(0.99),
+            stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.5),
+            stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.99),
+        );
+        println!(
+            "shard {t} health: escalations={} dense_fallbacks={} panics_recovered={} \
+             timeouts={} shed={} solver_failures={} quarantine={}trips/{}rejects",
+            stats.escalations.load(std::sync::atomic::Ordering::Relaxed),
+            stats.dense_fallbacks.load(std::sync::atomic::Ordering::Relaxed),
+            stats.panics_recovered.load(std::sync::atomic::Ordering::Relaxed),
+            stats.timeouts.load(std::sync::atomic::Ordering::Relaxed),
+            stats.shed.load(std::sync::atomic::Ordering::Relaxed),
+            stats.solver_failures.load(std::sync::atomic::Ordering::Relaxed),
+            stats.quarantine_trips.load(std::sync::atomic::Ordering::Relaxed),
+            stats.quarantine_rejects.load(std::sync::atomic::Ordering::Relaxed),
         );
     }
     println!(
@@ -295,6 +378,20 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         pool.evicted(),
         skipped.len(),
     );
+    if let Some(stats) = &chaos_stats {
+        use std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "chaos: {} faults injected (panics={} diverges={} slows={} io={} nan={}), \
+             {} shard scheduler(s) aborted",
+            stats.total(),
+            stats.panics.load(Relaxed),
+            stats.diverges.load(Relaxed),
+            stats.slows.load(Relaxed),
+            stats.io_errors.load(Relaxed),
+            stats.nans.load(Relaxed),
+            failed.len(),
+        );
+    }
     if let Some(rec) = recorder {
         rec.lock().unwrap().finish(&pool)?;
     }

@@ -32,7 +32,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::gp::session::{self, Answer, Posterior, Query};
 use crate::gp::{SolverCfg, Theta};
@@ -80,8 +80,58 @@ pub enum Request {
         seed: u64,
         resp: Sender<crate::Result<Vec<Matrix>>>,
     },
+    /// Any request wrapped with an absolute deadline. Workers unwrap the
+    /// envelope when they pick the request up and drop expired work with a
+    /// typed [`crate::LkgpError::Timeout`] reply instead of spending solver
+    /// time on an answer nobody is waiting for. Nested envelopes keep the
+    /// tightest deadline. `ServicePool`s built with a `PoolCfg::deadline`
+    /// wrap submissions automatically; requests arriving pre-wrapped keep
+    /// their own deadline.
+    Deadline {
+        deadline: Instant,
+        inner: Box<Request>,
+    },
     /// Stop the worker.
     Shutdown,
+}
+
+/// Generation a (possibly deadline-wrapped) refit targets, for the
+/// replica generation fence.
+fn refit_generation(req: &Request) -> Option<u64> {
+    match req {
+        Request::Refit { snapshot, .. } => Some(snapshot.generation),
+        Request::Deadline { inner, .. } => refit_generation(inner),
+        _ => None,
+    }
+}
+
+/// Terminally fail a request with a typed error, whatever its reply
+/// channel flavor (deadline expiry, quarantine fail-fast).
+fn fail_request(req: Request, err: crate::LkgpError) {
+    match req {
+        Request::Refit { resp, .. } => {
+            let _ = resp.send(Err(err));
+        }
+        Request::PredictFinal { resp, .. } => {
+            let _ = resp.send(Err(err));
+        }
+        Request::Query { resp, .. } => {
+            let _ = resp.send(Err(err));
+        }
+        Request::SampleCurves { resp, .. } => {
+            let _ = resp.send(Err(err));
+        }
+        Request::Deadline { inner, .. } => fail_request(*inner, err),
+        Request::Shutdown => {}
+    }
+}
+
+/// Lock a mutex, recovering the inner state if a previous holder panicked
+/// mid-update (a recovered engine panic must not poison a shard's warm
+/// cache or latency histogram for every later request — worst case the
+/// cache holds a stale entry, which every consumer already tolerates).
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Shared service statistics (one instance per service / per pool shard).
@@ -143,6 +193,29 @@ pub struct ServiceStats {
     /// fans across pool workers / read replicas instead of serializing on
     /// one shard writer. Counts batches split, not chunks produced.
     pub split_batches: AtomicU64,
+    /// Engine panics caught and recovered by pool workers (writer or
+    /// replica path). The shard survives; consecutive recoveries feed the
+    /// circuit breaker (docs/robustness.md).
+    pub panics_recovered: AtomicU64,
+    /// Requests dropped at pick-up because their deadline had expired
+    /// (typed `LkgpError::Timeout` reply; see `Request::Deadline`).
+    pub timeouts: AtomicU64,
+    /// Requests shed at submission because the shard queue stayed full for
+    /// the whole bounded wait (`PoolCfg::submit_wait` / `try_submit`).
+    pub shed: AtomicU64,
+    /// Escalation-ladder rungs climbed by this shard's solves (0 on the
+    /// healthy path; see `gp::lkgp` and docs/robustness.md).
+    pub escalations: AtomicU64,
+    /// Solves answered by the dense-Cholesky fallback rung.
+    pub dense_fallbacks: AtomicU64,
+    /// Typed engine failures delivered to callers from the writer path
+    /// (ladder exhaustion, fit failures). Feeds the circuit breaker.
+    pub solver_failures: AtomicU64,
+    /// Times this shard's circuit breaker tripped into quarantine.
+    pub quarantine_trips: AtomicU64,
+    /// Submissions rejected fail-fast while the shard was quarantined
+    /// (typed `LkgpError::Quarantined` reply).
+    pub quarantine_rejects: AtomicU64,
 }
 
 impl ServiceStats {
@@ -275,6 +348,18 @@ struct PendingQuery {
     reply: PendingReply,
 }
 
+/// Writer-path outcome summary for one processed batch, fed to the shard
+/// circuit breaker: engine-level failures delivered to callers vs engine
+/// calls that produced answers. Per-request validation rejections count as
+/// neither (a caller's malformed query says nothing about shard health).
+#[derive(Default)]
+struct BatchReport {
+    engine_failures: u64,
+    engine_successes: u64,
+    /// A `Shutdown` request was seen.
+    shutdown: bool,
+}
+
 /// Flush queued query batches: group by (generation, theta), concatenate
 /// each group's typed queries into one `Engine::answer_batch` call (one
 /// underlying solve for session-capable engines), scatter the responses.
@@ -287,6 +372,7 @@ fn flush_queries(
     pending: &mut Vec<PendingQuery>,
     stats: &ServiceStats,
     warm_enabled: bool,
+    report: &mut BatchReport,
 ) {
     while !pending.is_empty() {
         let gen0 = pending[0].snapshot.generation;
@@ -320,7 +406,7 @@ fn flush_queries(
         // most-recent entry (cross-generation embed by trial id), else the
         // snapshot's own lineage.
         let lineage: Option<Arc<WarmStart>> = {
-            let mut warm = slot.warm.lock().unwrap();
+            let mut warm = lock_clean(&slot.warm);
             match warm.get(gen0) {
                 Some(w) => {
                     stats.warm_cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -363,13 +449,10 @@ fn flush_queries(
         if guess.is_some() {
             stats.warm_hits.fetch_add(1, Ordering::Relaxed);
         }
-        stats
-            .latency
-            .lock()
-            .unwrap()
-            .record(t0.elapsed().as_micros() as u64);
+        lock_clean(&stats.latency).record(t0.elapsed().as_micros() as u64);
         match result {
             Ok(outcome) => {
+                report.engine_successes += 1;
                 let crate::runtime::QueryOutcome {
                     answers,
                     alpha,
@@ -379,7 +462,15 @@ fn flush_queries(
                     cg_mvm_rows,
                     solves,
                     precond: out_precond,
+                    escalations,
+                    dense_fallbacks,
                 } = outcome;
+                stats
+                    .escalations
+                    .fetch_add(escalations as u64, Ordering::Relaxed);
+                stats
+                    .dense_fallbacks
+                    .fetch_add(dense_fallbacks as u64, Ordering::Relaxed);
                 stats.cg_iters.fetch_add(cg_iters as u64, Ordering::Relaxed);
                 stats
                     .cg_mvm_rows
@@ -392,7 +483,7 @@ fn flush_queries(
                 }
                 match (warm_enabled, alpha) {
                     (true, Some(alpha)) => {
-                        slot.warm.lock().unwrap().put(Arc::new(WarmStart {
+                        lock_clean(&slot.warm).put(Arc::new(WarmStart {
                             generation: snap.generation,
                             theta: theta0.clone(),
                             row_ids: (*snap.row_ids).clone(),
@@ -409,7 +500,7 @@ fn flush_queries(
                         // means nothing embeds as a guess, so solves stay
                         // cold as requested).
                         if let Some(factors) = out_precond {
-                            slot.warm.lock().unwrap().put(Arc::new(WarmStart {
+                            lock_clean(&slot.warm).put(Arc::new(WarmStart {
                                 generation: snap.generation,
                                 theta: theta0.clone(),
                                 row_ids: (*snap.row_ids).clone(),
@@ -425,9 +516,10 @@ fn flush_queries(
                 scatter_answers(replies, answers);
             }
             Err(e) if replies.len() == 1 => {
-                let msg = e.to_string();
+                report.engine_failures += 1;
+                stats.solver_failures.fetch_add(1, Ordering::Relaxed);
                 let (reply, _) = replies.into_iter().next().expect("one reply");
-                send_error(reply, &msg);
+                send_error(reply, e);
             }
             Err(_) => {
                 // Failure isolation for coalesced groups: shape errors are
@@ -449,6 +541,7 @@ fn flush_queries(
                     );
                     match res {
                         Ok(outcome) => {
+                            report.engine_successes += 1;
                             stats
                                 .cg_iters
                                 .fetch_add(outcome.cg_iters as u64, Ordering::Relaxed);
@@ -458,6 +551,12 @@ fn flush_queries(
                             stats
                                 .engine_solves
                                 .fetch_add(outcome.solves as u64, Ordering::Relaxed);
+                            stats
+                                .escalations
+                                .fetch_add(outcome.escalations as u64, Ordering::Relaxed);
+                            stats
+                                .dense_fallbacks
+                                .fetch_add(outcome.dense_fallbacks as u64, Ordering::Relaxed);
                             let mut answers = outcome.answers.into_iter();
                             match reply {
                                 PendingReply::Answers(tx) => {
@@ -476,7 +575,11 @@ fn flush_queries(
                                 }
                             }
                         }
-                        Err(e) => send_error(reply, &e.to_string()),
+                        Err(e) => {
+                            report.engine_failures += 1;
+                            stats.solver_failures.fetch_add(1, Ordering::Relaxed);
+                            send_error(reply, e);
+                        }
                     }
                 }
             }
@@ -509,14 +612,17 @@ fn scatter_answers(replies: Vec<(PendingReply, usize)>, answers: Vec<Answer>) {
     }
 }
 
-/// Deliver an error string to either reply flavor.
-fn send_error(reply: PendingReply, msg: &str) {
+/// Deliver a typed error to either reply flavor. Callers keep the original
+/// `LkgpError` (e.g. `Solver` from ladder exhaustion, `Timeout`) instead
+/// of a stringly `Coordinator` wrapper, so they can match on the failure
+/// kind.
+fn send_error(reply: PendingReply, err: crate::LkgpError) {
     match reply {
         PendingReply::Preds(tx) => {
-            let _ = tx.send(Err(crate::LkgpError::Coordinator(msg.to_string())));
+            let _ = tx.send(Err(err));
         }
         PendingReply::Answers(tx) => {
-            let _ = tx.send(Err(crate::LkgpError::Coordinator(msg.to_string())));
+            let _ = tx.send(Err(err));
         }
     }
 }
@@ -526,7 +632,7 @@ fn send_error(reply: PendingReply, msg: &str) {
 /// mean.
 fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
     let lineage = {
-        let mut warm = slot.warm.lock().unwrap();
+        let mut warm = lock_clean(&slot.warm);
         warm.get(snapshot.generation)
             .or_else(|| warm.latest().cloned())
     }
@@ -558,7 +664,7 @@ fn prewarm_generation(
     stats: &ServiceStats,
 ) {
     let (guess, precond) = {
-        let mut warm = slot.warm.lock().unwrap();
+        let mut warm = lock_clean(&slot.warm);
         if warm
             .peek(snapshot.generation)
             .map_or(false, |w| !w.alpha.is_empty())
@@ -586,7 +692,7 @@ fn prewarm_generation(
     if let Some(f) = &precond {
         stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
     }
-    slot.warm.lock().unwrap().put(Arc::new(WarmStart {
+    lock_clean(&slot.warm).put(Arc::new(WarmStart {
         generation: snapshot.generation,
         theta,
         row_ids: (*snapshot.row_ids).clone(),
@@ -603,13 +709,19 @@ fn prewarm_generation(
     stats
         .cg_mvm_rows
         .fetch_add(post.cg_mvm_rows() as u64, Ordering::Relaxed);
+    stats
+        .escalations
+        .fetch_add(post.escalations() as u64, Ordering::Relaxed);
+    stats
+        .dense_fallbacks
+        .fetch_add(post.dense_fallbacks() as u64, Ordering::Relaxed);
 }
 
 /// Cache the fitted theta in the shard lineage, preserving any cached
 /// alpha and factored preconditioner (both solved under nearby
 /// hyper-parameters, so both remain excellent across the refit).
 fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64>) {
-    let mut warm = slot.warm.lock().unwrap();
+    let mut warm = lock_clean(&slot.warm);
     let base = warm
         .get(snapshot.generation)
         .or_else(|| warm.latest().cloned());
@@ -632,19 +744,40 @@ fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64
     warm.put(Arc::new(updated));
 }
 
-/// Process one drained batch of requests against an engine slot. Returns
-/// false when a `Shutdown` was seen (remaining requests are dropped, like
-/// the original single-worker loop).
+/// Process one drained batch of requests against an engine slot. The
+/// report's `shutdown` flag is set when a `Shutdown` was seen (remaining
+/// requests are dropped, like the original single-worker loop); its
+/// engine failure/success counts feed the shard circuit breaker.
 fn process_batch(
     slot: &mut EngineSlot,
     batch: Vec<Request>,
     stats: &ServiceStats,
     warm_enabled: bool,
     prewarm: bool,
-) -> bool {
+    shard: usize,
+) -> BatchReport {
+    let mut report = BatchReport::default();
     let mut pending: Vec<PendingQuery> = Vec::new();
     for req in batch {
         stats.requests.fetch_add(1, Ordering::Relaxed);
+        // Unwrap deadline envelopes (nesting keeps the tightest deadline)
+        // and drop expired work with a typed Timeout reply instead of
+        // paying for a solve nobody is waiting for.
+        let mut req = req;
+        let mut deadline: Option<Instant> = None;
+        while let Request::Deadline { deadline: d, inner } = req {
+            deadline = Some(deadline.map_or(d, |cur| cur.min(d)));
+            req = *inner;
+        }
+        if let Some(d) = deadline {
+            let now = Instant::now();
+            if now > d {
+                stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                let late_micros = now.duration_since(d).as_micros() as u64;
+                fail_request(req, crate::LkgpError::Timeout { shard, late_micros });
+                continue;
+            }
+        }
         match req {
             // Malformed requests are failed individually BEFORE coalescing
             // so one caller's bad query can never error out a whole
@@ -680,7 +813,7 @@ fn process_batch(
             }
             Request::Refit { snapshot, theta0, seed, resp } => {
                 // order barrier: flush batched queries first
-                flush_queries(slot, &mut pending, stats, warm_enabled);
+                flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
                 let d = snapshot.data.d();
                 let theta0 = if theta0.is_empty() {
                     if warm_enabled {
@@ -692,6 +825,13 @@ fn process_batch(
                     theta0
                 };
                 let result = slot.engine.fit(&theta0, &snapshot.data, seed);
+                match &result {
+                    Ok(_) => report.engine_successes += 1,
+                    Err(_) => {
+                        report.engine_failures += 1;
+                        stats.solver_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
                 if warm_enabled {
                     if let Ok(theta) = &result {
                         record_fit_lineage(slot, &snapshot, theta.clone());
@@ -708,23 +848,33 @@ fn process_batch(
                 let _ = resp.send(result);
             }
             Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
-                flush_queries(slot, &mut pending, stats, warm_enabled);
-                let _ = resp.send(slot.engine.sample_curves(
+                flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
+                let result = slot.engine.sample_curves(
                     &theta,
                     &snapshot.data,
                     &xq,
                     samples,
                     seed,
-                ));
+                );
+                match &result {
+                    Ok(_) => report.engine_successes += 1,
+                    Err(_) => {
+                        report.engine_failures += 1;
+                        stats.solver_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let _ = resp.send(result);
             }
+            Request::Deadline { .. } => unreachable!("deadline envelopes unwrapped above"),
             Request::Shutdown => {
-                flush_queries(slot, &mut pending, stats, warm_enabled);
-                return false;
+                flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
+                report.shutdown = true;
+                return report;
             }
         }
     }
-    flush_queries(slot, &mut pending, stats, warm_enabled);
-    true
+    flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
+    report
 }
 
 // ---------------------------------------------------------------------------
@@ -878,7 +1028,7 @@ fn worker_loop(engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<Servic
         while let Ok(r) = rx.try_recv() {
             queue.push(r);
         }
-        if !process_batch(&mut slot, queue, &stats, false, false) {
+        if process_batch(&mut slot, queue, &stats, false, false, 0).shutdown {
             return;
         }
     }
@@ -925,6 +1075,26 @@ pub struct PoolCfg {
     /// back in batch order; the chunks remain eligible for same-generation
     /// coalescing downstream.
     pub split_rows: usize,
+    /// Default per-request deadline stamped at submission (None = no
+    /// deadline, the historical behavior). Requests arriving already
+    /// wrapped in [`Request::Deadline`] keep their own (tighter) deadline.
+    /// Workers drop expired work with a typed `LkgpError::Timeout` reply.
+    pub deadline: Option<Duration>,
+    /// Bound on how long `submit` blocks waiting for queue space before
+    /// shedding the request with an error (None = block forever, the
+    /// historical backpressure; `Duration::ZERO` = never wait, i.e.
+    /// `try_submit` semantics for every submission).
+    pub submit_wait: Option<Duration>,
+    /// Consecutive writer-path engine failures (recovered panics or typed
+    /// errors with no success in between) that trip a shard's circuit
+    /// breaker into quarantine: submissions fail fast with a typed
+    /// `LkgpError::Quarantined` until the cool-down elapses, then traffic
+    /// probes the shard again (lazily admitted shards re-materialize from
+    /// the corpus). 0 disables the breaker. See docs/robustness.md.
+    pub breaker_threshold: u32,
+    /// Base quarantine cool-down; doubles on every consecutive trip
+    /// (capped at 64x).
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for PoolCfg {
@@ -944,6 +1114,13 @@ impl Default for PoolCfg {
             // A 64-row stacked solve is where one batch starts dominating
             // a shard's writer occupancy on the bench datasets.
             split_rows: 64,
+            deadline: None,
+            submit_wait: None,
+            // Three consecutive engine failures with zero successes in
+            // between is a sick shard, not caller error (malformed queries
+            // are rejected before they reach the engine and never count).
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
         }
     }
 }
@@ -1013,11 +1190,34 @@ struct PoolShared {
     evict_seen: Vec<AtomicU64>,
     /// Fingerprint of the corpus this pool was admitted from, if any.
     corpus_fingerprint: Option<String>,
+    /// Per-shard circuit-breaker state (docs/robustness.md). Its mutex
+    /// nests inside nothing: never held across an engine call or while
+    /// the queues lock is taken.
+    breakers: Vec<Mutex<Breaker>>,
     max_queue: usize,
     warm_start: bool,
     max_replicas: usize,
     prewarm: bool,
     split_rows: usize,
+    deadline: Option<Duration>,
+    submit_wait: Option<Duration>,
+    breaker_threshold: u32,
+    breaker_cooldown: Duration,
+}
+
+/// Per-shard circuit-breaker state. Consecutive writer-path engine
+/// failures trip the shard into quarantine; `failures` is deliberately
+/// NOT reset on a trip, so a failing post-cool-down probe re-trips
+/// immediately with a doubled cool-down instead of needing another full
+/// run of failures.
+#[derive(Default)]
+struct Breaker {
+    /// Consecutive engine failures since the last success.
+    failures: u32,
+    /// Consecutive trips (scales the cool-down exponentially).
+    trips: u32,
+    /// While set and in the future, submissions fail fast.
+    open_until: Option<Instant>,
 }
 
 /// Multi-task sharded prediction service: one engine shard per task id, a
@@ -1113,11 +1313,16 @@ impl ServicePool {
             evicted: AtomicU64::new(0),
             evict_seen: (0..n).map(|_| AtomicU64::new(0)).collect(),
             corpus_fingerprint,
+            breakers: (0..n).map(|_| Mutex::new(Breaker::default())).collect(),
             max_queue: cfg.max_queue.max(1),
             warm_start: cfg.warm_start,
             max_replicas: cfg.max_replicas,
             prewarm: cfg.prewarm,
             split_rows: cfg.split_rows,
+            deadline: cfg.deadline,
+            submit_wait: cfg.submit_wait,
+            breaker_threshold: cfg.breaker_threshold,
+            breaker_cooldown: cfg.breaker_cooldown,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -1195,7 +1400,7 @@ impl ServicePool {
                 .take()
                 .is_some();
             if had_engine {
-                shared.warm[si].lock().unwrap().clear();
+                lock_clean(&shared.warm[si]).clear();
                 shared.evicted.fetch_add(1, Ordering::Relaxed);
                 freed += 1;
             }
@@ -1210,9 +1415,19 @@ impl ServicePool {
     }
 
     /// Enqueue a request for a task shard; blocks while the shard's queue
-    /// is at `max_queue` (backpressure).
+    /// is at `max_queue` (backpressure), bounded by `PoolCfg::submit_wait`
+    /// when one is configured (the request is shed with an error once the
+    /// wait expires).
     pub fn submit(&self, shard: usize, req: Request) -> crate::Result<()> {
         submit_to(&self.shared, shard, req)
+    }
+
+    /// Non-blocking submit: enqueue if the shard's queue has space, shed
+    /// immediately with an error otherwise (`ServiceStats::shed`). Load
+    /// shedding for callers that prefer a fast typed failure over waiting
+    /// on backpressure.
+    pub fn try_submit(&self, shard: usize, req: Request) -> crate::Result<()> {
+        submit_with(&self.shared, shard, req, Some(Duration::ZERO))
     }
 
     /// A cloneable synchronous handle bound to one task shard.
@@ -1263,9 +1478,16 @@ impl ShardHandle {
         self.shard
     }
 
-    /// Enqueue a raw request (blocking on backpressure).
+    /// Enqueue a raw request (blocking on backpressure, bounded by
+    /// `PoolCfg::submit_wait` when configured).
     pub fn submit(&self, req: Request) -> crate::Result<()> {
         submit_to(&self.shared, self.shard, req)
+    }
+
+    /// Non-blocking submit: shed immediately with an error instead of
+    /// waiting when the shard queue is full.
+    pub fn try_submit(&self, req: Request) -> crate::Result<()> {
+        submit_with(&self.shared, self.shard, req, Some(Duration::ZERO))
     }
 
     /// This shard's statistics.
@@ -1359,6 +1581,15 @@ impl PredictClient for ShardHandle {
 }
 
 fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<()> {
+    submit_with(shared, shard, req, shared.submit_wait)
+}
+
+fn submit_with(
+    shared: &PoolShared,
+    shard: usize,
+    req: Request,
+    max_wait: Option<Duration>,
+) -> crate::Result<()> {
     if shard >= shared.shards.len() {
         return Err(crate::LkgpError::Coordinator(format!(
             "no shard {shard} (pool has {})",
@@ -1372,14 +1603,45 @@ fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<(
             "Shutdown is not routable through the pool; drop the pool instead".into(),
         ));
     }
+    // Quarantine fail-fast: a tripped shard rejects new work immediately
+    // with a typed error until its cool-down elapses; the first
+    // submission after the cool-down flows through as a probe (half-open
+    // breaker — see `breaker_feed`).
+    if shared.breaker_threshold > 0 {
+        let mut b = lock_clean(&shared.breakers[shard]);
+        if let Some(until) = b.open_until {
+            let now = Instant::now();
+            if now < until {
+                shared.stats[shard]
+                    .quarantine_rejects
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(crate::LkgpError::Quarantined {
+                    shard,
+                    failures: b.failures,
+                    cooldown_ms: until.duration_since(now).as_millis() as u64,
+                });
+            }
+            b.open_until = None;
+        }
+    }
+    // Pool-wide default deadline; requests that arrive already wrapped
+    // keep their own (the worker takes the tightest of nested envelopes).
+    let req = match shared.deadline {
+        Some(d) if !matches!(req, Request::Deadline { .. }) => Request::Deadline {
+            deadline: Instant::now() + d,
+            inner: Box::new(req),
+        },
+        _ => req,
+    };
     // Writes advance the shard's generation fence at enqueue time — the
     // earliest point a replica can learn that its generation is about to
     // be superseded.
-    if let Request::Refit { snapshot, .. } = &req {
-        shared.fences[shard].fetch_max(snapshot.generation, Ordering::Relaxed);
+    if let Some(g) = refit_generation(&req) {
+        shared.fences[shard].fetch_max(g, Ordering::Relaxed);
     }
     let depth = {
         let mut q = shared.queues.lock().unwrap();
+        let shed_at = max_wait.map(|w| Instant::now() + w);
         loop {
             if q.shutdown {
                 return Err(crate::LkgpError::Coordinator("pool shutting down".into()));
@@ -1387,7 +1649,25 @@ fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<(
             if q.pending[shard].len() < shared.max_queue {
                 break;
             }
-            q = shared.space_cv.wait(q).unwrap();
+            match shed_at {
+                // historical backpressure: block until space frees up
+                None => q = shared.space_cv.wait(q).unwrap(),
+                Some(t) => {
+                    let now = Instant::now();
+                    if now >= t {
+                        shared.stats[shard].shed.fetch_add(1, Ordering::Relaxed);
+                        return Err(crate::LkgpError::Coordinator(format!(
+                            "shard {shard} queue full ({} pending); request shed",
+                            q.pending[shard].len()
+                        )));
+                    }
+                    let (guard, _) = shared
+                        .space_cv
+                        .wait_timeout(q, t.duration_since(now))
+                        .unwrap();
+                    q = guard;
+                }
+            }
         }
         q.pending[shard].push_back(req);
         q.pending[shard].len() as u64
@@ -1448,6 +1728,8 @@ fn try_steal_reads(
         // queued request (this whole scan runs under the queues lock).
         let mut checked: Vec<(u64, bool)> = Vec::new();
         for req in q.pending[si].iter() {
+            // Deadline-wrapped reads fall through to the writer (which
+            // enforces expiry at pick-up); replicas only steal bare reads.
             let g = match req {
                 Request::Query { snapshot, .. } | Request::PredictFinal { snapshot, .. } => {
                     snapshot.generation
@@ -1460,9 +1742,7 @@ fn try_steal_reads(
             let fitted = match checked.iter().find(|(cg, _)| *cg == g) {
                 Some(&(_, fitted)) => fitted,
                 None => {
-                    let fitted = shared.warm[si]
-                        .lock()
-                        .unwrap()
+                    let fitted = lock_clean(&shared.warm[si])
                         .peek(g)
                         .map_or(false, |w| !w.alpha.is_empty());
                     checked.push((g, fitted));
@@ -1567,7 +1847,7 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
             .find_map(|qr| session::validate_query(&p.snapshot.data, qr).err())
         {
             stats.requests.fetch_add(1, Ordering::Relaxed);
-            send_error(p.reply, &e.to_string());
+            send_error(p.reply, e);
             continue;
         }
         valid.push(p);
@@ -1585,7 +1865,7 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
             pending = keep;
             take
         };
-        let Some(lineage) = shared.warm[si].lock().unwrap().peek(g) else {
+        let Some(lineage) = lock_clean(&shared.warm[si]).peek(g) else {
             // Evicted between claim and serve (tiny window): not stale,
             // just unlucky — hand the group back to the writer.
             requeue_reads(shared, si, group);
@@ -1654,11 +1934,7 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
             .batched_queries
             .fetch_add(replies.len() as u64, Ordering::Relaxed);
         stats.replica_hits.fetch_add(1, Ordering::Relaxed);
-        stats
-            .latency
-            .lock()
-            .unwrap()
-            .record(t0.elapsed().as_micros() as u64);
+        lock_clean(&stats.latency).record(t0.elapsed().as_micros() as u64);
         let solves = post.solve_calls() as u64;
         stats.replica_solves.fetch_add(solves, Ordering::Relaxed);
         stats.engine_solves.fetch_add(solves, Ordering::Relaxed);
@@ -1668,6 +1944,12 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
         stats
             .cg_mvm_rows
             .fetch_add(post.cg_mvm_rows() as u64, Ordering::Relaxed);
+        stats
+            .escalations
+            .fetch_add(post.escalations() as u64, Ordering::Relaxed);
+        stats
+            .dense_fallbacks
+            .fetch_add(post.dense_fallbacks() as u64, Ordering::Relaxed);
         if let Some(f) = post.precond() {
             stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
         }
@@ -1685,11 +1967,10 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                 // fence is re-checked before every solo delivery — the
                 // stale-answer invariant holds on this path too, and
                 // requests superseded mid-loop retire back to the writer.
-                let msg = e.to_string();
                 if replies.len() == 1 {
                     let (reply, _) = replies.into_iter().next().expect("one reply");
                     stats.requests.fetch_add(1, Ordering::Relaxed);
-                    send_error(reply, &msg);
+                    send_error(reply, e);
                 } else {
                     let mut off = 0;
                     let mut retired: Vec<PendingQuery> = Vec::new();
@@ -1716,7 +1997,7 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                         stats.requests.fetch_add(1, Ordering::Relaxed);
                         match res {
                             Ok(answers) => scatter_answers(vec![(reply, len)], answers),
-                            Err(e) => send_error(reply, &e.to_string()),
+                            Err(e) => send_error(reply, e),
                         }
                     }
                     if !retired.is_empty() {
@@ -1725,6 +2006,50 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                     }
                 }
             }
+        }
+    }
+}
+
+/// Feed one worker outcome into a shard's circuit breaker. A success with
+/// no failure closes the breaker completely; a failure increments the
+/// consecutive count and trips the shard into quarantine at the
+/// threshold, with a cool-down that doubles on every consecutive trip
+/// (capped at 64x the base). On a trip from the writer path of a lazily
+/// admitted pool (`can_evict`), the engine and warm cache are torn down
+/// so the post-cool-down probe transparently re-materializes the shard
+/// from the corpus (`ServicePool::from_corpus`).
+fn breaker_feed(shared: &PoolShared, si: usize, failed: bool, succeeded: bool, can_evict: bool) {
+    if shared.breaker_threshold == 0 || (!failed && !succeeded) {
+        return;
+    }
+    let tripped = {
+        let mut b = lock_clean(&shared.breakers[si]);
+        if !failed {
+            b.failures = 0;
+            b.trips = 0;
+            b.open_until = None;
+            false
+        } else {
+            b.failures = b.failures.saturating_add(1);
+            if b.failures >= shared.breaker_threshold {
+                b.trips = b.trips.saturating_add(1);
+                let scale = 1u32 << (b.trips - 1).min(6);
+                b.open_until = Some(Instant::now() + shared.breaker_cooldown * scale);
+                true
+            } else {
+                false
+            }
+        }
+    };
+    if tripped {
+        shared.stats[si].quarantine_trips.fetch_add(1, Ordering::Relaxed);
+        eprintln!("lkgp: shard {si} quarantined after consecutive engine failures");
+        if can_evict && shared.factory.is_some() {
+            // The caller holds the shard's busy flag, so the teardown
+            // cannot race an engine call; the next successful claim
+            // rebuilds through the factory.
+            lock_clean(&shared.shards[si]).take();
+            lock_clean(&shared.warm[si]).clear();
         }
     }
 }
@@ -1792,11 +2117,25 @@ fn pool_worker(shared: Arc<PoolShared>) {
                         &shared.stats[si],
                         shared.warm_start,
                         shared.prewarm,
-                    );
+                        si,
+                    )
                 }));
-                if run.is_err() {
-                    eprintln!("lkgp: pool worker recovered from a panic on shard {si}");
-                }
+                let (failed, succeeded) = match &run {
+                    Err(_) => {
+                        shared.stats[si]
+                            .panics_recovered
+                            .fetch_add(1, Ordering::Relaxed);
+                        eprintln!("lkgp: pool worker recovered from a panic on shard {si}");
+                        (true, false)
+                    }
+                    Ok(report) => (
+                        report.engine_failures > 0 && report.engine_successes == 0,
+                        report.engine_successes > 0,
+                    ),
+                };
+                // The busy flag is still held here, so a breaker trip can
+                // tear the engine down without racing another worker.
+                breaker_feed(&shared, si, failed, succeeded, true);
                 let more = {
                     let mut q = shared.queues.lock().unwrap();
                     q.busy[si] = false;
@@ -1811,9 +2150,15 @@ fn pool_worker(shared: Arc<PoolShared>) {
                     replica_serve(&shared, shard, generation, reads);
                 }));
                 if run.is_err() {
+                    shared.stats[shard]
+                        .panics_recovered
+                        .fetch_add(1, Ordering::Relaxed);
                     eprintln!(
                         "lkgp: pool worker recovered from a panic on shard {shard} (replica)"
                     );
+                    // A replica panic counts toward quarantine, but cannot
+                    // tear the engine down (the writer may hold the shard).
+                    breaker_feed(&shared, shard, true, false, false);
                 }
                 let more = {
                     let mut q = shared.queues.lock().unwrap();

@@ -32,6 +32,38 @@ pub enum LkgpError {
 
     /// JSON parse failure.
     Json(crate::json::JsonError),
+
+    /// Iterative solver failed even after the escalation ladder was
+    /// exhausted (docs/robustness.md). Carries the terminal health and
+    /// how many rungs were attempted so callers can log root cause.
+    Solver {
+        /// Human-readable terminal solve health (e.g. "max_iters",
+        /// "non_finite", "breakdown").
+        health: String,
+        /// Number of escalation rungs attempted before giving up.
+        rungs: usize,
+        /// Worst relative residual observed on the final attempt.
+        rel_residual: f64,
+    },
+
+    /// Request deadline expired before (or while) the work was served.
+    Timeout {
+        /// Shard the request was bound for.
+        shard: usize,
+        /// How far past the deadline the request was when dropped, in
+        /// microseconds (0 if shed at submit time).
+        late_micros: u64,
+    },
+
+    /// Shard is quarantined by the circuit breaker; fail-fast reply.
+    Quarantined {
+        /// The quarantined shard.
+        shard: usize,
+        /// Consecutive failures that tripped the breaker.
+        failures: u32,
+        /// Remaining cool-down at reply time, in milliseconds.
+        cooldown_ms: u64,
+    },
 }
 
 impl std::fmt::Display for LkgpError {
@@ -52,6 +84,28 @@ impl std::fmt::Display for LkgpError {
             LkgpError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             LkgpError::Io(e) => write!(f, "io error: {e}"),
             LkgpError::Json(e) => write!(f, "{e}"),
+            LkgpError::Solver {
+                health,
+                rungs,
+                rel_residual,
+            } => write!(
+                f,
+                "solver failed ({health}) after {rungs} escalation rung(s); \
+                 worst rel residual {rel_residual:.3e}"
+            ),
+            LkgpError::Timeout { shard, late_micros } => write!(
+                f,
+                "request deadline expired on shard {shard} ({late_micros}us late)"
+            ),
+            LkgpError::Quarantined {
+                shard,
+                failures,
+                cooldown_ms,
+            } => write!(
+                f,
+                "shard {shard} quarantined after {failures} consecutive failure(s); \
+                 retry after ~{cooldown_ms}ms"
+            ),
         }
     }
 }

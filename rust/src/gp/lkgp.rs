@@ -28,10 +28,10 @@ use std::sync::Arc;
 use crate::error::Result;
 use crate::gp::kernels;
 use crate::gp::params::{self, Theta};
-use crate::linalg::{self, CgStats, Matrix};
+use crate::linalg::{self, CgStats, LinOp, Matrix};
 use crate::rng::Pcg64;
 
-use super::operator::{MaskedKronOp, PrecondCfg, PrecondFactors};
+use super::operator::{dense_masked_kron, MaskedKronOp, PrecondCfg, PrecondFactors};
 
 /// A learning-curve training set in *model* space (already transformed).
 #[derive(Clone, Debug)]
@@ -177,6 +177,198 @@ pub(crate) fn solve_cfg(
     }
 }
 
+/// Maximum joint dimension (n·m) the dense-Cholesky fallback rung will
+/// materialize. 1024 → an 8 MiB dense operator and an O((nm)³) ≈ 1e9-flop
+/// factorization — acceptable as a last resort, never as a fast path.
+const DENSE_FALLBACK_MAX: usize = 1024;
+
+/// Escalate a preconditioner policy one step for the retry ladder:
+/// switched on if it was off, strategy kept but rank pushed up otherwise
+/// (`PrecondFactors::build` clamps to the factored dimension).
+fn escalate_precond(cfg: PrecondCfg) -> PrecondCfg {
+    match cfg {
+        PrecondCfg::Off => PrecondCfg::Auto,
+        // Auto caps at rank 32 latent / 64 observed-Gram; jump past both.
+        PrecondCfg::Auto => PrecondCfg::Rank(128),
+        PrecondCfg::Rank(r) => PrecondCfg::Rank(r.saturating_mul(2).max(r + 1)),
+    }
+}
+
+/// Run one batched solve through the escalation ladder
+/// (docs/robustness.md): rung 0 is exactly [`solve_cfg`] — bit-identical
+/// to the pre-ladder behavior whenever the solve reports healthy — and
+/// each further rung only runs after the previous one failed:
+///
+/// 1. doubled iteration budget, warm-started from the stalled iterate;
+/// 2. a stronger (or switched-on) preconditioner, rebuilt one rank step up;
+/// 3. full-f64 retry when the f32 refined path was the failure;
+/// 4. dense Cholesky on the materialized operator for small systems.
+///
+/// Exhaustion surfaces [`crate::LkgpError::Solver`] instead of handing the
+/// caller unconverged numbers. The returned [`CgStats`] carry the rung
+/// count in `escalations` so the serving layer can count ladder traffic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn solve_healthy(
+    op: &MaskedKronOp,
+    cfg: &SolverCfg,
+    rhs: &[f64],
+    x0: Option<&[f64]>,
+    factors: Option<&PrecondFactors>,
+    k1: &Matrix,
+    k2: &Matrix,
+    mask: &Matrix,
+    packed: &[f64],
+    sigma2: f64,
+) -> Result<(Vec<f64>, CgStats)> {
+    let (x, stats) = solve_cfg(op, cfg, rhs, x0, factors);
+    if stats.health().is_healthy() {
+        return Ok((x, stats));
+    }
+
+    // Severity-then-residual ordering for keeping the best failed attempt
+    // (its iterate seeds the next rung's warm start; its health names the
+    // terminal error if every rung fails).
+    fn better(a: &CgStats, b: &CgStats) -> bool {
+        let (ha, hb) = (a.health(), b.health());
+        ha < hb || (ha == hb && a.worst_rel_residual() < b.worst_rel_residual())
+    }
+    // Warm each retry from the best finite iterate so far; a poisoned
+    // buffer would re-poison the next attempt.
+    fn warm_of(best: &[f64], fallback: Option<&[f64]>) -> Option<Vec<f64>> {
+        if best.iter().all(|v| v.is_finite()) && best.iter().any(|&v| v != 0.0) {
+            Some(best.to_vec())
+        } else {
+            fallback
+                .filter(|g| g.iter().all(|v| v.is_finite()))
+                .map(|g| g.to_vec())
+        }
+    }
+
+    let mut rungs = 0usize;
+    let mut best_x = x;
+    let mut best = stats;
+    let bigger_budget = cfg.cg_max_iters.saturating_mul(2).max(cfg.cg_max_iters + 16);
+
+    // Rung 1: doubled iteration budget (the plain ill-conditioned stall).
+    {
+        rungs += 1;
+        let c = SolverCfg { cg_max_iters: bigger_budget, ..cfg.clone() };
+        let guess = warm_of(&best_x, x0);
+        let (x, mut st) = solve_cfg(op, &c, rhs, guess.as_deref(), factors);
+        if st.health().is_healthy() {
+            st.escalations = rungs;
+            return Ok((x, st));
+        }
+        if better(&st, &best) {
+            best_x = x;
+            best = st;
+        }
+    }
+
+    // Rung 2: stronger / switched preconditioner (still doubled budget).
+    {
+        rungs += 1;
+        let esc = escalate_precond(cfg.precond);
+        if let Some(f) = PrecondFactors::build(esc, k1, k2, mask, packed) {
+            let c = SolverCfg {
+                cg_max_iters: bigger_budget,
+                precond: esc,
+                ..cfg.clone()
+            };
+            let guess = warm_of(&best_x, x0);
+            let (x, mut st) = solve_cfg(op, &c, rhs, guess.as_deref(), Some(&f));
+            if st.health().is_healthy() {
+                st.escalations = rungs;
+                return Ok((x, st));
+            }
+            if better(&st, &best) {
+                best_x = x;
+                best = st;
+            }
+        }
+    }
+
+    // Rung 3: the refined f32 path failed — promote to full f64.
+    if cfg.precision == Precision::F32 {
+        rungs += 1;
+        let c = SolverCfg {
+            cg_max_iters: bigger_budget,
+            precision: Precision::F64,
+            ..cfg.clone()
+        };
+        let guess = warm_of(&best_x, x0);
+        let (x, mut st) = solve_cfg(op, &c, rhs, guess.as_deref(), factors);
+        if st.health().is_healthy() {
+            st.escalations = rungs;
+            return Ok((x, st));
+        }
+        if better(&st, &best) {
+            best_x = x;
+            best = st;
+        }
+    }
+
+    // Rung 4: dense Cholesky for small systems — O((nm)³) but exact, and
+    // its answer is verified against the true operator residual below.
+    let nm = k1.rows() * k2.rows();
+    if nm > 0 && nm <= DENSE_FALLBACK_MAX && rhs.len() % nm == 0 {
+        rungs += 1;
+        let batch = rhs.len() / nm;
+        let dense = dense_masked_kron(k1, k2, mask, sigma2);
+        if let Ok(l) = linalg::cholesky(&dense) {
+            let mut x = Vec::with_capacity(rhs.len());
+            for b in 0..batch {
+                x.extend_from_slice(&linalg::chol_solve(&l, &rhs[b * nm..(b + 1) * nm]));
+            }
+            // Honest report: measure the true relative residual of the
+            // dense answer against the iterative operator.
+            let mut ax = vec![0.0; rhs.len()];
+            op.apply_batch(&x, &mut ax, batch);
+            let rel: Vec<f64> = (0..batch)
+                .map(|b| {
+                    let (rb, xb) = (&rhs[b * nm..(b + 1) * nm], &ax[b * nm..(b + 1) * nm]);
+                    let bn = linalg::matrix::dot(rb, rb).sqrt().max(1e-300);
+                    let rn = rb
+                        .iter()
+                        .zip(xb)
+                        .map(|(bi, ai)| (bi - ai) * (bi - ai))
+                        .sum::<f64>()
+                        .sqrt();
+                    rn / bn
+                })
+                .collect();
+            let non_finite = rel.iter().any(|v| !v.is_finite())
+                || x.iter().any(|v| !v.is_finite());
+            let converged =
+                !non_finite && rel.iter().all(|&r| r <= cfg.cg_tol * 1.0001);
+            let st = CgStats {
+                iters: 0,
+                iters_per_rhs: vec![0; batch],
+                rel_residual: rel,
+                converged,
+                mvms: 1,
+                mvm_rows: batch,
+                breakdowns: 0,
+                non_finite,
+                escalations: rungs,
+                fallback_dense: true,
+            };
+            if st.health().is_healthy() {
+                return Ok((x, st));
+            }
+            if better(&st, &best) {
+                best = st;
+            }
+        }
+    }
+
+    Err(crate::error::LkgpError::Solver {
+        health: best.health().tag().to_string(),
+        rungs,
+        rel_residual: best.worst_rel_residual(),
+    })
+}
+
 /// Resolve the preconditioner for one solve: reuse compatible cached
 /// factors (hyper-parameters drift slowly across optimizer steps and
 /// scheduler generations), rebuild otherwise.
@@ -306,7 +498,18 @@ pub(crate) fn mll_impl(
     rhs.extend_from_slice(data.y.data());
     rhs.extend_from_slice(&probes[..p * nm]);
     let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
-    let (solves, cg) = solve_cfg(&op, cfg, &rhs, x0, factors.as_deref());
+    let (solves, cg) = solve_healthy(
+        &op,
+        cfg,
+        &rhs,
+        x0,
+        factors.as_deref(),
+        &k1,
+        &k2,
+        &data.mask,
+        packed,
+        theta.sigma2,
+    )?;
     *precond_cache = factors;
     let alpha = &solves[..nm];
     let us = &solves[nm..];
@@ -565,7 +768,18 @@ pub(crate) fn predict_final_impl(
         Some(x)
     });
     let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
-    let (solves, cg) = solve_cfg(&op, cfg, &rhs, x0.as_deref(), factors.as_deref());
+    let (solves, cg) = solve_healthy(
+        &op,
+        cfg,
+        &rhs,
+        x0.as_deref(),
+        factors.as_deref(),
+        &k1,
+        &k2,
+        &data.mask,
+        packed,
+        theta.sigma2,
+    )?;
     *precond_cache = factors;
 
     let prior_var = theta.outputscale; // k1(xq,xq)=1, k2(t*,t*)=outputscale
@@ -706,7 +920,18 @@ pub(crate) fn posterior_samples_impl(
         priors.push(f);
     }
     let factors = resolve_precond(cfg, packed, &k1, &k2, &data.mask, precond_cache.as_ref());
-    let (ws, cg) = solve_cfg(&op, cfg, &rhs, None, factors.as_deref());
+    let (ws, cg) = solve_healthy(
+        &op,
+        cfg,
+        &rhs,
+        None,
+        factors.as_deref(),
+        &k1,
+        &k2,
+        &data.mask,
+        packed,
+        theta.sigma2,
+    )?;
     *precond_cache = factors;
 
     // k1([X; Xq], X) is the left block of k1j (jitter only touched diag).

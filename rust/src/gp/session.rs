@@ -532,6 +532,8 @@ pub struct Posterior {
     cg_iters: usize,
     cg_mvm_rows: usize,
     solve_calls: usize,
+    escalations: usize,
+    dense_fallbacks: usize,
     last_cg: Option<CgStats>,
 }
 
@@ -551,6 +553,8 @@ impl Posterior {
             cg_iters: 0,
             cg_mvm_rows: 0,
             solve_calls: 0,
+            escalations: 0,
+            dense_fallbacks: 0,
             last_cg: None,
         }
     }
@@ -628,6 +632,8 @@ impl Posterior {
             cg_iters: 0,
             cg_mvm_rows: 0,
             solve_calls: 0,
+            escalations: 0,
+            dense_fallbacks: 0,
             last_cg: None,
         }
     }
@@ -809,8 +815,18 @@ impl Posterior {
                 None
             }
         });
-        let (sol, cg) =
-            lkgp::solve_cfg(&op, &self.cfg, self.data.y.data(), g0.as_deref(), factors.as_deref());
+        let (sol, cg) = lkgp::solve_healthy(
+            &op,
+            &self.cfg,
+            self.data.y.data(),
+            g0.as_deref(),
+            factors.as_deref(),
+            &k1,
+            &k2,
+            &self.data.mask,
+            &self.theta,
+            theta.sigma2,
+        )?;
         self.precond = factors;
         self.alpha = Some(sol);
         self.record_cg(cg);
@@ -839,6 +855,10 @@ impl Posterior {
         self.cg_iters += cg.iters_per_rhs.iter().sum::<usize>();
         self.cg_mvm_rows += cg.mvm_rows;
         self.solve_calls += 1;
+        self.escalations += cg.escalations;
+        if cg.fallback_dense {
+            self.dense_fallbacks += 1;
+        }
         self.last_cg = Some(cg);
     }
 
@@ -898,6 +918,17 @@ impl Posterior {
     /// queries into one).
     pub fn solve_calls(&self) -> usize {
         self.solve_calls
+    }
+
+    /// Escalation-ladder rungs climbed across the session's solves
+    /// (0 on the healthy path; docs/robustness.md).
+    pub fn escalations(&self) -> usize {
+        self.escalations
+    }
+
+    /// Solves answered by the dense-Cholesky fallback rung.
+    pub fn dense_fallbacks(&self) -> usize {
+        self.dense_fallbacks
     }
 
     /// The session's packed hyper-parameters.

@@ -23,6 +23,45 @@ pub trait LinOp: Sync {
     fn apply_batch(&self, x: &[f64], out: &mut [f64], batch: usize);
 }
 
+/// Typed health of a solve, threaded from the CG core up through
+/// `gp::lkgp`/`gp::session` so callers never mistake a broken solve for a
+/// converged one (docs/robustness.md).
+///
+/// Ordering matters for severity comparisons: `Converged` is healthy,
+/// everything after it escalates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SolveHealth {
+    /// Every RHS met the tolerance and all residuals are finite.
+    Converged,
+    /// Iteration budget exhausted with finite residuals (the classic
+    /// ill-conditioned stall; a bigger budget or a preconditioner helps).
+    MaxIters,
+    /// The Krylov process broke down: a search direction hit a
+    /// non-positive or non-finite curvature (`pᵀAp ≤ 0`). The RHS was
+    /// frozen at its last iterate — historically this masqueraded as
+    /// convergence because the frozen residual norm was zeroed.
+    Breakdown,
+    /// A non-finite value (NaN/Inf) reached a residual or iterate.
+    NonFinite,
+}
+
+impl SolveHealth {
+    /// Whether the solve can be trusted as-is.
+    pub fn is_healthy(self) -> bool {
+        self == SolveHealth::Converged
+    }
+
+    /// Stable lower-case tag for logs, counters, and `LkgpError::Solver`.
+    pub fn tag(self) -> &'static str {
+        match self {
+            SolveHealth::Converged => "converged",
+            SolveHealth::MaxIters => "max_iters",
+            SolveHealth::Breakdown => "breakdown",
+            SolveHealth::NonFinite => "non_finite",
+        }
+    }
+}
+
 /// Convergence report for a CG solve.
 #[derive(Clone, Debug)]
 pub struct CgStats {
@@ -43,6 +82,45 @@ pub struct CgStats {
     /// MVM work: `sum(iters_per_rhs)` plus `batch` rows for the warm
     /// residual. Without compaction it would be `batch * mvms`.
     pub mvm_rows: usize,
+    /// RHS count frozen by a Krylov breakdown (`pᵀAp ≤ 0` or non-finite
+    /// curvature). A frozen RHS carries its last iterate, NOT a converged
+    /// solution; `converged` is forced false whenever this is non-zero.
+    pub breakdowns: usize,
+    /// Whether any residual or iterate went non-finite (NaN/Inf).
+    pub non_finite: bool,
+    /// Escalation-ladder rungs climbed beyond the configured solve
+    /// (`gp::lkgp::solve_healthy`; 0 on the healthy fast path — the core
+    /// solvers always report 0 here).
+    pub escalations: usize,
+    /// Whether the answer came from the dense-Cholesky fallback rung.
+    pub fallback_dense: bool,
+}
+
+impl CgStats {
+    /// Collapse the report into a typed [`SolveHealth`].
+    ///
+    /// Severity order: non-finite values dominate (the numbers cannot be
+    /// trusted at all), then breakdowns (frozen RHS carry stale iterates),
+    /// then a plain iteration-budget stall.
+    pub fn health(&self) -> SolveHealth {
+        if self.non_finite || self.rel_residual.iter().any(|r| !r.is_finite()) {
+            SolveHealth::NonFinite
+        } else if self.breakdowns > 0 {
+            SolveHealth::Breakdown
+        } else if !self.converged {
+            SolveHealth::MaxIters
+        } else {
+            SolveHealth::Converged
+        }
+    }
+
+    /// Worst (largest, or non-finite) relative residual across the batch.
+    pub fn worst_rel_residual(&self) -> f64 {
+        self.rel_residual
+            .iter()
+            .copied()
+            .fold(0.0, |acc, r| if r.is_finite() { acc.max(r) } else { f64::INFINITY })
+    }
 }
 
 /// Solve A X = B for a batch of right-hand sides with plain CG from a

@@ -16,7 +16,7 @@ pub mod matrix;
 pub mod pcg;
 pub mod pivoted_cholesky;
 
-pub use cg::{cg_batch, cg_batch_warm, CgStats, LinOp};
+pub use cg::{cg_batch, cg_batch_warm, CgStats, LinOp, SolveHealth};
 pub use cholesky::{chol_logdet, chol_sample, chol_solve, cholesky, solve_lower, solve_lower_t};
 pub use eigh::{jacobi_eigh, tridiag_eigh};
 pub use lanczos::{lanczos, slq_logdet};

@@ -122,6 +122,10 @@ pub fn pcg_batch_warm(
 
     let mut iters = 0;
     let mut iters_per_rhs = vec![0usize; batch];
+    // RHS frozen by a Krylov breakdown (pᵀAp ≤ 0 or non-finite): they keep
+    // their last iterate and stop paying MVMs, but they are NOT converged —
+    // reported via CgStats::breakdowns so callers can escalate.
+    let mut broken = vec![false; batch];
     for _ in 0..max_iters {
         let active: Vec<usize> = (0..batch)
             .filter(|&bi| rs[bi].sqrt() > tol * bnorm[bi])
@@ -146,9 +150,13 @@ pub fn pcg_batch_warm(
             let (pb, apb) = (&pc[ai * n..(ai + 1) * n], &apc[ai * n..(ai + 1) * n]);
             let denom = crate::linalg::matrix::dot(pb, apb);
             if denom <= 0.0 || !denom.is_finite() {
-                // Operator not PD along p (should not happen); freeze.
+                // Operator not PD along p (should not happen); freeze the
+                // iterate and flag the breakdown. rs is zeroed only to
+                // compact this RHS out of future applies — the true
+                // residual (still in r) is restored for the final report.
                 rs[bi] = 0.0;
                 frozen[ai] = true;
+                broken[bi] = true;
                 continue;
             }
             let alpha = rz[bi] / denom;
@@ -193,8 +201,22 @@ pub fn pcg_batch_warm(
         }
     }
 
-    let rel: Vec<f64> = (0..batch).map(|bi| rs[bi].sqrt() / bnorm[bi]).collect();
-    let converged = rel.iter().all(|&r| r <= tol * 1.0001);
+    // Broken-down RHS report their TRUE residual (rs was zeroed only for
+    // compaction; r still holds b − A x at the freeze point).
+    let rel: Vec<f64> = (0..batch)
+        .map(|bi| {
+            if broken[bi] {
+                norm(&r[bi * n..(bi + 1) * n]) / bnorm[bi]
+            } else {
+                rs[bi].sqrt() / bnorm[bi]
+            }
+        })
+        .collect();
+    let breakdowns = broken.iter().filter(|&&f| f).count();
+    let non_finite =
+        rel.iter().any(|v| !v.is_finite()) || x.iter().any(|v| !v.is_finite());
+    let converged =
+        breakdowns == 0 && !non_finite && rel.iter().all(|&r| r <= tol * 1.0001);
     (
         x,
         CgStats {
@@ -204,6 +226,10 @@ pub fn pcg_batch_warm(
             converged,
             mvms: iters + warm_mvms,
             mvm_rows,
+            breakdowns,
+            non_finite,
+            escalations: 0,
+            fallback_dense: false,
         },
     )
 }
@@ -235,6 +261,12 @@ pub struct RefineStats {
     pub mvms: usize,
     /// Per-RHS operator rows applied, exact + fast.
     pub mvm_rows: usize,
+    /// Inner-solve Krylov breakdowns that the refinement could NOT absorb.
+    /// An inner breakdown followed by exact-residual convergence is healthy
+    /// (the exact residual is the truth), so this is zeroed on convergence.
+    pub breakdowns: usize,
+    /// Whether any exact residual or iterate went non-finite.
+    pub non_finite: bool,
 }
 
 impl RefineStats {
@@ -248,6 +280,10 @@ impl RefineStats {
             converged: self.converged,
             mvms: self.mvms,
             mvm_rows: self.mvm_rows,
+            breakdowns: self.breakdowns,
+            non_finite: self.non_finite,
+            escalations: 0,
+            fallback_dense: false,
         }
     }
 }
@@ -317,6 +353,7 @@ pub fn refined_solve(
     let mut outer_iters = 0usize;
     let mut inner_iters = 0usize;
     let mut iters_per_rhs = vec![0usize; batch];
+    let mut inner_breakdowns = 0usize;
     // Compaction scratch: active rows of r / the correction / A x.
     let mut rc = vec![0.0; b.len()];
     let mut axc = vec![0.0; b.len()];
@@ -338,6 +375,7 @@ pub fn refined_solve(
         inner_iters += st.iters;
         mvms += st.mvms;
         mvm_rows += st.mvm_rows;
+        inner_breakdowns += st.breakdowns;
         for (ai, &bi) in active.iter().enumerate() {
             iters_per_rhs[bi] += st.iters_per_rhs[ai];
             crate::linalg::matrix::axpy(1.0, &d[ai * n..(ai + 1) * n], &mut x[bi * n..(bi + 1) * n]);
@@ -364,7 +402,9 @@ pub fn refined_solve(
     let rel: Vec<f64> = (0..batch)
         .map(|bi| norm(&r[bi * n..(bi + 1) * n]) / bnorm[bi])
         .collect();
-    let converged = rel.iter().all(|&v| v <= tol * 1.0001);
+    let non_finite =
+        rel.iter().any(|v| !v.is_finite()) || x.iter().any(|v| !v.is_finite());
+    let converged = !non_finite && rel.iter().all(|&v| v <= tol * 1.0001);
     (
         x,
         RefineStats {
@@ -375,6 +415,10 @@ pub fn refined_solve(
             converged,
             mvms,
             mvm_rows,
+            // Absorbed breakdowns are healthy: the exact residual is the
+            // ground truth, so only report them when the solve failed.
+            breakdowns: if converged { 0 } else { inner_breakdowns },
+            non_finite,
         },
     )
 }
@@ -642,5 +686,74 @@ mod tests {
         assert_eq!(s.iters, 0);
         assert_eq!(s.mvm_rows, 0);
         assert!(x.iter().all(|&v| v == 0.0));
+        assert_eq!(s.health(), crate::linalg::SolveHealth::Converged);
+    }
+
+    #[test]
+    fn indefinite_operator_reports_breakdown_not_convergence() {
+        // A symmetric indefinite "operator": pᵀAp goes negative along e0,
+        // which historically zeroed the residual norm and reported a false
+        // convergence. Now it must surface as a Breakdown.
+        let n = 6;
+        let mut a = Matrix::from_vec(n, n, vec![0.0; n * n]);
+        for i in 0..n {
+            a[(i, i)] = 1.0;
+        }
+        a[(0, 0)] = -1.0;
+        let mut b = vec![0.0; n];
+        b[0] = 1.0;
+        let (_, s) = pcg_batch_warm(&DenseOp(&a), &b, None, None, 1e-8, 50);
+        assert!(!s.converged, "breakdown must not report convergence: {s:?}");
+        assert_eq!(s.breakdowns, 1);
+        assert_eq!(s.health(), crate::linalg::SolveHealth::Breakdown);
+        // The true residual is reported, not the compaction-zeroed one.
+        assert!(s.rel_residual[0] > 1e-8, "rel={:?}", s.rel_residual);
+    }
+
+    #[test]
+    fn breakdown_freezes_one_rhs_others_converge() {
+        // Batch of [bad-direction RHS, healthy RHS] against the same
+        // indefinite operator: the healthy RHS (supported away from the
+        // negative eigenvector) still converges; only the bad one breaks.
+        let n = 6;
+        let mut a = Matrix::from_vec(n, n, vec![0.0; n * n]);
+        for i in 0..n {
+            a[(i, i)] = 1.0 + 0.1 * i as f64;
+        }
+        a[(0, 0)] = -1.0;
+        let mut b = vec![0.0; 2 * n];
+        b[0] = 1.0; // lives on the negative eigenvector
+        b[n + 3] = 2.0; // lives on a positive one
+        let (x, s) = pcg_batch_warm(&DenseOp(&a), &b, None, None, 1e-10, 50);
+        assert_eq!(s.breakdowns, 1);
+        assert!(!s.converged);
+        assert!(s.rel_residual[1] <= 1e-10 * 1.0001, "healthy rhs converged");
+        // diag system: x = b/diag for the healthy RHS
+        assert!((x[n + 3] - 2.0 / 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_rhs_reports_non_finite() {
+        let a = random_spd(8, 30);
+        let mut b = vec![1.0; 8];
+        b[2] = f64::NAN;
+        let (_, s) = pcg_batch_warm(&DenseOp(&a), &b, None, None, 1e-8, 50);
+        assert!(!s.converged);
+        assert!(s.non_finite);
+        assert_eq!(s.health(), crate::linalg::SolveHealth::NonFinite);
+    }
+
+    #[test]
+    fn max_iters_health_is_max_iters() {
+        let n = 40;
+        let a = random_spd(n, 31);
+        let mut rng = Pcg64::new(32);
+        let b = rng.normal_vec(n);
+        let (_, s) = pcg_batch_warm(&DenseOp(&a), &b, None, None, 1e-12, 1);
+        assert!(!s.converged);
+        assert_eq!(s.breakdowns, 0);
+        assert_eq!(s.health(), crate::linalg::SolveHealth::MaxIters);
+        let (_, full) = pcg_batch_warm(&DenseOp(&a), &b, None, None, 1e-12, 2000);
+        assert_eq!(full.health(), crate::linalg::SolveHealth::Converged);
     }
 }

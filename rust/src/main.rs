@@ -10,7 +10,10 @@
 //!              directory of LCBench-style JSON dumps, docs/data.md);
 //!              --record FILE captures the live traffic as a replayable
 //!              trace; --replay FILE [--concurrent] replays a trace and
-//!              asserts zero errors + stats invariants (docs/ci.md)
+//!              asserts zero errors + stats invariants (docs/ci.md);
+//!              --deadline-ms N sheds expired work with typed Timeout
+//!              errors and --chaos SPEC runs the pool under seeded fault
+//!              injection (docs/robustness.md)
 //!   artifacts  print the artifact manifest and verify executables load
 //!   smoke      end-to-end smoke: fit + predict on a toy problem
 //!
@@ -32,7 +35,8 @@ fn main() -> lkgp::Result<()> {
                  [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off] \
                  [--replicas N] [--precond off|auto|rank=R] [--threads N] \
                  [--precision f64|f32] [--corpus sim|DIR] \
-                 [--record FILE] [--replay FILE [--concurrent]]"
+                 [--record FILE] [--replay FILE [--concurrent]] \
+                 [--deadline-ms N] [--chaos panic=P,diverge=P,slow=P,io=P,nan=P,seed=N]"
             );
             Ok(())
         }

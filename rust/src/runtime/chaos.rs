@@ -1,0 +1,446 @@
+//! Deterministic chaos harness: seeded fault injection for the serving
+//! stack (docs/robustness.md).
+//!
+//! Two wrappers sit at the stack's natural seams:
+//!
+//! * [`ChaosEngine`] wraps a [`RustEngine`] and, per engine call, may
+//!   panic (exercising the pool's catch-unwind recovery and the shard
+//!   circuit breaker), force divergence by capping the CG budget at one
+//!   iteration (exercising the escalation ladder in
+//!   `gp::lkgp::solve_healthy`), or sleep (exercising deadlines).
+//! * [`ChaosCorpus`] wraps a [`Corpus`] and may fail task
+//!   materialization with an I/O error (exercising per-task isolation
+//!   and quarantine re-materialization probes) or poison a curve value
+//!   with NaN (exercising non-finite detection: the solve must surface a
+//!   typed `LkgpError::Solver`, never a silent NaN answer).
+//!
+//! Every fault is drawn from a seeded [`Pcg64`], so a given
+//! [`FaultPlan`] replays the same fault sequence per call stream. Fault
+//! draws are per-wrapper; under a multi-worker pool the interleaving of
+//! *calls* is scheduling-dependent, but the invariants the chaos soak
+//! asserts (every request resolves to an answer or a typed error; no
+//! non-finite answer ever escapes) hold for any interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::gp::lkgp::{Dataset, SolverCfg};
+use crate::gp::operator::PrecondFactors;
+use crate::gp::session::Query;
+use crate::json::Json;
+use crate::lcbench::corpus::{Corpus, TaskMeta};
+use crate::lcbench::Task;
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+use super::{Engine, PredictOutcome, QueryOutcome, RustEngine};
+
+/// Seeded fault-injection plan shared by [`ChaosEngine`] and
+/// [`ChaosCorpus`]. All rates are probabilities in `[0, 1]` drawn
+/// independently per call; the default plan injects nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Base RNG seed (each wrapper forks it with its own salt).
+    pub seed: u64,
+    /// Probability an engine call panics before doing any work.
+    pub panic_rate: f64,
+    /// Probability an engine call runs with the CG iteration budget
+    /// forced to 1, so the solve cannot converge at ladder rung 0.
+    pub diverge_rate: f64,
+    /// Probability an engine call sleeps [`FaultPlan::slow_ms`] first.
+    pub slow_rate: f64,
+    /// Sleep duration for slow faults, in milliseconds.
+    pub slow_ms: u64,
+    /// Probability a corpus task materialization fails with an I/O error.
+    pub io_rate: f64,
+    /// Probability a materialized task has one curve value poisoned NaN.
+    pub nan_rate: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            panic_rate: 0.0,
+            diverge_rate: 0.0,
+            slow_rate: 0.0,
+            slow_ms: 20,
+            io_rate: 0.0,
+            nan_rate: 0.0,
+        }
+    }
+}
+
+fn parse_rate(v: &str) -> Option<f64> {
+    let r: f64 = v.trim().parse().ok()?;
+    (0.0..=1.0).contains(&r).then_some(r)
+}
+
+impl FaultPlan {
+    /// Parse a `key=value` comma list, e.g.
+    /// `"panic=0.05,diverge=0.2,slow=0.1,slow_ms=15,io=0.02,nan=0.01,seed=7"`.
+    /// Unknown keys and out-of-range rates yield `None`.
+    pub fn parse(spec: &str) -> Option<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = part.split_once('=')?;
+            match k.trim() {
+                "seed" => plan.seed = v.trim().parse().ok()?,
+                "panic" => plan.panic_rate = parse_rate(v)?,
+                "diverge" => plan.diverge_rate = parse_rate(v)?,
+                "slow" => plan.slow_rate = parse_rate(v)?,
+                "slow_ms" | "slow-ms" => plan.slow_ms = v.trim().parse().ok()?,
+                "io" => plan.io_rate = parse_rate(v)?,
+                "nan" => plan.nan_rate = parse_rate(v)?,
+                _ => return None,
+            }
+        }
+        Some(plan)
+    }
+
+    /// Whether any engine-side fault can fire.
+    pub fn engine_faults(&self) -> bool {
+        self.panic_rate > 0.0 || self.diverge_rate > 0.0 || self.slow_rate > 0.0
+    }
+
+    /// Whether any corpus-side fault can fire.
+    pub fn corpus_faults(&self) -> bool {
+        self.io_rate > 0.0 || self.nan_rate > 0.0
+    }
+}
+
+/// Shared tally of injected faults, for run reports and the chaos soak's
+/// sanity checks (a soak that injected nothing proved nothing).
+#[derive(Default)]
+pub struct ChaosStats {
+    pub panics: AtomicU64,
+    pub diverges: AtomicU64,
+    pub slows: AtomicU64,
+    pub io_errors: AtomicU64,
+    pub nans: AtomicU64,
+}
+
+impl ChaosStats {
+    /// Total faults injected across all kinds.
+    pub fn total(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+            + self.diverges.load(Ordering::Relaxed)
+            + self.slows.load(Ordering::Relaxed)
+            + self.io_errors.load(Ordering::Relaxed)
+            + self.nans.load(Ordering::Relaxed)
+    }
+}
+
+/// Fault-injecting wrapper around the pure-rust engine. See the module
+/// docs for which faults exercise which recovery layer.
+pub struct ChaosEngine {
+    inner: RustEngine,
+    plan: FaultPlan,
+    rng: Pcg64,
+    stats: Arc<ChaosStats>,
+}
+
+impl ChaosEngine {
+    /// Wrap `inner`; `salt` decorrelates the fault stream per wrapper
+    /// (e.g. the shard id), keeping multi-shard runs deterministic
+    /// per shard instead of sharing one global draw sequence.
+    pub fn new(inner: RustEngine, plan: FaultPlan, salt: u64, stats: Arc<ChaosStats>) -> Self {
+        let mut rng = Pcg64::new(plan.seed ^ 0x9e37_79b9_7f4a_7c15);
+        let rng = rng.fork(salt);
+        ChaosEngine { inner, plan, rng, stats }
+    }
+
+    /// Draw this call's faults: maybe sleep, maybe panic, and return
+    /// whether the call must run with a divergent (1-iteration) CG
+    /// budget.
+    fn roll(&mut self) -> bool {
+        if self.plan.slow_rate > 0.0 && self.rng.uniform() < self.plan.slow_rate {
+            self.stats.slows.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.plan.slow_ms));
+        }
+        if self.plan.panic_rate > 0.0 && self.rng.uniform() < self.plan.panic_rate {
+            self.stats.panics.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected engine panic");
+        }
+        let diverge = self.plan.diverge_rate > 0.0 && self.rng.uniform() < self.plan.diverge_rate;
+        if diverge {
+            self.stats.diverges.fetch_add(1, Ordering::Relaxed);
+        }
+        diverge
+    }
+
+    /// Run `f` against the inner engine, with the CG budget capped at one
+    /// iteration when `diverge` is set (restored afterwards). The capped
+    /// solve cannot converge at escalation rung 0, so a correct ladder
+    /// still returns converged answers — with `escalations > 0`.
+    fn with_budget<T>(&mut self, diverge: bool, f: impl FnOnce(&mut RustEngine) -> T) -> T {
+        if !diverge {
+            return f(&mut self.inner);
+        }
+        let saved = self.inner.cfg.cg_max_iters;
+        self.inner.cfg.cg_max_iters = 1;
+        let out = f(&mut self.inner);
+        self.inner.cfg.cg_max_iters = saved;
+        out
+    }
+}
+
+impl Engine for ChaosEngine {
+    fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> Result<Vec<f64>> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| e.fit(theta0, data, seed))
+    }
+
+    fn predict_final(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+    ) -> Result<Vec<(f64, f64)>> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| e.predict_final(theta, data, xq))
+    }
+
+    fn predict_final_warm(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        warm: Option<&[f64]>,
+    ) -> Result<PredictOutcome> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| e.predict_final_warm(theta, data, xq, warm))
+    }
+
+    fn predict_final_cached(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        warm: Option<&[f64]>,
+        precond: Option<Arc<PrecondFactors>>,
+    ) -> Result<PredictOutcome> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| {
+            e.predict_final_cached(theta, data, xq, warm, precond)
+        })
+    }
+
+    fn answer_batch(
+        &mut self,
+        theta: &[f64],
+        data: &Arc<Dataset>,
+        queries: &[Query],
+        warm: Option<&[f64]>,
+        precond: Option<Arc<PrecondFactors>>,
+    ) -> Result<QueryOutcome> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| {
+            e.answer_batch(theta, data, queries, warm, precond)
+        })
+    }
+
+    fn sample_curves(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        s: usize,
+        seed: u64,
+    ) -> Result<Vec<Matrix>> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| e.sample_curves(theta, data, xq, s, seed))
+    }
+
+    fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> Result<Matrix> {
+        let diverge = self.roll();
+        self.with_budget(diverge, |e| e.predict_mean(theta, data, xq))
+    }
+
+    fn session_cfg(&self) -> Option<SolverCfg> {
+        // Replicas fork from the *healthy* config: chaos exercises the
+        // writer path; read replicas answering bit-identically alongside a
+        // faulting writer is exactly the isolation the soak asserts.
+        self.inner.session_cfg()
+    }
+
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+}
+
+/// Fault-injecting wrapper around a corpus: I/O errors on task
+/// materialization and NaN poisoning of curve data, both seeded.
+pub struct ChaosCorpus {
+    inner: Arc<dyn Corpus>,
+    plan: FaultPlan,
+    rng: Mutex<Pcg64>,
+    stats: Arc<ChaosStats>,
+}
+
+impl ChaosCorpus {
+    pub fn new(inner: Arc<dyn Corpus>, plan: FaultPlan, stats: Arc<ChaosStats>) -> Self {
+        let rng = Mutex::new(Pcg64::new(plan.seed ^ 0x85eb_ca77_c2b2_ae63));
+        ChaosCorpus { inner, plan, rng, stats }
+    }
+}
+
+impl Corpus for ChaosCorpus {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn name(&self) -> String {
+        format!("chaos({})", self.inner.name())
+    }
+
+    fn fingerprint(&self) -> String {
+        // Distinct from the inner corpus: NaN poisoning means served data
+        // may differ, and a recorded trace must not falsely pin the clean
+        // corpus.
+        format!("chaos-{}", self.inner.fingerprint())
+    }
+
+    fn trace_pin(&self) -> Vec<(String, Json)> {
+        self.inner.trace_pin()
+    }
+
+    fn task(&self, id: usize) -> crate::Result<Arc<Task>> {
+        let (io, nan) = {
+            let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+            (
+                self.plan.io_rate > 0.0 && rng.uniform() < self.plan.io_rate,
+                self.plan.nan_rate > 0.0 && rng.uniform() < self.plan.nan_rate,
+            )
+        };
+        if io {
+            self.stats.io_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(crate::LkgpError::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("chaos: injected i/o failure materializing task {id}"),
+            )));
+        }
+        let task = self.inner.task(id)?;
+        if nan {
+            self.stats.nans.fetch_add(1, Ordering::Relaxed);
+            let mut poisoned = (*task).clone();
+            // One observed value is enough: any NaN reaching a solve must
+            // surface as a typed non-finite Solver error downstream.
+            poisoned.curves[(0, 0)] = f64::NAN;
+            return Ok(Arc::new(poisoned));
+        }
+        Ok(task)
+    }
+
+    fn meta(&self, id: usize) -> crate::Result<TaskMeta> {
+        // Metadata reads stay fault-free (they never feed a solve).
+        self.inner.meta(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::session::Answer;
+
+    #[test]
+    fn fault_plan_parses_and_rejects() {
+        let p = FaultPlan::parse("panic=0.5,diverge=1,slow=0.25,slow_ms=5,io=0.1,nan=0.2,seed=9")
+            .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.panic_rate, 0.5);
+        assert_eq!(p.diverge_rate, 1.0);
+        assert_eq!(p.slow_rate, 0.25);
+        assert_eq!(p.slow_ms, 5);
+        assert_eq!(p.io_rate, 0.1);
+        assert_eq!(p.nan_rate, 0.2);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("panic=1.5").is_none(), "rate out of range");
+        assert!(FaultPlan::parse("bogus=1").is_none(), "unknown key");
+        assert!(FaultPlan::parse("panic").is_none(), "missing value");
+    }
+
+    #[test]
+    fn chaos_corpus_injects_io_and_nan_deterministically() {
+        use crate::lcbench::corpus::SimCorpus;
+        let stats = Arc::new(ChaosStats::default());
+        let plan = FaultPlan { io_rate: 1.0, ..Default::default() };
+        let corpus = ChaosCorpus::new(
+            Arc::new(SimCorpus::new(2, 4, 0)),
+            plan,
+            stats.clone(),
+        );
+        assert!(corpus.task(0).is_err());
+        assert_eq!(stats.io_errors.load(Ordering::Relaxed), 1);
+        // metadata path bypasses fault injection entirely
+        assert!(corpus.meta(0).is_ok());
+
+        let stats = Arc::new(ChaosStats::default());
+        let plan = FaultPlan { nan_rate: 1.0, ..Default::default() };
+        let corpus = ChaosCorpus::new(
+            Arc::new(SimCorpus::new(2, 4, 0)),
+            plan,
+            stats.clone(),
+        );
+        let task = corpus.task(0).unwrap();
+        assert!(task.curves[(0, 0)].is_nan());
+        assert_eq!(stats.nans.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chaos_engine_with_zero_rates_is_the_inner_engine() {
+        use crate::gp::Theta;
+        let data = crate::lcbench::toy_dataset(5, 6, 2, 3);
+        let xq = Matrix::from_vec(1, data.d(), vec![0.5; data.d()]);
+        let theta = Theta::default_packed(data.d());
+
+        let mut plain = RustEngine::default();
+        let want = plain.predict_final(&theta, &data, &xq).unwrap();
+
+        let stats = Arc::new(ChaosStats::default());
+        let mut chaotic = ChaosEngine::new(
+            RustEngine::default(),
+            FaultPlan::default(),
+            0,
+            stats.clone(),
+        );
+        let got = chaotic.predict_final(&theta, &data, &xq).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "chaos-off mean must be bit-identical");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "chaos-off var must be bit-identical");
+        }
+        assert_eq!(stats.total(), 0);
+    }
+
+    #[test]
+    fn forced_divergence_recovers_through_the_ladder() {
+        use crate::gp::Theta;
+        let data = Arc::new(crate::lcbench::toy_dataset(5, 6, 2, 5));
+        let xq = Matrix::from_vec(1, data.d(), vec![0.4; data.d()]);
+        let theta = Theta::default_packed(data.d());
+        let queries = vec![Query::MeanAtFinal { xq }];
+
+        let stats = Arc::new(ChaosStats::default());
+        let plan = FaultPlan { diverge_rate: 1.0, ..Default::default() };
+        let mut chaotic =
+            ChaosEngine::new(RustEngine::default(), plan, 0, stats.clone());
+        let out = chaotic
+            .answer_batch(&theta, &data, &queries, None, None)
+            .expect("ladder must recover a 1-iteration CG budget");
+        assert!(stats.diverges.load(Ordering::Relaxed) >= 1);
+        assert!(out.escalations > 0, "recovery must be visible as escalations");
+        match &out.answers[0] {
+            Answer::Final(preds) => {
+                for (mu, var) in preds {
+                    assert!(mu.is_finite() && var.is_finite() && *var > 0.0);
+                }
+            }
+            other => panic!("unexpected answer {other:?}"),
+        }
+        // budget restored after the call
+        assert_eq!(chaotic.inner.cfg.cg_max_iters, SolverCfg::default().cg_max_iters);
+    }
+}

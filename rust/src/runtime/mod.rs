@@ -17,6 +17,7 @@
 //! the `xla` cargo feature; without it [`open_engine`] always returns the
 //! rust engine.
 
+pub mod chaos;
 pub mod manifest;
 
 #[cfg(feature = "xla")]
@@ -58,6 +59,11 @@ pub struct PredictOutcome {
     /// serving layer to cache in the `WarmStart` lineage (None when
     /// preconditioning is off or the engine does not expose it).
     pub precond: Option<Arc<PrecondFactors>>,
+    /// Escalation-ladder rungs climbed by the solve (0 on the healthy
+    /// path; docs/robustness.md).
+    pub escalations: usize,
+    /// Solves answered by the dense-Cholesky fallback rung.
+    pub dense_fallbacks: usize,
 }
 
 /// Result of a typed-query batch ([`Engine::answer_batch`]): the answers
@@ -82,6 +88,10 @@ pub struct QueryOutcome {
     pub solves: usize,
     /// Factored preconditioner state after the batch.
     pub precond: Option<Arc<PrecondFactors>>,
+    /// Escalation-ladder rungs climbed across the batch's solves.
+    pub escalations: usize,
+    /// Solves answered by the dense-Cholesky fallback rung.
+    pub dense_fallbacks: usize,
 }
 
 /// A GP backend the coordinator can drive.
@@ -113,6 +123,8 @@ pub trait Engine: Send {
             cg_iters: 0,
             cg_mvm_rows: 0,
             precond: None,
+            escalations: 0,
+            dense_fallbacks: 0,
         })
     }
 
@@ -204,6 +216,8 @@ pub trait Engine: Send {
             cg_mvm_rows: 0,
             solves,
             precond: None,
+            escalations: 0,
+            dense_fallbacks: 0,
         })
     }
 
@@ -353,6 +367,8 @@ impl Engine for RustEngine {
             cg_iters: cg.iters_per_rhs.iter().sum(),
             cg_mvm_rows: cg.mvm_rows,
             precond: cache,
+            escalations: cg.escalations,
+            dense_fallbacks: cg.fallback_dense as usize,
         })
     }
 
@@ -379,6 +395,8 @@ impl Engine for RustEngine {
             cg_mvm_rows: post.cg_mvm_rows(),
             solves: post.solve_calls(),
             precond: post.precond(),
+            escalations: post.escalations(),
+            dense_fallbacks: post.dense_fallbacks(),
         })
     }
 

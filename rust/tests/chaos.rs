@@ -1,0 +1,340 @@
+//! Fault-tolerance e2e: the pool must degrade predictably under injected
+//! faults — solver escalation recovers crippled solves, panic storms
+//! quarantine only the faulting shard, and expired deadlines surface as
+//! typed timeouts instead of hangs (docs/robustness.md).
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use lkgp::coordinator::{
+    Answer, CurveStore, PoolCfg, PredictClient, Query, Registry, Request, ServicePool, Snapshot,
+};
+use lkgp::gp::{Dataset, SolverCfg, Theta};
+use lkgp::lcbench::{Preset, Task};
+use lkgp::linalg::Matrix;
+use lkgp::rng::Pcg64;
+use lkgp::runtime::chaos::{ChaosEngine, ChaosStats, FaultPlan};
+use lkgp::runtime::{Engine, RustEngine};
+use lkgp::LkgpError;
+
+/// Registry snapshot of a simulated task with prefix-observed curves.
+fn snapshot_for(preset: Preset, n: usize, seed: u64) -> Snapshot {
+    let mut rng = Pcg64::new(seed);
+    let task = Task::generate(preset, n, &mut rng);
+    let mut reg = Registry::new();
+    for i in 0..n {
+        let id = reg.add(task.configs.row(i).to_vec());
+        let len = 3 + rng.below(8);
+        for j in 0..len {
+            reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+        }
+    }
+    CurveStore::new(task.m()).snapshot(&reg).unwrap()
+}
+
+fn assert_answers_bit_equal(got: &[Answer], want: &[Answer]) {
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want) {
+        match (g, w) {
+            (Answer::Final(a), Answer::Final(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.0.to_bits(), y.0.to_bits(), "mean diverged");
+                    assert_eq!(x.1.to_bits(), y.1.to_bits(), "variance diverged");
+                }
+            }
+            (Answer::Variance(a), Answer::Variance(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "variance diverged");
+                }
+            }
+            (Answer::Quantiles(a), Answer::Quantiles(b)) => {
+                assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "matrix answer diverged");
+                }
+            }
+            other => panic!("answer kinds diverged: {other:?}"),
+        }
+    }
+}
+
+/// A shard whose engine is crippled to a one-iteration CG budget must
+/// still answer — the escalation ladder climbs until a rung converges (at
+/// worst the dense Cholesky fallback) — with answers matching a healthy
+/// shard to solver tolerance, and the recovery observable in the shard's
+/// `escalations` counter.
+#[test]
+fn crippled_cg_budget_recovers_through_escalation_ladder() {
+    let snap = snapshot_for(Preset::FashionMnist, 8, 13);
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(2, 7, {
+        let mut v = snap.all_x.row(0).to_vec();
+        v.extend_from_slice(snap.all_x.row(5));
+        v
+    });
+    let queries = vec![
+        Query::MeanAtFinal { xq: xq.clone() },
+        Query::Variance { xq },
+    ];
+
+    let healthy = ServicePool::spawn(
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>],
+        PoolCfg { workers: 1, warm_start: false, ..Default::default() },
+    );
+    let want = healthy
+        .handle(0)
+        .query(snap.clone(), theta.clone(), queries.clone())
+        .unwrap();
+    assert_eq!(healthy.stats(0).solver_failures.load(Ordering::Relaxed), 0);
+
+    let mut crippled = RustEngine::default();
+    crippled.cfg.cg_max_iters = 1;
+    let pool = ServicePool::spawn(
+        vec![Box::new(crippled) as Box<dyn Engine>],
+        PoolCfg { workers: 1, warm_start: false, ..Default::default() },
+    );
+    let got = pool
+        .handle(0)
+        .query(snap, theta, queries)
+        .expect("the ladder must recover a one-iteration CG budget");
+    assert!(
+        pool.stats(0).escalations.load(Ordering::Relaxed) > 0,
+        "recovery must be observable as escalations"
+    );
+
+    for (g, w) in got.iter().zip(&want) {
+        match (g, w) {
+            (Answer::Final(a), Answer::Final(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(x.0.is_finite() && x.1.is_finite() && x.1 > 0.0);
+                    assert!(
+                        (x.0 - y.0).abs() < 1e-5 && (x.1 - y.1).abs() < 1e-5,
+                        "escalated answer {x:?} drifted from healthy {y:?}"
+                    );
+                }
+            }
+            (Answer::Variance(a), Answer::Variance(b)) => {
+                for (x, y) in a.iter().zip(b) {
+                    assert!(x.is_finite() && *x > 0.0);
+                    assert!((x - y).abs() < 1e-5);
+                }
+            }
+            other => panic!("answer kinds diverged: {other:?}"),
+        }
+    }
+}
+
+/// A panic storm on one shard must quarantine exactly that shard — typed
+/// `Quarantined` rejections once the breaker trips — while sibling shards
+/// keep serving answers bit-identical to a chaos-free pool.
+#[test]
+fn panic_storm_quarantines_only_the_faulting_shard() {
+    let chaos_stats = Arc::new(ChaosStats::default());
+    let storm = FaultPlan { panic_rate: 1.0, ..Default::default() };
+    let engines: Vec<Box<dyn Engine>> = vec![
+        Box::<RustEngine>::default(),
+        Box::new(ChaosEngine::new(
+            RustEngine::default(),
+            storm,
+            1,
+            chaos_stats.clone(),
+        )),
+    ];
+    let pool = ServicePool::spawn(
+        engines,
+        PoolCfg {
+            workers: 2,
+            warm_start: false,
+            // long cool-down so the trip stays observable for the whole test
+            breaker_cooldown: Duration::from_secs(600),
+            ..Default::default()
+        },
+    );
+
+    let snap0 = snapshot_for(Preset::FashionMnist, 8, 21);
+    let snap1 = snapshot_for(Preset::Higgs, 8, 22);
+    let theta = Theta::default_packed(7);
+    let queries = |snap: &Snapshot| {
+        let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+        vec![
+            Query::MeanAtFinal { xq: xq.clone() },
+            Query::Quantiles { xq, ps: vec![0.1, 0.9] },
+        ]
+    };
+
+    // storm the faulting shard: every request resolves to an error (the
+    // panicked batch drops its replies; post-trip submits are rejected
+    // typed) — never a hang
+    for _ in 0..5 {
+        let res = pool
+            .handle(1)
+            .query(snap1.clone(), theta.clone(), queries(&snap1));
+        match res {
+            Ok(a) => panic!("storm shard must not answer, got {a:?}"),
+            Err(_) => {} // dropped replies or typed quarantine rejections
+        }
+    }
+    // the breaker is fed by the worker just after the panicked batch is
+    // caught, which can land moments after the client sees its dropped
+    // reply — wait for the trip to be recorded before asserting on it
+    let stats1 = pool.stats(1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats1.quarantine_trips.load(Ordering::Relaxed) == 0 && Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+    assert!(
+        stats1.panics_recovered.load(Ordering::Relaxed) >= 3,
+        "every injected panic must be recovered"
+    );
+    assert!(
+        stats1.quarantine_trips.load(Ordering::Relaxed) >= 1,
+        "consecutive panics must trip the breaker"
+    );
+    assert!(chaos_stats.panics.load(Ordering::Relaxed) >= 3);
+    match pool
+        .handle(1)
+        .query(snap1.clone(), theta.clone(), queries(&snap1))
+    {
+        Err(LkgpError::Quarantined { shard, failures, .. }) => {
+            assert_eq!(shard, 1);
+            assert!(failures >= 3);
+        }
+        other => panic!("post-trip submit must be rejected typed, got {other:?}"),
+    }
+
+    // the sibling shard is untouched: bit-identical to a chaos-free pool
+    let clean = ServicePool::spawn(
+        vec![Box::<RustEngine>::default() as Box<dyn Engine>],
+        PoolCfg { workers: 1, warm_start: false, ..Default::default() },
+    );
+    let want = clean
+        .handle(0)
+        .query(snap0.clone(), theta.clone(), queries(&snap0))
+        .unwrap();
+    let got = pool
+        .handle(0)
+        .query(snap0.clone(), theta.clone(), queries(&snap0))
+        .unwrap();
+    assert_answers_bit_equal(&got, &want);
+    assert_eq!(pool.stats(0).quarantine_trips.load(Ordering::Relaxed), 0);
+    assert_eq!(pool.stats(0).panics_recovered.load(Ordering::Relaxed), 0);
+}
+
+/// A `RustEngine` whose `fit` blocks until the test sends a token: pins
+/// the pool's single worker so a deadline-wrapped request expires while
+/// queued.
+struct GatedEngine {
+    inner: RustEngine,
+    gate: mpsc::Receiver<()>,
+}
+
+impl GatedEngine {
+    fn pair() -> (mpsc::Sender<()>, Box<dyn Engine>) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Box::new(GatedEngine { inner: RustEngine::default(), gate: rx }))
+    }
+}
+
+impl Engine for GatedEngine {
+    fn fit(&mut self, theta0: &[f64], data: &Dataset, seed: u64) -> lkgp::Result<Vec<f64>> {
+        let _ = self.gate.recv();
+        self.inner.fit(theta0, data, seed)
+    }
+
+    fn predict_final(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+    ) -> lkgp::Result<Vec<(f64, f64)>> {
+        self.inner.predict_final(theta, data, xq)
+    }
+
+    fn sample_curves(
+        &mut self,
+        theta: &[f64],
+        data: &Dataset,
+        xq: &Matrix,
+        s: usize,
+        seed: u64,
+    ) -> lkgp::Result<Vec<Matrix>> {
+        self.inner.sample_curves(theta, data, xq, s, seed)
+    }
+
+    fn predict_mean(&mut self, theta: &[f64], data: &Dataset, xq: &Matrix) -> lkgp::Result<Matrix> {
+        self.inner.predict_mean(theta, data, xq)
+    }
+
+    fn session_cfg(&self) -> Option<SolverCfg> {
+        self.inner.session_cfg()
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+/// A request whose deadline expires while it waits behind a busy writer
+/// must come back as a typed `Timeout` — promptly, never a hang — and the
+/// shard must count it.
+#[test]
+fn expired_deadline_is_shed_with_typed_timeout() {
+    let (gate, engine) = GatedEngine::pair();
+    let pool = ServicePool::spawn(
+        vec![engine],
+        PoolCfg { workers: 1, warm_start: false, max_replicas: 0, ..Default::default() },
+    );
+    let snap = snapshot_for(Preset::Airlines, 8, 31);
+    let theta = Theta::default_packed(7);
+
+    // pin the single worker on a gated refit
+    let (ftx, frx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Refit {
+            snapshot: snap.clone(),
+            theta0: theta.clone(),
+            seed: 3,
+            resp: ftx,
+        },
+    )
+    .unwrap();
+    while pool.queue_depth(0) > 0 {
+        std::thread::yield_now();
+    }
+
+    // queue a read with a deadline that expires behind the pinned writer
+    let (rtx, rrx) = mpsc::channel();
+    let xq = Matrix::from_vec(1, 7, snap.all_x.row(0).to_vec());
+    pool.submit(
+        0,
+        Request::Deadline {
+            deadline: Instant::now() + Duration::from_millis(20),
+            inner: Box::new(Request::Query {
+                snapshot: snap.clone(),
+                theta: theta.clone(),
+                queries: vec![Query::MeanAtFinal { xq }],
+                resp: rtx,
+            }),
+        },
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    gate.send(()).unwrap();
+
+    let reply = rrx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("expired requests must be answered, never hang");
+    match reply {
+        Err(LkgpError::Timeout { shard, late_micros }) => {
+            assert_eq!(shard, 0);
+            assert!(late_micros > 0);
+        }
+        other => panic!("expected a typed Timeout, got {other:?}"),
+    }
+    assert_eq!(pool.stats(0).timeouts.load(Ordering::Relaxed), 1);
+    frx.recv().unwrap().unwrap();
+}
