@@ -3,6 +3,14 @@
 #
 #   tier-1 (hard gate):  cargo build --release && cargo test -q
 #   api    (hard gate):  deny-warnings build (no in-crate deprecated-shim callers)
+#   lint   (hard gate):  `lkgp lint` — the in-tree invariant analyzer
+#                        (lock-order graph, poison policy, unsafe audit,
+#                        panic/float discipline, stats/bench drift; see
+#                        docs/static_analysis.md). Writes ANALYSIS.json at
+#                        the repo root; any unjustified finding fails.
+#   san    (detection-gated): nightly-only race check on
+#                        tests/parallel_determinism.rs — cargo miri when
+#                        installed, else ThreadSanitizer, else `skip`
 #   style  (strict when available): cargo fmt --check, cargo clippy -- -D warnings
 #   perf   (hard gates): cargo bench --bench hotpath -- --quick
 #                        -> BENCH_hotpath.json (record) plus gated
@@ -34,9 +42,10 @@
 #
 # The script always ends by printing a machine-readable one-line summary
 # with ALL of these gates present, in this order:
-#   CI_SUMMARY build=pass test=pass shims=pass fmt=pass clippy=pass \
-#              bench=pass pcg=pass queries=pass replicas=pass ingest=pass \
-#              chaos=pass par=pass replay=pass creplay=pass
+#   CI_SUMMARY build=pass test=pass shims=pass lint=pass san=skip \
+#              fmt=pass clippy=pass bench=pass pcg=pass queries=pass \
+#              replicas=pass ingest=pass chaos=pass par=pass replay=pass \
+#              creplay=pass
 # Each gate is one of pass|fail|soft-fail|skip (skip = component missing,
 # CI_QUICK, or never reached because an earlier gate failed; soft-fail =
 # style finding under CI_STRICT=0). Exit code is non-zero iff any hard
@@ -55,7 +64,7 @@ note() { # note <gate> <pass|fail|soft-fail|skip>
 finish() {
   # gates never reached (early exit) report as skip, so the summary always
   # carries the full fixed field set parsers rely on
-  for g in build test shims fmt clippy bench pcg queries replicas ingest chaos par replay creplay; do
+  for g in build test shims lint san fmt clippy bench pcg queries replicas ingest chaos par replay creplay; do
     case " $SUMMARY " in
       *" $g="*) ;;
       *) SUMMARY="$SUMMARY $g=skip" ;;
@@ -110,6 +119,54 @@ if RUSTFLAGS="${RUSTFLAGS:-} -D warnings" cargo build --manifest-path "$MANIFEST
 else
   note shims fail
   exit 1
+fi
+
+echo "== lint gate: in-tree invariant analyzer (lkgp lint) =="
+# Lock-order cycles, poison-policy mismatches, undocumented unsafe, naked
+# hot-path panics, float ==, dead stats counters, ungated bench artifacts
+# (docs/static_analysis.md). Also refreshes ANALYSIS.json at the repo root.
+# The same analysis runs as tests/lint.rs under the tier-1 test gate; this
+# pass exercises the CLI entry point and publishes the inventory.
+if cargo run --release --manifest-path "$MANIFEST" -- lint; then
+  note lint pass
+  echo "lint gate OK"
+else
+  note lint fail
+  exit 1
+fi
+
+echo "== san gate: nightly race check (detection-gated) =="
+# Runs tests/parallel_determinism.rs under cargo miri when a nightly
+# toolchain with miri is installed, else under ThreadSanitizer when plain
+# nightly is available; reports `skip` otherwise (the offline pinned
+# toolchain has neither — a missing component must never mask a real
+# build/test regression, same policy as the style gates).
+SAN_RAN=0
+if cargo +nightly miri --version >/dev/null 2>&1; then
+  SAN_RAN=1
+  if cargo +nightly miri test --manifest-path "$MANIFEST" --test parallel_determinism; then
+    note san pass
+    echo "san gate OK (miri)"
+  else
+    note san fail
+    exit 1
+  fi
+elif cargo +nightly --version >/dev/null 2>&1 && rustc +nightly --version >/dev/null 2>&1; then
+  SAN_RAN=1
+  SAN_TARGET=$(rustc +nightly -vV | sed -n 's/^host: //p')
+  if RUSTFLAGS="${RUSTFLAGS:-} -Zsanitizer=thread" \
+      cargo +nightly test --manifest-path "$MANIFEST" \
+      --test parallel_determinism --target "$SAN_TARGET"; then
+    note san pass
+    echo "san gate OK (tsan)"
+  else
+    note san fail
+    exit 1
+  fi
+fi
+if [ "$SAN_RAN" = "0" ]; then
+  echo "no nightly toolchain; skipped"
+  note san skip
 fi
 
 # ---- style gates (strict by default when the components exist) ------------

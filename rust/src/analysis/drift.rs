@@ -1,0 +1,209 @@
+//! Rule family `stats_drift` / `bench_gate`: observability drift.
+//!
+//! Counters and bench artifacts only help if someone looks at them. The
+//! stats rule fails when a `ServiceStats` counter is incremented but never
+//! observed (`.load(..)` / `.lock(..)` on the field) in non-test code —
+//! dead telemetry that silently stops meaning anything. The bench rule
+//! fails when a bench source names a `BENCH_*.json` artifact that `ci.sh`
+//! never gates on — a benchmark whose regression no one would catch.
+
+use super::tokenizer::Kind;
+use super::{AnalysisConfig, AnalysisInput, FileTokens, Finding, Rule};
+
+/// Rule `stats_drift`: every field of the configured stats struct must be
+/// observed somewhere in non-test code. "Observed" means a `.field.load(`
+/// or `.field.lock(` chain — the shapes every print/serialize path in
+/// this crate goes through (counters are atomics, histograms sit behind a
+/// mutex). Increment-only fields (`fetch_add` with no reader) are flagged
+/// at their declaration.
+pub(crate) fn stats_drift(
+    files: &[FileTokens],
+    cfg: &AnalysisConfig,
+    findings: &mut Vec<Finding>,
+) {
+    // ---- locate the struct and parse its field names -----------------
+    let mut fields: Vec<(String, String, u32)> = Vec::new(); // (field, file, decl line)
+    for ft in files {
+        for ci in 0..ft.code.len() {
+            if ft.ctext(ci) != "struct" || ft.ctext(ci + 1) != cfg.stats_struct {
+                continue;
+            }
+            // First `{` after the name opens the body.
+            let mut j = ci + 2;
+            while j < ft.code.len() && ft.ctext(j) != "{" && ft.ctext(j) != ";" {
+                j += 1;
+            }
+            if ft.ctext(j) != "{" {
+                continue;
+            }
+            let Some(&close) = ft.brace_match.get(&j) else { continue };
+            let mut depth = 0i64;
+            for k in j..close {
+                match ft.ctext(k) {
+                    "{" => depth += 1,
+                    "}" => depth -= 1,
+                    _ => {}
+                }
+                // A field is `ident :` at body depth 1, introduced by the
+                // open brace, a comma, or `pub`.
+                if depth == 1
+                    && ft.ct(k).kind == Kind::Ident
+                    && ft.ctext(k + 1) == ":"
+                    && matches!(ft.ctext(k.wrapping_sub(1)), "{" | "," | "pub")
+                {
+                    fields.push((ft.ctext(k).to_string(), ft.name.clone(), ft.ct(k).line));
+                }
+            }
+        }
+    }
+
+    // ---- scan for observations ---------------------------------------
+    for (field, file, line) in fields {
+        let mut observed = false;
+        'files: for ft in files {
+            for ci in 0..ft.code.len() {
+                if ft.ctext(ci) == "."
+                    && ft.ctext(ci + 1) == field
+                    && ft.ctext(ci + 2) == "."
+                    && matches!(ft.ctext(ci + 3), "load" | "lock")
+                    && ft.ctext(ci + 4) == "("
+                    && !ft.in_test(ft.ct(ci + 1).line)
+                {
+                    observed = true;
+                    break 'files;
+                }
+            }
+        }
+        if !observed {
+            findings.push(Finding {
+                rule: Rule::StatsDrift,
+                file,
+                line,
+                message: format!(
+                    "`{}::{field}` is never observed (`.{field}.load(..)`) in \
+                     non-test code — print or serialize it, or remove the counter",
+                    cfg.stats_struct
+                ),
+                justified: None,
+            });
+        }
+    }
+}
+
+/// Rule `bench_gate`: every `BENCH_*.json` artifact named in a bench
+/// source's string literals must appear in `ci.sh` (which is where the
+/// assert gates live). Skipped when no ci.sh text was provided (fixture
+/// runs) — absence of the script is not absence of the gate.
+pub(crate) fn bench_gate(input: &AnalysisInput, findings: &mut Vec<Finding>) {
+    let Some(ci_script) = input.ci_script.as_deref() else {
+        return;
+    };
+    for sf in &input.benches {
+        let toks = super::tokenizer::tokenize(&sf.text);
+        for t in &toks {
+            if t.kind != Kind::Str {
+                continue;
+            }
+            for name in bench_artifact_names(&t.text) {
+                if !ci_script.contains(&name) {
+                    findings.push(Finding {
+                        rule: Rule::BenchGate,
+                        file: sf.name.clone(),
+                        line: t.line,
+                        message: format!(
+                            "bench artifact `{name}` has no ci.sh gate — add an \
+                             assert on it or the benchmark can regress silently"
+                        ),
+                        justified: None,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Extract `BENCH_<word>.json` names from a string-literal token's text.
+fn bench_artifact_names(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = s.as_bytes();
+    let mut i = 0usize;
+    while let Some(at) = s[i..].find("BENCH_") {
+        let start = i + at;
+        let mut end = start + "BENCH_".len();
+        while end < bytes.len()
+            && (bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_')
+        {
+            end += 1;
+        }
+        if s[end..].starts_with(".json") {
+            out.push(s[start..end + ".json".len()].to_string());
+            i = end + ".json".len();
+        } else {
+            i = end;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{analyze, AnalysisConfig, AnalysisInput, Rule, SourceFile};
+    use super::bench_artifact_names;
+
+    fn cfg() -> AnalysisConfig {
+        let mut c = AnalysisConfig::crate_default();
+        c.stats_struct = "MiniStats".into();
+        c
+    }
+
+    #[test]
+    fn unread_counter_is_flagged_and_read_counter_is_not() {
+        let src = "\
+pub struct MiniStats {\n\
+    pub seen: AtomicU64,\n\
+    pub lost: AtomicU64,\n\
+}\n\
+fn report(s: &MiniStats) -> u64 { s.seen.load(Ordering::Relaxed) }\n";
+        let input = AnalysisInput {
+            src: vec![SourceFile { name: "stats.rs".into(), text: src.into() }],
+            benches: Vec::new(),
+            ci_script: None,
+        };
+        let a = analyze(&input, &cfg());
+        let drift: Vec<_> = a
+            .findings
+            .iter()
+            .filter(|f| f.rule == Rule::StatsDrift)
+            .collect();
+        assert_eq!(drift.len(), 1, "{:?}", a.findings);
+        assert!(drift[0].message.contains("lost"));
+        assert_eq!(drift[0].line, 3);
+    }
+
+    #[test]
+    fn bench_artifact_without_gate_is_flagged() {
+        let bench = "fn main() { write(\"BENCH_NEW.json\"); write(\"BENCH_OLD.json\"); }\n";
+        let input = AnalysisInput {
+            src: Vec::new(),
+            benches: vec![SourceFile { name: "b.rs".into(), text: bench.into() }],
+            ci_script: Some("assert BENCH_OLD.json".into()),
+        };
+        let a = analyze(&input, &cfg());
+        let gate: Vec<_> = a
+            .findings
+            .iter()
+            .filter(|f| f.rule == Rule::BenchGate)
+            .collect();
+        assert_eq!(gate.len(), 1, "{:?}", a.findings);
+        assert!(gate[0].message.contains("BENCH_NEW.json"));
+    }
+
+    #[test]
+    fn artifact_name_extraction() {
+        assert_eq!(
+            bench_artifact_names("\"out/BENCH_PCG.json and BENCH_A_B.json\""),
+            vec!["BENCH_PCG.json".to_string(), "BENCH_A_B.json".to_string()]
+        );
+        assert!(bench_artifact_names("\"BENCH_ pcg\"").is_empty());
+    }
+}

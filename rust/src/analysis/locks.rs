@@ -1,0 +1,800 @@
+//! Rule family `lock_order` / `lock_class` / `poison_policy`: classify
+//! every `Mutex`/`RwLock` acquisition site, check each class's poison
+//! policy, and build the acquisition-order graph (intra-function guard
+//! extents plus call-graph edges), failing on cycles.
+//!
+//! ## Model
+//!
+//! A **lock class** is the field or binding name of a declared
+//! `Mutex`/`RwLock` (`queues`, `warm`, …) — the unit the crate's ordering
+//! comments reason about ("queues before warm"). Classes are discovered
+//! from declarations; every discovered class must appear in the
+//! [`AnalysisConfig::lock_policies`] table, so a new lock cannot land
+//! unclassified.
+//!
+//! A guard bound by a plain `let` whose initializer is exactly the
+//! acquisition chain (`let mut q = shared.queues.lock().unwrap();` or
+//! `let w = lock_clean(&slot.warm);`) is modeled as **held to the end of
+//! its enclosing block**. Any longer chain (`.peek(g)`, `.take()`,
+//! let-else patterns) is a **temporary** with expression extent — the
+//! guard drops at the end of the statement, so it contributes no ordering
+//! edges. This deliberately under-approximates a few same-statement holds
+//! (an `if let` scrutinee temporary) and never invents a hold that isn't
+//! there; the crate's idioms keep real multi-lock extents `let`-bound.
+//!
+//! Within a held extent, edges come from (a) further direct acquisitions
+//! and (b) bare crate-function calls (`try_steal_reads(..)`), whose
+//! transitive lock sets are computed by fixpoint over the call graph.
+//! Method calls and `Path::qualified()` calls are not traversed — the
+//! former can't be resolved without types, and both would smear unrelated
+//! `fn new`-style names together. Test code is excluded throughout.
+
+use super::tokenizer::Kind;
+use super::{AnalysisConfig, FileTokens, Finding, LockEdge, LockPolicy, LockSite, Rule};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Poison-handling shape observed at a site.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Shape {
+    /// `.unwrap()` — fail-loud.
+    Unwrap,
+    /// `.expect(..)` — fail-loud.
+    Expect,
+    /// `.unwrap_or_else(|p| p.into_inner())` — recover.
+    Recover,
+    /// `lock_clean(..)` — recover via the shared helper.
+    LockClean,
+    /// Poison-tolerant read (`.map(..).unwrap_or(..)`, `.ok()`, …).
+    Tolerant,
+    /// `try_lock()` — the match on the result handles poison explicitly;
+    /// exempt from the policy check, still an acquisition for ordering.
+    TryLock,
+    /// Anything else — flagged: poison handling must be recognizable.
+    Raw,
+}
+
+impl Shape {
+    fn name(self) -> &'static str {
+        match self {
+            Shape::Unwrap => "unwrap",
+            Shape::Expect => "expect",
+            Shape::Recover => "recover",
+            Shape::LockClean => "lock_clean",
+            Shape::Tolerant => "tolerant",
+            Shape::TryLock => "try_lock",
+            Shape::Raw => "raw",
+        }
+    }
+}
+
+/// One acquisition site in code coordinates, before extent analysis.
+struct Site {
+    /// Code index of the method/helper ident (`lock` / `lock_clean`).
+    ci: usize,
+    class: String,
+    shape: Shape,
+    /// End of the full acquisition expression (code index of its last
+    /// token), used for guard-binding detection.
+    expr_end: usize,
+    /// Code index where the receiver chain starts (for `let` detection).
+    chain_start: usize,
+    line: u32,
+}
+
+/// A function's body span in one file, in code coordinates.
+struct FnBody {
+    name: String,
+    file: usize,
+    open: usize,
+    close: usize,
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "match", "for", "loop", "return", "fn", "let", "move", "unsafe",
+    "in", "as", "break", "continue", "ref", "impl", "pub", "use", "where", "struct", "enum",
+    "trait", "type", "mod", "const", "static", "crate", "super", "Self", "self", "dyn",
+    "mut", "async", "await",
+];
+
+pub(crate) fn lock_discipline(
+    files: &[FileTokens],
+    cfg: &AnalysisConfig,
+    findings: &mut Vec<Finding>,
+) -> (Vec<LockSite>, Vec<LockEdge>) {
+    // ---- pass 1: declared lock classes -------------------------------
+    // `name: …Mutex<…>` fields / typed lets, and `let name = …Mutex::new`
+    // bindings. Function parameter lists are skipped (`m: &Mutex<T>` in a
+    // helper is a borrow, not a new class).
+    let mut declared: BTreeMap<String, (String, u32, &'static str)> = BTreeMap::new();
+    let fns = collect_fns(files);
+    for (fi, ft) in files.iter().enumerate() {
+        let params = param_ranges(ft);
+        for ci in 0..ft.code.len() {
+            let kind_name = match ft.ctext(ci) {
+                "Mutex" => "Mutex",
+                "RwLock" => "RwLock",
+                _ => continue,
+            };
+            if ft.ct(ci).kind != Kind::Ident
+                || ft.in_test(ft.ct(ci).line)
+                || params.iter().any(|&(a, b)| ci > a && ci < b)
+            {
+                continue;
+            }
+            // Walk back over type-position tokens to the `:` or `=`.
+            let mut j = ci as i64 - 1;
+            while j >= 0 {
+                let t = ft.ctext(j as usize);
+                if ft.ct(j as usize).kind == Kind::Ident || t == "::" || t == "<" {
+                    j -= 1;
+                } else {
+                    break;
+                }
+            }
+            if j < 1 {
+                continue;
+            }
+            let j = j as usize;
+            let name = match ft.ctext(j) {
+                // `name: Mutex<..>` (struct field, typed let, struct-literal
+                // init of a lock field — all register the same class name).
+                ":" => {
+                    let cand = ft.ct(j - 1);
+                    if cand.kind == Kind::Ident && !KEYWORDS.contains(&cand.text.as_str()) {
+                        Some(cand.text.clone())
+                    } else {
+                        None
+                    }
+                }
+                // `let [mut] name = …Mutex::new(..)`.
+                "=" => {
+                    let mut k = j as i64 - 1;
+                    let cand = if k >= 0 && ft.ct(k as usize).kind == Kind::Ident {
+                        let c = ft.ct(k as usize).text.clone();
+                        k -= 1;
+                        Some(c)
+                    } else {
+                        None
+                    };
+                    if k >= 0 && ft.ctext(k as usize) == "mut" {
+                        k -= 1;
+                    }
+                    if k >= 0 && ft.ctext(k as usize) == "let" {
+                        cand
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            if let Some(name) = name {
+                declared
+                    .entry(name)
+                    .or_insert((ft.name.clone(), ft.ct(ci).line, kind_name));
+            }
+        }
+        let _ = fi;
+    }
+    // Every discovered class must be registered in the policy table.
+    for (class, (file, line, _)) in &declared {
+        if cfg.policy_of(class).is_none() {
+            findings.push(Finding {
+                rule: Rule::LockClass,
+                file: file.clone(),
+                line: *line,
+                message: format!(
+                    "lock class `{class}` is not registered in the poison-policy \
+                     table (analysis::AnalysisConfig::crate_default)"
+                ),
+                justified: None,
+            });
+        }
+    }
+
+    // ---- pass 2: acquisition sites per function ----------------------
+    let mut all_sites: Vec<LockSite> = Vec::new();
+    let mut edges: Vec<LockEdge> = Vec::new();
+    // fn name -> classes directly acquired anywhere in (any) body.
+    let mut direct: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    // fn name -> bare crate functions called anywhere in body.
+    let mut calls: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let fn_names: BTreeSet<String> = fns.iter().map(|f| f.name.clone()).collect();
+    // Held-extent call sites to expand after the fixpoint:
+    // (held class, callee, file name, line).
+    let mut held_calls: Vec<(String, String, String, u32)> = Vec::new();
+
+    for f in &fns {
+        // The recover helper's own `m.lock()` is the implementation of
+        // the recover shape, not a classifiable site.
+        if f.name == "lock_clean" {
+            continue;
+        }
+        let ft = &files[f.file];
+        let mut sites: Vec<Site> = Vec::new();
+        for ci in f.open..f.close {
+            if let Some(site) = acquisition_at(ft, ci, f, &declared) {
+                sites.push(site);
+            }
+        }
+        for s in &sites {
+            let policy = cfg.policy_of(&s.class);
+            if declared.contains_key(&s.class) && policy.is_none() {
+                // Already reported at the declaration; skip per-site noise.
+            } else if !declared.contains_key(&s.class) {
+                findings.push(Finding {
+                    rule: Rule::LockClass,
+                    file: ft.name.clone(),
+                    line: s.line,
+                    message: format!(
+                        "cannot classify lock acquisition (receiver `{}` is not a \
+                         declared lock class)",
+                        s.class
+                    ),
+                    justified: None,
+                });
+            }
+            if let Some(policy) = policy {
+                check_policy(ft, s, policy, findings);
+            }
+            direct
+                .entry(f.name.clone())
+                .or_default()
+                .insert(s.class.clone());
+        }
+        // Bare calls anywhere in the body feed the call graph.
+        for ci in f.open..f.close {
+            if let Some(callee) = bare_call_at(ft, ci, &fn_names) {
+                calls.entry(f.name.clone()).or_default().insert(callee);
+            }
+        }
+        // Guard extents: direct edges + held calls.
+        for (i, s) in sites.iter().enumerate() {
+            let held = guard_extent(ft, s, f);
+            all_sites.push(LockSite {
+                file: ft.name.clone(),
+                line: s.line,
+                class: s.class.clone(),
+                shape: s.shape.name().into(),
+                held: held.is_some(),
+            });
+            let Some(extent_end) = held else { continue };
+            for other in sites.iter().skip(i + 1) {
+                if other.ci < extent_end && other.class != s.class {
+                    edges.push(LockEdge {
+                        from: s.class.clone(),
+                        to: other.class.clone(),
+                        file: ft.name.clone(),
+                        line: other.line,
+                        via: "direct".into(),
+                    });
+                }
+            }
+            for ci in s.expr_end + 1..extent_end {
+                if let Some(callee) = bare_call_at(ft, ci, &fn_names) {
+                    held_calls.push((
+                        s.class.clone(),
+                        callee,
+                        ft.name.clone(),
+                        ft.ct(ci).line,
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- pass 3: transitive lock sets (fixpoint) ---------------------
+    let mut locks_in: BTreeMap<String, BTreeSet<String>> = direct.clone();
+    loop {
+        let mut changed = false;
+        for (fname, callees) in &calls {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for callee in callees {
+                if let Some(set) = locks_in.get(callee) {
+                    add.extend(set.iter().cloned());
+                }
+            }
+            let entry = locks_in.entry(fname.clone()).or_default();
+            for c in add {
+                if entry.insert(c) {
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for (held, callee, file, line) in held_calls {
+        if let Some(set) = locks_in.get(&callee) {
+            for cls in set {
+                if *cls != held {
+                    edges.push(LockEdge {
+                        from: held.clone(),
+                        to: cls.clone(),
+                        file: file.clone(),
+                        line,
+                        via: callee.clone(),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- pass 4: cycle detection over the class graph ----------------
+    // Self-edges (same class re-acquired under its own guard) are direct
+    // deadlocks with std's non-reentrant Mutex; A→…→A cycles are the
+    // classic two-thread deadlock. Either fails the build.
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(e.from.as_str()).or_default().insert(e.to.as_str());
+    }
+    if let Some(cycle) = find_cycle(&adj) {
+        let path = cycle.join(" -> ");
+        // Witness: the edge closing the cycle.
+        let last = cycle.len().saturating_sub(1);
+        let witness = edges
+            .iter()
+            .find(|e| last > 0 && e.from == cycle[last - 1] && e.to == cycle[last]);
+        let (file, line, via) = match witness {
+            Some(e) => (e.file.clone(), e.line, e.via.clone()),
+            None => ("<graph>".into(), 0, "?".into()),
+        };
+        findings.push(Finding {
+            rule: Rule::LockOrder,
+            file,
+            line,
+            message: format!(
+                "lock-order cycle: {path} (closing edge via `{via}`) — two threads \
+                 interleaving these acquisitions deadlock"
+            ),
+            justified: None,
+        });
+    }
+
+    (all_sites, edges)
+}
+
+/// Recognize an acquisition at code index `ci`; returns its site record.
+fn acquisition_at(
+    ft: &FileTokens,
+    ci: usize,
+    f: &FnBody,
+    declared: &BTreeMap<String, (String, u32, &'static str)>,
+) -> Option<Site> {
+    let t = ft.ct(ci);
+    if t.kind != Kind::Ident || ft.in_test(t.line) {
+        return None;
+    }
+    match t.text.as_str() {
+        "lock" | "try_lock" | "read" | "write" => {
+            if ci == 0 || ft.ctext(ci - 1) != "." || ft.ctext(ci + 1) != "(" {
+                return None;
+            }
+            let (class, chain_start) = resolve_receiver(ft, ci - 1, f, declared)?;
+            // `.read()`/`.write()` are lock ops only on a declared RwLock
+            // (otherwise they're io calls and no class will match).
+            if (t.text == "read" || t.text == "write")
+                && declared.get(&class).map(|d| d.2) != Some("RwLock")
+            {
+                return None;
+            }
+            let close = ft.match_paren_fwd(ci + 1)?;
+            let (shape, expr_end) = if t.text == "try_lock" {
+                (Shape::TryLock, close)
+            } else {
+                classify_shape(ft, close)
+            };
+            Some(Site { ci, class, shape, expr_end, chain_start, line: t.line })
+        }
+        "lock_clean" => {
+            if ft.ctext(ci + 1) != "(" || (ci > 0 && ft.ctext(ci - 1) == ".") {
+                return None;
+            }
+            // Skip the declaration itself (`fn lock_clean…`) and imports.
+            if ci > 0 && (ft.ctext(ci - 1) == "fn" || ft.ctext(ci - 1) == "::") {
+                return None;
+            }
+            let close = ft.match_paren_fwd(ci + 1)?;
+            // Class = last field ident of the argument chain, skipping a
+            // trailing index group: `lock_clean(&shared.warm[si])` → warm.
+            let mut k = close as i64 - 1;
+            if k >= 0 && ft.ctext(k as usize) == "]" {
+                let open = ft.match_bracket_back(k as usize)?;
+                k = open as i64 - 1;
+            }
+            if k < 0 || ft.ct(k as usize).kind != Kind::Ident {
+                return None;
+            }
+            let class = ft.ct(k as usize).text.clone();
+            Some(Site {
+                ci,
+                class,
+                shape: Shape::LockClean,
+                expr_end: close,
+                chain_start: ci,
+                line: t.line,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Resolve the receiver chain before the `.` at `dot_ci` to a lock class:
+/// the nearest field ident (`shared.queues.lock` → `queues`), skipping a
+/// trailing index group (`shards[si].lock` → `shards`). Falls back to the
+/// enclosing statement when the nearest ident is an opaque local (closure
+/// parameter): if exactly one declared class appears in the statement,
+/// that's the class.
+fn resolve_receiver(
+    ft: &FileTokens,
+    dot_ci: usize,
+    f: &FnBody,
+    declared: &BTreeMap<String, (String, u32, &'static str)>,
+) -> Option<(String, usize)> {
+    let mut p = dot_ci as i64 - 1;
+    if p >= 0 && ft.ctext(p as usize) == "]" {
+        let open = ft.match_bracket_back(p as usize)?;
+        p = open as i64 - 1;
+    }
+    if p < 0 || ft.ct(p as usize).kind != Kind::Ident {
+        return None;
+    }
+    let cand = ft.ct(p as usize).text.clone();
+    // Chain start: walk further back over `a.b.c` / index groups / `&`.
+    let mut start = p as usize;
+    let mut q = p - 1;
+    while q >= 1 {
+        let txt = ft.ctext(q as usize);
+        if txt == "." && ft.ct(q as usize - 1).kind == Kind::Ident {
+            start = q as usize - 1;
+            q -= 2;
+        } else if txt == "]" {
+            match ft.match_bracket_back(q as usize) {
+                Some(open) if open >= 1 => {
+                    q = open as i64 - 1;
+                }
+                _ => break,
+            }
+        } else if txt == "&" {
+            start = q as usize;
+            break;
+        } else {
+            break;
+        }
+    }
+    if declared.contains_key(&cand) {
+        return Some((cand, start));
+    }
+    // Statement fallback for opaque locals: `|s| s.lock()…` inside an
+    // iterator chain over a declared class.
+    let mut lo = dot_ci;
+    while lo > f.open {
+        let t = ft.ctext(lo - 1);
+        if t == ";" || t == "{" || t == "}" {
+            break;
+        }
+        lo -= 1;
+    }
+    let mut hi = dot_ci;
+    while hi < f.close {
+        let t = ft.ctext(hi);
+        if t == ";" || t == "}" {
+            break;
+        }
+        hi += 1;
+    }
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for k in lo..hi {
+        let t = ft.ct(k);
+        if t.kind == Kind::Ident && declared.contains_key(&t.text) {
+            seen.insert(t.text.as_str());
+        }
+    }
+    if seen.len() == 1 {
+        let class = seen.iter().next().map(|s| s.to_string())?;
+        return Some((class, start));
+    }
+    Some((cand, start))
+}
+
+/// Classify the poison-handling shape following `lock()`'s close paren.
+/// Returns the shape and the code index of the shape's last token.
+fn classify_shape(ft: &FileTokens, close: usize) -> (Shape, usize) {
+    if ft.ctext(close + 1) != "." {
+        return (Shape::Raw, close);
+    }
+    let m = close + 2;
+    match ft.ctext(m) {
+        "unwrap" if ft.ctext(m + 1) == "(" => {
+            let end = ft.match_paren_fwd(m + 1).unwrap_or(m + 1);
+            (Shape::Unwrap, end)
+        }
+        "expect" if ft.ctext(m + 1) == "(" => {
+            let end = ft.match_paren_fwd(m + 1).unwrap_or(m + 1);
+            (Shape::Expect, end)
+        }
+        "unwrap_or_else" if ft.ctext(m + 1) == "(" => {
+            let end = ft.match_paren_fwd(m + 1).unwrap_or(m + 1);
+            let recovers = (m + 1..end).any(|k| ft.ctext(k) == "into_inner");
+            (if recovers { Shape::Recover } else { Shape::Raw }, end)
+        }
+        "map" if ft.ctext(m + 1) == "(" => {
+            // `.map(..).unwrap_or(..)` / `.map_or(..)`-style tolerant reads.
+            let map_end = ft.match_paren_fwd(m + 1).unwrap_or(m + 1);
+            if ft.ctext(map_end + 1) == "."
+                && (ft.ctext(map_end + 2).starts_with("unwrap_or")
+                    || ft.ctext(map_end + 2) == "ok")
+            {
+                let end = ft
+                    .match_paren_fwd(map_end + 3)
+                    .unwrap_or(map_end + 2);
+                (Shape::Tolerant, end)
+            } else {
+                (Shape::Raw, map_end)
+            }
+        }
+        "ok" | "unwrap_or" | "unwrap_or_default" | "map_or" if ft.ctext(m + 1) == "(" => {
+            let end = ft.match_paren_fwd(m + 1).unwrap_or(m + 1);
+            (Shape::Tolerant, end)
+        }
+        _ => (Shape::Raw, close),
+    }
+}
+
+/// Policy compliance per site.
+fn check_policy(ft: &FileTokens, s: &Site, policy: LockPolicy, findings: &mut Vec<Finding>) {
+    let violation = match (policy, s.shape) {
+        (_, Shape::TryLock) => None,
+        (LockPolicy::FailLoud, Shape::Unwrap | Shape::Expect) => None,
+        (LockPolicy::FailLoud, Shape::Recover | Shape::LockClean | Shape::Tolerant) => {
+            Some(format!(
+                "fail-loud lock class `{}` must propagate poison \
+                 (`.lock().unwrap()`), found a recover shape — a dead peer's \
+                 state would be silently reused",
+                s.class
+            ))
+        }
+        (LockPolicy::Recover, Shape::Recover | Shape::LockClean | Shape::Tolerant) => None,
+        (LockPolicy::Recover, Shape::Unwrap | Shape::Expect) => Some(format!(
+            "recover lock class `{}` must tolerate poison \
+             (`unwrap_or_else(|p| p.into_inner())` or `lock_clean`) — a recovered \
+             engine panic must not poison this state for every later request",
+            s.class
+        )),
+        (_, Shape::Raw) => Some(format!(
+            "unrecognized poison handling on lock class `{}` — use the \
+             registered fail-loud or recover shape",
+            s.class
+        )),
+    };
+    if let Some(message) = violation {
+        findings.push(Finding {
+            rule: Rule::PoisonPolicy,
+            file: ft.name.clone(),
+            line: s.line,
+            message,
+            justified: None,
+        });
+    }
+}
+
+/// A site is a held guard when it is the entire initializer of a plain
+/// `let` binding: `let [mut] name = <acquisition chain> ;`. Returns the
+/// code index of the enclosing block's close brace (the extent end).
+fn guard_extent(ft: &FileTokens, s: &Site, f: &FnBody) -> Option<usize> {
+    if !matches!(
+        s.shape,
+        Shape::Unwrap | Shape::Expect | Shape::Recover | Shape::LockClean
+    ) {
+        return None;
+    }
+    if ft.ctext(s.expr_end + 1) != ";" {
+        return None;
+    }
+    // `let [mut] name =` directly before the chain.
+    let mut p = s.chain_start as i64 - 1;
+    if p < 0 || ft.ctext(p as usize) != "=" {
+        return None;
+    }
+    p -= 1;
+    if p < 0 || ft.ct(p as usize).kind != Kind::Ident {
+        return None;
+    }
+    p -= 1;
+    if p >= 0 && ft.ctext(p as usize) == "mut" {
+        p -= 1;
+    }
+    if p < 0 || ft.ctext(p as usize) != "let" {
+        return None;
+    }
+    // Extent: walk forward to the close of the innermost enclosing block.
+    let mut depth = 0i64;
+    let mut ci = s.expr_end + 1;
+    while ci < f.close {
+        match ft.ctext(ci) {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth < 0 {
+                    return Some(ci);
+                }
+            }
+            _ => {}
+        }
+        ci += 1;
+    }
+    Some(f.close)
+}
+
+/// Bare crate-function call at `ci`: `ident(` with no leading `.`/`::`
+/// (method and qualified calls are excluded — see module docs) where the
+/// ident names a crate `fn`.
+fn bare_call_at(ft: &FileTokens, ci: usize, fn_names: &BTreeSet<String>) -> Option<String> {
+    let t = ft.ct(ci);
+    if t.kind != Kind::Ident || ft.ctext(ci + 1) != "(" {
+        return None;
+    }
+    if ci > 0 {
+        let prev = ft.ctext(ci - 1);
+        if prev == "." || prev == "::" || prev == "fn" {
+            return None;
+        }
+    }
+    if KEYWORDS.contains(&t.text.as_str()) || !fn_names.contains(&t.text) {
+        return None;
+    }
+    Some(t.text.clone())
+}
+
+/// All non-test function bodies across the files.
+fn collect_fns(files: &[FileTokens]) -> Vec<FnBody> {
+    let mut out = Vec::new();
+    for (fi, ft) in files.iter().enumerate() {
+        let n = ft.code.len();
+        for ci in 0..n {
+            if ft.ctext(ci) != "fn" || ft.ct(ci).kind != Kind::Ident {
+                continue;
+            }
+            if ft.in_test(ft.ct(ci).line) {
+                continue;
+            }
+            if ci + 1 >= n {
+                continue;
+            }
+            // `fn(usize) -> T` pointer types have no name ident.
+            if ft.ct(ci + 1).kind != Kind::Ident {
+                continue;
+            }
+            let name = ft.ctext(ci + 1).to_string();
+            // Param list: first `(` outside the generic brackets.
+            let mut j = ci + 2;
+            let mut angle = 0i64;
+            let mut params_open: Option<usize> = None;
+            while j < n {
+                match ft.ctext(j) {
+                    "<" => angle += 1,
+                    ">" => angle -= 1,
+                    ">>" => angle -= 2,
+                    "(" if angle <= 0 => {
+                        params_open = Some(j);
+                        break;
+                    }
+                    "{" | ";" => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let Some(po) = params_open else { continue };
+            let Some(pc) = ft.match_paren_fwd(po) else { continue };
+            // Body: first `{` before any `;` (trait method decls have none).
+            let mut k = pc + 1;
+            let mut open = None;
+            while k < n {
+                match ft.ctext(k) {
+                    "{" => {
+                        open = Some(k);
+                        break;
+                    }
+                    ";" => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let Some(open) = open else { continue };
+            let Some(&close) = ft.brace_match.get(&open) else { continue };
+            out.push(FnBody { name, file: fi, open, close });
+        }
+    }
+    out
+}
+
+/// Parameter-list spans of every `fn` in the file (used to skip
+/// `m: &Mutex<T>` parameters during class discovery).
+fn param_ranges(ft: &FileTokens) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let n = ft.code.len();
+    for ci in 0..n {
+        if ft.ctext(ci) != "fn" || ft.ct(ci).kind != Kind::Ident {
+            continue;
+        }
+        let mut j = ci + 1;
+        let mut angle = 0i64;
+        while j < n {
+            match ft.ctext(j) {
+                "<" => angle += 1,
+                ">" => angle -= 1,
+                ">>" => angle -= 2,
+                "(" if angle <= 0 => {
+                    if let Some(close) = ft.match_paren_fwd(j) {
+                        out.push((j, close));
+                    }
+                    break;
+                }
+                "{" | ";" => break,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// First cycle in the class digraph (DFS coloring), as the node path
+/// `[a, b, …, a]`.
+fn find_cycle<'a>(adj: &BTreeMap<&'a str, BTreeSet<&'a str>>) -> Option<Vec<String>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    let mut color: BTreeMap<&str, Color> = BTreeMap::new();
+    for e in adj.values().flatten() {
+        color.insert(e, Color::White);
+    }
+    for n in &nodes {
+        color.insert(n, Color::White);
+    }
+    fn dfs<'a>(
+        node: &'a str,
+        adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        color: &mut BTreeMap<&'a str, Color>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(node, Color::Gray);
+        stack.push(node);
+        if let Some(nexts) = adj.get(node) {
+            for &next in nexts {
+                match color.get(next).copied().unwrap_or(Color::White) {
+                    Color::Gray => {
+                        // Cycle: slice the stack from `next` onward.
+                        let start = stack.iter().position(|&s| s == next).unwrap_or(0);
+                        let mut path: Vec<String> =
+                            stack[start..].iter().map(|s| s.to_string()).collect();
+                        path.push(next.to_string());
+                        return Some(path);
+                    }
+                    Color::White => {
+                        if let Some(c) = dfs(next, adj, color, stack) {
+                            return Some(c);
+                        }
+                    }
+                    Color::Black => {}
+                }
+            }
+        }
+        stack.pop();
+        color.insert(node, Color::Black);
+        None
+    }
+    for n in nodes {
+        if color.get(n).copied().unwrap_or(Color::White) == Color::White {
+            let mut stack = Vec::new();
+            if let Some(c) = dfs(n, adj, &mut color, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}

@@ -1,0 +1,819 @@
+//! In-tree static analyzer (`lkgp lint`): the crate's concurrency,
+//! unsafety, panic, float, and observability invariants enforced as
+//! machine-checked rules over its own sources.
+//!
+//! Seven PRs of guarantees — bit-identical parity under every thread
+//! count, a typed-error serving surface with a deliberate mutex-poison
+//! policy, replica answers never stale — were previously enforced by
+//! convention and reviewer memory. This module re-derives them on every
+//! `cargo test` / `./ci.sh` run instead:
+//!
+//! 1. **lock discipline** (`lock_order` / `lock_class` / `poison_policy`)
+//!    — every `Mutex` acquisition site is classified against a registered
+//!    lock class, an intra-function + call-edge acquisition-order graph
+//!    is built, cycles fail the build, and each class's poison policy
+//!    (fail-loud `.unwrap()` vs recover `into_inner()`) is checked at
+//!    every site. See [`locks`].
+//! 2. **unsafe audit** (`unsafe_safety`) — every `unsafe` occurrence
+//!    needs an adjacent `// SAFETY:` comment; the full inventory lands in
+//!    `ANALYSIS.json`.
+//! 3. **panic discipline** (`panic`) — no `unwrap()` / `expect()` /
+//!    `panic!`-family macros in the serving hot path outside
+//!    `#[cfg(test)]`. Lock/condvar poison unwraps are exempt here (the
+//!    poison-policy rule owns them — a fail-loud queue lock *must*
+//!    unwrap).
+//! 4. **float discipline** (`float_eq` / `float_cmp`) — no `==`/`!=`
+//!    against float literals and no NaN-unsafe `partial_cmp().unwrap()`
+//!    outside approved parity modules; exact comparisons go through
+//!    `.to_bits()`, orderings through `total_cmp`.
+//! 5. **drift lints** (`stats_drift` / `bench_gate`) — every
+//!    `ServiceStats` counter must be printed or serialized somewhere in
+//!    non-test code, and every `BENCH_*.json` a bench emits must have a
+//!    ci.sh gate.
+//!
+//! Surviving sites carry an inline pragma — `// lint: allow(<rule>) —
+//! <reason>` on the offending line or the line above — and every pragma
+//! is inventoried in `ANALYSIS.json` with its justification. The same
+//! analyzer runs as the `lkgp lint` subcommand and as
+//! `tests/lint.rs` under plain `cargo test`, so the tier-1 gate carries
+//! it even where `cargo bench` is skipped. See `docs/static_analysis.md`
+//! for the rule catalog.
+
+pub mod tokenizer;
+
+mod drift;
+mod locks;
+mod rules;
+
+use crate::json::Json;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
+use tokenizer::{tokenize, Kind, Token};
+
+/// How a lock class must handle a poisoned mutex (docs/robustness.md).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LockPolicy {
+    /// Poison means a peer worker died mid-protocol: propagate the panic
+    /// (`.lock().unwrap()` / `.expect(..)`). Queue and handshake locks.
+    FailLoud,
+    /// Poison must not take the shard down: reclaim the inner state
+    /// (`unwrap_or_else(|p| p.into_inner())`, `lock_clean`, or another
+    /// poison-tolerant shape). Cache and telemetry locks.
+    Recover,
+}
+
+/// Analyzer configuration: the lock-class policy table plus the scopes
+/// the panic/float/drift rules apply to. [`AnalysisConfig::crate_default`]
+/// is the shipped tree's contract; fixtures build their own.
+#[derive(Clone)]
+pub struct AnalysisConfig {
+    /// Registered lock classes (field / binding names of `Mutex`es) and
+    /// their poison policy. A declared `Mutex` whose name is missing here
+    /// is a `lock_class` finding — new locks must be classified.
+    pub lock_policies: Vec<(String, LockPolicy)>,
+    /// Hot-path scopes for the panic rule (substring match on the
+    /// src-relative file name; `"linalg/"` covers the directory).
+    pub hot_paths: Vec<String>,
+    /// Modules exempt from the float rule (parity/test-support code that
+    /// legitimately compares exact float values).
+    pub float_exempt: Vec<String>,
+    /// Name of the stats struct whose counters must all be observable.
+    pub stats_struct: String,
+}
+
+impl AnalysisConfig {
+    /// The shipped tree's invariants. The policy table is the
+    /// authoritative registry: adding a `Mutex` to the crate without
+    /// adding its class here fails `lkgp lint`.
+    pub fn crate_default() -> Self {
+        use LockPolicy::{FailLoud, Recover};
+        let policies: &[(&str, LockPolicy)] = &[
+            // Fail-loud: poison means a worker died mid-handshake; waiters
+            // would otherwise hang forever on state no one will repair.
+            ("queues", FailLoud),   // coordinator/service.rs pool queues
+            ("slot", FailLoud),     // util/team.rs job hand-off slot
+            ("done", FailLoud),     // util/team.rs completion latch
+            ("submit", FailLoud),   // util/team.rs leader election
+            ("rec", FailLoud),      // coordinator/trace.rs recorder (a torn trace must not pass)
+            ("recorder", FailLoud), // coordinator/mod.rs recorder binding
+            ("partials", FailLoud), // linalg/lanczos.rs scoped-thread partial sums
+            // Recover: worst case a stale cache entry or a lost histogram
+            // sample, which every consumer tolerates; a recovered engine
+            // panic must not poison the shard for all later requests.
+            ("warm", Recover),     // warm-start lineage LRU
+            ("latency", Recover),  // latency histograms
+            ("breakers", Recover), // circuit breakers
+            ("shards", Recover),   // engine slots (guarded by the busy flag)
+            ("cache", Recover),    // lcbench task cache
+            ("digests", Recover),  // lcbench fingerprint digests
+            ("rng", Recover),      // chaos fault-plan RNG
+        ];
+        AnalysisConfig {
+            lock_policies: policies
+                .iter()
+                .map(|(n, p)| (n.to_string(), *p))
+                .collect(),
+            hot_paths: vec![
+                "coordinator/service.rs".into(),
+                "gp/session.rs".into(),
+                "linalg/".into(),
+            ],
+            float_exempt: vec!["testutil/".into()],
+            stats_struct: "ServiceStats".into(),
+        }
+    }
+
+    pub(crate) fn policy_of(&self, class: &str) -> Option<LockPolicy> {
+        self.lock_policies
+            .iter()
+            .find(|(n, _)| n == class)
+            .map(|(_, p)| *p)
+    }
+}
+
+/// Rule families. `name()` is the pragma identifier.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    LockOrder,
+    LockClass,
+    PoisonPolicy,
+    UnsafeSafety,
+    Panic,
+    FloatEq,
+    FloatCmp,
+    StatsDrift,
+    BenchGate,
+    /// Malformed `// lint:` pragma (unknown rule, missing reason).
+    Pragma,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::LockOrder => "lock_order",
+            Rule::LockClass => "lock_class",
+            Rule::PoisonPolicy => "poison_policy",
+            Rule::UnsafeSafety => "unsafe_safety",
+            Rule::Panic => "panic",
+            Rule::FloatEq => "float_eq",
+            Rule::FloatCmp => "float_cmp",
+            Rule::StatsDrift => "stats_drift",
+            Rule::BenchGate => "bench_gate",
+            Rule::Pragma => "pragma",
+        }
+    }
+}
+
+/// One rule violation. `justified` carries the pragma reason when an
+/// inline `// lint: allow(...)` covers the site; unjustified findings
+/// fail the lint gate.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    pub justified: Option<String>,
+}
+
+/// Inventory entry for one `unsafe` occurrence.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: u32,
+    /// `block` / `fn` / `impl` / `extern`.
+    pub kind: String,
+    /// The adjacent `// SAFETY:` text, when present.
+    pub safety: Option<String>,
+    pub in_test: bool,
+}
+
+/// One parsed `// lint: allow(<rule>) — <reason>` pragma.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+    /// The code line the pragma covers (its own line when it trails code,
+    /// else the next code line below it).
+    pub target_line: u32,
+}
+
+/// One classified lock acquisition site.
+#[derive(Clone, Debug)]
+pub struct LockSite {
+    pub file: String,
+    pub line: u32,
+    pub class: String,
+    /// Poison-handling shape observed: `unwrap`, `expect`, `recover`,
+    /// `tolerant`, `lock_clean`, `try_lock`, or `raw`.
+    pub shape: String,
+    /// True when the guard is `let`-bound and held to end of block (the
+    /// extent used for ordering edges).
+    pub held: bool,
+}
+
+/// One acquisition-order edge: `from` was held while `to` was acquired
+/// (`via` names the called function for call-graph edges, or `direct`).
+#[derive(Clone, Debug)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: u32,
+    pub via: String,
+}
+
+/// Full analysis result: findings plus the machine-readable inventories
+/// serialized to `ANALYSIS.json`.
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub pragmas: Vec<Pragma>,
+    pub lock_sites: Vec<LockSite>,
+    pub lock_edges: Vec<LockEdge>,
+    pub files_scanned: usize,
+}
+
+impl Analysis {
+    /// Findings not covered by an inline pragma — these fail the gate.
+    pub fn unjustified(&self) -> Vec<&Finding> {
+        self.findings
+            .iter()
+            .filter(|f| f.justified.is_none())
+            .collect()
+    }
+
+    /// Serialize the full inventory (docs/static_analysis.md documents
+    /// the schema).
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("rule", Json::Str(f.rule.name().into())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                    (
+                        "justified",
+                        match &f.justified {
+                            Some(r) => Json::Str(r.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let unsafes = self
+            .unsafe_sites
+            .iter()
+            .map(|u| {
+                Json::obj(vec![
+                    ("file", Json::Str(u.file.clone())),
+                    ("line", Json::Num(u.line as f64)),
+                    ("kind", Json::Str(u.kind.clone())),
+                    (
+                        "safety",
+                        match &u.safety {
+                            Some(s) => Json::Str(s.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("in_test", Json::Bool(u.in_test)),
+                ])
+            })
+            .collect();
+        let pragmas = self
+            .pragmas
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("file", Json::Str(p.file.clone())),
+                    ("line", Json::Num(p.line as f64)),
+                    ("rule", Json::Str(p.rule.clone())),
+                    ("reason", Json::Str(p.reason.clone())),
+                ])
+            })
+            .collect();
+        let sites = self
+            .lock_sites
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("file", Json::Str(s.file.clone())),
+                    ("line", Json::Num(s.line as f64)),
+                    ("class", Json::Str(s.class.clone())),
+                    ("shape", Json::Str(s.shape.clone())),
+                    ("held", Json::Bool(s.held)),
+                ])
+            })
+            .collect();
+        let edges = self
+            .lock_edges
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("from", Json::Str(e.from.clone())),
+                    ("to", Json::Str(e.to.clone())),
+                    ("file", Json::Str(e.file.clone())),
+                    ("line", Json::Num(e.line as f64)),
+                    ("via", Json::Str(e.via.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("analysis", Json::Str("lkgp.lint".into())),
+            ("version", Json::Num(1.0)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "unjustified_findings",
+                Json::Num(self.unjustified().len() as f64),
+            ),
+            ("findings", Json::Arr(findings)),
+            ("unsafe_sites", Json::Arr(unsafes)),
+            ("pragmas", Json::Arr(pragmas)),
+            ("lock_sites", Json::Arr(sites)),
+            ("lock_edges", Json::Arr(edges)),
+        ])
+    }
+}
+
+/// One source file handed to the analyzer (name is src-relative, with
+/// forward slashes: `coordinator/service.rs`).
+pub struct SourceFile {
+    pub name: String,
+    pub text: String,
+}
+
+/// Everything the rules scan: crate sources, bench sources (for the
+/// bench-gate drift rule), and the ci.sh script text.
+pub struct AnalysisInput {
+    pub src: Vec<SourceFile>,
+    pub benches: Vec<SourceFile>,
+    pub ci_script: Option<String>,
+}
+
+impl AnalysisInput {
+    /// Load from a crate root (the directory holding `src/`): walks
+    /// `src/**/*.rs` and `benches/*.rs`, and reads `../ci.sh` when
+    /// present (the repo layout used by `lkgp lint` and `tests/lint.rs`).
+    pub fn load(crate_root: &Path) -> crate::Result<Self> {
+        let src_dir = crate_root.join("src");
+        let mut src = Vec::new();
+        walk_rs(&src_dir, &src_dir, &mut src)?;
+        let mut benches = Vec::new();
+        let bench_dir = crate_root.join("benches");
+        if bench_dir.is_dir() {
+            walk_rs(&bench_dir, &bench_dir, &mut benches)?;
+        }
+        let ci_script = crate_root
+            .parent()
+            .map(|p| p.join("ci.sh"))
+            .and_then(|p| std::fs::read_to_string(p).ok());
+        Ok(AnalysisInput { src, benches, ci_script })
+    }
+}
+
+fn walk_rs(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> crate::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = std::fs::read_to_string(&path)?;
+            out.push(SourceFile { name: rel, text });
+        }
+    }
+    Ok(())
+}
+
+/// Tokenized file plus the structural indexes the rules share: the
+/// code-token view, brace matching, `#[cfg(test)]` line ranges, and
+/// parsed pragmas.
+pub(crate) struct FileTokens {
+    pub name: String,
+    pub toks: Vec<Token>,
+    /// Indices into `toks` of non-comment tokens.
+    pub code: Vec<usize>,
+    /// `{` position -> matching `}` position, both in `code` coordinates.
+    pub brace_match: HashMap<usize, usize>,
+    /// Inclusive line ranges under `#[cfg(test)]` / `#[test]` items.
+    pub test_ranges: Vec<(u32, u32)>,
+    pub pragmas: Vec<Pragma>,
+}
+
+impl FileTokens {
+    /// Code token at code-coordinate `ci`.
+    pub fn ct(&self, ci: usize) -> &Token {
+        &self.toks[self.code[ci]]
+    }
+
+    /// Code token text at `ci`, or `""` past the end.
+    pub fn ctext(&self, ci: usize) -> &str {
+        if ci < self.code.len() {
+            &self.toks[self.code[ci]].text
+        } else {
+            ""
+        }
+    }
+
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges
+            .iter()
+            .any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// Matching `)` for the `(` at code-coordinate `open_ci`.
+    pub fn match_paren_fwd(&self, open_ci: usize) -> Option<usize> {
+        let mut depth = 0i64;
+        for ci in open_ci..self.code.len() {
+            match self.ctext(ci) {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(ci);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Matching `(` for the `)` at code-coordinate `close_ci`.
+    pub fn match_paren_back(&self, close_ci: usize) -> Option<usize> {
+        let mut depth = 0i64;
+        let mut ci = close_ci as i64;
+        while ci >= 0 {
+            match self.ctext(ci as usize) {
+                ")" => depth += 1,
+                "(" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(ci as usize);
+                    }
+                }
+                _ => {}
+            }
+            ci -= 1;
+        }
+        None
+    }
+
+    /// Matching `[` for the `]` at code-coordinate `close_ci`.
+    pub fn match_bracket_back(&self, close_ci: usize) -> Option<usize> {
+        let mut depth = 0i64;
+        let mut ci = close_ci as i64;
+        while ci >= 0 {
+            match self.ctext(ci as usize) {
+                "]" => depth += 1,
+                "[" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(ci as usize);
+                    }
+                }
+                _ => {}
+            }
+            ci -= 1;
+        }
+        None
+    }
+
+    pub(crate) fn build(name: &str, text: &str) -> (FileTokens, Vec<Finding>) {
+        let toks = tokenize(text);
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind != Kind::Comment)
+            .map(|(i, _)| i)
+            .collect();
+        let mut ft = FileTokens {
+            name: name.to_string(),
+            toks,
+            code,
+            brace_match: HashMap::new(),
+            test_ranges: Vec::new(),
+            pragmas: Vec::new(),
+        };
+        // Brace matching over the code view (string/char tokens can't
+        // confuse it — the tokenizer already swallowed their contents).
+        let mut stack: Vec<usize> = Vec::new();
+        for ci in 0..ft.code.len() {
+            match ft.ctext(ci) {
+                "{" => stack.push(ci),
+                "}" => {
+                    if let Some(open) = stack.pop() {
+                        ft.brace_match.insert(open, ci);
+                    }
+                }
+                _ => {}
+            }
+        }
+        ft.find_test_ranges();
+        let findings = ft.parse_pragmas();
+        (ft, findings)
+    }
+
+    /// Mark `#[cfg(test)] mod … { … }` / `#[test] fn … { … }` line
+    /// ranges. The attribute's following brace group is the region; a
+    /// `test` identifier anywhere inside the attribute counts (covers
+    /// `cfg(test)` and `cfg(all(test, …))`).
+    fn find_test_ranges(&mut self) {
+        let n = self.code.len();
+        let mut ranges = Vec::new();
+        let mut ci = 0usize;
+        while ci + 1 < n {
+            if self.ctext(ci) == "#" && self.ctext(ci + 1) == "[" {
+                let mut j = ci + 2;
+                let mut depth = 1usize;
+                let mut is_test = false;
+                while j < n && depth > 0 {
+                    match self.ctext(j) {
+                        "[" => depth += 1,
+                        "]" => depth -= 1,
+                        "test" => is_test = true,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if is_test {
+                    // First `{` or `;` after the attribute opens the item.
+                    let mut k = j;
+                    while k < n && self.ctext(k) != "{" && self.ctext(k) != ";" {
+                        k += 1;
+                    }
+                    if k < n && self.ctext(k) == "{" {
+                        if let Some(&close) = self.brace_match.get(&k) {
+                            ranges.push((self.ct(ci).line, self.ct(close).line));
+                            ci = j;
+                            continue;
+                        }
+                    }
+                }
+                ci = j;
+                continue;
+            }
+            ci += 1;
+        }
+        self.test_ranges = ranges;
+    }
+
+    /// Parse `// lint: allow(<rule>) — <reason>` pragmas out of comment
+    /// tokens. Only comments that *begin* with `lint:` (after the
+    /// comment markers) count — prose that merely mentions the pragma
+    /// syntax, like this doc comment, is not a pragma. Malformed pragmas
+    /// (unknown rule / missing reason) are findings — a justification
+    /// that doesn't parse must not silently stop justifying.
+    fn parse_pragmas(&mut self) -> Vec<Finding> {
+        const KNOWN: &[&str] = &[
+            "lock_order",
+            "lock_class",
+            "poison_policy",
+            "unsafe_safety",
+            "panic",
+            "float_eq",
+            "float_cmp",
+            "stats_drift",
+            "bench_gate",
+        ];
+        let mut findings = Vec::new();
+        let mut pragmas = Vec::new();
+        // For reason wrapping: stripped comment text per line, and the set
+        // of lines holding code (a wrapped reason stops at either).
+        let mut comment_body: BTreeMap<u32, String> = BTreeMap::new();
+        for t in &self.toks {
+            if t.kind == Kind::Comment {
+                let body = t
+                    .text
+                    .trim_start_matches('/')
+                    .trim_start_matches(['!', '*'])
+                    .trim_start();
+                comment_body.entry(t.line).or_default().push_str(body);
+            }
+        }
+        let code_lines: BTreeSet<u32> =
+            self.code.iter().map(|&i| self.toks[i].line).collect();
+        for t in &self.toks {
+            if t.kind != Kind::Comment {
+                continue;
+            }
+            let body = t
+                .text
+                .trim_start_matches('/')
+                .trim_start_matches(['!', '*'])
+                .trim_start();
+            let Some(rest) = body.strip_prefix("lint:") else { continue };
+            let rest = rest.trim_start();
+            let Some(rest) = rest.strip_prefix("allow(") else {
+                findings.push(Finding {
+                    rule: Rule::Pragma,
+                    file: self.name.clone(),
+                    line: t.line,
+                    message: "malformed lint pragma: expected `lint: allow(<rule>) — <reason>`"
+                        .into(),
+                    justified: None,
+                });
+                continue;
+            };
+            let Some(close) = rest.find(')') else {
+                findings.push(Finding {
+                    rule: Rule::Pragma,
+                    file: self.name.clone(),
+                    line: t.line,
+                    message: "malformed lint pragma: unclosed allow(...)".into(),
+                    justified: None,
+                });
+                continue;
+            };
+            let rule = rest[..close].trim().to_string();
+            if !KNOWN.contains(&rule.as_str()) {
+                findings.push(Finding {
+                    rule: Rule::Pragma,
+                    file: self.name.clone(),
+                    line: t.line,
+                    message: format!("lint pragma names unknown rule `{rule}`"),
+                    justified: None,
+                });
+                continue;
+            }
+            let reason = rest[close + 1..]
+                .trim_start()
+                .trim_start_matches(['—', '-', ':'])
+                .trim()
+                .to_string();
+            if reason.is_empty() {
+                findings.push(Finding {
+                    rule: Rule::Pragma,
+                    file: self.name.clone(),
+                    line: t.line,
+                    message: format!(
+                        "lint pragma for `{rule}` is missing a reason (allow(..) — <why>)"
+                    ),
+                    justified: None,
+                });
+                continue;
+            }
+            // An own-line pragma's reason may wrap onto the contiguous
+            // comment lines below it; stop at code, an empty comment, or
+            // another pragma. Trailing pragmas never wrap (the next line's
+            // comment belongs to the next statement).
+            let mut reason = reason;
+            if !code_lines.contains(&t.line) {
+                let mut l = t.line + 1;
+                while !code_lines.contains(&l) {
+                    let Some(next) = comment_body.get(&l) else { break };
+                    let next = next.trim();
+                    if next.is_empty() || next.starts_with("lint:") {
+                        break;
+                    }
+                    reason.push(' ');
+                    reason.push_str(next);
+                    l += 1;
+                }
+            }
+            pragmas.push(Pragma {
+                file: self.name.clone(),
+                line: t.line,
+                rule,
+                reason,
+                target_line: 0,
+            });
+        }
+        // Resolve each pragma's target: its own line when code shares the
+        // line (trailing pragma), else the next code line below.
+        for p in &mut pragmas {
+            let mut target = p.line;
+            let mut next_code: Option<u32> = None;
+            let mut same_line = false;
+            for &i in &self.code {
+                let l = self.toks[i].line;
+                if l == p.line {
+                    same_line = true;
+                    break;
+                }
+                if l > p.line {
+                    next_code = Some(l);
+                    break;
+                }
+            }
+            if !same_line {
+                if let Some(l) = next_code {
+                    target = l;
+                }
+            }
+            p.target_line = target;
+        }
+        self.pragmas = pragmas;
+        findings
+    }
+}
+
+/// Run every rule over the input. This is the single entry point shared
+/// by the CLI, the integration test, and the fixtures.
+pub fn analyze(input: &AnalysisInput, cfg: &AnalysisConfig) -> Analysis {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut files: Vec<FileTokens> = Vec::new();
+    for sf in &input.src {
+        let (ft, mut pf) = FileTokens::build(&sf.name, &sf.text);
+        findings.append(&mut pf);
+        files.push(ft);
+    }
+    let mut unsafe_sites = Vec::new();
+    rules::unsafe_audit(&files, &mut findings, &mut unsafe_sites);
+    rules::panic_discipline(&files, cfg, &mut findings);
+    rules::float_discipline(&files, cfg, &mut findings);
+    let (lock_sites, lock_edges) = locks::lock_discipline(&files, cfg, &mut findings);
+    drift::stats_drift(&files, cfg, &mut findings);
+    drift::bench_gate(input, &mut findings);
+    // Apply pragmas: a finding is justified when a same-rule pragma
+    // targets its line.
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    for ft in &files {
+        pragmas.extend(ft.pragmas.iter().cloned());
+    }
+    for f in &mut findings {
+        if let Some(p) = pragmas.iter().find(|p| {
+            p.file == f.file && p.rule == f.rule.name() && p.target_line == f.line
+        }) {
+            f.justified = Some(p.reason.clone());
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.name()).cmp(&(b.file.as_str(), b.line, b.rule.name()))
+    });
+    Analysis {
+        findings,
+        unsafe_sites,
+        pragmas,
+        lock_sites,
+        lock_edges,
+        files_scanned: files.len(),
+    }
+}
+
+/// Analyze a single in-memory source (the fixture entry point).
+pub fn analyze_source(name: &str, text: &str, cfg: &AnalysisConfig) -> Analysis {
+    let input = AnalysisInput {
+        src: vec![SourceFile { name: name.into(), text: text.into() }],
+        benches: Vec::new(),
+        ci_script: None,
+    };
+    analyze(&input, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mods() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let (ft, _) = FileTokens::build("a.rs", src);
+        assert!(!ft.in_test(1));
+        assert!(ft.in_test(4));
+    }
+
+    #[test]
+    fn pragma_targets_next_code_line() {
+        let src = "// lint: allow(panic) — justified here\nfoo.unwrap();\nbar.unwrap(); // lint: allow(panic) — trailing\n";
+        let (ft, findings) = FileTokens::build("a.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(ft.pragmas.len(), 2);
+        assert_eq!(ft.pragmas[0].target_line, 2);
+        assert_eq!(ft.pragmas[1].target_line, 3);
+        assert_eq!(ft.pragmas[0].reason, "justified here");
+    }
+
+    #[test]
+    fn pragma_reason_wraps_across_comment_lines() {
+        let src = "// lint: allow(panic) — first half\n// second half.\nfoo.unwrap();\n// unrelated comment\nbar();\n";
+        let (ft, findings) = FileTokens::build("a.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(ft.pragmas.len(), 1);
+        assert_eq!(ft.pragmas[0].reason, "first half second half.");
+        assert_eq!(ft.pragmas[0].target_line, 3);
+    }
+
+    #[test]
+    fn malformed_pragmas_are_findings() {
+        let src = "// lint: allow(no_such_rule) — x\n// lint: allow(panic)\n";
+        let (_, findings) = FileTokens::build("a.rs", src);
+        assert_eq!(findings.len(), 2);
+        assert!(findings.iter().all(|f| f.rule == Rule::Pragma));
+    }
+}

@@ -1,0 +1,276 @@
+//! The unsafe-audit, panic-discipline, and float-discipline rules.
+//!
+//! All three are local token-pattern rules; the lock rule (graph-based)
+//! lives in [`super::locks`] and the drift rules in [`super::drift`].
+
+use super::tokenizer::{is_float_literal, Kind};
+use super::{AnalysisConfig, FileTokens, Finding, Rule, UnsafeSite};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Rule `unsafe_safety`: every `unsafe` occurrence (block, fn, impl,
+/// extern) needs an adjacent `// SAFETY:` comment — trailing on the same
+/// line, or anywhere in the contiguous comment/attribute block directly
+/// above (so a multi-line argument with a `#[cfg(..)]` between it and the
+/// item still counts; a line of real code breaks the block). Test code is
+/// audited too: a test's aliasing argument is as load-bearing as
+/// production's. The full inventory is returned for `ANALYSIS.json`.
+pub(crate) fn unsafe_audit(
+    files: &[FileTokens],
+    findings: &mut Vec<Finding>,
+    sites: &mut Vec<UnsafeSite>,
+) {
+    for ft in files {
+        // Per-line view: comment text, and whether the line has real
+        // (non-attribute) code. `#[...]` tokens don't break a SAFETY
+        // block hanging above a `#[cfg(feature)] unsafe impl`.
+        let mut comment_text: BTreeMap<u32, String> = BTreeMap::new();
+        for t in &ft.toks {
+            if t.kind == Kind::Comment {
+                comment_text.entry(t.line).or_default().push_str(&t.text);
+            }
+        }
+        let mut attr_tok: Vec<bool> = vec![false; ft.code.len()];
+        let mut ci = 0usize;
+        while ci + 1 < ft.code.len() {
+            if ft.ctext(ci) == "#" && ft.ctext(ci + 1) == "[" {
+                attr_tok[ci] = true;
+                let mut depth = 0i64;
+                let mut j = ci + 1;
+                while j < ft.code.len() {
+                    attr_tok[j] = true;
+                    match ft.ctext(j) {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                ci = j + 1;
+            } else {
+                ci += 1;
+            }
+        }
+        let mut real_code_lines: BTreeSet<u32> = BTreeSet::new();
+        for (k, &is_attr) in attr_tok.iter().enumerate() {
+            if !is_attr {
+                real_code_lines.insert(ft.ct(k).line);
+            }
+        }
+
+        for ci in 0..ft.code.len() {
+            if ft.ctext(ci) != "unsafe" || ft.ct(ci).kind != Kind::Ident {
+                continue;
+            }
+            let line = ft.ct(ci).line;
+            let kind = match ft.ctext(ci + 1) {
+                "{" => "block",
+                "fn" => "fn",
+                "impl" => "impl",
+                "extern" => "extern",
+                _ => "other",
+            };
+            // Trailing comment on the site's own line, else the nearest
+            // SAFETY in the contiguous comment/attribute block above.
+            let mut safety = comment_text.get(&line).and_then(|c| safety_snippet(c));
+            if safety.is_none() {
+                let mut l = line.saturating_sub(1);
+                while l >= 1 && line - l <= 24 {
+                    if let Some(s) = comment_text.get(&l).and_then(|c| safety_snippet(c)) {
+                        safety = Some(s);
+                        break;
+                    }
+                    if real_code_lines.contains(&l) && line - l > 6 {
+                        // Within 6 lines, intervening code is tolerated
+                        // (the comment sits above a multi-line statement);
+                        // beyond that the block must be contiguous.
+                        break;
+                    }
+                    l -= 1;
+                }
+            }
+            if safety.is_none() {
+                findings.push(Finding {
+                    rule: Rule::UnsafeSafety,
+                    file: ft.name.clone(),
+                    line,
+                    message: format!(
+                        "`unsafe` {kind} without an adjacent `// SAFETY:` comment"
+                    ),
+                    justified: None,
+                });
+            }
+            sites.push(UnsafeSite {
+                file: ft.name.clone(),
+                line,
+                kind: kind.into(),
+                safety,
+                in_test: ft.in_test(line),
+            });
+        }
+    }
+}
+
+/// Extract the justification text after `SAFETY:` from a comment line,
+/// capped for the `ANALYSIS.json` inventory.
+fn safety_snippet(comment: &str) -> Option<String> {
+    let at = comment.find("SAFETY:")?;
+    Some(
+        comment[at + "SAFETY:".len()..]
+            .trim_start()
+            .trim_end_matches("*/")
+            .trim()
+            .chars()
+            .take(160)
+            .collect(),
+    )
+}
+
+/// Methods whose trailing `.unwrap()` / `.expect(..)` expresses the
+/// mutex-poison protocol, not a panic shortcut: the poison-policy rule
+/// owns those sites (a fail-loud queue lock *must* unwrap), so the panic
+/// rule exempts them instead of contradicting it.
+const POISON_METHODS: &[&str] = &["lock", "try_lock", "wait", "wait_timeout", "into_inner"];
+
+/// True when the `.` before an `unwrap`/`expect` at `dot_ci` closes a
+/// call to one of `POISON_METHODS` (e.g. `q.lock().unwrap()`,
+/// `cv.wait(g).unwrap()`, `m.into_inner().unwrap()`).
+fn poison_exempt(ft: &FileTokens, dot_ci: usize) -> bool {
+    if dot_ci == 0 || ft.ctext(dot_ci - 1) != ")" {
+        return false;
+    }
+    let Some(open) = ft.match_paren_back(dot_ci - 1) else {
+        return false;
+    };
+    open >= 1 && POISON_METHODS.contains(&ft.ctext(open - 1))
+}
+
+/// Rule `panic`: no `unwrap()` / `expect(..)` / `panic!`-family macros in
+/// the serving hot path outside `#[cfg(test)]`. `assert!` is deliberately
+/// out of scope (contract checks are policy), as are poison unwraps (see
+/// [`POISON_METHODS`]). Surviving sites carry `// lint: allow(panic)`
+/// pragmas with the fail-loud justification.
+pub(crate) fn panic_discipline(
+    files: &[FileTokens],
+    cfg: &AnalysisConfig,
+    findings: &mut Vec<Finding>,
+) {
+    const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    for ft in files {
+        if !cfg.hot_paths.iter().any(|h| ft.name.contains(h.as_str())) {
+            continue;
+        }
+        for ci in 0..ft.code.len() {
+            let t = ft.ct(ci);
+            if t.kind != Kind::Ident || ft.in_test(t.line) {
+                continue;
+            }
+            let text = t.text.as_str();
+            if (text == "unwrap" || text == "expect")
+                && ci > 0
+                && ft.ctext(ci - 1) == "."
+                && ft.ctext(ci + 1) == "("
+            {
+                if poison_exempt(ft, ci - 1) {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: Rule::Panic,
+                    file: ft.name.clone(),
+                    line: t.line,
+                    message: format!(
+                        "`.{text}(..)` in the serving hot path — return a typed \
+                         `LkgpError` the caller can act on, or pragma-justify"
+                    ),
+                    justified: None,
+                });
+            } else if MACROS.contains(&text) && ft.ctext(ci + 1) == "!" {
+                findings.push(Finding {
+                    rule: Rule::Panic,
+                    file: ft.name.clone(),
+                    line: t.line,
+                    message: format!(
+                        "`{text}!` in the serving hot path — return a typed \
+                         `LkgpError`, or pragma-justify why failing loud is right"
+                    ),
+                    justified: None,
+                });
+            }
+        }
+    }
+}
+
+/// Rule `float_eq` / `float_cmp`: no `==`/`!=` against float literals and
+/// no NaN-unsafe `partial_cmp(..).unwrap()` orderings outside the
+/// approved parity modules. Exact comparisons go through `.to_bits()`
+/// (which the analyzer never flags — the operands are integers there);
+/// orderings through `total_cmp`.
+pub(crate) fn float_discipline(
+    files: &[FileTokens],
+    cfg: &AnalysisConfig,
+    findings: &mut Vec<Finding>,
+) {
+    for ft in files {
+        if cfg.float_exempt.iter().any(|m| ft.name.contains(m.as_str())) {
+            continue;
+        }
+        for ci in 0..ft.code.len() {
+            let t = ft.ct(ci);
+            if ft.in_test(t.line) {
+                continue;
+            }
+            if t.kind == Kind::Punct && (t.text == "==" || t.text == "!=") {
+                let prev_float = ci > 0
+                    && ft.ct(ci - 1).kind == Kind::Num
+                    && is_float_literal(ft.ctext(ci - 1));
+                // `x == 1.0` and `x == -1.0` both count.
+                let mut rhs = ci + 1;
+                if ft.ctext(rhs) == "-" {
+                    rhs += 1;
+                }
+                let next_float = rhs < ft.code.len()
+                    && ft.ct(rhs).kind == Kind::Num
+                    && is_float_literal(ft.ctext(rhs));
+                if prev_float || next_float {
+                    findings.push(Finding {
+                        rule: Rule::FloatEq,
+                        file: ft.name.clone(),
+                        line: t.line,
+                        message: format!(
+                            "float `{}` comparison — use `.to_bits()` for exact \
+                             identity or an explicit tolerance, or pragma-justify \
+                             the exact-zero/sentinel check",
+                            t.text
+                        ),
+                        justified: None,
+                    });
+                }
+            } else if t.kind == Kind::Ident
+                && t.text == "partial_cmp"
+                && ci > 0
+                && ft.ctext(ci - 1) == "."
+                && ft.ctext(ci + 1) == "("
+            {
+                if let Some(close) = ft.match_paren_fwd(ci + 1) {
+                    if ft.ctext(close + 1) == "."
+                        && (ft.ctext(close + 2) == "unwrap" || ft.ctext(close + 2) == "expect")
+                    {
+                        findings.push(Finding {
+                            rule: Rule::FloatCmp,
+                            file: ft.name.clone(),
+                            line: t.line,
+                            message: "NaN-unsafe `partial_cmp(..).unwrap()` — use \
+                                      `total_cmp` for float orderings"
+                                .into(),
+                            justified: None,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}

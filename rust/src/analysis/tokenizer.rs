@@ -1,0 +1,444 @@
+//! Comment/string-aware Rust tokenizer for the in-tree analyzer.
+//!
+//! This is not a full Rust lexer — it covers exactly what the invariant
+//! rules need: code tokens (identifiers, numbers, strings, chars,
+//! lifetimes, punctuation) with 1-based line numbers, plus comments kept
+//! as first-class tokens so the rules can find `// SAFETY:` justifications
+//! and `// lint: allow(...)` pragmas. Nested block comments, raw strings
+//! (`r#"…"#`, `br"…"`), byte strings/chars, and the lifetime-vs-char
+//! ambiguity (`'a` vs `'a'`) are handled so that quote and brace
+//! characters inside literals never confuse the rule scanners.
+
+/// Token class. Keywords are plain `Ident`s — the rules match on text.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (int or float; text kept for float detection).
+    Num,
+    /// String literal, including raw and byte strings (delimiters kept).
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Line or block comment, delimiters kept. Line = the comment's
+    /// first line for block comments; `//` comments are one token each.
+    Comment,
+    /// Operator / punctuation; multi-char operators (`==`, `::`, `->`,
+    /// `..=`) are single tokens.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// True when a `Num` token's text denotes a float (`1.0`, `1e-3`,
+/// `2f64`), as opposed to an integer in any base.
+pub fn is_float_literal(text: &str) -> bool {
+    if text.starts_with("0x") || text.starts_with("0X")
+        || text.starts_with("0b") || text.starts_with("0B")
+        || text.starts_with("0o") || text.starts_with("0O")
+    {
+        return false;
+    }
+    if text.contains('.') {
+        return true;
+    }
+    if text.ends_with("f32") || text.ends_with("f64") {
+        return true;
+    }
+    // `1e9` / `1E-3`: an exponent marker followed by digits or a sign.
+    let bytes = text.as_bytes();
+    for (i, &c) in bytes.iter().enumerate() {
+        if (c == b'e' || c == b'E') && i > 0 {
+            if let Some(&next) = bytes.get(i + 1) {
+                if next.is_ascii_digit() || next == b'+' || next == b'-' {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Tokenize one source file. Unterminated constructs (string to EOF) are
+/// tolerated — the token simply runs to the end of input; the analyzer
+/// lints the crate's own compiling sources, so this never fires in anger.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Two-char (and `..=`) operators that the rules care to see whole.
+    const TWO: &[&str] = &[
+        "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+        "*=", "/=", "%=", "^=", "&=", "|=", "..", "<<", ">>",
+    ];
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. doc comments).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            out.push(Token {
+                kind: Kind::Comment,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Block comment, nesting per Rust rules.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Token {
+                kind: Kind::Comment,
+                text: chars[start..i].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Raw / byte strings: r"…", r#"…"#, br"…", b"…".
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && chars[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw = j > i + 1 || c == 'r';
+            if j < n && chars[j] == '"' && (is_raw || c == 'b') {
+                // Raw string (possibly byte-raw) or plain byte string.
+                let start = i;
+                let start_line = line;
+                if hashes == 0 && (c == 'b' && chars[i + 1] == '"') {
+                    // b"…" — ordinary escaped string body.
+                    i += 2;
+                    while i < n {
+                        if chars[i] == '\\' {
+                            i += 2;
+                        } else if chars[i] == '"' {
+                            i += 1;
+                            break;
+                        } else {
+                            if chars[i] == '\n' {
+                                line += 1;
+                            }
+                            i += 1;
+                        }
+                    }
+                } else if is_raw {
+                    // r…"body"… — ends at `"` followed by `hashes` #'s.
+                    i = j + 1;
+                    while i < n {
+                        if chars[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+                out.push(Token {
+                    kind: Kind::Str,
+                    text: chars[start..i].iter().collect(),
+                    line: start_line,
+                });
+                continue;
+            }
+            // Byte char b'…'.
+            if c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                let start = i;
+                i += 2;
+                if i < n && chars[i] == '\\' {
+                    i += 2;
+                } else if i < n {
+                    i += 1;
+                }
+                if i < n && chars[i] == '\'' {
+                    i += 1;
+                }
+                out.push(Token {
+                    kind: Kind::Char,
+                    text: chars[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // Fall through: ordinary identifier starting with r/b.
+        }
+        // Plain string literal.
+        if c == '"' {
+            let start = i;
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            out.push(Token {
+                kind: Kind::Str,
+                text: chars[start..i].iter().collect(),
+                line: start_line,
+            });
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            // Lifetime: 'ident NOT followed by a closing quote ('a', 'x').
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                if j >= n || chars[j] != '\'' {
+                    out.push(Token {
+                        kind: Kind::Lifetime,
+                        text: chars[i..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            // Char literal, with escapes ('\n', '\'', '\u{1F600}').
+            let start = i;
+            i += 1;
+            if i < n && chars[i] == '\\' {
+                i += 1;
+                if i < n && chars[i] == 'u' {
+                    while i < n && chars[i] != '}' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            } else if i < n {
+                i += 1;
+            }
+            if i < n && chars[i] == '\'' {
+                i += 1;
+            }
+            out.push(Token {
+                kind: Kind::Char,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            if c == '0' && i < n && (chars[i] == 'x' || chars[i] == 'b' || chars[i] == 'o') {
+                i += 1;
+                while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                    i += 1;
+                }
+                // Fraction: a dot consumed only when a digit follows, so
+                // ranges (`0..n`) and method calls (`1.max(x)`) survive.
+                if i + 1 < n && chars[i] == '.' && chars[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                        i += 1;
+                    }
+                }
+                // Exponent.
+                if i < n && (chars[i] == 'e' || chars[i] == 'E') {
+                    let mut j = i + 1;
+                    if j < n && (chars[j] == '+' || chars[j] == '-') {
+                        j += 1;
+                    }
+                    if j < n && chars[j].is_ascii_digit() {
+                        i = j;
+                        while i < n && (chars[i].is_ascii_digit() || chars[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                }
+                // Type suffix (f64, u32, usize, …).
+                while i < n && is_ident_continue(chars[i]) {
+                    i += 1;
+                }
+            }
+            out.push(Token {
+                kind: Kind::Num,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(chars[i]) {
+                i += 1;
+            }
+            out.push(Token {
+                kind: Kind::Ident,
+                text: chars[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Punctuation: `..=` first, then two-char operators, then single.
+        if i + 2 < n && chars[i] == '.' && chars[i + 1] == '.' && chars[i + 2] == '=' {
+            out.push(Token { kind: Kind::Punct, text: "..=".into(), line });
+            i += 3;
+            continue;
+        }
+        if i + 1 < n {
+            let pair: String = chars[i..i + 2].iter().collect();
+            if TWO.contains(&pair.as_str()) {
+                out.push(Token { kind: Kind::Punct, text: pair, line });
+                i += 2;
+                continue;
+            }
+        }
+        out.push(Token {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_leak_code() {
+        let toks = kinds("let x = \"a == b\"; // y == 0.0\n/* z != 1.0 */ x");
+        let eqs: Vec<_> = toks
+            .iter()
+            .filter(|(k, t)| *k == Kind::Punct && (t == "==" || t == "!="))
+            .collect();
+        assert!(eqs.is_empty(), "operators inside literals/comments leaked: {eqs:?}");
+        let comments: Vec<_> = toks.iter().filter(|(k, _)| *k == Kind::Comment).collect();
+        assert_eq!(comments.len(), 2);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let toks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Lifetime && t == "'a"));
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Char && t == "'x'"));
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Char && t == "'\\n'"));
+    }
+
+    #[test]
+    fn raw_strings_and_nesting() {
+        let toks = kinds("let s = r#\"quote \" inside\"#; /* outer /* inner */ still */ done");
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Str && t.contains("quote")));
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Ident && t == "done"));
+        assert_eq!(toks.iter().filter(|(k, _)| *k == Kind::Comment).count(), 1);
+    }
+
+    #[test]
+    fn float_detection() {
+        assert!(is_float_literal("1.0"));
+        assert!(is_float_literal("0.5f64"));
+        assert!(is_float_literal("1e9"));
+        assert!(is_float_literal("2f32"));
+        assert!(!is_float_literal("1"));
+        assert!(!is_float_literal("0x1f"));
+        assert!(!is_float_literal("100_000"));
+        assert!(!is_float_literal("3usize"));
+    }
+
+    #[test]
+    fn ranges_are_not_floats() {
+        let toks = kinds("for i in 0..10 { a[i] = 1.5; }");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter(|(k, _)| *k == Kind::Num)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "1.5"]);
+    }
+
+    #[test]
+    fn line_numbers_advance_through_literals() {
+        let toks = tokenize("a\n\"two\nline\"\nb");
+        let b = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 4);
+    }
+}

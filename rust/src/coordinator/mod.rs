@@ -336,13 +336,15 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         let stats = pool.stats(*t);
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} rounds={} \
-             batch_factor={:.2} warm_hits={} warm_cache={}h/{}m solves={} \
-             replicas={}h/{}s/{}r prewarmed={} precond_rank={} cg_iters={} mvm_rows={} \
-             peak_queue={} p50={}us p99={}us",
+             requests={} split={} batch_factor={:.2} warm_hits={} warm_cache={}h/{}m \
+             solves={} replicas={}h/{}s/{}r prewarmed={} precond_rank={} cg_iters={} \
+             mvm_rows={} peak_queue={} p50={}us p99={}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
             report.rounds,
+            stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+            stats.split_batches.load(std::sync::atomic::Ordering::Relaxed),
             report.batch_factor,
             stats.warm_hits.load(std::sync::atomic::Ordering::Relaxed),
             stats.warm_cache_hits.load(std::sync::atomic::Ordering::Relaxed),

@@ -39,6 +39,7 @@ use crate::gp::{SolverCfg, Theta};
 use crate::linalg::Matrix;
 use crate::metrics::LatencyHist;
 use crate::runtime::Engine;
+use crate::util::lock_clean;
 
 use super::store::{Snapshot, WarmStart};
 
@@ -124,14 +125,6 @@ fn fail_request(req: Request, err: crate::LkgpError) {
         Request::Deadline { inner, .. } => fail_request(*inner, err),
         Request::Shutdown => {}
     }
-}
-
-/// Lock a mutex, recovering the inner state if a previous holder panicked
-/// mid-update (a recovered engine panic must not poison a shard's warm
-/// cache or latency histogram for every later request — worst case the
-/// cache holds a stale entry, which every consumer already tolerates).
-fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Shared service statistics (one instance per service / per pool shard).
@@ -401,6 +394,9 @@ fn flush_queries(
             replies.push((p.reply, p.queries.len()));
             all.extend(p.queries);
         }
+        // lint: allow(panic) — the caller only forms groups from a
+        // non-empty pending list, and a silent skip here would leave the
+        // group's reply channels dangling (callers hang forever).
         let snap = snap.expect("non-empty group");
         // Warm lineage: exact generation from the keyed LRU, else the
         // most-recent entry (cross-generation embed by trial id), else the
@@ -518,8 +514,9 @@ fn flush_queries(
             Err(e) if replies.len() == 1 => {
                 report.engine_failures += 1;
                 stats.solver_failures.fetch_add(1, Ordering::Relaxed);
-                let (reply, _) = replies.into_iter().next().expect("one reply");
-                send_error(reply, e);
+                if let Some((reply, _)) = replies.into_iter().next() {
+                    send_error(reply, e);
+                }
             }
             Err(_) => {
                 // Failure isolation for coalesced groups: shape errors are
@@ -865,6 +862,10 @@ fn process_batch(
                 }
                 let _ = resp.send(result);
             }
+            // lint: allow(panic) — the dispatch loop unwraps Deadline
+            // envelopes before this match; reaching here is memory-safe
+            // but means the dispatcher was rewired wrong, which must fail
+            // the run rather than silently drop the deadline.
             Request::Deadline { .. } => unreachable!("deadline envelopes unwrapped above"),
             Request::Shutdown => {
                 flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
@@ -1524,7 +1525,11 @@ impl PredictClient for ShardHandle {
         // concurrently while the writer chews the first one. Answers come
         // back in submission order, which restores the batch order.
         self.stats().split_batches.fetch_add(1, Ordering::Relaxed);
-        let last = chunks.pop().expect("len > 1");
+        let Some(last) = chunks.pop() else {
+            return Err(crate::LkgpError::Coordinator(
+                "split_queries produced no chunks for a non-empty batch".into(),
+            ));
+        };
         let mut rxs = Vec::with_capacity(chunks.len() + 1);
         for chunk in chunks {
             let (rtx, rrx) = channel();
@@ -1806,6 +1811,9 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
                 PendingReply::Preds(tx) => {
                     let xq = match p.queries.into_iter().next() {
                         Some(Query::MeanAtFinal { xq }) => xq,
+                        // lint: allow(panic) — enqueue constructs every
+                        // Preds-reply entry with exactly one MeanAtFinal;
+                        // any other shape is a protocol bug upstream.
                         _ => unreachable!("PredictFinal reads carry one MeanAtFinal"),
                     };
                     Request::PredictFinal {
@@ -1830,10 +1838,12 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
 /// group retires back to the writer unanswered.
 fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQuery>) {
     let stats = &shared.stats[si];
-    let cfg = shared.session_cfgs[si]
-        .get()
-        .and_then(|c| c.as_ref())
-        .expect("replica eligibility checked session_cfg");
+    let Some(cfg) = shared.session_cfgs[si].get().and_then(|c| c.as_ref()) else {
+        // Eligibility is checked before stealing, but a lost race with a
+        // shard teardown must retire the group to the writer, not panic.
+        requeue_reads(shared, si, reads);
+        return;
+    };
     // Same per-request validation the writer applies before coalescing:
     // malformed queries fail alone and never poison a group. A request is
     // counted into `stats.requests` only when the replica terminally
@@ -1968,9 +1978,10 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                 // stale-answer invariant holds on this path too, and
                 // requests superseded mid-loop retire back to the writer.
                 if replies.len() == 1 {
-                    let (reply, _) = replies.into_iter().next().expect("one reply");
-                    stats.requests.fetch_add(1, Ordering::Relaxed);
-                    send_error(reply, e);
+                    if let Some((reply, _)) = replies.into_iter().next() {
+                        stats.requests.fetch_add(1, Ordering::Relaxed);
+                        send_error(reply, e);
+                    }
                 } else {
                     let mut off = 0;
                     let mut retired: Vec<PendingQuery> = Vec::new();
@@ -2098,19 +2109,36 @@ fn pool_worker(shared: Arc<PoolShared>) {
                     // Lazy admission: a corpus shard materializes its
                     // engine on first writer claim (and after eviction).
                     if guard.is_none() {
-                        let factory = shared
-                            .factory
-                            .as_ref()
-                            .expect("unmaterialized shard in a pool without a factory");
-                        let engine = factory(si);
-                        let _ = shared.session_cfgs[si].set(engine.session_cfg());
-                        shared.materialized.fetch_add(1, Ordering::Relaxed);
-                        *guard = Some(EngineSlot {
-                            engine,
-                            warm: shared.warm[si].clone(),
-                        });
+                        if let Some(factory) = shared.factory.as_ref() {
+                            let engine = factory(si);
+                            let _ = shared.session_cfgs[si].set(engine.session_cfg());
+                            shared.materialized.fetch_add(1, Ordering::Relaxed);
+                            *guard = Some(EngineSlot {
+                                engine,
+                                warm: shared.warm[si].clone(),
+                            });
+                        }
                     }
-                    let slot = guard.as_mut().expect("materialized above");
+                    let Some(slot) = guard.as_mut() else {
+                        // An unmaterialized shard in a pool without a
+                        // factory is a wiring bug; fail the batch with
+                        // typed errors instead of taking the worker down.
+                        let mut report = BatchReport::default();
+                        for req in batch {
+                            if matches!(req, Request::Shutdown) {
+                                report.shutdown = true;
+                                continue;
+                            }
+                            report.engine_failures += 1;
+                            fail_request(
+                                req,
+                                crate::LkgpError::Coordinator(format!(
+                                    "shard {si} has no engine and the pool has no factory"
+                                )),
+                            );
+                        }
+                        return report;
+                    };
                     process_batch(
                         slot,
                         batch,

@@ -922,6 +922,9 @@ impl TraceRecorder {
         map.insert("fingerprint".into(), Json::Str(corpus.fingerprint()));
         for (k, v) in corpus.trace_pin() {
             if let Json::Num(x) = &v {
+                // lint: allow(float_eq) — fract()!=0.0 is the exact
+                // non-integer test guarding the u64 replay-pin cast; a
+                // tolerance would let lossy pins through silently.
                 if x.fract() != 0.0 || x.abs() >= 9_007_199_254_740_992.0 {
                     return Err(crate::LkgpError::Coordinator(format!(
                         "corpus pin '{k}' = {x} does not round-trip through JSON numbers; \

@@ -55,6 +55,13 @@ pub enum LkgpError {
         late_micros: u64,
     },
 
+    /// The in-tree static analyzer (`lkgp lint`, docs/static_analysis.md)
+    /// found invariant violations with no justifying pragma.
+    Lint {
+        /// Number of unjustified findings.
+        findings: usize,
+    },
+
     /// Shard is quarantined by the circuit breaker; fail-fast reply.
     Quarantined {
         /// The quarantined shard.
@@ -96,6 +103,11 @@ impl std::fmt::Display for LkgpError {
             LkgpError::Timeout { shard, late_micros } => write!(
                 f,
                 "request deadline expired on shard {shard} ({late_micros}us late)"
+            ),
+            LkgpError::Lint { findings } => write!(
+                f,
+                "lint failed: {findings} unjustified finding(s) \
+                 (see docs/static_analysis.md for the rule catalog and pragma syntax)"
             ),
             LkgpError::Quarantined {
                 shard,

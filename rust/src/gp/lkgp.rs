@@ -235,6 +235,8 @@ pub(crate) fn solve_healthy(
     // Warm each retry from the best finite iterate so far; a poisoned
     // buffer would re-poison the next attempt.
     fn warm_of(best: &[f64], fallback: Option<&[f64]>) -> Option<Vec<f64>> {
+        // lint: allow(float_eq) — all-zero is the cold-start sentinel for
+        // a warm-guess buffer (same contract as pcg's warm path).
         if best.iter().all(|v| v.is_finite()) && best.iter().any(|&v| v != 0.0) {
             Some(best.to_vec())
         } else {

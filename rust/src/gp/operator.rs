@@ -593,6 +593,9 @@ impl LatentKronPrecond<'_> {
         ws.w.matmul_into(&f.v2t, &mut ws.zm);
         let zd = ws.zm.data();
         for i in 0..nm {
+            // lint: allow(float_eq) — the mask is exactly 0.0/1.0 by
+            // construction; 0.0 marks a structurally missing entry, not a
+            // small value.
             out[i] = if mk[i] != 0.0 { zd[i] } else { v[i] * inv_s2 };
         }
     }

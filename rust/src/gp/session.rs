@@ -651,7 +651,9 @@ impl Posterior {
     /// Answer one query (see [`Posterior::answer_batch`]).
     pub fn answer(&mut self, query: &Query) -> Result<Answer> {
         let mut answers = self.answer_batch(std::slice::from_ref(query))?;
-        Ok(answers.pop().expect("one answer per query"))
+        answers.pop().ok_or_else(|| {
+            crate::LkgpError::Coordinator("answer_batch returned no answer for a query".into())
+        })
     }
 
     /// Answer a batch of typed queries. All final-step queries share one
@@ -666,19 +668,29 @@ impl Posterior {
         if let Some(xq) = &stacked {
             self.ensure_final_solve(xq)?;
         }
+        // Every final-step query was assigned a slice by
+        // `stack_final_queries`; a missing one means the stacking logic
+        // drifted from the query taxonomy, surfaced as a typed error.
+        fn final_span(slice: Option<(usize, usize)>) -> Result<(usize, usize)> {
+            slice.ok_or_else(|| {
+                crate::LkgpError::Shape(
+                    "final-step query was not assigned a stacked slice".into(),
+                )
+            })
+        }
         let mut out = Vec::with_capacity(queries.len());
         for (q, slice) in queries.iter().zip(slices) {
             let ans = match q {
                 Query::MeanAtFinal { .. } => {
-                    let (off, rows) = slice.expect("final-step query has a slice");
+                    let (off, rows) = final_span(slice)?;
                     Answer::Final(self.preds[off..off + rows].to_vec())
                 }
                 Query::Variance { .. } => {
-                    let (off, rows) = slice.expect("final-step query has a slice");
+                    let (off, rows) = final_span(slice)?;
                     Answer::Variance(self.preds[off..off + rows].iter().map(|p| p.1).collect())
                 }
                 Query::Quantiles { ps, .. } => {
-                    let (off, rows) = slice.expect("final-step query has a slice");
+                    let (off, rows) = final_span(slice)?;
                     Answer::Quantiles(quantiles_from_preds(&self.preds[off..off + rows], ps))
                 }
                 Query::MeanAtSteps { xq, steps } => {
@@ -839,7 +851,11 @@ impl Posterior {
         self.ensure_alpha()?;
         let theta = Theta::unpack(&self.theta);
         let (n, m) = (self.data.n(), self.data.m());
-        let alpha = self.alpha.as_ref().expect("alpha ensured");
+        let Some(alpha) = self.alpha.as_ref() else {
+            return Err(crate::LkgpError::Coordinator(
+                "training solve left no alpha cached".into(),
+            ));
+        };
         let am = lkgp::mask_product(&self.data.mask, alpha, n, m);
         let k1q = kernels::rbf(xq, &self.data.x, &theta.lengthscales);
         let k2 = kernels::matern12(

@@ -54,6 +54,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
+                // lint: allow(float_eq) — fract()==0.0 is the exact
+                // integer-valued test: print `3` not `3.0`; any rounding
+                // noise correctly falls through to the float formatter.
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {

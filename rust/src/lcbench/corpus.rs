@@ -29,6 +29,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{CurveStore, Registry, Snapshot, TrialId};
 use crate::rng::Pcg64;
+use crate::util::lock_clean;
 
 use super::{Preset, Task};
 
@@ -200,7 +201,7 @@ impl Corpus for SimCorpus {
                 self.tasks
             )));
         }
-        if let Some(t) = self.cache.lock().unwrap().get(&id) {
+        if let Some(t) = lock_clean(&self.cache).get(&id) {
             return Ok(t.clone());
         }
         let presets = Preset::all();
@@ -210,7 +211,7 @@ impl Corpus for SimCorpus {
             self.configs,
             &mut rng,
         ));
-        self.cache.lock().unwrap().insert(id, task.clone());
+        lock_clean(&self.cache).insert(id, task.clone());
         Ok(task)
     }
 }
@@ -298,7 +299,7 @@ impl Corpus for JsonDirCorpus {
         // reflects current content, unlike the old once-forever memo.
         // Unreadable files hash an error marker (uncached, so recovery is
         // noticed) to keep the print stable and total.
-        let mut cache = self.digests.lock().unwrap();
+        let mut cache = lock_clean(&self.digests);
         let mut h = FNV_OFFSET;
         for (stem, path) in &self.files {
             let seed = fnv1a(stem.as_bytes(), FNV_OFFSET);
@@ -344,12 +345,12 @@ impl Corpus for JsonDirCorpus {
                 self.files.len()
             )));
         };
-        if let Some(t) = self.cache.lock().unwrap().get(&id) {
+        if let Some(t) = lock_clean(&self.cache).get(&id) {
             return Ok(t.clone());
         }
         let text = std::fs::read_to_string(path)?;
         let task = Arc::new(Task::load_json(stem, &text)?);
-        self.cache.lock().unwrap().insert(id, task.clone());
+        lock_clean(&self.cache).insert(id, task.clone());
         Ok(task)
     }
 }

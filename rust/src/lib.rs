@@ -20,9 +20,13 @@
 //!   sample via iterative methods).
 //! * [`runtime`] — artifact-backed engine with rust fallback.
 //! * [`coordinator`] — the freeze-thaw AutoML service.
+//! * [`analysis`] — the in-tree invariant linter behind `lkgp lint`
+//!   (lock ordering, unsafe audit, panic/float discipline; see
+//!   docs/static_analysis.md).
 //! * `examples/` — quickstart, Figure-1 extrapolation, end-to-end AutoML
 //!   loop, Figure-3 scaling driver.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench_util;
 pub mod coordinator;

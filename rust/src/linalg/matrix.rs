@@ -214,7 +214,12 @@ impl IndexMut<(usize, usize)> for Matrix {
 /// team parts (each part computes its own slice bounds from the part
 /// index; see the SAFETY notes at the use sites).
 pub(crate) struct SendMutPtr(pub(crate) *mut f64);
+// SAFETY: only the pointer value is shared; every use site derives
+// disjoint per-part panels from it (each carries its own SAFETY note)
+// and the pointee outlives the team run that borrows it.
 unsafe impl Send for SendMutPtr {}
+// SAFETY: same argument — concurrent access never touches overlapping
+// elements, so &SendMutPtr is safe to share across the team.
 unsafe impl Sync for SendMutPtr {}
 
 thread_local! {
@@ -288,6 +293,9 @@ fn matmul_panel(a: &[f64], b: &[f64], out: &mut [f64], row0: usize, rows_end: us
         let orow = &mut out[i * m..(i + 1) * m];
         orow.fill(0.0);
         for (kk, &aik) in arow.iter().enumerate() {
+            // lint: allow(float_eq) — exact-zero sparsity skip: only a
+            // bitwise zero contributes nothing to the row product, and
+            // the mask semantics make 0.0 the structural-hole sentinel.
             if aik != 0.0 {
                 axpy(aik, &b[kk * m..(kk + 1) * m], orow);
             }
@@ -303,6 +311,9 @@ fn matmul_panel_slice(a: &[f64], b: &[f64], out: &mut [f64], row0: usize, rows: 
         let orow = &mut out[r * m..(r + 1) * m];
         orow.fill(0.0);
         for (kk, &aik) in arow.iter().enumerate() {
+            // lint: allow(float_eq) — exact-zero sparsity skip: only a
+            // bitwise zero contributes nothing to the row product, and
+            // the mask semantics make 0.0 the structural-hole sentinel.
             if aik != 0.0 {
                 axpy(aik, &b[kk * m..(kk + 1) * m], orow);
             }
@@ -370,6 +381,9 @@ pub fn matmul_mixed_ab32(a: &Matrix, b32: &MatrixF32, out: &mut Matrix) {
         let orow = &mut od[i * m..(i + 1) * m];
         orow.fill(0.0);
         for (kk, &aik) in arow.iter().enumerate() {
+            // lint: allow(float_eq) — exact-zero sparsity skip: only a
+            // bitwise zero contributes nothing to the row product, and
+            // the mask semantics make 0.0 the structural-hole sentinel.
             if aik != 0.0 {
                 let brow = &bd[kk * m..(kk + 1) * m];
                 for (o, &b) in orow.iter_mut().zip(brow) {
@@ -393,6 +407,9 @@ pub fn matmul_mixed_a32b(a32: &MatrixF32, b: &Matrix, out: &mut Matrix) {
         let orow = &mut od[i * m..(i + 1) * m];
         orow.fill(0.0);
         for (kk, &aik) in arow.iter().enumerate() {
+            // lint: allow(float_eq) — exact-zero sparsity skip: only a
+            // bitwise zero contributes nothing to the row product, and
+            // the mask semantics make 0.0 the structural-hole sentinel.
             if aik != 0.0 {
                 axpy(aik as f64, &bd[kk * m..(kk + 1) * m], orow);
             }

@@ -66,6 +66,9 @@ pub fn pcg_batch_warm(
     let ident = precond.is_none();
 
     let (mut x, warm) = match x0 {
+        // lint: allow(float_eq) — exact-zero test on the warm guess: an
+        // all-zero vector is the cold-start sentinel, and any nonzero bit
+        // pattern (however tiny) is a legitimate guess worth one MVM.
         Some(g) if g.len() == b.len() && g.iter().any(|&v| v != 0.0) => (g.to_vec(), true),
         _ => (vec![0.0; b.len()], false),
     };
@@ -84,14 +87,15 @@ pub fn pcg_batch_warm(
     }
 
     // p0 = z0 = M⁻¹ r0 (z aliases r conceptually for plain CG).
-    let mut p = if ident {
-        r.clone()
-    } else {
-        let mut z0 = vec![0.0; b.len()];
-        if batch > 0 {
-            precond.unwrap().apply_batch(&r, &mut z0, batch);
+    let mut p = match precond {
+        None => r.clone(),
+        Some(m) => {
+            let mut z0 = vec![0.0; b.len()];
+            if batch > 0 {
+                m.apply_batch(&r, &mut z0, batch);
+            }
+            z0
         }
-        z0
     };
 
     let bnorm: Vec<f64> = (0..batch)
@@ -168,13 +172,11 @@ pub fn pcg_batch_warm(
 
         // z = M⁻¹ r over the same active set (one batched apply), then the
         // beta / search-direction update.
-        if !ident {
+        if let Some(m) = precond {
             for (ai, &bi) in active.iter().enumerate() {
                 pc[ai * n..(ai + 1) * n].copy_from_slice(&r[bi * n..(bi + 1) * n]);
             }
-            precond
-                .unwrap()
-                .apply_batch(&pc[..k * n], &mut zc[..k * n], k);
+            m.apply_batch(&pc[..k * n], &mut zc[..k * n], k);
         }
         for (ai, &bi) in active.iter().enumerate() {
             if frozen[ai] {
@@ -331,6 +333,9 @@ pub fn refined_solve(
     debug_assert_eq!(b.len(), batch * n);
 
     let (mut x, warm) = match x0 {
+        // lint: allow(float_eq) — exact-zero test on the warm guess: an
+        // all-zero vector is the cold-start sentinel, and any nonzero bit
+        // pattern (however tiny) is a legitimate guess worth one MVM.
         Some(g) if g.len() == b.len() && g.iter().any(|&v| v != 0.0) => (g.to_vec(), true),
         _ => (vec![0.0; b.len()], false),
     };

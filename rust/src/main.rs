@@ -16,6 +16,11 @@
 //!              injection (docs/robustness.md)
 //!   artifacts  print the artifact manifest and verify executables load
 //!   smoke      end-to-end smoke: fit + predict on a toy problem
+//!   lint       run the in-tree invariant linter over the crate's own
+//!              sources (lock-order graph, unsafe audit, panic + float
+//!              discipline, stats/bench drift; docs/static_analysis.md)
+//!              and write the ANALYSIS.json inventory; exits non-zero on
+//!              any unjustified finding
 //!
 //! Run `lkgp <cmd> --help`-ish by reading DESIGN.md; flags use
 //! `--key value` / `--key=value` (see util::Args).
@@ -29,17 +34,66 @@ fn main() -> lkgp::Result<()> {
         "smoke" => cmd_smoke(&args),
         "serve" => cmd_serve(&args),
         "pool" => lkgp::coordinator::serve_pool(&args),
+        "lint" => cmd_lint(&args),
         _ => {
             eprintln!(
-                "usage: lkgp <artifacts|smoke|serve|pool> [--engine rust|xla] \
+                "usage: lkgp <artifacts|smoke|serve|pool|lint> [--engine rust|xla] \
                  [--seed N] [--configs N] [--tasks N] [--workers N] [--warm on|off] \
                  [--replicas N] [--precond off|auto|rank=R] [--threads N] \
                  [--precision f64|f32] [--corpus sim|DIR] \
                  [--record FILE] [--replay FILE [--concurrent]] \
-                 [--deadline-ms N] [--chaos panic=P,diverge=P,slow=P,io=P,nan=P,seed=N]"
+                 [--deadline-ms N] [--chaos panic=P,diverge=P,slow=P,io=P,nan=P,seed=N] \
+                 [--root CRATE_DIR] [--json ANALYSIS_PATH]"
             );
             Ok(())
         }
+    }
+}
+
+fn cmd_lint(args: &Args) -> lkgp::Result<()> {
+    use lkgp::analysis::{analyze, AnalysisConfig, AnalysisInput};
+    // Default to the crate that built this binary: `cargo run -- lint`
+    // from anywhere lints the shipped tree.
+    let root = std::path::PathBuf::from(
+        args.get("root").unwrap_or(env!("CARGO_MANIFEST_DIR")),
+    );
+    let input = AnalysisInput::load(&root)?;
+    let report = analyze(&input, &AnalysisConfig::crate_default());
+    let json_path = match args.get("json") {
+        Some(p) => std::path::PathBuf::from(p),
+        // next to ci.sh, at the repo root above the crate
+        None => root.join("..").join("ANALYSIS.json"),
+    };
+    std::fs::write(&json_path, report.to_json().pretty())?;
+    println!(
+        "lint: {} files, {} lock sites, {} lock edges, {} unsafe sites, {} pragmas",
+        report.files_scanned,
+        report.lock_sites.len(),
+        report.lock_edges.len(),
+        report.unsafe_sites.len(),
+        report.pragmas.len(),
+    );
+    println!("lint: inventory written to {}", json_path.display());
+    for f in &report.findings {
+        if let Some(reason) = &f.justified {
+            println!(
+                "  allowed {}:{} [{}] — {}",
+                f.file,
+                f.line,
+                f.rule.name(),
+                reason
+            );
+        }
+    }
+    let bad = report.unjustified();
+    for f in &bad {
+        println!("FAIL {}:{} [{}] {}", f.file, f.line, f.rule.name(), f.message);
+    }
+    if bad.is_empty() {
+        println!("LINT_OK");
+        Ok(())
+    } else {
+        Err(lkgp::LkgpError::Lint { findings: bad.len() })
     }
 }
 

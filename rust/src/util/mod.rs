@@ -3,9 +3,21 @@
 //! a tiny CLI argument parser (clap is not in the offline crate set).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 pub mod team;
+
+/// Lock a mutex, recovering the inner state if a previous holder panicked
+/// mid-update. This is the canonical shape for recover-policy lock classes
+/// (docs/robustness.md): a recovered engine panic must not poison a warm
+/// cache, latency histogram, or task cache for every later request —
+/// worst case the state holds a stale entry, which every consumer already
+/// tolerates. Fail-loud classes (queues, handshake slots) must NOT use
+/// this; `lkgp lint` enforces the split per lock class.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Resolved worker-thread count; 0 = not yet resolved.
 static THREADS: AtomicUsize = AtomicUsize::new(0);

@@ -308,13 +308,19 @@ mod tests {
         // Lend disjoint chunks through a shared pointer, as the matrix
         // kernels do.
         struct SendPtr(*mut f64);
+        // SAFETY: the pointer is only dereferenced through disjoint
+        // per-part slices below, and `out` outlives the `team.run` call.
         unsafe impl Send for SendPtr {}
+        // SAFETY: same as above — shared access is to the pointer value
+        // only; each part writes a non-overlapping range.
         unsafe impl Sync for SendPtr {}
         let base = SendPtr(out.as_mut_ptr());
         let n = out.len();
         team.run(parts, &|p| {
             let start = p * chunk;
             let len = chunk.min(n - start);
+            // SAFETY: parts cover [0, n) in disjoint `chunk`-sized ranges
+            // (`len` is clamped at the tail), so no two parts alias.
             let dst = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
             for (i, v) in dst.iter_mut().enumerate() {
                 *v = (start + i) as f64;

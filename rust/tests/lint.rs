@@ -1,0 +1,274 @@
+//! Tier-1 lint gate: the in-tree invariant analyzer (docs/static_analysis.md)
+//! must pass on the crate's own sources under plain `cargo test`, and each
+//! rule family must fire on its fixture in `tests/lint_fixtures/` (plain
+//! text, never compiled).
+//!
+//! `shipped_tree_is_clean` is the gate itself: any unjustified finding —
+//! a lock-order cycle, a poison-policy mismatch, an undocumented
+//! `unsafe`, a naked hot-path panic, a float `==`, dead telemetry, an
+//! ungated bench artifact, or a malformed pragma — fails `cargo test`
+//! before ci.sh even reaches the dedicated `lint` gate.
+
+use lkgp::analysis::{
+    analyze, analyze_source, AnalysisConfig, AnalysisInput, LockPolicy, Rule,
+};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()))
+}
+
+fn cfg(policies: &[(&str, LockPolicy)], hot_paths: &[&str], stats_struct: &str) -> AnalysisConfig {
+    AnalysisConfig {
+        lock_policies: policies
+            .iter()
+            .map(|(n, p)| (n.to_string(), *p))
+            .collect(),
+        hot_paths: hot_paths.iter().map(|s| s.to_string()).collect(),
+        float_exempt: Vec::new(),
+        stats_struct: stats_struct.into(),
+    }
+}
+
+/// (line, justified) pairs of the findings for one rule, sorted.
+fn hits(a: &lkgp::analysis::Analysis, rule: Rule) -> Vec<(u32, bool)> {
+    let mut v: Vec<(u32, bool)> = a
+        .findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| (f.line, f.justified.is_some()))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+// ---------------------------------------------------------------------------
+// the gate: the shipped tree itself
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let input = AnalysisInput::load(root).expect("load crate sources");
+    let report = analyze(&input, &AnalysisConfig::crate_default());
+    let bad: Vec<String> = report
+        .unjustified()
+        .iter()
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule.name(), f.message))
+        .collect();
+    assert!(
+        bad.is_empty(),
+        "unjustified lint findings in the shipped tree:\n{}",
+        bad.join("\n")
+    );
+    // Sanity: the analyzer actually saw the crate, not an empty walk.
+    assert!(report.files_scanned >= 20, "only {} files scanned", report.files_scanned);
+    assert!(!report.lock_sites.is_empty(), "no lock sites found");
+    assert!(!report.unsafe_sites.is_empty(), "no unsafe sites found");
+}
+
+#[test]
+fn shipped_unsafe_inventory_is_fully_documented() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let input = AnalysisInput::load(root).expect("load crate sources");
+    let report = analyze(&input, &AnalysisConfig::crate_default());
+    let undocumented: Vec<String> = report
+        .unsafe_sites
+        .iter()
+        .filter(|s| s.safety.is_none())
+        .map(|s| format!("{}:{} ({})", s.file, s.line, s.kind))
+        .collect();
+    assert!(
+        undocumented.is_empty(),
+        "unsafe sites without a SAFETY comment:\n{}",
+        undocumented.join("\n")
+    );
+}
+
+#[test]
+fn analysis_json_round_trips() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let input = AnalysisInput::load(root).expect("load crate sources");
+    let report = analyze(&input, &AnalysisConfig::crate_default());
+    let text = report.to_json().pretty();
+    let parsed = lkgp::json::Json::parse(&text).expect("ANALYSIS.json parses back");
+    // Schema spot checks (docs/static_analysis.md).
+    let n = parsed.get("files_scanned").and_then(|j| j.as_usize());
+    assert_eq!(n, Some(report.files_scanned));
+    let sites = parsed.get("unsafe_sites").and_then(|j| j.as_arr());
+    assert_eq!(sites.map(|s| s.len()), Some(report.unsafe_sites.len()));
+    let edges = parsed.get("lock_edges").and_then(|j| j.as_arr());
+    assert_eq!(edges.map(|e| e.len()), Some(report.lock_edges.len()));
+}
+
+// ---------------------------------------------------------------------------
+// fixtures: each rule family fires exactly where it should
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_lock_cycle_is_rejected() {
+    use LockPolicy::FailLoud;
+    let c = cfg(&[("alpha", FailLoud), ("beta", FailLoud)], &[], "NoStats");
+    let a = analyze_source("lock_cycle.rs", &fixture("lock_cycle.rs"), &c);
+    let order: Vec<_> = a.findings.iter().filter(|f| f.rule == Rule::LockOrder).collect();
+    assert_eq!(order.len(), 1, "{:?}", a.findings);
+    assert!(order[0].message.contains("alpha") && order[0].message.contains("beta"));
+    // The witness is the call-graph edge: beta held at line 20 across `tail`.
+    assert_eq!(order[0].line, 20);
+    assert!(order[0].message.contains("tail"), "{}", order[0].message);
+    // Both edges made it into the inventory, with the call edge attributed.
+    assert!(a.lock_edges.iter().any(|e| e.from == "alpha" && e.to == "beta" && e.via == "direct"));
+    assert!(a.lock_edges.iter().any(|e| e.from == "beta" && e.to == "alpha" && e.via == "tail"));
+    // No other rule fires on this fixture.
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_consistent_order_passes() {
+    use LockPolicy::FailLoud;
+    // Same fixture minus the inverted function: alpha -> beta only.
+    let text = fixture("lock_cycle.rs");
+    let consistent: String = text
+        .lines()
+        .take_while(|l| !l.starts_with("pub fn backward"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let c = cfg(&[("alpha", FailLoud), ("beta", FailLoud)], &[], "NoStats");
+    let a = analyze_source("consistent.rs", &consistent, &c);
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+    assert!(a.lock_edges.iter().all(|e| e.from == "alpha" && e.to == "beta"));
+}
+
+#[test]
+fn fixture_missing_safety_is_flagged() {
+    let a = analyze_source(
+        "missing_safety.rs",
+        &fixture("missing_safety.rs"),
+        &AnalysisConfig::crate_default(),
+    );
+    assert_eq!(hits(&a, Rule::UnsafeSafety), vec![(5, false)], "{:?}", a.findings);
+    // Inventory carries both sites; only the documented one has text.
+    assert_eq!(a.unsafe_sites.len(), 2);
+    let documented = a.unsafe_sites.iter().find(|s| s.line == 11).unwrap();
+    assert!(documented.safety.as_deref().unwrap_or("").starts_with("fixture contract"));
+    assert!(a.unsafe_sites.iter().find(|s| s.line == 5).unwrap().safety.is_none());
+}
+
+#[test]
+fn fixture_naked_unwrap_is_flagged_with_pragma_honored() {
+    let c = cfg(&[], &["naked_unwrap.rs"], "NoStats");
+    let a = analyze_source("naked_unwrap.rs", &fixture("naked_unwrap.rs"), &c);
+    // unwrap(7) + expect(8) + unreachable!(10) unjustified; the pragma'd
+    // unwrap(14) is reported but justified; the poison-protocol
+    // `.wait(..).unwrap()` at 12 is exempt.
+    assert_eq!(
+        hits(&a, Rule::Panic),
+        vec![(7, false), (8, false), (10, false), (14, true)],
+        "{:?}",
+        a.findings
+    );
+    assert_eq!(a.unjustified().len(), 3);
+}
+
+#[test]
+fn fixture_hot_path_scoping_applies() {
+    // The same panic-laden file outside the hot-path set is not a finding.
+    let c = cfg(&[], &["some/other/module.rs"], "NoStats");
+    let a = analyze_source("naked_unwrap.rs", &fixture("naked_unwrap.rs"), &c);
+    assert!(hits(&a, Rule::Panic).is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_float_discipline_is_flagged() {
+    let a = analyze_source(
+        "float_eq.rs",
+        &fixture("float_eq.rs"),
+        &AnalysisConfig::crate_default(),
+    );
+    assert_eq!(hits(&a, Rule::FloatEq), vec![(6, false)], "{:?}", a.findings);
+    assert_eq!(hits(&a, Rule::FloatCmp), vec![(10, false)], "{:?}", a.findings);
+    // to_bits identity and tolerance compares stay clean.
+    assert_eq!(a.findings.len(), 2, "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_float_exempt_module_passes() {
+    let mut c = AnalysisConfig::crate_default();
+    c.float_exempt.push("parity/".into());
+    let a = analyze_source("parity/float_eq.rs", &fixture("float_eq.rs"), &c);
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_dead_counter_is_flagged() {
+    let c = cfg(&[], &[], "FixtureStats");
+    let a = analyze_source("dead_counter.rs", &fixture("dead_counter.rs"), &c);
+    let drift = hits(&a, Rule::StatsDrift);
+    assert_eq!(drift, vec![(8, false)], "{:?}", a.findings);
+    let f = a.findings.iter().find(|f| f.rule == Rule::StatsDrift).unwrap();
+    assert!(f.message.contains("misses"), "{}", f.message);
+    assert_eq!(a.findings.len(), 1, "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_poison_policy_mismatches_both_ways() {
+    use LockPolicy::{FailLoud, Recover};
+    let c = cfg(&[("work", FailLoud), ("memo", Recover)], &[], "NoStats");
+    let a = analyze_source("poison_policy.rs", &fixture("poison_policy.rs"), &c);
+    assert_eq!(
+        hits(&a, Rule::PoisonPolicy),
+        vec![(12, false), (17, false)],
+        "{:?}",
+        a.findings
+    );
+    assert_eq!(a.findings.len(), 2, "{:?}", a.findings);
+    // Swapping the registrations to match the shapes clears both.
+    let c = cfg(&[("work", Recover), ("memo", FailLoud)], &[], "NoStats");
+    let a = analyze_source("poison_policy.rs", &fixture("poison_policy.rs"), &c);
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_unregistered_lock_class_is_flagged() {
+    // Same fixture, but `memo` missing from the policy table: new locks
+    // cannot land unclassified.
+    let c = cfg(&[("work", LockPolicy::Recover)], &[], "NoStats");
+    let a = analyze_source("poison_policy.rs", &fixture("poison_policy.rs"), &c);
+    let classes = hits(&a, Rule::LockClass);
+    assert_eq!(classes, vec![(8, false)], "{:?}", a.findings);
+}
+
+#[test]
+fn fixture_clean_file_passes_everything() {
+    use LockPolicy::FailLoud;
+    let c = cfg(
+        &[("first", FailLoud), ("second", FailLoud)],
+        &["clean.rs"],
+        "CleanStats",
+    );
+    let a = analyze_source("clean.rs", &fixture("clean.rs"), &c);
+    assert!(a.findings.is_empty(), "{:?}", a.findings);
+    // The compliant file still populates the inventories.
+    assert_eq!(a.unsafe_sites.len(), 1);
+    assert!(a.unsafe_sites[0].safety.is_some());
+    assert!(a.lock_edges.iter().any(|e| e.from == "first" && e.to == "second"));
+}
+
+#[test]
+fn bench_artifact_without_ci_gate_is_flagged() {
+    use lkgp::analysis::SourceFile;
+    let bench = "fn main() { out(\"BENCH_rogue.json\"); out(\"BENCH_hotpath.json\"); }\n";
+    let input = AnalysisInput {
+        src: Vec::new(),
+        benches: vec![SourceFile { name: "rogue.rs".into(), text: bench.into() }],
+        ci_script: Some("gate_file bench BENCH_hotpath.json".into()),
+    };
+    let a = analyze(&input, &AnalysisConfig::crate_default());
+    let gates: Vec<_> = a.findings.iter().filter(|f| f.rule == Rule::BenchGate).collect();
+    assert_eq!(gates.len(), 1, "{:?}", a.findings);
+    assert!(gates[0].message.contains("BENCH_rogue.json"));
+}

@@ -1,0 +1,37 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! Fully compliant code: consistently ordered fail-loud locks, a
+//! documented unsafe block, bit-exact float identity, a tolerance
+//! compare, and a stats struct whose every counter is observed. The
+//! lint must report nothing.
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct CleanStats {
+    pub served: AtomicU64,
+}
+
+pub struct Clean {
+    pub first: Mutex<u64>,
+    pub second: Mutex<u64>,
+    pub stats: CleanStats,
+}
+
+pub fn ordered(c: &Clean) -> u64 {
+    let a = c.first.lock().unwrap();
+    let b = c.second.lock().unwrap();
+    c.stats.served.load(Ordering::Relaxed) + *a + *b
+}
+
+pub fn bits(x: f64, y: f64) -> bool {
+    x.to_bits() == y.to_bits()
+}
+
+pub fn tol(x: f64) -> bool {
+    (x - 1.0).abs() < 1e-12
+}
+
+pub fn read_raw(p: *const u64) -> u64 {
+    // SAFETY: fixture contract — `p` is valid, aligned, and unaliased
+    // for the duration of this call.
+    unsafe { *p }
+}

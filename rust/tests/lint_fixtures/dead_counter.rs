@@ -1,0 +1,19 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! `misses` is incremented but never observed; `hits` is read by the
+//! report path. The drift rule must flag exactly `misses`.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct FixtureStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl FixtureStats {
+    pub fn note(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,19 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! A float-literal equality and a NaN-unsafe ordering must be flagged;
+//! the bit-exact and tolerance-based comparisons must not.
+
+pub fn bad_eq(x: f64) -> bool {
+    x == 0.0
+}
+
+pub fn bad_sort(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn good_bits(x: f64, y: f64) -> bool {
+    x.to_bits() == y.to_bits()
+}
+
+pub fn good_tol(x: f64) -> bool {
+    (x - 1.0).abs() < 1e-12
+}

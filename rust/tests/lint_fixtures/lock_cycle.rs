@@ -1,0 +1,26 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! `forward` acquires alpha then beta; `backward` holds beta across a
+//! call to `tail`, which acquires alpha — a beta -> alpha call-graph
+//! edge that closes a lock-order cycle.
+use std::sync::Mutex;
+
+pub struct Shared {
+    pub alpha: Mutex<u64>,
+    pub beta: Mutex<u64>,
+}
+
+pub fn forward(s: &Shared) -> u64 {
+    let a = s.alpha.lock().unwrap();
+    let b = s.beta.lock().unwrap();
+    *a + *b
+}
+
+pub fn backward(s: &Shared) -> u64 {
+    let b = s.beta.lock().unwrap();
+    *b + tail(s)
+}
+
+fn tail(s: &Shared) -> u64 {
+    let a = s.alpha.lock().unwrap();
+    *a
+}

@@ -1,0 +1,12 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! One raw-pointer read has no SAFETY argument; the other carries one.
+
+pub fn undocumented(p: *const u64) -> u64 {
+    unsafe { *p }
+}
+
+pub fn documented(p: *const u64) -> u64 {
+    // SAFETY: fixture contract — `p` is valid, aligned, and unaliased
+    // for the duration of this call.
+    unsafe { *p }
+}

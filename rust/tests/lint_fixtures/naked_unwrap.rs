@@ -1,0 +1,16 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! The driving test registers this file as a hot path: the unwrap, the
+//! expect and the `unreachable!` must be flagged, the poison-protocol
+//! `.wait(..).unwrap()` exempted, and the pragma'd site justified.
+
+pub fn serve(input: Option<u64>, cond: &Cond, g: Guard) -> u64 {
+    let a = input.unwrap();
+    let b = input.expect("fixture: must be set");
+    if a + b > 100 {
+        unreachable!("fixture: bounded by caller");
+    }
+    let woke = cond.wait(g).unwrap();
+    // lint: allow(panic) — fixture: fail-loud is the documented contract
+    let c = input.unwrap();
+    a + b + c + woke
+}

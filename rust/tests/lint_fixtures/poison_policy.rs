@@ -1,0 +1,19 @@
+//! Lint fixture (never compiled — loaded as text by tests/lint.rs).
+//! Poison-policy mismatches both ways: `work` is registered fail-loud
+//! but recovers, `memo` is registered recover but unwraps.
+use std::sync::Mutex;
+
+pub struct State {
+    pub work: Mutex<Vec<u64>>,
+    pub memo: Mutex<u64>,
+}
+
+pub fn drain(s: &State) -> usize {
+    let q = s.work.lock().unwrap_or_else(|p| p.into_inner());
+    q.len()
+}
+
+pub fn peek(s: &State) -> u64 {
+    let m = s.memo.lock().unwrap();
+    *m
+}
