@@ -24,6 +24,17 @@
 #                        path + BENCH_simd.json asserts (in-process thread
 #                        parity, >=1.5x batched-MVM speedup floor at 4 threads
 #                        on >=4-core runners, f32 refinement parity)
+#   samples (hard gate): cargo bench --bench samples twice (LKGP_THREADS=1 / =4),
+#                        cross-process SAMPLES_CHECKSUM bitwise parity on the
+#                        pathwise draws + BENCH_samples.json asserts (zero-solve
+#                        warm sampling, marginal cost per extra sample within a
+#                        small multiple of one MVM, >=5x throughput over the
+#                        per-sample-solve baseline, writer/replica bitwise
+#                        parity; docs/sampling.md)
+#   docsgate (hard gate when the toolchain exists): cargo doc --no-deps with
+#                        -D warnings — broken intra-doc links and malformed
+#                        doc comments fail CI (docs/ci.md); skipped under
+#                        CI_QUICK
 #   smoke  (hard gates): trace replay through `lkgp pool --replay traces/smoke.jsonl`,
 #                        sequentially (exact stats equalities) AND with
 #                        --concurrent (storm + parity pass, relaxed bounds)
@@ -43,9 +54,9 @@
 # The script always ends by printing a machine-readable one-line summary
 # with ALL of these gates present, in this order:
 #   CI_SUMMARY build=pass test=pass shims=pass lint=pass san=skip \
-#              fmt=pass clippy=pass bench=pass pcg=pass queries=pass \
-#              replicas=pass ingest=pass chaos=pass par=pass replay=pass \
-#              creplay=pass
+#              fmt=pass clippy=pass docsgate=pass bench=pass pcg=pass \
+#              queries=pass replicas=pass ingest=pass chaos=pass par=pass \
+#              samples=pass replay=pass creplay=pass
 # Each gate is one of pass|fail|soft-fail|skip (skip = component missing,
 # CI_QUICK, or never reached because an earlier gate failed; soft-fail =
 # style finding under CI_STRICT=0). Exit code is non-zero iff any hard
@@ -64,7 +75,7 @@ note() { # note <gate> <pass|fail|soft-fail|skip>
 finish() {
   # gates never reached (early exit) report as skip, so the summary always
   # carries the full fixed field set parsers rely on
-  for g in build test shims lint san fmt clippy bench pcg queries replicas ingest chaos par replay creplay; do
+  for g in build test shims lint san fmt clippy docsgate bench pcg queries replicas ingest chaos par samples replay creplay; do
     case " $SUMMARY " in
       *" $g="*) ;;
       *) SUMMARY="$SUMMARY $g=skip" ;;
@@ -213,8 +224,21 @@ fi
 # ---- perf + smoke gates (mandatory in the pipeline; CI_QUICK skips) -------
 if [ "${CI_QUICK:-0}" = "1" ]; then
   echo "== perf/smoke gates skipped (CI_QUICK=1) =="
-  for gate in bench pcg queries replicas ingest chaos par replay creplay; do note "$gate" skip; done
+  for gate in docsgate bench pcg queries replicas ingest chaos par samples replay creplay; do note "$gate" skip; done
   exit 0
+fi
+
+echo "== docs gate: cargo doc --no-deps (deny warnings) =="
+# Broken intra-doc links ([`Foo`] to a renamed item) and malformed doc
+# comments rot silently without this; the doc_drift lint rule covers the
+# prose side (docs/*.md paths named in source must exist), this covers the
+# rustdoc side. Skipped under CI_QUICK above.
+if RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps --manifest-path "$MANIFEST"; then
+  note docsgate pass
+  echo "docs gate OK"
+else
+  note docsgate fail
+  exit 1
 fi
 
 echo "== perf: hotpath bench (quick) =="
@@ -328,6 +352,41 @@ else
   rm -f "$PAR_LOG1" "$PAR_LOG4"
   echo "FAIL: simd bench run failed"
   note par fail
+  exit 1
+fi
+
+echo "== perf gate: pathwise posterior sampling =="
+# Runs the samples bench twice — pinned to LKGP_THREADS=1 and =4 — and
+# compares the SAMPLES_CHECKSUM lines bitwise: for a fixed seed the
+# pathwise draws must be identical across worker-team widths, cross
+# process (docs/sampling.md). The in-process halves (zero CG solves on a
+# warm lineage, marginal per-sample cost within a small multiple of one
+# MVM, the >=5x throughput floor over the per-sample-solve baseline,
+# writer/replica bitwise parity) are asserted inside BENCH_samples.json.
+SAMP_LOG1=$(mktemp)
+SAMP_LOG4=$(mktemp)
+if LKGP_THREADS=1 cargo bench --manifest-path "$MANIFEST" --bench samples -- --quick \
+    > "$SAMP_LOG1" 2>&1 \
+   && LKGP_THREADS=4 cargo bench --manifest-path "$MANIFEST" --bench samples -- --quick \
+    > "$SAMP_LOG4" 2>&1; then
+  cat "$SAMP_LOG4"
+  SCK1=$(grep '^SAMPLES_CHECKSUM ' "$SAMP_LOG1" | tail -n 1)
+  SCK4=$(grep '^SAMPLES_CHECKSUM ' "$SAMP_LOG4" | tail -n 1)
+  rm -f "$SAMP_LOG1" "$SAMP_LOG4"
+  if [ -z "$SCK1" ] || [ "$SCK1" != "$SCK4" ]; then
+    echo "FAIL: SAMPLES_CHECKSUM differs across LKGP_THREADS=1/4 ('$SCK1' vs '$SCK4')"
+    note samples fail
+    exit 1
+  fi
+  echo "cross-process sample checksum parity OK ($SCK1)"
+  gate_file samples BENCH_samples.json \
+    assert_samples_zero_solve_warm assert_samples_marginal_mvm \
+    assert_samples_speedup assert_samples_replica_parity
+else
+  cat "$SAMP_LOG1" "$SAMP_LOG4"
+  rm -f "$SAMP_LOG1" "$SAMP_LOG4"
+  echo "FAIL: samples bench run failed"
+  note samples fail
   exit 1
 fi
 

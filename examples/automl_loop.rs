@@ -1,130 +1,197 @@
-//! End-to-end driver: the full freeze-thaw AutoML loop on a simulated
-//! LCBench workload — all three layers composing.
+//! End-to-end driver: seeded Hyperband/ASHA-style Thompson sampling on a
+//! simulated LCBench workload, served by the multi-shard `ServicePool` —
+//! the library-level version of `lkgp pool --sample-storm`.
 //!
-//! The coordinator (L3) schedules trials and batches prediction requests;
-//! the prediction service executes the AOT-compiled LKGP artifacts (L2
-//! jax graphs with the L1 pallas masked-Kronecker MVM inside) through the
-//! PJRT runtime; nothing on this path touches Python.
+//! Each rung refits the LKGP on the observed curve prefixes, then draws
+//! joint posterior curves over the surviving arms with seeded
+//! `CurveSamples` bursts. Selection is Thompson sampling: every joint
+//! draw votes for its argmax final-epoch value, and the top `1/eta` arms
+//! by vote count survive to train `eta` times deeper. The sampling rides
+//! the pathwise fast path (docs/sampling.md): after a generation's first
+//! draw builds the factored lineage, every further burst is solve-free —
+//! the printed `pathwise_hits`/`sample_mvms` counters are the receipt.
 //!
-//! Reports: best config found vs the oracle, epochs spent vs exhaustive
-//! training, early-stop counts, GP-request batching factor and latency.
-//! Writes `results/automl_loop.csv` (per-round trace) and
-//! `results/automl_loop_summary.json`. Recorded in EXPERIMENTS.md.
+//! Reports: best arm found vs the oracle, epochs spent vs exhaustive
+//! training, per-rung survivor trace, and the pool's sampling counters.
+//! Writes `results/automl_loop.csv` (per-rung trace) and
+//! `results/automl_loop_summary.json`.
 //!
 //! ```bash
-//! cargo run --release --example automl_loop [-- --configs 24 --budget 400]
+//! cargo run --release --example automl_loop [-- --configs 24 --draws 16 --bursts 4 --eta 2]
 //! ```
 
+use std::collections::HashMap;
+
 use lkgp::coordinator::{
-    EpochRunner, Policy, PredictionService, Scheduler, SchedulerCfg, TrialId, TrialStatus,
+    CurveStore, PoolCfg, PredictClient, Registry, ServicePool, TrialId,
 };
 use lkgp::json::Json;
 use lkgp::lcbench::{Preset, Task};
+use lkgp::linalg::Matrix;
 use lkgp::rng::Pcg64;
+use lkgp::runtime::{Engine, RustEngine};
 use lkgp::util::Args;
-
-struct SimRunner {
-    task: Task,
-    /// Simulated cost bookkeeping: epochs actually "trained".
-    epochs_run: usize,
-}
-
-impl EpochRunner for SimRunner {
-    fn run_epoch(&mut self, trial: TrialId, _config: &[f64], epoch: usize) -> f64 {
-        self.epochs_run += 1;
-        self.task.curves[(trial.0, epoch.min(self.task.m() - 1))]
-    }
-}
 
 fn main() -> lkgp::Result<()> {
     let args = Args::from_env();
     let seed = args.get_u64("seed", 0);
-    let n_configs = args.get_usize("configs", 24);
-    let budget = args.get_usize("budget", 400);
-    let concurrent = args.get_usize("concurrent", 4);
-    let prefer_xla = args.get("engine").unwrap_or("xla") == "xla";
+    let n_configs = args.get_usize("configs", 24).max(2);
+    let draws = args.get_usize("draws", 16).max(1);
+    let bursts = args.get_usize("bursts", 4).max(1);
+    let eta = args.get_usize("eta", 2).max(2);
+    let workers = args.get_usize("workers", 2).max(1);
 
     let mut rng = Pcg64::new(seed);
     let task = Task::generate(Preset::FashionMnist, n_configs, &mut rng);
+    let m = task.m();
     let oracle_best = (0..task.n())
-        .map(|i| task.curves[(i, task.m() - 1)])
+        .map(|i| task.curves[(i, m - 1)])
         .fold(f64::NEG_INFINITY, f64::max);
-    let full_cost = n_configs * task.m();
+    let full_cost = n_configs * m;
 
-    let engine = lkgp::runtime::open_engine(prefer_xla);
-    println!("engine: {}", engine.name());
-    let service = PredictionService::spawn(engine);
+    // One shard, a couple of workers: spare workers let read-only replicas
+    // steal sampling bursts behind a busy writer (docs/serving.md) —
+    // seeded draws are bit-identical either way.
+    let engine = Box::new(RustEngine::default()) as Box<dyn Engine>;
+    let pool = ServicePool::spawn(vec![engine], PoolCfg { workers, ..Default::default() });
+    let handle = pool.handle(0);
 
-    let cfg = SchedulerCfg {
-        max_concurrent: concurrent,
-        refit_every: 5,
-        epoch_budget: budget,
-        policy: Policy::PredictedFinal { delta: 0.0, threshold: 0.95 },
-        seed,
-    };
-    let mut sched = Scheduler::new(task.m(), cfg);
-    let configs: Vec<Vec<f64>> = (0..task.n()).map(|i| task.configs.row(i).to_vec()).collect();
-    sched.add_candidates(&configs);
+    // Every arm is registered up front; rung 0 observes one epoch each.
+    let mut reg = Registry::new();
+    let ids: Vec<TrialId> = (0..task.n()).map(|i| reg.add(task.configs.row(i).to_vec())).collect();
+    let mut store = CurveStore::new(m);
+    let mut observed = vec![0usize; task.n()];
+    for (i, &id) in ids.iter().enumerate() {
+        reg.observe(id, task.curves[(i, 0)], m)?;
+        observed[i] = 1;
+    }
+    let mut epochs_spent = task.n();
 
-    let mut runner = SimRunner { task, epochs_run: 0 };
+    let mut survivors: Vec<usize> = (0..task.n()).collect();
+    let mut rung = 0usize;
+    let mut trace_rows: Vec<Vec<String>> = Vec::new();
     let t0 = std::time::Instant::now();
-    let report = sched.run(&mut runner, &service)?;
+    while survivors.len() > 1 {
+        let snapshot = store.snapshot(&reg)?;
+        let theta = handle.refit(snapshot.clone(), Vec::new(), seed.wrapping_add(rung as u64))?;
+        let n_train = snapshot.data.n();
+        let pos: HashMap<TrialId, usize> = snapshot
+            .all_ids
+            .iter()
+            .enumerate()
+            .map(|(r, &id)| (id, r))
+            .collect();
+        let mut xq = Matrix::zeros(survivors.len(), snapshot.all_x.cols());
+        for (r, &arm) in survivors.iter().enumerate() {
+            xq.row_mut(r).copy_from_slice(snapshot.all_x.row(pos[&ids[arm]]));
+        }
+
+        // Thompson sampling over seeded joint draws: one argmax vote per
+        // drawn curve bundle (standardized values; the output transform
+        // is monotone, so the argmax is unchanged).
+        let mut wins = vec![0usize; survivors.len()];
+        for b in 0..bursts {
+            let burst_seed = seed
+                .wrapping_add(((rung * bursts + b) as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+                & ((1u64 << 53) - 1);
+            let samples = handle.sample_curves(
+                snapshot.clone(),
+                theta.clone(),
+                xq.clone(),
+                draws,
+                burst_seed,
+            )?;
+            for smp in &samples {
+                let (mut best, mut best_v) = (0usize, f64::NEG_INFINITY);
+                for r in 0..survivors.len() {
+                    let v = smp[(n_train + r, m - 1)];
+                    if v > best_v {
+                        best_v = v;
+                        best = r;
+                    }
+                }
+                wins[best] += 1;
+            }
+        }
+
+        // ASHA successive halving: keep the top 1/eta arms by vote count
+        // (ties break toward the lower row index — fully deterministic).
+        let keep = ((survivors.len() + eta - 1) / eta).max(1);
+        let mut order: Vec<usize> = (0..survivors.len()).collect();
+        order.sort_by(|&a, &b| wins[b].cmp(&wins[a]).then(a.cmp(&b)));
+        let mut kept: Vec<usize> = order[..keep].iter().map(|&r| survivors[r]).collect();
+        kept.sort_unstable();
+        println!(
+            "rung {rung}: {} arms -> {keep} survivors (top vote {}/{})",
+            survivors.len(),
+            wins[order[0]],
+            bursts * draws,
+        );
+        trace_rows.push(vec![
+            rung.to_string(),
+            survivors.len().to_string(),
+            keep.to_string(),
+            epochs_spent.to_string(),
+        ]);
+        survivors = kept;
+        for &arm in &survivors {
+            let target = (observed[arm] * eta).min(task.lengths[arm]).min(m);
+            while observed[arm] < target {
+                reg.observe(ids[arm], task.curves[(arm, observed[arm])], m)?;
+                observed[arm] += 1;
+                epochs_spent += 1;
+            }
+        }
+        rung += 1;
+    }
     let wall = t0.elapsed();
 
     // ---- outputs ----
-    let rows: Vec<Vec<String>> = report
-        .trace
-        .iter()
-        .map(|(round, epochs, best)| {
-            vec![round.to_string(), epochs.to_string(), format!("{best:.6}")]
-        })
-        .collect();
+    let winner = survivors[0];
+    let best_found = task.curves[(winner, m - 1)];
+    let regret = oracle_best - best_found;
+    use std::sync::atomic::Ordering::Relaxed;
+    let stats = pool.stats(0);
+    let pathwise_hits = stats.pathwise_hits.load(Relaxed);
+    let sample_mvms = stats.sample_mvms.load(Relaxed);
+    let solves = stats.engine_solves.load(Relaxed);
+
     lkgp::util::write_csv(
         "results/automl_loop.csv",
-        &["round", "epochs_spent", "best_so_far"],
-        &rows,
+        &["rung", "arms", "survivors", "epochs_spent"],
+        &trace_rows,
     )?;
-
-    let regret = oracle_best - report.best_value;
-    let p50 = service.stats.latency.lock().unwrap().quantile_micros(0.5);
-    let p99 = service.stats.latency.lock().unwrap().quantile_micros(0.99);
     let summary = Json::obj(vec![
-        ("engine", Json::Str("per --engine flag".into())),
         ("configs", Json::Num(n_configs as f64)),
-        ("epoch_budget", Json::Num(budget as f64)),
-        ("epochs_spent", Json::Num(report.epochs_spent as f64)),
+        ("draws", Json::Num(draws as f64)),
+        ("bursts", Json::Num(bursts as f64)),
+        ("eta", Json::Num(eta as f64)),
+        ("rungs", Json::Num(rung as f64)),
+        ("epochs_spent", Json::Num(epochs_spent as f64)),
         ("full_grid_epochs", Json::Num(full_cost as f64)),
-        ("best_found", Json::Num(report.best_value)),
+        ("best_found", Json::Num(best_found)),
         ("oracle_best", Json::Num(oracle_best)),
         ("regret", Json::Num(regret)),
-        ("stopped", Json::Num(report.stopped as f64)),
-        ("completed", Json::Num(report.completed as f64)),
-        ("batch_factor", Json::Num(report.batch_factor)),
-        ("predict_p50_us", Json::Num(p50 as f64)),
-        ("predict_p99_us", Json::Num(p99 as f64)),
+        ("engine_solves", Json::Num(solves as f64)),
+        ("pathwise_hits", Json::Num(pathwise_hits as f64)),
+        ("sample_mvms", Json::Num(sample_mvms as f64)),
         ("wall_seconds", Json::Num(wall.as_secs_f64())),
     ]);
     std::fs::create_dir_all("results")?;
     std::fs::write("results/automl_loop_summary.json", summary.pretty())?;
 
-    println!("\n=== freeze-thaw AutoML run ===");
+    println!("\n=== Thompson-sampling ASHA run ===");
     println!("configs:        {n_configs} (full training would cost {full_cost} epochs)");
     println!(
-        "epochs spent:   {} ({:.0}% of exhaustive)",
-        report.epochs_spent,
-        100.0 * report.epochs_spent as f64 / full_cost as f64
+        "epochs spent:   {epochs_spent} ({:.0}% of exhaustive)",
+        100.0 * epochs_spent as f64 / full_cost as f64
     );
-    println!("best found:     {:.4}", report.best_value);
+    println!("best found:     {best_found:.4} (arm {winner})");
     println!("oracle best:    {oracle_best:.4}  (regret {regret:.4})");
     println!(
-        "trials:         {} stopped early, {} completed, {} paused",
-        report.stopped,
-        report.completed,
-        sched.registry.by_status(TrialStatus::Paused).len()
-    );
-    println!(
-        "gp service:     batch factor {:.2}, predict p50 {p50}us p99 {p99}us",
-        report.batch_factor
+        "gp service:     {solves} solves for {} draws — {pathwise_hits} pathwise hits, \
+         {sample_mvms} sample MVMs (docs/sampling.md)",
+        rung * bursts * draws,
     );
     println!("wall time:      {:.2?}", wall);
     println!("\nwrote results/automl_loop.csv, results/automl_loop_summary.json");

@@ -1,0 +1,224 @@
+//! Pathwise posterior-sampling bench (`ci.sh` `samples` gate):
+//!
+//! * zero-solve warm sampling — a `CurveSamples` draw against a warm
+//!   pathwise lineage must run **zero** CG solves (counter-asserted via
+//!   `Posterior::{solve_calls, pathwise_hits, sample_mvms}`)
+//! * marginal cost — the incremental cost of one extra sample on a warm
+//!   lineage must stay within a small multiple of one masked-Kronecker
+//!   MVM (one factored apply + the prior draw + the correction matmuls),
+//!   far below a CG solve
+//! * throughput — drawing all samples through the warm pathwise lineage
+//!   must clear a 5x floor over the per-sample-solve baseline (one full
+//!   legacy sampling call per sample) at the full sample count
+//! * writer/replica parity — a replica posterior seeded with the writer's
+//!   `(alpha, PathLineage)` must reproduce the writer's draws bit for bit
+//!
+//! Besides BENCH_samples.json / results/samples.csv, the bench prints one
+//! `SAMPLES_CHECKSUM <hex>` line: an FNV-1a digest over the bits of every
+//! warm-path sample drawn at the *ambient* `util::num_threads()`. ci.sh
+//! runs the bench twice (LKGP_THREADS=1 and =4) and compares the lines —
+//! the cross-process half of the sampling determinism contract
+//! (docs/sampling.md, docs/parallelism.md).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lkgp::bench_util::{bench, Table};
+use lkgp::gp::kernels;
+use lkgp::gp::operator::MaskedKronOp;
+use lkgp::gp::lkgp::posterior_samples;
+use lkgp::gp::session::{Answer, Posterior, Query};
+use lkgp::gp::{SolverCfg, Theta};
+use lkgp::json::Json;
+use lkgp::lcbench::fig3_dataset;
+use lkgp::linalg::Matrix;
+use lkgp::rng::Pcg64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_bits(values: &[f64], mut h: u64) -> u64 {
+    for v in values {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+fn curves(a: &Answer) -> &Vec<Matrix> {
+    match a {
+        Answer::Curves(c) => c,
+        other => panic!("expected Curves, got {other:?}"),
+    }
+}
+
+fn main() -> lkgp::Result<()> {
+    let quick = lkgp::bench_util::is_quick();
+    let n = if quick { 48 } else { 96 };
+    let s = if quick { 16 } else { 64 };
+    let q = 8usize;
+    let seed = 1234u64;
+
+    let mut rng = Pcg64::new(7);
+    let data = Arc::new(fig3_dataset(n, &mut rng));
+    let (nn, m, d) = (data.n(), data.m(), data.d());
+    let theta = Theta::default_packed(d);
+    let cfg = SolverCfg::default();
+    let xq = Matrix::from_vec(q, d, rng.uniform_vec(q * d, 0.0, 1.0));
+    let query = |count: usize, seed: u64| Query::CurveSamples { xq: xq.clone(), n: count, seed };
+    let mut table = Table::new(&["op", "samples", "median_us", "note"]);
+
+    // ---- writer: cold pathwise call pays exactly the training solve ------
+    let mut writer = Posterior::new(data.clone(), theta.clone(), cfg.clone());
+    let writer_draw = writer.answer(&query(s, seed))?;
+    assert_eq!(writer.solve_calls(), 1, "cold pathwise pays only the training solve");
+    let lineage = writer.path_state().expect("pathwise base cached on the writer");
+    let alpha = writer.alpha().expect("training solve cached").to_vec();
+
+    // ---- zero-solve warm sampling (the hard gate) ------------------------
+    let mut probe = writer.fork();
+    let probe_draw = probe.answer(&query(s, seed))?;
+    let zero_solve_ok = probe.solve_calls() == 0
+        && probe.pathwise_hits() == 1
+        && probe.sample_mvms() == s
+        && probe_draw.bits_eq(&writer_draw);
+    table.row(vec![
+        "warm_draw".into(),
+        s.to_string(),
+        "-".into(),
+        format!(
+            "solves={} hits={} mvms={}",
+            probe.solve_calls(),
+            probe.pathwise_hits(),
+            probe.sample_mvms()
+        ),
+    ]);
+
+    // ---- marginal cost: (t_s - t_1) / (s - 1) vs one masked-Kron MVM -----
+    let t1_us = {
+        let stats = bench(
+            || {
+                let mut f = writer.fork();
+                let _ = f.answer(&query(1, seed)).unwrap();
+            },
+            3,
+            Duration::from_millis(300),
+        );
+        stats.median_secs() * 1e6
+    };
+    let ts_us = {
+        let stats = bench(
+            || {
+                let mut f = writer.fork();
+                let _ = f.answer(&query(s, seed)).unwrap();
+            },
+            3,
+            Duration::from_millis(300),
+        );
+        stats.median_secs() * 1e6
+    };
+    let marginal_us = ((ts_us - t1_us) / (s - 1) as f64).max(0.0);
+
+    let th = Theta::unpack(&theta);
+    let k1 = kernels::rbf(&data.x, &data.x, &th.lengthscales);
+    let k2 = kernels::matern12(&data.t, &data.t, th.t_lengthscale, th.outputscale);
+    let op = MaskedKronOp::new(&k1, &k2, &data.mask, th.sigma2);
+    let mvm_us = {
+        let x = rng.normal_vec(nn * m);
+        let mut out = vec![0.0; nn * m];
+        let stats = bench(|| op.apply_batch(&x, &mut out, 1), 5, Duration::from_millis(200));
+        stats.median_secs() * 1e6
+    };
+    // One extra sample = prior draw + one factored apply + the correction
+    // matmuls: a handful of MVM-equivalents, never a solve (tens to
+    // hundreds of MVMs). The 16x headroom absorbs timer noise while still
+    // separating the two regimes by an order of magnitude.
+    let marginal_ok = marginal_us <= 16.0 * mvm_us.max(1e-3);
+    table.row(vec![
+        "warm_marginal".into(),
+        format!("{}->{s}", 1),
+        format!("{marginal_us:.1}"),
+        format!("one_mvm={mvm_us:.1}us"),
+    ]);
+
+    // ---- throughput vs the per-sample-solve baseline ---------------------
+    let legacy_cfg = SolverCfg { pathwise: false, ..cfg.clone() };
+    let base_us = {
+        let stats = bench(
+            || {
+                // the historical serving shape: every sample request pays
+                // its own training + sampling solve
+                for i in 0..s {
+                    let mut r = Pcg64::new(seed ^ i as u64);
+                    let _ = posterior_samples(&theta, &data, &xq, 1, &legacy_cfg, &mut r).unwrap();
+                }
+            },
+            1,
+            Duration::from_millis(100),
+        );
+        stats.median_secs() * 1e6
+    };
+    let speedup = base_us / ts_us.max(1e-9);
+    let speedup_ok = speedup >= 5.0;
+    table.row(vec![
+        "per_sample_solve".into(),
+        s.to_string(),
+        format!("{base_us:.1}"),
+        format!("speedup={speedup:.1}x"),
+    ]);
+
+    // ---- writer/replica parity -------------------------------------------
+    // The replica_serve shape: fresh posterior + the writer's converged
+    // (alpha, lineage); must reproduce the writer's draws bit for bit.
+    let mut replica = Posterior::new(data.clone(), theta.clone(), cfg.clone())
+        .with_solves(alpha, None, Vec::new())
+        .with_path(Some(lineage));
+    let replica_draw = replica.answer(&query(s, seed))?;
+    let parity_ok = replica.solve_calls() == 0 && replica_draw.bits_eq(&writer_draw);
+    table.row(vec![
+        "replica_parity".into(),
+        s.to_string(),
+        "-".into(),
+        if parity_ok { "bitwise==writer".into() } else { "DIVERGED".into() },
+    ]);
+
+    // ---- SAMPLES_CHECKSUM: ambient-thread-count sample digest ------------
+    // ci.sh compares this line across LKGP_THREADS=1 / =4 runs.
+    let mut checksum = FNV_OFFSET;
+    for smp in curves(&writer_draw) {
+        checksum = fnv_bits(smp.data(), checksum);
+    }
+    println!("SAMPLES_CHECKSUM {checksum:016x}");
+
+    table.write_csv("results/samples.csv")?;
+    println!("\nwrote results/samples.csv");
+
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("samples".into())),
+        ("n", Json::Num(nn as f64)),
+        ("m", Json::Num(m as f64)),
+        ("q", Json::Num(q as f64)),
+        ("samples", Json::Num(s as f64)),
+        ("ambient_threads", Json::Num(lkgp::util::num_threads() as f64)),
+        ("warm_t1_us", Json::Num(t1_us)),
+        ("warm_ts_us", Json::Num(ts_us)),
+        ("marginal_us", Json::Num(marginal_us)),
+        ("one_mvm_us", Json::Num(mvm_us)),
+        ("per_sample_solve_us", Json::Num(base_us)),
+        ("speedup_vs_per_sample_solve", Json::Num(speedup)),
+        ("samples_checksum", Json::Str(format!("{checksum:016x}"))),
+        ("assert_samples_zero_solve_warm", Json::Bool(zero_solve_ok)),
+        ("assert_samples_marginal_mvm", Json::Bool(marginal_ok)),
+        ("assert_samples_speedup", Json::Bool(speedup_ok)),
+        ("assert_samples_replica_parity", Json::Bool(parity_ok)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .to_path_buf();
+    std::fs::write(root.join("BENCH_samples.json"), summary.pretty())?;
+    println!("wrote {}", root.join("BENCH_samples.json").display());
+    Ok(())
+}

@@ -1,11 +1,16 @@
-//! Rule family `stats_drift` / `bench_gate`: observability drift.
+//! Rule family `stats_drift` / `bench_gate` / `doc_drift`: drift between
+//! what the code does and what anyone can observe or read about it.
 //!
 //! Counters and bench artifacts only help if someone looks at them. The
 //! stats rule fails when a `ServiceStats` counter is incremented but never
 //! observed (`.load(..)` / `.lock(..)` on the field) in non-test code —
 //! dead telemetry that silently stops meaning anything. The bench rule
 //! fails when a bench source names a `BENCH_*.json` artifact that `ci.sh`
-//! never gates on — a benchmark whose regression no one would catch.
+//! never gates on — a benchmark whose regression no one would catch. The
+//! doc rule fails when the prose contract breaks: a source file points a
+//! reader at a `docs/*.md` note that does not exist, a bench emits an
+//! artifact that docs/ci.md's inventory omits, or the `lkgp` usage
+//! string advertises a `--flag` no doc explains (docs/index.md).
 
 use super::tokenizer::Kind;
 use super::{AnalysisConfig, AnalysisInput, FileTokens, Finding, Rule};
@@ -122,6 +127,175 @@ pub(crate) fn bench_gate(input: &AnalysisInput, findings: &mut Vec<Finding>) {
     }
 }
 
+/// Rule `doc_drift`: the docs tree and the code must not drift apart.
+/// Three checks, all anchored at the offending source line so the usual
+/// `// lint: allow(doc_drift) — <why>` pragma applies:
+///
+/// (a) every `docs/<name>.md` path written in a crate or bench source —
+///     module docs, error messages, comments — must exist under `docs/`
+///     (a dangling pointer sends the reader nowhere);
+/// (b) every `BENCH_*.json` artifact a bench source names must be
+///     mentioned in `docs/ci.md`, the artifact inventory;
+/// (c) every `--flag` in `main.rs`'s string literals (the CLI usage
+///     surface) must appear in at least one doc.
+///
+/// Skipped entirely when no docs were provided (fixture runs — absence
+/// of the docs tree is not absence of the contract); check (b) is
+/// skipped when the provided docs lack a `ci.md`. Crate sources are
+/// scanned through their token view so `#[cfg(test)]` regions are
+/// exempt — fixtures and unit tests cite fictional docs on purpose.
+pub(crate) fn doc_drift(
+    files: &[FileTokens],
+    input: &AnalysisInput,
+    findings: &mut Vec<Finding>,
+) {
+    if input.docs.is_empty() {
+        return;
+    }
+    let doc_names: Vec<&str> = input.docs.iter().map(|d| d.name.as_str()).collect();
+    let dangling = |file: &str, line: u32, name: String, reported: &mut Vec<String>| {
+        if doc_names.contains(&name.as_str()) || reported.contains(&name) {
+            return None;
+        }
+        reported.push(name.clone());
+        Some(Finding {
+            rule: Rule::DocDrift,
+            file: file.to_string(),
+            line,
+            message: format!(
+                "source references `docs/{name}`, which does not exist — \
+                 write the doc or fix the pointer"
+            ),
+            justified: None,
+        })
+    };
+
+    // (a) dangling docs/*.md references, one finding per (file, name).
+    // Doc paths live in comments and string literals; both are tokens.
+    for ft in files {
+        let mut reported: Vec<String> = Vec::new();
+        for t in &ft.toks {
+            if !matches!(t.kind, Kind::Comment | Kind::Str) || ft.in_test(t.line) {
+                continue;
+            }
+            for name in doc_refs(&t.text) {
+                findings.extend(dangling(&ft.name, t.line, name, &mut reported));
+            }
+        }
+    }
+    for sf in &input.benches {
+        let mut reported: Vec<String> = Vec::new();
+        for (i, line) in sf.text.lines().enumerate() {
+            for name in doc_refs(line) {
+                findings.extend(dangling(&sf.name, (i + 1) as u32, name, &mut reported));
+            }
+        }
+    }
+
+    // (b) bench artifacts missing from docs/ci.md's inventory
+    if let Some(ci_md) = input.docs.iter().find(|d| d.name == "ci.md") {
+        for sf in &input.benches {
+            let mut reported: Vec<String> = Vec::new();
+            for (i, line) in sf.text.lines().enumerate() {
+                for name in bench_artifact_names(line) {
+                    if ci_md.text.contains(&name) || reported.contains(&name) {
+                        continue;
+                    }
+                    findings.push(Finding {
+                        rule: Rule::DocDrift,
+                        file: sf.name.clone(),
+                        line: (i + 1) as u32,
+                        message: format!(
+                            "bench artifact `{name}` is not inventoried in \
+                             docs/ci.md — add it to the artifact table"
+                        ),
+                        justified: None,
+                    });
+                    reported.push(name);
+                }
+            }
+        }
+    }
+
+    // (c) usage-surface flags nobody documents. String literals only:
+    // the usage string is the advertised surface; prose comments that
+    // mention `--key value` syntax are not.
+    for ft in files.iter().filter(|f| f.name == "main.rs") {
+        let mut reported: Vec<String> = Vec::new();
+        for t in &ft.toks {
+            if t.kind != Kind::Str || ft.in_test(t.line) {
+                continue;
+            }
+            for flag in cli_flags(&t.text) {
+                if reported.contains(&flag)
+                    || input.docs.iter().any(|d| d.text.contains(&flag))
+                {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: Rule::DocDrift,
+                    file: ft.name.clone(),
+                    line: t.line,
+                    message: format!(
+                        "CLI flag `{flag}` is advertised in the usage string but \
+                         documented in no docs/*.md — add it to a doc (the flag \
+                         table in docs/index.md, if nowhere better)"
+                    ),
+                    justified: None,
+                });
+                reported.push(flag);
+            }
+        }
+    }
+}
+
+/// Extract the `<name>.md` parts of `docs/<name>.md` references in `s`.
+fn doc_refs(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = s.as_bytes();
+    let mut i = 0usize;
+    while let Some(at) = s[i..].find("docs/") {
+        let start = i + at + "docs/".len();
+        let mut end = start;
+        while end < bytes.len()
+            && (bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_')
+        {
+            end += 1;
+        }
+        if end > start && s[end..].starts_with(".md") {
+            out.push(format!("{}.md", &s[start..end]));
+            i = end + ".md".len();
+        } else {
+            i = start;
+        }
+    }
+    out
+}
+
+/// Extract `--flag` names (`--` plus a lowercase kebab-case word) from a
+/// string-literal token's text, including the leading dashes.
+fn cli_flags(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = s.as_bytes();
+    let mut i = 0usize;
+    while let Some(at) = s[i..].find("--") {
+        let start = i + at;
+        let mut end = start + 2;
+        while end < bytes.len()
+            && (bytes[end].is_ascii_lowercase()
+                || bytes[end].is_ascii_digit()
+                || bytes[end] == b'-')
+        {
+            end += 1;
+        }
+        if end > start + 2 {
+            out.push(s[start..end].to_string());
+        }
+        i = end;
+    }
+    out
+}
+
 /// Extract `BENCH_<word>.json` names from a string-literal token's text.
 fn bench_artifact_names(s: &str) -> Vec<String> {
     let mut out = Vec::new();
@@ -168,6 +342,7 @@ fn report(s: &MiniStats) -> u64 { s.seen.load(Ordering::Relaxed) }\n";
             src: vec![SourceFile { name: "stats.rs".into(), text: src.into() }],
             benches: Vec::new(),
             ci_script: None,
+            docs: Vec::new(),
         };
         let a = analyze(&input, &cfg());
         let drift: Vec<_> = a
@@ -187,6 +362,7 @@ fn report(s: &MiniStats) -> u64 { s.seen.load(Ordering::Relaxed) }\n";
             src: Vec::new(),
             benches: vec![SourceFile { name: "b.rs".into(), text: bench.into() }],
             ci_script: Some("assert BENCH_OLD.json".into()),
+            docs: Vec::new(),
         };
         let a = analyze(&input, &cfg());
         let gate: Vec<_> = a
@@ -196,6 +372,71 @@ fn report(s: &MiniStats) -> u64 { s.seen.load(Ordering::Relaxed) }\n";
             .collect();
         assert_eq!(gate.len(), 1, "{:?}", a.findings);
         assert!(gate[0].message.contains("BENCH_NEW.json"));
+    }
+
+    #[test]
+    fn doc_drift_fires_on_all_three_checks_and_skips_without_docs() {
+        let src = SourceFile {
+            name: "main.rs".into(),
+            text: "//! See docs/real.md and docs/ghost.md.\nfn main() { \
+                   eprintln!(\"usage: x [--known N] [--rogue N]\"); }\n"
+                .into(),
+        };
+        let bench = SourceFile {
+            name: "b.rs".into(),
+            text: "fn main() { out(\"BENCH_listed.json\"); out(\"BENCH_orphan.json\"); }\n".into(),
+        };
+        let docs = vec![
+            SourceFile { name: "real.md".into(), text: "covers `--known` too".into() },
+            SourceFile { name: "ci.md".into(), text: "artifacts: BENCH_listed.json".into() },
+        ];
+        let input = AnalysisInput {
+            src: vec![src],
+            benches: vec![bench],
+            ci_script: Some("gate BENCH_listed.json BENCH_orphan.json".into()),
+            docs,
+        };
+        let a = analyze(&input, &cfg());
+        let drift: Vec<_> = a
+            .findings
+            .iter()
+            .filter(|f| f.rule == Rule::DocDrift)
+            .collect();
+        assert_eq!(drift.len(), 3, "{:?}", a.findings);
+        assert!(drift.iter().any(|f| f.message.contains("docs/ghost.md")));
+        assert!(drift.iter().any(|f| f.message.contains("BENCH_orphan.json")));
+        assert!(drift.iter().any(|f| f.message.contains("`--rogue`")));
+        // `docs/real.md`, BENCH_listed.json, and `--known` are all clean.
+
+        // No docs provided (fixture shape): the rule stays silent.
+        let quiet = AnalysisInput {
+            src: vec![SourceFile {
+                name: "main.rs".into(),
+                text: "//! docs/ghost.md\nfn main() { out(\"--rogue\"); }\n".into(),
+            }],
+            benches: Vec::new(),
+            ci_script: None,
+            docs: Vec::new(),
+        };
+        let a = analyze(&quiet, &cfg());
+        assert!(
+            a.findings.iter().all(|f| f.rule != Rule::DocDrift),
+            "{:?}",
+            a.findings
+        );
+    }
+
+    #[test]
+    fn doc_and_flag_extraction() {
+        use super::{cli_flags, doc_refs};
+        assert_eq!(
+            doc_refs("see docs/api.md, docs/static_analysis.md; not docs/<name>.md or docs/x.rs"),
+            vec!["api.md".to_string(), "static_analysis.md".to_string()]
+        );
+        assert_eq!(
+            cli_flags("\"[--deadline-ms N] [--chaos panic=P] -- not a flag\""),
+            vec!["--deadline-ms".to_string(), "--chaos".to_string()]
+        );
     }
 
     #[test]

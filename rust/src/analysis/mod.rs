@@ -26,10 +26,13 @@
 //!    against float literals and no NaN-unsafe `partial_cmp().unwrap()`
 //!    outside approved parity modules; exact comparisons go through
 //!    `.to_bits()`, orderings through `total_cmp`.
-//! 5. **drift lints** (`stats_drift` / `bench_gate`) — every
-//!    `ServiceStats` counter must be printed or serialized somewhere in
-//!    non-test code, and every `BENCH_*.json` a bench emits must have a
-//!    ci.sh gate.
+//! 5. **drift lints** (`stats_drift` / `bench_gate` / `doc_drift`) —
+//!    every `ServiceStats` counter must be printed or serialized
+//!    somewhere in non-test code, every `BENCH_*.json` a bench emits
+//!    must have a ci.sh gate, and the prose contract holds: every
+//!    `docs/*.md` path named in a source file exists, every bench
+//!    artifact is inventoried in docs/ci.md, and every CLI flag in the
+//!    `lkgp` usage surface is documented somewhere under docs/.
 //!
 //! Surviving sites carry an inline pragma — `// lint: allow(<rule>) —
 //! <reason>` on the offending line or the line above — and every pragma
@@ -143,6 +146,7 @@ pub enum Rule {
     FloatCmp,
     StatsDrift,
     BenchGate,
+    DocDrift,
     /// Malformed `// lint:` pragma (unknown rule, missing reason).
     Pragma,
 }
@@ -159,6 +163,7 @@ impl Rule {
             Rule::FloatCmp => "float_cmp",
             Rule::StatsDrift => "stats_drift",
             Rule::BenchGate => "bench_gate",
+            Rule::DocDrift => "doc_drift",
             Rule::Pragma => "pragma",
         }
     }
@@ -349,17 +354,21 @@ pub struct SourceFile {
 }
 
 /// Everything the rules scan: crate sources, bench sources (for the
-/// bench-gate drift rule), and the ci.sh script text.
+/// bench-gate drift rule), the ci.sh script text, and the repo's
+/// `docs/*.md` prose (for the doc-drift rule; `name` is the bare file
+/// name, `ci.md`).
 pub struct AnalysisInput {
     pub src: Vec<SourceFile>,
     pub benches: Vec<SourceFile>,
     pub ci_script: Option<String>,
+    pub docs: Vec<SourceFile>,
 }
 
 impl AnalysisInput {
     /// Load from a crate root (the directory holding `src/`): walks
-    /// `src/**/*.rs` and `benches/*.rs`, and reads `../ci.sh` when
-    /// present (the repo layout used by `lkgp lint` and `tests/lint.rs`).
+    /// `src/**/*.rs` and `benches/*.rs`, and reads `../ci.sh` and
+    /// `../docs/*.md` when present (the repo layout used by `lkgp lint`
+    /// and `tests/lint.rs`).
     pub fn load(crate_root: &Path) -> crate::Result<Self> {
         let src_dir = crate_root.join("src");
         let mut src = Vec::new();
@@ -373,7 +382,26 @@ impl AnalysisInput {
             .parent()
             .map(|p| p.join("ci.sh"))
             .and_then(|p| std::fs::read_to_string(p).ok());
-        Ok(AnalysisInput { src, benches, ci_script })
+        let mut docs = Vec::new();
+        if let Some(docs_dir) = crate_root.parent().map(|p| p.join("docs")) {
+            if docs_dir.is_dir() {
+                let mut entries: Vec<PathBuf> = std::fs::read_dir(&docs_dir)?
+                    .filter_map(|e| e.ok().map(|e| e.path()))
+                    .collect();
+                entries.sort();
+                for path in entries {
+                    if path.extension().map_or(false, |e| e == "md") {
+                        let name = path
+                            .file_name()
+                            .map(|n| n.to_string_lossy().into_owned())
+                            .unwrap_or_default();
+                        let text = std::fs::read_to_string(&path)?;
+                        docs.push(SourceFile { name, text });
+                    }
+                }
+            }
+        }
+        Ok(AnalysisInput { src, benches, ci_script, docs })
     }
 }
 
@@ -590,6 +618,7 @@ impl FileTokens {
             "float_cmp",
             "stats_drift",
             "bench_gate",
+            "doc_drift",
         ];
         let mut findings = Vec::new();
         let mut pragmas = Vec::new();
@@ -740,6 +769,7 @@ pub fn analyze(input: &AnalysisInput, cfg: &AnalysisConfig) -> Analysis {
     let (lock_sites, lock_edges) = locks::lock_discipline(&files, cfg, &mut findings);
     drift::stats_drift(&files, cfg, &mut findings);
     drift::bench_gate(input, &mut findings);
+    drift::doc_drift(&files, input, &mut findings);
     // Apply pragmas: a finding is justified when a same-rule pragma
     // targets its line.
     let mut pragmas: Vec<Pragma> = Vec::new();
@@ -772,6 +802,7 @@ pub fn analyze_source(name: &str, text: &str, cfg: &AnalysisConfig) -> Analysis 
         src: vec![SourceFile { name: name.into(), text: text.into() }],
         benches: Vec::new(),
         ci_script: None,
+        docs: Vec::new(),
     };
     analyze(&input, cfg)
 }

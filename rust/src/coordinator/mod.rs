@@ -131,12 +131,23 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
 /// [`crate::runtime::chaos::FaultPlan::parse`]). Under chaos, per-shard
 /// scheduler failures are reported and tolerated rather than aborting the
 /// run, and the final report includes injected-fault totals.
+///
+/// `--sample-storm` switches the pool into the posterior-sampling
+/// demonstrator instead of the scheduler fleet: a seeded Hyperband/ASHA
+/// Thompson-sampling loop that selects arms from pathwise `CurveSamples`
+/// draws served by the pool, printing the
+/// `ServiceStats::{pathwise_hits, sample_mvms}` counters and a bitwise
+/// `STORM_CHECKSUM` determinism receipt (see [`sample_storm`] and
+/// docs/sampling.md).
 pub fn serve_pool(args: &Args) -> crate::Result<()> {
     use crate::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
     use std::sync::{Arc, Mutex};
 
     if let Some(path) = args.get("replay") {
         return trace::replay_trace(args, path);
+    }
+    if args.has("sample-storm") {
+        return sample_storm(args);
     }
     let seed = args.get_u64("seed", 0);
     let n_configs = args.get_usize("configs", 16);
@@ -337,8 +348,8 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         println!(
             "shard {t} ({name}): best={:.4} regret={:.4} epochs={} rounds={} \
              requests={} split={} batch_factor={:.2} warm_hits={} warm_cache={}h/{}m \
-             solves={} replicas={}h/{}s/{}r prewarmed={} precond_rank={} cg_iters={} \
-             mvm_rows={} peak_queue={} p50={}us p99={}us",
+             solves={} replicas={}h/{}s/{}r prewarmed={} pathwise={}h/{}mvm \
+             precond_rank={} cg_iters={} mvm_rows={} peak_queue={} p50={}us p99={}us",
             report.best_value,
             oracle - report.best_value,
             report.epochs_spent,
@@ -354,6 +365,8 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             stats.replica_solves.load(std::sync::atomic::Ordering::Relaxed),
             stats.stale_replica_retires.load(std::sync::atomic::Ordering::Relaxed),
             stats.prewarmed.load(std::sync::atomic::Ordering::Relaxed),
+            stats.pathwise_hits.load(std::sync::atomic::Ordering::Relaxed),
+            stats.sample_mvms.load(std::sync::atomic::Ordering::Relaxed),
             stats.precond_rank.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_iters.load(std::sync::atomic::Ordering::Relaxed),
             stats.cg_mvm_rows.load(std::sync::atomic::Ordering::Relaxed),
@@ -397,5 +410,190 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
     if let Some(rec) = recorder {
         rec.lock().unwrap().finish(&pool)?;
     }
+    Ok(())
+}
+
+/// CLI `lkgp pool --sample-storm`: a seeded Hyperband/ASHA-style
+/// Thompson-sampling storm over one simulated task, served end to end by
+/// the [`ServicePool`]. Each rung refits on the observed curve prefixes,
+/// fires `--bursts` independently seeded `CurveSamples` requests (each
+/// drawing `--draws` joint posterior curves), votes one Thompson argmax
+/// per draw, and keeps the top `1/eta` arms; survivors train `eta` times
+/// deeper before the next rung. After a generation's first draw builds
+/// the pathwise base, every further burst is served solve-free from the
+/// cached lineage — the printed `pathwise_hits`/`sample_mvms` counters
+/// are the receipt (docs/sampling.md, docs/serving.md).
+///
+/// The default `--workers 1` driver is strictly serial, so for a fixed
+/// `--seed` the printed `STORM_CHECKSUM` (FNV-1a over the bits of every
+/// sampled value) is identical across processes and `--threads` settings;
+/// ci.sh's `samples` gate compares it cross-process. Raising `--workers`
+/// keeps every burst's seed-determinism but lets pre-warming race the
+/// first burst of a rung, which may shift which lineage that burst lands
+/// on (and therefore the counters).
+///
+/// The library-level version of this loop, with replica stealing enabled,
+/// is `examples/automl_loop.rs`.
+fn sample_storm(args: &Args) -> crate::Result<()> {
+    use std::sync::atomic::Ordering::Relaxed;
+
+    let seed = args.get_u64("seed", 0);
+    let n_configs = args.get_usize("configs", 16).max(2);
+    let draws = args.get_usize("draws", 16).max(1);
+    let bursts = args.get_usize("bursts", 4).max(1);
+    let eta = args.get_usize("eta", 2).max(2);
+    let replicas = args.get_usize("replicas", PoolCfg::default().max_replicas);
+    let workers = args.get_usize("workers", 1).max(1);
+    let warm = args.get("warm").unwrap_or("on") != "off";
+    if let Some(t) = args.get("threads") {
+        let n: usize = t.parse().map_err(|_| {
+            crate::LkgpError::Coordinator(format!("bad --threads '{t}' (expected a count >= 1)"))
+        })?;
+        let _ = crate::util::set_num_threads(n);
+    }
+
+    let mut rng = crate::rng::Pcg64::new(seed);
+    let task =
+        crate::lcbench::Task::generate(crate::lcbench::Preset::FashionMnist, n_configs, &mut rng);
+    let m = task.m();
+    let oracle = (0..task.n())
+        .map(|i| task.curves[(i, m - 1)])
+        .fold(f64::NEG_INFINITY, f64::max);
+
+    let engine =
+        Box::new(crate::runtime::RustEngine::default()) as Box<dyn crate::runtime::Engine>;
+    let pool = ServicePool::spawn(
+        vec![engine],
+        PoolCfg { workers, warm_start: warm, max_replicas: replicas, ..Default::default() },
+    );
+    let handle = pool.handle(0);
+    println!(
+        "storm: {} arms, eta={eta}, {bursts} bursts x {draws} draws per rung, \
+         warm_start={warm}, workers={workers}, max_replicas={replicas}, threads={}",
+        task.n(),
+        crate::util::num_threads(),
+    );
+
+    let mut reg = Registry::new();
+    let ids: Vec<TrialId> =
+        (0..task.n()).map(|i| reg.add(task.configs.row(i).to_vec())).collect();
+    let mut store = CurveStore::new(m);
+    let mut observed = vec![0usize; task.n()];
+    for (i, &id) in ids.iter().enumerate() {
+        // rung 0: every arm gets one epoch
+        reg.observe(id, task.curves[(i, 0)], m)?;
+        observed[i] = 1;
+    }
+    let mut epochs_spent = task.n();
+
+    // FNV-1a over the bits of every sampled value: the determinism receipt.
+    let fnv = |mut h: u64, bits: u64| -> u64 {
+        for shift in [0u32, 8, 16, 24, 32, 40, 48, 56] {
+            h = (h ^ ((bits >> shift) & 0xff)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    };
+    let mut checksum = 0xcbf2_9ce4_8422_2325u64;
+
+    let mut survivors: Vec<usize> = (0..task.n()).collect();
+    let mut rung = 0usize;
+    while survivors.len() > 1 {
+        let snapshot = store.snapshot(&reg)?;
+        let theta = handle.refit(snapshot.clone(), Vec::new(), seed.wrapping_add(rung as u64))?;
+        let n_train = snapshot.data.n();
+        // Query rows for the surviving arms, in normalized config space.
+        let pos: std::collections::HashMap<TrialId, usize> = snapshot
+            .all_ids
+            .iter()
+            .enumerate()
+            .map(|(r, &id)| (id, r))
+            .collect();
+        let mut xq = crate::linalg::Matrix::zeros(survivors.len(), snapshot.all_x.cols());
+        for (r, &arm) in survivors.iter().enumerate() {
+            xq.row_mut(r).copy_from_slice(snapshot.all_x.row(pos[&ids[arm]]));
+        }
+        // The storm proper: independently seeded CurveSamples bursts. The
+        // first burst of a fresh generation may pay the training solve;
+        // the rest ride the cached pathwise lineage solve-free.
+        let mut wins = vec![0usize; survivors.len()];
+        for b in 0..bursts {
+            // distinct per-burst seeds, pinned under 2^53 so a `--record`ed
+            // storm stays trace-representable (coordinator::trace)
+            let burst_seed = seed
+                .wrapping_add(((rung * bursts + b) as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+                & ((1u64 << 53) - 1);
+            let samples = handle.sample_curves(
+                snapshot.clone(),
+                theta.clone(),
+                xq.clone(),
+                draws,
+                burst_seed,
+            )?;
+            for smp in &samples {
+                // Thompson: one argmax vote per joint draw. Selection runs
+                // on the standardized sampled final-epoch values — the
+                // YTransform is monotone, so the argmax is unchanged.
+                let (mut best, mut best_v) = (0usize, f64::NEG_INFINITY);
+                for r in 0..survivors.len() {
+                    let v = smp[(n_train + r, m - 1)];
+                    checksum = fnv(checksum, v.to_bits());
+                    if v > best_v {
+                        best_v = v;
+                        best = r;
+                    }
+                }
+                wins[best] += 1;
+            }
+        }
+        // ASHA-style successive halving on Thompson win counts (ties break
+        // toward the lower row index, keeping selection deterministic).
+        let keep = ((survivors.len() + eta - 1) / eta).max(1);
+        let mut order: Vec<usize> = (0..survivors.len()).collect();
+        order.sort_by(|&a, &b| wins[b].cmp(&wins[a]).then(a.cmp(&b)));
+        let mut kept: Vec<usize> = order[..keep].iter().map(|&r| survivors[r]).collect();
+        kept.sort_unstable();
+        println!(
+            "rung {rung}: {} arms -> {} survivors (top wins {}/{})",
+            survivors.len(),
+            keep,
+            wins[order[0]],
+            bursts * draws,
+        );
+        survivors = kept;
+        // Promote survivors eta x deeper before the next rung.
+        for &arm in &survivors {
+            let target = (observed[arm] * eta).min(task.lengths[arm]).min(m);
+            while observed[arm] < target {
+                reg.observe(ids[arm], task.curves[(arm, observed[arm])], m)?;
+                observed[arm] += 1;
+                epochs_spent += 1;
+            }
+        }
+        rung += 1;
+    }
+
+    let winner = survivors[0];
+    let final_v = task.curves[(winner, m - 1)];
+    let stats = pool.stats(0);
+    println!(
+        "winner: arm {winner} final={final_v:.4} oracle={oracle:.4} regret={:.4} \
+         epochs={epochs_spent} (full grid would be {})",
+        oracle - final_v,
+        task.n() * m,
+    );
+    println!(
+        "storm stats: requests={} solves={} pathwise_hits={} sample_mvms={} \
+         replicas={}h/{}s prewarmed={} warm_cache={}h/{}m",
+        stats.requests.load(Relaxed),
+        stats.engine_solves.load(Relaxed),
+        stats.pathwise_hits.load(Relaxed),
+        stats.sample_mvms.load(Relaxed),
+        stats.replica_hits.load(Relaxed),
+        stats.replica_solves.load(Relaxed),
+        stats.prewarmed.load(Relaxed),
+        stats.warm_cache_hits.load(Relaxed),
+        stats.warm_cache_misses.load(Relaxed),
+    );
+    println!("STORM_CHECKSUM=0x{checksum:016x}");
     Ok(())
 }

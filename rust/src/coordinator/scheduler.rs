@@ -212,6 +212,7 @@ impl Scheduler {
             xq: None,
             cross: Vec::new(),
             precond: None,
+            path: None,
         });
 
         // forecast finals for every active (non-terminal) config

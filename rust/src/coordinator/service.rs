@@ -209,6 +209,13 @@ pub struct ServiceStats {
     /// Submissions rejected fail-fast while the shard was quarantined
     /// (typed `LkgpError::Quarantined` reply).
     pub quarantine_rejects: AtomicU64,
+    /// `CurveSamples` engine calls served pathwise with ZERO new CG
+    /// solves (the lineage-warm fast path; docs/sampling.md). Writer and
+    /// replica paths both count here.
+    pub pathwise_hits: AtomicU64,
+    /// Factored `B⁻¹` applies spent drawing pathwise samples (one per
+    /// sample — the marginal per-sample cost `BENCH_samples.json` gates).
+    pub sample_mvms: AtomicU64,
 }
 
 impl ServiceStats {
@@ -327,10 +334,12 @@ struct EngineSlot {
 }
 
 /// How a pending query batch's answers are delivered: raw typed answers,
-/// or unwrapped to the legacy `PredictFinal` shape.
+/// unwrapped to the legacy `PredictFinal` shape, or unwrapped to the
+/// legacy `SampleCurves` sample-matrix shape.
 enum PendingReply {
     Preds(Sender<crate::Result<Vec<(f64, f64)>>>),
     Answers(Sender<crate::Result<Vec<Answer>>>),
+    Curves(Sender<crate::Result<Vec<Matrix>>>),
 }
 
 /// A queued query batch awaiting coalescing.
@@ -430,6 +439,10 @@ fn flush_queries(
             None
         };
         let precond = lineage.as_ref().and_then(|w| w.precond.clone());
+        // Pathwise lineage is staleness-checked by the sampler itself
+        // (bitwise theta), so carrying it is always safe — like `precond`,
+        // it is deliberately NOT gated by `warm_enabled`.
+        let path = lineage.as_ref().and_then(|w| w.path.clone());
         let t0 = Instant::now();
         let result = slot.engine.answer_batch(
             &theta0,
@@ -437,6 +450,7 @@ fn flush_queries(
             &all,
             guess.as_deref(),
             precond.clone(),
+            path.clone(),
         );
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats
@@ -460,6 +474,9 @@ fn flush_queries(
                     precond: out_precond,
                     escalations,
                     dense_fallbacks,
+                    pathwise_hits,
+                    sample_mvms,
+                    path: out_path,
                 } = outcome;
                 stats
                     .escalations
@@ -467,6 +484,12 @@ fn flush_queries(
                 stats
                     .dense_fallbacks
                     .fetch_add(dense_fallbacks as u64, Ordering::Relaxed);
+                stats
+                    .pathwise_hits
+                    .fetch_add(pathwise_hits as u64, Ordering::Relaxed);
+                stats
+                    .sample_mvms
+                    .fetch_add(sample_mvms as u64, Ordering::Relaxed);
                 stats.cg_iters.fetch_add(cg_iters as u64, Ordering::Relaxed);
                 stats
                     .cg_mvm_rows
@@ -488,14 +511,15 @@ fn flush_queries(
                             xq,
                             cross: cross.unwrap_or_default(),
                             precond: out_precond,
+                            path: out_path,
                         }));
                     }
                     _ => {
                         // warm starts off (or no alpha exposed): cache
-                        // ONLY the factored preconditioner (empty alpha
+                        // ONLY the amortizable factorizations (empty alpha
                         // means nothing embeds as a guess, so solves stay
                         // cold as requested).
-                        if let Some(factors) = out_precond {
+                        if out_precond.is_some() || out_path.is_some() {
                             lock_clean(&slot.warm).put(Arc::new(WarmStart {
                                 generation: snap.generation,
                                 theta: theta0.clone(),
@@ -504,7 +528,8 @@ fn flush_queries(
                                 alpha: Vec::new(),
                                 xq: None,
                                 cross: Vec::new(),
-                                precond: Some(factors),
+                                precond: out_precond,
+                                path: out_path,
                             }));
                         }
                     }
@@ -535,6 +560,7 @@ fn flush_queries(
                         span,
                         None,
                         precond.clone(),
+                        path.clone(),
                     );
                     match res {
                         Ok(outcome) => {
@@ -554,6 +580,12 @@ fn flush_queries(
                             stats
                                 .dense_fallbacks
                                 .fetch_add(outcome.dense_fallbacks as u64, Ordering::Relaxed);
+                            stats
+                                .pathwise_hits
+                                .fetch_add(outcome.pathwise_hits as u64, Ordering::Relaxed);
+                            stats
+                                .sample_mvms
+                                .fetch_add(outcome.sample_mvms as u64, Ordering::Relaxed);
                             let mut answers = outcome.answers.into_iter();
                             match reply {
                                 PendingReply::Answers(tx) => {
@@ -564,6 +596,17 @@ fn flush_queries(
                                         Some(Answer::Final(v)) => Ok(v),
                                         _ => Err(crate::LkgpError::Coordinator(
                                             "engine answered PredictFinal with a non-Final \
+                                             answer"
+                                                .into(),
+                                        )),
+                                    };
+                                    let _ = tx.send(send);
+                                }
+                                PendingReply::Curves(tx) => {
+                                    let send = match answers.next() {
+                                        Some(Answer::Curves(v)) => Ok(v),
+                                        _ => Err(crate::LkgpError::Coordinator(
+                                            "engine answered SampleCurves with a non-Curves \
                                              answer"
                                                 .into(),
                                         )),
@@ -605,6 +648,15 @@ fn scatter_answers(replies: Vec<(PendingReply, usize)>, answers: Vec<Answer>) {
                 };
                 let _ = tx.send(send);
             }
+            PendingReply::Curves(tx) => {
+                let send = match span.into_iter().next() {
+                    Some(Answer::Curves(v)) => Ok(v),
+                    _ => Err(crate::LkgpError::Coordinator(
+                        "engine answered SampleCurves with a non-Curves answer".into(),
+                    )),
+                };
+                let _ = tx.send(send);
+            }
         }
     }
 }
@@ -619,6 +671,9 @@ fn send_error(reply: PendingReply, err: crate::LkgpError) {
             let _ = tx.send(Err(err));
         }
         PendingReply::Answers(tx) => {
+            let _ = tx.send(Err(err));
+        }
+        PendingReply::Curves(tx) => {
             let _ = tx.send(Err(err));
         }
     }
@@ -698,6 +753,7 @@ fn prewarm_generation(
         xq: None,
         cross: Vec::new(),
         precond,
+        path: post.path_state(),
     }));
     stats.prewarmed.fetch_add(1, Ordering::Relaxed);
     stats
@@ -736,6 +792,7 @@ fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64
             xq: None,
             cross: Vec::new(),
             precond: None,
+            path: None,
         },
     };
     warm.put(Arc::new(updated));
@@ -845,22 +902,21 @@ fn process_batch(
                 let _ = resp.send(result);
             }
             Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
-                flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
-                let result = slot.engine.sample_curves(
-                    &theta,
-                    &snapshot.data,
-                    &xq,
-                    samples,
-                    seed,
-                );
-                match &result {
-                    Ok(_) => report.engine_successes += 1,
-                    Err(_) => {
-                        report.engine_failures += 1;
-                        stats.solver_failures.fetch_add(1, Ordering::Relaxed);
-                    }
+                // Sampling rides the coalesced query path as a seeded
+                // `CurveSamples` (pathwise-capable, lineage-warm, replica
+                // stealable) instead of the historical per-request
+                // `Engine::sample_curves` solve (docs/sampling.md).
+                let query = Query::CurveSamples { xq, n: samples, seed };
+                if let Err(e) = session::validate_query(&snapshot.data, &query) {
+                    let _ = resp.send(Err(e));
+                    continue;
                 }
-                let _ = resp.send(result);
+                pending.push(PendingQuery {
+                    snapshot,
+                    theta,
+                    queries: vec![query],
+                    reply: PendingReply::Curves(resp),
+                });
             }
             // lint: allow(panic) — the dispatch loop unwraps Deadline
             // envelopes before this match; reaching here is memory-safe
@@ -1736,9 +1792,9 @@ fn try_steal_reads(
             // Deadline-wrapped reads fall through to the writer (which
             // enforces expiry at pick-up); replicas only steal bare reads.
             let g = match req {
-                Request::Query { snapshot, .. } | Request::PredictFinal { snapshot, .. } => {
-                    snapshot.generation
-                }
+                Request::Query { snapshot, .. }
+                | Request::PredictFinal { snapshot, .. }
+                | Request::SampleCurves { snapshot, .. } => snapshot.generation,
                 _ => continue,
             };
             if g < fence {
@@ -1784,6 +1840,19 @@ fn try_steal_reads(
                         reply: PendingReply::Preds(resp),
                     });
                 }
+                Request::SampleCurves { snapshot, theta, xq, samples, seed, resp }
+                    if snapshot.generation == g =>
+                {
+                    // Seeded samples are deterministic functions of
+                    // (theta, data, xq, seed), so a replica's draws are
+                    // bit-identical to the writer's (docs/sampling.md).
+                    stolen.push(PendingQuery {
+                        snapshot,
+                        theta,
+                        queries: vec![Query::CurveSamples { xq, n: samples, seed }],
+                        reply: PendingReply::Curves(resp),
+                    });
+                }
                 other => keep.push_back(other),
             }
         }
@@ -1820,6 +1889,23 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
                         snapshot: p.snapshot,
                         theta: p.theta,
                         xq,
+                        resp: tx,
+                    }
+                }
+                PendingReply::Curves(tx) => {
+                    let (xq, samples, seed) = match p.queries.into_iter().next() {
+                        Some(Query::CurveSamples { xq, n, seed }) => (xq, n, seed),
+                        // lint: allow(panic) — enqueue constructs every
+                        // Curves-reply entry with exactly one CurveSamples;
+                        // any other shape is a protocol bug upstream.
+                        _ => unreachable!("SampleCurves reads carry one CurveSamples"),
+                    };
+                    Request::SampleCurves {
+                        snapshot: p.snapshot,
+                        theta: p.theta,
+                        xq,
+                        samples,
+                        seed,
                         resp: tx,
                     }
                 }
@@ -1889,8 +1975,13 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
             all.extend(p.queries);
         }
         let stacked = session::stacked_final_xq(&all);
+        // The pathwise lineage checks its own staleness (bitwise theta),
+        // so it rides along unconditionally — with a seeded alpha it makes
+        // CurveSamples solve-free and bit-identical to the writer's
+        // (docs/sampling.md).
         let mut post = Posterior::new(snap.data.clone(), theta0.clone(), cfg.clone())
-            .with_precond(lineage.precond.clone());
+            .with_precond(lineage.precond.clone())
+            .with_path(lineage.path.clone());
         let seeded = same_theta(&lineage.theta)
             && lineage.m == snap.data.m()
             && lineage.row_ids == *snap.row_ids
@@ -1960,6 +2051,12 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
         stats
             .dense_fallbacks
             .fetch_add(post.dense_fallbacks() as u64, Ordering::Relaxed);
+        stats
+            .pathwise_hits
+            .fetch_add(post.pathwise_hits() as u64, Ordering::Relaxed);
+        stats
+            .sample_mvms
+            .fetch_add(post.sample_mvms() as u64, Ordering::Relaxed);
         if let Some(f) = post.precond() {
             stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
         }
@@ -1991,11 +2088,18 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                         let span = &all[span_off..span_off + len];
                         let mut solo =
                             Posterior::new(snap.data.clone(), theta0.clone(), cfg.clone())
-                                .with_precond(lineage.precond.clone());
+                                .with_precond(lineage.precond.clone())
+                                .with_path(lineage.path.clone());
                         let res = solo.answer_batch(span);
                         let solves = solo.solve_calls() as u64;
                         stats.replica_solves.fetch_add(solves, Ordering::Relaxed);
                         stats.engine_solves.fetch_add(solves, Ordering::Relaxed);
+                        stats
+                            .pathwise_hits
+                            .fetch_add(solo.pathwise_hits() as u64, Ordering::Relaxed);
+                        stats
+                            .sample_mvms
+                            .fetch_add(solo.sample_mvms() as u64, Ordering::Relaxed);
                         if shared.fences[si].load(Ordering::Relaxed) > g {
                             retired.push(PendingQuery {
                                 snapshot: snap.clone(),
@@ -2339,6 +2443,7 @@ mod tests {
                 xq: None,
                 cross: Vec::new(),
                 precond: None,
+                path: None,
             })
         }
         let mut lru = WarmLru::new(2);

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::gp::lkgp::Dataset;
 use crate::gp::operator::PrecondFactors;
+use crate::gp::pathwise::PathLineage;
 use crate::gp::transforms::{TTransform, XTransform, YTransform};
 use crate::linalg::Matrix;
 
@@ -49,6 +50,13 @@ pub struct WarmStart {
     /// via `PrecondFactors::compatible`, so carrying old factors is always
     /// safe. None when preconditioning is off.
     pub precond: Option<Arc<PrecondFactors>>,
+    /// Pathwise-sampling lineage (prior-path factors + query cross
+    /// blocks) from the cached solve's session. Staleness is checked by
+    /// the sampler via `PathBase::compatible`/`PathQuery::matches`, so
+    /// carrying old state is always safe; with a fresh alpha it makes
+    /// `CurveSamples` solve-free (docs/sampling.md). None until a sampling
+    /// query ran.
+    pub path: Option<PathLineage>,
 }
 
 impl WarmStart {
@@ -292,6 +300,7 @@ mod tests {
             xq: None,
             cross: Vec::new(),
             precond: None,
+            path: None,
         });
         reg.observe(a, 0.6, 4).unwrap();
         let snap2 = store.snapshot(&reg).unwrap();
@@ -311,6 +320,7 @@ mod tests {
             xq: None,
             cross: Vec::new(),
             precond: None,
+            path: None,
         };
         assert!(theta_only.embed_alpha(&snap2.row_ids, 4).is_none());
     }
@@ -327,6 +337,7 @@ mod tests {
             xq: Some(xq.clone()),
             cross: vec![5.0; 8],
             precond: None,
+            path: None,
         };
         // identical rows + queries: alpha and every cross column embed
         let full = warm
@@ -354,6 +365,7 @@ mod tests {
             xq: None,
             cross: Vec::new(),
             precond: None,
+            path: None,
         };
         // new problem has an extra row inserted between the cached ones
         let x0 = warm

@@ -56,6 +56,11 @@ enum TraceQuery {
     Variance { rows: Vec<usize> },
     Quantiles { rows: Vec<usize>, ps: Vec<f64> },
     MeanAtSteps { rows: Vec<usize>, steps: Vec<usize> },
+    /// Seeded joint posterior draws. Samples are a deterministic function
+    /// of `(theta, data, xq, seed)` (docs/sampling.md), so replaying the
+    /// recorded seed reproduces the recorded run's draws bit for bit —
+    /// the concurrent parity pass asserts exactly that.
+    CurveSamples { rows: Vec<usize>, n: usize, seed: u64 },
 }
 
 impl TraceQuery {
@@ -77,6 +82,9 @@ impl TraceQuery {
             }
             TraceQuery::MeanAtSteps { rows, steps } => {
                 Query::MeanAtSteps { xq: xq(rows), steps: steps.clone() }
+            }
+            TraceQuery::CurveSamples { rows, n, seed } => {
+                Query::CurveSamples { xq: xq(rows), n: *n, seed: *seed }
             }
         }
     }
@@ -101,13 +109,21 @@ impl TraceQuery {
                 ("rows", Json::arr_usize(rows)),
                 ("steps", Json::arr_usize(steps)),
             ]),
+            TraceQuery::CurveSamples { rows, n, seed } => Json::obj(vec![
+                ("kind", Json::Str("curve_samples".into())),
+                ("rows", Json::arr_usize(rows)),
+                ("n", Json::Num(*n as f64)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
         }
     }
 
     /// Map a live typed query back to trace form by locating each query
     /// row in the snapshot's normalized config matrix (bitwise). `None`
-    /// when the query is not trace-representable (`CurveSamples`, `Mll`,
-    /// or ad-hoc coordinates that match no registered config).
+    /// when the query is not trace-representable (`Mll`, ad-hoc
+    /// coordinates that match no registered config, or a `CurveSamples`
+    /// seed at or above 2^53 that would not round-trip through JSON's
+    /// f64 numbers).
     fn from_query(q: &Query, all_x: &Matrix) -> Option<TraceQuery> {
         let map_rows = |xq: &Matrix| -> Option<Vec<usize>> {
             let mut rows = Vec::with_capacity(xq.rows());
@@ -139,6 +155,12 @@ impl TraceQuery {
             }
             Query::MeanAtSteps { xq, steps } => {
                 map_rows(xq).map(|rows| TraceQuery::MeanAtSteps { rows, steps: steps.clone() })
+            }
+            Query::CurveSamples { xq, n, seed } => {
+                if *seed >= 1u64 << 53 {
+                    return None; // would not survive the JSON f64 round-trip
+                }
+                map_rows(xq).map(|rows| TraceQuery::CurveSamples { rows, n: *n, seed: *seed })
             }
             _ => None,
         }
@@ -194,6 +216,20 @@ fn parse_trace_query(
                 return Err(format!("steps must lie in 0..{max_epochs}"));
             }
             Ok(TraceQuery::MeanAtSteps { rows, steps })
+        }
+        "curve_samples" => {
+            let n = v.get("n").and_then(Json::as_usize).unwrap_or(0);
+            if n == 0 {
+                return Err("curve_samples needs n >= 1".into());
+            }
+            let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0);
+            // lint: allow(float_eq) — fract()!=0.0 is the exact
+            // non-integer test guarding the u64 seed cast, mirroring the
+            // corpus-pin check in TraceRecorder::new.
+            if seed < 0.0 || seed.fract() != 0.0 || seed >= 9_007_199_254_740_992.0 {
+                return Err("curve_samples seed must be an integer in [0, 2^53)".into());
+            }
+            Ok(TraceQuery::CurveSamples { rows, n, seed: seed as u64 })
         }
         other => Err(format!("unknown query kind '{other}'")),
     }
@@ -899,9 +935,9 @@ pub struct TraceRecorder {
     header: Json,
     lines: Vec<String>,
     seen_gens: BTreeSet<(usize, u64)>,
-    /// Requests that could not be expressed in trace form (CurveSamples,
-    /// Mll, or query rows matching no registered config) — forwarded to
-    /// the pool but not recorded.
+    /// Requests that could not be expressed in trace form (Mll, query
+    /// rows matching no registered config, or a sampling seed at or above
+    /// 2^53) — forwarded to the pool but not recorded.
     skipped: usize,
     requests: Vec<u64>,
     refits: Vec<u64>,
@@ -1099,7 +1135,16 @@ impl PredictClient for RecordingHandle {
         samples: usize,
         seed: u64,
     ) -> crate::Result<Vec<Matrix>> {
-        // sampling is not trace-representable; forward without recording
+        // Seeded draws are deterministic, so sampling IS
+        // trace-representable: record the seeded query and let the
+        // replay's parity pass assert bitwise sample parity. (A seed at
+        // or above 2^53 is the one unrepresentable case — `from_query`
+        // skips it rather than record a lossy pin.)
+        let query = vec![Query::CurveSamples { xq: xq.clone(), n: samples, seed }];
+        self.rec
+            .lock()
+            .unwrap()
+            .record_query(self.task, &snapshot, &query);
         self.inner.sample_curves(snapshot, theta, xq, samples, seed)
     }
 

@@ -139,6 +139,11 @@ pub struct SolverCfg {
     /// Precision mode for the CG solves (fit, predict, posterior samples,
     /// session training solve). SLQ always runs f64 on the exact operator.
     pub precision: Precision,
+    /// Serve `CurveSamples` through pathwise conditioning when the probe
+    /// check certifies the full-rank factored apply (docs/sampling.md):
+    /// each extra sample costs one factored apply instead of a CG solve.
+    /// `false` pins the historical batched-CG sampler.
+    pub pathwise: bool,
 }
 
 impl Default for SolverCfg {
@@ -151,6 +156,7 @@ impl Default for SolverCfg {
             jitter: 1e-6,
             precond: PrecondCfg::Off,
             precision: Precision::F64,
+            pathwise: true,
         }
     }
 }

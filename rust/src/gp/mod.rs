@@ -13,11 +13,13 @@ pub mod lkgp;
 pub mod naive;
 pub mod operator;
 pub mod params;
+pub mod pathwise;
 pub mod session;
 pub mod trainer;
 pub mod transforms;
 
 pub use lkgp::{Dataset, MllEval, Precision, SolverCfg};
+pub use pathwise::{PathBase, PathLineage, PathQuery};
 pub use session::{split_queries, Answer, FitMethod, FitSession, Posterior, Query};
 pub use operator::{
     KronPrecondFactors, LatentKronPrecond, MaskedKronOp, MaskedKronOpF32, ObsGramPrecond,

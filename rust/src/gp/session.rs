@@ -35,6 +35,7 @@ use crate::rng::Pcg64;
 
 use super::lkgp::{self, Dataset, MllEval, SolverCfg};
 use super::operator::PrecondFactors;
+use super::pathwise::{self, PathBase, PathLineage, PathQuery};
 
 // ---------------------------------------------------------------------------
 // Typed queries
@@ -529,11 +530,23 @@ pub struct Posterior {
     /// External warm-start guess (lineage) consumed by the first solve:
     /// either a flattened `(n, m)` alpha or a full `(q+1)*n*m` buffer.
     guess: Option<Vec<f64>>,
+    /// Pathwise sampling state for this `(dataset, theta)` pair
+    /// (docs/sampling.md) — lineage-injected or built on first use.
+    path_base: Option<Arc<PathBase>>,
+    /// Last query-keyed pathwise factorization (Thompson storms repeat
+    /// the same candidate matrix).
+    path_query: Option<Arc<PathQuery>>,
     cg_iters: usize,
     cg_mvm_rows: usize,
     solve_calls: usize,
     escalations: usize,
     dense_fallbacks: usize,
+    /// `CurveSamples` queries answered pathwise with ZERO solves in the
+    /// call (the lineage-warm fast path).
+    pathwise_hits: usize,
+    /// Factored `B⁻¹` applies performed by pathwise sampling (one per
+    /// drawn sample — the marginal cost the bench gate pins).
+    sample_mvms: usize,
     last_cg: Option<CgStats>,
 }
 
@@ -550,11 +563,15 @@ impl Posterior {
             preds: Vec::new(),
             precond: None,
             guess: None,
+            path_base: None,
+            path_query: None,
             cg_iters: 0,
             cg_mvm_rows: 0,
             solve_calls: 0,
             escalations: 0,
             dense_fallbacks: 0,
+            pathwise_hits: 0,
+            sample_mvms: 0,
             last_cg: None,
         }
     }
@@ -571,6 +588,17 @@ impl Posterior {
     /// against theta and the mask before use, so old factors are safe).
     pub fn with_precond(mut self, precond: Option<Arc<PrecondFactors>>) -> Self {
         self.precond = precond;
+        self
+    }
+
+    /// Inject pathwise sampling lineage (docs/sampling.md). Compatibility
+    /// is re-checked bitwise against theta and the mask before use, so
+    /// stale lineage is safe to pass — it is simply rebuilt on demand.
+    pub fn with_path(mut self, path: Option<PathLineage>) -> Self {
+        if let Some(p) = path {
+            self.path_base = Some(p.base);
+            self.path_query = p.query;
+        }
         self
     }
 
@@ -629,11 +657,15 @@ impl Posterior {
             preds: self.preds.clone(),
             precond: self.precond.clone(),
             guess: self.guess.clone(),
+            path_base: self.path_base.clone(),
+            path_query: self.path_query.clone(),
             cg_iters: 0,
             cg_mvm_rows: 0,
             solve_calls: 0,
             escalations: 0,
             dense_fallbacks: 0,
+            pathwise_hits: 0,
+            sample_mvms: 0,
             last_cg: None,
         }
     }
@@ -709,14 +741,30 @@ impl Posterior {
     }
 
     /// Posterior curve samples via Matheron's rule using an external RNG
-    /// stream (the `Query::CurveSamples` path seeds its own). Reuses the
-    /// session's preconditioner cache for the pathwise solve.
+    /// stream (the `Query::CurveSamples` path seeds its own).
+    ///
+    /// With `cfg.pathwise` (the default) the samples are served through
+    /// pathwise conditioning (docs/sampling.md): the cached training
+    /// solve supplies the data half of the Matheron correction and the
+    /// sample half is one exact factored apply per sample — ZERO CG
+    /// solves when the lineage already carries a converged `alpha`
+    /// (counted in [`Posterior::pathwise_hits`]). When the deterministic
+    /// probe check rejects the factored apply (or `cfg.pathwise` is
+    /// off), the historical batched-CG sampler answers instead — each
+    /// path is bitwise stable per seed, and the probe decision is a pure
+    /// function of `(theta, dataset)`, so writer, replicas, and replays
+    /// always take the same path.
     pub fn sample_curves_with(
         &mut self,
         xq: &Matrix,
         s: usize,
         rng: &mut Pcg64,
     ) -> Result<Vec<Matrix>> {
+        if self.cfg.pathwise {
+            if let Some(samples) = self.sample_pathwise(xq, s, rng)? {
+                return Ok(samples);
+            }
+        }
         let (samples, cg) = lkgp::posterior_samples_impl(
             &self.theta,
             &self.data,
@@ -728,6 +776,56 @@ impl Posterior {
         )?;
         self.record_cg(cg);
         Ok(samples)
+    }
+
+    /// Pathwise sampling attempt: `Ok(None)` means the factored apply
+    /// failed its probe check and the caller should fall back to the
+    /// batched-CG sampler (no RNG state was consumed).
+    fn sample_pathwise(
+        &mut self,
+        xq: &Matrix,
+        s: usize,
+        rng: &mut Pcg64,
+    ) -> Result<Option<Vec<Matrix>>> {
+        let solves_before = self.solve_calls;
+        // Query-independent state: reuse bitwise-compatible lineage,
+        // build (deterministically) otherwise.
+        let base = match &self.path_base {
+            Some(b) if b.compatible(&self.theta, &self.data) => b.clone(),
+            _ => {
+                let b = Arc::new(PathBase::build(&self.theta, &self.data, &self.cfg)?);
+                self.path_base = Some(b.clone());
+                b
+            }
+        };
+        if !base.exact() {
+            return Ok(None);
+        }
+        // The data half of the correction: the converged training solve
+        // (free when the lineage is warm, one solve when cold).
+        self.ensure_alpha()?;
+        let query = match &self.path_query {
+            Some(q) if q.matches(xq) => q.clone(),
+            _ => {
+                let q = Arc::new(PathQuery::build(&base, &self.data, xq, &self.cfg)?);
+                self.path_query = Some(q.clone());
+                q
+            }
+        };
+        let alpha = match &self.alpha {
+            Some(a) => a.clone(),
+            None => {
+                return Err(crate::LkgpError::Coordinator(
+                    "training solve left no alpha cached".into(),
+                ))
+            }
+        };
+        let samples = pathwise::sample_paths(&base, &query, &self.data, &alpha, s, rng)?;
+        self.sample_mvms += s;
+        if self.solve_calls == solves_before {
+            self.pathwise_hits += 1;
+        }
+        Ok(Some(samples))
     }
 
     /// MAP objective value + gradient at the session's theta with a fresh
@@ -912,6 +1010,29 @@ impl Posterior {
     /// Factored preconditioner state after the last solve.
     pub fn precond(&self) -> Option<Arc<PrecondFactors>> {
         self.precond.clone()
+    }
+
+    /// Pathwise sampling lineage after the last `CurveSamples` query
+    /// (`Arc`-shared; the serving layer caches it in `WarmStart` so later
+    /// sampling traffic against the same `(generation, theta)` is
+    /// solve-free — docs/sampling.md).
+    pub fn path_state(&self) -> Option<PathLineage> {
+        self.path_base.as_ref().map(|b| PathLineage {
+            base: b.clone(),
+            query: self.path_query.clone(),
+        })
+    }
+
+    /// `CurveSamples` queries answered pathwise with zero solves in the
+    /// call (the lineage-warm fast path; docs/sampling.md).
+    pub fn pathwise_hits(&self) -> usize {
+        self.pathwise_hits
+    }
+
+    /// Factored `B⁻¹` applies performed by pathwise sampling (one per
+    /// drawn sample).
+    pub fn sample_mvms(&self) -> usize {
+        self.sample_mvms
     }
 
     /// Stats of the most recent underlying solve.
@@ -1290,5 +1411,94 @@ mod tests {
         for (a, b) in warm.iter().zip(&solves) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn pathwise_samples_zero_solves_when_lineage_warm() {
+        let data = toy(6, 5, 2, 41);
+        let theta = Theta::default_packed(2);
+        let cfg = SolverCfg::default();
+        let mut rng = Pcg64::new(42);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let q = Query::CurveSamples { xq: xq.clone(), n: 3, seed: 7 };
+
+        // cold writer: exactly one (training) solve, never a per-sample one
+        let mut parent = Posterior::new(data.clone(), theta.clone(), cfg.clone());
+        let want = parent.answer(&q).unwrap();
+        assert_eq!(parent.solve_calls(), 1, "cold pathwise pays only the training solve");
+        assert_eq!(parent.pathwise_hits(), 0, "a cold call is not a hit");
+        assert_eq!(parent.sample_mvms(), 3, "one factored apply per sample");
+        let lineage = parent.path_state().expect("pathwise state cached");
+
+        // seeded from raw lineage buffers (the WarmStart shape): ZERO solves
+        let mut warm = Posterior::new(data.clone(), theta.clone(), cfg.clone())
+            .with_solves(parent.alpha().unwrap().to_vec(), None, Vec::new())
+            .with_path(Some(lineage));
+        let got = warm.answer(&q).unwrap();
+        assert_eq!(warm.solve_calls(), 0, "warm lineage sampling must be solve-free");
+        assert_eq!(warm.pathwise_hits(), 1);
+        assert_eq!(warm.sample_mvms(), 3);
+        assert!(got.bits_eq(&want), "same seed must be bitwise identical");
+
+        // a fork (the replica primitive) is solve-free and bit-identical too
+        let mut fork = parent.fork();
+        let got2 = fork.answer(&q).unwrap();
+        assert_eq!(fork.solve_calls(), 0, "fork must reuse pathwise lineage");
+        assert_eq!(fork.pathwise_hits(), 1);
+        assert!(got2.bits_eq(&want));
+
+        // further draws (new seeds) stay solve-free; counters accumulate
+        let _ = fork
+            .answer(&Query::CurveSamples { xq: xq.clone(), n: 5, seed: 99 })
+            .unwrap();
+        assert_eq!(fork.solve_calls(), 0);
+        assert_eq!(fork.pathwise_hits(), 2);
+        assert_eq!(fork.sample_mvms(), 8);
+    }
+
+    #[test]
+    fn pathwise_off_pins_historical_sampler() {
+        let data = toy(7, 5, 2, 43);
+        let theta = Theta::default_packed(2);
+        let cfg = SolverCfg { pathwise: false, ..Default::default() };
+        let mut rng = Pcg64::new(44);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let seed = 17u64;
+        let mut post = Posterior::new(data.clone(), theta.clone(), cfg.clone());
+        let got = post
+            .answer(&Query::CurveSamples { xq: xq.clone(), n: 2, seed })
+            .unwrap();
+        assert_eq!(post.pathwise_hits(), 0);
+        assert_eq!(post.sample_mvms(), 0);
+        assert_eq!(post.solve_calls(), 1, "historical path solves per batch");
+        // bit-exact with the historical impl under the same RNG stream
+        let mut hist_rng = Pcg64::new(seed);
+        let mut cache = None;
+        let (want, _) = lkgp::posterior_samples_impl(
+            &theta, &data, &xq, 2, &cfg, &mut hist_rng, &mut cache,
+        )
+        .unwrap();
+        assert!(got.bits_eq(&Answer::Curves(want)));
+    }
+
+    #[test]
+    fn pathwise_lineage_stales_on_theta_drift() {
+        let data = toy(6, 5, 2, 45);
+        let theta = Theta::default_packed(2);
+        let cfg = SolverCfg::default();
+        let mut rng = Pcg64::new(46);
+        let xq = Matrix::from_vec(2, 2, rng.uniform_vec(4, 0.0, 1.0));
+        let q = Query::CurveSamples { xq, n: 2, seed: 5 };
+        let mut parent = Posterior::new(data.clone(), theta.clone(), cfg.clone());
+        let _ = parent.answer(&q).unwrap();
+        let lineage = parent.path_state().expect("state cached");
+
+        // drifted theta: stale lineage is rebuilt, not trusted
+        let mut drifted_theta = theta.clone();
+        drifted_theta[0] += 0.3;
+        let mut drifted = Posterior::new(data, drifted_theta, cfg).with_path(Some(lineage));
+        let _ = drifted.answer(&q).unwrap();
+        assert_eq!(drifted.solve_calls(), 1, "drifted theta must re-solve alpha");
+        assert_eq!(drifted.pathwise_hits(), 0, "a rebuilt+resolved call is not a hit");
     }
 }

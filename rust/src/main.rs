@@ -13,7 +13,11 @@
 //!              asserts zero errors + stats invariants (docs/ci.md);
 //!              --deadline-ms N sheds expired work with typed Timeout
 //!              errors and --chaos SPEC runs the pool under seeded fault
-//!              injection (docs/robustness.md)
+//!              injection (docs/robustness.md); --sample-storm runs the
+//!              seeded Hyperband/ASHA Thompson-sampling storm instead
+//!              (pathwise posterior draws served solve-free from cached
+//!              lineage, with a STORM_CHECKSUM determinism receipt —
+//!              docs/sampling.md)
 //!   artifacts  print the artifact manifest and verify executables load
 //!   smoke      end-to-end smoke: fit + predict on a toy problem
 //!   lint       run the in-tree invariant linter over the crate's own
@@ -43,6 +47,7 @@ fn main() -> lkgp::Result<()> {
                  [--precision f64|f32] [--corpus sim|DIR] \
                  [--record FILE] [--replay FILE [--concurrent]] \
                  [--deadline-ms N] [--chaos panic=P,diverge=P,slow=P,io=P,nan=P,seed=N] \
+                 [--sample-storm [--draws N] [--bursts N] [--eta N]] \
                  [--root CRATE_DIR] [--json ANALYSIS_PATH]"
             );
             Ok(())
@@ -141,6 +146,7 @@ fn cmd_smoke(args: &Args) -> lkgp::Result<()> {
             Query::MeanAtFinal { xq: xq.clone() },
             Query::Quantiles { xq: xq.clone(), ps: vec![0.1, 0.9] },
         ],
+        None,
         None,
         None,
     )?;

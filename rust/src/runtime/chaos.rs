@@ -28,6 +28,7 @@ use std::time::Duration;
 use crate::error::Result;
 use crate::gp::lkgp::{Dataset, SolverCfg};
 use crate::gp::operator::PrecondFactors;
+use crate::gp::pathwise::PathLineage;
 use crate::gp::session::Query;
 use crate::json::Json;
 use crate::lcbench::corpus::{Corpus, TaskMeta};
@@ -235,10 +236,11 @@ impl Engine for ChaosEngine {
         queries: &[Query],
         warm: Option<&[f64]>,
         precond: Option<Arc<PrecondFactors>>,
+        path: Option<PathLineage>,
     ) -> Result<QueryOutcome> {
         let diverge = self.roll();
         self.with_budget(diverge, |e| {
-            e.answer_batch(theta, data, queries, warm, precond)
+            e.answer_batch(theta, data, queries, warm, precond, path)
         })
     }
 
@@ -428,7 +430,7 @@ mod tests {
         let mut chaotic =
             ChaosEngine::new(RustEngine::default(), plan, 0, stats.clone());
         let out = chaotic
-            .answer_batch(&theta, &data, &queries, None, None)
+            .answer_batch(&theta, &data, &queries, None, None, None)
             .expect("ladder must recover a 1-iteration CG budget");
         assert!(stats.diverges.load(Ordering::Relaxed) >= 1);
         assert!(out.escalations > 0, "recovery must be visible as escalations");

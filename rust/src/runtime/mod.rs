@@ -30,6 +30,7 @@ use crate::error::LkgpError;
 use crate::error::Result;
 use crate::gp::lkgp::{Dataset, SolverCfg};
 use crate::gp::operator::PrecondFactors;
+use crate::gp::pathwise::PathLineage;
 use crate::gp::session::{Answer, FitMethod, FitSession, Posterior, Query};
 use crate::gp::trainer;
 #[cfg(feature = "xla")]
@@ -92,6 +93,15 @@ pub struct QueryOutcome {
     pub escalations: usize,
     /// Solves answered by the dense-Cholesky fallback rung.
     pub dense_fallbacks: usize,
+    /// `CurveSamples` calls served pathwise with zero new CG solves
+    /// (docs/sampling.md).
+    pub pathwise_hits: usize,
+    /// Factored-preconditioner applies spent drawing pathwise samples
+    /// (one per sample; the marginal cost BENCH_samples.json gates).
+    pub sample_mvms: usize,
+    /// Cached pathwise factorization (prior-path factors + query-cross
+    /// blocks) for the serving layer to carry in the `WarmStart` lineage.
+    pub path: Option<PathLineage>,
 }
 
 /// A GP backend the coordinator can drive.
@@ -148,7 +158,8 @@ pub trait Engine: Send {
     /// Answer a batch of typed queries against one model state. `warm` is
     /// an optional initial guess in the batch's stacked final-step layout
     /// (see `gp::session::stacked_final_xq`); `precond` is cached factored
-    /// preconditioner lineage. The default maps each query onto the legacy
+    /// preconditioner lineage; `path` is cached pathwise-sampling lineage
+    /// (docs/sampling.md). The default maps each query onto the legacy
     /// per-query entry points — correct but with no solve sharing — so
     /// artifact engines work unchanged; warm-capable engines override it
     /// to amortize the whole batch into one underlying solve.
@@ -159,8 +170,9 @@ pub trait Engine: Send {
         queries: &[Query],
         warm: Option<&[f64]>,
         precond: Option<Arc<PrecondFactors>>,
+        path: Option<PathLineage>,
     ) -> Result<QueryOutcome> {
-        let _ = (warm, precond);
+        let _ = (warm, precond, path);
         // same shape/level validation the session applies, so engines are
         // interchangeable: a malformed query errors instead of producing
         // engine-dependent output (e.g. NaN quantiles at p = 0)
@@ -218,6 +230,9 @@ pub trait Engine: Send {
             precond: None,
             escalations: 0,
             dense_fallbacks: 0,
+            pathwise_hits: 0,
+            sample_mvms: 0,
+            path: None,
         })
     }
 
@@ -381,10 +396,12 @@ impl Engine for RustEngine {
         queries: &[Query],
         warm: Option<&[f64]>,
         precond: Option<Arc<PrecondFactors>>,
+        path: Option<PathLineage>,
     ) -> Result<QueryOutcome> {
         let mut post = Posterior::new(data.clone(), theta.to_vec(), self.cfg.clone())
             .with_guess(warm.map(|g| g.to_vec()))
-            .with_precond(precond);
+            .with_precond(precond)
+            .with_path(path);
         let answers = post.answer_batch(queries)?;
         Ok(QueryOutcome {
             answers,
@@ -397,6 +414,9 @@ impl Engine for RustEngine {
             precond: post.precond(),
             escalations: post.escalations(),
             dense_fallbacks: post.dense_fallbacks(),
+            pathwise_hits: post.pathwise_hits(),
+            sample_mvms: post.sample_mvms(),
+            path: post.path_state(),
         })
     }
 

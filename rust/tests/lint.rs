@@ -266,9 +266,67 @@ fn bench_artifact_without_ci_gate_is_flagged() {
         src: Vec::new(),
         benches: vec![SourceFile { name: "rogue.rs".into(), text: bench.into() }],
         ci_script: Some("gate_file bench BENCH_hotpath.json".into()),
+        docs: Vec::new(),
     };
     let a = analyze(&input, &AnalysisConfig::crate_default());
     let gates: Vec<_> = a.findings.iter().filter(|f| f.rule == Rule::BenchGate).collect();
     assert_eq!(gates.len(), 1, "{:?}", a.findings);
     assert!(gates[0].message.contains("BENCH_rogue.json"));
+}
+
+#[test]
+fn fixture_doc_drift_fires_on_all_checks_with_pragma_honored() {
+    use lkgp::analysis::SourceFile;
+    let input = AnalysisInput {
+        src: vec![SourceFile { name: "main.rs".into(), text: fixture("doc_drift.rs") }],
+        benches: vec![SourceFile {
+            name: "orphan.rs".into(),
+            text: "fn main() { out(\"BENCH_unlisted.json\"); }\n".into(),
+        }],
+        // ci.sh gates the artifact, but docs/ci.md's inventory omits it:
+        // bench_gate stays quiet, doc_drift fires.
+        ci_script: Some("gate_file bench BENCH_unlisted.json".into()),
+        docs: vec![
+            SourceFile { name: "present.md".into(), text: "explains `--documented`".into() },
+            SourceFile { name: "ci.md".into(), text: "artifacts: BENCH_known.json".into() },
+        ],
+    };
+    let a = analyze(&input, &AnalysisConfig::crate_default());
+    let drift = hits(&a, Rule::DocDrift);
+    // absent.md (module doc, line 2), waived.md (pragma'd, line 6),
+    // --undocumented (usage string, line 7), BENCH_unlisted (bench, line 1).
+    assert_eq!(drift, vec![(1, false), (2, false), (6, true), (7, false)], "{:?}", a.findings);
+    let msgs: Vec<&str> = a
+        .findings
+        .iter()
+        .filter(|f| f.rule == Rule::DocDrift)
+        .map(|f| f.message.as_str())
+        .collect();
+    assert!(msgs.iter().any(|m| m.contains("docs/absent.md")));
+    assert!(msgs.iter().any(|m| m.contains("docs/waived.md")));
+    assert!(msgs.iter().any(|m| m.contains("`--undocumented`")));
+    assert!(msgs.iter().any(|m| m.contains("BENCH_unlisted.json")));
+    // present.md, `--documented`, and BENCH_known.json are all clean, and
+    // no other rule fires on the fixture.
+    assert!(a.findings.iter().all(|f| f.rule == Rule::DocDrift), "{:?}", a.findings);
+    assert_eq!(a.unjustified().len(), 3);
+}
+
+#[test]
+fn shipped_docs_tree_is_loaded_and_consistent() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let input = AnalysisInput::load(root).expect("load crate sources");
+    // The repo ships a docs tree; the doc-drift rule must actually be
+    // exercising it (an empty set would skip-pass the whole rule).
+    assert!(input.docs.len() >= 10, "only {} docs loaded", input.docs.len());
+    assert!(input.docs.iter().any(|d| d.name == "index.md"));
+    assert!(input.docs.iter().any(|d| d.name == "sampling.md"));
+    let report = analyze(&input, &AnalysisConfig::crate_default());
+    let drift: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == Rule::DocDrift && f.justified.is_none())
+        .map(|f| format!("{}:{} {}", f.file, f.line, f.message))
+        .collect();
+    assert!(drift.is_empty(), "doc drift in the shipped tree:\n{}", drift.join("\n"));
 }

@@ -1,0 +1,8 @@
+//! Fixture: doc drift. The module doc cites docs/present.md (exists in
+//! the test's doc set) and docs/absent.md (dangling — a finding).
+
+fn main() {
+    // lint: allow(doc_drift) — fixture waiver: historical pointer kept on purpose
+    let _legacy = "docs/waived.md";
+    eprintln!("usage: tool [--documented N] [--undocumented N]");
+}

@@ -298,8 +298,9 @@ impl Engine for GatedEngine {
         queries: &[Query],
         warm: Option<&[f64]>,
         precond: Option<Arc<lkgp::gp::PrecondFactors>>,
+        path: Option<lkgp::gp::PathLineage>,
     ) -> lkgp::Result<lkgp::runtime::QueryOutcome> {
-        self.inner.answer_batch(theta, data, queries, warm, precond)
+        self.inner.answer_batch(theta, data, queries, warm, precond, path)
     }
 
     fn sample_curves(

@@ -8,10 +8,11 @@ use std::sync::{Arc, Mutex};
 
 use lkgp::coordinator::trace::run_replay;
 use lkgp::coordinator::{
-    CorpusRunner, EngineFactory, PoolCfg, RecordingHandle, Scheduler, SchedulerCfg, ServicePool,
-    TraceRecorder,
+    CorpusRunner, CurveStore, EngineFactory, PoolCfg, PredictClient, RecordingHandle, Registry,
+    Scheduler, SchedulerCfg, ServicePool, TraceRecorder, TrialId,
 };
 use lkgp::lcbench::corpus::{Corpus, SimCorpus};
+use lkgp::linalg::Matrix;
 use lkgp::runtime::{Engine, RustEngine};
 
 fn repo_root() -> PathBuf {
@@ -98,6 +99,76 @@ fn recorded_trace_replays_sequentially_and_concurrently() {
     assert_eq!(con.errors, 0);
     assert!(con.violations.is_empty(), "{:?}", con.violations);
     assert!(con.parity_checks > 0, "parity pass must run");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Seeded `CurveSamples` requests are trace-representable: the recorder
+/// writes them as `curve_samples` lines, the replay re-submits them, and
+/// the concurrent parity pass asserts the draws come back bit for bit —
+/// the sampling determinism contract of docs/sampling.md, end to end.
+#[test]
+fn recorded_curve_samples_replay_with_bitwise_parity() {
+    let path = scratch_file("samples");
+    let corpus = SimCorpus::new(1, 6, 31);
+    let factory: EngineFactory = Box::new(|_| Box::<RustEngine>::default() as Box<dyn Engine>);
+    let pool = ServicePool::from_corpus(
+        &corpus,
+        factory,
+        PoolCfg { workers: 1, ..Default::default() },
+    );
+    let recorder = Arc::new(Mutex::new(
+        TraceRecorder::new(&corpus, path.to_str().unwrap()).unwrap(),
+    ));
+    let task = corpus.task(0).unwrap();
+    let mut reg = Registry::new();
+    for i in 0..task.n() {
+        reg.add(task.configs.row(i).to_vec());
+    }
+    for i in 0..task.n() {
+        reg.observe(TrialId(i), task.curves[(i, 0)], task.m()).unwrap();
+    }
+    let mut store = CurveStore::new(task.m());
+    let snap = store.snapshot(&reg).unwrap();
+    let client = RecordingHandle::new(pool.handle(0), 0, recorder.clone());
+    let theta = client.refit(snap.clone(), vec![], 5).unwrap();
+
+    // two registered configs as the query block (rows resolve bitwise)
+    let d = snap.all_x.cols();
+    let mut xq = Matrix::zeros(2, d);
+    for r in 0..2 {
+        xq.row_mut(r).copy_from_slice(snap.all_x.row(r));
+    }
+    let a = client
+        .sample_curves(snap.clone(), theta.clone(), xq.clone(), 3, 77)
+        .unwrap();
+    let b = client.sample_curves(snap, theta, xq, 3, 77).unwrap();
+    assert_eq!(a.len(), 3);
+    for (x, y) in a.iter().zip(&b) {
+        assert!(
+            x.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "same seed through the same lineage must draw bitwise-identical curves"
+        );
+    }
+    recorder.lock().unwrap().finish(&pool).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        text.contains("\"kind\":\"curve_samples\""),
+        "seeded sampling must be recorded, not skipped: {text}"
+    );
+    assert!(text.contains("\"seed\":77"));
+
+    let seq = run_replay(path.to_str().unwrap(), false, None).unwrap();
+    assert_eq!(seq.errors, 0);
+    assert!(seq.violations.is_empty(), "{:?}", seq.violations);
+    assert_eq!(seq.requests, 2, "both sampling requests replay");
+
+    // the parity pass replays each distinct seeded request twice and
+    // requires Answer::Curves to agree bit for bit
+    let con = run_replay(path.to_str().unwrap(), true, None).unwrap();
+    assert_eq!(con.errors, 0);
+    assert!(con.violations.is_empty(), "{:?}", con.violations);
+    assert!(con.parity_checks >= 1);
     std::fs::remove_file(&path).ok();
 }
 
