@@ -31,6 +31,12 @@
 #                        small multiple of one MVM, >=5x throughput over the
 #                        per-sample-solve baseline, writer/replica bitwise
 #                        parity; docs/sampling.md)
+#   scale  (hard gate):  cargo bench --bench scale -> BENCH_scale.json asserts
+#                        (10k-task admission >= 2 tasks/s through hash-bucketed
+#                        routing, steady-state observe+query throughput floor,
+#                        resident engines bounded by the bucket count with idle
+#                        eviction engaged, Observe zero MLL evals and >= 10x
+#                        fewer MVM rows than a Refit; docs/serving.md)
 #   docsgate (hard gate when the toolchain exists): cargo doc --no-deps with
 #                        -D warnings — broken intra-doc links and malformed
 #                        doc comments fail CI (docs/ci.md); skipped under
@@ -56,7 +62,7 @@
 #   CI_SUMMARY build=pass test=pass shims=pass lint=pass san=skip \
 #              fmt=pass clippy=pass docsgate=pass bench=pass pcg=pass \
 #              queries=pass replicas=pass ingest=pass chaos=pass par=pass \
-#              samples=pass replay=pass creplay=pass
+#              samples=pass scale=pass replay=pass creplay=pass
 # Each gate is one of pass|fail|soft-fail|skip (skip = component missing,
 # CI_QUICK, or never reached because an earlier gate failed; soft-fail =
 # style finding under CI_STRICT=0). Exit code is non-zero iff any hard
@@ -75,7 +81,7 @@ note() { # note <gate> <pass|fail|soft-fail|skip>
 finish() {
   # gates never reached (early exit) report as skip, so the summary always
   # carries the full fixed field set parsers rely on
-  for g in build test shims lint san fmt clippy docsgate bench pcg queries replicas ingest chaos par samples replay creplay; do
+  for g in build test shims lint san fmt clippy docsgate bench pcg queries replicas ingest chaos par samples scale replay creplay; do
     case " $SUMMARY " in
       *" $g="*) ;;
       *) SUMMARY="$SUMMARY $g=skip" ;;
@@ -224,7 +230,7 @@ fi
 # ---- perf + smoke gates (mandatory in the pipeline; CI_QUICK skips) -------
 if [ "${CI_QUICK:-0}" = "1" ]; then
   echo "== perf/smoke gates skipped (CI_QUICK=1) =="
-  for gate in docsgate bench pcg queries replicas ingest chaos par samples replay creplay; do note "$gate" skip; done
+  for gate in docsgate bench pcg queries replicas ingest chaos par samples scale replay creplay; do note "$gate" skip; done
   exit 0
 fi
 
@@ -387,6 +393,25 @@ else
   rm -f "$SAMP_LOG1" "$SAMP_LOG4"
   echo "FAIL: samples bench run failed"
   note samples fail
+  exit 1
+fi
+
+echo "== perf gate: online-ingestion scale =="
+# 10k simulated tasks folded onto hash-routed shard buckets, with a live
+# epoch-arrival hot set streaming Observe + query traffic: admission must
+# clear 2 tasks/s, the steady state must sustain the ops/s floor, the
+# resident engine set must stay bounded by the bucket count (idle eviction
+# frees quiet shards between hot-set waves), and an Observe must perform
+# zero MLL evaluations while costing >= 10x fewer operator MVM rows than
+# an equivalent Refit (docs/serving.md).
+if cargo bench --manifest-path "$MANIFEST" --bench scale; then
+  gate_file scale BENCH_scale.json \
+    assert_scale_admission assert_scale_throughput \
+    assert_scale_resident_bounded assert_scale_observe_zero_fit \
+    assert_scale_observe_cheap
+else
+  echo "FAIL: scale bench run failed"
+  note scale fail
   exit 1
 fi
 

@@ -1,0 +1,267 @@
+//! Online-ingestion scale bench (`ci.sh` `scale` gate): the steady
+//! epoch-arrival serving regime at 10k+ simulated tasks, exercising the
+//! hash-bucketed shard routing and the `Request::Observe` warm re-solve
+//! path end to end (docs/serving.md).
+//!
+//! Floors recorded in `BENCH_scale.json`:
+//!
+//! * admission — a 10k-task corpus admits (lazily, no engines built) at
+//!   >= 2 tasks/s
+//! * steady-state throughput — a hot working set streaming epoch
+//!   arrivals through observe + query sustains >= 10 ops/s
+//! * bounded residency — live engines never exceed the bucket count,
+//!   bucket count stays below the task count, and the idle-eviction
+//!   sweep frees at least one quiet shard between waves
+//! * observe is cheap — an `Observe` performs zero MLL evals (counter
+//!   proof: `engine_solves` does not move during an observe-only run)
+//!   and costs >= 10x fewer operator MVM rows than an equivalent `Refit`
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Instant;
+
+use lkgp::bench_util::Table;
+use lkgp::coordinator::{
+    CurveStore, EngineFactory, PoolCfg, PredictClient, Registry, ServicePool, TrialId,
+};
+use lkgp::json::Json;
+use lkgp::lcbench::corpus::{Corpus, SimCorpus};
+use lkgp::lcbench::Task;
+use lkgp::linalg::Matrix;
+use lkgp::runtime::RustEngine;
+
+/// One hot task's client-side state: its registry grows by one epoch per
+/// arrival, exactly like a live trainer reporting progress.
+struct Hot {
+    id: usize,
+    task: Arc<Task>,
+    reg: Registry,
+    store: CurveStore,
+    epoch: usize,
+    theta: Vec<f64>,
+}
+
+fn admit(corpus: &SimCorpus, id: usize, warmup_epochs: usize) -> lkgp::Result<Hot> {
+    let task = corpus.task(id)?;
+    let mut reg = Registry::new();
+    for i in 0..task.n() {
+        let tid = reg.add(task.configs.row(i).to_vec());
+        for j in 0..warmup_epochs {
+            reg.observe(tid, task.curves[(i, j.min(task.m() - 1))], task.m())?;
+        }
+    }
+    let store = CurveStore::new(task.m());
+    Ok(Hot { id, task, reg, store, epoch: warmup_epochs, theta: Vec::new() })
+}
+
+impl Hot {
+    /// One epoch arrives for every trial of this task.
+    fn extend(&mut self) -> lkgp::Result<()> {
+        let j = self.epoch.min(self.task.m() - 1);
+        for i in 0..self.task.n() {
+            self.reg.observe(TrialId(i), self.task.curves[(i, j)], self.task.m())?;
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+}
+
+/// Establish each hot task's generation-1 lineage with a real refit, then
+/// stream `rounds` epoch arrivals through observe + query. Returns the
+/// ops count of the streamed (post-refit) phase.
+fn run_wave(pool: &ServicePool, hots: &mut [Hot], rounds: usize, seed: u64) -> lkgp::Result<usize> {
+    std::thread::scope(|scope| -> lkgp::Result<()> {
+        let mut joins = Vec::new();
+        for hot in hots.iter_mut() {
+            joins.push(scope.spawn(move || -> lkgp::Result<()> {
+                let snap = hot.store.snapshot(&hot.reg)?;
+                hot.theta =
+                    pool.handle(hot.id).refit(snap, Vec::new(), seed + hot.id as u64)?;
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().expect("refit thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let mut ops = 0usize;
+    std::thread::scope(|scope| -> lkgp::Result<()> {
+        let mut joins = Vec::new();
+        for hot in hots.iter_mut() {
+            joins.push(scope.spawn(move || -> lkgp::Result<usize> {
+                let mut ops = 0usize;
+                for r in 0..rounds {
+                    hot.extend()?;
+                    let snap = hot.store.snapshot(&hot.reg)?;
+                    let report = pool.handle(hot.id).observe(snap.clone(), Vec::new())?;
+                    ops += 1;
+                    if report.refit_due {
+                        // the policy judged theta stale — pay a real refit
+                        hot.theta = pool
+                            .handle(hot.id)
+                            .refit(snap.clone(), Vec::new(), seed + hot.id as u64)?;
+                        ops += 1;
+                    }
+                    let d = snap.all_x.cols();
+                    let row = r % snap.all_x.rows();
+                    let xq = Matrix::from_vec(1, d, snap.all_x.row(row).to_vec());
+                    let preds = pool.handle(hot.id).predict_final(snap, hot.theta.clone(), xq)?;
+                    assert!(preds[0].0.is_finite(), "query after observe must be finite");
+                    ops += 1;
+                }
+                Ok(ops)
+            }));
+        }
+        for j in joins {
+            ops += j.join().expect("storm thread panicked")?;
+        }
+        Ok(())
+    })?;
+    Ok(ops)
+}
+
+fn main() -> lkgp::Result<()> {
+    let quick = lkgp::bench_util::is_quick();
+    let tasks = if quick { 1_000 } else { 10_000 };
+    let buckets = 16usize;
+    let wave = if quick { 6 } else { 16 };
+    let rounds = if quick { 3 } else { 5 };
+    let n_configs = 6usize;
+    let seed = 42u64;
+    let mut table = Table::new(&["phase", "value", "note"]);
+
+    // ---- admission: 10k tasks folded onto a fixed bucket set -------------
+    let t0 = Instant::now();
+    let corpus = SimCorpus::new(tasks, n_configs, seed);
+    let factory: EngineFactory = Box::new(|_| Box::new(RustEngine::default()));
+    let pool = ServicePool::from_corpus(
+        &corpus,
+        factory,
+        PoolCfg { workers: 4, buckets, ..Default::default() },
+    );
+    let admit_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let admission_rate = tasks as f64 / admit_secs;
+    assert_eq!(pool.shards(), tasks, "every task stays addressable");
+    assert_eq!(pool.buckets(), buckets, "tasks fold onto the bucket set");
+    let admission_ok = admission_rate >= 2.0;
+    table.row(vec![
+        "admission".into(),
+        format!("{admission_rate:.0}/s"),
+        format!("{tasks} tasks, {buckets} buckets"),
+    ]);
+
+    // ---- wave 1: hot working set streams observe + query -----------------
+    let mut hots: Vec<Hot> = (0..wave)
+        .map(|k| admit(&corpus, k * (tasks / wave), 3))
+        .collect::<lkgp::Result<Vec<_>>>()?;
+    let t1 = Instant::now();
+    let ops = run_wave(&pool, &mut hots, rounds, seed)?;
+    let storm_secs = t1.elapsed().as_secs_f64().max(1e-9);
+    let ops_per_sec = ops as f64 / storm_secs;
+    let throughput_ok = ops_per_sec >= 10.0;
+    let live_wave1 = pool.live_shards();
+    table.row(vec![
+        "steady_state".into(),
+        format!("{ops_per_sec:.1} ops/s"),
+        format!("{ops} observe+query ops, {wave} hot tasks"),
+    ]);
+
+    // ---- eviction between waves: the resident set follows the hot set ----
+    // First sweep baselines the traffic counters, second finds everything
+    // quiet and tears the engines down.
+    pool.evict_idle();
+    let freed = pool.evict_idle();
+    let live_after_evict = pool.live_shards();
+    // wave 2: a disjoint hot set re-materializes shards transparently
+    let mut hots2: Vec<Hot> = (0..wave)
+        .map(|k| admit(&corpus, k * (tasks / wave) + tasks / (2 * wave), 3))
+        .collect::<lkgp::Result<Vec<_>>>()?;
+    run_wave(&pool, &mut hots2, 1, seed ^ 0x9e37)?;
+    let live_wave2 = pool.live_shards();
+    let max_live = live_wave1.max(live_wave2);
+    let resident_ok = max_live <= buckets && buckets < tasks && freed >= 1;
+    table.row(vec![
+        "residency".into(),
+        format!("{max_live} live"),
+        format!(
+            "{buckets} buckets, {} materialized, {} evicted ({} after sweep)",
+            pool.materialized(),
+            pool.evicted(),
+            live_after_evict
+        ),
+    ]);
+
+    // ---- observe vs refit cost in operator MVM rows ----------------------
+    // Observe-only window first: `engine_solves` must not move (an Observe
+    // performs no MLL evaluations and no query solves), then a lone refit
+    // for the per-op comparison.
+    let probe = &mut hots[0];
+    let stats = pool.stats(probe.id).clone();
+    let k_obs = 3usize;
+    let solves_before = stats.engine_solves.load(Relaxed);
+    let obs_rows_before = stats.observe_solve_mvm_rows.load(Relaxed);
+    let obs_before = stats.observes.load(Relaxed);
+    for _ in 0..k_obs {
+        probe.extend()?;
+        let snap = probe.store.snapshot(&probe.reg)?;
+        pool.handle(probe.id).observe(snap, Vec::new())?;
+    }
+    let zero_fit_ok = stats.engine_solves.load(Relaxed) == solves_before
+        && stats.observes.load(Relaxed) == obs_before + k_obs as u64;
+    let observe_rows_per_op = (stats.observe_solve_mvm_rows.load(Relaxed) - obs_rows_before)
+        as f64
+        / k_obs as f64;
+
+    let cg_rows_before = stats.cg_mvm_rows.load(Relaxed);
+    probe.extend()?;
+    let snap = probe.store.snapshot(&probe.reg)?;
+    pool.handle(probe.id).refit(snap, Vec::new(), seed + 7)?;
+    let refit_rows = (stats.cg_mvm_rows.load(Relaxed) - cg_rows_before) as f64;
+    let ratio = refit_rows / observe_rows_per_op.max(1e-9);
+    let observe_cheap_ok = observe_rows_per_op > 0.0 && ratio >= 10.0;
+    table.row(vec![
+        "observe_cost".into(),
+        format!("{observe_rows_per_op:.0} rows/op"),
+        format!("refit={refit_rows:.0} rows, ratio={ratio:.1}x"),
+    ]);
+
+    let (total_observes, total_refits_triggered) = pool
+        .all_stats()
+        .iter()
+        .fold((0u64, 0u64), |(o, r), s| {
+            (o + s.observes.load(Relaxed), r + s.refits_triggered.load(Relaxed))
+        });
+
+    table.write_csv("results/scale.csv")?;
+    println!("\nwrote results/scale.csv");
+
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("scale".into())),
+        ("tasks", Json::Num(tasks as f64)),
+        ("buckets", Json::Num(buckets as f64)),
+        ("hot_tasks", Json::Num(wave as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("admission_tasks_per_sec", Json::Num(admission_rate)),
+        ("steady_ops_per_sec", Json::Num(ops_per_sec)),
+        ("max_live_shards", Json::Num(max_live as f64)),
+        ("evicted_between_waves", Json::Num(freed as f64)),
+        ("observe_rows_per_op", Json::Num(observe_rows_per_op)),
+        ("refit_rows_per_op", Json::Num(refit_rows)),
+        ("refit_over_observe_rows", Json::Num(ratio)),
+        ("observes_total", Json::Num(total_observes as f64)),
+        ("refits_triggered_total", Json::Num(total_refits_triggered as f64)),
+        ("assert_scale_admission", Json::Bool(admission_ok)),
+        ("assert_scale_throughput", Json::Bool(throughput_ok)),
+        ("assert_scale_resident_bounded", Json::Bool(resident_ok)),
+        ("assert_scale_observe_zero_fit", Json::Bool(zero_fit_ok)),
+        ("assert_scale_observe_cheap", Json::Bool(observe_cheap_ok)),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .to_path_buf();
+    std::fs::write(root.join("BENCH_scale.json"), summary.pretty())?;
+    println!("wrote {}", root.join("BENCH_scale.json").display());
+    Ok(())
+}

@@ -106,6 +106,7 @@ impl AnalysisConfig {
             ("warm", Recover),     // warm-start lineage LRU
             ("latency", Recover),  // latency histograms
             ("breakers", Recover), // circuit breakers
+            ("state", Recover),    // refit-policy cadence/baseline map
             ("shards", Recover),   // engine slots (guarded by the busy flag)
             ("cache", Recover),    // lcbench task cache
             ("digests", Recover),  // lcbench fingerprint digests

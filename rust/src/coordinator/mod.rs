@@ -25,8 +25,8 @@ pub use crate::gp::session::{Answer, Query};
 pub use policy::{Decision, Policy, TrialForecast};
 pub use scheduler::{CorpusRunner, EpochRunner, RunReport, Scheduler, SchedulerCfg};
 pub use service::{
-    EngineFactory, PoolCfg, PredictClient, PredictionService, Request, ServicePool, ServiceStats,
-    ShardHandle,
+    EngineFactory, ObserveReport, PoolCfg, PredictClient, PredictionService, Request, ServicePool,
+    ServiceStats, ShardHandle,
 };
 pub use store::{CurveStore, Snapshot, WarmStart};
 pub use trace::{replay_trace, RecordingHandle, ReplaySummary, TraceRecorder};
@@ -139,6 +139,21 @@ pub fn serve_simulated(args: &Args) -> crate::Result<()> {
 /// `ServiceStats::{pathwise_hits, sample_mvms}` counters and a bitwise
 /// `STORM_CHECKSUM` determinism receipt (see [`sample_storm`] and
 /// docs/sampling.md).
+///
+/// Scale-out controls (docs/serving.md): `--buckets N|auto` folds the
+/// corpus onto N hash-routed shard buckets (`auto` = the worker count;
+/// absent or `0` keeps the historical 1:1 task-to-shard layout), so a
+/// 10k-task corpus no longer materializes 10k engines — per-task
+/// generations, warm lineages, and fences stay task-keyed inside a
+/// bucket. `--observe-storm` drives steady epoch-arrival traffic: every
+/// scheduler round that is not a refit boundary extends its curves
+/// through a `Request::Observe` warm re-solve (zero MLL evals; the
+/// converged alpha seeds the PCG solve), and the pool-side refit policy —
+/// tuned by `--refit-every K` (epochs between forced refits) and
+/// `--refit-drift X` (relative data-fit drift threshold) — decides when
+/// theta is actually stale and a real refit runs. The report's
+/// `observes` / `observe_mvm_rows` / `refits_triggered` counters make
+/// the savings visible.
 pub fn serve_pool(args: &Args) -> crate::Result<()> {
     use crate::lcbench::corpus::{Corpus, JsonDirCorpus, SimCorpus};
     use std::sync::{Arc, Mutex};
@@ -226,6 +241,36 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
     let workers = args
         .get_usize("workers", crate::util::num_threads().min(tasks.max(1)))
         .max(1);
+    // `--buckets auto` folds onto one bucket per worker; `0`/absent keeps
+    // the historical 1:1 task<->shard layout (see PoolCfg::buckets).
+    let buckets = match args.get("buckets") {
+        None => 0,
+        Some("auto") => workers,
+        Some(v) => v.parse().map_err(|_| {
+            crate::LkgpError::Coordinator(format!(
+                "bad --buckets '{v}' (expected a count >= 0, or auto)"
+            ))
+        })?,
+    };
+    let observe_storm = args.has("observe-storm");
+    let refit_every_epochs =
+        args.get_usize("refit-every", PoolCfg::default().refit_every_epochs);
+    let refit_drift = match args.get("refit-drift") {
+        None => PoolCfg::default().refit_drift,
+        Some(v) => {
+            let x: f64 = v.parse().map_err(|_| {
+                crate::LkgpError::Coordinator(format!(
+                    "bad --refit-drift '{v}' (expected a relative threshold >= 0)"
+                ))
+            })?;
+            if !(x >= 0.0) {
+                return Err(crate::LkgpError::Coordinator(format!(
+                    "bad --refit-drift '{v}' (expected a relative threshold >= 0)"
+                )));
+            }
+            x
+        }
+    };
 
     let factory: EngineFactory = {
         let chaos_stats = chaos_stats.clone();
@@ -256,12 +301,18 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             warm_start: warm,
             max_replicas: replicas,
             deadline,
+            buckets,
+            refit_every_epochs,
+            refit_drift,
             ..Default::default()
         },
     );
     println!(
-        "pool: {tasks} shards from corpus {} ({}), {workers} workers, warm_start={warm}, \
-         max_replicas={replicas}, precond={precond:?}, precision={}, threads={}",
+        "pool: {tasks} tasks on {} buckets from corpus {} ({}), {workers} workers, \
+         warm_start={warm}, max_replicas={replicas}, precond={precond:?}, precision={}, \
+         threads={}, observe_storm={observe_storm}, refit_every={refit_every_epochs}, \
+         refit_drift={refit_drift}",
+        pool.buckets(),
         corpus.name(),
         corpus.fingerprint(),
         precision.tag(),
@@ -302,6 +353,10 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
                     let cfg = SchedulerCfg {
                         epoch_budget: budget,
                         seed: seed + t as u64,
+                        // Under --observe-storm every non-refit round extends
+                        // the curves via a warm Observe re-solve; the pool's
+                        // refit policy escalates to a real refit on drift.
+                        observe_every: if observe_storm { 1 } else { 0 },
                         ..Default::default()
                     };
                     let mut sched = Scheduler::new(task.m(), cfg);
@@ -375,6 +430,14 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
             stats.latency.lock().unwrap_or_else(|p| p.into_inner()).quantile_micros(0.99),
         );
         println!(
+            "shard {t} ingest: observes={} observe_mvm_rows={} refits_triggered={} \
+             (bucket {})",
+            stats.observes.load(std::sync::atomic::Ordering::Relaxed),
+            stats.observe_solve_mvm_rows.load(std::sync::atomic::Ordering::Relaxed),
+            stats.refits_triggered.load(std::sync::atomic::Ordering::Relaxed),
+            pool.bucket_of(*t),
+        );
+        println!(
             "shard {t} health: escalations={} dense_fallbacks={} panics_recovered={} \
              timeouts={} shed={} solver_failures={} quarantine={}trips/{}rejects",
             stats.escalations.load(std::sync::atomic::Ordering::Relaxed),
@@ -388,7 +451,9 @@ pub fn serve_pool(args: &Args) -> crate::Result<()> {
         );
     }
     println!(
-        "admission: {tasks} shards admitted, {} materialized, {} evicted, {} skipped",
+        "admission: {tasks} tasks admitted on {} buckets, {} materialized, {} evicted, \
+         {} skipped",
+        pool.buckets(),
         pool.materialized(),
         pool.evicted(),
         skipped.len(),

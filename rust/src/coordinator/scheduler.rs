@@ -61,6 +61,13 @@ pub struct SchedulerCfg {
     pub max_concurrent: usize,
     /// Refit hyper-parameters every this many rounds.
     pub refit_every: usize,
+    /// Between refits, push freshly trained epochs through the service
+    /// every this many rounds as a `Request::Observe` — a warm re-solve
+    /// under the standing theta with zero MLL evaluations (0 = off, the
+    /// historical cadence where new epochs only reach the model at the
+    /// next refit). When the backend's refit policy reports drift, the
+    /// scheduler refits immediately instead of waiting out `refit_every`.
+    pub observe_every: usize,
     /// Total epoch budget across all trials.
     pub epoch_budget: usize,
     /// Early-stop policy.
@@ -74,6 +81,7 @@ impl Default for SchedulerCfg {
         SchedulerCfg {
             max_concurrent: 4,
             refit_every: 5,
+            observe_every: 0,
             epoch_budget: 200,
             policy: Policy::PredictedFinal { delta: 0.0, threshold: 0.95 },
             seed: 0,
@@ -162,6 +170,19 @@ impl Scheduler {
             // 3-5. periodically refit + re-allocate
             if rounds % self.cfg.refit_every == 0 {
                 self.replan(service, rounds)?;
+            } else if self.cfg.observe_every > 0
+                && rounds % self.cfg.observe_every == 0
+                && !self.theta.is_empty()
+            {
+                // O(warm-solve) ingestion between refits: extend the
+                // model with this round's epochs under the standing theta
+                // (zero MLL evals). An early refit happens only when the
+                // service's refit policy flags cadence/drift.
+                if let Ok(snapshot) = self.store.snapshot(&self.registry) {
+                    if service.observe(snapshot, self.theta.clone())?.refit_due {
+                        self.replan(service, rounds)?;
+                    }
+                }
             }
             self.promote_pending();
 

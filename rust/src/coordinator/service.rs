@@ -16,15 +16,28 @@
 //! * [`PredictionService`] — the original single-task service: one worker
 //!   thread owning one engine, fed through an mpsc channel. Cold solves
 //!   only (stable baseline).
-//! * [`ServicePool`] — the multi-task serving layer: per-task engine
-//!   shards behind a shared worker pool. Requests are routed by task id,
-//!   same-generation `PredictFinal` batches coalesce *across* concurrent
-//!   callers per shard, submission applies backpressure (bounded per-shard
-//!   queues), and every shard tracks latency/queue-depth/warm-start
-//!   metrics. Each shard caches the previous generation's converged
-//!   `alpha` (and fitted theta) as a [`WarmStart`] so the next
-//!   generation's near-identical masked-Kronecker solve starts from the
-//!   prior solution instead of zero (see `linalg::cg_batch_warm`).
+//! * [`ServicePool`] — the multi-task serving layer: engine shard
+//!   *buckets* behind a shared worker pool. Requests are addressed by
+//!   task id and routed through a deterministic hash table
+//!   (`PoolCfg::buckets`; the default 0 keeps the historical 1:1
+//!   task-per-bucket layout), so a 10k-task corpus materializes at most
+//!   `buckets` engines instead of 10k. Same-generation `PredictFinal`
+//!   batches coalesce *across* concurrent callers per bucket, submission
+//!   applies backpressure (bounded per-bucket queues), and every bucket
+//!   tracks latency/queue-depth/warm-start metrics. Each bucket caches
+//!   converged `alpha` (and fitted theta) lineage per `(task, generation)`
+//!   as a [`WarmStart`] so the next generation's near-identical
+//!   masked-Kronecker solve starts from the prior solution instead of
+//!   zero (see `linalg::cg_batch_warm`). The replica generation fence is
+//!   per TASK: one task's write never retires another task's reads.
+//!
+//! Online ingestion rides [`Request::Observe`]: extending a learning
+//! curve by an epoch only grows the observed mask of the fixed latent
+//! grid (PAPER.md), so the worker re-solves the training system warm from
+//! the task's converged lineage — zero MLL evaluations — and a refit
+//! policy (`PoolCfg::{refit_every_epochs, refit_drift}`) decides when
+//! theta is actually stale and a real `Refit` is worth enqueueing
+//! (docs/serving.md).
 //!
 //! Schedulers drive either front-end through the [`PredictClient`] trait.
 
@@ -51,6 +64,24 @@ pub enum Request {
         theta0: Vec<f64>,
         seed: u64,
         resp: Sender<crate::Result<Vec<f64>>>,
+    },
+    /// Extend a task's curve in place. The caller has already appended
+    /// the new epoch(s) to its registry and built the extended
+    /// `snapshot`; the worker re-solves the training system warm from
+    /// the task's converged lineage alpha (`gp::session::observe` — zero
+    /// MLL evaluations, preconditioner factors reused while their own
+    /// staleness check passes) and refreshes the task's `WarmStart`
+    /// lineage at the new generation. A write for fencing purposes: the
+    /// task's generation fence advances at enqueue, so replicas never
+    /// serve a pre-`Observe` generation for this task. The reply carries
+    /// the refit policy's verdict ([`ObserveReport::refit_due`]); the
+    /// caller decides whether to enqueue the actual `Refit`.
+    Observe {
+        snapshot: Snapshot,
+        /// Packed theta to solve under; empty = the task's lineage theta
+        /// (falling back to the prior mean).
+        theta: Vec<f64>,
+        resp: Sender<crate::Result<ObserveReport>>,
     },
     /// Final-value prediction for query rows (standardized units).
     /// Compatibility front for `Query` with a single
@@ -96,12 +127,35 @@ pub enum Request {
     Shutdown,
 }
 
-/// Generation a (possibly deadline-wrapped) refit targets, for the
-/// replica generation fence.
-fn refit_generation(req: &Request) -> Option<u64> {
+/// Reply to a [`Request::Observe`]: the generation whose lineage now
+/// carries the refreshed alpha, the warm re-solve's cost, and the refit
+/// policy's verdict.
+#[derive(Clone, Debug)]
+pub struct ObserveReport {
+    /// Generation of the extended snapshot the lineage was refreshed at.
+    pub generation: u64,
+    /// CG iterations the warm re-solve spent (0 when the previous alpha
+    /// already satisfied the extended system's tolerance).
+    pub cg_iters: usize,
+    /// Operator rows the re-solve applied (`CgStats::mvm_rows`) — the
+    /// number `BENCH_scale.json` compares against a full `Refit`'s MVM
+    /// work for the >= 10x online-ingestion saving.
+    pub mvm_rows: usize,
+    /// True when the refit policy (`PoolCfg::{refit_every_epochs,
+    /// refit_drift}`) judged theta stale: the caller should enqueue a
+    /// real `Refit` for this task.
+    pub refit_due: bool,
+}
+
+/// Generation a (possibly deadline-wrapped) WRITE targets, for the
+/// per-task replica generation fence. Refits and observes both move a
+/// task's model state forward; reads return None.
+fn write_generation(req: &Request) -> Option<u64> {
     match req {
-        Request::Refit { snapshot, .. } => Some(snapshot.generation),
-        Request::Deadline { inner, .. } => refit_generation(inner),
+        Request::Refit { snapshot, .. } | Request::Observe { snapshot, .. } => {
+            Some(snapshot.generation)
+        }
+        Request::Deadline { inner, .. } => write_generation(inner),
         _ => None,
     }
 }
@@ -111,6 +165,9 @@ fn refit_generation(req: &Request) -> Option<u64> {
 fn fail_request(req: Request, err: crate::LkgpError) {
     match req {
         Request::Refit { resp, .. } => {
+            let _ = resp.send(Err(err));
+        }
+        Request::Observe { resp, .. } => {
             let _ = resp.send(Err(err));
         }
         Request::PredictFinal { resp, .. } => {
@@ -177,10 +234,23 @@ pub struct ServiceStats {
     /// `BENCH_replicas.json` gates depend on that).
     pub prewarmed: AtomicU64,
     /// Rank of the factored CG preconditioner used by this shard's most
-    /// recent solve (0 = unpreconditioned). Makes `PrecondCfg::Auto`'s
-    /// fixed 32/64 choices observable in the pool report ahead of the
-    /// adaptive-rank work (ROADMAP).
+    /// recent solve (0 = unpreconditioned). Makes the adaptive rank
+    /// `PrecondCfg::Auto` picks by residual-trace decay of the pivoted
+    /// Cholesky (`gp::operator`) observable in the pool report.
     pub precond_rank: AtomicU64,
+    /// `Request::Observe` warm re-solves served — each one extended a
+    /// task's curve with ZERO MLL evaluations (the refit path is the only
+    /// MLL consumer by construction; see docs/serving.md).
+    pub observes: AtomicU64,
+    /// Operator rows applied by `Observe` re-solves alone (also counted
+    /// into `cg_mvm_rows`). Against the refit path's MVM work this makes
+    /// the >= 10x online-ingestion saving observable (`BENCH_scale.json`).
+    pub observe_solve_mvm_rows: AtomicU64,
+    /// Observes whose refit-policy verdict was "theta is stale"
+    /// (`ObserveReport::refit_due` handed to the caller). Edge-triggered:
+    /// firing re-arms the task's cadence, so an ignored verdict does not
+    /// re-fire every epoch.
+    pub refits_triggered: AtomicU64,
     /// Oversized stacked query batches the shard handle split into chunks
     /// before enqueueing (`PoolCfg::split_rows`), so a single giant batch
     /// fans across pool workers / read replicas instead of serializing on
@@ -233,6 +303,12 @@ pub trait PredictClient {
     /// Re-fit hyper-parameters on a snapshot (blocking).
     fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>>;
 
+    /// Extend a task's curve in place (blocking): warm re-solve of the
+    /// training system on the extended snapshot under the existing theta
+    /// — no hyper-parameter refit, zero MLL evaluations. The report says
+    /// when the backend's refit policy wants a real [`Self::refit`].
+    fn observe(&self, snapshot: Snapshot, theta: Vec<f64>) -> crate::Result<ObserveReport>;
+
     /// Answer a batch of typed posterior queries (blocking). The batch —
     /// plus any coalesced same-generation traffic — shares one underlying
     /// solve on session-capable engines.
@@ -269,12 +345,19 @@ pub trait PredictClient {
 // Shared batching core
 
 /// Small keyed warm-start cache, most-recently-used first, keyed by
-/// snapshot generation (ROADMAP "warm-cache LRU"). Mixed-generation
-/// traffic — dashboards re-reading old generations while the scheduler
-/// advances — hits the exact lineage it solved under instead of
-/// cold-solving or cross-embedding from the newest generation.
+/// `(task, generation)` (ROADMAP "warm-cache LRU"). Buckets mix many
+/// tasks behind one engine, and generation counters are per task, so the
+/// task id is part of the key — a bare generation key would let task A's
+/// generation-3 lineage answer task B's generation-3 queries. The
+/// capacity is per TASK (the historical per-shard cap, now that a shard
+/// serves many tasks): mixed-generation traffic — dashboards re-reading
+/// old generations while the scheduler advances — hits the exact lineage
+/// it solved under instead of cold-solving or cross-embedding from the
+/// newest generation, and a wide bucket cannot thrash one hot task's
+/// lineage out with another task's.
 struct WarmLru {
-    entries: Vec<(u64, Arc<WarmStart>)>,
+    entries: Vec<((u64, u64), Arc<WarmStart>)>,
+    /// Max entries kept per task (>= 1).
     cap: usize,
 }
 
@@ -283,42 +366,57 @@ impl WarmLru {
         WarmLru { entries: Vec::new(), cap: cap.max(1) }
     }
 
-    /// Exact-generation lookup; refreshes the entry's recency.
-    fn get(&mut self, generation: u64) -> Option<Arc<WarmStart>> {
-        let i = self.entries.iter().position(|(g, _)| *g == generation)?;
+    /// Exact `(task, generation)` lookup; refreshes the entry's recency.
+    fn get(&mut self, task: u64, generation: u64) -> Option<Arc<WarmStart>> {
+        let i = self
+            .entries
+            .iter()
+            .position(|(k, _)| *k == (task, generation))?;
         let e = self.entries.remove(i);
         let w = e.1.clone();
         self.entries.insert(0, e);
         Some(w)
     }
 
-    /// Exact-generation lookup without touching recency — the read-only
-    /// replica path, so replica traffic never perturbs the writer's
-    /// eviction order.
-    fn peek(&self, generation: u64) -> Option<Arc<WarmStart>> {
+    /// Exact `(task, generation)` lookup without touching recency — the
+    /// read-only replica path, so replica traffic never perturbs the
+    /// writer's eviction order.
+    fn peek(&self, task: u64, generation: u64) -> Option<Arc<WarmStart>> {
         self.entries
             .iter()
-            .find(|(g, _)| *g == generation)
+            .find(|(k, _)| *k == (task, generation))
             .map(|(_, w)| w.clone())
     }
 
-    /// Most-recently-used lineage (the historical single-slot semantics).
-    fn latest(&self) -> Option<&Arc<WarmStart>> {
-        self.entries.first().map(|(_, w)| w)
+    /// Most-recently-used lineage OF ONE TASK (the historical single-slot
+    /// semantics, task-scoped).
+    fn latest_for(&self, task: u64) -> Option<Arc<WarmStart>> {
+        self.entries
+            .iter()
+            .find(|((t, _), _)| *t == task)
+            .map(|(_, w)| w.clone())
     }
 
-    /// Insert/replace the lineage for its generation; evicts LRU entries
-    /// beyond the cap.
-    fn put(&mut self, w: Arc<WarmStart>) {
-        let generation = w.generation;
-        if let Some(i) = self.entries.iter().position(|(g, _)| *g == generation) {
+    /// Insert/replace the lineage for `(task, w.generation)`; evicts the
+    /// task's LRU entries beyond the per-task cap (other tasks' entries
+    /// are never touched).
+    fn put(&mut self, task: u64, w: Arc<WarmStart>) {
+        let key = (task, w.generation);
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
             self.entries.remove(i);
         }
-        self.entries.insert(0, (generation, w));
-        self.entries.truncate(self.cap);
+        self.entries.insert(0, (key, w));
+        let mut kept = 0usize;
+        self.entries.retain(|((t, _), _)| {
+            if *t != task {
+                return true;
+            }
+            kept += 1;
+            kept <= self.cap
+        });
     }
 
-    /// Drop every cached lineage (shard eviction).
+    /// Drop every cached lineage (bucket eviction).
     fn clear(&mut self) {
         self.entries.clear();
     }
@@ -342,8 +440,11 @@ enum PendingReply {
     Curves(Sender<crate::Result<Vec<Matrix>>>),
 }
 
-/// A queued query batch awaiting coalescing.
+/// A queued query batch awaiting coalescing. `task` scopes the warm
+/// cache and the coalescing key — buckets mix tasks, and two tasks'
+/// same-numbered generations are unrelated model states.
 struct PendingQuery {
+    task: u64,
     snapshot: Snapshot,
     theta: Vec<f64>,
     queries: Vec<Query>,
@@ -362,13 +463,85 @@ struct BatchReport {
     shutdown: bool,
 }
 
-/// Flush queued query batches: group by (generation, theta), concatenate
-/// each group's typed queries into one `Engine::answer_batch` call (one
-/// underlying solve for session-capable engines), scatter the responses.
-/// With `warm_enabled`, solves start from the shard's keyed warm cache
-/// (exact generation first, most-recent lineage as fallback, then the
-/// snapshot's own) and the converged state is cached back under the
-/// generation.
+/// Per-bucket refit-policy state for [`Request::Observe`]: decides when a
+/// task's theta is stale enough that the caller should enqueue a real
+/// `Refit` (docs/serving.md). Two triggers, either sufficient: a cadence
+/// (`every` observes per task) and a drift threshold on the data-fit term
+/// `y'alpha` the warm re-solve computes for free — when the quadratic
+/// form under the FROZEN theta moves relatively more than `drift`, the
+/// new epochs disagree with the old hyper-parameters. The mutex nests
+/// inside nothing: never held across an engine call or while the
+/// queues/warm locks are taken.
+struct RefitPolicy {
+    /// Observes per task between refit verdicts; 0 disables the cadence.
+    every: usize,
+    /// Relative `y'alpha` drift that flags theta stale; 0 disables.
+    drift: f64,
+    /// Per-task cadence/baseline state, keyed by task id. Entries are
+    /// few (tasks active in this bucket since its last refit), so a
+    /// linear map beats a hash table here.
+    state: Mutex<Vec<(u64, PolicyEntry)>>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct PolicyEntry {
+    /// Observes since the last refit (or the last fired verdict).
+    observes: usize,
+    /// Data-fit `y'alpha` at the last refit/verdict; None until the first
+    /// observe after one (its data-fit becomes the baseline).
+    baseline: Option<f64>,
+}
+
+impl RefitPolicy {
+    fn new(every: usize, drift: f64) -> Self {
+        RefitPolicy { every, drift, state: Mutex::new(Vec::new()) }
+    }
+
+    /// Feed one observe's data-fit; returns whether a refit is due.
+    /// Edge-triggered: firing resets the task's cadence and re-baselines
+    /// the drift, so an ignored verdict re-arms instead of firing on
+    /// every subsequent epoch.
+    fn feed_observe(&self, task: u64, data_fit: f64) -> bool {
+        let mut st = lock_clean(&self.state);
+        let i = match st.iter().position(|(t, _)| *t == task) {
+            Some(i) => i,
+            None => {
+                st.push((task, PolicyEntry::default()));
+                st.len() - 1
+            }
+        };
+        let e = &mut st[i].1;
+        e.observes += 1;
+        let drifted = match e.baseline {
+            Some(b) if self.drift > 0.0 => {
+                (data_fit - b).abs() / b.abs().max(1e-12) > self.drift
+            }
+            _ => false,
+        };
+        if e.baseline.is_none() {
+            e.baseline = Some(data_fit);
+        }
+        let due = drifted || (self.every > 0 && e.observes >= self.every);
+        if due {
+            *e = PolicyEntry { observes: 0, baseline: Some(data_fit) };
+        }
+        due
+    }
+
+    /// A real refit ran for this task: reset its cadence and baseline
+    /// (the next observe under the fresh theta re-baselines).
+    fn note_refit(&self, task: u64) {
+        lock_clean(&self.state).retain(|(t, _)| *t != task);
+    }
+}
+
+/// Flush queued query batches: group by (task, generation, theta),
+/// concatenate each group's typed queries into one `Engine::answer_batch`
+/// call (one underlying solve for session-capable engines), scatter the
+/// responses. With `warm_enabled`, solves start from the bucket's keyed
+/// warm cache (the task's exact generation first, its most-recent lineage
+/// as fallback, then the snapshot's own) and the converged state is
+/// cached back under `(task, generation)`.
 fn flush_queries(
     slot: &mut EngineSlot,
     pending: &mut Vec<PendingQuery>,
@@ -377,6 +550,7 @@ fn flush_queries(
     report: &mut BatchReport,
 ) {
     while !pending.is_empty() {
+        let task0 = pending[0].task;
         let gen0 = pending[0].snapshot.generation;
         let theta0 = pending[0].theta.clone();
         // Bitwise theta comparison so the head request always matches its
@@ -386,9 +560,12 @@ fn flush_queries(
                 && t.iter().zip(&theta0).all(|(a, b)| a.to_bits() == b.to_bits())
         };
         let group: Vec<PendingQuery> = {
-            let (take, keep): (Vec<PendingQuery>, Vec<PendingQuery>) = pending
-                .drain(..)
-                .partition(|p| p.snapshot.generation == gen0 && same_theta(&p.theta));
+            let (take, keep): (Vec<PendingQuery>, Vec<PendingQuery>) =
+                pending.drain(..).partition(|p| {
+                    p.task == task0
+                        && p.snapshot.generation == gen0
+                        && same_theta(&p.theta)
+                });
             *pending = keep;
             take
         };
@@ -407,19 +584,19 @@ fn flush_queries(
         // non-empty pending list, and a silent skip here would leave the
         // group's reply channels dangling (callers hang forever).
         let snap = snap.expect("non-empty group");
-        // Warm lineage: exact generation from the keyed LRU, else the
-        // most-recent entry (cross-generation embed by trial id), else the
-        // snapshot's own lineage.
+        // Warm lineage: the task's exact generation from the keyed LRU,
+        // else the task's most-recent entry (cross-generation embed by
+        // trial id), else the snapshot's own lineage.
         let lineage: Option<Arc<WarmStart>> = {
             let mut warm = lock_clean(&slot.warm);
-            match warm.get(gen0) {
+            match warm.get(task0, gen0) {
                 Some(w) => {
                     stats.warm_cache_hits.fetch_add(1, Ordering::Relaxed);
                     Some(w)
                 }
                 None => {
                     stats.warm_cache_misses.fetch_add(1, Ordering::Relaxed);
-                    warm.latest().cloned().or_else(|| snap.warm.clone())
+                    warm.latest_for(task0).or_else(|| snap.warm.clone())
                 }
             }
         };
@@ -502,7 +679,7 @@ fn flush_queries(
                 }
                 match (warm_enabled, alpha) {
                     (true, Some(alpha)) => {
-                        lock_clean(&slot.warm).put(Arc::new(WarmStart {
+                        lock_clean(&slot.warm).put(task0, Arc::new(WarmStart {
                             generation: snap.generation,
                             theta: theta0.clone(),
                             row_ids: (*snap.row_ids).clone(),
@@ -520,7 +697,7 @@ fn flush_queries(
                         // means nothing embeds as a guess, so solves stay
                         // cold as requested).
                         if out_precond.is_some() || out_path.is_some() {
-                            lock_clean(&slot.warm).put(Arc::new(WarmStart {
+                            lock_clean(&slot.warm).put(task0, Arc::new(WarmStart {
                                 generation: snap.generation,
                                 theta: theta0.clone(),
                                 row_ids: (*snap.row_ids).clone(),
@@ -679,14 +856,14 @@ fn send_error(reply: PendingReply, err: crate::LkgpError) {
     }
 }
 
-/// Warm theta for an empty-`theta0` refit: exact-generation lineage, then
-/// the most-recent cache entry, then the snapshot lineage, then the prior
-/// mean.
-fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> {
+/// Warm theta for an empty-`theta0` refit/observe: the task's
+/// exact-generation lineage, then its most-recent cache entry, then the
+/// snapshot lineage, then the prior mean.
+fn warm_theta(slot: &mut EngineSlot, task: u64, snapshot: &Snapshot, d: usize) -> Vec<f64> {
     let lineage = {
         let mut warm = lock_clean(&slot.warm);
-        warm.get(snapshot.generation)
-            .or_else(|| warm.latest().cloned())
+        warm.get(task, snapshot.generation)
+            .or_else(|| warm.latest_for(task))
     }
     .or_else(|| snapshot.warm.clone());
     if let Some(w) = lineage {
@@ -710,6 +887,7 @@ fn warm_theta(slot: &mut EngineSlot, snapshot: &Snapshot, d: usize) -> Vec<f64> 
 /// `engine_solves` (see the field docs).
 fn prewarm_generation(
     slot: &mut EngineSlot,
+    task: u64,
     snapshot: &Snapshot,
     theta: Vec<f64>,
     cfg: SolverCfg,
@@ -718,12 +896,15 @@ fn prewarm_generation(
     let (guess, precond) = {
         let mut warm = lock_clean(&slot.warm);
         if warm
-            .peek(snapshot.generation)
+            .peek(task, snapshot.generation)
             .map_or(false, |w| !w.alpha.is_empty())
         {
             return; // already replica-ready
         }
-        match warm.get(snapshot.generation).or_else(|| warm.latest().cloned()) {
+        match warm
+            .get(task, snapshot.generation)
+            .or_else(|| warm.latest_for(task))
+        {
             Some(w) => (
                 w.embed_alpha(&snapshot.row_ids, snapshot.data.m()),
                 w.precond.clone(),
@@ -744,7 +925,7 @@ fn prewarm_generation(
     if let Some(f) = &precond {
         stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
     }
-    lock_clean(&slot.warm).put(Arc::new(WarmStart {
+    lock_clean(&slot.warm).put(task, Arc::new(WarmStart {
         generation: snapshot.generation,
         theta,
         row_ids: (*snapshot.row_ids).clone(),
@@ -773,11 +954,11 @@ fn prewarm_generation(
 /// Cache the fitted theta in the shard lineage, preserving any cached
 /// alpha and factored preconditioner (both solved under nearby
 /// hyper-parameters, so both remain excellent across the refit).
-fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64>) {
+fn record_fit_lineage(slot: &mut EngineSlot, task: u64, snapshot: &Snapshot, theta: Vec<f64>) {
     let mut warm = lock_clean(&slot.warm);
     let base = warm
-        .get(snapshot.generation)
-        .or_else(|| warm.latest().cloned());
+        .get(task, snapshot.generation)
+        .or_else(|| warm.latest_for(task));
     // Keep the base entry's own generation: the alpha/cross it carries
     // were solved under THAT generation, and re-keying it would make the
     // exact-generation hit counters lie about lineage provenance.
@@ -795,24 +976,26 @@ fn record_fit_lineage(slot: &mut EngineSlot, snapshot: &Snapshot, theta: Vec<f64
             path: None,
         },
     };
-    warm.put(Arc::new(updated));
+    warm.put(task, Arc::new(updated));
 }
 
-/// Process one drained batch of requests against an engine slot. The
-/// report's `shutdown` flag is set when a `Shutdown` was seen (remaining
-/// requests are dropped, like the original single-worker loop); its
-/// engine failure/success counts feed the shard circuit breaker.
+/// Process one drained batch of `(task, request)` pairs against an
+/// engine slot. The report's `shutdown` flag is set when a `Shutdown` was
+/// seen (remaining requests are dropped, like the original single-worker
+/// loop); its engine failure/success counts feed the bucket circuit
+/// breaker. `policy` is the bucket's refit-policy state for `Observe`.
 fn process_batch(
     slot: &mut EngineSlot,
-    batch: Vec<Request>,
+    batch: Vec<(u64, Request)>,
     stats: &ServiceStats,
     warm_enabled: bool,
     prewarm: bool,
     shard: usize,
+    policy: &RefitPolicy,
 ) -> BatchReport {
     let mut report = BatchReport::default();
     let mut pending: Vec<PendingQuery> = Vec::new();
-    for req in batch {
+    for (task, req) in batch {
         stats.requests.fetch_add(1, Ordering::Relaxed);
         // Unwrap deadline envelopes (nesting keeps the tightest deadline)
         // and drop expired work with a typed Timeout reply instead of
@@ -844,6 +1027,7 @@ fn process_batch(
                     continue;
                 }
                 pending.push(PendingQuery {
+                    task,
                     snapshot,
                     theta,
                     queries: vec![query],
@@ -859,6 +1043,7 @@ fn process_batch(
                     continue;
                 }
                 pending.push(PendingQuery {
+                    task,
                     snapshot,
                     theta,
                     queries,
@@ -871,7 +1056,7 @@ fn process_batch(
                 let d = snapshot.data.d();
                 let theta0 = if theta0.is_empty() {
                     if warm_enabled {
-                        warm_theta(slot, &snapshot, d)
+                        warm_theta(slot, task, &snapshot, d)
                     } else {
                         Theta::default_packed(d)
                     }
@@ -888,18 +1073,133 @@ fn process_batch(
                 }
                 if warm_enabled {
                     if let Ok(theta) = &result {
-                        record_fit_lineage(slot, &snapshot, theta.clone());
+                        record_fit_lineage(slot, task, &snapshot, theta.clone());
                         // Pre-warm BEFORE acknowledging the refit, so the
                         // lineage is replica-ready the moment the caller
                         // can start issuing reads against the fresh fit.
                         if prewarm {
                             if let Some(cfg) = slot.engine.session_cfg() {
-                                prewarm_generation(slot, &snapshot, theta.clone(), cfg, stats);
+                                prewarm_generation(
+                                    slot,
+                                    task,
+                                    &snapshot,
+                                    theta.clone(),
+                                    cfg,
+                                    stats,
+                                );
                             }
                         }
                     }
                 }
+                if result.is_ok() {
+                    policy.note_refit(task);
+                }
                 let _ = resp.send(result);
+            }
+            Request::Observe { snapshot, theta, resp } => {
+                // A write like Refit: order-barrier the queued reads so
+                // older-generation queries flush before the task's
+                // lineage moves forward.
+                flush_queries(slot, &mut pending, stats, warm_enabled, &mut report);
+                let Some(cfg) = slot.engine.session_cfg() else {
+                    report.engine_failures += 1;
+                    stats.solver_failures.fetch_add(1, Ordering::Relaxed);
+                    let _ = resp.send(Err(crate::LkgpError::Coordinator(
+                        "Observe needs a session-capable engine (gp::session warm re-solve)"
+                            .into(),
+                    )));
+                    continue;
+                };
+                let d = snapshot.data.d();
+                let theta = if theta.is_empty() {
+                    warm_theta(slot, task, &snapshot, d)
+                } else {
+                    theta
+                };
+                // Seed from the task's converged lineage: the extended
+                // snapshot's own generation is new, so this lands on the
+                // task's most-recent entry in practice.
+                let lineage = {
+                    let mut warm = lock_clean(&slot.warm);
+                    warm.get(task, snapshot.generation)
+                        .or_else(|| warm.latest_for(task))
+                }
+                .or_else(|| snapshot.warm.clone());
+                let guess = lineage
+                    .as_ref()
+                    .and_then(|w| w.embed_alpha(&snapshot.row_ids, snapshot.data.m()));
+                let precond = lineage.as_ref().and_then(|w| w.precond.as_ref().cloned());
+                let path = lineage.as_ref().and_then(|w| w.path.clone());
+                let t0 = Instant::now();
+                let result = session::observe(
+                    &snapshot.data,
+                    &theta,
+                    &cfg,
+                    guess.as_deref(),
+                    precond.as_ref(),
+                );
+                lock_clean(&stats.latency).record(t0.elapsed().as_micros() as u64);
+                match result {
+                    Ok(solve) => {
+                        report.engine_successes += 1;
+                        stats.observes.fetch_add(1, Ordering::Relaxed);
+                        stats
+                            .observe_solve_mvm_rows
+                            .fetch_add(solve.mvm_rows as u64, Ordering::Relaxed);
+                        stats
+                            .cg_iters
+                            .fetch_add(solve.cg_iters as u64, Ordering::Relaxed);
+                        stats
+                            .cg_mvm_rows
+                            .fetch_add(solve.mvm_rows as u64, Ordering::Relaxed);
+                        stats
+                            .escalations
+                            .fetch_add(solve.escalations as u64, Ordering::Relaxed);
+                        stats
+                            .dense_fallbacks
+                            .fetch_add(solve.dense_fallbacks as u64, Ordering::Relaxed);
+                        if guess.is_some() {
+                            stats.warm_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if let Some(f) = &solve.precond {
+                            stats.precond_rank.store(f.rank() as u64, Ordering::Relaxed);
+                        }
+                        // Cache the refreshed lineage even with `--warm
+                        // off`: "the next solve starts converged" IS the
+                        // Observe contract, not an optimization. The
+                        // pathwise lineage rides along — the sampler
+                        // staleness-checks it itself.
+                        lock_clean(&slot.warm).put(
+                            task,
+                            Arc::new(WarmStart {
+                                generation: snapshot.generation,
+                                theta: theta.clone(),
+                                row_ids: (*snapshot.row_ids).clone(),
+                                m: snapshot.data.m(),
+                                alpha: solve.alpha,
+                                xq: None,
+                                cross: Vec::new(),
+                                precond: solve.precond,
+                                path,
+                            }),
+                        );
+                        let refit_due = policy.feed_observe(task, solve.data_fit);
+                        if refit_due {
+                            stats.refits_triggered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let _ = resp.send(Ok(ObserveReport {
+                            generation: snapshot.generation,
+                            cg_iters: solve.cg_iters,
+                            mvm_rows: solve.mvm_rows,
+                            refit_due,
+                        }));
+                    }
+                    Err(e) => {
+                        report.engine_failures += 1;
+                        stats.solver_failures.fetch_add(1, Ordering::Relaxed);
+                        let _ = resp.send(Err(e));
+                    }
+                }
             }
             Request::SampleCurves { snapshot, theta, xq, samples, seed, resp } => {
                 // Sampling rides the coalesced query path as a seeded
@@ -912,6 +1212,7 @@ fn process_batch(
                     continue;
                 }
                 pending.push(PendingQuery {
+                    task,
                     snapshot,
                     theta,
                     queries: vec![query],
@@ -972,6 +1273,17 @@ impl PredictionService {
             .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
     }
 
+    /// Synchronous observe helper: warm re-solve on an extended snapshot
+    /// under an existing theta (see [`Request::Observe`]).
+    pub fn observe(&self, snapshot: Snapshot, theta: Vec<f64>) -> crate::Result<ObserveReport> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Observe { snapshot, theta, resp: rtx })
+            .map_err(|_| crate::LkgpError::Coordinator("service down".into()))?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("service dropped request".into()))?
+    }
+
     /// Synchronous predict helper.
     pub fn predict_final(
         &self,
@@ -1025,6 +1337,10 @@ impl PredictClient for PredictionService {
         PredictionService::refit(self, snapshot, theta0, seed)
     }
 
+    fn observe(&self, snapshot: Snapshot, theta: Vec<f64>) -> crate::Result<ObserveReport> {
+        PredictionService::observe(self, snapshot, theta)
+    }
+
     fn query(
         &self,
         snapshot: Snapshot,
@@ -1075,17 +1391,21 @@ fn worker_loop(engine: Box<dyn Engine>, rx: Receiver<Request>, stats: Arc<Servic
         engine,
         warm: Arc::new(Mutex::new(WarmLru::new(1))),
     };
+    // Single-task refit policy with the pool defaults; everything is
+    // task 0 here.
+    let defaults = PoolCfg::default();
+    let policy = RefitPolicy::new(defaults.refit_every_epochs, defaults.refit_drift);
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
             Err(_) => return,
         };
         // Drain whatever else is queued right now (dynamic batching window).
-        let mut queue: Vec<Request> = vec![first];
+        let mut queue: Vec<(u64, Request)> = vec![(0, first)];
         while let Ok(r) = rx.try_recv() {
-            queue.push(r);
+            queue.push((0, r));
         }
-        if process_batch(&mut slot, queue, &stats, false, false, 0).shutdown {
+        if process_batch(&mut slot, queue, &stats, false, false, 0, &policy).shutdown {
             return;
         }
     }
@@ -1152,6 +1472,23 @@ pub struct PoolCfg {
     /// Base quarantine cool-down; doubles on every consecutive trip
     /// (capped at 64x).
     pub breaker_cooldown: Duration,
+    /// Hash-bucketed shard routing for corpus pools: the number of shard
+    /// buckets many tasks are folded into (FNV over the task id, stable
+    /// across restarts). 0 = one bucket per task, the historical 1:1
+    /// layout and the default; positive values are clamped to the task
+    /// count. Queues, engines, warm caches, breakers, and stats become
+    /// per-bucket; generation fences stay per-task so one task's write
+    /// never retires a bucket-mate's replicas. Ignored by
+    /// [`ServicePool::spawn`], which is always 1:1 by construction.
+    pub buckets: usize,
+    /// Refit policy: after this many `Request::Observe` extensions of a
+    /// task without a refit, the observe report sets `refit_due` (0
+    /// disables the cadence trigger; drift can still fire).
+    pub refit_every_epochs: usize,
+    /// Refit policy: relative drift of the observe solve's data-fit term
+    /// against the task's post-refit baseline that flags theta as stale
+    /// (`refit_due`). The baseline re-arms on every real refit.
+    pub refit_drift: f64,
 }
 
 impl Default for PoolCfg {
@@ -1178,12 +1515,23 @@ impl Default for PoolCfg {
             // are rejected before they reach the engine and never count).
             breaker_threshold: 3,
             breaker_cooldown: Duration::from_millis(250),
+            // 1:1 task->shard layout unless the caller opts into folding
+            // (serving CLI: --buckets N|auto).
+            buckets: 0,
+            // Observe is a solve-only extension: let theta ride for a
+            // curve's typical "nothing changed" stretch, and catch real
+            // drift early via the data-fit term.
+            refit_every_epochs: 8,
+            refit_drift: 0.25,
         }
     }
 }
 
 struct PoolQueues {
-    pending: Vec<VecDeque<Request>>,
+    /// Per-bucket FIFO of `(task, request)` pairs. The task id rides
+    /// along because a bucket may serve many tasks (hash routing): warm
+    /// lineages, fences, and the refit policy all key on it.
+    pending: Vec<VecDeque<(u64, Request)>>,
     /// A shard is busy while a worker processes its drained batch; the
     /// flag serializes engine access per shard and preserves per-shard
     /// request order for everything the writer runs. Read-only replica
@@ -1205,6 +1553,12 @@ struct PoolQueues {
 pub type EngineFactory = Box<dyn Fn(usize) -> Box<dyn Engine> + Send + Sync>;
 
 struct PoolShared {
+    /// Task -> bucket routing table (`route[task]` indexes every
+    /// bucket-sized vector below). Identity for `spawn` pools and for
+    /// `from_corpus` with `PoolCfg::buckets == 0`; FNV-folded otherwise.
+    /// Deterministic across restarts: the same task always lands in the
+    /// same bucket for a given (task count, bucket count).
+    route: Vec<usize>,
     queues: Mutex<PoolQueues>,
     /// Workers wait here for claimable work.
     work_cv: Condvar,
@@ -1225,10 +1579,13 @@ struct PoolShared {
     /// replicas. Lock order where both are held: `queues` before `warm`;
     /// nothing ever takes `queues` while holding a `warm` lock.
     warm: Vec<Arc<Mutex<WarmLru>>>,
-    /// Per-shard generation fence: the newest generation any write
-    /// (refit) has been enqueued for. Replicas only serve reads at or
-    /// beyond the fence and re-check it immediately before delivering, so
-    /// a replica never answers a generation a writer has advanced past.
+    /// Per-TASK generation fence (length = `route.len()`, task-indexed
+    /// even when every other vector here is bucket-indexed): the newest
+    /// generation any write (`Refit` or `Observe`) has been enqueued for
+    /// that task. Replicas only serve a task's reads at or beyond its
+    /// fence and re-check it immediately before delivering, so a replica
+    /// never answers a generation a writer has advanced past — and one
+    /// task's write never retires a bucket-mate's replica reads.
     fences: Vec<AtomicU64>,
     /// Per-shard solver config for replica `Posterior`s, captured from
     /// `Engine::session_cfg` at spawn or lazy materialization (`None`
@@ -1251,6 +1608,10 @@ struct PoolShared {
     /// nests inside nothing: never held across an engine call or while
     /// the queues lock is taken.
     breakers: Vec<Mutex<Breaker>>,
+    /// Per-bucket refit policy driven by `Request::Observe` (per-task
+    /// entries inside). Its mutex nests inside nothing: only touched from
+    /// the writer path between engine calls.
+    policy: Vec<RefitPolicy>,
     max_queue: usize,
     warm_start: bool,
     max_replicas: usize,
@@ -1308,7 +1669,9 @@ impl ServicePool {
             .zip(&warm)
             .map(|(engine, w)| Mutex::new(Some(EngineSlot { engine, warm: w.clone() })))
             .collect();
-        Self::build(shards, None, warm, session_cfgs, None, n as u64, cfg)
+        // Caller-supplied engines are task-specific: always 1:1.
+        let route = (0..n).collect();
+        Self::build(shards, None, warm, session_cfgs, None, n as u64, route, cfg)
     }
 
     /// Admit every task of a corpus as a shard, materializing engines
@@ -1323,11 +1686,22 @@ impl ServicePool {
         cfg: PoolCfg,
     ) -> Self {
         let n = corpus.len();
-        let warm: Vec<Arc<Mutex<WarmLru>>> = (0..n)
+        // Hash-bucketed routing: fold n tasks into `cfg.buckets` shard
+        // buckets (0 or >= n keeps the historical 1:1 identity layout).
+        // A 10k-task corpus with 32 buckets costs 32 queue cells and at
+        // most 32 engines, not 10k.
+        let buckets = if cfg.buckets == 0 { n } else { cfg.buckets.min(n) };
+        let route: Vec<usize> = if buckets == n {
+            (0..n).collect()
+        } else {
+            (0..n).map(|t| bucket_of_task(t, buckets)).collect()
+        };
+        let warm: Vec<Arc<Mutex<WarmLru>>> = (0..buckets)
             .map(|_| Arc::new(Mutex::new(WarmLru::new(cfg.warm_cache))))
             .collect();
-        let shards: Vec<Mutex<Option<EngineSlot>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let session_cfgs = (0..n).map(|_| std::sync::OnceLock::new()).collect();
+        let shards: Vec<Mutex<Option<EngineSlot>>> =
+            (0..buckets).map(|_| Mutex::new(None)).collect();
+        let session_cfgs = (0..buckets).map(|_| std::sync::OnceLock::new()).collect();
         Self::build(
             shards,
             Some(factory),
@@ -1335,6 +1709,7 @@ impl ServicePool {
             session_cfgs,
             Some(corpus.fingerprint()),
             0,
+            route,
             cfg,
         )
     }
@@ -1347,9 +1722,12 @@ impl ServicePool {
         session_cfgs: Vec<std::sync::OnceLock<Option<SolverCfg>>>,
         corpus_fingerprint: Option<String>,
         materialized: u64,
+        route: Vec<usize>,
         cfg: PoolCfg,
     ) -> Self {
+        // n = bucket count; route.len() = task count (== n when 1:1).
         let n = shards.len();
+        let tasks = route.len();
         let shared = Arc::new(PoolShared {
             queues: Mutex::new(PoolQueues {
                 pending: (0..n).map(|_| VecDeque::new()).collect(),
@@ -1363,7 +1741,7 @@ impl ServicePool {
             shards,
             factory,
             warm,
-            fences: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            fences: (0..tasks).map(|_| AtomicU64::new(0)).collect(),
             session_cfgs,
             stats: (0..n).map(|_| Arc::new(ServiceStats::default())).collect(),
             materialized: AtomicU64::new(materialized),
@@ -1371,6 +1749,10 @@ impl ServicePool {
             evict_seen: (0..n).map(|_| AtomicU64::new(0)).collect(),
             corpus_fingerprint,
             breakers: (0..n).map(|_| Mutex::new(Breaker::default())).collect(),
+            policy: (0..n)
+                .map(|_| RefitPolicy::new(cfg.refit_every_epochs, cfg.refit_drift))
+                .collect(),
+            route,
             max_queue: cfg.max_queue.max(1),
             warm_start: cfg.warm_start,
             max_replicas: cfg.max_replicas,
@@ -1390,9 +1772,22 @@ impl ServicePool {
         ServicePool { shared, workers }
     }
 
-    /// Number of shards (tasks) in the pool.
+    /// Number of addressable task shards in the pool. This is the TASK
+    /// count — the public addressing space of `submit`/`handle`/`stats`
+    /// — regardless of how many physical buckets back it.
     pub fn shards(&self) -> usize {
+        self.shared.route.len()
+    }
+
+    /// Number of physical shard buckets (== [`ServicePool::shards`] for
+    /// the historical 1:1 layout; smaller under hash-bucketed routing).
+    pub fn buckets(&self) -> usize {
         self.shared.shards.len()
+    }
+
+    /// The bucket a task routes to (deterministic across restarts).
+    pub fn bucket_of(&self, task: usize) -> usize {
+        self.shared.route[task]
     }
 
     /// Shards materialized over the pool's lifetime (monotone: re-warming
@@ -1496,14 +1891,22 @@ impl ServicePool {
         }
     }
 
-    /// Per-shard statistics.
+    /// Statistics of the bucket a task shard routes to (per-task under
+    /// the 1:1 layout; shared between bucket-mates under hash routing).
     pub fn stats(&self, shard: usize) -> &Arc<ServiceStats> {
-        &self.shared.stats[shard]
+        &self.shared.stats[self.shared.route[shard]]
     }
 
-    /// Current pending-queue depth of a shard.
+    /// All per-bucket statistics blocks, bucket-indexed (one per physical
+    /// bucket; see [`ServicePool::stats`] for task-indexed access). Lets
+    /// pool-wide reports aggregate without walking every task.
+    pub fn all_stats(&self) -> &[Arc<ServiceStats>] {
+        &self.shared.stats
+    }
+
+    /// Current pending-queue depth of the bucket a task shard routes to.
     pub fn queue_depth(&self, shard: usize) -> usize {
-        self.shared.queues.lock().unwrap().pending[shard].len()
+        self.shared.queues.lock().unwrap().pending[self.shared.route[shard]].len()
     }
 }
 
@@ -1547,9 +1950,18 @@ impl ShardHandle {
         submit_with(&self.shared, self.shard, req, Some(Duration::ZERO))
     }
 
-    /// This shard's statistics.
+    /// This shard's statistics (the backing bucket's, under hash routing).
     pub fn stats(&self) -> &Arc<ServiceStats> {
-        &self.shared.stats[self.shard]
+        &self.shared.stats[self.shared.route[self.shard]]
+    }
+
+    /// Synchronous observe helper: extend this task's curve in place with
+    /// a warm re-solve (no refit; see [`Request::Observe`]).
+    pub fn observe(&self, snapshot: Snapshot, theta: Vec<f64>) -> crate::Result<ObserveReport> {
+        let (rtx, rrx) = channel();
+        self.submit(Request::Observe { snapshot, theta, resp: rtx })?;
+        rrx.recv()
+            .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
     }
 }
 
@@ -1559,6 +1971,10 @@ impl PredictClient for ShardHandle {
         self.submit(Request::Refit { snapshot, theta0, seed, resp: rtx })?;
         rrx.recv()
             .map_err(|_| crate::LkgpError::Coordinator("pool dropped request".into()))?
+    }
+
+    fn observe(&self, snapshot: Snapshot, theta: Vec<f64>) -> crate::Result<ObserveReport> {
+        ShardHandle::observe(self, snapshot, theta)
     }
 
     fn query(
@@ -1641,6 +2057,20 @@ impl PredictClient for ShardHandle {
     }
 }
 
+/// The bucket a task folds into under hash routing: FNV-1a over the task
+/// id's little-endian bytes, mod the bucket count. Pure function of
+/// (task, buckets) — deterministic across restarts and processes, which
+/// is what keeps warm lineage, traces, and eviction behavior reproducible
+/// for a fixed pool shape.
+fn bucket_of_task(task: usize, buckets: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in (task as u64).to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % buckets.max(1) as u64) as usize
+}
+
 fn submit_to(shared: &PoolShared, shard: usize, req: Request) -> crate::Result<()> {
     submit_with(shared, shard, req, shared.submit_wait)
 }
@@ -1651,12 +2081,15 @@ fn submit_with(
     req: Request,
     max_wait: Option<Duration>,
 ) -> crate::Result<()> {
-    if shard >= shared.shards.len() {
+    // `shard` is the public task index; everything queue/breaker/stats
+    // below happens on the bucket it routes to.
+    if shard >= shared.route.len() {
         return Err(crate::LkgpError::Coordinator(format!(
             "no shard {shard} (pool has {})",
-            shared.shards.len()
+            shared.route.len()
         )));
     }
+    let bucket = shared.route[shard];
     if matches!(req, Request::Shutdown) {
         // Per-request shutdown belongs to the single-task service; the
         // pool's lifecycle is its Drop impl.
@@ -1669,11 +2102,11 @@ fn submit_with(
     // submission after the cool-down flows through as a probe (half-open
     // breaker — see `breaker_feed`).
     if shared.breaker_threshold > 0 {
-        let mut b = lock_clean(&shared.breakers[shard]);
+        let mut b = lock_clean(&shared.breakers[bucket]);
         if let Some(until) = b.open_until {
             let now = Instant::now();
             if now < until {
-                shared.stats[shard]
+                shared.stats[bucket]
                     .quarantine_rejects
                     .fetch_add(1, Ordering::Relaxed);
                 return Err(crate::LkgpError::Quarantined {
@@ -1694,10 +2127,11 @@ fn submit_with(
         },
         _ => req,
     };
-    // Writes advance the shard's generation fence at enqueue time — the
+    // Writes advance the TASK's generation fence at enqueue time — the
     // earliest point a replica can learn that its generation is about to
-    // be superseded.
-    if let Some(g) = refit_generation(&req) {
+    // be superseded. Per-task, so a bucket-mate's write never fences this
+    // task's replica reads.
+    if let Some(g) = write_generation(&req) {
         shared.fences[shard].fetch_max(g, Ordering::Relaxed);
     }
     let depth = {
@@ -1707,7 +2141,7 @@ fn submit_with(
             if q.shutdown {
                 return Err(crate::LkgpError::Coordinator("pool shutting down".into()));
             }
-            if q.pending[shard].len() < shared.max_queue {
+            if q.pending[bucket].len() < shared.max_queue {
                 break;
             }
             match shed_at {
@@ -1716,10 +2150,10 @@ fn submit_with(
                 Some(t) => {
                     let now = Instant::now();
                     if now >= t {
-                        shared.stats[shard].shed.fetch_add(1, Ordering::Relaxed);
+                        shared.stats[bucket].shed.fetch_add(1, Ordering::Relaxed);
                         return Err(crate::LkgpError::Coordinator(format!(
                             "shard {shard} queue full ({} pending); request shed",
-                            q.pending[shard].len()
+                            q.pending[bucket].len()
                         )));
                     }
                     let (guard, _) = shared
@@ -1730,10 +2164,10 @@ fn submit_with(
                 }
             }
         }
-        q.pending[shard].push_back(req);
-        q.pending[shard].len() as u64
+        q.pending[bucket].push_back((shard as u64, req));
+        q.pending[bucket].len() as u64
     };
-    let stats = &shared.stats[shard];
+    let stats = &shared.stats[bucket];
     stats.enqueued.fetch_add(1, Ordering::Relaxed);
     stats.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
     shared.work_cv.notify_one();
@@ -1743,24 +2177,26 @@ fn submit_with(
 /// What a pool worker claimed: exclusive writer access to a shard's
 /// drained queue, or a read-only replica group stolen from a busy shard.
 enum PoolWork {
-    Writer(usize, Vec<Request>),
+    Writer(usize, Vec<(u64, Request)>),
     Replica {
         shard: usize,
+        task: u64,
         generation: u64,
         reads: Vec<PendingQuery>,
     },
 }
 
-/// Replica claim: from a busy shard's queue, steal every read-only
-/// request (`Query` / `PredictFinal`) of one *servable* generation — a
-/// generation at or beyond the shard's write fence whose lineage (cached
-/// `WarmStart` with a converged alpha) already sits in the warm cache.
-/// Writes and reads of other generations stay queued in order for the
-/// writer. Returns None when nothing is stealable.
+/// Replica claim: from a busy bucket's queue, steal every read-only
+/// request (`Query` / `PredictFinal`) of one *servable* (task,
+/// generation) — a generation at or beyond that task's write fence whose
+/// lineage (cached `WarmStart` with a converged alpha) already sits in
+/// the bucket's warm cache. Writes and reads of other tasks/generations
+/// stay queued in order for the writer. Returns None when nothing is
+/// stealable.
 fn try_steal_reads(
     q: &mut PoolQueues,
     shared: &PoolShared,
-) -> Option<(usize, u64, Vec<PendingQuery>)> {
+) -> Option<(usize, u64, u64, Vec<PendingQuery>)> {
     if shared.max_replicas == 0 {
         return None;
     }
@@ -1778,17 +2214,17 @@ fn try_steal_reads(
         {
             continue;
         }
-        // Find the first read whose generation passes the fence and is
-        // already fitted (exact-generation lineage with an alpha). The
-        // warm lock nests inside the queues lock here; the reverse order
-        // never occurs (see PoolShared::warm).
-        let fence = shared.fences[si].load(Ordering::Relaxed);
-        let mut target: Option<u64> = None;
-        // Memoize the lineage check per distinct generation: a deep read
-        // backlog must not turn one scan into a warm-lock acquisition per
-        // queued request (this whole scan runs under the queues lock).
-        let mut checked: Vec<(u64, bool)> = Vec::new();
-        for req in q.pending[si].iter() {
+        // Find the first read whose generation passes its task's fence
+        // and is already fitted (exact (task, generation) lineage with an
+        // alpha). The warm lock nests inside the queues lock here; the
+        // reverse order never occurs (see PoolShared::warm).
+        let mut target: Option<(u64, u64)> = None;
+        // Memoize the lineage check per distinct (task, generation): a
+        // deep read backlog must not turn one scan into a warm-lock
+        // acquisition per queued request (this whole scan runs under the
+        // queues lock).
+        let mut checked: Vec<(u64, u64, bool)> = Vec::new();
+        for (task, req) in q.pending[si].iter() {
             // Deadline-wrapped reads fall through to the writer (which
             // enforces expiry at pick-up); replicas only steal bare reads.
             let g = match req {
@@ -1797,33 +2233,38 @@ fn try_steal_reads(
                 | Request::SampleCurves { snapshot, .. } => snapshot.generation,
                 _ => continue,
             };
-            if g < fence {
+            if g < shared.fences[*task as usize].load(Ordering::Relaxed) {
                 continue;
             }
-            let fitted = match checked.iter().find(|(cg, _)| *cg == g) {
-                Some(&(_, fitted)) => fitted,
+            let fitted = match checked.iter().find(|(ct, cg, _)| ct == task && *cg == g) {
+                Some(&(_, _, fitted)) => fitted,
                 None => {
                     let fitted = lock_clean(&shared.warm[si])
-                        .peek(g)
+                        .peek(*task, g)
                         .map_or(false, |w| !w.alpha.is_empty());
-                    checked.push((g, fitted));
+                    checked.push((*task, g, fitted));
                     fitted
                 }
             };
             if fitted {
-                target = Some(g);
+                target = Some((*task, g));
                 break;
             }
         }
-        let Some(g) = target else { continue };
+        let Some((task0, g)) = target else { continue };
         let mut stolen = Vec::new();
         let mut keep = VecDeque::with_capacity(q.pending[si].len());
-        for req in q.pending[si].drain(..) {
+        for (task, req) in q.pending[si].drain(..) {
+            if task != task0 {
+                keep.push_back((task, req));
+                continue;
+            }
             match req {
                 Request::Query { snapshot, theta, queries, resp }
                     if snapshot.generation == g =>
                 {
                     stolen.push(PendingQuery {
+                        task,
                         snapshot,
                         theta,
                         queries,
@@ -1834,6 +2275,7 @@ fn try_steal_reads(
                     if snapshot.generation == g =>
                 {
                     stolen.push(PendingQuery {
+                        task,
                         snapshot,
                         theta,
                         queries: vec![Query::MeanAtFinal { xq }],
@@ -1847,18 +2289,19 @@ fn try_steal_reads(
                     // (theta, data, xq, seed), so a replica's draws are
                     // bit-identical to the writer's (docs/sampling.md).
                     stolen.push(PendingQuery {
+                        task,
                         snapshot,
                         theta,
                         queries: vec![Query::CurveSamples { xq, n: samples, seed }],
                         reply: PendingReply::Curves(resp),
                     });
                 }
-                other => keep.push_back(other),
+                other => keep.push_back((task, other)),
             }
         }
         q.pending[si] = keep;
         q.replicas[si] += 1;
-        return Some((si, g, stolen));
+        return Some((si, task0, g, stolen));
     }
     None
 }
@@ -1870,6 +2313,7 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
     {
         let mut q = shared.queues.lock().unwrap();
         for p in reads.into_iter().rev() {
+            let task = p.task;
             let req = match p.reply {
                 PendingReply::Answers(tx) => Request::Query {
                     snapshot: p.snapshot,
@@ -1910,7 +2354,7 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
                     }
                 }
             };
-            q.pending[shard].push_front(req);
+            q.pending[shard].push_front((task, req));
         }
     }
     shared.work_cv.notify_one();
@@ -1922,7 +2366,7 @@ fn requeue_reads(shared: &PoolShared, shard: usize, reads: Vec<PendingQuery>) {
 /// from the lineage exactly like the writer would — and deliver, unless
 /// a writer advanced the shard's fence mid-serve, in which case the whole
 /// group retires back to the writer unanswered.
-fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQuery>) {
+fn replica_serve(shared: &PoolShared, si: usize, task: u64, g: u64, mut reads: Vec<PendingQuery>) {
     let stats = &shared.stats[si];
     let Some(cfg) = shared.session_cfgs[si].get().and_then(|c| c.as_ref()) else {
         // Eligibility is checked before stealing, but a lost race with a
@@ -1961,7 +2405,7 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
             pending = keep;
             take
         };
-        let Some(lineage) = lock_clean(&shared.warm[si]).peek(g) else {
+        let Some(lineage) = lock_clean(&shared.warm[si]).peek(task, g) else {
             // Evicted between claim and serve (tiny window): not stale,
             // just unlucky — hand the group back to the writer.
             requeue_reads(shared, si, group);
@@ -2005,11 +2449,12 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
         }
         let t0 = Instant::now();
         let result = post.answer_batch(&all);
-        // Generation fence: a writer advanced past g while we computed —
-        // discard the answers and hand the requests back (they carry
-        // their own snapshots, so the writer still answers them
-        // correctly; the replica just must not).
-        if shared.fences[si].load(Ordering::Relaxed) > g {
+        // Generation fence: a writer advanced this TASK past g while we
+        // computed — discard the answers and hand the requests back (they
+        // carry their own snapshots, so the writer still answers them
+        // correctly; the replica just must not). Bucket-mates' writes
+        // don't touch this fence.
+        if shared.fences[task as usize].load(Ordering::Relaxed) > g {
             stats.stale_replica_retires.fetch_add(1, Ordering::Relaxed);
             let rebuilt: Vec<PendingQuery> = {
                 let mut offs = 0usize;
@@ -2019,6 +2464,7 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                         let queries = all[offs..offs + len].to_vec();
                         offs += len;
                         PendingQuery {
+                            task,
                             snapshot: snap.clone(),
                             theta: theta0.clone(),
                             queries,
@@ -2100,8 +2546,9 @@ fn replica_serve(shared: &PoolShared, si: usize, g: u64, mut reads: Vec<PendingQ
                         stats
                             .sample_mvms
                             .fetch_add(solo.sample_mvms() as u64, Ordering::Relaxed);
-                        if shared.fences[si].load(Ordering::Relaxed) > g {
+                        if shared.fences[task as usize].load(Ordering::Relaxed) > g {
                             retired.push(PendingQuery {
+                                task,
                                 snapshot: snap.clone(),
                                 theta: theta0.clone(),
                                 queries: span.to_vec(),
@@ -2186,11 +2633,11 @@ fn pool_worker(shared: Arc<PoolShared>) {
                 if let Some(si) = claim {
                     q.busy[si] = true;
                     q.cursor = (si + 1) % k;
-                    let batch: Vec<Request> = q.pending[si].drain(..).collect();
+                    let batch: Vec<(u64, Request)> = q.pending[si].drain(..).collect();
                     break PoolWork::Writer(si, batch);
                 }
-                if let Some((si, g, reads)) = try_steal_reads(&mut q, &shared) {
-                    break PoolWork::Replica { shard: si, generation: g, reads };
+                if let Some((si, task, g, reads)) = try_steal_reads(&mut q, &shared) {
+                    break PoolWork::Replica { shard: si, task, generation: g, reads };
                 }
                 if q.shutdown {
                     return;
@@ -2228,7 +2675,7 @@ fn pool_worker(shared: Arc<PoolShared>) {
                         // factory is a wiring bug; fail the batch with
                         // typed errors instead of taking the worker down.
                         let mut report = BatchReport::default();
-                        for req in batch {
+                        for (_task, req) in batch {
                             if matches!(req, Request::Shutdown) {
                                 report.shutdown = true;
                                 continue;
@@ -2250,6 +2697,7 @@ fn pool_worker(shared: Arc<PoolShared>) {
                         shared.warm_start,
                         shared.prewarm,
                         si,
+                        &shared.policy[si],
                     )
                 }));
                 let (failed, succeeded) = match &run {
@@ -2277,9 +2725,9 @@ fn pool_worker(shared: Arc<PoolShared>) {
                     shared.work_cv.notify_one();
                 }
             }
-            PoolWork::Replica { shard, generation, reads } => {
+            PoolWork::Replica { shard, task, generation, reads } => {
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    replica_serve(&shared, shard, generation, reads);
+                    replica_serve(&shared, shard, task, generation, reads);
                 }));
                 if run.is_err() {
                     shared.stats[shard]
@@ -2432,7 +2880,7 @@ mod tests {
     }
 
     #[test]
-    fn warm_lru_keys_by_generation_and_evicts() {
+    fn warm_lru_keys_by_task_and_generation_and_evicts() {
         fn entry(generation: u64) -> Arc<WarmStart> {
             Arc::new(WarmStart {
                 generation,
@@ -2447,20 +2895,32 @@ mod tests {
             })
         }
         let mut lru = WarmLru::new(2);
-        assert!(lru.get(1).is_none());
-        lru.put(entry(1));
-        lru.put(entry(2));
-        // exact-generation hits, MRU refresh
-        assert_eq!(lru.get(1).unwrap().generation, 1);
-        assert_eq!(lru.latest().unwrap().generation, 1);
-        // inserting a third evicts the least recently used (gen 2)
-        lru.put(entry(3));
-        assert!(lru.get(2).is_none());
-        assert_eq!(lru.get(1).unwrap().generation, 1);
-        assert_eq!(lru.get(3).unwrap().generation, 3);
+        assert!(lru.get(0, 1).is_none());
+        lru.put(0, entry(1));
+        lru.put(0, entry(2));
+        // exact (task, generation) hits, MRU refresh
+        assert_eq!(lru.get(0, 1).unwrap().generation, 1);
+        assert_eq!(lru.latest_for(0).unwrap().generation, 1);
+        // inserting a third evicts the task's least recently used (gen 2)
+        lru.put(0, entry(3));
+        assert!(lru.get(0, 2).is_none());
+        assert_eq!(lru.get(0, 1).unwrap().generation, 1);
+        assert_eq!(lru.get(0, 3).unwrap().generation, 3);
         // replacing a generation keeps one entry
-        lru.put(entry(3));
-        assert_eq!(lru.latest().unwrap().generation, 3);
+        lru.put(0, entry(3));
+        assert_eq!(lru.latest_for(0).unwrap().generation, 3);
+        // bucket-mates are isolated: another task's lineage neither
+        // shadows nor evicts task 0's, and the per-task cap applies
+        // independently
+        lru.put(7, entry(3));
+        lru.put(7, entry(4));
+        lru.put(7, entry(5));
+        assert_eq!(lru.latest_for(0).unwrap().generation, 3);
+        assert_eq!(lru.get(0, 3).unwrap().theta, vec![3.0]);
+        assert!(lru.get(7, 3).is_none());
+        assert_eq!(lru.get(7, 4).unwrap().generation, 4);
+        assert_eq!(lru.get(7, 5).unwrap().generation, 5);
+        assert!(lru.get(0, 1).is_some(), "task 0 keeps its own two entries");
     }
 
     #[test]

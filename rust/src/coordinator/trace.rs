@@ -15,6 +15,13 @@
 //!   generation lines pin each generation's per-config observed lengths
 //!   (`Snapshot::observed_lengths`), and refit lines replay the write
 //!   path so the generation fence is exercised under load.
+//! * **v3** (written by `lkgp pool --record` when the run used
+//!   `--observe-storm` / `SchedulerCfg::observe_every`): v2 plus observe
+//!   lines (`{"task":..,"generation":..,"observe":1}`) that replay
+//!   [`Request::Observe`] — the zero-MLL warm re-solve write path.
+//!   Replayed observes use the task's recorded lineage theta, so a
+//!   sequential replay is bit-deterministic like v2; every v2 trace is a
+//!   valid v3 trace with no observe lines.
 //!
 //! `--concurrent` replays the whole trace as a storm (every request
 //! submitted before any answer is awaited) with **relaxed invariants**:
@@ -255,6 +262,14 @@ enum TraceEvent {
         generation: u64,
         seed: u64,
     },
+    /// v3: an observe request — the O(warm-solve) write path. Replays
+    /// `Request::Observe` with an empty theta, so the pool resolves the
+    /// task's lineage theta exactly like the recorded run's policy did.
+    Observe {
+        line: usize,
+        task: usize,
+        generation: u64,
+    },
     /// A typed-query request.
     Request {
         line: usize,
@@ -333,11 +348,11 @@ fn parse_trace(path: &str) -> crate::Result<ParsedTrace> {
             }
             (TraceCorpus::sim(tasks, configs, seed), gen_epochs, max_epochs)
         }
-        2 => {
+        2 | 3 => {
             let kind = header
                 .get("corpus")
                 .and_then(Json::as_str)
-                .ok_or_else(|| bad(hline, "v2 header needs corpus (\"sim\" or \"dir\")"))?;
+                .ok_or_else(|| bad(hline, "v2+ header needs corpus (\"sim\" or \"dir\")"))?;
             let corpus = match kind {
                 "sim" => {
                     let tasks =
@@ -452,6 +467,13 @@ fn parse_trace(path: &str) -> crate::Result<ParsedTrace> {
             }
             let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             events.push(TraceEvent::Refit { line, task, generation, seed });
+            continue;
+        }
+        if v.get("observe").is_some() {
+            if version < 3 {
+                return Err(bad(line, "observe lines need a version-3 trace"));
+            }
+            events.push(TraceEvent::Observe { line, task, generation });
             continue;
         }
         let raw_queries = v
@@ -572,10 +594,11 @@ fn build_snapshots(trace: &ParsedTrace) -> crate::Result<BTreeMap<(usize, u64), 
         }
         snaps.insert((*t, *generation), snap);
     }
-    // every refit/request must reference a pinned generation
+    // every refit/observe/request must reference a pinned generation
     for event in &trace.events {
         let (line, t, g) = match event {
             TraceEvent::Refit { line, task, generation, .. }
+            | TraceEvent::Observe { line, task, generation }
             | TraceEvent::Request { line, task, generation, .. } => (line, task, generation),
             TraceEvent::Gen { .. } => continue,
         };
@@ -600,6 +623,9 @@ pub struct ReplaySummary {
     pub requests: usize,
     /// Refit (write-path) requests replayed.
     pub refits: usize,
+    /// Observe (warm re-solve write-path) requests replayed (v3 only;
+    /// always 0 for v1/v2 traces).
+    pub observes: usize,
     /// Request errors (must be zero for a passing replay).
     pub errors: usize,
     /// Distinct `(task, generation, signature)` parity groups checked
@@ -656,6 +682,7 @@ pub fn run_replay(
 
     let mut errors = 0usize;
     let mut refits = 0usize;
+    let mut observes = 0usize;
     let mut per_shard_requests = vec![0u64; tasks];
     let mut per_shard_parity = vec![0u64; tasks];
     let mut shard_gens: Vec<BTreeSet<u64>> = vec![BTreeSet::new(); tasks];
@@ -673,6 +700,17 @@ pub fn run_replay(
                     {
                         errors += 1;
                         eprintln!("replay line {line}: refit: {e}");
+                    }
+                }
+                TraceEvent::Observe { line, task, generation } => {
+                    observes += 1;
+                    // Empty theta: the pool resolves the task's lineage
+                    // theta, matching the recorded run's refit-free path.
+                    if let Err(e) =
+                        pool.handle(*task).observe(snap_of(*task, *generation), vec![])
+                    {
+                        errors += 1;
+                        eprintln!("replay line {line}: observe: {e}");
                     }
                 }
                 TraceEvent::Request { line, task, generation, queries } => {
@@ -701,6 +739,10 @@ pub fn run_replay(
         enum PendingAnswer {
             Query(usize, std::sync::mpsc::Receiver<crate::Result<Vec<Answer>>>, usize),
             Refit(usize, std::sync::mpsc::Receiver<crate::Result<Vec<f64>>>),
+            Observe(
+                usize,
+                std::sync::mpsc::Receiver<crate::Result<super::service::ObserveReport>>,
+            ),
         }
         let mut pending = Vec::new();
         for event in &trace.events {
@@ -719,6 +761,19 @@ pub fn run_replay(
                         },
                     )?;
                     pending.push(PendingAnswer::Refit(*line, rrx));
+                }
+                TraceEvent::Observe { line, task, generation } => {
+                    observes += 1;
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    pool.submit(
+                        *task,
+                        Request::Observe {
+                            snapshot: snap_of(*task, *generation),
+                            theta: vec![],
+                            resp: rtx,
+                        },
+                    )?;
+                    pending.push(PendingAnswer::Observe(*line, rrx));
                 }
                 TraceEvent::Request { line, task, generation, queries } => {
                     let snap = snap_of(*task, *generation);
@@ -747,6 +802,17 @@ pub fn run_replay(
                     Err(_) => {
                         errors += 1;
                         eprintln!("replay line {line}: refit response dropped");
+                    }
+                },
+                PendingAnswer::Observe(line, rrx) => match rrx.recv() {
+                    Ok(Ok(_)) => {}
+                    Ok(Err(e)) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: observe: {e}");
+                    }
+                    Err(_) => {
+                        errors += 1;
+                        eprintln!("replay line {line}: observe response dropped");
                     }
                 },
                 PendingAnswer::Query(line, rrx, n) => match rrx.recv() {
@@ -887,7 +953,8 @@ pub fn run_replay(
     let requests: usize = per_shard_requests.iter().map(|&r| r as usize).sum();
     println!(
         "TRACE_REPLAY file={path} version={} requests={requests} refits={refits} \
-         errors={errors} parity_checks={parity_checks} violations={} wall_ms={:.1}",
+         observes={observes} errors={errors} parity_checks={parity_checks} violations={} \
+         wall_ms={:.1}",
         trace.version,
         violations.len(),
         wall.as_secs_f64() * 1e3,
@@ -895,6 +962,7 @@ pub fn run_replay(
     Ok(ReplaySummary {
         requests,
         refits,
+        observes,
         errors,
         parity_checks,
         violations,
@@ -941,6 +1009,7 @@ pub struct TraceRecorder {
     skipped: usize,
     requests: Vec<u64>,
     refits: Vec<u64>,
+    observes: Vec<u64>,
 }
 
 impl TraceRecorder {
@@ -979,6 +1048,7 @@ impl TraceRecorder {
             skipped: 0,
             requests: vec![0; tasks],
             refits: vec![0; tasks],
+            observes: vec![0; tasks],
         })
     }
 
@@ -1007,6 +1077,21 @@ impl TraceRecorder {
                 ("generation", Json::Num(snap.generation as f64)),
                 ("refit", Json::Num(1.0)),
                 ("seed", Json::Num(seed as f64)),
+            ])
+            .compact(),
+        );
+    }
+
+    fn record_observe(&mut self, task: usize, snap: &Snapshot) {
+        self.record_gen(task, snap);
+        if let Some(o) = self.observes.get_mut(task) {
+            *o += 1;
+        }
+        self.lines.push(
+            Json::obj(vec![
+                ("task", Json::Num(task as f64)),
+                ("generation", Json::Num(snap.generation as f64)),
+                ("observe", Json::Num(1.0)),
             ])
             .compact(),
         );
@@ -1050,14 +1135,28 @@ impl TraceRecorder {
             .collect();
         let requests: Vec<usize> = self.requests.iter().map(|&r| r as usize).collect();
         let refits: Vec<usize> = self.refits.iter().map(|&r| r as usize).collect();
-        let trailer = Json::obj(vec![
+        let observes: Vec<usize> = self.observes.iter().map(|&o| o as usize).collect();
+        let n_observes: usize = observes.iter().sum();
+        // A run with no observes writes a plain v2 trace (older replayers
+        // keep working); observe lines force the v3 header.
+        let version = if n_observes > 0 { 3 } else { 2 };
+        if let Json::Obj(map) = &mut self.header {
+            map.insert("version".into(), Json::Num(version as f64));
+        }
+        let mut fields = vec![
             ("trailer", Json::Num(1.0)),
             ("requests", Json::arr_usize(&requests)),
             ("refits", Json::arr_usize(&refits)),
             ("engine_solves", Json::arr_usize(&solves)),
-        ]);
+        ];
+        if n_observes > 0 {
+            fields.push(("observes", Json::arr_usize(&observes)));
+        }
+        let trailer = Json::obj(fields);
         let mut out = String::new();
-        out.push_str("# lkgp request trace v2 (recorded by `lkgp pool --record`; replay with\n");
+        out.push_str(&format!(
+            "# lkgp request trace v{version} (recorded by `lkgp pool --record`; replay with\n"
+        ));
         out.push_str("# `lkgp pool --replay FILE [--concurrent]`, see docs/data.md).\n");
         out.push_str(&self.header.compact());
         out.push('\n');
@@ -1069,7 +1168,8 @@ impl TraceRecorder {
         out.push('\n');
         std::fs::write(&self.path, out)?;
         println!(
-            "recorded {} requests + {} refits ({} unrepresentable skipped) -> {}",
+            "recorded {} requests + {} refits + {n_observes} observes \
+             ({} unrepresentable skipped) -> {}",
             requests.iter().sum::<usize>(),
             refits.iter().sum::<usize>(),
             self.skipped,
@@ -1098,6 +1198,15 @@ impl PredictClient for RecordingHandle {
     fn refit(&self, snapshot: Snapshot, theta0: Vec<f64>, seed: u64) -> crate::Result<Vec<f64>> {
         self.rec.lock().unwrap().record_refit(self.task, &snapshot, seed);
         self.inner.refit(snapshot, theta0, seed)
+    }
+
+    fn observe(
+        &self,
+        snapshot: Snapshot,
+        theta: Vec<f64>,
+    ) -> crate::Result<super::service::ObserveReport> {
+        self.rec.lock().unwrap().record_observe(self.task, &snapshot);
+        self.inner.observe(snapshot, theta)
     }
 
     fn query(

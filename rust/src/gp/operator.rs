@@ -342,10 +342,15 @@ pub enum PrecondCfg {
     /// Plain CG (bit-exact with the historical solver).
     #[default]
     Off,
-    /// Strategy by mask shape; rank min(n, 32) latent / min(n_obs, 64)
-    /// observed-Gram.
+    /// Strategy by mask shape; rank is ADAPTIVE — the pivoted Cholesky
+    /// stops when the residual trace of its diagonal has decayed below
+    /// [`PrecondCfg::rank_tol`] times the starting trace, capped at
+    /// min(n, 64) latent / min(n_obs, 128) observed-Gram. Smooth kernels
+    /// compress to single-digit ranks; ill-conditioned spectra spend the
+    /// budget where it actually buys iterations.
     Auto,
-    /// Explicit pivoted-Cholesky rank (clamped to the factored dimension).
+    /// Explicit pivoted-Cholesky rank (clamped to the factored dimension;
+    /// no residual-trace early stop beyond numerical exhaustion).
     Rank(usize),
 }
 
@@ -355,21 +360,38 @@ impl PrecondCfg {
         !matches!(self, PrecondCfg::Off)
     }
 
-    /// Rank for the latent-Kronecker strategy (K1 is n×n); None when off.
+    /// Rank CAP for the latent-Kronecker strategy (K1 is n×n); None when
+    /// off. Under `Auto` the factorization may stop earlier (see
+    /// [`PrecondCfg::rank_tol`]).
     pub fn latent_rank(&self, n: usize) -> Option<usize> {
         match self {
             PrecondCfg::Off => None,
-            PrecondCfg::Auto => Some(n.min(32).max(1)),
+            PrecondCfg::Auto => Some(n.min(64).max(1)),
             PrecondCfg::Rank(r) => Some((*r).clamp(1, n.max(1))),
         }
     }
 
-    /// Rank for the observed-Gram strategy; None when off.
+    /// Rank CAP for the observed-Gram strategy; None when off.
     pub fn obs_rank(&self, n_obs: usize) -> Option<usize> {
         match self {
             PrecondCfg::Off => None,
-            PrecondCfg::Auto => Some(n_obs.min(64).max(1)),
+            PrecondCfg::Auto => Some(n_obs.min(128).max(1)),
             PrecondCfg::Rank(r) => Some((*r).clamp(1, n_obs.max(1))),
+        }
+    }
+
+    /// Relative residual-trace stopping tolerance handed to the pivoted
+    /// Cholesky: the factorization stops at the first rank whose residual
+    /// diagonal trace falls below `rank_tol * trace(A)`. `Auto` trades
+    /// factor size against iteration count at 1e-3 (the residual spectrum
+    /// the factors fail to capture is what PCG still has to iterate
+    /// through, so deeper decay buys nothing once CG converges in a
+    /// handful of steps); explicit `Rank` keeps the historical
+    /// numerical-exhaustion-only threshold so requested ranks are honored.
+    pub fn rank_tol(&self) -> f64 {
+        match self {
+            PrecondCfg::Auto => 1e-3,
+            PrecondCfg::Off | PrecondCfg::Rank(_) => 1e-12,
         }
     }
 
@@ -442,8 +464,23 @@ impl KronPrecondFactors {
     /// the staleness check; the noise entry is excluded there because σ²
     /// is applied live).
     pub fn build(k1: &Matrix, k2: &Matrix, rank: usize, theta: &[f64]) -> Self {
+        Self::build_with_tol(k1, k2, rank, 1e-12, theta)
+    }
+
+    /// [`KronPrecondFactors::build`] with an explicit residual-trace
+    /// stopping tolerance for the pivoted Cholesky of K1 — `rank` becomes
+    /// a cap and the factorization stops early once the residual diagonal
+    /// trace decays below `rel_tol * trace(K1)` (the adaptive-rank policy
+    /// behind [`PrecondCfg::Auto`]).
+    pub fn build_with_tol(
+        k1: &Matrix,
+        k2: &Matrix,
+        rank: usize,
+        rel_tol: f64,
+        theta: &[f64],
+    ) -> Self {
         let (n, m) = (k1.rows(), k2.rows());
-        let pc = pivoted_cholesky(k1, rank.min(n), 1e-12);
+        let pc = pivoted_cholesky(k1, rank.min(n), rel_tol);
         let l1 = pc.l;
         let l1t = l1.transpose();
         let c = l1t.matmul(&l1); // (r, r)
@@ -659,6 +696,22 @@ pub struct ObsGramPrecondFactors {
 impl ObsGramPrecondFactors {
     /// Factor the observed covariance at `rank` (≤ n_obs).
     pub fn build(k1: &Matrix, k2: &Matrix, mask: &Matrix, rank: usize, theta: &[f64]) -> Self {
+        Self::build_with_tol(k1, k2, mask, rank, 1e-12, theta)
+    }
+
+    /// [`ObsGramPrecondFactors::build`] with an explicit residual-trace
+    /// stopping tolerance — `rank` becomes a cap and the factorization
+    /// stops early once the residual diagonal trace of the observed Gram
+    /// decays below `rel_tol` times its starting trace (the adaptive-rank
+    /// policy behind [`PrecondCfg::Auto`]).
+    pub fn build_with_tol(
+        k1: &Matrix,
+        k2: &Matrix,
+        mask: &Matrix,
+        rank: usize,
+        rel_tol: f64,
+        theta: &[f64],
+    ) -> Self {
         let (n, m) = (k1.rows(), k2.rows());
         debug_assert_eq!((mask.rows(), mask.cols()), (n, m));
         let idx: Vec<usize> = mask
@@ -679,7 +732,7 @@ impl ObsGramPrecondFactors {
                 }
             },
             rank.min(idx.len()),
-            1e-12,
+            rel_tol,
         );
         let l = pc.l;
         let ltl = l.transpose().matmul(&l);
@@ -830,8 +883,12 @@ impl PrecondFactors {
         let full_mask = mask.data().iter().all(|&mv| mv > 0.0);
         if full_mask {
             let rank = cfg.latent_rank(n)?;
-            Some(PrecondFactors::LatentKron(KronPrecondFactors::build(
-                k1, k2, rank, theta,
+            Some(PrecondFactors::LatentKron(KronPrecondFactors::build_with_tol(
+                k1,
+                k2,
+                rank,
+                cfg.rank_tol(),
+                theta,
             )))
         } else {
             let n_obs = mask.data().iter().filter(|&&mv| mv > 0.0).count();
@@ -839,8 +896,13 @@ impl PrecondFactors {
                 return None;
             }
             let rank = cfg.obs_rank(n_obs)?;
-            Some(PrecondFactors::ObservedGram(ObsGramPrecondFactors::build(
-                k1, k2, mask, rank, theta,
+            Some(PrecondFactors::ObservedGram(ObsGramPrecondFactors::build_with_tol(
+                k1,
+                k2,
+                mask,
+                rank,
+                cfg.rank_tol(),
+                theta,
             )))
         }
     }
@@ -1207,6 +1269,58 @@ mod tests {
         let mask = Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.8 { 1.0 } else { 0.0 });
         let s2 = 1e-4;
         let op = MaskedKronOp::new(&k1, &k2, &mask, s2);
+        let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
+        let theta = vec![0.0; 5];
+        let f = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &mask, &theta).unwrap();
+        assert_eq!(f.strategy(), "obs-gram");
+        assert_pcg_beats_plain(&op, &f, &rhs, 2);
+    }
+
+    #[test]
+    fn auto_rank_adapts_to_spectrum_decay() {
+        // Smooth RBF kernel with long lengthscales: the spectrum decays
+        // fast, so Auto's residual-trace stop should settle far below the
+        // cap. Shorter lengthscales flatten the spectrum and force a
+        // larger rank. Explicit Rank(r) must keep honoring r exactly.
+        let (n, m) = (40, 10);
+        let mut rng = Pcg64::new(61);
+        let x = Matrix::from_vec(n, 2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let t: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1) as f64).collect();
+        let k2 = kernels::matern12(&t, &t, 1.5, 1.0);
+        let mask = Matrix::from_fn(n, m, |_, _| 1.0);
+        let theta = vec![0.0; 5];
+
+        let smooth = kernels::rbf(&x, &x, &[3.0, 3.0]);
+        let f_smooth = PrecondFactors::build(PrecondCfg::Auto, &smooth, &k2, &mask, &theta).unwrap();
+        assert!(
+            f_smooth.rank() < 16,
+            "fast-decay spectrum must compress: rank={}",
+            f_smooth.rank()
+        );
+
+        let rough = kernels::rbf(&x, &x, &[0.08, 0.08]);
+        let f_rough = PrecondFactors::build(PrecondCfg::Auto, &rough, &k2, &mask, &theta).unwrap();
+        assert!(
+            f_rough.rank() > f_smooth.rank(),
+            "flat spectrum must spend more rank: rough={} smooth={}",
+            f_rough.rank(),
+            f_smooth.rank()
+        );
+
+        // Rank(r) is pinned regardless of decay (no 1e-3 early stop).
+        let f_pin = PrecondFactors::build(PrecondCfg::Rank(12), &smooth, &k2, &mask, &theta).unwrap();
+        assert_eq!(f_pin.rank(), 12);
+    }
+
+    #[test]
+    fn auto_rank_still_beats_plain_on_ill_conditioned_system() {
+        // The adaptive stop must not under-rank an ill-conditioned
+        // partial-mask system into losing its PCG win.
+        let (n, m) = (24, 16);
+        let (k1, k2) = ill_system(n, m, 63);
+        let mut rng = Pcg64::new(64);
+        let mask = Matrix::from_fn(n, m, |_, _| if rng.uniform() < 0.8 { 1.0 } else { 0.0 });
+        let op = MaskedKronOp::new(&k1, &k2, &mask, 1e-4);
         let rhs: Vec<f64> = mask.data().iter().map(|&mk| mk * rng.normal()).collect();
         let theta = vec![0.0; 5];
         let f = PrecondFactors::build(PrecondCfg::Auto, &k1, &k2, &mask, &theta).unwrap();

@@ -17,7 +17,11 @@
 //!              seeded Hyperband/ASHA Thompson-sampling storm instead
 //!              (pathwise posterior draws served solve-free from cached
 //!              lineage, with a STORM_CHECKSUM determinism receipt —
-//!              docs/sampling.md)
+//!              docs/sampling.md); --buckets N|auto folds many tasks onto
+//!              hash-routed shard buckets and --observe-storm drives
+//!              steady epoch arrivals through warm Observe re-solves with
+//!              --refit-every / --refit-drift tuning the refit policy
+//!              (docs/serving.md)
 //!   artifacts  print the artifact manifest and verify executables load
 //!   smoke      end-to-end smoke: fit + predict on a toy problem
 //!   lint       run the in-tree invariant linter over the crate's own
@@ -48,7 +52,8 @@ fn main() -> lkgp::Result<()> {
                  [--record FILE] [--replay FILE [--concurrent]] \
                  [--deadline-ms N] [--chaos panic=P,diverge=P,slow=P,io=P,nan=P,seed=N] \
                  [--sample-storm [--draws N] [--bursts N] [--eta N]] \
-                 [--root CRATE_DIR] [--json ANALYSIS_PATH]"
+                 [--buckets N|auto] [--observe-storm] [--refit-every K] \
+                 [--refit-drift X] [--root CRATE_DIR] [--json ANALYSIS_PATH]"
             );
             Ok(())
         }

@@ -658,3 +658,338 @@ fn oversized_batch_split_matches_unsplit_bitwise() {
     );
     assert_answers_bit_equal(&got, &want);
 }
+
+/// Observe-then-query must be bit-identical to a refit-free from-scratch
+/// pool serving the same extended snapshot: both pools pay the same cold
+/// gen-1 solve, and the gen-2 training solve runs from the same embedded
+/// gen-1 alpha, operator, preconditioner, and tolerance whether it is
+/// triggered by an `Observe` or by the query itself — so every answer bit
+/// matches (the ISSUE's oracle acceptance). The gen-2 query uses different
+/// query rows than gen-1 so neither pool can ride a cached cross-solve.
+#[test]
+fn observe_then_query_bit_identical_to_from_scratch_on_extended_mask() {
+    let mut rng = Pcg64::new(17);
+    let task = Task::generate(Preset::FashionMnist, 8, &mut rng);
+    let mut reg = Registry::new();
+    for i in 0..task.n() {
+        let id = reg.add(task.configs.row(i).to_vec());
+        for j in 0..4 {
+            reg.observe(id, task.curves[(i, j)], task.m()).unwrap();
+        }
+    }
+    let mut store = CurveStore::new(task.m());
+    let snap1 = store.snapshot(&reg).unwrap();
+    for i in 0..task.n() {
+        reg.observe(TrialId(i), task.curves[(i, 4)], task.m()).unwrap();
+    }
+    let snap2 = store.snapshot(&reg).unwrap();
+    let theta = Theta::default_packed(7);
+    let xq1 = Matrix::from_vec(1, 7, snap1.all_x.row(0).to_vec());
+    let xq2 = Matrix::from_vec(1, 7, snap1.all_x.row(3).to_vec());
+
+    let mk_pool = || {
+        ServicePool::spawn(
+            rust_engines(1),
+            PoolCfg { workers: 1, warm_start: true, max_replicas: 0, ..Default::default() },
+        )
+    };
+    let a = mk_pool();
+    let b = mk_pool();
+
+    // identical gen-1 traffic establishes identical lineages
+    let a1 = a.handle(0).predict_final(snap1.clone(), theta.clone(), xq1.clone()).unwrap();
+    let b1 = b.handle(0).predict_final(snap1.clone(), theta.clone(), xq1.clone()).unwrap();
+    assert_eq!(a1[0].0.to_bits(), b1[0].0.to_bits());
+    assert_eq!(a1[0].1.to_bits(), b1[0].1.to_bits());
+
+    // pool A ingests the new epoch via Observe, pool B never hears of it
+    let report = a.handle(0).observe(snap2.clone(), theta.clone()).unwrap();
+    assert_eq!(report.generation, snap2.generation);
+    assert!(report.mvm_rows > 0, "warm re-solve applies at least one residual MVM");
+    assert_eq!(a.stats(0).observes.load(Ordering::Relaxed), 1);
+
+    // gen-2 queries: A rides the Observe-refreshed lineage, B solves from
+    // scratch (warm-started off its own gen-1 lineage) — same bits required
+    let a2 = a.handle(0).predict_final(snap2.clone(), theta.clone(), xq2.clone()).unwrap();
+    let b2 = b.handle(0).predict_final(snap2.clone(), theta.clone(), xq2.clone()).unwrap();
+    assert_eq!(
+        a2[0].0.to_bits(),
+        b2[0].0.to_bits(),
+        "observe-then-query mean diverged from from-scratch"
+    );
+    assert_eq!(
+        a2[0].1.to_bits(),
+        b2[0].1.to_bits(),
+        "observe-then-query variance diverged from from-scratch"
+    );
+}
+
+/// Adversarial-mask ingestion: a task whose dataset carries a fully-masked
+/// row through every generation AND a row that un-masks for the first time
+/// in generation 2 must observe + serve finite answers that match the
+/// dense `gp::naive` oracle on the extended mask.
+#[test]
+fn observe_handles_fully_masked_and_freshly_unmasked_rows() {
+    use lkgp::gp::naive;
+    let (n, m, d) = (6usize, 5usize, 2usize);
+    let mut rng = Pcg64::new(77);
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, 0.0, 1.0));
+    let t: Vec<f64> = (0..m).map(|j| j as f64 / (m - 1) as f64).collect();
+    let raw = |i: usize, j: usize| -0.5 + 0.1 * j as f64 + 0.02 * i as f64;
+    // gen 1: row 3 freshly registered (fully masked), row 5 fully masked
+    // for good; everyone else observes a 2-epoch prefix
+    let mut y1 = Matrix::zeros(n, m);
+    let mut mask1 = Matrix::zeros(n, m);
+    for i in 0..n {
+        if i == 3 || i == 5 {
+            continue;
+        }
+        for j in 0..2 {
+            mask1[(i, j)] = 1.0;
+            y1[(i, j)] = raw(i, j);
+        }
+    }
+    // gen 2: one more epoch everywhere, and row 3 un-masks its first epoch
+    let mut y2 = y1.clone();
+    let mut mask2 = mask1.clone();
+    for i in 0..n {
+        if i == 5 {
+            continue; // still never observed
+        }
+        let j = if i == 3 { 0 } else { 2 };
+        mask2[(i, j)] = 1.0;
+        y2[(i, j)] = raw(i, j);
+    }
+    let ids: Vec<TrialId> = (0..n).map(TrialId).collect();
+    let snap_of = |generation: u64, y: &Matrix, mask: &Matrix| Snapshot {
+        generation,
+        data: Arc::new(Dataset {
+            x: x.clone(),
+            t: t.clone(),
+            y: y.clone(),
+            mask: mask.clone(),
+        }),
+        row_ids: Arc::new(ids.clone()),
+        all_x: Arc::new(x.clone()),
+        all_ids: Arc::new(ids.clone()),
+        ytf: Arc::new(YTransform { max: 0.0, std: 1.0 }),
+        warm: None,
+    };
+    let snap1 = snap_of(1, &y1, &mask1);
+    let snap2 = snap_of(2, &y2, &mask2);
+    let theta = Theta::default_packed(d);
+    let xq = Matrix::from_vec(1, d, vec![0.4, 0.6]);
+
+    let pool = ServicePool::spawn(
+        rust_engines(1),
+        PoolCfg { workers: 1, warm_start: true, max_replicas: 0, ..Default::default() },
+    );
+    let handle = pool.handle(0);
+    // gen 1 lineage, then ingest the adversarial gen-2 mask via Observe
+    handle.observe(snap1, theta.clone()).unwrap();
+    let report = handle.observe(snap2.clone(), theta.clone()).unwrap();
+    assert_eq!(report.generation, 2);
+    let got = handle.predict_final(snap2.clone(), theta.clone(), xq.clone()).unwrap();
+
+    // dense oracle on the same extended mask (identity YTransform keeps
+    // both sides in the same units)
+    let want = naive::predict_final_exact(&theta, &snap2.data, &xq).unwrap();
+    assert!(got[0].0.is_finite() && got[0].1 > 0.0);
+    assert!(
+        (got[0].0 - want[0].0).abs() < 1e-6,
+        "observe-path mean {} vs dense oracle {}",
+        got[0].0,
+        want[0].0
+    );
+    assert!(
+        (got[0].1 - want[0].1).abs() < 1e-6,
+        "observe-path variance {} vs dense oracle {}",
+        got[0].1,
+        want[0].1
+    );
+}
+
+/// Hash-bucketed routing is deterministic across pool restarts (same task
+/// -> same bucket), folds every task into the configured bucket range,
+/// and stays behavior-preserving: bucket-mates answer bit-identically to
+/// a 1:1 pool serving the same requests.
+#[test]
+fn bucket_routing_is_deterministic_and_behavior_preserving() {
+    use lkgp::coordinator::EngineFactory;
+    use lkgp::lcbench::corpus::SimCorpus;
+    let tasks = 40usize;
+    let corpus = SimCorpus::new(tasks, 4, 5);
+    let mk = || {
+        let factory: EngineFactory = Box::new(|_| Box::<RustEngine>::default());
+        ServicePool::from_corpus(
+            &corpus,
+            factory,
+            PoolCfg { workers: 2, warm_start: false, buckets: 4, ..Default::default() },
+        )
+    };
+    let pool = mk();
+    assert_eq!(pool.shards(), tasks, "all tasks stay addressable");
+    assert_eq!(pool.buckets(), 4);
+    let route: Vec<usize> = (0..tasks).map(|t| pool.bucket_of(t)).collect();
+    assert!(route.iter().all(|&b| b < 4));
+    assert!(
+        (0..4).all(|b| route.contains(&b)),
+        "40 tasks over 4 buckets should touch every bucket: {route:?}"
+    );
+    // restart: a second pool over the same corpus routes identically
+    let pool2 = mk();
+    let route2: Vec<usize> = (0..tasks).map(|t| pool2.bucket_of(t)).collect();
+    assert_eq!(route, route2, "routing must be deterministic across restarts");
+
+    // behavior preservation: two bucket-mates served through the folded
+    // pool answer bit-identically to a 1:1 pool (cold solves)
+    let (ta, tb) = {
+        let a = 0usize;
+        let b = (1..tasks).find(|&t| route[t] == route[a]).expect("40 tasks, 4 buckets");
+        (a, b)
+    };
+    let snap_a = snapshot_for(Preset::FashionMnist, 8, 3);
+    let snap_b = snapshot_for(Preset::Higgs, 8, 4);
+    let theta = Theta::default_packed(7);
+    let xq = Matrix::from_vec(1, 7, snap_a.all_x.row(0).to_vec());
+    let flat = ServicePool::spawn(
+        rust_engines(2),
+        PoolCfg { workers: 2, warm_start: false, ..Default::default() },
+    );
+    for (task, flat_task, snap) in [(ta, 0usize, &snap_a), (tb, 1usize, &snap_b)] {
+        let got = pool
+            .handle(task)
+            .predict_final(snap.clone(), theta.clone(), xq.clone())
+            .unwrap();
+        let want = flat
+            .handle(flat_task)
+            .predict_final(snap.clone(), theta.clone(), xq.clone())
+            .unwrap();
+        assert_eq!(got[0].0.to_bits(), want[0].0.to_bits(), "task {task} mean diverged");
+        assert_eq!(got[0].1.to_bits(), want[0].1.to_bits(), "task {task} variance diverged");
+    }
+}
+
+/// The generation fence is per-task, not per-bucket: an `Observe` write
+/// for one task must retire in-flight replica reads of THAT task's older
+/// generations (replicas never serve a pre-Observe generation), while a
+/// bucket-mate's concurrent reads sail through unretired.
+#[test]
+fn observe_fence_is_per_task_inside_a_bucket() {
+    use lkgp::coordinator::EngineFactory;
+    use lkgp::lcbench::corpus::SimCorpus;
+    use std::sync::Mutex;
+
+    // two tasks folded onto ONE bucket, backed by a gated engine so the
+    // writer can be pinned mid-refit while replicas serve reads
+    let corpus = SimCorpus::new(2, 4, 9);
+    let (gate, engine) = GatedEngine::pair();
+    let stash = Mutex::new(Some(engine));
+    let factory: EngineFactory =
+        Box::new(move |_| stash.lock().unwrap().take().expect("one bucket, one engine"));
+    let pool = ServicePool::from_corpus(
+        &corpus,
+        factory,
+        PoolCfg { workers: 3, warm_start: true, buckets: 1, max_replicas: 2, ..Default::default() },
+    );
+    assert_eq!(pool.bucket_of(0), pool.bucket_of(1), "both tasks share the bucket");
+
+    // task 0's curve store drives two generations; task 1 stays at gen 1
+    let mut rng = Pcg64::new(9);
+    let task0 = Task::generate(Preset::Higgs, 16, &mut rng);
+    let mut reg = Registry::new();
+    for i in 0..task0.n() {
+        let id = reg.add(task0.configs.row(i).to_vec());
+        for j in 0..4 {
+            reg.observe(id, task0.curves[(i, j)], task0.m()).unwrap();
+        }
+    }
+    let mut store = CurveStore::new(task0.m());
+    let snap0_g1 = store.snapshot(&reg).unwrap();
+    for i in 0..task0.n() {
+        reg.observe(TrialId(i), task0.curves[(i, 4)], task0.m()).unwrap();
+    }
+    let snap0_g2 = store.snapshot(&reg).unwrap();
+    let snap1 = snapshot_for(Preset::FashionMnist, 10, 23);
+    let theta = Theta::default_packed(7);
+    let xq0 = Matrix::from_vec(1, 7, snap0_g1.all_x.row(0).to_vec());
+    let xq1 = Matrix::from_vec(1, 7, snap1.all_x.row(0).to_vec());
+
+    // lineages for both tasks at gen 1 (writer solves, replicas reuse)
+    pool.handle(0)
+        .query(snap0_g1.clone(), theta.clone(), vec![Query::MeanAtFinal { xq: xq0.clone() }])
+        .unwrap();
+    pool.handle(1)
+        .query(snap1.clone(), theta.clone(), vec![Query::MeanAtFinal { xq: xq1.clone() }])
+        .unwrap();
+
+    // pin the writer on task 0's gated refit, then float two heavy reads:
+    // task 0 @ gen 1 (will be fenced off by the Observe) and the
+    // bucket-mate task 1 @ its own gen 1 (must NOT be)
+    let frx = pin_writer(&pool, &snap0_g1, &theta);
+    let (r0tx, r0rx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Query {
+            snapshot: snap0_g1.clone(),
+            theta: theta.clone(),
+            queries: vec![
+                Query::CurveSamples { xq: xq0.clone(), n: 128, seed: 5 },
+                Query::MeanAtFinal { xq: xq0.clone() },
+            ],
+            resp: r0tx,
+        },
+    )
+    .unwrap();
+    let (r1tx, r1rx) = mpsc::channel();
+    pool.submit(
+        1,
+        Request::Query {
+            snapshot: snap1.clone(),
+            theta: theta.clone(),
+            queries: vec![
+                Query::CurveSamples { xq: xq1.clone(), n: 128, seed: 6 },
+                Query::MeanAtFinal { xq: xq1.clone() },
+            ],
+            resp: r1tx,
+        },
+    )
+    .unwrap();
+    // wait until replicas stole both reads (writer is pinned, so only
+    // replicas can empty the bucket queue) ...
+    while pool.queue_depth(0) > 0 {
+        std::thread::yield_now();
+    }
+    // ... then advance task 0's fence with an Observe write (gen 2)
+    let (otx, orx) = mpsc::channel();
+    pool.submit(
+        0,
+        Request::Observe { snapshot: snap0_g2.clone(), theta: theta.clone(), resp: otx },
+    )
+    .unwrap();
+    // release the pinned refit; the writer then drains the Observe and
+    // any retired reads
+    gate.send(()).unwrap();
+
+    let a0 = r0rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("fenced task-0 read must still be answered (by the writer)")
+        .unwrap();
+    let a1 = r1rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("bucket-mate read must be served")
+        .unwrap();
+    assert_eq!(a0.len(), 2);
+    assert_eq!(a1.len(), 2);
+    let report = orx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    assert_eq!(report.generation, snap0_g2.generation);
+    // the Observe write fenced task 0's stale read off the replica path;
+    // with per-task fencing the bucket-mate's read never retires, so at
+    // most that one retire is ever recorded
+    let retires = pool.stats(0).stale_replica_retires.load(Ordering::Relaxed);
+    assert!(
+        retires <= 1,
+        "task 1's read must not retire on task 0's fence (saw {retires})"
+    );
+    frx.recv().unwrap().unwrap();
+}
